@@ -1,0 +1,109 @@
+//! Ablation: which of FlashRecovery's restart optimizations buys what
+//! (DESIGN.md §2 items 17–19). Starting from the full system at the
+//! headline scale (175B @ 4800 devices), disable one mechanism at a
+//! time and measure the recovery-time regression:
+//!
+//!   * TCP-Store parallelism p: 64 -> 1 (serialized baseline)
+//!   * shared-file ranktable -> original O(n) negotiation
+//!   * selective recreation -> full-fleet container restart
+//!   * heartbeat detection -> collective-timeout detection
+//!
+//!     cargo bench --bench ablation_restart
+
+use flashrecovery::cluster::latency::LatencyModel;
+use flashrecovery::cluster::scenario::{average, simulate_flash, ScenarioConfig};
+use flashrecovery::metrics::bench::BenchReport;
+use flashrecovery::util::Rng;
+
+const DEVICES: usize = 4800;
+const PARAMS: f64 = 175e9;
+const RUNS: u64 = 32;
+
+fn base_cfg(seed: u64) -> ScenarioConfig {
+    ScenarioConfig::paper(DEVICES, PARAMS, seed)
+}
+
+fn main() {
+    let full = average(RUNS, 11, |s| simulate_flash(&base_cfg(s)));
+
+    let mut report = BenchReport::new(
+        "ablation: FlashRecovery restart mechanisms, 175B @ 4800 (s)",
+        &["total", "delta vs full"],
+    );
+    report.row("full FlashRecovery", vec![full.total_s, 0.0]);
+
+    // --- serialize the TCP store -------------------------------------
+    let no_par_tcp = average(RUNS, 11, |s| {
+        let mut c = base_cfg(s);
+        c.tcp_parallelism = 1;
+        simulate_flash(&c)
+    });
+    report.row(
+        "- TCP-store parallelism (p=1)",
+        vec![no_par_tcp.total_s, no_par_tcp.total_s - full.total_s],
+    );
+
+    // --- original ranktable -------------------------------------------
+    let orig_rt = average(RUNS, 11, |s| {
+        let c = base_cfg(s);
+        let mut b = simulate_flash(&c);
+        let delta = c.lat.ranktable_original(DEVICES) - c.lat.ranktable_shared(DEVICES);
+        b.restart_s += delta;
+        b.total_s += delta;
+        b
+    });
+    report.row(
+        "- shared-file ranktable (O(n))",
+        vec![orig_rt.total_s, orig_rt.total_s - full.total_s],
+    );
+
+    // --- full-fleet recreation -----------------------------------------
+    // Selective recreation restarts ONE node; the ablation pays the
+    // max-order-statistic of the whole fleet's container starts plus
+    // the shared-storage python-env stampede.
+    let lat = LatencyModel::default();
+    let nodes = DEVICES / 8;
+    let full_fleet = average(RUNS, 11, |s| {
+        let c = base_cfg(s);
+        let mut b = simulate_flash(&c);
+        let mut rng = Rng::new(s ^ 0xAB1A);
+        let mut fleet_max = 0.0f64;
+        for _ in 0..nodes {
+            fleet_max = fleet_max.max(lat.container_start(&mut rng));
+        }
+        let one = lat.container_start(&mut rng);
+        let delta = (fleet_max - one).max(0.0) + lat.storage_load(nodes, 0.0)
+            - lat.storage_load(1, 0.0);
+        b.restart_s += delta;
+        b.total_s += delta;
+        b
+    });
+    report.row(
+        "- selective recreation (restart all)",
+        vec![full_fleet.total_s, full_fleet.total_s - full.total_s],
+    );
+
+    // --- timeout detection ----------------------------------------------
+    let timeout_detect = average(RUNS, 11, |s| {
+        let c = base_cfg(s);
+        let mut b = simulate_flash(&c);
+        let delta = c.collective_timeout_s - b.detection_s;
+        b.detection_s = c.collective_timeout_s;
+        b.total_s += delta;
+        b
+    });
+    report.row(
+        "- active detection (1800s timeout)",
+        vec![timeout_detect.total_s, timeout_detect.total_s - full.total_s],
+    );
+
+    report.note(format!("{RUNS} Monte-Carlo runs per row; each ablation re-enables one baseline mechanism"));
+    report.print();
+
+    // sanity: every ablation regresses, detection dominates
+    assert!(no_par_tcp.total_s > full.total_s + 30.0, "tcp ablation too small");
+    assert!(orig_rt.total_s > full.total_s + 20.0, "ranktable ablation too small");
+    assert!(full_fleet.total_s > full.total_s, "recreation ablation must regress");
+    assert!(timeout_detect.total_s > full.total_s + 1000.0);
+    println!("ablation_restart OK");
+}

@@ -1,0 +1,151 @@
+//! End-to-end hot-path microbenchmarks on the REAL execution plane —
+//! the instrument for EXPERIMENTS.md §Perf.
+//!
+//! Measures, for the `tiny` and `small` models:
+//!   * per-phase step cost: fwd_bwd execute, gradient flatten,
+//!     allreduce, opt_step execute, snapshot encode/decode;
+//!   * full-engine throughput at DP = 1 / 2 / 4;
+//!   * real recovery latency (failure -> training resumed) under
+//!     FlashRecovery with a fast heartbeat.
+//!
+//!     cargo bench --bench e2e_hotpath [-- --sizes tiny,small --dp-sweep 1,2,4]
+
+use flashrecovery::checkpoint::{decode_snapshot, encode_snapshot};
+use flashrecovery::cluster::failure::FailureKind;
+use flashrecovery::comms::Collective;
+use flashrecovery::coordinator::ControllerConfig;
+use flashrecovery::metrics::bench::{time_fn, BenchReport};
+use flashrecovery::runtime::literal_tokens;
+use flashrecovery::training::worker::{flatten_grads, FailurePlan, Phase};
+use flashrecovery::training::{DataConfig, DataIterator, TrainingEngine, WorkerState};
+use flashrecovery::util::Args;
+use std::time::Duration;
+
+fn phase_bench(engine: &TrainingEngine, size: &str) {
+    let b = &engine.bundle;
+    let dims = &b.manifest.dims;
+    let state = WorkerState::init(b, 0).unwrap();
+    let data = DataIterator::new(DataConfig::for_model(dims.vocab, dims.seq, dims.batch, 1));
+    let tokens_host = data.batch_for(0, 0);
+    let tokens = literal_tokens(dims.batch, dims.seq + 1, &tokens_host).unwrap();
+
+    let (_, grads) = b.run_fwd_bwd(&state.params, &tokens).unwrap();
+    let flat = flatten_grads(&grads).unwrap();
+
+    let mut report = BenchReport::new(
+        &format!("hot path phases — {size} ({:.2}M params)", dims.param_count as f64 / 1e6),
+        &["mean ms", "p95 ms"],
+    );
+
+    let h = time_fn(1, 5, || {
+        let _ = b.run_fwd_bwd(&state.params, &tokens).unwrap();
+    });
+    report.row("fwd_bwd execute", vec![h.mean() * 1e3, h.p95() * 1e3]);
+
+    let h = time_fn(1, 10, || {
+        let _ = flatten_grads(&grads).unwrap();
+    });
+    report.row("grad flatten", vec![h.mean() * 1e3, h.p95() * 1e3]);
+
+    // single-participant allreduce isolates the reduction arithmetic
+    let solo = Collective::new(1, Duration::from_secs(5));
+    let h = time_fn(1, 10, || {
+        let mut buf = flat.clone();
+        solo.allreduce_mean(&mut buf).unwrap();
+    });
+    report.row("allreduce (1 rank)", vec![h.mean() * 1e3, h.p95() * 1e3]);
+
+    let h = time_fn(1, 5, || {
+        let _ = b
+            .run_opt_step(&state.params, &state.m, &state.v, 1.0, &grads)
+            .unwrap();
+    });
+    report.row("opt_step execute", vec![h.mean() * 1e3, h.p95() * 1e3]);
+
+    let h = time_fn(1, 5, || {
+        let _ = b
+            .run_train_step(&state.params, &state.m, &state.v, 1.0, &tokens)
+            .unwrap();
+    });
+    report.row("fused train_step", vec![h.mean() * 1e3, h.p95() * 1e3]);
+
+    let snap = state.to_snapshot().unwrap();
+    let h = time_fn(1, 5, || {
+        let _ = encode_snapshot(&snap);
+    });
+    report.row("snapshot encode", vec![h.mean() * 1e3, h.p95() * 1e3]);
+    let bytes = encode_snapshot(&snap);
+    let h = time_fn(1, 5, || {
+        let _ = decode_snapshot(&bytes).unwrap();
+    });
+    report.row("snapshot decode", vec![h.mean() * 1e3, h.p95() * 1e3]);
+    report.note(format!(
+        "state = {:.1} MB; grads = {:.1} MB",
+        snap.total_bytes() as f64 / 1e6,
+        flat.len() as f64 * 4.0 / 1e6
+    ));
+    report.print();
+}
+
+fn engine_bench(engine: &TrainingEngine, size: &str, dp_sweep: &[usize], steps: u64) {
+    let mut report = BenchReport::new(
+        &format!("engine throughput — {size}"),
+        &["s/step", "steps/s"],
+    );
+    for &dp in dp_sweep {
+        let cfg = ControllerConfig::flash(dp, steps);
+        let t0 = std::time::Instant::now();
+        let rep = engine.run(cfg).unwrap();
+        assert_eq!(rep.final_step, steps);
+        let per = t0.elapsed().as_secs_f64() / steps as f64;
+        report.row(format!("dp={dp}"), vec![per, 1.0 / per]);
+    }
+    report.note("single-core host: DP ranks time-share the core");
+    report.print();
+}
+
+fn recovery_bench(engine: &TrainingEngine, size: &str) {
+    let mut report = BenchReport::new(
+        &format!("real recovery latency — {size} (seconds)"),
+        &["detect", "restart", "restore", "total"],
+    );
+    for (label, phase) in [("fwd/bwd failure", Phase::FwdBwd), ("optimizer failure", Phase::OptStep)] {
+        let mut cfg = ControllerConfig::flash(2, 8);
+        cfg.heartbeat_interval = Duration::from_millis(50);
+        cfg.failures = vec![FailurePlan {
+            rank: 1,
+            step: 4,
+            phase,
+            kind: FailureKind::Network,
+        }];
+        let rep = engine.run(cfg).unwrap();
+        let r = &rep.recoveries[0];
+        report.row(
+            label,
+            vec![r.detection_s, r.restart_s, r.restore_s, r.total_s],
+        );
+    }
+    report.note("heartbeat 50 ms; replica restore over in-process broadcast");
+    report.print();
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let sizes = args.str_or("sizes", "tiny,small");
+    let dp_sweep: Vec<usize> = args
+        .str_or("dp-sweep", "1,2,4")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    for size in sizes.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let engine = TrainingEngine::load(size).expect("run `make artifacts`");
+        phase_bench(&engine, size);
+        let steps = if size == "tiny" { 10 } else { 4 };
+        engine_bench(&engine, size, &dp_sweep, steps);
+        if size == "tiny" {
+            recovery_bench(&engine, size);
+        }
+    }
+    println!("e2e_hotpath OK");
+}

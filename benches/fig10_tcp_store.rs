@@ -1,0 +1,65 @@
+//! Fig. 10 reproduction: TCP-Store establishment time, serialized vs
+//! parallelized, as cluster scale grows.
+//!
+//! Two planes:
+//! * REAL — an actual TCP store server on localhost; n clients
+//!   establish (connect + hello RTT) serially (p=1) and parallelized.
+//!   Shows the same linear-vs-flat separation at single-host scale.
+//! * SIMULATED — the calibrated latency model at the paper's scales
+//!   (1,000 – 18,000 devices), where the serial line grows linearly
+//!   and the parallel line stays nearly flat.
+//!
+//!     cargo bench --bench fig10_tcp_store
+
+use flashrecovery::cluster::LatencyModel;
+use flashrecovery::comms::{establish, TcpStoreServer};
+use flashrecovery::metrics::bench::BenchReport;
+
+fn main() {
+    // ---- real sockets ---------------------------------------------------
+    let mut real = BenchReport::new(
+        "Fig. 10 (real TCP, localhost): establishment time (ms)",
+        &["serial p=1", "parallel p=8"],
+    );
+    for n in [16usize, 32, 64, 128, 256] {
+        // fresh server per row so hello counts stay interpretable
+        let server = TcpStoreServer::start().expect("server");
+        let (t_serial, c1) = establish(server.addr(), n, 1).expect("serial");
+        drop(c1);
+        let (t_par, c2) = establish(server.addr(), n, 8).expect("parallel");
+        drop(c2);
+        assert_eq!(server.hello_count(), 2 * n as u64);
+        real.row(
+            format!("n={n}"),
+            vec![t_serial.as_secs_f64() * 1e3, t_par.as_secs_f64() * 1e3],
+        );
+    }
+    real.note("each client = TCP connect + Hello round-trip, one host");
+    real.print();
+
+    // ---- simulated paper scale -------------------------------------------
+    let lat = LatencyModel::default();
+    let mut sim = BenchReport::new(
+        "Fig. 10 (simulated, paper scale): establishment time (s)",
+        &["serialized", "parallelized p=64"],
+    );
+    for n in [1000usize, 2000, 4000, 8000, 12000, 16000, 18000] {
+        sim.row(
+            format!("n={n}"),
+            vec![
+                lat.tcp_store_establishment(n, 1),
+                lat.tcp_store_establishment(n, 64),
+            ],
+        );
+    }
+    sim.note("serialized grows ~linearly; parallelized decoupled from scale");
+    sim.print();
+
+    // shape assertions matching the paper's figure
+    let serial_ratio =
+        lat.tcp_store_establishment(18000, 1) / lat.tcp_store_establishment(1000, 1);
+    assert!(serial_ratio > 10.0, "serial must grow ~linearly ({serial_ratio})");
+    let par_18k = lat.tcp_store_establishment(18000, 64);
+    assert!(par_18k < 10.0, "parallel must stay flat ({par_18k}s)");
+    println!("fig10 OK");
+}

@@ -1,0 +1,76 @@
+//! Fig. 9 reproduction: failure type taxonomy and observed ratios.
+//!
+//! Draws a large failure sample from the injector and prints the
+//! category shares next to the paper's published percentages.
+//!
+//!     cargo bench --bench fig9_failure_taxonomy
+
+use flashrecovery::cluster::failure::{
+    FailureCategory, FailureInjector, FailureKind, HARDWARE_MIX, HARDWARE_SHARE,
+    SOFTWARE_MIX,
+};
+use flashrecovery::metrics::bench::BenchReport;
+use flashrecovery::util::Rng;
+use std::collections::BTreeMap;
+
+fn main() {
+    let n = 500_000u32;
+    let mut rng = Rng::new(2026);
+    let mut counts: BTreeMap<&'static str, u32> = BTreeMap::new();
+    let mut hardware = 0u32;
+    for _ in 0..n {
+        let k = FailureInjector::sample_kind(&mut rng);
+        *counts.entry(k.name()).or_insert(0) += 1;
+        if k.category() == FailureCategory::Hardware {
+            hardware += 1;
+        }
+    }
+
+    let mut report = BenchReport::new(
+        "Fig. 9: failure taxonomy — observed vs paper (%)",
+        &["observed", "paper"],
+    );
+    report.row(
+        "hardware (all)",
+        vec![100.0 * hardware as f64 / n as f64, 100.0 * HARDWARE_SHARE],
+    );
+    report.row(
+        "software (all)",
+        vec![
+            100.0 * (n - hardware) as f64 / n as f64,
+            100.0 * (1.0 - HARDWARE_SHARE),
+        ],
+    );
+    for (kind, within) in HARDWARE_MIX.iter() {
+        report.row(
+            format!("hw/{}", kind.name()),
+            vec![
+                100.0 * counts[kind.name()] as f64 / n as f64,
+                100.0 * within * HARDWARE_SHARE,
+            ],
+        );
+    }
+    for (kind, within) in SOFTWARE_MIX.iter() {
+        report.row(
+            format!("sw/{}", kind.name()),
+            vec![
+                100.0 * counts[kind.name()] as f64 / n as f64,
+                100.0 * within * (1.0 - HARDWARE_SHARE),
+            ],
+        );
+    }
+    report.note(format!("{n} sampled failures; paper shares from Fig. 9"));
+    report.print();
+
+    // shape check: every observed share within 0.5pp of the target
+    for k in FailureKind::all() {
+        let observed = counts[k.name()] as f64 / n as f64;
+        assert!(
+            (observed - k.overall_share()).abs() < 0.005,
+            "{}: {observed} vs {}",
+            k.name(),
+            k.overall_share()
+        );
+    }
+    println!("fig9 OK");
+}

@@ -1,0 +1,88 @@
+//! §II reproduction: the recovery-overhead model, eqs. (1)–(5).
+//!
+//! * sweeps F(t) over checkpoint intervals and shows the convex curve
+//!   with its minimum at t* = sqrt(2 d k0 / m) (eq. 3);
+//! * validates the closed forms against the Monte-Carlo failure
+//!   simulator;
+//! * compares FlashRecovery's eq. (5) against F_min across failure
+//!   rates, reproducing the RPO/RTO dominance argument.
+//!
+//!     cargo bench --bench overhead_model
+
+use flashrecovery::metrics::bench::BenchReport;
+use flashrecovery::recovery_model::{
+    monte_carlo_flash, monte_carlo_periodic, FlashParams, OverheadParams,
+};
+
+fn main() {
+    // One week of training (in step units, 10 s/step), 20 failures,
+    // s0 ≈ 2000 s detection+restart, k0 ≈ 50 s snapshot stall.
+    let p = OverheadParams { d: 60480.0, m: 20.0, s0: 200.0, k0: 5.0 };
+
+    // ---- eq. (1): the convex F(t) curve --------------------------------
+    let t_star = p.optimal_interval();
+    let mut curve = BenchReport::new(
+        "Eq. (1): total overhead F(t) vs checkpoint interval t (steps)",
+        &["analytic F(t)", "monte-carlo"],
+    );
+    for mult in [0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 10.0] {
+        let t = t_star * mult;
+        let mc = monte_carlo_periodic(&p, t, 300, 11);
+        curve.row(
+            format!("t = {:.0} ({mult}x t*)", t),
+            vec![p.total_overhead(t), mc.mean_overhead],
+        );
+    }
+    curve.note(format!("t* = {t_star:.1} steps (eq. 3), F_min = {:.1} (eq. 4)", p.min_overhead()));
+    curve.print();
+
+    // MC must agree with the closed form within 5% everywhere
+    for mult in [0.25, 1.0, 4.0] {
+        let t = t_star * mult;
+        let mc = monte_carlo_periodic(&p, t, 500, 23);
+        let rel = (mc.mean_overhead - p.total_overhead(t)).abs() / p.total_overhead(t);
+        assert!(rel < 0.05, "MC mismatch at t={t}: rel {rel}");
+    }
+
+    // ---- eq. (3)/(4) observations --------------------------------------
+    let mut obs = BenchReport::new(
+        "Eq. (3): optimal interval t* responds to m and k0",
+        &["t*", "F_min"],
+    );
+    for (label, params) in [
+        ("baseline", p),
+        ("4x failures", OverheadParams { m: p.m * 4.0, ..p }),
+        ("4x snapshot cost", OverheadParams { k0: p.k0 * 4.0, ..p }),
+    ] {
+        obs.row(label, vec![params.optimal_interval(), params.min_overhead()]);
+    }
+    obs.note("t* ∝ 1/sqrt(m): more failures -> checkpoint more often");
+    obs.note("t* ∝ sqrt(k0): costlier snapshots -> checkpoint less often");
+    obs.print();
+
+    // ---- eq. (5): FlashRecovery dominance -------------------------------
+    let mut cmp = BenchReport::new(
+        "Eq. (5): FlashRecovery vs OPTIMALLY-TUNED periodic checkpointing",
+        &["F_min (periodic)", "F (flash)", "speedup"],
+    );
+    for m in [5.0, 20.0, 80.0, 320.0] {
+        let periodic = OverheadParams { m, ..p };
+        // flash: same per-failure s0 but scale-independent, one-step s1'
+        let flash = FlashParams { m, s0_prime: p.s0, s1_prime: 1.0 };
+        let f_min = periodic.min_overhead();
+        let f_flash = flash.total_overhead();
+        cmp.row(
+            format!("m = {m} failures"),
+            vec![f_min, f_flash, f_min / f_flash],
+        );
+        assert!(f_flash < f_min, "flash must dominate at m={m}");
+        // MC cross-check of eq. 5
+        let mc = monte_carlo_flash(&flash, p.d, 300, 31);
+        let rel = (mc.mean_overhead - f_flash).abs() / f_flash;
+        assert!(rel < 0.05, "flash MC mismatch: {rel}");
+    }
+    cmp.note("flash needs no checkpoints (k0 = 0) and redoes at most 1 step");
+    cmp.print();
+
+    println!("overhead_model OK");
+}

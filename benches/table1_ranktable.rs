@@ -1,0 +1,101 @@
+//! Table I reproduction: ranktable update time — original collect +
+//! distribute (O(n)) vs FlashRecovery's shared-file load (O(1)).
+//!
+//! * REAL — the actual protocols at single-host scale: `original_update`
+//!   over the in-process collective vs `SharedRanktable::load` of a
+//!   published file.
+//! * SIMULATED — the calibrated model at the paper's device counts
+//!   (1k / 4k / 8k / 16k / 18k), printed next to the paper's numbers.
+//!
+//!     cargo bench --bench table1_ranktable
+
+use flashrecovery::cluster::LatencyModel;
+use flashrecovery::comms::Collective;
+use flashrecovery::coordinator::{original_update, RankEntry, Ranktable, SharedRanktable};
+use flashrecovery::metrics::bench::BenchReport;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn entry(rank: usize) -> RankEntry {
+    RankEntry {
+        rank,
+        node: rank / 8,
+        device: rank % 8,
+        addr: format!("10.0.{}.{}:2900", rank / 8, rank % 8),
+    }
+}
+
+fn time_original(n: usize) -> f64 {
+    let group = Collective::new(n, Duration::from_secs(30));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for rank in 0..n {
+        let group: Arc<Collective> = group.clone();
+        handles.push(std::thread::spawn(move || {
+            original_update(&group, &entry(rank)).unwrap()
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn time_shared_load(n: usize, iters: u32) -> f64 {
+    let dir = flashrecovery::util::temp_dir("t1-rt").unwrap();
+    let shared = SharedRanktable::new(dir.join("ranktable.json"));
+    shared
+        .publish(&Ranktable::new((0..n).map(entry).collect()))
+        .unwrap();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = shared.load().unwrap();
+        assert_eq!(t.entries.len(), n);
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    std::fs::remove_dir_all(dir).ok();
+    per
+}
+
+fn main() {
+    // ---- real protocols, single host --------------------------------
+    let mut real = BenchReport::new(
+        "Tab. I (real, in-process): ranktable update time (ms)",
+        &["original O(n)", "shared-file O(1)"],
+    );
+    for n in [4usize, 8, 16, 32, 64] {
+        real.row(
+            format!("n={n}"),
+            vec![time_original(n) * 1e3, time_shared_load(n, 20) * 1e3],
+        );
+    }
+    real.note("original = all-gather collect+distribute across n threads");
+    real.print();
+
+    // ---- simulated paper scale ----------------------------------------
+    let lat = LatencyModel::default();
+    let paper_orig = [8.0, 31.0, 60.0, 176.0, 249.0];
+    let paper_shared = [0.1, 0.1, 0.5, 0.5, 0.5];
+    let mut sim = BenchReport::new(
+        "Tab. I (simulated, paper scale): ranktable update time (s)",
+        &["original", "paper orig", "shared-file", "paper shared"],
+    );
+    for (i, n) in [1000usize, 4000, 8000, 16000, 18000].iter().enumerate() {
+        sim.row(
+            format!("{n} devices"),
+            vec![
+                lat.ranktable_original(*n),
+                paper_orig[i],
+                lat.ranktable_shared(*n),
+                paper_shared[i],
+            ],
+        );
+    }
+    sim.note("paper columns are Tab. I's published values");
+    sim.print();
+
+    // shape: original superlinear-ish, shared flat sub-second
+    assert!(lat.ranktable_original(18000) / lat.ranktable_original(1000) > 15.0);
+    assert!(lat.ranktable_shared(18000) < 0.5);
+    println!("table1 OK");
+}

@@ -1,0 +1,57 @@
+//! Table II reproduction: the vanilla recovery baseline at the paper's
+//! 175B task scales — timeout detection (1800 s) plus a task-restart
+//! time that grows linearly with scale.
+//!
+//!     cargo bench --bench table2_vanilla
+
+use flashrecovery::cluster::{scenario::average, simulate_vanilla, ScenarioConfig};
+use flashrecovery::metrics::bench::BenchReport;
+
+fn main() {
+    let runs = 32;
+    // (devices, paper restart seconds)
+    let grid = [(1824usize, 231.0), (3936, 801.0), (5472, 1115.0)];
+
+    let mut report = BenchReport::new(
+        "Tab. II: vanilla recovery, 175B model (seconds)",
+        &["detection", "restart (sim)", "restart (paper)"],
+    );
+    let mut restarts = Vec::new();
+    for (devices, paper) in grid {
+        let b = average(runs, 3, |s| {
+            simulate_vanilla(&ScenarioConfig::paper(devices, 175e9, s))
+        });
+        restarts.push(b.restart_s);
+        report.row(
+            format!("{devices} devices"),
+            vec![b.detection_s, b.restart_s, paper],
+        );
+    }
+    report.note("detection = PyTorch collective hang timeout (paper default)");
+    report.note(format!("{runs} Monte-Carlo runs per row"));
+    report.print();
+
+    // fine-grained stage breakdown at the largest scale
+    let b = simulate_vanilla(&ScenarioConfig::paper(5472, 175e9, 1));
+    let mut stages = BenchReport::new(
+        "Tab. II detail: vanilla restart stages at 5472 devices (s)",
+        &["seconds"],
+    );
+    for (name, v) in &b.stages {
+        stages.row(name.clone(), vec![*v]);
+    }
+    stages.print();
+
+    // shape: detection fixed at 1800, restart grows ~linearly, right
+    // order of magnitude vs the paper.
+    assert!((restarts[1] / restarts[0]) > 1.5, "restart must grow with scale");
+    assert!((restarts[2] / restarts[1]) > 1.15);
+    for (r, (_, paper)) in restarts.iter().zip(grid.iter()) {
+        let ratio = r / paper;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "sim {r} vs paper {paper}: off by {ratio}"
+        );
+    }
+    println!("table2 OK");
+}

@@ -1,0 +1,88 @@
+//! Table III reproduction: FlashRecovery recovery time across task
+//! scales and model sizes — detection within seconds, restart nearly
+//! scale-independent, redone training bounded by one step, total well
+//! under the vanilla baseline at every scale.
+//!
+//!     cargo bench --bench table3_flashrecovery
+
+use flashrecovery::cluster::{scenario::average, simulate_flash, ScenarioConfig};
+use flashrecovery::metrics::bench::BenchReport;
+
+struct Row {
+    model: &'static str,
+    params: f64,
+    devices: usize,
+    paper_total: f64,
+}
+
+fn main() {
+    let runs = 32;
+    // The paper's full Tab. III grid.
+    let grid = [
+        Row { model: "7B", params: 7e9, devices: 32, paper_total: 97.0 },
+        Row { model: "7B", params: 7e9, devices: 960, paper_total: 101.0 },
+        Row { model: "70B", params: 70e9, devices: 80, paper_total: 90.0 },
+        Row { model: "70B", params: 70e9, devices: 800, paper_total: 111.0 },
+        Row { model: "70B", params: 70e9, devices: 960, paper_total: 98.0 },
+        Row { model: "70B", params: 70e9, devices: 2880, paper_total: 120.5 },
+        Row { model: "175B", params: 175e9, devices: 2880, paper_total: 139.5 },
+        Row { model: "175B", params: 175e9, devices: 4800, paper_total: 147.5 },
+    ];
+
+    let mut report = BenchReport::new(
+        "Tab. III: FlashRecovery recovery time (seconds)",
+        &["detect", "restart", "step", "step/2", "total", "paper total"],
+    );
+    let mut totals = Vec::new();
+    for row in &grid {
+        let b = average(runs, 5, |s| {
+            simulate_flash(&ScenarioConfig::paper(row.devices, row.params, s))
+        });
+        totals.push(b.total_s);
+        report.row(
+            format!("{} @ {}", row.model, row.devices),
+            vec![
+                b.detection_s,
+                b.restart_s,
+                b.step_time_s,
+                b.redone_s,
+                b.total_s,
+                row.paper_total,
+            ],
+        );
+    }
+    report.note(format!("{runs} Monte-Carlo runs per row"));
+    report.note("total = detect + restart + step/2 (paper's accounting)");
+    report.print();
+
+    // stage breakdown at the headline scale (175B @ 4800)
+    let b = simulate_flash(&ScenarioConfig::paper(4800, 175e9, 1));
+    let mut stages = BenchReport::new(
+        "Tab. III detail: FlashRecovery stages, 175B @ 4800 devices (s)",
+        &["seconds"],
+    );
+    for (name, v) in &b.stages {
+        stages.row(name.clone(), vec![*v]);
+    }
+    stages.print();
+
+    // ---- paper-shape assertions --------------------------------------
+    // 1. headline: 4800-device recovery within ~150 s (we allow 2x)
+    let headline = totals[totals.len() - 1];
+    assert!(headline < 300.0, "175B@4800 total {headline}");
+    // 2. near scale-independence: 32 -> 4800 grows < 2x (paper: 1.52x)
+    let growth = headline / totals[0];
+    assert!(growth < 2.0, "total grew {growth}x across the sweep");
+    // 3. every total in the paper's order of magnitude
+    for (t, row) in totals.iter().zip(grid.iter()) {
+        let ratio = t / row.paper_total;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "{} @ {}: sim {t} vs paper {} ({ratio}x)",
+            row.model,
+            row.devices,
+            row.paper_total
+        );
+    }
+    println!("table3 OK");
+}

@@ -1,0 +1,144 @@
+"""AOT lowering driver: JAX model -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`). Emits, per model size:
+
+    artifacts/init_<size>.hlo.txt        (seed,)                    -> (*params,)
+    artifacts/fwd_bwd_<size>.hlo.txt     (*params, tokens)          -> (loss, *grads)
+    artifacts/opt_step_<size>.hlo.txt    (*params,*m,*v,step,*grads)-> (*p',*m',*v')
+    artifacts/train_step_<size>.hlo.txt  (*params,*m,*v,step,tokens)-> (loss,*p',*m',*v')
+    artifacts/manifest.json              interop contract for Rust
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` crate) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(shape, dtype):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_size(cfg: M.ModelConfig, opt: M.AdamConfig, out_dir: str) -> dict:
+    """Lower all four artifacts for one model size; return manifest entry."""
+    specs = M.param_specs(cfg)
+    p_specs = [_spec(s) for _, s in specs]
+    tokens_spec = _spec((cfg.batch, cfg.seq + 1), jnp.int32)
+    step_spec = _spec((), jnp.float32)
+    seed_spec = _spec((), jnp.int32)
+
+    def init_fn(seed):
+        return tuple(M.init_params(cfg, seed))
+
+    def fwd_bwd_fn(params, tokens):
+        loss, grads = M.fwd_bwd(cfg, list(params), tokens)
+        return (loss, *grads)
+
+    def opt_step_fn(params, m, v, step, grads):
+        new_p, new_m, new_v = M.adam_step(
+            cfg, opt, list(params), list(m), list(v), step, list(grads))
+        return (*new_p, *new_m, *new_v)
+
+    def train_step_fn(params, m, v, step, tokens):
+        loss, new_p, new_m, new_v = M.train_step(
+            cfg, opt, list(params), list(m), list(v), step, tokens)
+        return (loss, *new_p, *new_m, *new_v)
+
+    artifacts = {}
+
+    def emit(name, fn, *arg_specs):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)", flush=True)
+        artifacts[name] = {"file": fname}
+
+    print(f"[aot] lowering size={cfg.name} "
+          f"(params={M.param_count(cfg) / 1e6:.2f}M)", flush=True)
+    emit("init", init_fn, seed_spec)
+    emit("fwd_bwd", fwd_bwd_fn, tuple(p_specs), tokens_spec)
+    emit("opt_step", opt_step_fn, tuple(p_specs), tuple(p_specs),
+         tuple(p_specs), step_spec, tuple(p_specs))
+    emit("train_step", train_step_fn, tuple(p_specs), tuple(p_specs),
+         tuple(p_specs), step_spec, tokens_spec)
+
+    return {
+        "config": {
+            "name": cfg.name, "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "vocab": cfg.vocab, "seq": cfg.seq,
+            "batch": cfg.batch, "param_count": M.param_count(cfg),
+        },
+        "optimizer": {
+            "lr": opt.lr, "beta1": opt.beta1, "beta2": opt.beta2,
+            "eps": opt.eps, "grad_clip": opt.grad_clip,
+        },
+        "params": [
+            {"name": n, **_shape_entry(s, "f32")} for n, s in specs
+        ],
+        "tokens": _shape_entry((cfg.batch, cfg.seq + 1), "i32"),
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small",
+                    help="comma-separated subset of " +
+                         ",".join(M.MODEL_SIZES))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = [s.strip() for s in args.sizes.split(",") if s.strip()]
+    for s in sizes:
+        if s not in M.MODEL_SIZES:
+            sys.exit(f"unknown size {s!r}; known: {list(M.MODEL_SIZES)}")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"format": 1, "models": {}}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except json.JSONDecodeError:
+            pass
+
+    opt = M.AdamConfig()
+    for s in sizes:
+        manifest["models"][s] = lower_size(M.MODEL_SIZES[s], opt, args.out_dir)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

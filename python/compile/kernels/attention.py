@@ -1,0 +1,340 @@
+"""Tiled causal flash-attention as a Pallas kernel (forward + backward).
+
+This is the Layer-1 compute hot-spot of the reproduction: the attention
+inner loop of the transformer the FlashRecovery coordinator trains. It
+follows the FlashAttention structure re-thought for TPU (see DESIGN.md
+§Hardware-Adaptation):
+
+* the grid iterates over (batch*heads, query blocks); each grid cell
+  holds one Q tile in VMEM and *streams* K/V tiles HBM→VMEM with an
+  online-softmax carry (running max `m`, running sum `l`, accumulator),
+  the TPU analogue of the CUDA version's shared-memory staging;
+* tile shapes come from BlockSpec and are sized for the ~16 MiB VMEM
+  budget (see `vmem_bytes`), with MXU-friendly inner matmuls;
+* the backward pass recomputes attention probabilities block-wise (no
+  O(L^2) residuals): one kernel accumulates dQ over K blocks, a second
+  accumulates dK/dV over Q blocks, both using the saved row-wise
+  logsumexp and the precomputed `delta = rowsum(dO * O)`.
+
+Kernels are lowered with ``interpret=True`` so they become plain HLO and
+run on the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call
+the CPU client cannot execute). Correctness is pinned to
+``kernels.ref`` by pytest + hypothesis sweeps in ``python/tests``.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# interpret=True is required for CPU-PJRT execution (see module docstring).
+INTERPRET = os.environ.get("FLASHREC_PALLAS_INTERPRET", "1") != "0"
+
+
+def pick_block(seq_len: int, preferred: int = 128) -> int:
+    """Largest power-of-two block size <= `preferred` dividing `seq_len`."""
+    b = preferred
+    while b > 1 and seq_len % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def vmem_bytes(block_q: int, block_k: int, d_head: int) -> int:
+    """Estimated VMEM working set of one forward grid cell, in bytes.
+
+    Q tile + one K tile + one V tile + accumulator + (m, l) carries +
+    logits tile, all f32. Used by DESIGN.md §Perf and the kernel-shape
+    tests to keep tiles inside the 16 MiB/core VMEM budget.
+    """
+    f32 = 4
+    q = block_q * d_head
+    kv = 2 * block_k * d_head
+    acc = block_q * d_head
+    carries = 2 * block_q
+    logits = block_q * block_k
+    return f32 * (q + kv + acc + carries + logits)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal,
+                block_q, block_k, seq_len):
+    iq = pl.program_id(1)
+    d_head = q_ref.shape[-1]
+    q = q_ref[0, :, :] * scale  # (block_q, d)
+
+    n_k_total = seq_len // block_k
+    if causal:
+        # Highest K block that intersects rows [iq*bq, (iq+1)*bq): the
+        # streaming loop skips fully-masked blocks entirely.
+        n_k = ((iq + 1) * block_q + block_k - 1) // block_k
+    else:
+        n_k = n_k_total
+
+    row_ids = iq * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(ik, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            col_ids = ik * block_k + lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(col_ids <= row_ids, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((block_q,), NEG_INF, dtype=jnp.float32),
+        jnp.zeros((block_q,), dtype=jnp.float32),
+        jnp.zeros((block_q, d_head), dtype=jnp.float32),
+    )
+    m, l, acc = lax.fori_loop(0, n_k, body, init)
+    o_ref[0, :, :] = acc / l[:, None]
+    lse_ref[0, :] = m + jnp.log(l)
+
+
+def _fwd(q, k, v, scale, causal, block_q, block_k, interpret):
+    batch, heads, seq_len, d_head = q.shape
+    bh = batch * heads
+    q3 = q.reshape(bh, seq_len, d_head)
+    k3 = k.reshape(bh, seq_len, d_head)
+    v3 = v.reshape(bh, seq_len, d_head)
+
+    grid = (bh, seq_len // block_q)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, seq_len=seq_len)
+    o3, lse3 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq_len, d_head), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq_len, d_head), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq_len, d_head), jnp.float32),
+            jax.ShapeDtypeStruct((bh, seq_len), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    out = o3.reshape(batch, heads, seq_len, d_head)
+    lse = lse3.reshape(batch, heads, seq_len)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               scale, causal, block_q, block_k, seq_len):
+    iq = pl.program_id(1)
+    d_head = q_ref.shape[-1]
+    q = q_ref[0, :, :]
+    do = do_ref[0, :, :]
+    lse = lse_ref[0, :]
+    delta = delta_ref[0, :]
+
+    if causal:
+        n_k = ((iq + 1) * block_q + block_k - 1) // block_k
+    else:
+        n_k = seq_len // block_k
+    row_ids = iq * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(ik, dq):
+        k = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            col_ids = ik * block_k + lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(col_ids <= row_ids, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        return dq + jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+
+    dq = lax.fori_loop(0, n_k, body,
+                       jnp.zeros((block_q, d_head), dtype=jnp.float32))
+    dq_ref[0, :, :] = dq
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, scale, causal, block_q, block_k, seq_len):
+    ik = pl.program_id(1)
+    d_head = q_ref.shape[-1]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+
+    n_q_total = seq_len // block_q
+    if causal:
+        # Lowest Q block whose rows can see columns [ik*bk, (ik+1)*bk).
+        start_q = (ik * block_k) // block_q
+    else:
+        start_q = 0
+    col_ids = ik * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def body(iq, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (0, pl.dslice(iq * block_q, block_q), slice(None)))
+        do = pl.load(do_ref, (0, pl.dslice(iq * block_q, block_q), slice(None)))
+        lse = pl.load(lse_ref, (0, pl.dslice(iq * block_q, block_q)))
+        delta = pl.load(delta_ref, (0, pl.dslice(iq * block_q, block_q)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            row_ids = iq * block_q + lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            s = jnp.where(col_ids <= row_ids, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # (bq, bk)
+        dv_new = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        dk_new = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+        return dk_new, dv_new
+
+    init = (jnp.zeros((block_k, d_head), dtype=jnp.float32),
+            jnp.zeros((block_k, d_head), dtype=jnp.float32))
+    dk, dv = lax.fori_loop(start_q, n_q_total, body, init)
+    dk_ref[0, :, :] = dk
+    dv_ref[0, :, :] = dv
+
+
+def _bwd_impl(q, k, v, o, lse, do, scale, causal, block_q, block_k, interpret):
+    batch, heads, seq_len, d_head = q.shape
+    bh = batch * heads
+    delta = jnp.sum(do * o, axis=-1)  # (B, H, S)
+
+    q3 = q.reshape(bh, seq_len, d_head)
+    k3 = k.reshape(bh, seq_len, d_head)
+    v3 = v.reshape(bh, seq_len, d_head)
+    do3 = do.reshape(bh, seq_len, d_head)
+    lse3 = lse.reshape(bh, seq_len)
+    delta3 = delta.reshape(bh, seq_len)
+
+    full = lambda b, i: (b, 0, 0)
+    full2 = lambda b, i: (b, 0)
+
+    dq3 = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, seq_len=seq_len),
+        grid=(bh, seq_len // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq_len, d_head), full),
+            pl.BlockSpec((1, seq_len, d_head), full),
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_len, d_head), jnp.float32),
+        interpret=interpret,
+    )(q3, k3, v3, do3, lse3, delta3)
+
+    dk3, dv3 = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, seq_len=seq_len),
+        grid=(bh, seq_len // block_k),
+        in_specs=[
+            pl.BlockSpec((1, seq_len, d_head), full),
+            pl.BlockSpec((1, block_k, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq_len, d_head), full),
+            pl.BlockSpec((1, seq_len), full2),
+            pl.BlockSpec((1, seq_len), full2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d_head), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq_len, d_head), jnp.float32),
+            jax.ShapeDtypeStruct((bh, seq_len, d_head), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3, do3, lse3, delta3)
+
+    dq = dq3.reshape(batch, heads, seq_len, d_head)
+    dk = dk3.reshape(batch, heads, seq_len, d_head)
+    dv = dv3.reshape(batch, heads, seq_len, d_head)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring + public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, scale, causal, block_q, block_k, interpret):
+    out, _ = _fwd(q, k, v, scale, causal, block_q, block_k, interpret)
+    return out
+
+
+def _fa_fwd(q, k, v, scale, causal, block_q, block_k, interpret):
+    out, lse = _fwd(q, k, v, scale, causal, block_q, block_k, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(scale, causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    return _bwd_impl(q, k, v, o, lse, do, scale, causal, block_q, block_k,
+                     interpret)
+
+
+_flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, block_q=None,
+                    block_k=None, interpret=None):
+    """Tiled (flash) multi-head attention.
+
+    Drop-in replacement for ``ref.mha_ref`` with O(seq) memory per grid
+    cell. Differentiable via a custom VJP whose backward pass is also a
+    pair of Pallas kernels.
+
+    Args:
+      q, k, v: f32[batch, heads, seq, d_head]; seq must be divisible by
+        the chosen block sizes.
+      causal: apply causal masking (fully-masked K/V blocks are skipped,
+        not just masked).
+      scale: logit scale, default 1/sqrt(d_head).
+      block_q, block_k: tile sizes; default the largest power of two
+        <= 128 dividing seq.
+      interpret: override the module-level INTERPRET flag.
+    """
+    batch, heads, seq_len, d_head = q.shape
+    if scale is None:
+        scale = float(1.0 / (d_head ** 0.5))
+    if block_q is None:
+        block_q = pick_block(seq_len)
+    if block_k is None:
+        block_k = pick_block(seq_len)
+    if interpret is None:
+        interpret = INTERPRET
+    if seq_len % block_q or seq_len % block_k:
+        raise ValueError(
+            f"seq_len={seq_len} not divisible by blocks ({block_q},{block_k})")
+    return _flash_attention(q, k, v, scale, causal, block_q, block_k,
+                            interpret)

@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: deliberately simple, O(L^2)
+materialising implementations with no tiling tricks. pytest (and the
+hypothesis sweeps in python/tests) assert that the Pallas kernels in
+`attention.py` match these to tight tolerances, for both the forward
+pass and the gradients (via jax.grad through `mha_ref`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def mha_ref(q, k, v, *, causal=True, scale=None):
+    """Multi-head attention reference.
+
+    Args:
+      q, k, v: f32[batch, heads, seq, d_head]
+      causal:  apply a causal (lower-triangular) mask.
+      scale:   logit scale; defaults to 1/sqrt(d_head).
+
+    Returns:
+      f32[batch, heads, seq, d_head]
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], dtype=q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        seq_q, seq_k = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def mha_ref_lse(q, k, v, *, causal=True, scale=None):
+    """Reference attention that also returns the per-row logsumexp.
+
+    Used to validate the auxiliary LSE output the Pallas forward saves
+    for the backward pass.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], dtype=q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        seq_q, seq_k = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), dtype=bool))
+        logits = jnp.where(mask, logits, NEG_INF)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    probs = jnp.exp(logits - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out, lse

@@ -1,0 +1,197 @@
+"""Layer-2 JAX model: decoder-only transformer trained by FlashRecovery.
+
+Everything here is *build-time only*: `aot.py` lowers these functions to
+HLO text once, and the Rust coordinator executes the artifacts via PJRT
+for every training step. Nothing in `python/` runs on the request path.
+
+Interop contract with Rust (see rust/src/runtime/manifest.rs):
+
+* Parameters are a flat *list* of f32 arrays in the canonical order
+  produced by `param_specs(cfg)`. Rust holds them as `xla::Literal`s and
+  passes them positionally.
+* `fwd_bwd`:   (*params, tokens)                  -> (loss, *grads)
+* `opt_step`:  (*params, *m, *v, step, *grads)    -> (*params', *m', *v')
+* `train_step`: fused single-device step,
+               (*params, *m, *v, step, tokens)    -> (loss, *params', *m', *v')
+* `init`:      (seed,)                            -> (*params,)
+* `tokens` is i32[batch, seq+1]; inputs = tokens[:, :-1], targets =
+  tokens[:, 1:]. `step` is f32[] (Adam bias correction), 1-based.
+
+Splitting fwd_bwd from opt_step is deliberate: the Rust-side gradient
+allreduce between them is the paper's synchronisation barrier (§III-E,
+Fig. 7) that the step-tag protocol brackets.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyperparameters."""
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq: int
+    batch: int  # per-DP-rank micro-batch lowered into the artifact
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The three sizes referenced throughout DESIGN.md. `base` is the ~100M
+# end-to-end config; `tiny`/`small` keep tests and benches fast.
+MODEL_SIZES = {
+    "tiny": ModelConfig("tiny", n_layers=2, d_model=64, n_heads=2, d_ff=256,
+                        vocab=256, seq=32, batch=4),
+    "small": ModelConfig("small", n_layers=4, d_model=256, n_heads=4,
+                         d_ff=1024, vocab=2048, seq=64, batch=4),
+    "base": ModelConfig("base", n_layers=12, d_model=768, n_heads=12,
+                        d_ff=3072, vocab=8192, seq=128, batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0  # global-norm clip; 0 disables
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — the Rust interop ordering."""
+    specs = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs.append(("ln_f", (cfg.d_model,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed) -> List[jax.Array]:
+    """Initialise parameters from an i32 seed scalar (lowered to HLO)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i, (name, shape) in enumerate(param_specs(cfg)):
+        sub = jax.random.fold_in(key, i)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "pos":
+            params.append(
+                0.01 * jax.random.normal(sub, shape, dtype=jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = fan_in ** -0.5
+            # Scale residual-output projections down by sqrt(2*L) (GPT-2).
+            if name.endswith(("wo", "w2")):
+                std /= (2.0 * cfg.n_layers) ** 0.5
+            params.append(
+                std * jax.random.normal(sub, shape, dtype=jnp.float32))
+    return params
+
+
+def _rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], inputs) -> jax.Array:
+    """Token logits. inputs: i32[batch, seq] -> f32[batch, seq, vocab]."""
+    names = [n for n, _ in param_specs(cfg)]
+    p = dict(zip(names, params))
+    B, S = inputs.shape
+    x = p["embed"][inputs] + p["pos"][None, :S, :]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _rms_norm(x, p[pre + "ln1"])
+        q = (h @ p[pre + "wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        k = (h @ p[pre + "wk"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        v = (h @ p[pre + "wv"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        attn = flash_attention(q, k, v, causal=True)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_model)
+        x = x + attn @ p[pre + "wo"]
+
+        h = _rms_norm(x, p[pre + "ln2"])
+        h = jax.nn.gelu(h @ p[pre + "w1"])
+        x = x + h @ p[pre + "w2"]
+
+    x = _rms_norm(x, p["ln_f"])
+    # Tied unembedding: logits via the embedding matrix.
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], tokens) -> jax.Array:
+    """Mean causal-LM cross-entropy. tokens: i32[batch, seq+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def fwd_bwd(cfg: ModelConfig, params: List[jax.Array], tokens):
+    """(loss, grads) for one micro-batch — the pre-barrier phase."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens))(params)
+    return loss, grads
+
+
+def adam_step(cfg: ModelConfig, opt: AdamConfig, params, m, v, step, grads):
+    """One Adam update — the post-barrier phase.
+
+    `step` is a 1-based f32 scalar; grads are the *already allreduced*
+    gradients handed back by the Rust coordinator.
+    """
+    if opt.grad_clip > 0:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+        scale = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-12))
+        grads = [g * scale for g in grads]
+    b1, b2 = opt.beta1, opt.beta2
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * jnp.square(gi)
+        update = opt.lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + opt.eps)
+        new_p.append(pi - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def train_step(cfg: ModelConfig, opt: AdamConfig, params, m, v, step, tokens):
+    """Fused single-device step (quickstart / throughput reference)."""
+    loss, grads = fwd_bwd(cfg, params, tokens)
+    new_p, new_m, new_v = adam_step(cfg, opt, params, m, v, step, grads)
+    return loss, new_p, new_m, new_v

@@ -1,0 +1,100 @@
+"""AOT lowering tests: the HLO-text artifacts and manifest that the Rust
+runtime consumes must be well-formed and numerically faithful.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.MODEL_SIZES["tiny"]
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def test_hlo_text_has_entry_and_params():
+    spec = jax.ShapeDtypeStruct((), jnp.int32)
+    text = aot.to_hlo_text(_lower(lambda s: tuple(M.init_params(CFG, s)), spec))
+    assert "ENTRY" in text
+    assert "f32[" in text
+    # return_tuple=True: root must be a tuple of all params
+    assert f"({len(M.param_specs(CFG))} " in text.replace("\n", " ") or "tuple(" in text
+
+
+def test_manifest_written(tmp_path):
+    entry = aot.lower_size(CFG, M.AdamConfig(), str(tmp_path))
+    assert set(entry["artifacts"]) == {"init", "fwd_bwd", "opt_step",
+                                       "train_step"}
+    for a in entry["artifacts"].values():
+        assert (tmp_path / a["file"]).exists()
+        assert (tmp_path / a["file"]).stat().st_size > 1000
+    assert entry["config"]["param_count"] == M.param_count(CFG)
+    assert len(entry["params"]) == len(M.param_specs(CFG))
+    assert entry["tokens"]["shape"] == [CFG.batch, CFG.seq + 1]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_checked_in_manifest_covers_tiny_and_small():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format"] == 1
+    for size in ("tiny", "small"):
+        assert size in man["models"], f"missing size {size}"
+        entry = man["models"][size]
+        for a in entry["artifacts"].values():
+            path = os.path.join(ART, a["file"])
+            assert os.path.exists(path), path
+
+
+def test_lowered_matches_eager():
+    """jit-compiled (what gets lowered) == eager for every artifact fn."""
+    rng = np.random.default_rng(0)
+    params = M.init_params(CFG, 0)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    tokens = jnp.asarray(rng.integers(
+        0, CFG.vocab, size=(CFG.batch, CFG.seq + 1), dtype=np.int32))
+    step = jnp.float32(1.0)
+    opt = M.AdamConfig()
+
+    def fwd_bwd_fn(params, tokens):
+        loss, grads = M.fwd_bwd(CFG, list(params), tokens)
+        return (loss, *grads)
+
+    eager = fwd_bwd_fn(tuple(params), tokens)
+    jitted = jax.jit(fwd_bwd_fn)(tuple(params), tokens)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def train_fn(p, m, v, s, t):
+        loss, np_, nm, nv = M.train_step(CFG, opt, list(p), list(m),
+                                         list(v), s, t)
+        return (loss, *np_, *nm, *nv)
+
+    eager = train_fn(params, m, v, step, tokens)
+    jitted = jax.jit(train_fn)(params, m, v, step, tokens)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_artifact_hlo_parses_parameter_counts():
+    """fwd_bwd artifact must declare exactly n_params+1 parameters."""
+    path = os.path.join(ART, "fwd_bwd_tiny.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        text = f.read()
+    entry = text[text.index("ENTRY"):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(M.param_specs(CFG)) + 1  # params + tokens

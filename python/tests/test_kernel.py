@@ -1,0 +1,187 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle (kernels.ref).
+
+This is the CORE Layer-1 correctness signal: forward outputs, the saved
+logsumexp, and all three input gradients must match the reference to
+tight tolerances across shapes, block sizes, and masking modes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (
+    _fwd, flash_attention, pick_block, vmem_bytes)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _qkv(b, h, s, d, seed=0):
+    return (_rand((b, h, s, d), seed), _rand((b, h, s, d), seed + 1),
+            _rand((b, h, s, d), seed + 2))
+
+
+# ---------------------------------------------------------------- forward
+
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 1, 16, 8), (2, 3, 64, 32), (1, 2, 128, 64), (4, 1, 32, 16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_forward_matches_ref(b, h, s, d, causal):
+    q, k, v = _qkv(b, h, s, d)
+    out = flash_attention(q, k, v, causal=causal)
+    exp = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, exp, atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("block_q,block_k", [
+    (8, 8), (16, 8), (8, 16), (32, 16), (16, 32), (64, 64),
+])
+def test_forward_block_shapes(block_q, block_k):
+    q, k, v = _qkv(2, 2, 64, 32, seed=7)
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    exp = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, atol=ATOL, rtol=RTOL)
+
+
+def test_forward_lse_matches_ref():
+    q, k, v = _qkv(2, 2, 32, 16, seed=3)
+    out, lse = _fwd(q, k, v, 1.0 / 4.0, True, 16, 16, True)
+    exp_out, exp_lse = ref.mha_ref_lse(q, k, v)
+    np.testing.assert_allclose(out, exp_out, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, exp_lse, atol=ATOL, rtol=RTOL)
+
+
+def test_custom_scale():
+    q, k, v = _qkv(1, 2, 32, 16, seed=9)
+    out = flash_attention(q, k, v, scale=0.25)
+    exp = ref.mha_ref(q, k, v, scale=0.25)
+    np.testing.assert_allclose(out, exp, atol=ATOL, rtol=RTOL)
+
+
+def test_first_row_attends_only_to_itself():
+    # Causal row 0 must equal v[..., 0, :] exactly (softmax of one logit).
+    q, k, v = _qkv(1, 1, 16, 8, seed=5)
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+    np.testing.assert_allclose(out[..., 0, :], v[..., 0, :],
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_invalid_block_size_raises():
+    q, k, v = _qkv(1, 1, 24, 8)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=16, block_k=16)
+
+
+def test_under_jit():
+    q, k, v = _qkv(1, 2, 32, 16, seed=11)
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v))
+    np.testing.assert_allclose(f(q, k, v), ref.mha_ref(q, k, v),
+                               atol=ATOL, rtol=RTOL)
+
+
+# --------------------------------------------------------------- backward
+
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 1, 16, 8), (2, 2, 64, 32), (1, 2, 128, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_grads_match_ref(b, h, s, d, causal):
+    q, k, v = _qkv(b, h, s, d, seed=13)
+    f = lambda q, k, v: jnp.sum(jnp.sin(flash_attention(q, k, v, causal=causal)))
+    g = lambda q, k, v: jnp.sum(jnp.sin(ref.mha_ref(q, k, v, causal=causal)))
+    got = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    exp = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b_ in zip("dq dk dv".split(), got, exp):
+        np.testing.assert_allclose(a, b_, atol=5e-5, rtol=5e-5,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 16), (16, 8), (32, 32)])
+def test_grads_block_shapes(block_q, block_k):
+    q, k, v = _qkv(1, 2, 64, 16, seed=17)
+    f = lambda *a: jnp.sum(
+        flash_attention(*a, block_q=block_q, block_k=block_k) ** 2)
+    g = lambda *a: jnp.sum(ref.mha_ref(*a) ** 2)
+    got = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    exp = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(got, exp):
+        np.testing.assert_allclose(a, b_, atol=5e-5, rtol=5e-5)
+
+
+def test_grad_under_jit_and_vjp_consistency():
+    q, k, v = _qkv(1, 1, 32, 8, seed=19)
+    do = _rand((1, 1, 32, 8), 23)
+    _, vjp = jax.vjp(lambda q, k, v: flash_attention(q, k, v), q, k, v)
+    _, ref_vjp = jax.vjp(lambda q, k, v: ref.mha_ref(q, k, v), q, k, v)
+    for a, b_ in zip(vjp(do), ref_vjp(do)):
+        np.testing.assert_allclose(a, b_, atol=5e-5, rtol=5e-5)
+
+
+# ----------------------------------------------------------- hypothesis
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    s_pow=st.integers(3, 7),   # seq in {8..128}
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_forward(b, h, s_pow, d, causal, seed):
+    s = 2 ** s_pow
+    q, k, v = _qkv(b, h, s, d, seed=seed)
+    out = flash_attention(q, k, v, causal=causal)
+    exp = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, exp, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s_pow=st.integers(3, 6),
+    d=st.sampled_from([4, 8, 16]),
+    bq_pow=st.integers(2, 5),
+    bk_pow=st.integers(2, 5),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_grads(s_pow, d, bq_pow, bk_pow, seed):
+    s = 2 ** s_pow
+    bq, bk = min(2 ** bq_pow, s), min(2 ** bk_pow, s)
+    q, k, v = _qkv(1, 2, s, d, seed=seed)
+    f = lambda *a: jnp.sum(flash_attention(*a, block_q=bq, block_k=bk) ** 2)
+    g = lambda *a: jnp.sum(ref.mha_ref(*a) ** 2)
+    got = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    exp = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(got, exp):
+        np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------- shape discipline
+
+def test_pick_block():
+    assert pick_block(128) == 128
+    assert pick_block(96) == 32
+    assert pick_block(32) == 32
+    assert pick_block(6) == 2
+    assert pick_block(7) == 1
+
+
+def test_vmem_budget_for_base_config():
+    # base model: d_head = 64, seq = 128 -> default blocks 128.
+    assert vmem_bytes(128, 128, 64) <= 16 * 1024 * 1024
+
+
+def test_vmem_estimate_monotone_in_blocks():
+    assert vmem_bytes(64, 64, 32) < vmem_bytes(128, 64, 32)
+    assert vmem_bytes(64, 64, 32) < vmem_bytes(64, 128, 32)

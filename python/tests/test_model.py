@@ -1,0 +1,197 @@
+"""Layer-2 model tests: shapes, init, loss, Adam, and phase-split
+consistency (fwd_bwd + opt_step must equal the fused train_step — this
+is the invariant the Rust DP engine relies on when it inserts the
+gradient-allreduce barrier between the two artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.MODEL_SIZES["tiny"]
+OPT = M.AdamConfig()
+
+
+def _tokens(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(
+        0, cfg.vocab, size=(cfg.batch, cfg.seq + 1), dtype=np.int32))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+# ------------------------------------------------------------------ specs
+
+def test_param_specs_order_is_stable():
+    names = [n for n, _ in M.param_specs(CFG)]
+    assert names[0] == "embed" and names[1] == "pos" and names[-1] == "ln_f"
+    assert names.index("layer0.ln1") < names.index("layer0.wo")
+    assert names.index("layer0.w2") < names.index("layer1.ln1")
+
+
+def test_param_count_matches_specs(params):
+    total = sum(int(np.prod(p.shape)) for p in params)
+    assert total == M.param_count(CFG)
+
+
+@pytest.mark.parametrize("size", list(M.MODEL_SIZES))
+def test_all_sizes_have_valid_specs(size):
+    cfg = M.MODEL_SIZES[size]
+    specs = M.param_specs(cfg)
+    assert len(specs) == 3 + 8 * cfg.n_layers
+    assert cfg.d_model % cfg.n_heads == 0
+
+
+def test_base_is_about_100m():
+    assert 50e6 < M.param_count(M.MODEL_SIZES["base"]) < 150e6
+
+
+# ------------------------------------------------------------------- init
+
+def test_init_deterministic(params):
+    again = M.init_params(CFG, 0)
+    for a, b in zip(params, again):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_init_seed_changes_weights(params):
+    other = M.init_params(CFG, 1)
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(params, other)
+             if a.ndim == 2]  # norms scales are all-ones for every seed
+    assert max(diffs) > 0
+
+
+def test_init_norm_scales_are_ones(params):
+    for (name, _), p in zip(M.param_specs(CFG), params):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            np.testing.assert_array_equal(p, jnp.ones_like(p))
+
+
+# ---------------------------------------------------------------- forward
+
+def test_forward_shape(params):
+    inputs = _tokens(CFG)[:, :-1]
+    logits = M.forward(CFG, params, inputs)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_close_to_uniform_at_init(params):
+    # Fresh init should be near ln(vocab) (uniform predictive entropy).
+    loss = M.loss_fn(CFG, params, _tokens(CFG))
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_forward_is_causal(params):
+    # Changing a future token must not change earlier logits.
+    t = _tokens(CFG)
+    inputs = t[:, :-1]
+    logits_a = M.forward(CFG, params, inputs)
+    mutated = inputs.at[:, -1].set((inputs[:, -1] + 1) % CFG.vocab)
+    logits_b = M.forward(CFG, params, mutated)
+    np.testing.assert_allclose(logits_a[:, :-1], logits_b[:, :-1],
+                               atol=1e-5, rtol=1e-5)
+    assert float(jnp.max(jnp.abs(logits_a[:, -1] - logits_b[:, -1]))) > 1e-4
+
+
+# ---------------------------------------------------------------- fwd_bwd
+
+def test_fwd_bwd_shapes(params):
+    loss, grads = M.fwd_bwd(CFG, params, _tokens(CFG))
+    assert loss.shape == ()
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_fwd_bwd_grad_nonzero(params):
+    _, grads = M.fwd_bwd(CFG, params, _tokens(CFG))
+    assert all(float(jnp.max(jnp.abs(g))) > 0 for g in grads)
+
+
+# --------------------------------------------------------------- opt step
+
+def test_adam_step_moves_params(params):
+    loss0, grads = M.fwd_bwd(CFG, params, _tokens(CFG))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    new_p, new_m, new_v = M.adam_step(CFG, OPT, params, m, v,
+                                      jnp.float32(1.0), grads)
+    assert any(float(jnp.max(jnp.abs(a - b))) > 0
+               for a, b in zip(new_p, params))
+    # first-step Adam with bias correction moves each param by ~lr
+    deltas = [float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(new_p, params)]
+    assert max(deltas) < 10 * OPT.lr
+
+
+def test_training_reduces_loss_on_fixed_batch(params):
+    tokens = _tokens(CFG, seed=42)
+    p = params
+    m = [jnp.zeros_like(x) for x in p]
+    v = [jnp.zeros_like(x) for x in p]
+    first = float(M.loss_fn(CFG, p, tokens))
+    step = jax.jit(lambda p, m, v, s: M.train_step(CFG, OPT, p, m, v, s, tokens))
+    for s in range(1, 21):
+        loss, p, m, v = step(p, m, v, jnp.float32(s))
+    assert float(loss) < first - 0.5
+
+
+def test_grad_clip_bounds_update():
+    opt = M.AdamConfig(grad_clip=1e-3)
+    p = M.init_params(CFG, 0)
+    loss, grads = M.fwd_bwd(CFG, p, _tokens(CFG))
+    m = [jnp.zeros_like(x) for x in p]
+    v = [jnp.zeros_like(x) for x in p]
+    _, new_m, _ = M.adam_step(CFG, opt, p, m, v, jnp.float32(1.0), grads)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(jnp.square(g) / (1 - opt.beta1) ** 2)
+                               for g in new_m)))
+    assert gnorm <= 1e-3 * 1.01
+
+
+# ------------------------------------------------- phase-split consistency
+
+def test_split_equals_fused(params):
+    """fwd_bwd + adam_step == train_step (the Rust barrier contract)."""
+    tokens = _tokens(CFG, seed=7)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = jnp.float32(1.0)
+
+    loss_a, grads = M.fwd_bwd(CFG, params, tokens)
+    pa, ma, va = M.adam_step(CFG, OPT, params, m, v, step, grads)
+
+    loss_b, pb, mb, vb = M.train_step(CFG, OPT, params, m, v, step, tokens)
+
+    np.testing.assert_allclose(loss_a, loss_b, atol=1e-6, rtol=1e-6)
+    for xs, ys in ((pa, pb), (ma, mb), (va, vb)):
+        for x, y in zip(xs, ys):
+            np.testing.assert_allclose(x, y, atol=1e-6, rtol=1e-6)
+
+
+def test_dp_grad_average_equals_big_batch(params):
+    """Averaging per-rank grads == grads of the concatenated batch.
+
+    This is exactly what the Rust allreduce does between fwd_bwd and
+    opt_step; loss is mean-reduced so equal-sized micro-batches average.
+    """
+    t1, t2 = _tokens(CFG, seed=1), _tokens(CFG, seed=2)
+    _, g1 = M.fwd_bwd(CFG, params, t1)
+    _, g2 = M.fwd_bwd(CFG, params, t2)
+    avg = [(a + b) / 2 for a, b in zip(g1, g2)]
+
+    big = jnp.concatenate([t1, t2], axis=0)
+    cfg_big = M.ModelConfig("tiny2", CFG.n_layers, CFG.d_model, CFG.n_heads,
+                            CFG.d_ff, CFG.vocab, CFG.seq, CFG.batch * 2)
+    _, g_big = M.fwd_bwd(cfg_big, params, big)
+    for a, b in zip(avg, g_big):
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)

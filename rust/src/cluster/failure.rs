@@ -1,0 +1,278 @@
+//! Failure taxonomy and injection — paper Fig. 9.
+//!
+//! The paper reports hardware failures at 59.6% (network 57%, device
+//! memory 20%, unclassified 11%, AICore / timeout / driver the rest)
+//! and software failures at 40.4% (segfault 34%, resource errors,
+//! torch-init, configuration, OOM, 9% unclassified). The injector
+//! reproduces exactly this mix; `benches/fig9_failure_taxonomy.rs`
+//! regenerates the figure from injector output.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailureCategory {
+    Hardware,
+    Software,
+}
+
+/// Leaf failure types from Fig. 9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailureKind {
+    // -- hardware
+    Network,
+    DeviceMemory,
+    AiCore,
+    Timeout,
+    Driver,
+    HardwareOther,
+    // -- software
+    Segfault,
+    ResourceError,
+    TorchInit,
+    ConfigAnomaly,
+    Oom,
+    SoftwareOther,
+}
+
+/// Share of hardware failures among all failures (paper: 59.6%).
+pub const HARDWARE_SHARE: f64 = 0.596;
+
+/// (kind, share-within-category) — hardware sums to 1.0.
+pub const HARDWARE_MIX: [(FailureKind, f64); 6] = [
+    (FailureKind::Network, 0.57),
+    (FailureKind::DeviceMemory, 0.20),
+    (FailureKind::HardwareOther, 0.11),
+    (FailureKind::AiCore, 0.05),
+    (FailureKind::Timeout, 0.04),
+    (FailureKind::Driver, 0.03),
+];
+
+/// (kind, share-within-category) — software sums to 1.0.
+pub const SOFTWARE_MIX: [(FailureKind, f64); 6] = [
+    (FailureKind::Segfault, 0.34),
+    (FailureKind::ResourceError, 0.20),
+    (FailureKind::TorchInit, 0.15),
+    (FailureKind::ConfigAnomaly, 0.12),
+    (FailureKind::Oom, 0.10),
+    (FailureKind::SoftwareOther, 0.09),
+];
+
+impl FailureKind {
+    pub fn category(&self) -> FailureCategory {
+        use FailureKind::*;
+        match self {
+            Network | DeviceMemory | AiCore | Timeout | Driver | HardwareOther => {
+                FailureCategory::Hardware
+            }
+            _ => FailureCategory::Software,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        use FailureKind::*;
+        match self {
+            Network => "network",
+            DeviceMemory => "device_memory",
+            AiCore => "aicore",
+            Timeout => "timeout",
+            Driver => "driver",
+            HardwareOther => "hardware_other",
+            Segfault => "segfault",
+            ResourceError => "resource_error",
+            TorchInit => "torch_init",
+            ConfigAnomaly => "config_anomaly",
+            Oom => "oom",
+            SoftwareOther => "software_other",
+        }
+    }
+
+    pub fn all() -> Vec<FailureKind> {
+        HARDWARE_MIX
+            .iter()
+            .chain(SOFTWARE_MIX.iter())
+            .map(|(k, _)| *k)
+            .collect()
+    }
+
+    /// Overall probability of this kind among all failures.
+    pub fn overall_share(&self) -> f64 {
+        let (mix, cat_share): (&[(FailureKind, f64)], f64) =
+            match self.category() {
+                FailureCategory::Hardware => (&HARDWARE_MIX, HARDWARE_SHARE),
+                FailureCategory::Software => (&SOFTWARE_MIX, 1.0 - HARDWARE_SHARE),
+            };
+        mix.iter()
+            .find(|(k, _)| k == self)
+            .map(|(_, w)| w * cat_share)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Whether a failure is detectable by the device plugin (hardware
+/// signals) or only by the monitoring process (process death). Both
+/// paths feed the controller; this only affects which component
+/// reports first in the real engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectionPath {
+    DevicePlugin,
+    MonitorProcess,
+}
+
+impl FailureKind {
+    pub fn detection_path(&self) -> DetectionPath {
+        match self.category() {
+            FailureCategory::Hardware => DetectionPath::DevicePlugin,
+            FailureCategory::Software => DetectionPath::MonitorProcess,
+        }
+    }
+}
+
+/// A concrete injected failure.
+#[derive(Debug, Clone)]
+pub struct FailureEvent {
+    /// Seconds from injector start.
+    pub at: f64,
+    /// Victim node index.
+    pub node: usize,
+    pub kind: FailureKind,
+}
+
+/// Samples failure arrivals (Poisson process over the cluster) and
+/// victims/kinds per Fig. 9.
+pub struct FailureInjector {
+    rng: Rng,
+    cluster_mtbf_s: f64,
+    num_nodes: usize,
+    clock: f64,
+}
+
+impl FailureInjector {
+    pub fn new(num_nodes: usize, cluster_mtbf_s: f64, seed: u64) -> Self {
+        assert!(num_nodes > 0);
+        assert!(cluster_mtbf_s > 0.0);
+        FailureInjector {
+            rng: Rng::new(seed ^ 0xFA11_u64),
+            cluster_mtbf_s,
+            num_nodes,
+            clock: 0.0,
+        }
+    }
+
+    /// Sample a kind from the Fig. 9 distribution.
+    pub fn sample_kind(rng: &mut Rng) -> FailureKind {
+        let (mix, _) = if rng.bool(HARDWARE_SHARE) {
+            (&HARDWARE_MIX, FailureCategory::Hardware)
+        } else {
+            (&SOFTWARE_MIX, FailureCategory::Software)
+        };
+        let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+        mix[rng.weighted(&weights)].0
+    }
+
+    /// Next failure event (advances the internal clock).
+    pub fn next(&mut self) -> FailureEvent {
+        self.clock += self.rng.exponential(1.0 / self.cluster_mtbf_s);
+        FailureEvent {
+            at: self.clock,
+            node: self.rng.below(self.num_nodes as u64) as usize,
+            kind: Self::sample_kind(&mut self.rng),
+        }
+    }
+
+    /// All failures within a horizon (seconds).
+    pub fn within(&mut self, horizon_s: f64) -> Vec<FailureEvent> {
+        let mut out = Vec::new();
+        loop {
+            let e = self.next();
+            if e.at > horizon_s {
+                // Put the clock back so `within` can be called again.
+                self.clock = horizon_s;
+                break;
+            }
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_sum_to_one() {
+        let hw: f64 = HARDWARE_MIX.iter().map(|(_, w)| w).sum();
+        let sw: f64 = SOFTWARE_MIX.iter().map(|(_, w)| w).sum();
+        assert!((hw - 1.0).abs() < 1e-9);
+        assert!((sw - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overall_shares_sum_to_one() {
+        let total: f64 = FailureKind::all().iter().map(|k| k.overall_share()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn categories_are_consistent() {
+        for (k, _) in HARDWARE_MIX {
+            assert_eq!(k.category(), FailureCategory::Hardware);
+        }
+        for (k, _) in SOFTWARE_MIX {
+            assert_eq!(k.category(), FailureCategory::Software);
+        }
+    }
+
+    #[test]
+    fn sampled_mix_converges_to_fig9() {
+        let mut rng = Rng::new(0);
+        let n = 200_000;
+        let mut hardware = 0u32;
+        let mut network = 0u32;
+        let mut segfault = 0u32;
+        for _ in 0..n {
+            let k = FailureInjector::sample_kind(&mut rng);
+            if k.category() == FailureCategory::Hardware {
+                hardware += 1;
+            }
+            if k == FailureKind::Network {
+                network += 1;
+            }
+            if k == FailureKind::Segfault {
+                segfault += 1;
+            }
+        }
+        let hw_frac = hardware as f64 / n as f64;
+        assert!((hw_frac - HARDWARE_SHARE).abs() < 0.01, "hw={hw_frac}");
+        let net_frac = network as f64 / n as f64;
+        assert!((net_frac - 0.596 * 0.57).abs() < 0.01, "net={net_frac}");
+        let seg_frac = segfault as f64 / n as f64;
+        assert!((seg_frac - 0.404 * 0.34).abs() < 0.01, "seg={seg_frac}");
+    }
+
+    #[test]
+    fn arrivals_match_mtbf() {
+        let mut inj = FailureInjector::new(100, 1000.0, 7);
+        let events = inj.within(1_000_000.0);
+        // Poisson with rate 1/1000: expect ~1000 events over 1e6 s.
+        assert!((events.len() as f64 - 1000.0).abs() < 120.0, "{}", events.len());
+        // strictly increasing times, nodes in range
+        for w in events.windows(2) {
+            assert!(w[1].at > w[0].at);
+        }
+        assert!(events.iter().all(|e| e.node < 100));
+    }
+
+    #[test]
+    fn injector_is_deterministic() {
+        let a: Vec<_> = (0..10).map(|_| FailureInjector::new(8, 100.0, 42).next().node).collect();
+        let b: Vec<_> = (0..10).map(|_| FailureInjector::new(8, 100.0, 42).next().node).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn detection_paths() {
+        assert_eq!(FailureKind::Network.detection_path(), DetectionPath::DevicePlugin);
+        assert_eq!(FailureKind::Segfault.detection_path(), DetectionPath::MonitorProcess);
+    }
+}

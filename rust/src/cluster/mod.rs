@@ -1,0 +1,16 @@
+//! Cluster substrate: discrete-event simulation engine, failure
+//! taxonomy/injection (Fig. 9), calibrated latency model (DESIGN.md §6),
+//! node inventory, and the paper-scale recovery scenarios behind
+//! Tables II and III.
+
+pub mod failure;
+pub mod latency;
+pub mod node;
+pub mod scenario;
+pub mod simtime;
+
+pub use failure::{FailureCategory, FailureEvent, FailureInjector, FailureKind};
+pub use latency::{LatencyModel, StepTimeModel};
+pub use node::{NodeState, SimCluster, SimNode};
+pub use scenario::{simulate_flash, simulate_vanilla, RecoveryBreakdown, ScenarioConfig};
+pub use simtime::Sim;

@@ -1,0 +1,158 @@
+//! Simulated cluster inventory: nodes, device slots, container state,
+//! and the spare-node pool the scheduler substitutes from.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Healthy and participating in the job.
+    Running,
+    /// Healthy, training suspended, awaiting continue signal.
+    Suspended,
+    /// Declared failed by the controller.
+    Faulty,
+    /// Healthy standby, not in the job.
+    Spare,
+    /// Replacement node bringing its container up.
+    Starting,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimNode {
+    pub id: usize,
+    pub state: NodeState,
+    /// Devices hosted by this node (global device ids).
+    pub devices: Vec<usize>,
+}
+
+/// Cluster inventory for the simulated control plane.
+#[derive(Debug, Clone)]
+pub struct SimCluster {
+    pub nodes: Vec<SimNode>,
+    pub devices_per_node: usize,
+}
+
+impl SimCluster {
+    /// `active` nodes running the job + `spares` standby nodes.
+    pub fn new(active: usize, spares: usize, devices_per_node: usize) -> Self {
+        assert!(devices_per_node > 0);
+        let mut nodes = Vec::with_capacity(active + spares);
+        for id in 0..active {
+            nodes.push(SimNode {
+                id,
+                state: NodeState::Running,
+                devices: (id * devices_per_node..(id + 1) * devices_per_node)
+                    .collect(),
+            });
+        }
+        for id in active..active + spares {
+            nodes.push(SimNode { id, state: NodeState::Spare, devices: vec![] });
+        }
+        SimCluster { nodes, devices_per_node }
+    }
+
+    pub fn active_devices(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                matches!(n.state, NodeState::Running | NodeState::Suspended)
+            })
+            .map(|n| n.devices.len())
+            .sum()
+    }
+
+    pub fn node_of_device(&self, device: usize) -> Option<usize> {
+        self.nodes
+            .iter()
+            .find(|n| n.devices.contains(&device))
+            .map(|n| n.id)
+    }
+
+    /// Mark `node` faulty; returns its device list.
+    pub fn fail_node(&mut self, node: usize) -> Result<Vec<usize>> {
+        let n = self
+            .nodes
+            .get_mut(node)
+            .ok_or_else(|| anyhow::anyhow!("no node {node}"))?;
+        if n.state == NodeState::Spare {
+            bail!("spare node {node} cannot fail in-job");
+        }
+        n.state = NodeState::Faulty;
+        Ok(n.devices.clone())
+    }
+
+    /// Substitute `faulty` with a spare: the spare adopts the faulty
+    /// node's device ids (so the logical topology is unchanged — the
+    /// essence of FlashRecovery's limited recreation). Returns the
+    /// spare's node id.
+    pub fn substitute(&mut self, faulty: usize) -> Result<usize> {
+        if self.nodes[faulty].state != NodeState::Faulty {
+            bail!("node {faulty} is not faulty");
+        }
+        let spare = self
+            .nodes
+            .iter()
+            .position(|n| n.state == NodeState::Spare)
+            .ok_or_else(|| anyhow::anyhow!("spare pool exhausted"))?;
+        let devices = std::mem::take(&mut self.nodes[faulty].devices);
+        self.nodes[spare].devices = devices;
+        self.nodes[spare].state = NodeState::Starting;
+        Ok(spare)
+    }
+
+    pub fn set_state(&mut self, node: usize, state: NodeState) {
+        self.nodes[node].state = state;
+    }
+
+    pub fn count(&self, state: NodeState) -> usize {
+        self.nodes.iter().filter(|n| n.state == state).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_assigns_devices_contiguously() {
+        let c = SimCluster::new(4, 1, 8);
+        assert_eq!(c.nodes.len(), 5);
+        assert_eq!(c.active_devices(), 32);
+        assert_eq!(c.nodes[2].devices, (16..24).collect::<Vec<_>>());
+        assert_eq!(c.node_of_device(17), Some(2));
+        assert_eq!(c.count(NodeState::Spare), 1);
+    }
+
+    #[test]
+    fn fail_and_substitute_preserves_device_ids() {
+        let mut c = SimCluster::new(3, 2, 4);
+        let lost = c.fail_node(1).unwrap();
+        assert_eq!(lost, vec![4, 5, 6, 7]);
+        let spare = c.substitute(1).unwrap();
+        assert_eq!(spare, 3);
+        assert_eq!(c.nodes[spare].devices, vec![4, 5, 6, 7]);
+        assert_eq!(c.nodes[spare].state, NodeState::Starting);
+        assert!(c.nodes[1].devices.is_empty());
+    }
+
+    #[test]
+    fn substitute_requires_faulty_node() {
+        let mut c = SimCluster::new(2, 1, 1);
+        assert!(c.substitute(0).is_err());
+    }
+
+    #[test]
+    fn spare_pool_exhaustion_errors() {
+        let mut c = SimCluster::new(2, 1, 1);
+        c.fail_node(0).unwrap();
+        c.substitute(0).unwrap();
+        c.fail_node(1).unwrap();
+        assert!(c.substitute(1).is_err());
+    }
+
+    #[test]
+    fn spare_cannot_fail() {
+        let mut c = SimCluster::new(1, 1, 1);
+        assert!(c.fail_node(1).is_err());
+    }
+}

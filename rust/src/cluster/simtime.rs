@@ -1,0 +1,191 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper's experiments run on a >10,000-NPU cluster; this engine
+//! lets us replay the *same protocols* (restart phases, heartbeats,
+//! checkpoint I/O) at that scale on one machine, with latencies drawn
+//! from distributions calibrated to the paper's reported numbers
+//! (DESIGN.md §6).
+//!
+//! `Sim<W>` is generic over a world type `W`. Events are closures
+//! scheduled at absolute sim-times; ties break by insertion order so
+//! runs are fully deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Sim<W>)>;
+
+struct Entry<W> {
+    at: f64,
+    seq: u64,
+    run: EventFn<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so earliest time pops first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+pub struct Sim<W> {
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Entry<W>>,
+    processed: u64,
+}
+
+impl<W> Default for Sim<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Sim<W> {
+    pub fn new() -> Self {
+        Sim { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+    }
+
+    /// Current simulation time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `f` to run `delay` seconds from now.
+    pub fn schedule<F>(&mut self, delay: f64, f: F)
+    where
+        F: FnOnce(&mut W, &mut Sim<W>) + 'static,
+    {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.at(self.now + delay, f);
+    }
+
+    /// Schedule `f` at absolute time `at` (must be >= now).
+    pub fn at<F>(&mut self, at: f64, f: F)
+    where
+        F: FnOnce(&mut W, &mut Sim<W>) + 'static,
+    {
+        assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.seq += 1;
+        self.queue.push(Entry { at, seq: self.seq, run: Box::new(f) });
+    }
+
+    /// Run until the queue drains. Returns the final time.
+    pub fn run(&mut self, world: &mut W) -> f64 {
+        while let Some(e) = self.queue.pop() {
+            self.now = e.at;
+            self.processed += 1;
+            (e.run)(world, self);
+        }
+        self.now
+    }
+
+    /// Run until the queue drains or sim-time exceeds `deadline`.
+    pub fn run_until(&mut self, world: &mut W, deadline: f64) -> f64 {
+        while let Some(top) = self.queue.peek() {
+            if top.at > deadline {
+                self.now = deadline;
+                return self.now;
+            }
+            let e = self.queue.pop().unwrap();
+            self.now = e.at;
+            self.processed += 1;
+            (e.run)(world, self);
+        }
+        self.now
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut sim: Sim<Vec<u32>> = Sim::new();
+        let mut world = Vec::new();
+        sim.schedule(3.0, |w: &mut Vec<u32>, _| w.push(3));
+        sim.schedule(1.0, |w: &mut Vec<u32>, _| w.push(1));
+        sim.schedule(2.0, |w: &mut Vec<u32>, _| w.push(2));
+        let end = sim.run(&mut world);
+        assert_eq!(world, vec![1, 2, 3]);
+        assert_eq!(end, 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut sim: Sim<Vec<u32>> = Sim::new();
+        let mut world = Vec::new();
+        for i in 0..5 {
+            sim.schedule(1.0, move |w: &mut Vec<u32>, _| w.push(i));
+        }
+        sim.run(&mut world);
+        assert_eq!(world, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<Vec<f64>> = Sim::new();
+        let mut world = Vec::new();
+        sim.schedule(1.0, |_, s: &mut Sim<Vec<f64>>| {
+            s.schedule(1.5, |w: &mut Vec<f64>, s| w.push(s.now()));
+        });
+        sim.run(&mut world);
+        assert_eq!(world, vec![2.5]);
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut sim: Sim<u32> = Sim::new();
+        let mut world = 0u32;
+        sim.schedule(1.0, |w: &mut u32, _| *w += 1);
+        sim.schedule(10.0, |w: &mut u32, _| *w += 100);
+        let t = sim.run_until(&mut world, 5.0);
+        assert_eq!(world, 1);
+        assert_eq!(t, 5.0);
+        assert!(!sim.is_idle());
+        sim.run(&mut world);
+        assert_eq!(world, 101);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative delay")]
+    fn rejects_negative_delay() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule(-1.0, |_, _| {});
+    }
+
+    #[test]
+    fn processed_counts_events() {
+        let mut sim: Sim<()> = Sim::new();
+        for _ in 0..7 {
+            sim.schedule(0.5, |_, _| {});
+        }
+        sim.run(&mut ());
+        assert_eq!(sim.processed(), 7);
+    }
+}

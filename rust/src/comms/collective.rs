@@ -1,0 +1,427 @@
+//! In-process synchronous collectives for the DP worker threads.
+//!
+//! The real training engine runs each simulated device as an OS thread;
+//! these collectives provide the gradient allreduce (which doubles as
+//! the paper's pre-optimizer barrier, §III-E Fig. 7), broadcast (replica
+//! restoration), barrier, and gather (original-ranktable baseline).
+//!
+//! Failure semantics mirror NCCL-style stacks:
+//! * if a participant dies and never arrives, peers block until the
+//!   configured timeout — exactly the "hang" the vanilla baseline
+//!   detects after 1800 s;
+//! * `poison()` aborts all pending and future calls (the controller's
+//!   stop/clean/reset path);
+//! * after recovery the group is rebuilt with `reset()`, bumping the
+//!   epoch so stale participants cannot rejoin silently.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveError {
+    /// Aborted via `poison()` (controller-initiated reset).
+    Poisoned,
+    /// A peer failed to arrive within the timeout (hang detection).
+    Timeout,
+}
+
+impl std::fmt::Display for CollectiveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CollectiveError::Poisoned => write!(f, "collective poisoned"),
+            CollectiveError::Timeout => write!(f, "collective timeout"),
+        }
+    }
+}
+
+impl std::error::Error for CollectiveError {}
+
+struct State {
+    epoch: u64,
+    size: usize,
+    poisoned: bool,
+    // generation state shared by all collective kinds (one op at a time
+    // per group, as in a CUDA-stream-ordered collective sequence)
+    arrived: usize,
+    departed: usize,
+    complete: bool,
+    acc: Vec<f32>,
+    bytes: Option<Arc<Vec<u8>>>,
+    gathered: Vec<Option<Vec<u8>>>,
+}
+
+/// A synchronous collective group of fixed size.
+pub struct Collective {
+    state: Mutex<State>,
+    cv: Condvar,
+    timeout: Duration,
+}
+
+impl Collective {
+    pub fn new(size: usize, timeout: Duration) -> Arc<Self> {
+        assert!(size > 0);
+        Arc::new(Collective {
+            state: Mutex::new(State {
+                epoch: 0,
+                size,
+                poisoned: false,
+                arrived: 0,
+                departed: 0,
+                complete: false,
+                acc: Vec::new(),
+                bytes: None,
+                gathered: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            timeout,
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.state.lock().unwrap().size
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Abort all pending and future operations.
+    pub fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    /// Rebuild the group after recovery: clears poison, bumps the epoch,
+    /// resets generation state, optionally resizes.
+    pub fn reset(&self, size: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.epoch += 1;
+        st.size = size;
+        st.poisoned = false;
+        st.arrived = 0;
+        st.departed = 0;
+        st.complete = false;
+        st.acc.clear();
+        st.bytes = None;
+        st.gathered.clear();
+        self.cv.notify_all();
+    }
+
+    fn enter<'a>(
+        &'a self,
+        deadline: Instant,
+    ) -> Result<std::sync::MutexGuard<'a, State>, CollectiveError> {
+        let mut st = self.state.lock().unwrap();
+        // Wait out the tail of a previous generation.
+        loop {
+            if st.poisoned {
+                return Err(CollectiveError::Poisoned);
+            }
+            if !(st.complete && st.departed < st.size) {
+                return Ok(st);
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(st, remaining(deadline)?)
+                .unwrap();
+            st = guard;
+            if res.timed_out() {
+                st.poisoned = true;
+                self.cv.notify_all();
+                return Err(CollectiveError::Timeout);
+            }
+        }
+    }
+
+    fn wait_complete<'a>(
+        &'a self,
+        mut st: std::sync::MutexGuard<'a, State>,
+        deadline: Instant,
+    ) -> Result<std::sync::MutexGuard<'a, State>, CollectiveError> {
+        loop {
+            if st.poisoned {
+                return Err(CollectiveError::Poisoned);
+            }
+            if st.complete {
+                return Ok(st);
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(st, remaining(deadline)?)
+                .unwrap();
+            st = guard;
+            if res.timed_out() {
+                st.poisoned = true;
+                self.cv.notify_all();
+                return Err(CollectiveError::Timeout);
+            }
+        }
+    }
+
+    fn depart(&self, mut st: std::sync::MutexGuard<'_, State>) {
+        st.departed += 1;
+        if st.departed == st.size {
+            st.complete = false;
+            st.arrived = 0;
+            st.acc.clear();
+            st.bytes = None;
+            st.gathered.clear();
+        }
+        self.cv.notify_all();
+    }
+
+    /// All-reduce (mean) over f32 buffers. Blocks until all `size`
+    /// participants contribute; `data` is replaced by the element-wise
+    /// mean. This is the gradient synchronization *and* the paper's
+    /// pre-optimizer barrier in one operation.
+    pub fn allreduce_mean(&self, data: &mut [f32]) -> Result<(), CollectiveError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.enter(deadline)?;
+        if st.arrived == 0 {
+            st.acc = data.to_vec();
+        } else {
+            assert_eq!(st.acc.len(), data.len(), "allreduce shape mismatch");
+            for (a, d) in st.acc.iter_mut().zip(data.iter()) {
+                *a += *d;
+            }
+        }
+        st.arrived += 1;
+        if st.arrived == st.size {
+            let n = st.size as f32;
+            for a in st.acc.iter_mut() {
+                *a /= n;
+            }
+            st.complete = true;
+            st.departed = 0;
+            self.cv.notify_all();
+        } else {
+            st = self.wait_complete(st, deadline)?;
+        }
+        data.copy_from_slice(&st.acc);
+        self.depart(st);
+        Ok(())
+    }
+
+    /// Barrier: returns when all participants arrive.
+    pub fn barrier(&self) -> Result<(), CollectiveError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.enter(deadline)?;
+        st.arrived += 1;
+        if st.arrived == st.size {
+            st.complete = true;
+            st.departed = 0;
+            self.cv.notify_all();
+        } else {
+            st = self.wait_complete(st, deadline)?;
+        }
+        self.depart(st);
+        Ok(())
+    }
+
+    /// Broadcast: the root passes `Some(bytes)`, everyone receives them.
+    /// Used for DP-replica state restoration (§III-E Fig. 6).
+    pub fn broadcast(
+        &self,
+        root_data: Option<Arc<Vec<u8>>>,
+    ) -> Result<Arc<Vec<u8>>, CollectiveError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.enter(deadline)?;
+        if let Some(d) = root_data {
+            assert!(st.bytes.is_none(), "two roots in broadcast");
+            st.bytes = Some(d);
+        }
+        st.arrived += 1;
+        if st.arrived == st.size {
+            assert!(st.bytes.is_some(), "broadcast completed without a root");
+            st.complete = true;
+            st.departed = 0;
+            self.cv.notify_all();
+        } else {
+            st = self.wait_complete(st, deadline)?;
+        }
+        let out = st.bytes.clone().expect("broadcast payload");
+        self.depart(st);
+        Ok(out)
+    }
+
+    /// Gather: every rank contributes bytes; all receive the full list
+    /// (the original ranktable collect+distribute baseline).
+    pub fn all_gather(
+        &self,
+        rank: usize,
+        data: Vec<u8>,
+    ) -> Result<Vec<Vec<u8>>, CollectiveError> {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = self.enter(deadline)?;
+        if st.gathered.is_empty() {
+            let size = st.size;
+            st.gathered = vec![None; size];
+        }
+        assert!(st.gathered[rank].is_none(), "duplicate rank {rank}");
+        st.gathered[rank] = Some(data);
+        st.arrived += 1;
+        if st.arrived == st.size {
+            st.complete = true;
+            st.departed = 0;
+            self.cv.notify_all();
+        } else {
+            st = self.wait_complete(st, deadline)?;
+        }
+        let out: Vec<Vec<u8>> = st
+            .gathered
+            .iter()
+            .map(|o| o.clone().expect("gather slot"))
+            .collect();
+        self.depart(st);
+        Ok(out)
+    }
+}
+
+fn remaining(deadline: Instant) -> Result<Duration, CollectiveError> {
+    let now = Instant::now();
+    if now >= deadline {
+        Err(CollectiveError::Timeout)
+    } else {
+        Ok(deadline - now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group(n: usize) -> Arc<Collective> {
+        Collective::new(n, Duration::from_secs(5))
+    }
+
+    #[test]
+    fn allreduce_mean_of_ranks() {
+        let g = group(4);
+        let mut handles = Vec::new();
+        for rank in 0..4 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut data = vec![rank as f32; 8];
+                g.allreduce_mean(&mut data).unwrap();
+                data
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out, vec![1.5f32; 8]); // mean(0,1,2,3)
+        }
+    }
+
+    #[test]
+    fn consecutive_generations_do_not_mix() {
+        let g = group(2);
+        let mut handles = Vec::new();
+        for rank in 0..2 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut results = Vec::new();
+                for step in 0..50 {
+                    let mut data = vec![(rank + step) as f32];
+                    g.allreduce_mean(&mut data).unwrap();
+                    results.push(data[0]);
+                }
+                results
+            }));
+        }
+        for h in handles {
+            let results = h.join().unwrap();
+            for (step, v) in results.iter().enumerate() {
+                assert_eq!(*v, step as f32 + 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let g = group(3);
+        let mut handles = Vec::new();
+        for rank in 0..3 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                let payload = (rank == 1).then(|| Arc::new(vec![7u8, 8, 9]));
+                g.broadcast(payload).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(*h.join().unwrap(), vec![7u8, 8, 9]);
+        }
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let g = group(3);
+        let mut handles = Vec::new();
+        for rank in 0..3 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                g.all_gather(rank, vec![rank as u8]).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![vec![0u8], vec![1], vec![2]]);
+        }
+    }
+
+    #[test]
+    fn missing_peer_times_out() {
+        let g = Collective::new(2, Duration::from_millis(100));
+        let mut data = vec![1.0f32];
+        let err = g.allreduce_mean(&mut data).unwrap_err();
+        assert_eq!(err, CollectiveError::Timeout);
+    }
+
+    #[test]
+    fn poison_aborts_waiters() {
+        let g = group(2);
+        let g2 = g.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut data = vec![1.0f32];
+            g2.allreduce_mean(&mut data)
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        g.poison();
+        assert_eq!(waiter.join().unwrap().unwrap_err(), CollectiveError::Poisoned);
+        // and future calls fail fast
+        assert_eq!(g.barrier().unwrap_err(), CollectiveError::Poisoned);
+    }
+
+    #[test]
+    fn reset_revives_group_and_bumps_epoch() {
+        let g = group(2);
+        g.poison();
+        assert!(g.barrier().is_err());
+        g.reset(3);
+        assert_eq!(g.epoch(), 1);
+        assert_eq!(g.size(), 3);
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || g.barrier()));
+        }
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn timeout_poisons_group_for_peers() {
+        let g = Collective::new(3, Duration::from_millis(150));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            // only 2 of 3 arrive
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || g.barrier()));
+        }
+        let mut errs = Vec::new();
+        for h in handles {
+            errs.push(h.join().unwrap().unwrap_err());
+        }
+        assert!(errs.contains(&CollectiveError::Timeout));
+    }
+}

@@ -1,0 +1,10 @@
+//! Communication substrate: wire protocol, TCP key-value store (the
+//! TCPStore used during communication-group establishment), and
+//! in-process synchronous collectives for the DP training engine.
+
+pub mod collective;
+pub mod tcp_store;
+pub mod wire;
+
+pub use collective::{Collective, CollectiveError};
+pub use tcp_store::{establish, TcpStoreClient, TcpStoreServer};

@@ -1,0 +1,353 @@
+//! A real TCP key-value store — the PyTorch `TCPStore` analogue used
+//! during communication-group establishment (paper §III-D).
+//!
+//! The server is thread-per-connection (adequate at single-host scale);
+//! clients support `set`/`get`/`wait`/`add`/`count`. `wait` blocks
+//! server-side on a condvar until the key is published — exactly how
+//! rank 0 publishes the rendezvous info that other ranks wait on.
+//!
+//! [`establish`] measures store-establishment for `n` clients with a
+//! configurable parallelism degree: `p = 1` is the serialized baseline
+//! of Fig. 10, `p > 1` is FlashRecovery's parallelized strategy.
+
+use super::wire::{read_frame, write_frame, Request, Response};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+struct Shared {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+    counters: Mutex<HashMap<String, i64>>,
+    cv: Condvar,
+    hellos: AtomicU64,
+}
+
+/// The store server. Dropping it shuts the listener down.
+pub struct TcpStoreServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpStoreServer {
+    /// Bind on 127.0.0.1 with an OS-assigned port.
+    pub fn start() -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared::default());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_shared = shared.clone();
+        let accept_stop = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            let mut workers: Vec<JoinHandle<()>> = Vec::new();
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let sh = accept_shared.clone();
+                        let st = accept_stop.clone();
+                        workers.push(std::thread::spawn(move || {
+                            let _ = serve_connection(stream, sh, st);
+                        }));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+
+        Ok(TcpStoreServer { addr, shared, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of Hello handshakes seen (establishment bookkeeping).
+    pub fn hello_count(&self) -> u64 {
+        self.shared.hellos.load(Ordering::Relaxed)
+    }
+
+    /// Number of keys currently stored.
+    pub fn key_count(&self) -> usize {
+        self.shared.map.lock().unwrap().len()
+    }
+}
+
+impl Drop for TcpStoreServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake any `wait`ers so their handler threads can observe stop.
+        self.shared.cv.notify_all();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .ok();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let body = match read_frame(&mut stream) {
+            Ok(b) => b,
+            Err(e) => {
+                // timeout -> poll the stop flag; EOF/reset -> done
+                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        ioe.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) {
+                        continue;
+                    }
+                }
+                return Ok(());
+            }
+        };
+        let req = Request::decode(&body)?;
+        let resp = handle(&shared, &stop, req);
+        write_frame(&mut stream, &resp.encode())?;
+    }
+}
+
+fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
+    match req {
+        Request::Hello { .. } => {
+            shared.hellos.fetch_add(1, Ordering::Relaxed);
+            Response::HelloAck
+        }
+        Request::Set { key, value } => {
+            shared.map.lock().unwrap().insert(key, value);
+            shared.cv.notify_all();
+            Response::Ok
+        }
+        Request::Get { key } => match shared.map.lock().unwrap().get(&key) {
+            Some(v) => Response::Value(v.clone()),
+            None => Response::NotFound,
+        },
+        Request::Wait { key } => {
+            let mut map = shared.map.lock().unwrap();
+            loop {
+                if let Some(v) = map.get(&key) {
+                    return Response::Value(v.clone());
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return Response::NotFound;
+                }
+                let (guard, _timeout) = shared
+                    .cv
+                    .wait_timeout(map, Duration::from_millis(100))
+                    .unwrap();
+                map = guard;
+            }
+        }
+        Request::Add { key, delta } => {
+            let mut counters = shared.counters.lock().unwrap();
+            let v = counters.entry(key).or_insert(0);
+            *v += delta;
+            Response::Counter(*v)
+        }
+        Request::Count => {
+            Response::CountIs(shared.map.lock().unwrap().len() as u64)
+        }
+    }
+}
+
+/// Client connection to the store.
+pub struct TcpStoreClient {
+    stream: TcpStream,
+}
+
+impl TcpStoreClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpStoreClient { stream })
+    }
+
+    fn call(&mut self, req: Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let body = read_frame(&mut self.stream)?;
+        Response::decode(&body)
+    }
+
+    /// Handshake; returns once the server acknowledged.
+    pub fn hello(&mut self, client_id: u64) -> Result<()> {
+        match self.call(Request::Hello { client_id })? {
+            Response::HelloAck => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: &[u8]) -> Result<()> {
+        match self.call(Request::Set { key: key.into(), value: value.into() })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn get(&mut self, key: &str) -> Result<Option<Vec<u8>>> {
+        match self.call(Request::Get { key: key.into() })? {
+            Response::Value(v) => Ok(Some(v)),
+            Response::NotFound => Ok(None),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Block until `key` is published.
+    pub fn wait(&mut self, key: &str) -> Result<Vec<u8>> {
+        // waits can exceed the default read path; use a long timeout
+        self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        match self.call(Request::Wait { key: key.into() })? {
+            Response::Value(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn add(&mut self, key: &str, delta: i64) -> Result<i64> {
+        match self.call(Request::Add { key: key.into(), delta })? {
+            Response::Counter(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn count(&mut self) -> Result<u64> {
+        match self.call(Request::Count)? {
+            Response::CountIs(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+/// Establish `n` store clients with parallelism degree `p` and return
+/// (elapsed, clients). Each establishment = TCP connect + Hello RTT,
+/// matching the per-rank TCPStore cost the paper parallelizes.
+pub fn establish(
+    addr: SocketAddr,
+    n: usize,
+    p: usize,
+) -> Result<(Duration, Vec<TcpStoreClient>)> {
+    let p = p.clamp(1, n.max(1));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for worker in 0..p {
+        let count = n / p + usize::from(worker < n % p);
+        handles.push(std::thread::spawn(move || -> Result<Vec<TcpStoreClient>> {
+            let mut out = Vec::with_capacity(count);
+            for i in 0..count {
+                let mut c = TcpStoreClient::connect(addr)?;
+                c.hello((worker * 1_000_000 + i) as u64)?;
+                out.push(c);
+            }
+            Ok(out)
+        }));
+    }
+    let mut clients = Vec::with_capacity(n);
+    for h in handles {
+        clients.extend(h.join().expect("establish worker panicked")?);
+    }
+    Ok((t0.elapsed(), clients))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        assert_eq!(c.get("missing").unwrap(), None);
+        c.set("k", b"hello").unwrap();
+        assert_eq!(c.get("k").unwrap().as_deref(), Some(&b"hello"[..]));
+        assert_eq!(c.count().unwrap(), 1);
+    }
+
+    #[test]
+    fn wait_blocks_until_set() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let waiter = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.wait("late").unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.set("late", b"v").unwrap();
+        assert_eq!(waiter.join().unwrap(), b"v");
+    }
+
+    #[test]
+    fn add_is_atomic_across_clients() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = TcpStoreClient::connect(addr).unwrap();
+                for _ in 0..25 {
+                    c.add("ctr", 1).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        assert_eq!(c.add("ctr", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn establish_counts_hellos() {
+        let server = TcpStoreServer::start().unwrap();
+        let (_elapsed, clients) = establish(server.addr(), 16, 4).unwrap();
+        assert_eq!(clients.len(), 16);
+        assert_eq!(server.hello_count(), 16);
+    }
+
+    #[test]
+    fn establish_serial_equals_parallel_results() {
+        let server = TcpStoreServer::start().unwrap();
+        let (_t1, c1) = establish(server.addr(), 10, 1).unwrap();
+        let (_t2, c2) = establish(server.addr(), 10, 10).unwrap();
+        assert_eq!(c1.len(), 10);
+        assert_eq!(c2.len(), 10);
+        assert_eq!(server.hello_count(), 20);
+    }
+
+    #[test]
+    fn server_shutdown_releases_waiters() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let waiter = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            // will get NotFound when the server shuts down
+            let _ = c.wait("never");
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        drop(server);
+        waiter.join().unwrap();
+    }
+}

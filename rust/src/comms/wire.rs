@@ -1,0 +1,262 @@
+//! Length-prefixed wire protocol for the TCP store.
+//!
+//! Frames: `u32-le length | u8 opcode | payload`. Payload strings are
+//! `u32-le len | bytes`. Deliberately tiny — just enough to implement
+//! the PyTorch-TCPStore-style set/get/wait/add operations.
+
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// set(key, value)
+    Set { key: String, value: Vec<u8> },
+    /// get(key) -> value | NotFound
+    Get { key: String },
+    /// wait(key): block until key exists -> value
+    Wait { key: String },
+    /// add(key, delta) -> new value (atomic counter, used for barriers)
+    Add { key: String, delta: i64 },
+    /// number of keys in the store
+    Count,
+    /// connection handshake (counts clients, used by establishment)
+    Hello { client_id: u64 },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    Ok,
+    Value(Vec<u8>),
+    NotFound,
+    Counter(i64),
+    CountIs(u64),
+    HelloAck,
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > buf.len() {
+        bail!("frame underrun");
+    }
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+fn get_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>> {
+    let len = get_u32(buf, pos)? as usize;
+    if *pos + len > buf.len() {
+        bail!("frame underrun");
+    }
+    let v = buf[*pos..*pos + len].to_vec();
+    *pos += len;
+    Ok(v)
+}
+
+fn get_string(buf: &[u8], pos: &mut usize) -> Result<String> {
+    Ok(String::from_utf8(get_bytes(buf, pos)?)?)
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Request::Set { key, value } => {
+                body.push(0);
+                put_bytes(&mut body, key.as_bytes());
+                put_bytes(&mut body, value);
+            }
+            Request::Get { key } => {
+                body.push(1);
+                put_bytes(&mut body, key.as_bytes());
+            }
+            Request::Wait { key } => {
+                body.push(2);
+                put_bytes(&mut body, key.as_bytes());
+            }
+            Request::Add { key, delta } => {
+                body.push(3);
+                put_bytes(&mut body, key.as_bytes());
+                body.extend_from_slice(&delta.to_le_bytes());
+            }
+            Request::Count => body.push(4),
+            Request::Hello { client_id } => {
+                body.push(5);
+                body.extend_from_slice(&client_id.to_le_bytes());
+            }
+        }
+        frame(body)
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Request> {
+        let mut pos = 1;
+        match body.first() {
+            Some(0) => Ok(Request::Set {
+                key: get_string(body, &mut pos)?,
+                value: get_bytes(body, &mut pos)?,
+            }),
+            Some(1) => Ok(Request::Get { key: get_string(body, &mut pos)? }),
+            Some(2) => Ok(Request::Wait { key: get_string(body, &mut pos)? }),
+            Some(3) => {
+                let key = get_string(body, &mut pos)?;
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                let delta = i64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                Ok(Request::Add { key, delta })
+            }
+            Some(4) => Ok(Request::Count),
+            Some(5) => {
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                let client_id = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                Ok(Request::Hello { client_id })
+            }
+            other => bail!("bad request opcode {other:?}"),
+        }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Response::Ok => body.push(0),
+            Response::Value(v) => {
+                body.push(1);
+                put_bytes(&mut body, v);
+            }
+            Response::NotFound => body.push(2),
+            Response::Counter(v) => {
+                body.push(3);
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            Response::CountIs(v) => {
+                body.push(4);
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            Response::HelloAck => body.push(5),
+        }
+        frame(body)
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Response> {
+        let mut pos = 1;
+        match body.first() {
+            Some(0) => Ok(Response::Ok),
+            Some(1) => Ok(Response::Value(get_bytes(body, &mut pos)?)),
+            Some(2) => Ok(Response::NotFound),
+            Some(3) => {
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                Ok(Response::Counter(i64::from_le_bytes(
+                    body[pos..pos + 8].try_into().unwrap(),
+                )))
+            }
+            Some(4) => {
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                Ok(Response::CountIs(u64::from_le_bytes(
+                    body[pos..pos + 8].try_into().unwrap(),
+                )))
+            }
+            Some(5) => Ok(Response::HelloAck),
+            other => bail!("bad response opcode {other:?}"),
+        }
+    }
+}
+
+fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend(body);
+    out
+}
+
+/// Read one length-prefixed frame body from a stream.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 256 * 1024 * 1024 {
+        bail!("frame too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Write one pre-encoded frame (already length-prefixed).
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    w.write_all(frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        let enc = r.encode();
+        // strip the length prefix the way the server does
+        let body = &enc[4..];
+        assert_eq!(Request::decode(body).unwrap(), r);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let enc = r.encode();
+        let body = &enc[4..];
+        assert_eq!(Response::decode(body).unwrap(), r);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Set { key: "k".into(), value: vec![1, 2, 3] });
+        roundtrip_req(Request::Get { key: "ranktable/v1".into() });
+        roundtrip_req(Request::Wait { key: "".into() });
+        roundtrip_req(Request::Add { key: "barrier".into(), delta: -7 });
+        roundtrip_req(Request::Count);
+        roundtrip_req(Request::Hello { client_id: u64::MAX });
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Ok);
+        roundtrip_resp(Response::Value(vec![0; 1000]));
+        roundtrip_resp(Response::NotFound);
+        roundtrip_resp(Response::Counter(-1));
+        roundtrip_resp(Response::CountIs(42));
+        roundtrip_resp(Response::HelloAck);
+    }
+
+    #[test]
+    fn stream_framing() {
+        let msg = Request::Set { key: "a".into(), value: vec![9; 100] };
+        let enc = msg.encode();
+        let mut cursor = std::io::Cursor::new(enc.clone());
+        let body = read_frame(&mut cursor).unwrap();
+        assert_eq!(Request::decode(&body).unwrap(), msg);
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let msg = Request::Get { key: "abc".into() };
+        let enc = msg.encode();
+        let mut cursor = std::io::Cursor::new(enc[..enc.len() - 1].to_vec());
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        assert!(Request::decode(&[99]).is_err());
+        assert!(Response::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,382 @@
+//! Typed configuration system (JSON-backed, no serde offline).
+//!
+//! Every experiment is described by a [`JobConfig`]: the model size, the
+//! parallelism topology, the cluster layout, the failure model, and the
+//! recovery policy (vanilla periodic-checkpointing vs FlashRecovery).
+//! Configs load from JSON files and render back losslessly, so example
+//! binaries and benches can snapshot the exact configuration they ran.
+
+pub mod parallelism;
+
+pub use parallelism::{DeviceCoord, ParallelismConfig, ZeroMode};
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which recovery system a run uses — the paper's core comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// Timeout detection + full restart + checkpoint reload (§II, Tab. II).
+    Vanilla,
+    /// FlashRecovery: heartbeat detection + selective restart +
+    /// DP-replica restoration (§III, Tab. III).
+    Flash,
+}
+
+impl RecoveryMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "vanilla" => Ok(RecoveryMode::Vanilla),
+            "flash" => Ok(RecoveryMode::Flash),
+            other => bail!("unknown recovery mode {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryMode::Vanilla => "vanilla",
+            RecoveryMode::Flash => "flash",
+        }
+    }
+}
+
+/// How the ranktable is refreshed after a restart (§III-D, Tab. I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RanktableMode {
+    /// Master collects from every node then redistributes — O(n).
+    Original,
+    /// Controller maintains a shared file every node loads — O(1).
+    SharedFile,
+}
+
+/// Cluster layout + detection constants.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub num_nodes: usize,
+    pub devices_per_node: usize,
+    /// Healthy standby nodes available for substitution.
+    pub spare_nodes: usize,
+    /// Heartbeat period (seconds of sim-time or wall-time).
+    pub heartbeat_interval_s: f64,
+    /// Consecutive missed heartbeats before a node is declared failed.
+    pub miss_threshold: u32,
+    /// Vanilla baseline: collective-communication hang timeout
+    /// (PyTorch default 1800 s in the paper).
+    pub collective_timeout_s: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            num_nodes: 4,
+            devices_per_node: 1,
+            spare_nodes: 1,
+            heartbeat_interval_s: 2.0,
+            miss_threshold: 3,
+            collective_timeout_s: 1800.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn total_devices(&self) -> usize {
+        self.num_nodes * self.devices_per_node
+    }
+}
+
+/// Periodic-checkpointing policy (the baseline FlashRecovery removes).
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Steps between checkpoints (`t` in §II); 0 disables.
+    pub interval_steps: u64,
+    /// Directory for persisted checkpoints.
+    pub dir: String,
+    /// Persist snapshots to disk asynchronously (k1 overlaps training).
+    pub async_persist: bool,
+    /// Keep at most this many persisted checkpoints.
+    pub keep: usize,
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> Self {
+        CheckpointPolicy {
+            interval_steps: 0,
+            dir: "checkpoints".to_string(),
+            async_persist: true,
+            keep: 2,
+        }
+    }
+}
+
+/// Recovery system knobs.
+#[derive(Debug, Clone)]
+pub struct RecoveryPolicy {
+    pub mode: RecoveryMode,
+    pub ranktable: RanktableMode,
+    /// Degree of parallelisation for TCP-Store establishment (`p` in
+    /// §III-D; 1 = the serialized baseline).
+    pub tcp_store_parallelism: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            mode: RecoveryMode::Flash,
+            ranktable: RanktableMode::SharedFile,
+            tcp_store_parallelism: 64,
+        }
+    }
+}
+
+/// Failure model: arrival rate + the Fig. 9 taxonomy mix.
+#[derive(Debug, Clone)]
+pub struct FailureModel {
+    /// Mean time between failures for the *whole cluster*, seconds.
+    /// Paper-scale clusters see failures every few hours; tests inject
+    /// deterministically instead.
+    pub cluster_mtbf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for FailureModel {
+    fn default() -> Self {
+        FailureModel { cluster_mtbf_s: 3600.0 * 4.0, seed: 0 }
+    }
+}
+
+/// Top-level job description.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Model size key in artifacts/manifest.json ("tiny"/"small"/"base").
+    pub model: String,
+    pub parallelism: ParallelismConfig,
+    pub cluster: ClusterConfig,
+    pub checkpoint: CheckpointPolicy,
+    pub recovery: RecoveryPolicy,
+    pub failure: FailureModel,
+    pub steps: u64,
+    pub seed: u64,
+    pub log_every: u64,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            model: "tiny".to_string(),
+            parallelism: ParallelismConfig::dp(2),
+            cluster: ClusterConfig::default(),
+            checkpoint: CheckpointPolicy::default(),
+            recovery: RecoveryPolicy::default(),
+            failure: FailureModel::default(),
+            steps: 50,
+            seed: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.parallelism.world_size() > self.cluster.total_devices() {
+            bail!(
+                "parallelism world size {} exceeds cluster devices {}",
+                self.parallelism.world_size(),
+                self.cluster.total_devices()
+            );
+        }
+        self.parallelism.validate()?;
+        if self.recovery.tcp_store_parallelism == 0 {
+            bail!("tcp_store_parallelism must be >= 1");
+        }
+        if self.cluster.heartbeat_interval_s <= 0.0 {
+            bail!("heartbeat_interval_s must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut cl = Json::object();
+        cl.set("num_nodes", self.cluster.num_nodes)
+            .set("devices_per_node", self.cluster.devices_per_node)
+            .set("spare_nodes", self.cluster.spare_nodes)
+            .set("heartbeat_interval_s", self.cluster.heartbeat_interval_s)
+            .set("miss_threshold", self.cluster.miss_threshold as u64)
+            .set("collective_timeout_s", self.cluster.collective_timeout_s);
+        let mut ck = Json::object();
+        ck.set("interval_steps", self.checkpoint.interval_steps)
+            .set("dir", self.checkpoint.dir.as_str())
+            .set("async_persist", self.checkpoint.async_persist)
+            .set("keep", self.checkpoint.keep);
+        let mut rc = Json::object();
+        rc.set("mode", self.recovery.mode.name())
+            .set(
+                "ranktable",
+                match self.recovery.ranktable {
+                    RanktableMode::Original => "original",
+                    RanktableMode::SharedFile => "shared_file",
+                },
+            )
+            .set("tcp_store_parallelism", self.recovery.tcp_store_parallelism);
+        let mut fm = Json::object();
+        fm.set("cluster_mtbf_s", self.failure.cluster_mtbf_s)
+            .set("seed", self.failure.seed);
+        let mut o = Json::object();
+        o.set("model", self.model.as_str())
+            .set("parallelism", self.parallelism.to_json())
+            .set("cluster", cl)
+            .set("checkpoint", ck)
+            .set("recovery", rc)
+            .set("failure", fm)
+            .set("steps", self.steps)
+            .set("seed", self.seed)
+            .set("log_every", self.log_every);
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = JobConfig::default();
+        let cl = v.get("cluster");
+        let ck = v.get("checkpoint");
+        let rc = v.get("recovery");
+        let fm = v.get("failure");
+        let cfg = JobConfig {
+            model: v
+                .get("model")
+                .as_str()
+                .unwrap_or(&d.model)
+                .to_string(),
+            parallelism: if v.get("parallelism").is_null() {
+                d.parallelism.clone()
+            } else {
+                ParallelismConfig::from_json(v.get("parallelism"))?
+            },
+            cluster: ClusterConfig {
+                num_nodes: cl.get("num_nodes").as_usize().unwrap_or(d.cluster.num_nodes),
+                devices_per_node: cl
+                    .get("devices_per_node")
+                    .as_usize()
+                    .unwrap_or(d.cluster.devices_per_node),
+                spare_nodes: cl.get("spare_nodes").as_usize().unwrap_or(d.cluster.spare_nodes),
+                heartbeat_interval_s: cl
+                    .get("heartbeat_interval_s")
+                    .as_f64()
+                    .unwrap_or(d.cluster.heartbeat_interval_s),
+                miss_threshold: cl
+                    .get("miss_threshold")
+                    .as_usize()
+                    .unwrap_or(d.cluster.miss_threshold as usize)
+                    as u32,
+                collective_timeout_s: cl
+                    .get("collective_timeout_s")
+                    .as_f64()
+                    .unwrap_or(d.cluster.collective_timeout_s),
+            },
+            checkpoint: CheckpointPolicy {
+                interval_steps: ck
+                    .get("interval_steps")
+                    .as_i64()
+                    .unwrap_or(d.checkpoint.interval_steps as i64) as u64,
+                dir: ck
+                    .get("dir")
+                    .as_str()
+                    .unwrap_or(&d.checkpoint.dir)
+                    .to_string(),
+                async_persist: ck
+                    .get("async_persist")
+                    .as_bool()
+                    .unwrap_or(d.checkpoint.async_persist),
+                keep: ck.get("keep").as_usize().unwrap_or(d.checkpoint.keep),
+            },
+            recovery: RecoveryPolicy {
+                mode: RecoveryMode::parse(
+                    rc.get("mode").as_str().unwrap_or("flash"),
+                )?,
+                ranktable: match rc.get("ranktable").as_str().unwrap_or("shared_file") {
+                    "original" => RanktableMode::Original,
+                    "shared_file" => RanktableMode::SharedFile,
+                    other => bail!("unknown ranktable mode {other:?}"),
+                },
+                tcp_store_parallelism: rc
+                    .get("tcp_store_parallelism")
+                    .as_usize()
+                    .unwrap_or(d.recovery.tcp_store_parallelism),
+            },
+            failure: FailureModel {
+                cluster_mtbf_s: fm
+                    .get("cluster_mtbf_s")
+                    .as_f64()
+                    .unwrap_or(d.failure.cluster_mtbf_s),
+                seed: fm.get("seed").as_i64().unwrap_or(0) as u64,
+            },
+            steps: v.get("steps").as_i64().unwrap_or(d.steps as i64) as u64,
+            seed: v.get("seed").as_i64().unwrap_or(0) as u64,
+            log_every: v.get("log_every").as_i64().unwrap_or(d.log_every as i64) as u64,
+        };
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let v = Json::parse(&text).context("parsing job config")?;
+        let cfg = Self::from_json(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().render_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        JobConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = JobConfig::default();
+        cfg.model = "small".into();
+        cfg.steps = 123;
+        cfg.recovery.mode = RecoveryMode::Vanilla;
+        cfg.recovery.ranktable = RanktableMode::Original;
+        cfg.checkpoint.interval_steps = 10;
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.model, "small");
+        assert_eq!(back.steps, 123);
+        assert_eq!(back.recovery.mode, RecoveryMode::Vanilla);
+        assert_eq!(back.recovery.ranktable, RanktableMode::Original);
+        assert_eq!(back.checkpoint.interval_steps, 10);
+    }
+
+    #[test]
+    fn world_size_must_fit_cluster() {
+        let mut cfg = JobConfig::default();
+        cfg.parallelism = ParallelismConfig::dp(64);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::temp_dir("cfg").unwrap();
+        let path = dir.join("job.json");
+        let cfg = JobConfig::default();
+        cfg.save(&path).unwrap();
+        let back = JobConfig::load(&path).unwrap();
+        assert_eq!(back.model, cfg.model);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_mode() {
+        let v = Json::parse(r#"{"recovery":{"mode":"bogus"}}"#).unwrap();
+        assert!(JobConfig::from_json(&v).is_err());
+    }
+}

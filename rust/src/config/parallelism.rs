@@ -1,0 +1,346 @@
+//! Parallelism topology: DP x TP x PP (+ ZeRO/FSDP sharding) and the
+//! replica-location math behind checkpoint-free recovery (paper Fig. 3
+//! and Fig. 6).
+//!
+//! Devices with the *same model-state shard* are replicas of each other;
+//! a failed device is recoverable iff at least one replica survives.
+//! ZeRO is modelled with a sharding degree `zero_shards` inside each DP
+//! group (hybrid/HSDP generalisation): `zero_shards = 1` is vanilla DP
+//! (full state replicated dp ways), `zero_shards = dp` is pure FSDP
+//! (no replica — recovery must fall back to a checkpoint, the paper's
+//! §III-G limitation 1).
+
+use crate::util::Json;
+use anyhow::{bail, Result};
+
+/// Logical coordinates of a device in the topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceCoord {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+/// The unit of model state a device holds. Devices sharing a `ShardId`
+/// hold byte-identical model states (the same-coloured frames in the
+/// paper's Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShardId {
+    pub pp: usize,
+    pub tp: usize,
+    /// Position inside the ZeRO partition group (0 when zero_shards=1).
+    pub zero: usize,
+}
+
+/// ZeRO/FSDP sharding mode, expressed as the partition-group size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZeroMode {
+    /// Vanilla data parallelism: model states fully replicated.
+    None,
+    /// States sharded `shards` ways within each DP group (1 < shards <=
+    /// dp); replicas exist iff dp / shards > 1.
+    Sharded { shards: usize },
+}
+
+impl ZeroMode {
+    pub fn shards(&self) -> usize {
+        match self {
+            ZeroMode::None => 1,
+            ZeroMode::Sharded { shards } => *shards,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParallelismConfig {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+    pub zero: ZeroMode,
+}
+
+impl ParallelismConfig {
+    /// Pure data parallelism of degree `dp`.
+    pub fn dp(dp: usize) -> Self {
+        ParallelismConfig { dp, pp: 1, tp: 1, zero: ZeroMode::None }
+    }
+
+    pub fn new(dp: usize, pp: usize, tp: usize) -> Self {
+        ParallelismConfig { dp, pp, tp, zero: ZeroMode::None }
+    }
+
+    pub fn with_zero(mut self, shards: usize) -> Self {
+        self.zero = if shards <= 1 {
+            ZeroMode::None
+        } else {
+            ZeroMode::Sharded { shards }
+        };
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.dp == 0 || self.pp == 0 || self.tp == 0 {
+            bail!("parallelism degrees must be >= 1");
+        }
+        let shards = self.zero.shards();
+        if shards == 0 || self.dp % shards != 0 {
+            bail!(
+                "zero_shards={} must divide dp={}",
+                shards,
+                self.dp
+            );
+        }
+        Ok(())
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.pp * self.tp
+    }
+
+    /// Number of distinct replicas each model-state shard has.
+    pub fn replication_factor(&self) -> usize {
+        self.dp / self.zero.shards()
+    }
+
+    /// global rank -> coordinates. Layout: dp-major, then pp, then tp
+    /// (tp neighbours are adjacent ranks, the usual Megatron layout).
+    pub fn coord(&self, global: usize) -> DeviceCoord {
+        debug_assert!(global < self.world_size());
+        let tp = global % self.tp;
+        let pp = (global / self.tp) % self.pp;
+        let dp = global / (self.tp * self.pp);
+        DeviceCoord { dp, pp, tp }
+    }
+
+    pub fn global(&self, c: DeviceCoord) -> usize {
+        debug_assert!(c.dp < self.dp && c.pp < self.pp && c.tp < self.tp);
+        c.dp * self.pp * self.tp + c.pp * self.tp + c.tp
+    }
+
+    /// The model-state shard a device holds (Fig. 3's frame id).
+    pub fn shard_id(&self, global: usize) -> ShardId {
+        let c = self.coord(global);
+        ShardId { pp: c.pp, tp: c.tp, zero: c.dp % self.zero.shards() }
+    }
+
+    /// All devices holding a replica of `global`'s model state,
+    /// *excluding* `global` itself.
+    pub fn replicas_of(&self, global: usize) -> Vec<usize> {
+        let c = self.coord(global);
+        let shards = self.zero.shards();
+        (0..self.dp)
+            .filter(|&d| d != c.dp && d % shards == c.dp % shards)
+            .map(|d| self.global(DeviceCoord { dp: d, ..c }))
+            .collect()
+    }
+
+    /// Members of the DP process group containing `global` (all dp
+    /// indices at the same (pp, tp)) — the gradient-allreduce group.
+    pub fn dp_group(&self, global: usize) -> Vec<usize> {
+        let c = self.coord(global);
+        (0..self.dp)
+            .map(|d| self.global(DeviceCoord { dp: d, ..c }))
+            .collect()
+    }
+
+    /// For each failed device, a surviving replica to restore from
+    /// (`None` if every replica also failed — checkpoint fallback).
+    pub fn recovery_sources(&self, failed: &[usize]) -> Vec<(usize, Option<usize>)> {
+        failed
+            .iter()
+            .map(|&f| {
+                let src = self
+                    .replicas_of(f)
+                    .into_iter()
+                    .find(|r| !failed.contains(r));
+                (f, src)
+            })
+            .collect()
+    }
+
+    /// True iff the whole failure set is recoverable from replicas.
+    pub fn can_recover(&self, failed: &[usize]) -> bool {
+        self.recovery_sources(failed).iter().all(|(_, s)| s.is_some())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("dp", self.dp)
+            .set("pp", self.pp)
+            .set("tp", self.tp)
+            .set("zero_shards", self.zero.shards());
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let dp = v.get("dp").as_usize().unwrap_or(1);
+        let pp = v.get("pp").as_usize().unwrap_or(1);
+        let tp = v.get("tp").as_usize().unwrap_or(1);
+        let shards = v.get("zero_shards").as_usize().unwrap_or(1);
+        let cfg = ParallelismConfig::new(dp, pp, tp).with_zero(shards);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn coord_roundtrip() {
+        let p = ParallelismConfig::new(4, 3, 2);
+        for g in 0..p.world_size() {
+            assert_eq!(p.global(p.coord(g)), g);
+        }
+    }
+
+    #[test]
+    fn tp_neighbours_are_adjacent() {
+        let p = ParallelismConfig::new(2, 2, 4);
+        let c0 = p.coord(0);
+        let c1 = p.coord(1);
+        assert_eq!((c0.dp, c0.pp), (c1.dp, c1.pp));
+        assert_eq!(c1.tp, c0.tp + 1);
+    }
+
+    #[test]
+    fn vanilla_dp_replicas() {
+        let p = ParallelismConfig::new(4, 2, 2);
+        let reps = p.replicas_of(0);
+        assert_eq!(reps.len(), 3); // dp=4 -> 3 replicas
+        for r in &reps {
+            assert_eq!(p.shard_id(*r), p.shard_id(0));
+        }
+        assert_eq!(p.replication_factor(), 4);
+    }
+
+    #[test]
+    fn zero_sharding_reduces_replicas() {
+        let p = ParallelismConfig::dp(8).with_zero(4);
+        // dp=8 sharded 4 ways -> each shard has 2 copies -> 1 replica.
+        assert_eq!(p.replication_factor(), 2);
+        assert_eq!(p.replicas_of(0).len(), 1);
+        // replica of dp-rank 0 is dp-rank 4 (same zero offset).
+        assert_eq!(p.replicas_of(0), vec![4]);
+    }
+
+    #[test]
+    fn pure_fsdp_has_no_replicas() {
+        let p = ParallelismConfig::dp(4).with_zero(4);
+        assert_eq!(p.replication_factor(), 1);
+        assert!(p.replicas_of(2).is_empty());
+        assert!(!p.can_recover(&[2]));
+    }
+
+    #[test]
+    fn single_failure_recoverable_with_dp() {
+        let p = ParallelismConfig::new(2, 2, 1);
+        for g in 0..p.world_size() {
+            assert!(p.can_recover(&[g]), "device {g}");
+        }
+    }
+
+    #[test]
+    fn whole_dp_group_loss_unrecoverable() {
+        let p = ParallelismConfig::new(2, 1, 1);
+        assert!(p.can_recover(&[0]));
+        assert!(!p.can_recover(&[0, 1]));
+    }
+
+    #[test]
+    fn recovery_source_prefers_survivor() {
+        let p = ParallelismConfig::dp(4);
+        let src = p.recovery_sources(&[1, 2]);
+        assert_eq!(src.len(), 2);
+        for (f, s) in src {
+            let s = s.unwrap();
+            assert!(![1usize, 2].contains(&s), "failed {f} got failed src {s}");
+            assert_eq!(p.shard_id(s), p.shard_id(f));
+        }
+    }
+
+    #[test]
+    fn dp_group_spans_dp_axis() {
+        let p = ParallelismConfig::new(3, 2, 2);
+        let g = p.dp_group(5);
+        assert_eq!(g.len(), 3);
+        let c = p.coord(5);
+        for m in g {
+            let mc = p.coord(m);
+            assert_eq!((mc.pp, mc.tp), (c.pp, c.tp));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_shards() {
+        assert!(ParallelismConfig::dp(4).with_zero(3).validate().is_err());
+        assert!(ParallelismConfig::dp(4).with_zero(2).validate().is_ok());
+    }
+
+    // ---------------------------------------------------- property tests
+
+    #[test]
+    fn prop_replicas_share_shard_id_and_are_symmetric() {
+        prop::check("replica symmetry", 200, |rng| {
+            let dp = 1 + rng.below(6) as usize;
+            let pp = 1 + rng.below(3) as usize;
+            let tp = 1 + rng.below(3) as usize;
+            let divisors: Vec<usize> = (1..=dp).filter(|s| dp % s == 0).collect();
+            let shards = *rng.choose(&divisors);
+            let p = ParallelismConfig::new(dp, pp, tp).with_zero(shards);
+            p.validate().map_err(|e| e.to_string())?;
+            let g = rng.below(p.world_size() as u64) as usize;
+            for r in p.replicas_of(g) {
+                prop::assert_eq_prop(&p.shard_id(r), &p.shard_id(g))?;
+                prop::assert_prop(
+                    p.replicas_of(r).contains(&g),
+                    format!("replica relation not symmetric: {g} vs {r}"),
+                )?;
+            }
+            // replica count == replication_factor - 1 everywhere
+            prop::assert_eq_prop(
+                &p.replicas_of(g).len(),
+                &(p.replication_factor() - 1),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_recoverable_iff_not_all_replicas_failed() {
+        prop::check("recoverability criterion", 200, |rng| {
+            let dp = 1 + rng.below(5) as usize;
+            let p = ParallelismConfig::new(dp, 1 + rng.below(2) as usize, 1);
+            let world = p.world_size();
+            let mut failed: Vec<usize> = (0..world)
+                .filter(|_| rng.bool(0.3))
+                .collect();
+            if failed.is_empty() {
+                failed.push(rng.below(world as u64) as usize);
+            }
+            let expected = failed.iter().all(|&f| {
+                let mut group = p.dp_group(f);
+                group.retain(|m| !failed.contains(m));
+                !group.is_empty()
+            });
+            prop::assert_eq_prop(&p.can_recover(&failed), &expected)
+        });
+    }
+
+    #[test]
+    fn prop_shard_count_matches_world_partition() {
+        prop::check("shard partition", 100, |rng| {
+            let dp = 1 + rng.below(6) as usize;
+            let divisors: Vec<usize> = (1..=dp).filter(|s| dp % s == 0).collect();
+            let shards = *rng.choose(&divisors);
+            let p = ParallelismConfig::new(dp, 1 + rng.below(3) as usize, 1 + rng.below(3) as usize)
+                .with_zero(shards);
+            let mut ids: Vec<ShardId> =
+                (0..p.world_size()).map(|g| p.shard_id(g)).collect();
+            ids.sort();
+            ids.dedup();
+            prop::assert_eq_prop(&ids.len(), &(p.pp * p.tp * shards))
+        });
+    }
+}

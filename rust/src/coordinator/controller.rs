@@ -1,0 +1,577 @@
+//! The global controller (paper §III-C/D/E): spawns and monitors DP
+//! workers, detects failures via heartbeats + device plugins, and
+//! drives recovery — checkpoint-free FlashRecovery or the vanilla
+//! timeout + checkpoint-reload baseline.
+//!
+//! Real execution plane: every "device" is an OS thread running actual
+//! training steps through the AOT-compiled PJRT executables; the
+//! collective allreduce is the barrier the step-tag protocol brackets.
+
+use super::detection::HeartbeatMonitor;
+use super::events::{RecoveryRecord, RunReport};
+use super::ranktable::{RankEntry, Ranktable, SharedRanktable};
+use super::step_tag::plan_restore;
+use crate::checkpoint::CheckpointManager;
+
+use crate::comms::{Collective, CollectiveError};
+use crate::config::RecoveryMode;
+use crate::runtime::ModelBundle;
+use crate::training::data::{DataConfig, DataIterator};
+use crate::training::state::WorkerState;
+use crate::training::worker::{
+    now_ms, worker_main, FailurePlan, MonitorBoard, WorkerCommand, WorkerCtx,
+    WorkerEvent,
+};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Controller/engine configuration for a real training run.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Data-parallel degree (worker thread count).
+    pub dp: usize,
+    /// Optimizer steps to run.
+    pub steps: u64,
+    /// Seed for init + data (all DP ranks share the init seed so their
+    /// model states are true replicas).
+    pub seed: u64,
+    pub mode: RecoveryMode,
+    /// Heartbeat scan period.
+    pub heartbeat_interval: Duration,
+    /// Collective timeout — the vanilla baseline's detection latency.
+    pub collective_timeout: Duration,
+    /// Periodic checkpoint interval in steps (0 = never; FlashRecovery
+    /// runs with 0 by design).
+    pub ckpt_interval: u64,
+    pub ckpt_dir: PathBuf,
+    /// Scripted failures (injected into the matching worker thread).
+    pub failures: Vec<FailurePlan>,
+    /// Hard wall-clock cap for the whole run.
+    pub max_wall: Duration,
+    /// Shared-file ranktable location (maintained across recoveries).
+    pub ranktable_path: Option<PathBuf>,
+}
+
+impl ControllerConfig {
+    pub fn flash(dp: usize, steps: u64) -> Self {
+        ControllerConfig {
+            dp,
+            steps,
+            seed: 0,
+            mode: RecoveryMode::Flash,
+            heartbeat_interval: Duration::from_millis(100),
+            collective_timeout: Duration::from_secs(3600),
+            ckpt_interval: 0,
+            ckpt_dir: std::env::temp_dir().join("flashrec-ckpt"),
+            failures: Vec::new(),
+            max_wall: Duration::from_secs(1800),
+            ranktable_path: None,
+        }
+    }
+
+    pub fn vanilla(dp: usize, steps: u64, ckpt_interval: u64, timeout: Duration) -> Self {
+        let mut c = Self::flash(dp, steps);
+        c.mode = RecoveryMode::Vanilla;
+        c.ckpt_interval = ckpt_interval;
+        c.collective_timeout = timeout;
+        c
+    }
+
+    /// Build from a declarative [`crate::config::JobConfig`] (the
+    /// JSON-file config system; see `flashrecovery train --config`).
+    pub fn from_job(job: &crate::config::JobConfig) -> anyhow::Result<Self> {
+        job.validate()?;
+        if job.parallelism.pp != 1 || job.parallelism.tp != 1 {
+            anyhow::bail!(
+                "the real execution plane runs DP-only (pp=tp=1); \
+                 model-parallel topologies are exercised by the replica-\
+                 location logic and the simulator (DESIGN.md §5)"
+            );
+        }
+        let mut c = Self::flash(job.parallelism.dp, job.steps);
+        c.seed = job.seed;
+        c.mode = job.recovery.mode;
+        c.heartbeat_interval =
+            Duration::from_secs_f64(job.cluster.heartbeat_interval_s.max(0.01));
+        c.collective_timeout =
+            Duration::from_secs_f64(job.cluster.collective_timeout_s.max(0.1));
+        c.ckpt_interval = job.checkpoint.interval_steps;
+        c.ckpt_dir = PathBuf::from(&job.checkpoint.dir);
+        Ok(c)
+    }
+}
+
+struct WorkerHandle {
+    #[allow(dead_code)]
+    rank: usize,
+    cmd_tx: Sender<WorkerCommand>,
+    board: Arc<MonitorBoard>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The controller: owns the worker fleet for one training run.
+pub struct Controller {
+    bundle: Arc<ModelBundle>,
+    cfg: ControllerConfig,
+    collective: Arc<Collective>,
+    event_tx: Sender<WorkerEvent>,
+    event_rx: Receiver<WorkerEvent>,
+    monitor: HeartbeatMonitor,
+    workers: BTreeMap<usize, WorkerHandle>,
+    ranktable: Ranktable,
+    shared_rt: Option<SharedRanktable>,
+    report: RunReport,
+    stopped: BTreeMap<usize, u64>, // rank -> param hash
+    parked: BTreeMap<usize, (u64, CollectiveError)>, // rank -> (state step, err)
+}
+
+impl Controller {
+    pub fn new(bundle: Arc<ModelBundle>, cfg: ControllerConfig) -> Result<Self> {
+        if cfg.dp == 0 {
+            bail!("dp must be >= 1");
+        }
+        let (event_tx, event_rx) = channel();
+        let collective = Collective::new(cfg.dp, cfg.collective_timeout);
+        let entries = (0..cfg.dp)
+            .map(|rank| RankEntry {
+                rank,
+                node: rank, // one simulated device per node in real mode
+                device: 0,
+                addr: format!("127.0.0.1:{}", 29000 + rank),
+            })
+            .collect();
+        let ranktable = Ranktable::new(entries);
+        let shared_rt = cfg.ranktable_path.clone().map(SharedRanktable::new);
+        Ok(Controller {
+            bundle,
+            cfg,
+            collective,
+            event_tx,
+            event_rx,
+            monitor: HeartbeatMonitor::new(),
+            workers: BTreeMap::new(),
+            ranktable,
+            shared_rt,
+            report: RunReport::default(),
+            stopped: BTreeMap::new(),
+            parked: BTreeMap::new(),
+        })
+    }
+
+    fn data_iter(&self) -> DataIterator {
+        let d = &self.bundle.manifest.dims;
+        DataIterator::new(DataConfig::for_model(
+            d.vocab,
+            d.seq,
+            d.batch,
+            self.cfg.seed.wrapping_add(1),
+        ))
+    }
+
+    fn ckpt_manager_for(&self, rank: usize) -> Result<Option<CheckpointManager>> {
+        // Rank 0 writes checkpoints (states are DP replicas).
+        if self.cfg.ckpt_interval > 0 && rank == 0 {
+            Ok(Some(CheckpointManager::new(&self.cfg.ckpt_dir, 0, 2, true)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn spawn_worker(
+        &mut self,
+        rank: usize,
+        state: WorkerState,
+        start_parked: bool,
+        failure: Option<FailurePlan>,
+    ) -> Result<()> {
+        let (cmd_tx, cmd_rx) = channel();
+        let board = MonitorBoard::new();
+        board.step_tag.store(state.step as i64, Ordering::SeqCst);
+        let ctx = WorkerCtx {
+            rank,
+            bundle: self.bundle.clone(),
+            data: self.data_iter(),
+            collective: self.collective.clone(),
+            cmd_rx,
+            event_tx: self.event_tx.clone(),
+            board: board.clone(),
+            failure,
+            ckpt: self.ckpt_manager_for(rank)?,
+            ckpt_interval: self.cfg.ckpt_interval,
+            state,
+            max_steps: self.cfg.steps,
+            start_parked,
+        };
+        let thread = std::thread::Builder::new()
+            .name(format!("worker-{rank}"))
+            .spawn(move || worker_main(ctx))?;
+        self.monitor.watch(rank, board.clone());
+        if let Some(old) = self.workers.insert(
+            rank,
+            WorkerHandle { rank, cmd_tx, board, thread: Some(thread) },
+        ) {
+            // join the previous (dead) thread for this rank
+            if let Some(t) = old.thread {
+                let _ = t.join();
+            }
+        }
+        Ok(())
+    }
+
+    fn publish_ranktable(&self) -> Result<()> {
+        if let Some(rt) = &self.shared_rt {
+            rt.publish(&self.ranktable)?;
+        }
+        Ok(())
+    }
+
+    /// Run the whole job; returns the report with losses + recoveries.
+    pub fn run(mut self) -> Result<RunReport> {
+        let start = Instant::now();
+        // initial fleet: identical replicas from the shared init seed
+        for rank in 0..self.cfg.dp {
+            let state = WorkerState::init(&self.bundle, self.cfg.seed as i32)?;
+            let failure = self.plan_for(rank);
+            self.spawn_worker(rank, state, false, failure)?;
+        }
+        self.publish_ranktable()?;
+
+        let mut last_scan = Instant::now();
+        loop {
+            if start.elapsed() > self.cfg.max_wall {
+                self.stop_all();
+                bail!("run exceeded max_wall {:?}", self.cfg.max_wall);
+            }
+            // ---- event pump ------------------------------------------
+            match self.event_rx.recv_timeout(self.cfg.heartbeat_interval / 2) {
+                Ok(ev) => self.handle_event(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("all workers gone"),
+            }
+            while let Ok(ev) = self.event_rx.try_recv() {
+                self.handle_event(ev);
+            }
+            if self.stopped.len() == self.cfg.dp {
+                break;
+            }
+
+            // ---- heartbeat scan (detection) ---------------------------
+            if last_scan.elapsed() >= self.cfg.heartbeat_interval {
+                last_scan = Instant::now();
+                let detections: Vec<_> = self
+                    .monitor
+                    .scan()
+                    .into_iter()
+                    .filter(|d| !self.stopped.contains_key(&d.rank))
+                    .collect();
+                if !detections.is_empty() {
+                    match self.cfg.mode {
+                        RecoveryMode::Flash => self.flash_recover(&detections)?,
+                        RecoveryMode::Vanilla => self.vanilla_recover(&detections)?,
+                    }
+                }
+            }
+        }
+
+        // ---- wrap up -------------------------------------------------
+        for (_, w) in self.workers.iter_mut() {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+        let hashes: Vec<u64> = self.stopped.values().copied().collect();
+        self.report.final_param_divergence =
+            if hashes.windows(2).all(|w| w[0] == w[1]) { 0.0 } else { f32::NAN };
+        self.report.final_step = self.cfg.steps;
+        self.report.wall_s = start.elapsed().as_secs_f64();
+        Ok(self.report)
+    }
+
+    fn plan_for(&self, rank: usize) -> Option<FailurePlan> {
+        self.cfg.failures.iter().copied().find(|f| f.rank == rank)
+    }
+
+    fn handle_event(&mut self, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Loss { rank, step, loss } => {
+                if rank == 0 {
+                    // last-write-wins: recovery replays overwrite cleanly
+                    match self.report.losses.iter_mut().find(|(s, _)| *s == step) {
+                        Some(slot) => slot.1 = loss,
+                        None => self.report.losses.push((step, loss)),
+                    }
+                }
+            }
+            WorkerEvent::Parked { rank, state_step, err } => {
+                self.parked.insert(rank, (state_step, err));
+            }
+            WorkerEvent::Stopped { rank, param_hash, .. } => {
+                self.stopped.insert(rank, param_hash);
+                self.monitor.unwatch(rank);
+            }
+            WorkerEvent::CheckpointTaken { k0_s, .. } => {
+                self.report.checkpoints_taken += 1;
+                self.report.checkpoint_stall_s += k0_s;
+            }
+        }
+    }
+
+    /// Wait until every rank in `ranks` has parked (or deadline).
+    fn await_parked(&mut self, ranks: &[usize], deadline: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            if ranks.iter().all(|r| self.parked.contains_key(r)) {
+                return Ok(());
+            }
+            if t0.elapsed() > deadline {
+                let missing: Vec<_> = ranks
+                    .iter()
+                    .filter(|r| !self.parked.contains_key(r))
+                    .collect();
+                bail!("ranks {missing:?} never parked");
+            }
+            match self.event_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(ev) => self.handle_event(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("workers gone"),
+            }
+        }
+    }
+
+    fn first_death_ms(&self, ranks: &[usize]) -> Option<u64> {
+        ranks
+            .iter()
+            .filter_map(|r| {
+                let w = self.workers.get(r)?;
+                let t = w.board.death_at_ms.load(Ordering::SeqCst);
+                (t > 0).then_some(t)
+            })
+            .min()
+    }
+
+    /// FlashRecovery (paper §III-D/E): selective recreation of failed
+    /// ranks, replica-based state restore, resume at step i or i+1.
+    fn flash_recover(&mut self, detections: &[super::detection::Detection]) -> Result<()> {
+        let t_aware = Instant::now();
+        let dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
+        let detection_s = self
+            .first_death_ms(&dead)
+            .map(|d_ms| (now_ms().saturating_sub(d_ms)) as f64 / 1e3)
+            .unwrap_or(0.0);
+
+        // 1. stop/clean/reset: poison the collective so survivors park.
+        self.collective.poison();
+
+        let survivors: Vec<usize> = (0..self.cfg.dp)
+            .filter(|r| !dead.contains(r) && !self.stopped.contains_key(r))
+            .collect();
+        if survivors.is_empty() {
+            // whole DP group lost: checkpoint fallback (paper §III-G.1)
+            return self.vanilla_recover(detections);
+        }
+        self.await_parked(&survivors, Duration::from_secs(120))?;
+
+        // 2. step determination from the survivors' states (§III-E-b).
+        let steps: Vec<(usize, u64)> = survivors
+            .iter()
+            .map(|r| (*r, self.parked[r].0))
+            .collect();
+        let (resume_step, sources, behind) = plan_restore(&steps);
+        let failed_at_step = steps.iter().map(|&(_, s)| s).min().unwrap();
+
+        // 3. limited recreation: spawn replacements for failed ranks only.
+        for &rank in &dead {
+            let state = WorkerState::init(&self.bundle, self.cfg.seed as i32)?;
+            self.spawn_worker(rank, state, true, None)?;
+            // ranktable substitution: the replacement "node"
+            let entry = RankEntry {
+                rank,
+                node: self.cfg.dp + self.report.recoveries.len() + rank,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 31000 + rank),
+            };
+            self.ranktable.substitute(entry)?;
+        }
+        self.publish_ranktable()?;
+        self.await_parked(&dead, Duration::from_secs(120))?;
+
+        // 4. replica restore: one source broadcasts state to everyone
+        // whose state is behind `resume_step` (replacements + laggards).
+        let t_restore = Instant::now();
+        let mut receivers: Vec<usize> = dead.clone();
+        receivers.extend(behind.iter().copied());
+        let source = *sources.first().context("no replica source")?;
+        if !receivers.is_empty() {
+            let group = Collective::new(receivers.len() + 2, Duration::from_secs(300));
+            self.send(source, WorkerCommand::ServeState { group: group.clone() })?;
+            for &r in &receivers {
+                self.send(r, WorkerCommand::RestoreState { group: group.clone() })?;
+            }
+            // controller joins the broadcast to observe completion
+            group
+                .broadcast(None)
+                .map_err(|e| anyhow::anyhow!("restore broadcast failed: {e}"))?;
+        }
+        let restore_s = t_restore.elapsed().as_secs_f64();
+
+        // 5. rebuild the communication group and continue training.
+        self.collective.reset(self.cfg.dp);
+        self.parked.clear();
+        for rank in 0..self.cfg.dp {
+            self.send(rank, WorkerCommand::Continue { resume_step })?;
+        }
+
+        let restart_s = t_aware.elapsed().as_secs_f64();
+        self.report.recoveries.push(RecoveryRecord {
+            mode: RecoveryMode::Flash,
+            failed_ranks: dead,
+            kind: detections[0].kind,
+            via_device_plugin: detections[0].via_device_plugin,
+            failed_at_step,
+            resume_step,
+            lost_steps: 0, // checkpoint-free: at most the in-flight step
+            detection_s,
+            restart_s,
+            restore_s,
+            total_s: detection_s + restart_s,
+        });
+        Ok(())
+    }
+
+    /// Vanilla baseline: wait out the collective timeout, tear down the
+    /// whole fleet, reload the last checkpoint, restart everyone.
+    fn vanilla_recover(&mut self, detections: &[super::detection::Detection]) -> Result<()> {
+        let dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
+        let death_ms = self.first_death_ms(&dead);
+
+        // Passive detection: survivors discover the failure only when
+        // the collective times out (or are poisoned by the first
+        // timeout). The controller waits for them.
+        let survivors: Vec<usize> = (0..self.cfg.dp)
+            .filter(|r| !dead.contains(r) && !self.stopped.contains_key(r))
+            .collect();
+        self.await_parked(
+            &survivors,
+            self.cfg.collective_timeout + Duration::from_secs(120),
+        )?;
+        let detection_s = death_ms
+            .map(|d_ms| (now_ms().saturating_sub(d_ms)) as f64 / 1e3)
+            .unwrap_or(0.0);
+        let t_restart = Instant::now();
+        // Last step in flight: survivors' parked state, or — when the
+        // whole group died (checkpoint-fallback path) — the dead ranks'
+        // final step tags.
+        let failed_at_step = survivors
+            .iter()
+            .map(|r| self.parked[r].0)
+            .chain(dead.iter().filter_map(|r| {
+                let tag = self
+                    .workers
+                    .get(r)?
+                    .board
+                    .step_tag
+                    .load(Ordering::SeqCst);
+                (tag >= 0).then_some(tag as u64)
+            }))
+            .max()
+            .unwrap_or(0);
+
+        // Indiscriminate teardown: stop every survivor, join all threads.
+        for &r in &survivors {
+            let _ = self.send(r, WorkerCommand::Stop);
+        }
+        for (_, w) in self.workers.iter_mut() {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+        // drain Stopped events; these are not "job complete" stops
+        while let Ok(ev) = self.event_rx.try_recv() {
+            if let WorkerEvent::Stopped { rank, .. } = ev {
+                self.monitor.unwatch(rank);
+            } else {
+                self.handle_event(ev);
+            }
+        }
+        self.stopped.clear();
+        self.parked.clear();
+        self.workers.clear();
+
+        // Training resumption from the last checkpoint.
+        let t_restore = Instant::now();
+        let loader = CheckpointManager::new(&self.cfg.ckpt_dir, 0, 2, false)?;
+        let snapshot = loader.load_latest()?;
+        let (resume_step, states) = match snapshot {
+            Some(snap) => {
+                let step = snap.step;
+                let states: Vec<WorkerState> = (0..self.cfg.dp)
+                    .map(|_| WorkerState::from_snapshot(&self.bundle, &snap))
+                    .collect::<Result<_>>()?;
+                (step, states)
+            }
+            None => {
+                // no checkpoint ever taken: restart from scratch
+                let states: Vec<WorkerState> = (0..self.cfg.dp)
+                    .map(|_| WorkerState::init(&self.bundle, self.cfg.seed as i32))
+                    .collect::<Result<_>>()?;
+                (0, states)
+            }
+        };
+        let restore_s = t_restore.elapsed().as_secs_f64();
+
+        // Full-fleet restart with a fresh communication group.
+        self.collective.reset(self.cfg.dp);
+        for (rank, state) in states.into_iter().enumerate() {
+            // replacements carry no failure plan; survivors' plans are
+            // spent (their step has passed or they will re-trigger — the
+            // vanilla baseline restarts everyone identically)
+            let failure = self
+                .plan_for(rank)
+                .filter(|f| f.step >= resume_step && !dead.contains(&rank));
+            self.spawn_worker(rank, state, false, failure)?;
+        }
+        self.publish_ranktable()?;
+
+        let restart_s = t_restart.elapsed().as_secs_f64();
+        self.report.recoveries.push(RecoveryRecord {
+            mode: RecoveryMode::Vanilla,
+            failed_ranks: dead,
+            kind: detections[0].kind,
+            via_device_plugin: detections[0].via_device_plugin,
+            failed_at_step,
+            resume_step,
+            lost_steps: failed_at_step.saturating_sub(resume_step),
+            detection_s,
+            restart_s,
+            restore_s,
+            total_s: detection_s + restart_s,
+        });
+        Ok(())
+    }
+
+    fn send(&self, rank: usize, cmd: WorkerCommand) -> Result<()> {
+        self.workers
+            .get(&rank)
+            .with_context(|| format!("no worker {rank}"))?
+            .cmd_tx
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("worker {rank} channel closed"))
+    }
+
+    fn stop_all(&mut self) {
+        for (_, w) in self.workers.iter() {
+            let _ = w.cmd_tx.send(WorkerCommand::Stop);
+        }
+        self.collective.poison();
+        for (_, w) in self.workers.iter_mut() {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Active real-time failure detection (paper §III-C).
+//!
+//! Two detection paths feed the controller:
+//! * **monitoring process** — per-worker liveness (`alive` flag on the
+//!   [`MonitorBoard`]): a dead training process is noticed within one
+//!   heartbeat scan;
+//! * **device plugin** — per-node hardware status (`device_error`):
+//!   hardware failures are reported with their [`FailureKind`]
+//!   immediately, before liveness is even lost.
+//!
+//! This replaces the passive baseline where peers discover a failure
+//! only when a collective hangs into its (default 1800 s) timeout.
+
+use crate::cluster::failure::FailureKind;
+use crate::training::worker::{kind_from_code, MonitorBoard};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One detected failure.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub rank: usize,
+    pub kind: FailureKind,
+    /// Which path noticed it first.
+    pub via_device_plugin: bool,
+    pub at: Instant,
+}
+
+/// Scans all workers' monitor boards every heartbeat interval.
+pub struct HeartbeatMonitor {
+    boards: Vec<(usize, Arc<MonitorBoard>)>,
+    /// Ranks already reported (do not re-report).
+    reported: Vec<usize>,
+}
+
+impl HeartbeatMonitor {
+    pub fn new() -> Self {
+        HeartbeatMonitor { boards: Vec::new(), reported: Vec::new() }
+    }
+
+    pub fn watch(&mut self, rank: usize, board: Arc<MonitorBoard>) {
+        self.boards.retain(|(r, _)| *r != rank);
+        self.reported.retain(|r| *r != rank);
+        self.boards.push((rank, board));
+    }
+
+    pub fn unwatch(&mut self, rank: usize) {
+        self.boards.retain(|(r, _)| *r != rank);
+        self.reported.retain(|r| *r != rank);
+    }
+
+    /// Current step tag of a rank (the heartbeat payload).
+    pub fn tag_of(&self, rank: usize) -> Option<i64> {
+        self.boards
+            .iter()
+            .find(|(r, _)| *r == rank)
+            .map(|(_, b)| b.step_tag.load(Ordering::SeqCst))
+    }
+
+    /// One scan: returns any *new* failures.
+    pub fn scan(&mut self) -> Vec<Detection> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for (rank, board) in &self.boards {
+            if self.reported.contains(rank) {
+                continue;
+            }
+            let code = board.device_error.load(Ordering::SeqCst);
+            if code >= 0 {
+                out.push(Detection {
+                    rank: *rank,
+                    kind: kind_from_code(code).unwrap_or(FailureKind::HardwareOther),
+                    via_device_plugin: true,
+                    at: now,
+                });
+                self.reported.push(*rank);
+                continue;
+            }
+            if !board.alive.load(Ordering::SeqCst) {
+                // Process lost with no hardware report: classified as a
+                // software failure by the monitoring process.
+                out.push(Detection {
+                    rank: *rank,
+                    kind: FailureKind::Segfault,
+                    via_device_plugin: false,
+                    at: now,
+                });
+                self.reported.push(*rank);
+            }
+        }
+        out
+    }
+
+    /// Ranks currently alive (and not reported failed).
+    pub fn alive_ranks(&self) -> Vec<usize> {
+        self.boards
+            .iter()
+            .filter(|(r, b)| {
+                !self.reported.contains(r) && b.alive.load(Ordering::SeqCst)
+            })
+            .map(|(r, _)| *r)
+            .collect()
+    }
+}
+
+impl Default for HeartbeatMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board() -> Arc<MonitorBoard> {
+        MonitorBoard::new()
+    }
+
+    #[test]
+    fn healthy_boards_report_nothing() {
+        let mut mon = HeartbeatMonitor::new();
+        mon.watch(0, board());
+        mon.watch(1, board());
+        assert!(mon.scan().is_empty());
+        assert_eq!(mon.alive_ranks(), vec![0, 1]);
+    }
+
+    #[test]
+    fn dead_process_detected_as_software() {
+        let mut mon = HeartbeatMonitor::new();
+        let b = board();
+        mon.watch(3, b.clone());
+        b.alive.store(false, Ordering::SeqCst);
+        let d = mon.scan();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rank, 3);
+        assert!(!d[0].via_device_plugin);
+        // reported once only
+        assert!(mon.scan().is_empty());
+        assert!(mon.alive_ranks().is_empty());
+    }
+
+    #[test]
+    fn device_plugin_reports_hardware_kind() {
+        let mut mon = HeartbeatMonitor::new();
+        let b = board();
+        mon.watch(1, b.clone());
+        // simulate the plugin flagging a network error (still "alive")
+        let code = FailureKind::all()
+            .iter()
+            .position(|k| *k == FailureKind::Network)
+            .unwrap() as i64;
+        b.device_error.store(code, Ordering::SeqCst);
+        let d = mon.scan();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind, FailureKind::Network);
+        assert!(d[0].via_device_plugin);
+    }
+
+    #[test]
+    fn tag_of_reads_heartbeat_payload() {
+        let mut mon = HeartbeatMonitor::new();
+        let b = board();
+        mon.watch(0, b.clone());
+        b.step_tag.store(17, Ordering::SeqCst);
+        assert_eq!(mon.tag_of(0), Some(17));
+        assert_eq!(mon.tag_of(9), None);
+    }
+
+    #[test]
+    fn rewatch_clears_reported_state() {
+        let mut mon = HeartbeatMonitor::new();
+        let b = board();
+        mon.watch(0, b.clone());
+        b.alive.store(false, Ordering::SeqCst);
+        assert_eq!(mon.scan().len(), 1);
+        // replacement worker re-registers the same rank
+        mon.watch(0, board());
+        assert!(mon.scan().is_empty());
+        assert_eq!(mon.alive_ranks(), vec![0]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Controller-side records of recovery episodes and run outcomes.
+
+use crate::cluster::failure::FailureKind;
+use crate::config::RecoveryMode;
+use crate::util::Json;
+
+/// One failure + recovery episode, timed the way the paper's Tab. III
+/// reports it.
+#[derive(Debug, Clone)]
+pub struct RecoveryRecord {
+    pub mode: RecoveryMode,
+    pub failed_ranks: Vec<usize>,
+    pub kind: FailureKind,
+    pub via_device_plugin: bool,
+    /// Step the failure interrupted.
+    pub failed_at_step: u64,
+    /// Step training resumed from (i or i+1 for Flash; checkpoint step
+    /// for vanilla).
+    pub resume_step: u64,
+    /// Completed optimizer steps discarded by the rollback (0 or more;
+    /// Flash guarantees 0 — only the in-flight step is redone).
+    pub lost_steps: u64,
+    /// Failure occurrence -> controller aware.
+    pub detection_s: f64,
+    /// Controller aware -> all workers training again.
+    pub restart_s: f64,
+    /// Portion of restart spent in replica/checkpoint state transfer.
+    pub restore_s: f64,
+    pub total_s: f64,
+}
+
+impl RecoveryRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("mode", self.mode.name())
+            .set(
+                "failed_ranks",
+                Json::Array(self.failed_ranks.iter().map(|r| Json::from(*r)).collect()),
+            )
+            .set("kind", self.kind.name())
+            .set("via_device_plugin", self.via_device_plugin)
+            .set("failed_at_step", self.failed_at_step)
+            .set("resume_step", self.resume_step)
+            .set("lost_steps", self.lost_steps)
+            .set("detection_s", self.detection_s)
+            .set("restart_s", self.restart_s)
+            .set("restore_s", self.restore_s)
+            .set("total_s", self.total_s);
+        o
+    }
+}
+
+/// Outcome of one training run under the controller.
+#[derive(Debug, Default)]
+pub struct RunReport {
+    /// (step, mean loss across DP ranks reporting that step).
+    pub losses: Vec<(u64, f32)>,
+    pub recoveries: Vec<RecoveryRecord>,
+    pub final_step: u64,
+    pub wall_s: f64,
+    pub checkpoints_taken: usize,
+    /// Total k0 stall time across all checkpoints.
+    pub checkpoint_stall_s: f64,
+    /// Max |param| divergence across DP ranks at the end (0 == bitwise
+    /// consistent replicas).
+    pub final_param_divergence: f32,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("final_step", self.final_step)
+            .set("wall_s", self.wall_s)
+            .set("checkpoints_taken", self.checkpoints_taken)
+            .set("checkpoint_stall_s", self.checkpoint_stall_s)
+            .set("final_param_divergence", self.final_param_divergence as f64)
+            .set(
+                "recoveries",
+                Json::Array(self.recoveries.iter().map(|r| r.to_json()).collect()),
+            )
+            .set(
+                "losses",
+                Json::Array(
+                    self.losses
+                        .iter()
+                        .map(|(s, l)| {
+                            let mut e = Json::object();
+                            e.set("step", *s).set("loss", *l as f64);
+                            e
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    /// Loss at or nearest-after `step` (test helper for continuity
+    /// checks around recoveries).
+    pub fn loss_at(&self, step: u64) -> Option<f32> {
+        self.losses
+            .iter()
+            .find(|(s, _)| *s >= step)
+            .map(|(_, l)| *l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_serializes() {
+        let r = RecoveryRecord {
+            mode: RecoveryMode::Flash,
+            failed_ranks: vec![1],
+            kind: FailureKind::Network,
+            via_device_plugin: true,
+            failed_at_step: 10,
+            resume_step: 10,
+            lost_steps: 0,
+            detection_s: 0.2,
+            restart_s: 1.1,
+            restore_s: 0.3,
+            total_s: 1.3,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("mode").as_str(), Some("flash"));
+        assert_eq!(j.get("lost_steps").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn report_loss_lookup() {
+        let mut rep = RunReport::default();
+        rep.losses = vec![(1, 5.0), (2, 4.5), (4, 4.0)];
+        assert_eq!(rep.loss_at(2), Some(4.5));
+        assert_eq!(rep.loss_at(3), Some(4.0));
+        assert_eq!(rep.loss_at(9), None);
+    }
+}

@@ -1,0 +1,24 @@
+//! The FlashRecovery coordinator — the paper's system contribution.
+//!
+//! * [`detection`] — active real-time failure detection (§III-C):
+//!   heartbeat monitor + device plugin boards.
+//! * [`ranktable`] — O(1) shared-file ranktable vs the O(n)
+//!   collect/distribute baseline (§III-D, Tab. I).
+//! * [`step_tag`] — the step-tag protocol deciding when to stop/clean/
+//!   reset and whether to resume at step i or i+1 (§III-E).
+//! * [`controller`] — the global controller orchestrating detection,
+//!   scale-independent restart, and checkpoint-free recovery over the
+//!   real DP training engine.
+//! * [`events`] — recovery episode records and run reports.
+
+pub mod controller;
+pub mod detection;
+pub mod events;
+pub mod ranktable;
+pub mod step_tag;
+
+pub use controller::{Controller, ControllerConfig};
+pub use detection::{Detection, HeartbeatMonitor};
+pub use events::{RecoveryRecord, RunReport};
+pub use ranktable::{original_update, RankEntry, Ranktable, SharedRanktable};
+pub use step_tag::{decide, plan_restore, TagDecision};

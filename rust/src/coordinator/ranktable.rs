@@ -1,0 +1,261 @@
+//! Global ranktable management (paper §III-D, Tab. I).
+//!
+//! The ranktable records every device's resource info (node, device
+//! slot, endpoint) for inter-device communication establishment. Two
+//! update protocols are implemented:
+//!
+//! * **Original** — every device sends its entry to the master, which
+//!   assembles and re-distributes the table: O(n) in cluster size
+//!   (implemented over the collective's all-gather, the measured
+//!   baseline of Tab. I row 1);
+//! * **Shared file** — the FlashRecovery controller maintains the
+//!   up-to-date table in one shared file; every device loads it
+//!   directly, O(1) (Tab. I row 2). The write is atomic
+//!   (write-to-temp + rename) so readers never observe a torn table.
+
+use crate::comms::{Collective, CollectiveError};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankEntry {
+    pub rank: usize,
+    pub node: usize,
+    pub device: usize,
+    /// Endpoint string (host:port or device URI).
+    pub addr: String,
+}
+
+impl RankEntry {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("rank", self.rank)
+            .set("node", self.node)
+            .set("device", self.device)
+            .set("addr", self.addr.as_str());
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(RankEntry {
+            rank: v.get("rank").as_usize().context("rank")?,
+            node: v.get("node").as_usize().context("node")?,
+            device: v.get("device").as_usize().context("device")?,
+            addr: v.get("addr").as_str().context("addr")?.to_string(),
+        })
+    }
+
+    /// Wire encoding for the all-gather baseline.
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().render().into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes)?;
+        Self::from_json(&Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Ranktable {
+    pub version: u64,
+    pub entries: Vec<RankEntry>,
+}
+
+impl Ranktable {
+    pub fn new(entries: Vec<RankEntry>) -> Self {
+        Ranktable { version: 1, entries }
+    }
+
+    /// Replace the entry for `rank` (node substitution after recovery)
+    /// and bump the version.
+    pub fn substitute(&mut self, entry: RankEntry) -> Result<()> {
+        let slot = self
+            .entries
+            .iter_mut()
+            .find(|e| e.rank == entry.rank)
+            .with_context(|| format!("rank {} not in ranktable", entry.rank))?;
+        *slot = entry;
+        self.version += 1;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut ranks: Vec<usize> = self.entries.iter().map(|e| e.rank).collect();
+        ranks.sort();
+        for (i, r) in ranks.iter().enumerate() {
+            if *r != i {
+                bail!("ranktable ranks not contiguous: expected {i}, got {r}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("version", self.version).set(
+            "entries",
+            Json::Array(self.entries.iter().map(|e| e.to_json()).collect()),
+        );
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Ranktable {
+            version: v.get("version").as_i64().context("version")? as u64,
+            entries: v
+                .get("entries")
+                .as_array()
+                .context("entries")?
+                .iter()
+                .map(RankEntry::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// FlashRecovery's controller-maintained shared-file ranktable.
+pub struct SharedRanktable {
+    path: PathBuf,
+}
+
+impl SharedRanktable {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        SharedRanktable { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Controller side: atomically publish the latest table.
+    pub fn publish(&self, table: &Ranktable) -> Result<()> {
+        table.validate()?;
+        let tmp = self.path.with_extension("tmp");
+        std::fs::write(&tmp, table.to_json().render_pretty())
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.path)?;
+        Ok(())
+    }
+
+    /// Device side: O(1) load, no negotiation with the master.
+    pub fn load(&self) -> Result<Ranktable> {
+        let text = std::fs::read_to_string(&self.path)
+            .with_context(|| format!("reading ranktable {:?}", self.path))?;
+        let table = Ranktable::from_json(
+            &Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?,
+        )?;
+        table.validate()?;
+        Ok(table)
+    }
+}
+
+/// The original O(n) protocol: every rank contributes its entry via
+/// all-gather (collect at master + distribute, collapsed into one
+/// collective op), and each rank assembles the table locally.
+pub fn original_update(
+    group: &Collective,
+    entry: &RankEntry,
+) -> std::result::Result<Ranktable, CollectiveError> {
+    let gathered = group.all_gather(entry.rank, entry.encode())?;
+    let entries: Vec<RankEntry> = gathered
+        .iter()
+        .map(|b| RankEntry::decode(b).expect("peer sent malformed entry"))
+        .collect();
+    Ok(Ranktable::new(entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::temp_dir;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn entry(rank: usize) -> RankEntry {
+        RankEntry {
+            rank,
+            node: rank / 8,
+            device: rank % 8,
+            addr: format!("10.0.{}.{}:2900", rank / 8, rank % 8),
+        }
+    }
+
+    fn table(n: usize) -> Ranktable {
+        Ranktable::new((0..n).map(entry).collect())
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = table(16);
+        let back = Ranktable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn shared_file_publish_load() {
+        let dir = temp_dir("rt").unwrap();
+        let shared = SharedRanktable::new(dir.join("ranktable.json"));
+        let t = table(8);
+        shared.publish(&t).unwrap();
+        assert_eq!(shared.load().unwrap(), t);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn substitute_bumps_version_and_replaces() {
+        let mut t = table(4);
+        let mut new = entry(2);
+        new.node = 99;
+        t.substitute(new.clone()).unwrap();
+        assert_eq!(t.version, 2);
+        assert_eq!(t.entries[2], new);
+        assert!(t.substitute(entry(17)).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_gaps() {
+        let mut t = table(3);
+        t.entries.remove(1);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn publish_rejects_invalid_table() {
+        let dir = temp_dir("rt").unwrap();
+        let shared = SharedRanktable::new(dir.join("ranktable.json"));
+        let mut t = table(3);
+        t.entries[0].rank = 7;
+        assert!(shared.publish(&t).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn original_update_assembles_identical_tables() {
+        let n = 4;
+        let group = Collective::new(n, Duration::from_secs(5));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let group: Arc<Collective> = group.clone();
+            handles.push(std::thread::spawn(move || {
+                original_update(&group, &entry(rank)).unwrap()
+            }));
+        }
+        let tables: Vec<Ranktable> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for t in &tables {
+            assert_eq!(t, &tables[0]);
+            t.validate().unwrap();
+            assert_eq!(t.entries.len(), n);
+        }
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let dir = temp_dir("rt").unwrap();
+        let shared = SharedRanktable::new(dir.join("nope.json"));
+        assert!(shared.load().is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

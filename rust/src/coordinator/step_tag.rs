@@ -1,0 +1,142 @@
+//! Step-tag protocol (paper §III-E-c): deciding *when* it is safe to
+//! issue stop/clean/reset and *which step* to resume from.
+//!
+//! Tags reported by each training process:
+//! * `i`  — executing forward/backward of step i (params at version i);
+//! * `-1` — executing the optimizer step (update in flight);
+//! * `i+1`— optimizer step complete (params at version i+1).
+//!
+//! Because the gradient allreduce is a barrier immediately before the
+//! optimizer step, a failure before the barrier leaves every surviving
+//! process at tag `i` (resume from step i), and a failure after it lets
+//! every survivor finish the update and reach `i+1` (resume from i+1).
+//! A survivor can transiently report `-1`; the controller must wait it
+//! out before acting — acting while an update is in flight could reset
+//! a device mid-write.
+
+/// The paper's "in optimizer step" tag.
+pub const TAG_OPTIMIZER: i64 = -1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TagDecision {
+    /// Some survivor is mid-optimizer: do NOT stop/clean/reset yet.
+    Wait,
+    /// Safe to act: resume from `resume_step`; ranks whose state is at
+    /// `resume_step` are valid replica sources.
+    Act { resume_step: u64 },
+}
+
+/// Decide from the survivors' current tags (device-plugin heartbeats).
+///
+/// `tags` must be non-empty and contain only `-1` or step indices.
+pub fn decide(tags: &[i64]) -> TagDecision {
+    assert!(!tags.is_empty(), "no survivor tags");
+    if tags.iter().any(|&t| t == TAG_OPTIMIZER) {
+        return TagDecision::Wait;
+    }
+    let max = tags.iter().copied().max().unwrap();
+    debug_assert!(max >= 0);
+    TagDecision::Act { resume_step: max as u64 }
+}
+
+/// Given each survivor's *state* step (completed updates), classify who
+/// serves as a replica source and who must be restored alongside the
+/// replacement ranks. Returns (resume_step, source_ranks, behind_ranks).
+pub fn plan_restore(survivor_steps: &[(usize, u64)]) -> (u64, Vec<usize>, Vec<usize>) {
+    assert!(!survivor_steps.is_empty());
+    let resume = survivor_steps.iter().map(|&(_, s)| s).max().unwrap();
+    let mut sources = Vec::new();
+    let mut behind = Vec::new();
+    for &(rank, s) in survivor_steps {
+        if s == resume {
+            sources.push(rank);
+        } else {
+            behind.push(rank);
+        }
+    }
+    (resume, sources, behind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn all_in_fwd_bwd_resumes_at_i() {
+        assert_eq!(decide(&[5, 5, 5]), TagDecision::Act { resume_step: 5 });
+    }
+
+    #[test]
+    fn all_past_optimizer_resumes_at_i_plus_1() {
+        assert_eq!(decide(&[6, 6, 6]), TagDecision::Act { resume_step: 6 });
+    }
+
+    #[test]
+    fn any_optimizer_in_flight_waits() {
+        assert_eq!(decide(&[6, TAG_OPTIMIZER, 5]), TagDecision::Wait);
+        assert_eq!(decide(&[TAG_OPTIMIZER]), TagDecision::Wait);
+    }
+
+    #[test]
+    fn mixed_tags_resume_at_max() {
+        // Failure raced the barrier: some ranks updated, some aborted
+        // mid-allreduce. Resume at the updated version; the laggards
+        // are restored from a replica.
+        assert_eq!(decide(&[5, 6]), TagDecision::Act { resume_step: 6 });
+    }
+
+    #[test]
+    fn plan_restore_splits_sources_and_behind() {
+        let (resume, sources, behind) =
+            plan_restore(&[(0, 6), (2, 5), (3, 6)]);
+        assert_eq!(resume, 6);
+        assert_eq!(sources, vec![0, 3]);
+        assert_eq!(behind, vec![2]);
+    }
+
+    #[test]
+    fn plan_restore_all_equal_has_no_behind() {
+        let (resume, sources, behind) = plan_restore(&[(0, 4), (1, 4)]);
+        assert_eq!(resume, 4);
+        assert_eq!(sources, vec![0, 1]);
+        assert!(behind.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_tags_panics() {
+        decide(&[]);
+    }
+
+    #[test]
+    fn prop_decision_never_loses_an_update() {
+        // Whatever mix of i / i+1 the survivors report, the chosen
+        // resume step equals the most-updated surviving state, so no
+        // completed optimizer work is discarded and laggards always
+        // have a source.
+        prop::check("tag decision", 300, |rng| {
+            let i = rng.below(1000) as i64;
+            let n = 1 + rng.below(8) as usize;
+            let tags: Vec<i64> = (0..n)
+                .map(|_| if rng.bool(0.5) { i } else { i + 1 })
+                .collect();
+            match decide(&tags) {
+                TagDecision::Wait => Err("unexpected wait".into()),
+                TagDecision::Act { resume_step } => {
+                    let max = *tags.iter().max().unwrap() as u64;
+                    prop::assert_eq_prop(&resume_step, &max)?;
+                    let steps: Vec<(usize, u64)> = tags
+                        .iter()
+                        .enumerate()
+                        .map(|(r, &t)| (r, t as u64))
+                        .collect();
+                    let (resume, sources, behind) = plan_restore(&steps);
+                    prop::assert_eq_prop(&resume, &max)?;
+                    prop::assert_prop(!sources.is_empty(), "no source")?;
+                    prop::assert_eq_prop(&(sources.len() + behind.len()), &n)
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,31 @@
+//! # FlashRecovery — reproduction library
+//!
+//! A Rust + JAX + Pallas reproduction of *FlashRecovery: Fast and
+//! Low-Cost Recovery from Failures for Large-Scale Training of LLMs*
+//! (Zhang et al., 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** (build-time Python): a Pallas flash-attention kernel —
+//!   the training compute hot-spot (`python/compile/kernels/`).
+//! * **Layer 2** (build-time Python): a decoder-only transformer with
+//!   fwd/bwd and Adam, AOT-lowered to HLO text (`python/compile/`).
+//! * **Layer 3** (this crate): the FlashRecovery system — active
+//!   failure detection, scale-independent task restart, and
+//!   checkpoint-free recovery within one step — plus every substrate it
+//!   needs (cluster simulator, TCP store, checkpointing baseline,
+//!   PJRT runtime, DP training engine).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod checkpoint;
+pub mod cluster;
+pub mod comms;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod recovery_model;
+pub mod runtime;
+pub mod training;
+pub mod util;

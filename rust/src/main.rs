@@ -1,0 +1,187 @@
+//! `flashrecovery` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train     run a real DP training job (optionally with an injected
+//!             failure) under FlashRecovery or the vanilla baseline
+//!   simulate  one paper-scale recovery scenario on the simulator
+//!   info      print artifact/manifest information
+//!
+//! Examples:
+//!   flashrecovery train --size tiny --dp 2 --steps 20
+//!   flashrecovery train --size tiny --dp 2 --steps 20 \
+//!       --fail-rank 1 --fail-step 8 --fail-phase optstep
+//!   flashrecovery train --mode vanilla --ckpt-interval 5 --timeout-s 3 \
+//!       --fail-rank 1 --fail-step 8
+//!   flashrecovery simulate --devices 4800 --params-b 175 --mode flash
+//!   flashrecovery info --size small
+
+use flashrecovery::cluster::failure::FailureKind;
+use flashrecovery::cluster::{simulate_flash, simulate_vanilla, ScenarioConfig};
+use flashrecovery::coordinator::ControllerConfig;
+use flashrecovery::runtime::load_manifest;
+use flashrecovery::training::worker::{FailurePlan, Phase};
+use flashrecovery::training::TrainingEngine;
+use flashrecovery::util::{artifacts_dir, Args};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    match args.positional.first().map(String::as_str) {
+        Some("train") => train(&args),
+        Some("simulate") => simulate(&args),
+        Some("info") => info(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "flashrecovery — fast and low-cost failure recovery for LLM training\n\
+         \n\
+         USAGE: flashrecovery <train|simulate|info> [--flags]\n\
+         \n\
+         train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
+         \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
+         \u{20}         --fail-rank N --fail-step N --fail-phase fwdbwd|optstep\n\
+         simulate: --devices N  --params-b N  --mode flash|vanilla  --runs N\n\
+         info:     --size tiny|small|base"
+    );
+}
+
+fn parse_phase(s: &str) -> Phase {
+    match s {
+        "optstep" | "opt" | "optimizer" => Phase::OptStep,
+        _ => Phase::FwdBwd,
+    }
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    // Declarative path: a JSON job file drives the whole run.
+    if let Some(path) = args.get("config") {
+        let job = flashrecovery::config::JobConfig::load(path)?;
+        let cfg = ControllerConfig::from_job(&job)?;
+        println!("[train] job config {path}: model={} dp={}", job.model, job.parallelism.dp);
+        let engine = TrainingEngine::load(&job.model)?;
+        let report = engine.run(cfg)?;
+        println!("{}", report.to_json().render_pretty());
+        return Ok(());
+    }
+
+    let size = args.str_or("size", "tiny");
+    let dp = args.usize_or("dp", 2);
+    let steps = args.u64_or("steps", 20);
+    let mode = args.str_or("mode", "flash");
+
+    let mut cfg = if mode == "vanilla" {
+        ControllerConfig::vanilla(
+            dp,
+            steps,
+            args.u64_or("ckpt-interval", 5),
+            Duration::from_secs_f64(args.f64_or("timeout-s", 5.0)),
+        )
+    } else {
+        ControllerConfig::flash(dp, steps)
+    };
+    cfg.seed = args.u64_or("seed", 0);
+    if let Some(rank) = args.get("fail-rank") {
+        cfg.failures.push(FailurePlan {
+            rank: rank.parse()?,
+            step: args.u64_or("fail-step", steps / 2),
+            phase: parse_phase(&args.str_or("fail-phase", "fwdbwd")),
+            kind: FailureKind::Segfault,
+        });
+    }
+
+    println!("[train] loading '{size}'…");
+    let engine = TrainingEngine::load(&size)?;
+    let report = engine.run(cfg)?;
+
+    for (step, loss) in &report.losses {
+        if step % args.u64_or("log-every", 5) == 0 || *step == 1 {
+            println!("step {step:>6}  loss {loss:.4}");
+        }
+    }
+    for r in &report.recoveries {
+        println!(
+            "[recovery] {} ranks {:?} at step {} -> resumed step {} \
+             (lost {}), detect {:.3}s restart {:.3}s",
+            r.mode.name(),
+            r.failed_ranks,
+            r.failed_at_step,
+            r.resume_step,
+            r.lost_steps,
+            r.detection_s,
+            r.restart_s
+        );
+    }
+    println!(
+        "[train] done: {} steps, wall {:.1}s, dp-consistent={}",
+        report.final_step,
+        report.wall_s,
+        report.final_param_divergence == 0.0
+    );
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let devices = args.usize_or("devices", 4800);
+    let params = args.f64_or("params-b", 175.0) * 1e9;
+    let runs = args.u64_or("runs", 32);
+    let mode = args.str_or("mode", "flash");
+
+    let avg = flashrecovery::cluster::scenario::average(runs, args.u64_or("seed", 1), |s| {
+        let cfg = ScenarioConfig::paper(devices, params, s);
+        if mode == "vanilla" {
+            simulate_vanilla(&cfg)
+        } else {
+            simulate_flash(&cfg)
+        }
+    });
+    println!(
+        "[simulate] {mode} @ {devices} devices, {:.0}B params ({runs} runs):",
+        params / 1e9
+    );
+    println!("  detection   {:>9.2} s", avg.detection_s);
+    println!("  restart     {:>9.2} s", avg.restart_s);
+    println!("  redone      {:>9.2} s (step = {:.2} s)", avg.redone_s, avg.step_time_s);
+    println!("  total       {:>9.2} s", avg.total_s);
+    for (name, v) in &avg.stages {
+        println!("    stage {name:<28} {v:>9.3} s");
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+    let size = args.str_or("size", "tiny");
+    let m = load_manifest(&dir, &size)?;
+    println!("model '{size}' from {dir:?}:");
+    println!(
+        "  layers={} d_model={} heads={} d_ff={} vocab={} seq={} batch={}",
+        m.dims.n_layers, m.dims.d_model, m.dims.n_heads, m.dims.d_ff,
+        m.dims.vocab, m.dims.seq, m.dims.batch
+    );
+    println!(
+        "  params: {} tensors, {:.2}M elements, state {:.1} MB",
+        m.params.len(),
+        m.total_elements() as f64 / 1e6,
+        m.state_bytes() as f64 / 1e6
+    );
+    println!(
+        "  optimizer: adam lr={} b1={} b2={} clip={}",
+        m.optimizer.lr, m.optimizer.beta1, m.optimizer.beta2, m.optimizer.grad_clip
+    );
+    for (name, path) in &m.artifacts {
+        println!("  artifact {name:<11} {path:?}");
+    }
+    Ok(())
+}

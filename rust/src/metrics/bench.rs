@@ -1,0 +1,150 @@
+//! Bench harness (criterion substitute) for the `benches/*.rs` targets.
+//!
+//! Each paper table/figure bench builds a [`BenchReport`], adds named
+//! rows or series, and prints both a human table and a JSON line
+//! (machine-parsable, prefixed `BENCH_JSON:`) so results can be scraped
+//! into EXPERIMENTS.md.
+
+use super::Histogram;
+use crate::util::Json;
+use std::time::Instant;
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: u32, samples: u32, mut f: F) -> Histogram {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed().as_secs_f64());
+    }
+    h
+}
+
+/// Prevent the optimizer from discarding a value (std black_box shim).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A labelled table of results: rows x columns of f64 values.
+pub struct BenchReport {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    pub notes: Vec<String>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) -> &mut Self {
+        let label = label.into();
+        assert_eq!(
+            values.len(),
+            self.columns.len(),
+            "row '{label}' arity mismatch"
+        );
+        self.rows.push((label, values));
+        self
+    }
+
+    pub fn note(&mut self, text: impl Into<String>) -> &mut Self {
+        self.notes.push(text.into());
+        self
+    }
+
+    /// Render and print the table + machine-readable JSON line.
+    pub fn print(&self) {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([8])
+            .max()
+            .unwrap();
+        println!("\n=== {} ===", self.name);
+        print!("{:label_w$}", "");
+        for c in &self.columns {
+            print!("  {c:>14}");
+        }
+        println!();
+        for (label, values) in &self.rows {
+            print!("{label:label_w$}");
+            for v in values {
+                if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.01) {
+                    print!("  {v:>14.3e}");
+                } else {
+                    print!("  {v:>14.3}");
+                }
+            }
+            println!();
+        }
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+        println!("BENCH_JSON: {}", self.to_json().render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::object();
+        obj.set("name", self.name.as_str());
+        obj.set(
+            "columns",
+            Json::Array(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(l, vs)| {
+                let mut r = Json::object();
+                r.set("label", l.as_str());
+                r.set(
+                    "values",
+                    Json::Array(vs.iter().map(|v| Json::Num(*v)).collect()),
+                );
+                r
+            })
+            .collect();
+        obj.set("rows", Json::Array(rows));
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_collects_samples() {
+        let h = time_fn(1, 5, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(h.len(), 5);
+        assert!(h.mean() >= 0.0);
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut r = BenchReport::new("demo", &["a", "b"]);
+        r.row("x", vec![1.0, 2.0]).note("hello");
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("demo"));
+        assert_eq!(j.get("rows").idx(0).get("values").idx(1).as_f64(), Some(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn report_rejects_bad_arity() {
+        let mut r = BenchReport::new("demo", &["a", "b"]);
+        r.row("x", vec![1.0]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Metrics: histograms, stopwatches, counters, and a small bench harness
+//! (criterion substitute) used by `benches/*.rs`.
+
+pub mod bench;
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Streaming histogram over f64 samples. Keeps all samples (experiment
+/// scales here are small) so quantiles are exact.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Exact quantile, q in [0,1], linear interpolation.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            let frac = pos - lo as f64;
+            xs[lo] * (1.0 - frac) + xs[hi] * frac
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Wall-clock stopwatch measuring into a named registry.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// Thread-safe named-metric registry: counters and timing histograms.
+/// One per engine/controller; rendered into experiment reports.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timings: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn time(&self, name: &str, secs: f64) {
+        self.timings
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(secs);
+    }
+
+    pub fn timing(&self, name: &str) -> Histogram {
+        self.timings
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Render all metrics as one human-readable report block.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, h) in self.timings.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.4}s p50={:.4}s p95={:.4}s max={:.4}s\n",
+                h.len(),
+                h.mean(),
+                h.p50(),
+                h.p95(),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_exact() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.p50() - 50.5).abs() < 1e-9);
+        assert!((h.quantile(0.0) - 1.0).abs() < 1e-9);
+        assert!((h.quantile(1.0) - 100.0).abs() < 1e-9);
+        assert!(h.p95() > 90.0 && h.p95() < 100.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_std() {
+        let mut h = Histogram::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            h.record(v);
+        }
+        assert!((h.std() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn registry_counts_and_times() {
+        let r = Registry::new();
+        r.inc("failures");
+        r.add("failures", 2);
+        r.time("restart", 1.0);
+        r.time("restart", 3.0);
+        assert_eq!(r.counter("failures"), 3);
+        assert_eq!(r.counter("unknown"), 0);
+        let t = r.timing("restart");
+        assert_eq!(t.len(), 2);
+        assert!((t.mean() - 2.0).abs() < 1e-9);
+        assert!(r.report().contains("failures: 3"));
+    }
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(sw.elapsed_ms() >= 9.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! The paper's §II recovery-overhead model (eqs. 1–5), plus a
+//! Monte-Carlo failure simulator that validates the closed forms.
+//!
+//! Periodic checkpointing (eq. 1):
+//!   F(t) = m (s0 + t/2) + (d/t) k0
+//! Optimal interval (eq. 3):     t* = sqrt(2 d k0 / m)
+//! Minimum overhead (eq. 4):     F_min = m s0 + sqrt(2 d k0 m)
+//! FlashRecovery (eq. 5):        F = m (s0' + s1'),  k0 = 0, s1' ≈ one
+//! step, s0' scale-independent.
+//!
+//! Time units are arbitrary but must be consistent (we use steps, with
+//! `step_time = 1`; callers can also pass seconds throughout).
+
+use crate::util::Rng;
+
+/// Parameters of the periodic-checkpointing overhead model.
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadParams {
+    /// Fixed training period `d`.
+    pub d: f64,
+    /// Number of failures `m` within `d`.
+    pub m: f64,
+    /// Recovery overhead per failure `s0` (detect + restart + resume).
+    pub s0: f64,
+    /// Snapshot cost `k0` per checkpoint (non-overlapped).
+    pub k0: f64,
+}
+
+impl OverheadParams {
+    /// Eq. (1): total overhead at checkpoint interval `t`.
+    pub fn total_overhead(&self, t: f64) -> f64 {
+        assert!(t > 0.0);
+        self.m * (self.s0 + t / 2.0) + (self.d / t) * self.k0
+    }
+
+    /// Eq. (3): the optimal checkpoint interval t*.
+    pub fn optimal_interval(&self) -> f64 {
+        (2.0 * self.d * self.k0 / self.m).sqrt()
+    }
+
+    /// Eq. (4): minimized overhead F_min.
+    pub fn min_overhead(&self) -> f64 {
+        self.m * self.s0 + (2.0 * self.d * self.k0 * self.m).sqrt()
+    }
+}
+
+/// Eq. (5): FlashRecovery overhead — no checkpointing term, s1' fixed
+/// at (roughly) one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct FlashParams {
+    pub m: f64,
+    /// Scale-independent recovery overhead s0'.
+    pub s0_prime: f64,
+    /// Bounded recomputation s1' (≈ one step).
+    pub s1_prime: f64,
+}
+
+impl FlashParams {
+    pub fn total_overhead(&self) -> f64 {
+        self.m * (self.s0_prime + self.s1_prime)
+    }
+}
+
+/// Result of one Monte-Carlo run.
+#[derive(Debug, Clone, Copy)]
+pub struct McResult {
+    pub mean_overhead: f64,
+    pub mean_failures: f64,
+}
+
+/// Monte-Carlo validation of eq. (1): simulate Poisson failures over a
+/// period `d` with checkpointing every `t`, accumulating detect/restart
+/// overhead `s0` and recompute-to-checkpoint cost per failure.
+///
+/// The simulation measures *pure overhead time* (the training clock and
+/// the failure clock are independent, matching the paper's model where
+/// m is fixed for the period regardless of elongation).
+pub fn monte_carlo_periodic(
+    p: &OverheadParams,
+    t: f64,
+    runs: u32,
+    seed: u64,
+) -> McResult {
+    let mut rng = Rng::new(seed ^ 0x0DE1);
+    let rate = p.m / p.d;
+    let mut total = 0.0;
+    let mut failures = 0.0;
+    for _ in 0..runs {
+        let mut overhead = 0.0;
+        // checkpoint cost paid every t units of training progress
+        overhead += (p.d / t) * p.k0;
+        // failures arrive Poisson(rate) over the period
+        let mut clock = 0.0;
+        loop {
+            clock += rng.exponential(rate);
+            if clock > p.d {
+                break;
+            }
+            failures += 1.0;
+            // progress since the last checkpoint is uniform in [0, t)
+            let lost = rng.f64() * t;
+            overhead += p.s0 + lost;
+        }
+        total += overhead;
+    }
+    McResult {
+        mean_overhead: total / runs as f64,
+        mean_failures: failures / runs as f64,
+    }
+}
+
+/// Monte-Carlo for FlashRecovery (eq. 5): per failure, s0' + s1'.
+pub fn monte_carlo_flash(p: &FlashParams, d: f64, runs: u32, seed: u64) -> McResult {
+    let mut rng = Rng::new(seed ^ 0xF1A5);
+    let rate = p.m / d;
+    let mut total = 0.0;
+    let mut failures = 0.0;
+    for _ in 0..runs {
+        let mut overhead = 0.0;
+        let mut clock = 0.0;
+        loop {
+            clock += rng.exponential(rate);
+            if clock > d {
+                break;
+            }
+            failures += 1.0;
+            overhead += p.s0_prime + p.s1_prime;
+        }
+        total += overhead;
+    }
+    McResult {
+        mean_overhead: total / runs as f64,
+        mean_failures: failures / runs as f64,
+    }
+}
+
+/// Numerically locate the minimizing interval of eq. (1) by golden-
+/// section search (cross-check for the closed-form t*).
+pub fn numeric_optimal_interval(p: &OverheadParams, lo: f64, hi: f64) -> f64 {
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let (mut a, mut b) = (lo, hi);
+    while b - a > 1e-9 * (1.0 + b.abs()) {
+        let c = b - phi * (b - a);
+        let d_ = a + phi * (b - a);
+        if p.total_overhead(c) < p.total_overhead(d_) {
+            b = d_;
+        } else {
+            a = c;
+        }
+    }
+    (a + b) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn params() -> OverheadParams {
+        OverheadParams { d: 100_000.0, m: 20.0, s0: 50.0, k0: 5.0 }
+    }
+
+    #[test]
+    fn closed_form_matches_numeric_optimum() {
+        let p = params();
+        let t_star = p.optimal_interval();
+        let t_num = numeric_optimal_interval(&p, 1.0, 10_000.0);
+        assert!(
+            (t_star - t_num).abs() / t_star < 1e-4,
+            "closed {t_star} vs numeric {t_num}"
+        );
+        // F(t*) equals F_min
+        assert!((p.total_overhead(t_star) - p.min_overhead()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overhead_is_convex_around_optimum() {
+        let p = params();
+        let t = p.optimal_interval();
+        assert!(p.total_overhead(t * 0.5) > p.min_overhead());
+        assert!(p.total_overhead(t * 2.0) > p.min_overhead());
+    }
+
+    #[test]
+    fn paper_observation_1_higher_failure_rate_wants_smaller_interval() {
+        let mut p = params();
+        let t1 = p.optimal_interval();
+        p.m *= 4.0;
+        let t2 = p.optimal_interval();
+        assert!((t2 - t1 / 2.0).abs() < 1e-9); // t* ∝ 1/sqrt(m)
+    }
+
+    #[test]
+    fn paper_observation_2_bigger_k0_wants_larger_interval() {
+        let mut p = params();
+        let t1 = p.optimal_interval();
+        p.k0 *= 4.0;
+        let t2 = p.optimal_interval();
+        assert!((t2 - 2.0 * t1).abs() < 1e-9); // t* ∝ sqrt(k0)
+    }
+
+    #[test]
+    fn monte_carlo_validates_eq1() {
+        let p = params();
+        for t in [200.0, p.optimal_interval(), 2000.0] {
+            let mc = monte_carlo_periodic(&p, t, 400, 7);
+            let analytic = p.total_overhead(t);
+            let rel = (mc.mean_overhead - analytic).abs() / analytic;
+            assert!(
+                rel < 0.05,
+                "t={t}: mc {} vs analytic {analytic} (rel {rel})",
+                mc.mean_overhead
+            );
+            assert!((mc.mean_failures - p.m).abs() < 2.0);
+        }
+    }
+
+    #[test]
+    fn monte_carlo_validates_eq5() {
+        let f = FlashParams { m: 20.0, s0_prime: 90.0, s1_prime: 5.0 };
+        let mc = monte_carlo_flash(&f, 100_000.0, 400, 11);
+        let analytic = f.total_overhead();
+        let rel = (mc.mean_overhead - analytic).abs() / analytic;
+        assert!(rel < 0.05, "mc {} vs analytic {analytic}", mc.mean_overhead);
+    }
+
+    #[test]
+    fn flash_beats_optimal_checkpointing_when_k0_positive() {
+        // With the same s0 and one-step recompute, FlashRecovery's
+        // overhead is below F_min for every k0 > 0 (the paper's core
+        // claim: optimal RPO+RTO simultaneously).
+        let p = params();
+        let f = FlashParams { m: p.m, s0_prime: p.s0, s1_prime: 1.0 };
+        assert!(f.total_overhead() < p.min_overhead());
+    }
+
+    #[test]
+    fn prop_flash_dominates_for_all_params() {
+        prop::check("flash <= optimal periodic", 300, |rng| {
+            let d = rng.range_f64(1e3, 1e6);
+            let m = rng.range_f64(1.0, 100.0);
+            let s0 = rng.range_f64(10.0, 2000.0);
+            let k0 = rng.range_f64(0.1, 100.0);
+            let p = OverheadParams { d, m, s0, k0 };
+            let f = FlashParams { m, s0_prime: s0, s1_prime: 1.0 };
+            // F_min - F_flash = sqrt(2 d k0 m) - m * s1' ; flash wins
+            // whenever the checkpoint term exceeds one step per failure.
+            let wins = f.total_overhead() <= p.min_overhead();
+            let expected = (2.0 * d * k0 * m).sqrt() >= m * 1.0;
+            prop::assert_eq_prop(&wins, &expected)
+        });
+    }
+
+    #[test]
+    fn stability_example_from_paper() {
+        // §II: (1-0.001)^100 ≈ 0.90479 and (1-0.0001)^1000 ≈ 0.90483 —
+        // device-reliability gains cancel at scale.
+        let p100 = (1.0f64 - 0.001).powi(100);
+        let p1000 = (1.0f64 - 0.0001).powi(1000);
+        assert!((p100 - 0.90479).abs() < 1e-4);
+        assert!((p1000 - 0.90483).abs() < 1e-4);
+        assert!((p100 - p1000).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,193 @@
+//! The artifact manifest — the interop contract between the build-time
+//! Python (L1/L2) and the Rust runtime (L3).
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing,
+//! per model size: the model dimensions, the canonical parameter list
+//! (name + shape, in positional order), the optimizer constants baked
+//! into `opt_step`, and the artifact filenames.
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    /// Per-DP-rank micro-batch lowered into the artifact.
+    pub batch: usize,
+    pub param_count: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AdamSpec {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub grad_clip: f64,
+}
+
+/// Manifest entry for one model size.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub dims: ModelDims,
+    pub params: Vec<ParamSpec>,
+    pub optimizer: AdamSpec,
+    /// artifact name ("init" | "fwd_bwd" | "opt_step" | "train_step")
+    /// -> absolute file path.
+    pub artifacts: std::collections::BTreeMap<String, PathBuf>,
+}
+
+impl ModelManifest {
+    /// Total f32 elements across all parameters.
+    pub fn total_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    /// Bytes of one full model-state copy (params + m + v, f32).
+    pub fn state_bytes(&self) -> usize {
+        self.total_elements() * 4 * 3
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&PathBuf> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} missing from manifest"))
+    }
+}
+
+/// Load one model size's manifest entry from `artifacts/manifest.json`.
+pub fn load_manifest(artifacts_dir: &Path, size: &str) -> Result<ModelManifest> {
+    let path = artifacts_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+    let root = Json::parse(&text).context("parsing manifest.json")?;
+    let entry = root.get("models").get(size);
+    if entry.is_null() {
+        bail!("model size {size:?} not in manifest — run `make artifacts`");
+    }
+
+    let c = entry.get("config");
+    let req = |field: &str| -> Result<usize> {
+        c.get(field)
+            .as_usize()
+            .with_context(|| format!("manifest config field {field:?}"))
+    };
+    let dims = ModelDims {
+        name: size.to_string(),
+        n_layers: req("n_layers")?,
+        d_model: req("d_model")?,
+        n_heads: req("n_heads")?,
+        d_ff: req("d_ff")?,
+        vocab: req("vocab")?,
+        seq: req("seq")?,
+        batch: req("batch")?,
+        param_count: c.get("param_count").as_i64().unwrap_or(0) as u64,
+    };
+
+    let params = entry
+        .get("params")
+        .as_array()
+        .context("manifest params")?
+        .iter()
+        .map(|p| -> Result<ParamSpec> {
+            Ok(ParamSpec {
+                name: p.get("name").as_str().context("param name")?.to_string(),
+                shape: p
+                    .get("shape")
+                    .as_array()
+                    .context("param shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let o = entry.get("optimizer");
+    let optimizer = AdamSpec {
+        lr: o.get("lr").as_f64().unwrap_or(3e-4),
+        beta1: o.get("beta1").as_f64().unwrap_or(0.9),
+        beta2: o.get("beta2").as_f64().unwrap_or(0.999),
+        eps: o.get("eps").as_f64().unwrap_or(1e-8),
+        grad_clip: o.get("grad_clip").as_f64().unwrap_or(1.0),
+    };
+
+    let mut artifacts = std::collections::BTreeMap::new();
+    if let Some(map) = entry.get("artifacts").as_object() {
+        for (name, a) in map {
+            let file = a.get("file").as_str().context("artifact file")?;
+            artifacts.insert(name.clone(), artifacts_dir.join(file));
+        }
+    }
+    for required in ["init", "fwd_bwd", "opt_step", "train_step"] {
+        let p = artifacts
+            .get(required)
+            .with_context(|| format!("manifest missing artifact {required:?}"))?;
+        if !p.is_file() {
+            bail!("artifact file {p:?} does not exist — run `make artifacts`");
+        }
+    }
+
+    // Sanity: parameter count from shapes must match the recorded total.
+    let total: u64 = params.iter().map(|p| p.elements() as u64).sum();
+    if dims.param_count != 0 && total != dims.param_count {
+        bail!(
+            "manifest param_count {} != sum of shapes {}",
+            dims.param_count,
+            total
+        );
+    }
+
+    Ok(ModelManifest { dims, params, optimizer, artifacts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let dir = artifacts_dir().expect("run `make artifacts` first");
+        let m = load_manifest(&dir, "tiny").unwrap();
+        assert_eq!(m.dims.n_layers, 2);
+        assert_eq!(m.dims.vocab, 256);
+        assert_eq!(m.params.len(), 3 + 8 * m.dims.n_layers);
+        assert_eq!(m.params[0].name, "embed");
+        assert_eq!(m.params[0].shape, vec![256, 64]);
+        assert_eq!(m.total_elements() as u64, m.dims.param_count);
+        assert!(m.artifact("fwd_bwd").unwrap().is_file());
+    }
+
+    #[test]
+    fn unknown_size_errors() {
+        let dir = artifacts_dir().expect("run `make artifacts` first");
+        assert!(load_manifest(&dir, "huge").is_err());
+    }
+
+    #[test]
+    fn state_bytes_is_three_copies() {
+        let dir = artifacts_dir().expect("run `make artifacts` first");
+        let m = load_manifest(&dir, "tiny").unwrap();
+        assert_eq!(m.state_bytes(), m.total_elements() * 12);
+    }
+}

@@ -1,0 +1,401 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. Pattern (see
+//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod manifest;
+
+pub use manifest::{load_manifest, AdamSpec, ModelDims, ModelManifest, ParamSpec};
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Global serialization lock for PJRT client operations.
+///
+/// The `xla` crate's `PjRtClient` is `Rc`-based and `execute()` clones
+/// that Rc into every output buffer, so concurrent compile/execute/drop
+/// across threads would race the non-atomic refcount. All such calls go
+/// through this lock. (Pure `Literal` host objects carry no client
+/// reference and need no locking.) On this single-core testbed the
+/// serialization costs nothing.
+fn xla_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Thin wrapper over the PJRT CPU client. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+// SAFETY: every client-touching operation goes through `xla_lock()`,
+// so the inner Rc refcount is never mutated concurrently.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let _g = xla_lock();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe: Arc::new(exe) })
+    }
+}
+
+/// A compiled computation. All artifacts are lowered with
+/// `return_tuple=True`, so execution returns a single tuple literal
+/// that [`Executable::run`] decomposes.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: `run` (the only client-touching method) holds `xla_lock()`
+// for its whole extent, including the drop of intermediate buffers that
+// clone the client Rc. The final drop of the executable happens after
+// worker threads are joined (ModelBundle lives in an Arc owned by the
+// controller).
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with borrowed inputs — the hot path. Avoids deep-copying
+    /// parameter/moment literals every step (§Perf optimization 1).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let _g = xla_lock();
+        let results = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = results[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// All four executables for one model size, plus its manifest.
+pub struct ModelBundle {
+    pub manifest: ModelManifest,
+    pub init: Executable,
+    pub fwd_bwd: Executable,
+    pub opt_step: Executable,
+    pub train_step: Executable,
+}
+
+impl ModelBundle {
+    /// Load and compile every artifact for `size` from `artifacts_dir`.
+    pub fn load(rt: &Runtime, artifacts_dir: &Path, size: &str) -> Result<Self> {
+        let manifest = load_manifest(artifacts_dir, size)?;
+        let compile = |name: &str| -> Result<Executable> {
+            rt.compile_hlo_text(manifest.artifact(name)?)
+        };
+        Ok(ModelBundle {
+            init: compile("init")?,
+            fwd_bwd: compile("fwd_bwd")?,
+            opt_step: compile("opt_step")?,
+            train_step: compile("train_step")?,
+            manifest,
+        })
+    }
+
+    /// Initialise parameters on-device from an i32 seed.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<xla::Literal>> {
+        let out = self.init.run(&[xla::Literal::scalar(seed)])?;
+        if out.len() != self.manifest.params.len() {
+            bail!(
+                "init returned {} tensors, manifest expects {}",
+                out.len(),
+                self.manifest.params.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Zero-filled optimizer moments matching the parameter shapes.
+    pub fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
+        self.manifest
+            .params
+            .iter()
+            .map(|p| {
+                let data = vec![0f32; p.elements()];
+                literal_f32(&p.shape, &data)
+            })
+            .collect()
+    }
+
+    /// `(loss, grads)` for one micro-batch: the pre-barrier phase.
+    pub fn run_fwd_bwd(
+        &self,
+        params: &[xla::Literal],
+        tokens: &xla::Literal,
+    ) -> Result<(f32, Vec<xla::Literal>)> {
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 1);
+        inputs.extend(params.iter());
+        inputs.push(tokens);
+        let mut out = self.fwd_bwd.run_refs(&inputs)?;
+        if out.len() != params.len() + 1 {
+            bail!("fwd_bwd returned {} tensors", out.len());
+        }
+        let loss = out.remove(0).get_first_element::<f32>()?;
+        Ok((loss, out))
+    }
+
+    /// Adam update with *already-allreduced* grads: post-barrier phase.
+    /// Returns (params', m', v').
+    #[allow(clippy::type_complexity)]
+    pub fn run_opt_step(
+        &self,
+        params: &[xla::Literal],
+        m: &[xla::Literal],
+        v: &[xla::Literal],
+        step: f32,
+        grads: &[xla::Literal],
+    ) -> Result<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let n = params.len();
+        let step_lit = xla::Literal::scalar(step);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(4 * n + 1);
+        for group in [params, m, v] {
+            inputs.extend(group.iter());
+        }
+        inputs.push(&step_lit);
+        inputs.extend(grads.iter());
+        let mut out = self.opt_step.run_refs(&inputs)?;
+        if out.len() != 3 * n {
+            bail!("opt_step returned {} tensors, expected {}", out.len(), 3 * n);
+        }
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        Ok((out, new_m, new_v))
+    }
+
+    /// Fused single-device step. Returns (loss, params', m', v').
+    #[allow(clippy::type_complexity)]
+    pub fn run_train_step(
+        &self,
+        params: &[xla::Literal],
+        m: &[xla::Literal],
+        v: &[xla::Literal],
+        step: f32,
+        tokens: &xla::Literal,
+    ) -> Result<(f32, Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let n = params.len();
+        let step_lit = xla::Literal::scalar(step);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 2);
+        for group in [params, m, v] {
+            inputs.extend(group.iter());
+        }
+        inputs.push(&step_lit);
+        inputs.push(tokens);
+        let mut out = self.train_step.run_refs(&inputs)?;
+        if out.len() != 3 * n + 1 {
+            bail!("train_step returned {} tensors", out.len());
+        }
+        let loss = out.remove(0).get_first_element::<f32>()?;
+        let new_v = out.split_off(2 * n);
+        let new_m = out.split_off(n);
+        Ok((loss, out, new_m, new_v))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        bail!("shape {shape:?} wants {expected} elements, got {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 token literal of shape [batch, seq+1].
+pub fn literal_tokens(batch: usize, seq_plus_1: usize, data: &[i32]) -> Result<xla::Literal> {
+    if data.len() != batch * seq_plus_1 {
+        bail!("tokens want {} elements, got {}", batch * seq_plus_1, data.len());
+    }
+    Ok(xla::Literal::vec1(data).reshape(&[batch as i64, seq_plus_1 as i64])?)
+}
+
+/// Deep-copy a literal (the xla crate's Literal is not Clone; we copy
+/// through the raw host buffer).
+pub fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+    use xla::ElementType::*;
+    match lit.ty()? {
+        F32 => {
+            let data = lit.to_vec::<f32>()?;
+            let shape = lit.array_shape()?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+        }
+        S32 => {
+            let data = lit.to_vec::<i32>()?;
+            let shape = lit.array_shape()?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+        }
+        other => bail!("clone_literal: unsupported element type {other:?}"),
+    }
+}
+
+/// Extract an f32 literal's host data.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::artifacts_dir;
+
+    fn bundle() -> ModelBundle {
+        let rt = Runtime::cpu().unwrap();
+        let dir = artifacts_dir().expect("run `make artifacts` first");
+        ModelBundle::load(&rt, &dir, "tiny").unwrap()
+    }
+
+    fn tokens_for(m: &ModelManifest, seed: u64) -> xla::Literal {
+        let mut rng = crate::util::Rng::new(seed);
+        let n = m.dims.batch * (m.dims.seq + 1);
+        let data: Vec<i32> = (0..n)
+            .map(|_| rng.below(m.dims.vocab as u64) as i32)
+            .collect();
+        literal_tokens(m.dims.batch, m.dims.seq + 1, &data).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let b = bundle();
+        let p1 = b.init_params(0).unwrap();
+        let p2 = b.init_params(0).unwrap();
+        assert_eq!(p1.len(), b.manifest.params.len());
+        for (i, spec) in b.manifest.params.iter().enumerate() {
+            let got = p1[i].array_shape().unwrap();
+            let want: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+            assert_eq!(got.dims(), &want[..], "{}", spec.name);
+            assert_eq!(
+                to_f32_vec(&p1[i]).unwrap(),
+                to_f32_vec(&p2[i]).unwrap(),
+                "{} not deterministic",
+                spec.name
+            );
+        }
+        let p3 = b.init_params(1).unwrap();
+        // embed must differ across seeds
+        assert_ne!(to_f32_vec(&p1[0]).unwrap(), to_f32_vec(&p3[0]).unwrap());
+    }
+
+    #[test]
+    fn fwd_bwd_loss_near_uniform_and_grads_finite() {
+        let b = bundle();
+        let params = b.init_params(0).unwrap();
+        let tokens = tokens_for(&b.manifest, 7);
+        let (loss, grads) = b.run_fwd_bwd(&params, &tokens).unwrap();
+        let uniform = (b.manifest.dims.vocab as f32).ln();
+        assert!((loss - uniform).abs() < 0.7, "loss {loss} vs ln(V)={uniform}");
+        assert_eq!(grads.len(), params.len());
+        for g in &grads {
+            assert!(to_f32_vec(g).unwrap().iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn split_step_equals_fused_step() {
+        let b = bundle();
+        let params = b.init_params(3).unwrap();
+        let m = b.zeros_like_params().unwrap();
+        let v = b.zeros_like_params().unwrap();
+        let tokens = tokens_for(&b.manifest, 11);
+
+        // fused
+        let (loss_f, pf, mf, vf) = b
+            .run_train_step(&params, &m, &v, 1.0, &tokens)
+            .unwrap();
+        // split: fwd_bwd then opt_step (single rank, no allreduce)
+        let (loss_s, grads) = b.run_fwd_bwd(&params, &tokens).unwrap();
+        let (ps, ms, vs) = b.run_opt_step(&params, &m, &v, 1.0, &grads).unwrap();
+
+        assert!((loss_f - loss_s).abs() < 1e-6);
+        for ((a, b_), name) in pf.iter().zip(ps.iter()).zip(
+            b.manifest.params.iter().map(|p| &p.name),
+        ) {
+            let av = to_f32_vec(a).unwrap();
+            let bv = to_f32_vec(b_).unwrap();
+            let max_err = av
+                .iter()
+                .zip(bv.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 1e-6, "{name}: {max_err}");
+        }
+        // moments too
+        for (a, b_) in mf.iter().zip(ms.iter()).chain(vf.iter().zip(vs.iter())) {
+            assert_eq!(to_f32_vec(a).unwrap(), to_f32_vec(b_).unwrap());
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_batch() {
+        let b = bundle();
+        let mut params = b.init_params(0).unwrap();
+        let mut m = b.zeros_like_params().unwrap();
+        let mut v = b.zeros_like_params().unwrap();
+        let tokens = tokens_for(&b.manifest, 5);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=15 {
+            let (loss, p2, m2, v2) = b
+                .run_train_step(&params, &m, &v, step as f32, &tokens)
+                .unwrap();
+            params = p2;
+            m = m2;
+            v = v2;
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(
+            last < first.unwrap() - 0.3,
+            "loss did not drop: {} -> {last}",
+            first.unwrap()
+        );
+    }
+
+    #[test]
+    fn literal_helpers_validate_shapes() {
+        assert!(literal_f32(&[2, 3], &[0.0; 6]).is_ok());
+        assert!(literal_f32(&[2, 3], &[0.0; 5]).is_err());
+        assert!(literal_tokens(2, 33, &vec![0; 66]).is_ok());
+        assert!(literal_tokens(2, 33, &vec![0; 65]).is_err());
+    }
+
+    #[test]
+    fn clone_literal_roundtrips() {
+        let lit = literal_f32(&[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = clone_literal(&lit).unwrap();
+        assert_eq!(to_f32_vec(&c).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Public training-engine facade: load a model bundle once, then run
+//! data-parallel training jobs under the FlashRecovery controller (or
+//! the vanilla baseline) with scripted failure injection.
+
+use crate::coordinator::{Controller, ControllerConfig, RunReport};
+use crate::runtime::{ModelBundle, Runtime};
+use crate::util::artifacts_dir;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A loaded model + PJRT runtime, reusable across runs (compilation is
+/// the expensive part; the bundle is shared by every worker thread).
+pub struct TrainingEngine {
+    pub runtime: Runtime,
+    pub bundle: Arc<ModelBundle>,
+}
+
+impl TrainingEngine {
+    /// Load `size` ("tiny" | "small" | "base") from the repo's
+    /// artifacts directory.
+    pub fn load(size: &str) -> Result<Self> {
+        let dir = artifacts_dir()
+            .context("artifacts/ not found — run `make artifacts`")?;
+        Self::load_from(size, dir)
+    }
+
+    pub fn load_from(size: &str, dir: PathBuf) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let bundle = Arc::new(ModelBundle::load(&runtime, &dir, size)?);
+        Ok(TrainingEngine { runtime, bundle })
+    }
+
+    /// Run one training job to completion (including any recoveries).
+    pub fn run(&self, cfg: ControllerConfig) -> Result<RunReport> {
+        Controller::new(self.bundle.clone(), cfg)?.run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::failure::FailureKind;
+    use crate::config::RecoveryMode;
+    use crate::training::worker::{FailurePlan, Phase};
+    use crate::util::temp_dir;
+    use std::time::Duration;
+
+    fn engine() -> TrainingEngine {
+        TrainingEngine::load("tiny").expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn failure_free_run_converges_and_stays_consistent() {
+        let e = engine();
+        let report = e.run(ControllerConfig::flash(2, 12)).unwrap();
+        assert_eq!(report.final_step, 12);
+        assert!(report.recoveries.is_empty());
+        assert_eq!(report.final_param_divergence, 0.0, "DP ranks diverged");
+        let first = report.losses.first().unwrap().1;
+        let last = report.losses.last().unwrap().1;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+        assert_eq!(report.losses.len(), 12);
+    }
+
+    #[test]
+    fn flash_recovers_from_fwd_bwd_failure_at_step_i() {
+        let e = engine();
+        let mut cfg = ControllerConfig::flash(3, 10);
+        cfg.failures = vec![FailurePlan {
+            rank: 1,
+            step: 4,
+            phase: Phase::FwdBwd,
+            kind: FailureKind::Segfault,
+        }];
+        let report = e.run(cfg).unwrap();
+        assert_eq!(report.final_step, 10);
+        assert_eq!(report.recoveries.len(), 1);
+        let r = &report.recoveries[0];
+        assert_eq!(r.mode, RecoveryMode::Flash);
+        assert_eq!(r.failed_ranks, vec![1]);
+        // fwd/bwd failure: resume from step i == 4
+        assert_eq!(r.resume_step, 4);
+        assert_eq!(r.lost_steps, 0);
+        assert!(!r.via_device_plugin); // software death -> monitor path
+        assert_eq!(report.final_param_divergence, 0.0);
+        // all 10 steps present in the loss curve
+        assert_eq!(report.losses.len(), 10);
+    }
+
+    #[test]
+    fn flash_recovers_from_optimizer_failure_at_step_i_plus_1() {
+        let e = engine();
+        let mut cfg = ControllerConfig::flash(2, 9);
+        cfg.failures = vec![FailurePlan {
+            rank: 0,
+            step: 5,
+            phase: Phase::OptStep,
+            kind: FailureKind::Network,
+        }];
+        let report = e.run(cfg).unwrap();
+        assert_eq!(report.final_step, 9);
+        assert_eq!(report.recoveries.len(), 1);
+        let r = &report.recoveries[0];
+        // optimizer failure: survivors finished the update -> resume i+1
+        assert_eq!(r.resume_step, 6);
+        assert_eq!(r.lost_steps, 0);
+        assert!(r.via_device_plugin); // hardware kind -> plugin path
+        assert_eq!(report.final_param_divergence, 0.0);
+    }
+
+    #[test]
+    fn flash_detection_is_fast() {
+        let e = engine();
+        let mut cfg = ControllerConfig::flash(2, 8);
+        cfg.heartbeat_interval = Duration::from_millis(50);
+        cfg.failures = vec![FailurePlan {
+            rank: 1,
+            step: 3,
+            phase: Phase::FwdBwd,
+            kind: FailureKind::DeviceMemory,
+        }];
+        let report = e.run(cfg).unwrap();
+        let r = &report.recoveries[0];
+        // device-plugin path: noticed within a few heartbeat periods
+        assert!(r.detection_s < 1.0, "detection took {}s", r.detection_s);
+    }
+
+    #[test]
+    fn vanilla_recovers_from_checkpoint_with_lost_steps() {
+        let e = engine();
+        let dir = temp_dir("vanilla-e2e").unwrap();
+        let mut cfg = ControllerConfig::vanilla(
+            2,
+            10,
+            3,                               // checkpoint every 3 steps
+            Duration::from_millis(500),      // scaled-down 1800 s timeout
+        );
+        cfg.ckpt_dir = dir.clone();
+        cfg.failures = vec![FailurePlan {
+            rank: 1,
+            step: 7,
+            phase: Phase::FwdBwd,
+            kind: FailureKind::Segfault,
+        }];
+        let report = e.run(cfg).unwrap();
+        assert_eq!(report.final_step, 10);
+        assert_eq!(report.recoveries.len(), 1);
+        let r = &report.recoveries[0];
+        assert_eq!(r.mode, RecoveryMode::Vanilla);
+        // rolled back to the step-6 checkpoint, losing step 7's prefix
+        assert_eq!(r.resume_step, 6);
+        assert_eq!(r.failed_at_step, 7);
+        assert_eq!(r.lost_steps, 1);
+        // detection took at least the collective timeout
+        assert!(r.detection_s >= 0.4, "detection {}s", r.detection_s);
+        assert!(report.checkpoints_taken >= 2);
+        assert_eq!(report.final_param_divergence, 0.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn flash_loss_curve_is_continuous_across_recovery() {
+        // The recovered run must produce the same loss trajectory as a
+        // failure-free run: checkpoint-free recovery loses nothing.
+        let e = engine();
+        let clean = e.run(ControllerConfig::flash(2, 8)).unwrap();
+        let mut cfg = ControllerConfig::flash(2, 8);
+        cfg.failures = vec![FailurePlan {
+            rank: 1,
+            step: 4,
+            phase: Phase::FwdBwd,
+            kind: FailureKind::Segfault,
+        }];
+        let recovered = e.run(cfg).unwrap();
+        assert_eq!(clean.losses.len(), recovered.losses.len());
+        for ((s1, l1), (s2, l2)) in clean.losses.iter().zip(recovered.losses.iter()) {
+            assert_eq!(s1, s2);
+            assert!(
+                (l1 - l2).abs() < 1e-5,
+                "step {s1}: clean {l1} vs recovered {l2}"
+            );
+        }
+    }
+}

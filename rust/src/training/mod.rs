@@ -1,0 +1,12 @@
+//! The real training plane: data pipeline, per-rank model state, DP
+//! worker threads executing AOT PJRT artifacts, and the engine facade.
+
+pub mod data;
+pub mod engine;
+pub mod state;
+pub mod worker;
+
+pub use data::{DataConfig, DataIterator};
+pub use engine::TrainingEngine;
+pub use state::WorkerState;
+pub use worker::{FailurePlan, MonitorBoard, Phase, WorkerCommand, WorkerEvent};

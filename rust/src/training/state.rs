@@ -1,0 +1,164 @@
+//! Per-rank model state: parameters + Adam moments as device literals,
+//! with host-side conversion for checkpointing and replica transfer.
+
+use crate::checkpoint::Snapshot;
+use crate::runtime::{literal_f32, to_f32_vec, ModelBundle};
+use anyhow::{bail, Result};
+
+/// One training rank's complete model state. `step` counts completed
+/// optimizer updates: state at `step = i` is "the parameters of the
+/// i-th step" in the paper's terms.
+pub struct WorkerState {
+    pub step: u64,
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+}
+
+// SAFETY: `xla::Literal` is an exclusively-owned host-memory object
+// with no reference to the (non-thread-safe, Rc-based) PJRT client;
+// moving a WorkerState into a worker thread transfers sole ownership.
+unsafe impl Send for WorkerState {}
+
+impl WorkerState {
+    /// Fresh state from the on-device initializer.
+    pub fn init(bundle: &ModelBundle, seed: i32) -> Result<Self> {
+        Ok(WorkerState {
+            step: 0,
+            params: bundle.init_params(seed)?,
+            m: bundle.zeros_like_params()?,
+            v: bundle.zeros_like_params()?,
+        })
+    }
+
+    /// Serialize to a host snapshot (k0 / replica-broadcast payload):
+    /// params ++ m ++ v in manifest order.
+    pub fn to_snapshot(&self) -> Result<Snapshot> {
+        let mut tensors = Vec::with_capacity(3 * self.params.len());
+        for group in [&self.params, &self.m, &self.v] {
+            for lit in group.iter() {
+                tensors.push(to_f32_vec(lit)?);
+            }
+        }
+        Ok(Snapshot { step: self.step, tensors })
+    }
+
+    /// Rebuild device state from a snapshot.
+    pub fn from_snapshot(bundle: &ModelBundle, snap: &Snapshot) -> Result<Self> {
+        let n = bundle.manifest.params.len();
+        if snap.tensors.len() != 3 * n {
+            bail!(
+                "snapshot has {} tensors, model wants {}",
+                snap.tensors.len(),
+                3 * n
+            );
+        }
+        let build = |range: std::ops::Range<usize>| -> Result<Vec<xla::Literal>> {
+            range
+                .map(|i| {
+                    let spec = &bundle.manifest.params[i % n];
+                    if snap.tensors[i].len() != spec.elements() {
+                        bail!(
+                            "tensor {i} has {} elements, spec {} wants {}",
+                            snap.tensors[i].len(),
+                            spec.name,
+                            spec.elements()
+                        );
+                    }
+                    literal_f32(&spec.shape, &snap.tensors[i])
+                })
+                .collect()
+        };
+        Ok(WorkerState {
+            step: snap.step,
+            params: build(0..n)?,
+            m: build(n..2 * n)?,
+            v: build(2 * n..3 * n)?,
+        })
+    }
+
+    /// FNV-1a hash over the exact parameter bits + step. Equal hashes
+    /// across DP ranks == bitwise-consistent replicas (the invariant
+    /// checkpoint-free recovery must preserve).
+    pub fn param_hash(&self) -> Result<u64> {
+        let mut hash = 0xcbf2_9ce4_8422_2325u64;
+        let feed = |bytes: &[u8], hash: &mut u64| {
+            for b in bytes {
+                *hash ^= *b as u64;
+                *hash = hash.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        feed(&self.step.to_le_bytes(), &mut hash);
+        for lit in &self.params {
+            for x in to_f32_vec(lit)? {
+                feed(&x.to_le_bytes(), &mut hash);
+            }
+        }
+        Ok(hash)
+    }
+
+    /// Max |a - b| over all parameters (DP-consistency checks).
+    pub fn max_param_diff(&self, other: &WorkerState) -> Result<f32> {
+        let mut max = 0.0f32;
+        for (a, b) in self.params.iter().zip(other.params.iter()) {
+            let av = to_f32_vec(a)?;
+            let bv = to_f32_vec(b)?;
+            for (x, y) in av.iter().zip(bv.iter()) {
+                max = max.max((x - y).abs());
+            }
+        }
+        Ok(max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::artifacts_dir;
+
+    fn bundle() -> ModelBundle {
+        let rt = Runtime::cpu().unwrap();
+        ModelBundle::load(&rt, &artifacts_dir().unwrap(), "tiny").unwrap()
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_exact() {
+        let b = bundle();
+        let mut s = WorkerState::init(&b, 5).unwrap();
+        s.step = 9;
+        let snap = s.to_snapshot().unwrap();
+        assert_eq!(snap.step, 9);
+        assert_eq!(snap.tensors.len(), 3 * b.manifest.params.len());
+        let back = WorkerState::from_snapshot(&b, &snap).unwrap();
+        assert_eq!(back.step, 9);
+        assert_eq!(s.max_param_diff(&back).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn from_snapshot_rejects_wrong_arity() {
+        let b = bundle();
+        let s = WorkerState::init(&b, 0).unwrap();
+        let mut snap = s.to_snapshot().unwrap();
+        snap.tensors.pop();
+        assert!(WorkerState::from_snapshot(&b, &snap).is_err());
+    }
+
+    #[test]
+    fn from_snapshot_rejects_wrong_shape() {
+        let b = bundle();
+        let s = WorkerState::init(&b, 0).unwrap();
+        let mut snap = s.to_snapshot().unwrap();
+        snap.tensors[0].pop();
+        assert!(WorkerState::from_snapshot(&b, &snap).is_err());
+    }
+
+    #[test]
+    fn max_param_diff_detects_divergence() {
+        let b = bundle();
+        let a = WorkerState::init(&b, 0).unwrap();
+        let c = WorkerState::init(&b, 1).unwrap();
+        assert!(a.max_param_diff(&c).unwrap() > 0.0);
+        assert_eq!(a.max_param_diff(&a).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,408 @@
+//! DP worker threads: each simulated device runs real training steps
+//! through the AOT-compiled PJRT executables.
+//!
+//! The step structure implements the paper's §III-E protocol exactly:
+//!
+//! ```text
+//! tag = i          # beginning of forward (step-tag rule 1)
+//! loss, grads = fwd_bwd(params_i, batch_i)          # PJRT execute
+//! grads = allreduce_mean(grads)   # gradient sync == the barrier
+//! tag = -1         # beginning of optimizer step (rule 4)
+//! params_{i+1} = opt_step(params_i, grads)          # PJRT execute
+//! tag = i + 1      # optimizer complete (rule 5)
+//! ```
+//!
+//! Failure injection simulates *process death*: the thread simply stops
+//! — no unwind, no poison — so peers block in the allreduce exactly as
+//! a real NCCL/HCCL rank loss manifests. A monitoring board (atomic
+//! flags shared with the controller) plays the role of the paper's
+//! per-process monitor + per-node device plugin.
+
+use super::data::DataIterator;
+use super::state::WorkerState;
+use crate::checkpoint::{decode_snapshot, encode_snapshot, CheckpointManager};
+use crate::cluster::failure::{FailureCategory, FailureKind};
+use crate::comms::{Collective, CollectiveError};
+use crate::runtime::{literal_tokens, ModelBundle};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Step tag value while the optimizer is executing (paper rule 4).
+pub const TAG_OPTIMIZER: i64 = -1;
+
+/// Where in the step a planned failure strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// During forward/backward — before the gradient barrier.
+    FwdBwd,
+    /// During the optimizer step — after the barrier.
+    OptStep,
+}
+
+/// A scripted failure for experiments: rank `rank` dies at step `step`
+/// in phase `phase`, presenting as failure kind `kind`.
+#[derive(Debug, Clone, Copy)]
+pub struct FailurePlan {
+    pub rank: usize,
+    pub step: u64,
+    pub phase: Phase,
+    pub kind: FailureKind,
+}
+
+/// Controller -> worker commands.
+pub enum WorkerCommand {
+    /// Resume training from `resume_step` (state must already match).
+    Continue { resume_step: u64 },
+    /// Act as the replica source: broadcast full state on `group`.
+    ServeState { group: Arc<Collective> },
+    /// Receive full state from the replica source on `group`.
+    RestoreState { group: Arc<Collective> },
+    /// Exit cleanly.
+    Stop,
+}
+
+/// Worker -> controller events.
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// One optimizer step completed.
+    Loss { rank: usize, step: u64, loss: f32 },
+    /// The worker hit a collective error and is awaiting instructions.
+    Parked { rank: usize, state_step: u64, err: CollectiveError },
+    /// Clean exit (Stop or max_steps reached). `param_hash` fingerprints
+    /// the exact final parameter bits for DP-consistency checks.
+    Stopped { rank: usize, state_step: u64, param_hash: u64 },
+    /// A periodic checkpoint was taken (vanilla baseline).
+    CheckpointTaken { rank: usize, step: u64, k0_s: f64 },
+}
+
+/// Shared monitoring state — the paper's monitoring process (liveness +
+/// step tag) and device plugin (hardware error code) in one board the
+/// controller polls every heartbeat interval.
+pub struct MonitorBoard {
+    pub alive: AtomicBool,
+    /// Milliseconds since the global epoch at which an injected failure
+    /// struck (ground truth for detection-latency measurement); 0 = n/a.
+    pub death_at_ms: std::sync::atomic::AtomicU64,
+    /// Paper step tag: i (fwd/bwd of step i), -1 (optimizer), i+1 (done).
+    pub step_tag: AtomicI64,
+    /// Device-plugin hardware error report: -1 = none, else a
+    /// [`FailureKind`] discriminant (hardware kinds only).
+    pub device_error: AtomicI64,
+}
+
+impl MonitorBoard {
+    pub fn new() -> Arc<Self> {
+        Arc::new(MonitorBoard {
+            alive: AtomicBool::new(true),
+            death_at_ms: std::sync::atomic::AtomicU64::new(0),
+            step_tag: AtomicI64::new(0),
+            device_error: AtomicI64::new(-1),
+        })
+    }
+}
+
+fn kind_code(kind: FailureKind) -> i64 {
+    FailureKind::all().iter().position(|k| *k == kind).unwrap() as i64
+}
+
+pub fn kind_from_code(code: i64) -> Option<FailureKind> {
+    FailureKind::all().get(code as usize).copied()
+}
+
+/// Everything a worker thread needs.
+pub struct WorkerCtx {
+    pub rank: usize,
+    pub bundle: Arc<ModelBundle>,
+    pub data: DataIterator,
+    pub collective: Arc<Collective>,
+    pub cmd_rx: Receiver<WorkerCommand>,
+    pub event_tx: Sender<WorkerEvent>,
+    pub board: Arc<MonitorBoard>,
+    pub failure: Option<FailurePlan>,
+    /// Periodic checkpointing (vanilla baseline); rank 0 writes.
+    pub ckpt: Option<CheckpointManager>,
+    pub ckpt_interval: u64,
+    pub state: WorkerState,
+    pub max_steps: u64,
+    /// Replacement workers start parked, awaiting RestoreState.
+    pub start_parked: bool,
+}
+
+enum Disposition {
+    KeepRunning,
+    Exit,
+}
+
+/// Worker thread entry point.
+pub fn worker_main(mut ctx: WorkerCtx) {
+    struct AliveGuard(Arc<MonitorBoard>);
+    impl Drop for AliveGuard {
+        fn drop(&mut self) {
+            self.0.alive.store(false, Ordering::SeqCst);
+        }
+    }
+    let _guard = AliveGuard(ctx.board.clone());
+
+    if ctx.start_parked {
+        let _ = ctx.event_tx.send(WorkerEvent::Parked {
+            rank: ctx.rank,
+            state_step: ctx.state.step,
+            err: CollectiveError::Poisoned,
+        });
+        if matches!(park(&mut ctx), Disposition::Exit) {
+            return;
+        }
+    }
+
+    loop {
+        // Non-blocking command drain between steps.
+        while let Ok(cmd) = ctx.cmd_rx.try_recv() {
+            match cmd {
+                WorkerCommand::Stop => {
+                    send_stopped(&ctx);
+                    return;
+                }
+                WorkerCommand::Continue { .. } => {} // already running
+                _ => unreachable!("state transfer commands only while parked"),
+            }
+        }
+        if ctx.state.step >= ctx.max_steps {
+            send_stopped(&ctx);
+            return;
+        }
+
+        match run_one_step(&mut ctx) {
+            StepOutcome::Completed => {}
+            StepOutcome::Died => return, // silent: simulated process death
+            StepOutcome::CollectiveBroken(err) => {
+                let _ = ctx.event_tx.send(WorkerEvent::Parked {
+                    rank: ctx.rank,
+                    state_step: ctx.state.step,
+                    err,
+                });
+                if matches!(park(&mut ctx), Disposition::Exit) {
+                    return;
+                }
+            }
+            StepOutcome::Fatal(e) => {
+                eprintln!("[worker {}] fatal: {e:#}", ctx.rank);
+                return;
+            }
+        }
+    }
+}
+
+fn send_stopped(ctx: &WorkerCtx) {
+    let _ = ctx.event_tx.send(WorkerEvent::Stopped {
+        rank: ctx.rank,
+        state_step: ctx.state.step,
+        param_hash: ctx.state.param_hash().unwrap_or(0),
+    });
+}
+
+enum StepOutcome {
+    Completed,
+    Died,
+    CollectiveBroken(CollectiveError),
+    Fatal(anyhow::Error),
+}
+
+fn should_die(ctx: &WorkerCtx, phase: Phase) -> Option<FailureKind> {
+    ctx.failure
+        .filter(|f| f.rank == ctx.rank && f.step == ctx.state.step && f.phase == phase)
+        .map(|f| f.kind)
+}
+
+/// Global epoch for death/detection latency bookkeeping.
+pub fn epoch() -> Instant {
+    static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Milliseconds since the global epoch.
+pub fn now_ms() -> u64 {
+    epoch().elapsed().as_millis() as u64
+}
+
+fn die(ctx: &WorkerCtx, kind: FailureKind) {
+    ctx.board.death_at_ms.store(now_ms().max(1), Ordering::SeqCst);
+    // Hardware failures are visible to the device plugin immediately;
+    // software deaths are only detectable as lost liveness.
+    if kind.category() == FailureCategory::Hardware {
+        ctx.board.device_error.store(kind_code(kind), Ordering::SeqCst);
+    }
+    // alive -> false via the guard when the thread unwinds.
+}
+
+fn run_one_step(ctx: &mut WorkerCtx) -> StepOutcome {
+    let step = ctx.state.step;
+    // Rule 1: tag = i at the beginning of forward.
+    ctx.board.step_tag.store(step as i64, Ordering::SeqCst);
+
+    // ---- forward/backward (PJRT) -------------------------------------
+    if let Some(kind) = should_die(ctx, Phase::FwdBwd) {
+        die(ctx, kind);
+        return StepOutcome::Died;
+    }
+    let m = &ctx.bundle.manifest;
+    let tokens_host = ctx.data.batch_for(step, ctx.rank);
+    let tokens = match literal_tokens(m.dims.batch, m.dims.seq + 1, &tokens_host) {
+        Ok(t) => t,
+        Err(e) => return StepOutcome::Fatal(e),
+    };
+    let (loss, grads) = match ctx.bundle.run_fwd_bwd(&ctx.state.params, &tokens) {
+        Ok(r) => r,
+        Err(e) => return StepOutcome::Fatal(e),
+    };
+
+    // ---- gradient allreduce == the pre-optimizer barrier --------------
+    let mut flat = match flatten_grads(&grads) {
+        Ok(f) => f,
+        Err(e) => return StepOutcome::Fatal(e),
+    };
+    if let Err(err) = ctx.collective.allreduce_mean(&mut flat) {
+        return StepOutcome::CollectiveBroken(err);
+    }
+    let grads = match unflatten_grads(ctx, &flat) {
+        Ok(g) => g,
+        Err(e) => return StepOutcome::Fatal(e),
+    };
+
+    // Rule 4: tag = -1 at the beginning of the optimizer step.
+    ctx.board.step_tag.store(TAG_OPTIMIZER, Ordering::SeqCst);
+    if let Some(kind) = should_die(ctx, Phase::OptStep) {
+        die(ctx, kind);
+        return StepOutcome::Died;
+    }
+
+    // ---- optimizer step (PJRT) ----------------------------------------
+    let (p, mm, vv) = match ctx.bundle.run_opt_step(
+        &ctx.state.params,
+        &ctx.state.m,
+        &ctx.state.v,
+        (step + 1) as f32,
+        &grads,
+    ) {
+        Ok(r) => r,
+        Err(e) => return StepOutcome::Fatal(e),
+    };
+    ctx.state.params = p;
+    ctx.state.m = mm;
+    ctx.state.v = vv;
+    ctx.state.step = step + 1;
+    // Rule 5: tag = i + 1 once the optimizer step completes.
+    ctx.board.step_tag.store((step + 1) as i64, Ordering::SeqCst);
+
+    let _ = ctx.event_tx.send(WorkerEvent::Loss { rank: ctx.rank, step: step + 1, loss });
+
+    // ---- periodic checkpoint (vanilla baseline) ------------------------
+    if ctx.ckpt_interval > 0 && ctx.state.step % ctx.ckpt_interval == 0 {
+        if let Some(mgr) = ctx.ckpt.as_mut() {
+            let t0 = Instant::now();
+            match ctx.state.to_snapshot() {
+                Ok(snap) => {
+                    if let Err(e) = mgr.checkpoint(ctx.state.step, snap.tensors) {
+                        return StepOutcome::Fatal(e);
+                    }
+                    let _ = ctx.event_tx.send(WorkerEvent::CheckpointTaken {
+                        rank: ctx.rank,
+                        step: ctx.state.step,
+                        k0_s: t0.elapsed().as_secs_f64(),
+                    });
+                }
+                Err(e) => return StepOutcome::Fatal(e),
+            }
+        }
+    }
+
+    StepOutcome::Completed
+}
+
+/// Parked: blocking command loop during recovery.
+fn park(ctx: &mut WorkerCtx) -> Disposition {
+    loop {
+        let cmd = match ctx.cmd_rx.recv() {
+            Ok(c) => c,
+            Err(_) => return Disposition::Exit, // controller gone
+        };
+        match cmd {
+            WorkerCommand::Stop => {
+                send_stopped(ctx);
+                return Disposition::Exit;
+            }
+            WorkerCommand::ServeState { group } => {
+                let snap = match ctx.state.to_snapshot() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("[worker {}] snapshot failed: {e:#}", ctx.rank);
+                        return Disposition::Exit;
+                    }
+                };
+                let bytes = Arc::new(encode_snapshot(&snap));
+                if group.broadcast(Some(bytes)).is_err() {
+                    return Disposition::Exit;
+                }
+            }
+            WorkerCommand::RestoreState { group } => {
+                let bytes = match group.broadcast(None) {
+                    Ok(b) => b,
+                    Err(_) => return Disposition::Exit,
+                };
+                let snap = match decode_snapshot(&bytes) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("[worker {}] bad replica payload: {e:#}", ctx.rank);
+                        return Disposition::Exit;
+                    }
+                };
+                match WorkerState::from_snapshot(&ctx.bundle, &snap) {
+                    Ok(s) => ctx.state = s,
+                    Err(e) => {
+                        eprintln!("[worker {}] restore failed: {e:#}", ctx.rank);
+                        return Disposition::Exit;
+                    }
+                }
+            }
+            WorkerCommand::Continue { resume_step } => {
+                assert_eq!(
+                    ctx.state.step, resume_step,
+                    "worker {} resume step mismatch",
+                    ctx.rank
+                );
+                ctx.board
+                    .step_tag
+                    .store(resume_step as i64, Ordering::SeqCst);
+                return Disposition::KeepRunning;
+            }
+        }
+    }
+}
+
+/// Concatenate gradient literals into one flat f32 buffer (a single
+/// fused allreduce, like gradient-bucket fusion in real frameworks).
+pub fn flatten_grads(grads: &[xla::Literal]) -> Result<Vec<f32>> {
+    let mut total = 0;
+    for g in grads {
+        total += g.element_count();
+    }
+    let mut flat = Vec::with_capacity(total);
+    for g in grads {
+        flat.extend(crate::runtime::to_f32_vec(g)?);
+    }
+    Ok(flat)
+}
+
+fn unflatten_grads(ctx: &WorkerCtx, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(ctx.bundle.manifest.params.len());
+    let mut pos = 0;
+    for spec in &ctx.bundle.manifest.params {
+        let n = spec.elements();
+        out.push(crate::runtime::literal_f32(&spec.shape, &flat[pos..pos + n])?);
+        pos += n;
+    }
+    anyhow::ensure!(pos == flat.len(), "gradient buffer size mismatch");
+    Ok(out)
+}

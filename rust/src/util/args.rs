@@ -1,0 +1,121 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(body) = item.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = args("run --size small --steps 100");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("size"), Some("small"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = args("--dp=4 --lr=0.001");
+        assert_eq!(a.usize_or("dp", 0), 4);
+        assert!((a.f64_or("lr", 0.0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bare_flag_is_true() {
+        // A flag followed by a non-flag token consumes it as its value
+        // (documented ambiguity — use `--flag=true` before positionals).
+        let a = args("train --verbose");
+        assert!(a.bool_or("verbose", false));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = args("--check");
+        assert!(a.bool_or("check", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("mode", "x"), "x");
+        assert!(!a.bool_or("flag", false));
+    }
+}

@@ -1,0 +1,80 @@
+//! Foundation utilities: deterministic RNG, JSON, CLI args, property
+//! testing. These replace external crates (rand/serde/clap/proptest)
+//! that are unavailable in the offline build environment.
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::Rng;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Create a unique temporary directory under the system temp dir
+/// (tempfile crate substitute). The directory is NOT auto-deleted;
+/// tests clean up explicitly or rely on /tmp hygiene.
+pub fn temp_dir(prefix: &str) -> std::io::Result<PathBuf> {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos();
+    let dir = std::env::temp_dir().join(format!("{prefix}-{pid}-{nanos}-{n}"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Locate the repo's `artifacts/` directory from tests/examples/benches,
+/// which may run from the target dir. Checks `FLASHREC_ARTIFACTS`, then
+/// walks up from the current dir and from CARGO_MANIFEST_DIR.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FLASHREC_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Ok(cwd) = std::env::current_dir() {
+        candidates.push(cwd);
+    }
+    candidates.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for start in candidates {
+        let mut dir: Option<&Path> = Some(start.as_path());
+        while let Some(d) = dir {
+            let art = d.join("artifacts");
+            if art.join("manifest.json").is_file() {
+                return Some(art);
+            }
+            dir = d.parent();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temp_dirs_are_unique() {
+        let a = temp_dir("flashrec-test").unwrap();
+        let b = temp_dir("flashrec-test").unwrap();
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        std::fs::remove_dir_all(a).ok();
+        std::fs::remove_dir_all(b).ok();
+    }
+
+    #[test]
+    fn artifacts_dir_found_in_repo() {
+        // The repo checks in artifacts via `make artifacts` before tests.
+        assert!(artifacts_dir().is_some());
+    }
+}

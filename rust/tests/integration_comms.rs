@@ -1,0 +1,127 @@
+//! Integration tests over the real communication substrate: TCP store
+//! rendezvous, ranktable distribution through the store, and the
+//! serial-vs-parallel establishment comparison on real sockets.
+
+use flashrecovery::comms::{establish, TcpStoreClient, TcpStoreServer};
+use flashrecovery::coordinator::{RankEntry, Ranktable};
+use flashrecovery::util::Json;
+use std::time::Duration;
+
+fn entry(rank: usize) -> RankEntry {
+    RankEntry {
+        rank,
+        node: rank,
+        device: 0,
+        addr: format!("10.0.0.{rank}:2900"),
+    }
+}
+
+#[test]
+fn rendezvous_via_store_like_torchrun() {
+    // master publishes the rendezvous info; workers wait on it — the
+    // TCPStore pattern the paper's restart path re-establishes.
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+
+    let mut waiters = Vec::new();
+    for rank in 1..4 {
+        waiters.push(std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.hello(rank as u64).unwrap();
+            let payload = c.wait("rendezvous/v1").unwrap();
+            let v = Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
+            v.get("world").as_usize().unwrap()
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    let mut master = TcpStoreClient::connect(addr).unwrap();
+    master.hello(0).unwrap();
+    let mut info = Json::object();
+    info.set("world", 4usize).set("master_addr", "127.0.0.1");
+    master.set("rendezvous/v1", info.render().as_bytes()).unwrap();
+
+    for w in waiters {
+        assert_eq!(w.join().unwrap(), 4);
+    }
+    assert_eq!(server.hello_count(), 4);
+}
+
+#[test]
+fn ranktable_distributed_through_store() {
+    // The controller can also publish the ranktable via the store
+    // (shared-file semantics over TCP): one set, n O(1) gets.
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+    let table = Ranktable::new((0..8).map(entry).collect());
+
+    let mut c = TcpStoreClient::connect(addr).unwrap();
+    c.set("ranktable", table.to_json().render().as_bytes()).unwrap();
+
+    let mut readers = Vec::new();
+    for _ in 0..8 {
+        readers.push(std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            let bytes = c.get("ranktable").unwrap().unwrap();
+            Ranktable::from_json(&Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap())
+                .unwrap()
+        }));
+    }
+    for r in readers {
+        let t = r.join().unwrap();
+        assert_eq!(t, table);
+        t.validate().unwrap();
+    }
+}
+
+#[test]
+fn barrier_counter_synchronizes_workers() {
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+    let n = 6;
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        handles.push(std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            let v = c.add("barrier/epoch0", 1).unwrap();
+            // after incrementing, wait for the release key
+            if v == n {
+                c.set("barrier/epoch0/done", b"1").unwrap();
+            }
+            c.wait("barrier/epoch0/done").unwrap();
+            v
+        }));
+    }
+    let mut seen: Vec<i64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    seen.sort();
+    assert_eq!(seen, (1..=n).collect::<Vec<_>>());
+}
+
+#[test]
+fn parallel_establishment_not_slower_than_serial() {
+    // On localhost the absolute numbers are microscopic, but the
+    // parallel path must never be *slower* by more than noise, and
+    // both must connect everyone.
+    let server = TcpStoreServer::start().unwrap();
+    let n = 64;
+    let (t_serial, c1) = establish(server.addr(), n, 1).unwrap();
+    let (t_par, c2) = establish(server.addr(), n, 8).unwrap();
+    assert_eq!(c1.len() + c2.len(), 2 * n);
+    assert_eq!(server.hello_count(), 2 * n as u64);
+    assert!(
+        t_par.as_secs_f64() < t_serial.as_secs_f64() * 3.0 + 0.05,
+        "parallel {t_par:?} vs serial {t_serial:?}"
+    );
+}
+
+#[test]
+fn store_values_survive_client_churn() {
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+    {
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.set("persistent", b"v1").unwrap();
+    } // client dropped
+    let mut c2 = TcpStoreClient::connect(addr).unwrap();
+    assert_eq!(c2.get("persistent").unwrap().as_deref(), Some(&b"v1"[..]));
+    assert_eq!(c2.count().unwrap(), 1);
+}

@@ -1,0 +1,247 @@
+//! Cross-module integration tests: the full controller + engine +
+//! runtime stack under failure injection.
+
+use flashrecovery::cluster::failure::FailureKind;
+use flashrecovery::coordinator::{ControllerConfig, SharedRanktable};
+use flashrecovery::training::worker::{FailurePlan, Phase};
+use flashrecovery::training::TrainingEngine;
+use flashrecovery::util::temp_dir;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// One engine per test binary: artifact compilation is the expensive
+/// part and the bundle is safely shared.
+fn engine() -> &'static TrainingEngine {
+    static ENGINE: OnceLock<TrainingEngine> = OnceLock::new();
+    ENGINE.get_or_init(|| TrainingEngine::load("tiny").expect("run `make artifacts`"))
+}
+
+#[test]
+fn two_sequential_failures_both_recover() {
+    let mut cfg = ControllerConfig::flash(3, 14);
+    cfg.failures = vec![
+        FailurePlan { rank: 1, step: 4, phase: Phase::FwdBwd, kind: FailureKind::Segfault },
+        FailurePlan { rank: 2, step: 9, phase: Phase::OptStep, kind: FailureKind::DeviceMemory },
+    ];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 14);
+    assert_eq!(report.recoveries.len(), 2);
+    assert_eq!(report.recoveries[0].resume_step, 4); // fwd/bwd -> i
+    assert_eq!(report.recoveries[1].resume_step, 10); // optimizer -> i+1
+    assert!(report.recoveries.iter().all(|r| r.lost_steps == 0));
+    assert_eq!(report.final_param_divergence, 0.0);
+}
+
+#[test]
+fn replacement_rank_can_fail_again_later() {
+    // rank 1 dies at step 3; later rank 0 dies at step 7 — the fleet
+    // that recovers the second failure contains a replacement member.
+    let mut cfg = ControllerConfig::flash(2, 10);
+    cfg.failures = vec![
+        FailurePlan { rank: 1, step: 3, phase: Phase::FwdBwd, kind: FailureKind::Oom },
+        FailurePlan { rank: 0, step: 7, phase: Phase::FwdBwd, kind: FailureKind::Segfault },
+    ];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 10);
+    assert_eq!(report.recoveries.len(), 2);
+    assert_eq!(report.final_param_divergence, 0.0);
+}
+
+#[test]
+fn shared_ranktable_is_updated_across_recovery() {
+    let dir = temp_dir("rt-e2e").unwrap();
+    let rt_path = dir.join("ranktable.json");
+    let mut cfg = ControllerConfig::flash(2, 8);
+    cfg.ranktable_path = Some(rt_path.clone());
+    cfg.failures = vec![FailurePlan {
+        rank: 1,
+        step: 3,
+        phase: Phase::FwdBwd,
+        kind: FailureKind::Network,
+    }];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.recoveries.len(), 1);
+
+    // Devices load the table O(1) from the shared file; after the
+    // substitution its version is bumped and rank 1 points elsewhere.
+    let table = SharedRanktable::new(&rt_path).load().unwrap();
+    assert!(table.version >= 2, "substitution must bump version");
+    table.validate().unwrap();
+    assert_eq!(table.entries.len(), 2);
+    assert_ne!(table.entries[1].addr, "127.0.0.1:29001".to_string());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn vanilla_without_checkpoint_restarts_from_scratch() {
+    let dir = temp_dir("vanilla-scratch").unwrap();
+    let mut cfg =
+        ControllerConfig::vanilla(2, 8, 0 /* no checkpoints */, Duration::from_millis(400));
+    cfg.ckpt_dir = dir.clone();
+    cfg.failures = vec![FailurePlan {
+        rank: 0,
+        step: 5,
+        phase: Phase::FwdBwd,
+        kind: FailureKind::Segfault,
+    }];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 8);
+    let r = &report.recoveries[0];
+    assert_eq!(r.resume_step, 0, "no checkpoint -> restart from step 0");
+    assert_eq!(r.lost_steps, 5);
+    assert_eq!(report.final_param_divergence, 0.0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn vanilla_detection_waits_for_timeout_flash_does_not() {
+    let timeout = Duration::from_millis(600);
+    let fail = FailurePlan {
+        rank: 1,
+        step: 3,
+        phase: Phase::FwdBwd,
+        kind: FailureKind::Segfault,
+    };
+
+    let mut v = ControllerConfig::vanilla(2, 6, 2, timeout);
+    let vdir = temp_dir("vanilla-det").unwrap();
+    v.ckpt_dir = vdir.clone();
+    v.failures = vec![fail];
+    let vrep = engine().run(v).unwrap();
+    let vdet = vrep.recoveries[0].detection_s;
+
+    let mut f = ControllerConfig::flash(2, 6);
+    f.heartbeat_interval = Duration::from_millis(50);
+    f.failures = vec![fail];
+    let frep = engine().run(f).unwrap();
+    let fdet = frep.recoveries[0].detection_s;
+
+    assert!(
+        vdet >= 0.5,
+        "vanilla must wait out the collective timeout ({vdet}s)"
+    );
+    assert!(fdet < 0.5, "flash detection must be sub-timeout ({fdet}s)");
+    assert!(fdet < vdet);
+    std::fs::remove_dir_all(vdir).ok();
+}
+
+#[test]
+fn dp4_failure_recovers_with_three_survivors() {
+    let mut cfg = ControllerConfig::flash(4, 8);
+    cfg.failures = vec![FailurePlan {
+        rank: 2,
+        step: 4,
+        phase: Phase::OptStep,
+        kind: FailureKind::AiCore,
+    }];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 8);
+    assert_eq!(report.recoveries.len(), 1);
+    assert_eq!(report.recoveries[0].resume_step, 5);
+    assert_eq!(report.final_param_divergence, 0.0);
+}
+
+#[test]
+fn hardware_failure_reported_via_device_plugin_with_kind() {
+    let mut cfg = ControllerConfig::flash(2, 6);
+    cfg.failures = vec![FailurePlan {
+        rank: 1,
+        step: 3,
+        phase: Phase::FwdBwd,
+        kind: FailureKind::Driver,
+    }];
+    let report = engine().run(cfg).unwrap();
+    let r = &report.recoveries[0];
+    assert!(r.via_device_plugin);
+    assert_eq!(r.kind, FailureKind::Driver);
+}
+
+#[test]
+fn simultaneous_two_rank_failure_recovers_from_single_survivor() {
+    // dp=3, ranks 1 and 2 die at the same step: both are replaced and
+    // restored from rank 0's replica in one episode.
+    let mut cfg = ControllerConfig::flash(3, 8);
+    cfg.failures = vec![
+        FailurePlan { rank: 1, step: 4, phase: Phase::FwdBwd, kind: FailureKind::Network },
+        FailurePlan { rank: 2, step: 4, phase: Phase::FwdBwd, kind: FailureKind::Segfault },
+    ];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 8);
+    // one or two episodes depending on scan timing; all ranks recovered
+    let total_failed: usize = report
+        .recoveries
+        .iter()
+        .map(|r| r.failed_ranks.len())
+        .sum();
+    assert_eq!(total_failed, 2);
+    assert!(report.recoveries.iter().all(|r| r.lost_steps == 0));
+    assert_eq!(report.final_param_divergence, 0.0);
+}
+
+#[test]
+fn whole_dp_group_loss_falls_back_to_checkpoint_path() {
+    // Paper §III-G limitation 1: if every replica fails simultaneously
+    // there is no source — FlashRecovery must fall back to the
+    // checkpoint path (here: no checkpoint -> restart from scratch).
+    let dir = temp_dir("group-loss").unwrap();
+    let mut cfg = ControllerConfig::flash(2, 6);
+    cfg.ckpt_dir = dir.clone();
+    cfg.failures = vec![
+        FailurePlan { rank: 0, step: 3, phase: Phase::FwdBwd, kind: FailureKind::Network },
+        FailurePlan { rank: 1, step: 3, phase: Phase::FwdBwd, kind: FailureKind::Network },
+    ];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 6);
+    let r = report.recoveries.last().unwrap();
+    assert_eq!(r.mode, flashrecovery::config::RecoveryMode::Vanilla);
+    assert_eq!(r.resume_step, 0, "no surviving replica, no checkpoint");
+    assert!(r.lost_steps > 0);
+    assert_eq!(report.final_param_divergence, 0.0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn controller_config_from_job_config() {
+    use flashrecovery::config::{JobConfig, ParallelismConfig, RecoveryMode};
+    let mut job = JobConfig::default();
+    job.model = "tiny".into();
+    job.parallelism = ParallelismConfig::dp(2);
+    job.steps = 5;
+    job.seed = 9;
+    job.cluster.heartbeat_interval_s = 0.05;
+    job.checkpoint.interval_steps = 2;
+    job.recovery.mode = RecoveryMode::Vanilla;
+    let cfg = ControllerConfig::from_job(&job).unwrap();
+    assert_eq!(cfg.dp, 2);
+    assert_eq!(cfg.steps, 5);
+    assert_eq!(cfg.seed, 9);
+    assert_eq!(cfg.ckpt_interval, 2);
+    assert_eq!(cfg.mode, RecoveryMode::Vanilla);
+
+    // model-parallel topologies are rejected on the real plane
+    job.parallelism = ParallelismConfig::new(2, 2, 1);
+    job.cluster.num_nodes = 8;
+    assert!(ControllerConfig::from_job(&job).is_err());
+
+    // and a full run driven by the job config works end to end
+    job.parallelism = ParallelismConfig::dp(2);
+    job.recovery.mode = RecoveryMode::Flash;
+    job.checkpoint.interval_steps = 0;
+    let cfg = ControllerConfig::from_job(&job).unwrap();
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 5);
+}
+
+#[test]
+fn software_failure_classified_by_monitor_process() {
+    let mut cfg = ControllerConfig::flash(2, 6);
+    cfg.failures = vec![FailurePlan {
+        rank: 0,
+        step: 2,
+        phase: Phase::FwdBwd,
+        kind: FailureKind::Oom,
+    }];
+    let report = engine().run(cfg).unwrap();
+    let r = &report.recoveries[0];
+    assert!(!r.via_device_plugin, "software death has no plugin report");
+}

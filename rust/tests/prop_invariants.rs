@@ -1,0 +1,186 @@
+//! System-level property tests (own mini-prop harness; proptest is
+//! unavailable offline — see DESIGN.md substitutions).
+
+use flashrecovery::checkpoint::{decode_snapshot, encode_snapshot, Snapshot};
+use flashrecovery::cluster::{simulate_flash, simulate_vanilla, ScenarioConfig};
+use flashrecovery::config::ParallelismConfig;
+use flashrecovery::coordinator::step_tag::{decide, plan_restore, TagDecision};
+use flashrecovery::recovery_model::{FlashParams, OverheadParams};
+use flashrecovery::util::{prop, Json, Rng};
+
+#[test]
+fn prop_snapshot_bytes_roundtrip() {
+    prop::check("snapshot byte roundtrip", 100, |rng| {
+        let n_tensors = 1 + rng.below(6) as usize;
+        let tensors: Vec<Vec<f32>> = (0..n_tensors)
+            .map(|_| {
+                let len = rng.below(200) as usize;
+                (0..len).map(|_| (rng.f64() as f32 - 0.5) * 1e3).collect()
+            })
+            .collect();
+        let snap = Snapshot { step: rng.next_u64() % 10_000, tensors };
+        let back = decode_snapshot(&encode_snapshot(&snap)).map_err(|e| e.to_string())?;
+        prop::assert_eq_prop(&back, &snap)
+    });
+}
+
+#[test]
+fn prop_snapshot_corruption_always_detected() {
+    prop::check("snapshot corruption detected", 100, |rng| {
+        let tensors = vec![vec![1.5f32; 16], vec![-2.0; 8]];
+        let snap = Snapshot { step: 3, tensors };
+        let mut bytes = encode_snapshot(&snap);
+        let idx = rng.below(bytes.len() as u64) as usize;
+        let bit = 1u8 << rng.below(8);
+        bytes[idx] ^= bit;
+        prop::assert_prop(
+            decode_snapshot(&bytes).is_err(),
+            format!("flipping bit {bit:#x} at byte {idx} went undetected"),
+        )
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.next_u32() as f64 / 64.0).floor()),
+            3 => {
+                let len = rng.below(8) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| char::from_u32(0x20 + rng.next_u32() % 0x5e).unwrap())
+                        .collect(),
+                )
+            }
+            4 => Json::Array(
+                (0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut o = Json::object();
+                for i in 0..rng.below(4) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    prop::check("json roundtrip", 200, |rng| {
+        let v = random_json(rng, 3);
+        let back = Json::parse(&v.render()).map_err(|e| e.to_string())?;
+        prop::assert_eq_prop(&back, &v)?;
+        let pretty = Json::parse(&v.render_pretty()).map_err(|e| e.to_string())?;
+        prop::assert_eq_prop(&pretty, &v)
+    });
+}
+
+#[test]
+fn prop_flash_total_beats_vanilla_at_any_scale() {
+    prop::check("flash < vanilla for all scales", 40, |rng| {
+        let devices = 32 + rng.below(10_000) as usize;
+        let params = [7e9, 70e9, 175e9][rng.below(3) as usize];
+        let seed = rng.next_u64();
+        let cfg = ScenarioConfig::paper(devices, params, seed);
+        let f = simulate_flash(&cfg);
+        let v = simulate_vanilla(&cfg);
+        prop::assert_prop(
+            f.total_s < v.total_s,
+            format!("{devices} devices: flash {} >= vanilla {}", f.total_s, v.total_s),
+        )
+    });
+}
+
+#[test]
+fn prop_flash_breakdown_internally_consistent() {
+    prop::check("breakdown consistency", 60, |rng| {
+        let devices = 32 + rng.below(18_000) as usize;
+        let cfg = ScenarioConfig::paper(devices, 70e9, rng.next_u64());
+        let b = simulate_flash(&cfg);
+        prop::assert_prop(b.detection_s > 0.0, "detection <= 0")?;
+        prop::assert_prop(b.restart_s > 0.0, "restart <= 0")?;
+        prop::assert_close(b.redone_s, b.step_time_s / 2.0, 1e-9)?;
+        prop::assert_close(b.total_s, b.detection_s + b.restart_s + b.redone_s, 1e-9)
+    });
+}
+
+#[test]
+fn prop_step_tag_decision_total_function() {
+    // decide() must handle every tag mix without losing updates or
+    // acting while an optimizer is in flight.
+    prop::check("step-tag totality", 300, |rng| {
+        let i = rng.below(10_000) as i64;
+        let n = 1 + rng.below(10) as usize;
+        let tags: Vec<i64> = (0..n)
+            .map(|_| match rng.below(3) {
+                0 => i,
+                1 => i + 1,
+                _ => -1,
+            })
+            .collect();
+        match decide(&tags) {
+            TagDecision::Wait => {
+                prop::assert_prop(tags.contains(&-1), "waited with no -1 tag")
+            }
+            TagDecision::Act { resume_step } => {
+                prop::assert_prop(!tags.contains(&-1), "acted during optimizer")?;
+                prop::assert_eq_prop(&(resume_step as i64), tags.iter().max().unwrap())
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_restore_plan_covers_everyone_with_zero_topology() {
+    // Combined invariant: for any DP/ZeRO topology with replication,
+    // any single-node failure set has recovery sources, and the restore
+    // plan partitions the survivors.
+    prop::check("zero-topology restore", 200, |rng| {
+        let dp = 2 + rng.below(6) as usize;
+        let divisors: Vec<usize> =
+            (1..=dp).filter(|s| dp % s == 0 && dp / s >= 2).collect();
+        let shards = *rng.choose(&divisors);
+        let p = ParallelismConfig::dp(dp).with_zero(shards);
+        let failed = rng.below(dp as u64) as usize;
+        prop::assert_prop(
+            p.can_recover(&[failed]),
+            format!("dp={dp} shards={shards} failed={failed} unrecoverable"),
+        )?;
+        // survivor states all equal -> plan_restore has no laggards
+        let steps: Vec<(usize, u64)> = (0..dp)
+            .filter(|r| *r != failed)
+            .map(|r| (r, 7))
+            .collect();
+        let (resume, sources, behind) = plan_restore(&steps);
+        prop::assert_eq_prop(&resume, &7)?;
+        prop::assert_eq_prop(&(sources.len() + behind.len() + 1), &dp)?;
+        prop::assert_prop(behind.is_empty(), "unexpected laggards")
+    });
+}
+
+#[test]
+fn prop_overhead_model_convexity_and_optimum() {
+    prop::check("F(t) convex with min at t*", 200, |rng| {
+        let p = OverheadParams {
+            d: rng.range_f64(1e3, 1e6),
+            m: rng.range_f64(1.0, 200.0),
+            s0: rng.range_f64(1.0, 5e3),
+            k0: rng.range_f64(0.01, 200.0),
+        };
+        let t_star = p.optimal_interval();
+        let f_min = p.min_overhead();
+        prop::assert_close(p.total_overhead(t_star), f_min, 1e-9)?;
+        for mult in [0.3, 0.7, 1.5, 3.0] {
+            prop::assert_prop(
+                p.total_overhead(t_star * mult) >= f_min - 1e-9,
+                format!("F({mult} t*) < F_min"),
+            )?;
+        }
+        // eq. 5 with one-step recompute dominates whenever the
+        // checkpointing term would exceed m steps
+        let flash = FlashParams { m: p.m, s0_prime: p.s0, s1_prime: 1.0 };
+        let expected = (2.0 * p.d * p.k0 * p.m).sqrt() >= p.m;
+        prop::assert_eq_prop(&(flash.total_overhead() <= f_min), &expected)
+    });
+}
