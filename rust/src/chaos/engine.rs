@@ -1,0 +1,939 @@
+//! Deterministic multi-failure campaign interpreter (simulator path).
+//!
+//! Interprets a [`ScenarioSpec`] against the calibrated cluster model:
+//! an explicit time-ordered event queue (ties broken by insertion
+//! order, like `cluster::simtime`) drives fault injection, detection,
+//! recovery, spare substitution, node rejoin, and straggler handling
+//! over a [`SimCluster`], journaling every transition. The protocol
+//! costs come from the same primitives the single-shot Tab. II/III
+//! scenarios use ([`flash_restart_cost`] / [`vanilla_restart_cost`] /
+//! [`sample_detection_s`]), so campaign numbers stay calibrated to the
+//! paper.
+//!
+//! Compound-failure semantics:
+//! * a fault striking while a recovery is in flight **merges** into it:
+//!   the controller folds the new victim in and re-runs communication
+//!   establishment for the union, extending the ready time (the
+//!   "failure during recovery" case single-shot scenarios cannot
+//!   express);
+//! * substitution draws from the spare pool; on exhaustion the victim
+//!   stays failed (journaled, surfaced in assertions) instead of
+//!   wedging the campaign;
+//! * with `rejoin_s` configured, substituted nodes return to the spare
+//!   pool after repair — what keeps a flapping host scenario bounded;
+//! * in flash mode a straggler whose slowdown crosses the eviction
+//!   threshold is treated as a soft failure after a patience window
+//!   (degrade-aware recovery); vanilla just trains slowly.
+//!
+//! Determinism contract: identical `(spec, seed)` → byte-identical
+//! journals. All randomness flows through one seeded RNG in event
+//! order; no wall clock, no hash-map iteration.
+
+use super::journal::Journal;
+use super::spec::{Assertions, FaultFamily, ScenarioSpec};
+use crate::cluster::failure::{FailureInjector, FailureKind};
+use crate::cluster::{
+    flash_restart_cost, sample_detection_s, vanilla_restart_cost, NodeState,
+    ScenarioConfig, SimCluster,
+};
+use crate::config::RecoveryMode;
+use crate::util::{Json, Rng};
+use anyhow::Result;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, BTreeMap};
+
+/// One completed recovery episode (possibly covering several merged
+/// faults).
+#[derive(Debug, Clone)]
+pub struct CampaignRecovery {
+    /// First fault of the episode struck here.
+    pub started_s: f64,
+    /// Controller became aware (first detection complete).
+    pub aware_s: f64,
+    pub ended_s: f64,
+    pub detection_s: f64,
+    /// Aware -> all substitutions done and fleet training again.
+    pub restart_s: f64,
+    pub nodes: Vec<usize>,
+    /// Faults absorbed after the episode had already begun.
+    pub merged_faults: usize,
+    pub lost_steps: u64,
+}
+
+impl CampaignRecovery {
+    /// Detection + restart: the per-episode recovery time assertions
+    /// bound.
+    pub fn total_s(&self) -> f64 {
+        self.detection_s + self.restart_s
+    }
+}
+
+/// Outcome of one campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub mode: RecoveryMode,
+    pub recoveries: Vec<CampaignRecovery>,
+    pub merged_recoveries: usize,
+    pub spare_exhausted: bool,
+    pub stragglers_evicted: usize,
+    /// Nodes still failed (unsubstituted) at campaign end.
+    pub unrecovered_nodes: usize,
+    pub steps_completed: u64,
+    pub lost_steps: u64,
+    pub total_downtime_s: f64,
+    pub final_running_nodes: usize,
+    pub spares_left: usize,
+    pub horizon_s: f64,
+    /// Last processed event time (>= horizon when recoveries ran long).
+    pub end_s: f64,
+    pub step_time_s: f64,
+}
+
+impl CampaignReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("scenario", self.scenario.as_str())
+            .set("seed", self.seed)
+            .set("mode", self.mode.name())
+            .set("merged_recoveries", self.merged_recoveries)
+            .set("spare_exhausted", self.spare_exhausted)
+            .set("stragglers_evicted", self.stragglers_evicted)
+            .set("unrecovered_nodes", self.unrecovered_nodes)
+            .set("steps_completed", self.steps_completed)
+            .set("lost_steps", self.lost_steps)
+            .set("total_downtime_s", self.total_downtime_s)
+            .set("final_running_nodes", self.final_running_nodes)
+            .set("spares_left", self.spares_left)
+            .set("end_s", self.end_s)
+            .set(
+                "recoveries",
+                Json::Array(
+                    self.recoveries
+                        .iter()
+                        .map(|r| {
+                            let mut e = Json::object();
+                            e.set("started_s", r.started_s)
+                                .set("ended_s", r.ended_s)
+                                .set("detection_s", r.detection_s)
+                                .set("restart_s", r.restart_s)
+                                .set("total_s", r.total_s())
+                                .set(
+                                    "nodes",
+                                    Json::Array(
+                                        r.nodes.iter().map(|n| Json::from(*n)).collect(),
+                                    ),
+                                )
+                                .set("merged_faults", r.merged_faults)
+                                .set("lost_steps", r.lost_steps);
+                            e
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+}
+
+/// One evaluated assertion.
+#[derive(Debug, Clone)]
+pub struct AssertionOutcome {
+    pub name: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+/// True iff every assertion passed.
+pub fn passed(outcomes: &[AssertionOutcome]) -> bool {
+    outcomes.iter().all(|o| o.pass)
+}
+
+// ---------------------------------------------------------------- queue
+
+#[derive(Debug, Clone)]
+enum Ev {
+    Fault {
+        /// Fault-spec index (flap anchor key).
+        spec_idx: usize,
+        node: Option<usize>,
+        kind: Option<FailureKind>,
+        wanted: usize,
+        /// Flap occurrences after the first follow the device block.
+        follow_anchor: bool,
+    },
+    RecoveryDone {
+        gen: u64,
+    },
+    Rejoin {
+        node: usize,
+    },
+    StragglerStart {
+        node: Option<usize>,
+        slowdown: f64,
+        duration_s: f64,
+    },
+    StragglerEnd {
+        node: usize,
+        token: u64,
+    },
+    StragglerEvict {
+        node: usize,
+        token: u64,
+    },
+    Horizon,
+}
+
+struct QEntry {
+    at: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for QEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for QEntry {}
+impl PartialOrd for QEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: reverse so earliest (time, seq) pops first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+// --------------------------------------------------------------- engine
+
+struct InFlight {
+    gen: u64,
+    first_fault_s: f64,
+    aware_s: f64,
+    ready_s: f64,
+    detection_s: f64,
+    nodes: Vec<usize>,
+    merged_faults: usize,
+    lost_steps: u64,
+}
+
+struct Campaign<'a> {
+    spec: &'a ScenarioSpec,
+    scfg: ScenarioConfig,
+    rng: Rng,
+    cluster: SimCluster,
+    queue: BinaryHeap<QEntry>,
+    seq: u64,
+    last_t: f64,
+    steps_accum: f64,
+    downtime_s: f64,
+    lost_steps: u64,
+    recovery: Option<InFlight>,
+    gen: u64,
+    /// node -> (slow factor, token); job step time scales by the max.
+    slow: BTreeMap<usize, (f64, u64)>,
+    slow_token: u64,
+    flap_anchor: BTreeMap<usize, usize>,
+    recoveries: Vec<CampaignRecovery>,
+    merged_recoveries: usize,
+    spare_exhausted: bool,
+    stragglers_evicted: usize,
+    step_time_s: f64,
+    journal: Journal,
+}
+
+impl<'a> Campaign<'a> {
+    fn new(spec: &'a ScenarioSpec, seed: u64) -> Self {
+        let c = &spec.cluster;
+        let spec_hash = spec.hash();
+        let scfg = ScenarioConfig {
+            devices: c.devices,
+            devices_per_node: c.devices_per_node,
+            model_params: c.model_params,
+            lat: Default::default(),
+            step: Default::default(),
+            heartbeat_interval_s: c.heartbeat_interval_s,
+            miss_threshold: c.miss_threshold,
+            collective_timeout_s: c.collective_timeout_s,
+            tcp_parallelism: c.tcp_parallelism,
+            seed,
+        };
+        let step_time_s = scfg.step.step_time_s(c.model_params, c.devices);
+        Campaign {
+            spec,
+            scfg,
+            rng: Rng::new(seed ^ spec_hash),
+            cluster: SimCluster::new(c.active_nodes(), c.spare_nodes, c.devices_per_node),
+            queue: BinaryHeap::new(),
+            seq: 0,
+            last_t: 0.0,
+            steps_accum: 0.0,
+            downtime_s: 0.0,
+            lost_steps: 0,
+            recovery: None,
+            gen: 0,
+            slow: BTreeMap::new(),
+            slow_token: 0,
+            flap_anchor: BTreeMap::new(),
+            recoveries: Vec::new(),
+            merged_recoveries: 0,
+            spare_exhausted: false,
+            stragglers_evicted: 0,
+            step_time_s,
+            journal: Journal::new(&spec.name, spec_hash, seed),
+        }
+    }
+
+    fn push(&mut self, at: f64, ev: Ev) {
+        self.seq += 1;
+        self.queue.push(QEntry { at, seq: self.seq, ev });
+    }
+
+    /// Expand the declarative fault timeline into primitive events.
+    /// Occurrences past the horizon are dropped (deterministically).
+    fn expand(&mut self) {
+        let horizon = self.spec.horizon_s;
+        let spares = self.spec.cluster.spare_nodes;
+        let faults = self.spec.faults.clone();
+        for (idx, f) in faults.iter().enumerate() {
+            match f.family {
+                FaultFamily::Crash => self.push(
+                    f.at_s,
+                    Ev::Fault {
+                        spec_idx: idx,
+                        node: f.node,
+                        kind: f.failure,
+                        wanted: 1,
+                        follow_anchor: false,
+                    },
+                ),
+                FaultFamily::Cascade => {
+                    for i in 0..f.nodes {
+                        let at = f.at_s + i as f64 * f.spacing_s;
+                        if at <= horizon {
+                            self.push(
+                                at,
+                                Ev::Fault {
+                                    spec_idx: idx,
+                                    node: if i == 0 { f.node } else { None },
+                                    kind: f.failure,
+                                    wanted: 1,
+                                    follow_anchor: false,
+                                },
+                            );
+                        }
+                    }
+                }
+                FaultFamily::Partition => self.push(
+                    f.at_s,
+                    Ev::Fault {
+                        spec_idx: idx,
+                        node: f.node,
+                        kind: f.failure.or(Some(FailureKind::Network)),
+                        wanted: f.nodes,
+                        follow_anchor: false,
+                    },
+                ),
+                FaultFamily::SpareExhaustion => self.push(
+                    f.at_s,
+                    Ev::Fault {
+                        spec_idx: idx,
+                        node: f.node,
+                        kind: f.failure,
+                        wanted: (spares + 1).min(self.spec.cluster.active_nodes()),
+                        follow_anchor: false,
+                    },
+                ),
+                FaultFamily::Flap => {
+                    for i in 0..f.times {
+                        let at = f.at_s + i as f64 * f.period_s;
+                        if at <= horizon {
+                            self.push(
+                                at,
+                                Ev::Fault {
+                                    spec_idx: idx,
+                                    node: if i == 0 { f.node } else { None },
+                                    kind: f.failure,
+                                    wanted: 1,
+                                    follow_anchor: i > 0,
+                                },
+                            );
+                        }
+                    }
+                }
+                FaultFamily::Straggler => self.push(
+                    f.at_s,
+                    Ev::StragglerStart {
+                        node: f.node,
+                        slowdown: f.slowdown,
+                        duration_s: f.duration_s,
+                    },
+                ),
+            }
+        }
+        self.push(horizon, Ev::Horizon);
+    }
+
+    /// Job-wide step-time multiplier (synchronous DP: the slowest
+    /// member paces everyone).
+    fn slow_factor(&self) -> f64 {
+        self.slow
+            .values()
+            .map(|(f, _)| *f)
+            .fold(1.0, f64::max)
+    }
+
+    /// Advance training/downtime accounting to `t`.
+    fn advance(&mut self, t: f64) {
+        let dt = t - self.last_t;
+        if dt <= 0.0 {
+            return;
+        }
+        if self.recovery.is_some() {
+            self.downtime_s += dt;
+        } else {
+            self.steps_accum += dt / (self.step_time_s * self.slow_factor());
+        }
+        self.last_t = t;
+    }
+
+    fn running_nodes(&self) -> Vec<usize> {
+        self.cluster
+            .nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Running)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Pick `wanted` distinct running victims; explicit/anchored
+    /// choices first, the rest sampled uniformly.
+    fn pick_victims(
+        &mut self,
+        spec_idx: usize,
+        node: Option<usize>,
+        wanted: usize,
+        follow_anchor: bool,
+    ) -> Vec<usize> {
+        let mut pool = self.running_nodes();
+        let mut victims = Vec::new();
+
+        if follow_anchor {
+            // Flap re-occurrence: hit whichever node now hosts the
+            // anchored device block (the logical rank keeps dying even
+            // though the physical substitute changed). If the holder is
+            // not currently running (still mid-recovery), this
+            // occurrence fizzles rather than retargeting a random node.
+            match self.flap_anchor.get(&spec_idx).copied().and_then(|device| {
+                self.cluster.node_of_device(device)
+            }) {
+                Some(holder) => {
+                    if let Some(pos) = pool.iter().position(|&n| n == holder) {
+                        pool.swap_remove(pos);
+                        victims.push(holder);
+                    } else {
+                        return Vec::new();
+                    }
+                }
+                None => return Vec::new(),
+            }
+        } else if let Some(n) = node {
+            if let Some(pos) = pool.iter().position(|&p| p == n) {
+                pool.swap_remove(pos);
+                victims.push(n);
+            }
+        }
+
+        while victims.len() < wanted && !pool.is_empty() {
+            // Sorted pool + seeded draw keeps selection deterministic.
+            pool.sort_unstable();
+            let i = self.rng.below(pool.len() as u64) as usize;
+            victims.push(pool.swap_remove(i));
+        }
+        victims.sort_unstable();
+        victims
+    }
+
+    fn on_fault(
+        &mut self,
+        t: f64,
+        spec_idx: usize,
+        node: Option<usize>,
+        kind: Option<FailureKind>,
+        wanted: usize,
+        follow_anchor: bool,
+    ) {
+        let victims = self.pick_victims(spec_idx, node, wanted, follow_anchor);
+        if victims.is_empty() {
+            self.journal.push(t, "fault_dropped_no_target", Json::object());
+            return;
+        }
+        // Anchor the first flap occurrence to the victim's device block.
+        if !follow_anchor {
+            if let Some(first_dev) =
+                self.cluster.nodes[victims[0]].devices.first().copied()
+            {
+                self.flap_anchor.entry(spec_idx).or_insert(first_dev);
+            }
+        }
+        let kind = kind.unwrap_or_else(|| FailureInjector::sample_kind(&mut self.rng));
+        for &v in &victims {
+            self.cluster.fail_node(v).expect("victim was running");
+            // A failed straggler is no longer pacing the job.
+            self.slow.remove(&v);
+            let mut a = Json::object();
+            a.set("node", v).set("kind", kind.name());
+            self.journal.push(t, "fault_injected", a);
+        }
+
+        let detection_s = match self.spec.mode {
+            RecoveryMode::Flash => sample_detection_s(&self.scfg, kind, &mut self.rng),
+            RecoveryMode::Vanilla => self.scfg.collective_timeout_s,
+        };
+        let aware = t + detection_s;
+        let cost_for = |me: &mut Self, k: usize| match me.spec.mode {
+            RecoveryMode::Flash => flash_restart_cost(&me.scfg, k, &mut me.rng),
+            RecoveryMode::Vanilla => vanilla_restart_cost(&me.scfg, &mut me.rng),
+        };
+
+        match self.recovery.take() {
+            Some(mut rec) => {
+                // Failure during recovery: fold the new victims in and
+                // re-establish for the union — the ready time extends.
+                rec.nodes.extend(victims.iter().copied());
+                rec.merged_faults += 1;
+                let cost = cost_for(self, rec.nodes.len());
+                let extended = (aware + cost.critical_path_s).max(rec.ready_s);
+                let mut a = Json::object();
+                a.set("pending_nodes", rec.nodes.len())
+                    .set("ready_s", extended);
+                self.journal.push(t, "recovery_extended", a);
+                rec.ready_s = extended;
+                self.gen += 1;
+                rec.gen = self.gen;
+                self.push(extended, Ev::RecoveryDone { gen: self.gen });
+                self.recovery = Some(rec);
+                self.merged_recoveries += 1;
+            }
+            None => {
+                let lost = match self.spec.mode {
+                    RecoveryMode::Flash => 0,
+                    // Vanilla rolls back to the last periodic checkpoint.
+                    RecoveryMode::Vanilla => {
+                        let done = self.steps_accum.floor() as u64;
+                        done % self.spec.cluster.ckpt_interval_steps.max(1)
+                    }
+                };
+                let cost = cost_for(self, victims.len());
+                let ready = aware + cost.critical_path_s;
+                let mut a = Json::object();
+                a.set("detection_s", detection_s)
+                    .set("nodes", victims.len())
+                    .set("ready_s", ready);
+                self.journal.push(t, "recovery_started", a);
+                self.gen += 1;
+                self.push(ready, Ev::RecoveryDone { gen: self.gen });
+                self.recovery = Some(InFlight {
+                    gen: self.gen,
+                    first_fault_s: t,
+                    aware_s: aware,
+                    ready_s: ready,
+                    detection_s,
+                    nodes: victims,
+                    merged_faults: 0,
+                    lost_steps: lost,
+                });
+            }
+        }
+    }
+
+    fn on_recovery_done(&mut self, t: f64, gen: u64) {
+        if self.recovery.as_ref().map(|r| r.gen) != Some(gen) {
+            return; // superseded by a merged extension
+        }
+        let rec = self.recovery.take().unwrap();
+        for &node in &rec.nodes {
+            match self.cluster.substitute(node) {
+                Ok(spare) => {
+                    let mut a = Json::object();
+                    a.set("node", node).set("spare", spare);
+                    self.journal.push(t, "node_substituted", a);
+                    if let Some(rejoin) = self.spec.cluster.rejoin_s {
+                        self.push(t + rejoin, Ev::Rejoin { node });
+                    }
+                }
+                Err(_) => {
+                    self.spare_exhausted = true;
+                    let mut a = Json::object();
+                    a.set("node", node);
+                    self.journal.push(t, "spare_pool_exhausted", a);
+                    if let Some(rejoin) = self.spec.cluster.rejoin_s {
+                        self.push(t + rejoin, Ev::Rejoin { node });
+                    }
+                }
+            }
+        }
+        for id in 0..self.cluster.nodes.len() {
+            if self.cluster.nodes[id].state == NodeState::Starting {
+                self.cluster.set_state(id, NodeState::Running);
+            }
+        }
+        // FlashRecovery redoes the interrupted half step on resume.
+        if self.spec.mode == RecoveryMode::Flash {
+            self.downtime_s += self.step_time_s / 2.0;
+        }
+        self.lost_steps += rec.lost_steps;
+        let mut a = Json::object();
+        a.set("nodes", rec.nodes.len())
+            .set("restart_s", t - rec.aware_s)
+            .set("downtime_s", t - rec.first_fault_s)
+            .set("merged_faults", rec.merged_faults);
+        self.journal.push(t, "recovery_complete", a);
+        self.recoveries.push(CampaignRecovery {
+            started_s: rec.first_fault_s,
+            aware_s: rec.aware_s,
+            ended_s: t,
+            detection_s: rec.detection_s,
+            restart_s: t - rec.aware_s,
+            nodes: rec.nodes,
+            merged_faults: rec.merged_faults,
+            lost_steps: rec.lost_steps,
+        });
+    }
+
+    fn on_rejoin(&mut self, t: f64, node: usize) {
+        if self.cluster.nodes[node].state != NodeState::Faulty {
+            return;
+        }
+        if self.cluster.nodes[node].devices.is_empty() {
+            // Substituted earlier: repaired machine re-enters the pool.
+            self.cluster.set_state(node, NodeState::Spare);
+            let mut a = Json::object();
+            a.set("node", node);
+            self.journal.push(t, "node_rejoined_as_spare", a);
+        } else {
+            // Never substituted (pool was exhausted): repaired in place
+            // and resumes serving its own device block.
+            self.cluster.set_state(node, NodeState::Running);
+            let mut a = Json::object();
+            a.set("node", node);
+            self.journal.push(t, "node_repaired_in_place", a);
+        }
+    }
+
+    fn on_straggler_start(
+        &mut self,
+        t: f64,
+        node: Option<usize>,
+        slowdown: f64,
+        duration_s: f64,
+    ) {
+        let victims = self.pick_victims(usize::MAX, node, 1, false);
+        let Some(&v) = victims.first() else {
+            self.journal.push(t, "fault_dropped_no_target", Json::object());
+            return;
+        };
+        self.slow_token += 1;
+        let token = self.slow_token;
+        self.slow.insert(v, (slowdown, token));
+        let mut a = Json::object();
+        a.set("node", v).set("slowdown", slowdown);
+        self.journal.push(t, "straggler_start", a);
+        let c = &self.spec.cluster;
+        if self.spec.mode == RecoveryMode::Flash
+            && slowdown >= c.straggler_evict_threshold
+        {
+            self.push(
+                t + c.straggler_evict_after_s,
+                Ev::StragglerEvict { node: v, token },
+            );
+        }
+        self.push(t + duration_s, Ev::StragglerEnd { node: v, token });
+    }
+
+    fn on_straggler_end(&mut self, t: f64, node: usize, token: u64) {
+        if self.slow.get(&node).map(|(_, tok)| *tok) != Some(token) {
+            return;
+        }
+        self.slow.remove(&node);
+        let mut a = Json::object();
+        a.set("node", node);
+        self.journal.push(t, "straggler_end", a);
+    }
+
+    fn on_straggler_evict(&mut self, t: f64, node: usize, token: u64) {
+        if self.slow.get(&node).map(|(_, tok)| *tok) != Some(token) {
+            return;
+        }
+        self.slow.remove(&node);
+        self.stragglers_evicted += 1;
+        let mut a = Json::object();
+        a.set("node", node);
+        self.journal.push(t, "straggler_evicted", a);
+        // Eviction is a controller-initiated soft failure: the degraded
+        // node is replaced like a timed-out one.
+        self.on_fault(
+            t,
+            usize::MAX - 1,
+            Some(node),
+            Some(FailureKind::Timeout),
+            1,
+            false,
+        );
+    }
+
+    fn run(mut self) -> (CampaignReport, Journal) {
+        {
+            let mut a = Json::object();
+            a.set("mode", self.spec.mode.name())
+                .set("nodes", self.spec.cluster.active_nodes())
+                .set("spares", self.spec.cluster.spare_nodes)
+                .set("devices", self.spec.cluster.devices)
+                .set("step_time_s", self.step_time_s);
+            self.journal.push(0.0, "campaign_start", a);
+        }
+        self.expand();
+        while let Some(QEntry { at, ev, .. }) = self.queue.pop() {
+            self.advance(at);
+            match ev {
+                Ev::Fault { spec_idx, node, kind, wanted, follow_anchor } => {
+                    self.on_fault(at, spec_idx, node, kind, wanted, follow_anchor)
+                }
+                Ev::RecoveryDone { gen } => self.on_recovery_done(at, gen),
+                Ev::Rejoin { node } => self.on_rejoin(at, node),
+                Ev::StragglerStart { node, slowdown, duration_s } => {
+                    self.on_straggler_start(at, node, slowdown, duration_s)
+                }
+                Ev::StragglerEnd { node, token } => {
+                    self.on_straggler_end(at, node, token)
+                }
+                Ev::StragglerEvict { node, token } => {
+                    self.on_straggler_evict(at, node, token)
+                }
+                Ev::Horizon => {}
+            }
+        }
+        let end_s = self.last_t;
+        let steps_completed =
+            (self.steps_accum.floor() as u64).saturating_sub(self.lost_steps);
+        let report = CampaignReport {
+            scenario: self.spec.name.clone(),
+            seed: self.journal.seed,
+            mode: self.spec.mode,
+            merged_recoveries: self.merged_recoveries,
+            spare_exhausted: self.spare_exhausted,
+            stragglers_evicted: self.stragglers_evicted,
+            unrecovered_nodes: self.cluster.count(NodeState::Faulty),
+            steps_completed,
+            lost_steps: self.lost_steps,
+            total_downtime_s: self.downtime_s,
+            final_running_nodes: self.cluster.count(NodeState::Running),
+            spares_left: self.cluster.count(NodeState::Spare),
+            horizon_s: self.spec.horizon_s,
+            end_s,
+            step_time_s: self.step_time_s,
+            recoveries: self.recoveries,
+        };
+        // journal tail carries the summary for offline scraping
+        self.journal.push(end_s, "campaign_end", report.to_json());
+        (report, self.journal)
+    }
+}
+
+/// Run one campaign: interpret `spec` under `seed`, returning the
+/// report and the replayable event journal.
+pub fn run_campaign(spec: &ScenarioSpec, seed: u64) -> Result<(CampaignReport, Journal)> {
+    spec.validate()?;
+    Ok(Campaign::new(spec, seed).run())
+}
+
+/// Evaluate a spec's assertions against a campaign report.
+pub fn evaluate(assertions: &Assertions, report: &CampaignReport) -> Vec<AssertionOutcome> {
+    let mut out = Vec::new();
+    let mut check = |name: &str, pass: bool, detail: String| {
+        out.push(AssertionOutcome { name: name.to_string(), pass, detail });
+    };
+
+    if let Some(bound) = assertions.max_single_recovery_s {
+        let worst = report
+            .recoveries
+            .iter()
+            .map(|r| r.total_s())
+            .fold(0.0f64, f64::max);
+        check(
+            "max_single_recovery_s",
+            worst <= bound,
+            format!("worst {worst:.1}s vs bound {bound:.1}s"),
+        );
+    }
+    if let Some(bound) = assertions.max_total_downtime_s {
+        check(
+            "max_total_downtime_s",
+            report.total_downtime_s <= bound,
+            format!("{:.1}s vs bound {bound:.1}s", report.total_downtime_s),
+        );
+    }
+    if let Some(bound) = assertions.max_lost_steps {
+        check(
+            "max_lost_steps",
+            report.lost_steps <= bound,
+            format!("{} vs bound {bound}", report.lost_steps),
+        );
+    }
+    if assertions.require_all_recovered {
+        check(
+            "require_all_recovered",
+            report.unrecovered_nodes == 0,
+            format!("{} nodes unrecovered", report.unrecovered_nodes),
+        );
+    }
+    if let Some(min) = assertions.min_recoveries {
+        check(
+            "min_recoveries",
+            report.recoveries.len() >= min,
+            format!("{} vs min {min}", report.recoveries.len()),
+        );
+    }
+    if let Some(min) = assertions.min_merged_recoveries {
+        check(
+            "min_merged_recoveries",
+            report.merged_recoveries >= min,
+            format!("{} vs min {min}", report.merged_recoveries),
+        );
+    }
+    check(
+        "spare_exhaustion",
+        report.spare_exhausted == assertions.expect_spare_exhaustion,
+        format!(
+            "exhausted={} expected={}",
+            report.spare_exhausted, assertions.expect_spare_exhaustion
+        ),
+    );
+    if let Some(min) = assertions.min_steps_completed {
+        check(
+            "min_steps_completed",
+            report.steps_completed >= min,
+            format!("{} vs min {min}", report.steps_completed),
+        );
+    }
+    if let Some(min) = assertions.min_final_running_nodes {
+        check(
+            "min_final_running_nodes",
+            report.final_running_nodes >= min,
+            format!("{} vs min {min}", report.final_running_nodes),
+        );
+    }
+    if let Some(min) = assertions.min_stragglers_evicted {
+        check(
+            "min_stragglers_evicted",
+            report.stragglers_evicted >= min,
+            format!("{} vs min {min}", report.stragglers_evicted),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::library;
+
+    #[test]
+    fn all_library_scenarios_pass_their_assertions() {
+        for spec in library::all(256) {
+            for seed in [1u64, 7, 42] {
+                let (report, _) = run_campaign(&spec, seed).unwrap();
+                let outcomes = evaluate(&spec.assertions, &report);
+                assert!(
+                    passed(&outcomes),
+                    "{} seed {seed} failed: {:?}",
+                    spec.name,
+                    outcomes.iter().filter(|o| !o.pass).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn same_spec_and_seed_give_byte_identical_journals() {
+        let spec = library::by_name("rolling_cascade", 256).unwrap();
+        let (_, j1) = run_campaign(&spec, 9).unwrap();
+        let (_, j2) = run_campaign(&spec, 9).unwrap();
+        assert_eq!(j1.render(), j2.render());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let spec = library::by_name("single_fault", 256).unwrap();
+        let (_, j1) = run_campaign(&spec, 1).unwrap();
+        let (_, j2) = run_campaign(&spec, 2).unwrap();
+        assert_ne!(j1.render(), j2.render());
+    }
+
+    #[test]
+    fn failure_during_recovery_merges() {
+        let spec = library::by_name("failure_during_recovery", 256).unwrap();
+        let (report, journal) = run_campaign(&spec, 3).unwrap();
+        assert!(report.merged_recoveries >= 1);
+        assert_eq!(report.recoveries.len(), 1, "one merged episode expected");
+        assert_eq!(report.recoveries[0].nodes.len(), 2);
+        assert!(journal
+            .events()
+            .iter()
+            .any(|e| e.get("event").as_str() == Some("recovery_extended")));
+    }
+
+    #[test]
+    fn spare_exhaustion_degrades_without_wedging() {
+        let spec = library::by_name("spare_exhaustion", 256).unwrap();
+        let (report, _) = run_campaign(&spec, 5).unwrap();
+        assert!(report.spare_exhausted);
+        assert_eq!(report.unrecovered_nodes, 1);
+        assert_eq!(report.spares_left, 0);
+        // job keeps training on the surviving fleet
+        assert!(report.steps_completed > 0);
+    }
+
+    #[test]
+    fn flap_keeps_hitting_the_same_device_block() {
+        let spec = library::by_name("flaky_node", 256).unwrap();
+        let (report, journal) = run_campaign(&spec, 11).unwrap();
+        assert!(report.recoveries.len() >= 3, "{}", report.recoveries.len());
+        // every substitution must eventually be matched by a rejoin
+        let subs = journal
+            .events()
+            .iter()
+            .filter(|e| e.get("event").as_str() == Some("node_substituted"))
+            .count();
+        let rejoins = journal
+            .events()
+            .iter()
+            .filter(|e| e.get("event").as_str() == Some("node_rejoined_as_spare"))
+            .count();
+        assert!(subs >= 3);
+        assert!(rejoins >= subs - 1, "{rejoins} rejoins for {subs} subs");
+    }
+
+    #[test]
+    fn vanilla_campaign_loses_steps_and_detects_slowly() {
+        let mut spec = library::by_name("single_fault", 256).unwrap();
+        spec.mode = RecoveryMode::Vanilla;
+        spec.cluster.collective_timeout_s = 300.0;
+        spec.horizon_s = 3600.0;
+        spec.assertions = Default::default();
+        spec.assertions.require_all_recovered = true;
+        let (report, _) = run_campaign(&spec, 2).unwrap();
+        assert_eq!(report.recoveries.len(), 1);
+        assert!(report.recoveries[0].detection_s >= 300.0);
+        // fault at 120s: a handful of steps were done and rolled back
+        assert!(report.lost_steps > 0, "expected checkpoint rollback loss");
+    }
+}

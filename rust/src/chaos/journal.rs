@@ -1,0 +1,121 @@
+//! Seed-stamped campaign event journal.
+//!
+//! Every campaign run appends typed events (fault injections,
+//! detections, recovery phases, substitutions, rejoin/exhaustion) to a
+//! journal that renders to canonical JSONL. The determinism contract:
+//! identical `(spec, seed)` pairs produce **byte-identical** journals —
+//! every event is keyed by simulated time (never wall clock), object
+//! keys render in sorted order (`util::Json` uses a `BTreeMap`), and
+//! all randomness flows from the run's seeded RNG in event order.
+//! `rust/tests/prop_chaos.rs` enforces the contract.
+
+use crate::util::Json;
+
+/// Append-only event journal for one campaign run.
+#[derive(Debug, Clone)]
+pub struct Journal {
+    pub spec_name: String,
+    pub spec_hash: u64,
+    pub seed: u64,
+    events: Vec<Json>,
+    seq: u64,
+}
+
+impl Journal {
+    pub fn new(spec_name: &str, spec_hash: u64, seed: u64) -> Self {
+        Journal {
+            spec_name: spec_name.to_string(),
+            spec_hash,
+            seed,
+            events: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    /// Record an event at simulated time `t`. `attrs` must be an
+    /// object; `seq`/`t`/`event` keys are stamped on top.
+    pub fn push(&mut self, t: f64, event: &str, mut attrs: Json) {
+        self.seq += 1;
+        attrs
+            .set("seq", self.seq)
+            .set("t", t)
+            .set("event", event);
+        self.events.push(attrs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[Json] {
+        &self.events
+    }
+
+    /// Canonical JSONL: one header line (spec identity + seed) followed
+    /// by one compact JSON object per event. This string is the
+    /// byte-identity the determinism tests compare.
+    pub fn render(&self) -> String {
+        let mut header = Json::object();
+        header
+            .set("journal", "flashrecovery-chaos-v1")
+            .set("scenario", self.spec_name.as_str())
+            .set("spec_hash", format!("{:016x}", self.spec_hash))
+            .set("seed", self.seed);
+        let mut out = header.render();
+        out.push('\n');
+        for e in &self.events {
+            out.push_str(&e.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// FNV-1a digest of the rendered journal (cheap equality probe).
+    pub fn digest(&self) -> u64 {
+        crate::util::fnv1a(self.render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_sequenced_and_stamped() {
+        let mut j = Journal::new("demo", 0xABCD, 7);
+        let mut a = Json::object();
+        a.set("node", 3usize);
+        j.push(12.5, "fault_injected", a);
+        j.push(13.0, "detection", Json::object());
+        assert_eq!(j.len(), 2);
+        let text = j.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let head = Json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("scenario").as_str(), Some("demo"));
+        assert_eq!(head.get("seed").as_i64(), Some(7));
+        let e1 = Json::parse(lines[1]).unwrap();
+        assert_eq!(e1.get("seq").as_i64(), Some(1));
+        assert_eq!(e1.get("event").as_str(), Some("fault_injected"));
+        assert_eq!(e1.get("node").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn identical_pushes_render_identically() {
+        let build = || {
+            let mut j = Journal::new("x", 1, 2);
+            for i in 0..10 {
+                let mut a = Json::object();
+                a.set("i", i as u64).set("v", i as f64 * 0.1);
+                j.push(i as f64, "tick", a);
+            }
+            j
+        };
+        assert_eq!(build().render(), build().render());
+        assert_eq!(build().digest(), build().digest());
+    }
+}

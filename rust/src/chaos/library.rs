@@ -1,0 +1,280 @@
+//! Built-in chaos scenario library.
+//!
+//! Seven parameterized campaigns, from the paper's single-failure
+//! baseline to compound patterns production fleets actually see
+//! (ByteDance's robust-training report, Unicron): concurrent faults,
+//! rolling cascades, flapping hosts, failures striking mid-recovery,
+//! spare-pool exhaustion, and straggler degradation. Each spec carries
+//! assertions calibrated to the paper-fit latency model — recovery-time
+//! bounds are intentionally scale-independent (the paper's headline
+//! claim), so the same spec passes from 64 to 18k devices.
+//!
+//! `benches/chaos_campaigns.rs` sweeps the library across scales;
+//! `scenario run --spec <name>` runs one by name.
+
+use super::spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, ScenarioSpec};
+use crate::cluster::failure::FailureKind;
+use crate::config::RecoveryMode;
+
+/// Names of all built-in scenarios, in presentation order.
+pub const NAMES: [&str; 7] = [
+    "single_fault",
+    "double_fault",
+    "rolling_cascade",
+    "flaky_node",
+    "failure_during_recovery",
+    "spare_exhaustion",
+    "straggler_degrade",
+];
+
+fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
+    ScenarioSpec {
+        name: name.to_string(),
+        description: description.to_string(),
+        mode: RecoveryMode::Flash,
+        horizon_s: 1800.0,
+        cluster: ClusterShape { devices, ..Default::default() },
+        faults: Vec::new(),
+        assertions: Assertions::default(),
+        live: Default::default(),
+    }
+}
+
+/// Paper baseline: one failure, sampled from the Fig. 9 mix, mid-run.
+pub fn single_fault(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "single_fault",
+        "Paper baseline: one sampled failure at t=120s, checkpoint-free recovery",
+        devices,
+    );
+    s.faults.push(FaultSpec { at_s: 120.0, ..Default::default() });
+    s.faults[0].rank = Some(1);
+    s.faults[0].at_step = Some(4);
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(250.0),
+        max_total_downtime_s: Some(300.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_steps_completed: Some(60),
+        ..Default::default()
+    };
+    s
+}
+
+/// Two concurrent failures on distinct nodes — one merged recovery.
+pub fn double_fault(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "double_fault",
+        "Two simultaneous crashes on distinct nodes absorbed by one recovery",
+        devices,
+    );
+    s.cluster.spare_nodes = 2;
+    let mut f1 = FaultSpec { at_s: 150.0, ..Default::default() };
+    f1.rank = Some(1);
+    f1.at_step = Some(4);
+    let mut f2 = FaultSpec { at_s: 150.0, ..Default::default() };
+    f2.rank = Some(2);
+    f2.at_step = Some(4);
+    s.faults = vec![f1, f2];
+    s.live.dp = 4;
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(300.0),
+        max_total_downtime_s: Some(350.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_merged_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// Rolling cascade: four crashes 30s apart, each landing inside the
+/// previous recovery window.
+pub fn rolling_cascade(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "rolling_cascade",
+        "Four-node rolling cascade at 30s spacing — recovery keeps absorbing new victims",
+        devices,
+    );
+    s.cluster.spare_nodes = 4;
+    s.faults.push(FaultSpec {
+        family: FaultFamily::Cascade,
+        at_s: 120.0,
+        nodes: 4,
+        spacing_s: 30.0,
+        ..Default::default()
+    });
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(450.0),
+        max_total_downtime_s: Some(600.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_merged_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// One flapping host: fails, is substituted, repairs, rejoins the
+/// spare pool, and fails again — three times.
+pub fn flaky_node(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "flaky_node",
+        "One device block fails three times; repaired hosts rejoin the spare pool",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    s.cluster.rejoin_s = Some(150.0);
+    s.horizon_s = 1500.0;
+    let mut f = FaultSpec {
+        family: FaultFamily::Flap,
+        at_s: 200.0,
+        times: 3,
+        period_s: 400.0,
+        ..Default::default()
+    };
+    f.rank = Some(1);
+    f.at_step = Some(3);
+    f.period_steps = 4;
+    s.live.steps = 16;
+    s.faults.push(f);
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(250.0),
+        max_total_downtime_s: Some(800.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(3),
+        min_steps_completed: Some(40),
+        ..Default::default()
+    };
+    s
+}
+
+/// A second failure strikes while the first recovery is mid-restart.
+pub fn failure_during_recovery(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "failure_during_recovery",
+        "Second crash lands inside the first restart window; recovery merges it",
+        devices,
+    );
+    s.cluster.spare_nodes = 2;
+    s.faults.push(FaultSpec {
+        at_s: 100.0,
+        failure: Some(FailureKind::Network),
+        ..Default::default()
+    });
+    s.faults.push(FaultSpec {
+        at_s: 130.0,
+        failure: Some(FailureKind::Segfault),
+        ..Default::default()
+    });
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(350.0),
+        max_total_downtime_s: Some(400.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_merged_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// More simultaneous victims than spares: the pool empties, one node
+/// stays failed, and the job degrades gracefully instead of wedging.
+pub fn spare_exhaustion(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "spare_exhaustion",
+        "Simultaneous crashes exceed the spare pool; job degrades without deadlock",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    s.faults.push(FaultSpec {
+        family: FaultFamily::SpareExhaustion,
+        at_s: 120.0,
+        ..Default::default()
+    });
+    let active = s.cluster.active_nodes();
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(300.0),
+        require_all_recovered: false,
+        expect_spare_exhaustion: true,
+        min_recoveries: Some(1),
+        min_final_running_nodes: Some(active.saturating_sub(1)),
+        min_steps_completed: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// A straggler slows the synchronous job 3x; flash evicts it after the
+/// patience window and substitutes a healthy node.
+pub fn straggler_degrade(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "straggler_degrade",
+        "3x straggler paces the whole DP group; degrade-aware eviction recovers throughput",
+        devices,
+    );
+    s.faults.push(FaultSpec {
+        family: FaultFamily::Straggler,
+        at_s: 150.0,
+        slowdown: 3.0,
+        duration_s: 600.0,
+        ..Default::default()
+    });
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(250.0),
+        max_total_downtime_s: Some(300.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_stragglers_evicted: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// All built-in scenarios at the given device count.
+pub fn all(devices: usize) -> Vec<ScenarioSpec> {
+    NAMES
+        .iter()
+        .map(|n| by_name(n, devices).expect("library name"))
+        .collect()
+}
+
+/// Look up one built-in scenario by name.
+pub fn by_name(name: &str, devices: usize) -> Option<ScenarioSpec> {
+    Some(match name {
+        "single_fault" => single_fault(devices),
+        "double_fault" => double_fault(devices),
+        "rolling_cascade" => rolling_cascade(devices),
+        "flaky_node" => flaky_node(devices),
+        "failure_during_recovery" => failure_during_recovery(devices),
+        "spare_exhaustion" => spare_exhaustion(devices),
+        "straggler_degrade" => straggler_degrade(devices),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_builders_agree() {
+        for n in NAMES {
+            let s = by_name(n, 256).unwrap();
+            assert_eq!(s.name, n);
+            s.validate().unwrap();
+            assert!(!s.description.is_empty());
+        }
+        assert!(by_name("nope", 256).is_none());
+        assert_eq!(all(256).len(), NAMES.len());
+    }
+
+    #[test]
+    fn library_scales_without_revalidation_errors() {
+        for devices in [64, 1024, 18_000] {
+            for s in all(devices) {
+                s.validate().unwrap();
+            }
+        }
+    }
+}

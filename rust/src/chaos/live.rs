@@ -1,0 +1,183 @@
+//! Live execution path: interpret a chaos spec against the *real*
+//! in-process training plane (`coordinator::Controller` +
+//! `training::worker` threads executing PJRT artifacts).
+//!
+//! The simulator path scales to paper-size clusters; this path trades
+//! scale for realism — actual worker threads, actual collectives,
+//! actual state restore. Spec faults map to scripted [`FailurePlan`]s
+//! via their live hints (`rank` / `at_step` / `phase`); families with
+//! no in-process equivalent (partition, spare exhaustion, straggler)
+//! are rejected with a clear error so specs stay honest about what
+//! each path can express.
+//!
+//! Requires compiled artifacts and a real `xla` backend; with the
+//! vendored stub `run_live` fails fast and `scenario run` reports the
+//! live plane as unavailable (DESIGN.md §7).
+
+use super::engine::AssertionOutcome;
+use super::spec::{FaultFamily, ScenarioSpec};
+use crate::cluster::failure::FailureKind;
+use crate::coordinator::{ControllerConfig, RunReport};
+use crate::training::worker::{FailurePlan, Phase};
+use crate::training::TrainingEngine;
+use anyhow::{bail, Context, Result};
+
+fn parse_phase(s: &str) -> Phase {
+    match s {
+        "optstep" | "opt" | "optimizer" => Phase::OptStep,
+        _ => Phase::FwdBwd,
+    }
+}
+
+/// Expand the spec's fault timeline into scripted worker failures.
+pub fn live_failure_plans(spec: &ScenarioSpec) -> Result<Vec<FailurePlan>> {
+    let mut plans = Vec::new();
+    for (i, f) in spec.faults.iter().enumerate() {
+        let rank = |d: usize| f.rank.unwrap_or(d) % spec.live.dp.max(1);
+        let step = f
+            .at_step
+            .with_context(|| format!("fault {i}: live path needs \"at_step\""))?;
+        let kind = f.failure.unwrap_or(FailureKind::Segfault);
+        let phase = parse_phase(&f.phase);
+        match f.family {
+            FaultFamily::Crash => {
+                plans.push(FailurePlan { rank: rank(i + 1), step, phase, kind })
+            }
+            FaultFamily::Cascade => {
+                for j in 0..f.nodes {
+                    plans.push(FailurePlan {
+                        rank: (rank(i + 1) + j) % spec.live.dp.max(1),
+                        step: step + j as u64,
+                        phase,
+                        kind,
+                    });
+                }
+            }
+            FaultFamily::Flap => {
+                for j in 0..f.times {
+                    plans.push(FailurePlan {
+                        rank: rank(i + 1),
+                        step: step + j as u64 * f.period_steps.max(1),
+                        phase,
+                        kind,
+                    });
+                }
+            }
+            other => bail!(
+                "fault {i}: {:?} has no live in-process equivalent — run this \
+                 scenario on the simulator path",
+                other.name()
+            ),
+        }
+    }
+    if plans.iter().any(|p| p.step >= spec.live.steps) {
+        bail!(
+            "live plan schedules a failure at/after the final step {} — raise \
+             live.steps in the spec",
+            spec.live.steps
+        );
+    }
+    Ok(plans)
+}
+
+/// Controller configuration for the live run of a spec.
+pub fn controller_config(spec: &ScenarioSpec, seed: u64) -> Result<ControllerConfig> {
+    let mut cfg = ControllerConfig::flash(spec.live.dp, spec.live.steps);
+    cfg.seed = seed;
+    cfg.failures = live_failure_plans(spec)?;
+    Ok(cfg)
+}
+
+/// Outcome of a live run: the controller's report plus the spec's
+/// assertions evaluated against it.
+pub struct LiveOutcome {
+    pub report: RunReport,
+    pub assertions: Vec<AssertionOutcome>,
+}
+
+/// Assertions meaningful on the live path, checked against the report.
+pub fn evaluate_live(spec: &ScenarioSpec, report: &RunReport) -> Vec<AssertionOutcome> {
+    let a = &spec.assertions;
+    let mut out = Vec::new();
+    let mut check = |name: &str, pass: bool, detail: String| {
+        out.push(AssertionOutcome { name: name.to_string(), pass, detail });
+    };
+    let lost: u64 = report.recoveries.iter().map(|r| r.lost_steps).sum();
+    if let Some(bound) = a.max_lost_steps {
+        check("max_lost_steps", lost <= bound, format!("{lost} vs bound {bound}"));
+    }
+    if a.require_all_recovered {
+        check(
+            "require_all_recovered",
+            report.final_step == spec.live.steps,
+            format!("final step {} of {}", report.final_step, spec.live.steps),
+        );
+        check(
+            "dp_replicas_bitwise_consistent",
+            report.final_param_divergence == 0.0,
+            format!("divergence {}", report.final_param_divergence),
+        );
+    }
+    if let Some(min) = a.min_recoveries {
+        check(
+            "min_recoveries",
+            report.recoveries.len() >= min,
+            format!("{} vs min {min}", report.recoveries.len()),
+        );
+    }
+    out
+}
+
+/// Run the spec's live plan end to end. Fails fast when the live
+/// training plane (real xla + artifacts) is unavailable.
+pub fn run_live(spec: &ScenarioSpec, seed: u64) -> Result<LiveOutcome> {
+    let cfg = controller_config(spec, seed)?;
+    let engine = TrainingEngine::load("tiny")
+        .context("live training plane unavailable (needs artifacts + real xla)")?;
+    let report = engine.run(cfg)?;
+    let assertions = evaluate_live(spec, &report);
+    Ok(LiveOutcome { report, assertions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::library;
+
+    #[test]
+    fn single_fault_maps_to_one_plan() {
+        let spec = library::by_name("single_fault", 256).unwrap();
+        let plans = live_failure_plans(&spec).unwrap();
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].rank, 1);
+        assert_eq!(plans[0].step, 4);
+        let cfg = controller_config(&spec, 3).unwrap();
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.failures.len(), 1);
+    }
+
+    #[test]
+    fn flap_expands_to_spaced_plans_on_one_rank() {
+        let spec = library::by_name("flaky_node", 256).unwrap();
+        let plans = live_failure_plans(&spec).unwrap();
+        assert_eq!(plans.len(), 3);
+        assert!(plans.iter().all(|p| p.rank == plans[0].rank));
+        assert_eq!(plans[1].step - plans[0].step, 4);
+        assert!(plans.last().unwrap().step < spec.live.steps);
+    }
+
+    #[test]
+    fn unsupported_families_are_rejected() {
+        let spec = library::by_name("spare_exhaustion", 256).unwrap();
+        assert!(live_failure_plans(&spec).is_err());
+        let spec = library::by_name("straggler_degrade", 256).unwrap();
+        assert!(live_failure_plans(&spec).is_err());
+    }
+
+    #[test]
+    fn missing_at_step_is_an_error() {
+        let spec = library::by_name("rolling_cascade", 256).unwrap();
+        // cascade spec carries no live hints on purpose
+        assert!(live_failure_plans(&spec).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Chaos scenario engine: declarative, multi-failure, deterministically
+//! replayable fault campaigns.
+//!
+//! The paper evaluates exactly one failure per run; production fleets
+//! see bursty, heterogeneous incidents — cascading node deaths,
+//! flapping hosts, failures striking mid-recovery (ByteDance's robust-
+//! training report, Unicron). This subsystem expresses such campaigns
+//! as data and replays them deterministically:
+//!
+//! * [`spec`] — the declarative JSON schema: cluster shape, fault
+//!   timeline (crash / cascade / flap / straggler / partition /
+//!   spare-exhaustion), and outcome assertions;
+//! * [`journal`] — the seed-stamped event journal; identical
+//!   `(spec, seed)` pairs produce byte-identical journals;
+//! * [`engine`] — the campaign interpreter over the calibrated cluster
+//!   simulator (shared protocol math with `cluster::scenario`);
+//! * [`library`] — seven built-in scenarios from the paper baseline to
+//!   compound production patterns;
+//! * [`live`] — the same specs driven against the real in-process
+//!   training plane (controller + worker threads) via scripted
+//!   failure plans.
+//!
+//! CLI: `flashrecovery scenario run --spec <name|file> --seed N`;
+//! sweep: `cargo bench --bench chaos_campaigns`; tour:
+//! `cargo run --example chaos_tour`. Schema: DESIGN.md.
+
+pub mod engine;
+pub mod journal;
+pub mod library;
+pub mod live;
+pub mod spec;
+
+pub use engine::{
+    evaluate, passed, run_campaign, AssertionOutcome, CampaignRecovery, CampaignReport,
+};
+pub use journal::Journal;
+pub use live::{controller_config, evaluate_live, live_failure_plans, run_live, LiveOutcome};
+pub use spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, ScenarioSpec};

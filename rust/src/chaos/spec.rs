@@ -1,0 +1,581 @@
+//! Declarative chaos scenario specs: fault campaigns as data.
+//!
+//! A [`ScenarioSpec`] declares a cluster shape, a timeline of faults
+//! (crash, cascade, flap, straggler-degrade, network partition,
+//! spare-pool exhaustion), and assertions on the campaign outcome (max
+//! recovery time, max lost steps, final cluster health). Specs load
+//! from JSON via the repo's own `util::json` machinery — no serde —
+//! and render back canonically, so a spec's identity (and the
+//! determinism contract of the engine) is `(spec hash, seed)`.
+//!
+//! See DESIGN.md §"Chaos scenario spec schema" for the full schema and
+//! a worked example.
+
+use crate::cluster::failure::FailureKind;
+use crate::config::RecoveryMode;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Spec-level fault families. `Crash`/`Cascade`/`Flap`/`Partition`
+/// remove nodes; `Straggler` degrades one; `SpareExhaustion` is sugar
+/// for "crash one more node than the spare pool can absorb, at once".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultFamily {
+    Crash,
+    Cascade,
+    Flap,
+    Straggler,
+    Partition,
+    SpareExhaustion,
+}
+
+impl FaultFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultFamily::Crash => "crash",
+            FaultFamily::Cascade => "cascade",
+            FaultFamily::Flap => "flap",
+            FaultFamily::Straggler => "straggler",
+            FaultFamily::Partition => "partition",
+            FaultFamily::SpareExhaustion => "spare_exhaustion",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "crash" => FaultFamily::Crash,
+            "cascade" => FaultFamily::Cascade,
+            "flap" => FaultFamily::Flap,
+            "straggler" => FaultFamily::Straggler,
+            "partition" => FaultFamily::Partition,
+            "spare_exhaustion" => FaultFamily::SpareExhaustion,
+            other => bail!("unknown fault kind {other:?}"),
+        })
+    }
+}
+
+/// One entry in the fault timeline.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub family: FaultFamily,
+    /// Injection time (simulated seconds from campaign start).
+    pub at_s: f64,
+    /// Victim node (engine picks a running node when `None`).
+    pub node: Option<usize>,
+    /// Victim count (cascade length / partition width).
+    pub nodes: usize,
+    /// Seconds between cascade members.
+    pub spacing_s: f64,
+    /// Flap repetitions and period.
+    pub times: usize,
+    pub period_s: f64,
+    /// Straggler step-time multiplier and duration.
+    pub slowdown: f64,
+    pub duration_s: f64,
+    /// Concrete failure kind presented to detection (sampled from the
+    /// Fig. 9 mix when `None`).
+    pub failure: Option<FailureKind>,
+    /// Live-path hints (in-process controller run): which DP rank dies
+    /// at which optimizer step, in which phase ("fwdbwd"/"optstep").
+    pub rank: Option<usize>,
+    pub at_step: Option<u64>,
+    pub period_steps: u64,
+    pub phase: String,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            family: FaultFamily::Crash,
+            at_s: 0.0,
+            node: None,
+            nodes: 1,
+            spacing_s: 30.0,
+            times: 3,
+            period_s: 300.0,
+            slowdown: 3.0,
+            duration_s: 300.0,
+            failure: None,
+            rank: None,
+            at_step: None,
+            period_steps: 4,
+            phase: "fwdbwd".to_string(),
+        }
+    }
+}
+
+/// Cluster shape + control-plane constants for a campaign.
+#[derive(Debug, Clone)]
+pub struct ClusterShape {
+    pub devices: usize,
+    pub devices_per_node: usize,
+    pub spare_nodes: usize,
+    pub model_params: f64,
+    pub tcp_parallelism: usize,
+    pub heartbeat_interval_s: f64,
+    pub miss_threshold: u32,
+    pub collective_timeout_s: f64,
+    /// Failed nodes rejoin the spare pool this long after substitution
+    /// (repair + health check); `None` = never (default).
+    pub rejoin_s: Option<f64>,
+    /// Vanilla-mode checkpoint interval in steps (lost-work accounting).
+    pub ckpt_interval_steps: u64,
+    /// Flash evicts a straggler whose slowdown meets the threshold
+    /// after this much patience.
+    pub straggler_evict_after_s: f64,
+    pub straggler_evict_threshold: f64,
+}
+
+impl Default for ClusterShape {
+    fn default() -> Self {
+        ClusterShape {
+            devices: 256,
+            devices_per_node: 8,
+            spare_nodes: 1,
+            model_params: 7e9,
+            tcp_parallelism: 64,
+            heartbeat_interval_s: 2.0,
+            miss_threshold: 3,
+            collective_timeout_s: 1800.0,
+            rejoin_s: None,
+            ckpt_interval_steps: 100,
+            straggler_evict_after_s: 30.0,
+            straggler_evict_threshold: 2.0,
+        }
+    }
+}
+
+impl ClusterShape {
+    pub fn active_nodes(&self) -> usize {
+        self.devices.div_ceil(self.devices_per_node)
+    }
+}
+
+/// Pass/fail conditions evaluated against the campaign report.
+#[derive(Debug, Clone)]
+pub struct Assertions {
+    /// Every individual recovery (detection + restart) within bound.
+    pub max_single_recovery_s: Option<f64>,
+    /// Total time the job spent not training.
+    pub max_total_downtime_s: Option<f64>,
+    /// Total completed optimizer steps discarded by rollbacks.
+    pub max_lost_steps: Option<u64>,
+    /// Every failed node must be substituted by campaign end.
+    pub require_all_recovered: bool,
+    pub min_recoveries: Option<usize>,
+    /// Recoveries that absorbed a fault striking mid-recovery.
+    pub min_merged_recoveries: Option<usize>,
+    pub expect_spare_exhaustion: bool,
+    pub min_steps_completed: Option<u64>,
+    pub min_final_running_nodes: Option<usize>,
+    pub min_stragglers_evicted: Option<usize>,
+}
+
+impl Default for Assertions {
+    fn default() -> Self {
+        Assertions {
+            max_single_recovery_s: None,
+            max_total_downtime_s: None,
+            max_lost_steps: None,
+            require_all_recovered: true,
+            min_recoveries: None,
+            min_merged_recoveries: None,
+            expect_spare_exhaustion: false,
+            min_steps_completed: None,
+            min_final_running_nodes: None,
+            min_stragglers_evicted: None,
+        }
+    }
+}
+
+/// Live-path (in-process controller) run shape.
+#[derive(Debug, Clone)]
+pub struct LiveShape {
+    pub dp: usize,
+    pub steps: u64,
+}
+
+impl Default for LiveShape {
+    fn default() -> Self {
+        LiveShape { dp: 2, steps: 12 }
+    }
+}
+
+/// A complete declarative fault campaign.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    pub mode: RecoveryMode,
+    /// Campaign length in simulated seconds (training-time accounting;
+    /// recoveries in flight at the horizon still run to completion).
+    pub horizon_s: f64,
+    pub cluster: ClusterShape,
+    pub faults: Vec<FaultSpec>,
+    pub assertions: Assertions,
+    pub live: LiveShape,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "unnamed".to_string(),
+            description: String::new(),
+            mode: RecoveryMode::Flash,
+            horizon_s: 1800.0,
+            cluster: ClusterShape::default(),
+            faults: Vec::new(),
+            assertions: Assertions::default(),
+            live: LiveShape::default(),
+        }
+    }
+}
+
+impl ScenarioSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.devices == 0 || self.cluster.devices_per_node == 0 {
+            bail!("cluster must have devices and devices_per_node >= 1");
+        }
+        if self.horizon_s <= 0.0 {
+            bail!("horizon_s must be positive");
+        }
+        let active = self.cluster.active_nodes();
+        for (i, f) in self.faults.iter().enumerate() {
+            if f.at_s < 0.0 || f.at_s > self.horizon_s {
+                bail!("fault {i}: at_s {} outside [0, horizon]", f.at_s);
+            }
+            if let Some(n) = f.node {
+                if n >= active {
+                    bail!("fault {i}: node {n} >= active nodes {active}");
+                }
+            }
+            if f.nodes == 0 {
+                bail!("fault {i}: nodes must be >= 1");
+            }
+            match f.family {
+                FaultFamily::Straggler if f.slowdown < 1.0 => {
+                    bail!("fault {i}: straggler slowdown must be >= 1.0")
+                }
+                FaultFamily::Flap if f.times == 0 => {
+                    bail!("fault {i}: flap times must be >= 1")
+                }
+                FaultFamily::Partition if f.nodes > active => {
+                    bail!("fault {i}: partition of {} > {active} nodes", f.nodes)
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// FNV-1a over the canonical rendering: the spec's identity in
+    /// journals (`(spec_hash, seed)` is the determinism key).
+    pub fn hash(&self) -> u64 {
+        crate::util::fnv1a(self.to_json().render().as_bytes())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut cl = Json::object();
+        cl.set("devices", self.cluster.devices)
+            .set("devices_per_node", self.cluster.devices_per_node)
+            .set("spare_nodes", self.cluster.spare_nodes)
+            .set("model_params", self.cluster.model_params)
+            .set("tcp_parallelism", self.cluster.tcp_parallelism)
+            .set("heartbeat_interval_s", self.cluster.heartbeat_interval_s)
+            .set("miss_threshold", self.cluster.miss_threshold as u64)
+            .set("collective_timeout_s", self.cluster.collective_timeout_s)
+            .set("ckpt_interval_steps", self.cluster.ckpt_interval_steps)
+            .set("straggler_evict_after_s", self.cluster.straggler_evict_after_s)
+            .set(
+                "straggler_evict_threshold",
+                self.cluster.straggler_evict_threshold,
+            );
+        if let Some(r) = self.cluster.rejoin_s {
+            cl.set("rejoin_s", r);
+        }
+
+        let faults: Vec<Json> = self
+            .faults
+            .iter()
+            .map(|f| {
+                let mut o = Json::object();
+                o.set("kind", f.family.name()).set("at_s", f.at_s);
+                if let Some(n) = f.node {
+                    o.set("node", n);
+                }
+                match f.family {
+                    FaultFamily::Cascade | FaultFamily::Partition => {
+                        o.set("nodes", f.nodes);
+                        if f.family == FaultFamily::Cascade {
+                            o.set("spacing_s", f.spacing_s);
+                        }
+                    }
+                    FaultFamily::Flap => {
+                        o.set("times", f.times).set("period_s", f.period_s);
+                        o.set("period_steps", f.period_steps);
+                    }
+                    FaultFamily::Straggler => {
+                        o.set("slowdown", f.slowdown)
+                            .set("duration_s", f.duration_s);
+                    }
+                    _ => {}
+                }
+                if let Some(k) = f.failure {
+                    o.set("failure", k.name());
+                }
+                if let Some(r) = f.rank {
+                    o.set("rank", r);
+                }
+                if let Some(s) = f.at_step {
+                    o.set("at_step", s);
+                }
+                if f.phase != "fwdbwd" {
+                    o.set("phase", f.phase.as_str());
+                }
+                o
+            })
+            .collect();
+
+        let a = &self.assertions;
+        let mut aj = Json::object();
+        aj.set("require_all_recovered", a.require_all_recovered)
+            .set("expect_spare_exhaustion", a.expect_spare_exhaustion);
+        if let Some(v) = a.max_single_recovery_s {
+            aj.set("max_single_recovery_s", v);
+        }
+        if let Some(v) = a.max_total_downtime_s {
+            aj.set("max_total_downtime_s", v);
+        }
+        if let Some(v) = a.max_lost_steps {
+            aj.set("max_lost_steps", v);
+        }
+        if let Some(v) = a.min_recoveries {
+            aj.set("min_recoveries", v);
+        }
+        if let Some(v) = a.min_merged_recoveries {
+            aj.set("min_merged_recoveries", v);
+        }
+        if let Some(v) = a.min_steps_completed {
+            aj.set("min_steps_completed", v);
+        }
+        if let Some(v) = a.min_final_running_nodes {
+            aj.set("min_final_running_nodes", v);
+        }
+        if let Some(v) = a.min_stragglers_evicted {
+            aj.set("min_stragglers_evicted", v);
+        }
+
+        let mut lv = Json::object();
+        lv.set("dp", self.live.dp).set("steps", self.live.steps);
+
+        let mut o = Json::object();
+        o.set("name", self.name.as_str())
+            .set("description", self.description.as_str())
+            .set("mode", self.mode.name())
+            .set("horizon_s", self.horizon_s)
+            .set("cluster", cl)
+            .set("faults", Json::Array(faults))
+            .set("assertions", aj)
+            .set("live", lv);
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = ScenarioSpec::default();
+        let cl = v.get("cluster");
+        let dc = ClusterShape::default();
+        let cluster = ClusterShape {
+            devices: cl.get("devices").as_usize().unwrap_or(dc.devices),
+            devices_per_node: cl
+                .get("devices_per_node")
+                .as_usize()
+                .unwrap_or(dc.devices_per_node),
+            spare_nodes: cl.get("spare_nodes").as_usize().unwrap_or(dc.spare_nodes),
+            model_params: cl.get("model_params").as_f64().unwrap_or(dc.model_params),
+            tcp_parallelism: cl
+                .get("tcp_parallelism")
+                .as_usize()
+                .unwrap_or(dc.tcp_parallelism),
+            heartbeat_interval_s: cl
+                .get("heartbeat_interval_s")
+                .as_f64()
+                .unwrap_or(dc.heartbeat_interval_s),
+            miss_threshold: cl
+                .get("miss_threshold")
+                .as_usize()
+                .unwrap_or(dc.miss_threshold as usize) as u32,
+            collective_timeout_s: cl
+                .get("collective_timeout_s")
+                .as_f64()
+                .unwrap_or(dc.collective_timeout_s),
+            rejoin_s: cl.get("rejoin_s").as_f64(),
+            ckpt_interval_steps: cl
+                .get("ckpt_interval_steps")
+                .as_i64()
+                .unwrap_or(dc.ckpt_interval_steps as i64) as u64,
+            straggler_evict_after_s: cl
+                .get("straggler_evict_after_s")
+                .as_f64()
+                .unwrap_or(dc.straggler_evict_after_s),
+            straggler_evict_threshold: cl
+                .get("straggler_evict_threshold")
+                .as_f64()
+                .unwrap_or(dc.straggler_evict_threshold),
+        };
+
+        let mut faults = Vec::new();
+        if let Some(items) = v.get("faults").as_array() {
+            for (i, fj) in items.iter().enumerate() {
+                let df = FaultSpec::default();
+                let family = FaultFamily::parse(
+                    fj.get("kind").as_str().with_context(|| {
+                        format!("fault {i}: missing \"kind\"")
+                    })?,
+                )?;
+                let failure = match fj.get("failure").as_str() {
+                    None => None,
+                    Some(name) => Some(FailureKind::from_name(name).with_context(
+                        || format!("fault {i}: unknown failure {name:?}"),
+                    )?),
+                };
+                faults.push(FaultSpec {
+                    family,
+                    at_s: fj.get("at_s").as_f64().unwrap_or(df.at_s),
+                    node: fj.get("node").as_usize(),
+                    nodes: fj.get("nodes").as_usize().unwrap_or(df.nodes),
+                    spacing_s: fj.get("spacing_s").as_f64().unwrap_or(df.spacing_s),
+                    times: fj.get("times").as_usize().unwrap_or(df.times),
+                    period_s: fj.get("period_s").as_f64().unwrap_or(df.period_s),
+                    slowdown: fj.get("slowdown").as_f64().unwrap_or(df.slowdown),
+                    duration_s: fj.get("duration_s").as_f64().unwrap_or(df.duration_s),
+                    failure,
+                    rank: fj.get("rank").as_usize(),
+                    at_step: fj.get("at_step").as_i64().map(|s| s.max(0) as u64),
+                    period_steps: fj
+                        .get("period_steps")
+                        .as_i64()
+                        .unwrap_or(df.period_steps as i64)
+                        .max(1) as u64,
+                    phase: fj
+                        .get("phase")
+                        .as_str()
+                        .unwrap_or(&df.phase)
+                        .to_string(),
+                });
+            }
+        }
+
+        let aj = v.get("assertions");
+        let da = Assertions::default();
+        let assertions = Assertions {
+            max_single_recovery_s: aj.get("max_single_recovery_s").as_f64(),
+            max_total_downtime_s: aj.get("max_total_downtime_s").as_f64(),
+            max_lost_steps: aj.get("max_lost_steps").as_i64().map(|v| v.max(0) as u64),
+            require_all_recovered: aj
+                .get("require_all_recovered")
+                .as_bool()
+                .unwrap_or(da.require_all_recovered),
+            min_recoveries: aj.get("min_recoveries").as_usize(),
+            min_merged_recoveries: aj.get("min_merged_recoveries").as_usize(),
+            expect_spare_exhaustion: aj
+                .get("expect_spare_exhaustion")
+                .as_bool()
+                .unwrap_or(da.expect_spare_exhaustion),
+            min_steps_completed: aj
+                .get("min_steps_completed")
+                .as_i64()
+                .map(|v| v.max(0) as u64),
+            min_final_running_nodes: aj.get("min_final_running_nodes").as_usize(),
+            min_stragglers_evicted: aj.get("min_stragglers_evicted").as_usize(),
+        };
+
+        let lv = v.get("live");
+        let dl = LiveShape::default();
+        let spec = ScenarioSpec {
+            name: v.get("name").as_str().unwrap_or(&d.name).to_string(),
+            description: v
+                .get("description")
+                .as_str()
+                .unwrap_or("")
+                .to_string(),
+            mode: RecoveryMode::parse(v.get("mode").as_str().unwrap_or("flash"))?,
+            horizon_s: v.get("horizon_s").as_f64().unwrap_or(d.horizon_s),
+            cluster,
+            faults,
+            assertions,
+            live: LiveShape {
+                dp: lv.get("dp").as_usize().unwrap_or(dl.dp),
+                steps: lv.get("steps").as_i64().unwrap_or(dl.steps as i64) as u64,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let v = Json::parse(&text).context("parsing scenario spec")?;
+        Self::from_json(&v)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().render_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::library;
+
+    #[test]
+    fn library_specs_roundtrip_and_hash_stably() {
+        for spec in library::all(256) {
+            spec.validate().unwrap();
+            let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back.name, spec.name);
+            assert_eq!(back.faults.len(), spec.faults.len());
+            assert_eq!(back.hash(), spec.hash(), "{}: hash unstable", spec.name);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let mut s = ScenarioSpec::default();
+        s.horizon_s = -1.0;
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioSpec::default();
+        s.faults.push(FaultSpec { at_s: 1e9, ..Default::default() });
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioSpec::default();
+        s.faults.push(FaultSpec { node: Some(9999), ..Default::default() });
+        assert!(s.validate().is_err());
+
+        assert!(FaultFamily::parse("meteor_strike").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::temp_dir("chaos-spec").unwrap();
+        let path = dir.join("spec.json");
+        let spec = library::by_name("rolling_cascade", 128).unwrap();
+        spec.save(&path).unwrap();
+        let back = ScenarioSpec::load(&path).unwrap();
+        assert_eq!(back.hash(), spec.hash());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_failure_name_errors() {
+        let v = Json::parse(
+            r#"{"faults":[{"kind":"crash","at_s":1,"failure":"gamma_ray"}]}"#,
+        )
+        .unwrap();
+        assert!(ScenarioSpec::from_json(&v).is_err());
+    }
+}

@@ -86,6 +86,11 @@ impl FailureKind {
         }
     }
 
+    /// Inverse of [`FailureKind::name`] (chaos spec parsing).
+    pub fn from_name(name: &str) -> Option<FailureKind> {
+        Self::all().into_iter().find(|k| k.name() == name)
+    }
+
     pub fn all() -> Vec<FailureKind> {
         HARDWARE_MIX
             .iter()

@@ -12,5 +12,9 @@ pub mod simtime;
 pub use failure::{FailureCategory, FailureEvent, FailureInjector, FailureKind};
 pub use latency::{LatencyModel, StepTimeModel};
 pub use node::{NodeState, SimCluster, SimNode};
-pub use scenario::{simulate_flash, simulate_vanilla, RecoveryBreakdown, ScenarioConfig};
+pub use scenario::{
+    flash_restart_cost, sample_detection_s, simulate_flash, simulate_flash_with,
+    simulate_vanilla, vanilla_restart_cost, RecoveryBreakdown, RestartCost,
+    ScenarioConfig, SimFault,
+};
 pub use simtime::Sim;

@@ -128,6 +128,9 @@ pub struct Controller {
     report: RunReport,
     stopped: BTreeMap<usize, u64>, // rank -> param hash
     parked: BTreeMap<usize, (u64, CollectiveError)>, // rank -> (state step, err)
+    /// rank -> scripted failures already consumed (workers die only via
+    /// plans, so each death advances its rank's cursor by one).
+    plans_fired: BTreeMap<usize, usize>,
 }
 
 impl Controller {
@@ -160,6 +163,7 @@ impl Controller {
             report: RunReport::default(),
             stopped: BTreeMap::new(),
             parked: BTreeMap::new(),
+            plans_fired: BTreeMap::new(),
         })
     }
 
@@ -270,9 +274,13 @@ impl Controller {
                     .filter(|d| !self.stopped.contains_key(&d.rank))
                     .collect();
                 if !detections.is_empty() {
+                    let dead: Vec<usize> =
+                        detections.iter().map(|d| d.rank).collect();
                     match self.cfg.mode {
                         RecoveryMode::Flash => self.flash_recover(&detections)?,
-                        RecoveryMode::Vanilla => self.vanilla_recover(&detections)?,
+                        RecoveryMode::Vanilla => {
+                            self.vanilla_recover(&detections, dead)?
+                        }
                     }
                 }
             }
@@ -292,8 +300,27 @@ impl Controller {
         Ok(self.report)
     }
 
+    /// The next unconsumed scripted failure for `rank` (plans fire in
+    /// step order; every death advances the rank's cursor via
+    /// [`Self::consume_plan`]). This is what a replacement worker
+    /// inherits, so a flaky rank can be made to fail repeatedly (chaos
+    /// flap campaigns) without ever re-triggering a spent plan.
     fn plan_for(&self, rank: usize) -> Option<FailurePlan> {
-        self.cfg.failures.iter().copied().find(|f| f.rank == rank)
+        let fired = self.plans_fired.get(&rank).copied().unwrap_or(0);
+        let mut plans: Vec<FailurePlan> = self
+            .cfg
+            .failures
+            .iter()
+            .copied()
+            .filter(|f| f.rank == rank)
+            .collect();
+        plans.sort_by_key(|f| f.step);
+        plans.get(fired).copied()
+    }
+
+    /// Record that `rank`'s current plan fired (the worker died).
+    fn consume_plan(&mut self, rank: usize) {
+        *self.plans_fired.entry(rank).or_insert(0) += 1;
     }
 
     fn handle_event(&mut self, ev: WorkerEvent) {
@@ -322,18 +349,28 @@ impl Controller {
     }
 
     /// Wait until every rank in `ranks` has parked (or deadline).
-    fn await_parked(&mut self, ranks: &[usize], deadline: Duration) -> Result<()> {
+    /// Ranks that *die* while we wait — a failure striking mid-recovery
+    /// — are returned instead of waited on, so the caller can fold them
+    /// into the episode rather than time out.
+    fn await_parked(&mut self, ranks: &[usize], deadline: Duration) -> Result<Vec<usize>> {
         let t0 = Instant::now();
+        let mut newly_dead: Vec<usize> = Vec::new();
         loop {
-            if ranks.iter().all(|r| self.parked.contains_key(r)) {
-                return Ok(());
+            let waiting: Vec<usize> = ranks
+                .iter()
+                .copied()
+                .filter(|r| !self.parked.contains_key(r) && !newly_dead.contains(r))
+                .collect();
+            if waiting.is_empty() {
+                return Ok(newly_dead);
+            }
+            for d in self.monitor.scan() {
+                if waiting.contains(&d.rank) {
+                    newly_dead.push(d.rank);
+                }
             }
             if t0.elapsed() > deadline {
-                let missing: Vec<_> = ranks
-                    .iter()
-                    .filter(|r| !self.parked.contains_key(r))
-                    .collect();
-                bail!("ranks {missing:?} never parked");
+                bail!("ranks {waiting:?} never parked");
             }
             match self.event_rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(ev) => self.handle_event(ev),
@@ -358,7 +395,7 @@ impl Controller {
     /// ranks, replica-based state restore, resume at step i or i+1.
     fn flash_recover(&mut self, detections: &[super::detection::Detection]) -> Result<()> {
         let t_aware = Instant::now();
-        let dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
+        let mut dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
         let detection_s = self
             .first_death_ms(&dead)
             .map(|d_ms| (now_ms().saturating_sub(d_ms)) as f64 / 1e3)
@@ -367,14 +404,26 @@ impl Controller {
         // 1. stop/clean/reset: poison the collective so survivors park.
         self.collective.poison();
 
-        let survivors: Vec<usize> = (0..self.cfg.dp)
+        let mut survivors: Vec<usize> = (0..self.cfg.dp)
             .filter(|r| !dead.contains(r) && !self.stopped.contains_key(r))
             .collect();
         if survivors.is_empty() {
             // whole DP group lost: checkpoint fallback (paper §III-G.1)
-            return self.vanilla_recover(detections);
+            return self.vanilla_recover(detections, dead);
         }
-        self.await_parked(&survivors, Duration::from_secs(120))?;
+        // Ranks that die while the fleet parks (a failure during
+        // recovery) are folded into this episode instead of timing the
+        // recovery out.
+        let newly_dead = self.await_parked(&survivors, Duration::from_secs(120))?;
+        for r in newly_dead {
+            survivors.retain(|s| *s != r);
+            if !dead.contains(&r) {
+                dead.push(r);
+            }
+        }
+        if survivors.is_empty() {
+            return self.vanilla_recover(detections, dead);
+        }
 
         // 2. step determination from the survivors' states (§III-E-b).
         let steps: Vec<(usize, u64)> = survivors
@@ -384,10 +433,14 @@ impl Controller {
         let (resume_step, sources, behind) = plan_restore(&steps);
         let failed_at_step = steps.iter().map(|&(_, s)| s).min().unwrap();
 
-        // 3. limited recreation: spawn replacements for failed ranks only.
+        // 3. limited recreation: spawn replacements for failed ranks
+        // only. A replacement inherits its rank's next scripted failure
+        // (if any) so flap campaigns can kill the same rank repeatedly.
         for &rank in &dead {
+            self.consume_plan(rank);
             let state = WorkerState::init(&self.bundle, self.cfg.seed as i32)?;
-            self.spawn_worker(rank, state, true, None)?;
+            let next_plan = self.plan_for(rank);
+            self.spawn_worker(rank, state, true, next_plan)?;
             // ranktable substitution: the replacement "node"
             let entry = RankEntry {
                 rank,
@@ -398,7 +451,10 @@ impl Controller {
             self.ranktable.substitute(entry)?;
         }
         self.publish_ranktable()?;
-        self.await_parked(&dead, Duration::from_secs(120))?;
+        let dead_replacements = self.await_parked(&dead, Duration::from_secs(120))?;
+        if !dead_replacements.is_empty() {
+            bail!("replacement ranks {dead_replacements:?} died before restore");
+        }
 
         // 4. replica restore: one source broadcasts state to everyone
         // whose state is behind `resume_step` (replacements + laggards).
@@ -445,20 +501,35 @@ impl Controller {
 
     /// Vanilla baseline: wait out the collective timeout, tear down the
     /// whole fleet, reload the last checkpoint, restart everyone.
-    fn vanilla_recover(&mut self, detections: &[super::detection::Detection]) -> Result<()> {
-        let dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
+    /// `dead` is the full set of lost ranks — it can exceed the ranks
+    /// in `detections` when a flash recovery folded in ranks that died
+    /// mid-park before falling back here (`detections` then only
+    /// carries the original episode's failure metadata).
+    fn vanilla_recover(
+        &mut self,
+        detections: &[super::detection::Detection],
+        mut dead: Vec<usize>,
+    ) -> Result<()> {
         let death_ms = self.first_death_ms(&dead);
 
         // Passive detection: survivors discover the failure only when
         // the collective times out (or are poisoned by the first
         // timeout). The controller waits for them.
-        let survivors: Vec<usize> = (0..self.cfg.dp)
+        let mut survivors: Vec<usize> = (0..self.cfg.dp)
             .filter(|r| !dead.contains(r) && !self.stopped.contains_key(r))
             .collect();
-        self.await_parked(
+        // Survivors that die while waiting out the timeout join the
+        // dead set — the whole fleet is torn down either way.
+        let newly_dead = self.await_parked(
             &survivors,
             self.cfg.collective_timeout + Duration::from_secs(120),
         )?;
+        for r in newly_dead {
+            survivors.retain(|s| *s != r);
+            if !dead.contains(&r) {
+                dead.push(r);
+            }
+        }
         let detection_s = death_ms
             .map(|d_ms| (now_ms().saturating_sub(d_ms)) as f64 / 1e3)
             .unwrap_or(0.0);
@@ -524,15 +595,16 @@ impl Controller {
         };
         let restore_s = t_restore.elapsed().as_secs_f64();
 
-        // Full-fleet restart with a fresh communication group.
+        // Full-fleet restart with a fresh communication group. Dead
+        // ranks' plans are spent (advance their cursors); everyone else
+        // keeps their next plan if its step is still ahead of the
+        // replayed range.
+        for &rank in &dead {
+            self.consume_plan(rank);
+        }
         self.collective.reset(self.cfg.dp);
         for (rank, state) in states.into_iter().enumerate() {
-            // replacements carry no failure plan; survivors' plans are
-            // spent (their step has passed or they will re-trigger — the
-            // vanilla baseline restarts everyone identically)
-            let failure = self
-                .plan_for(rank)
-                .filter(|f| f.step >= resume_step && !dead.contains(&rank));
+            let failure = self.plan_for(rank).filter(|f| f.step >= resume_step);
             self.spawn_worker(rank, state, false, failure)?;
         }
         self.publish_ranktable()?;

@@ -13,6 +13,7 @@
 
 use crate::cluster::failure::FailureKind;
 use crate::training::worker::{kind_from_code, MonitorBoard};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
@@ -28,79 +29,112 @@ pub struct Detection {
 }
 
 /// Scans all workers' monitor boards every heartbeat interval.
+///
+/// Bookkeeping is keyed by `(rank, incarnation)`: every `watch` of a
+/// rank opens a new incarnation, so a replacement worker registered on
+/// a previously-failed rank is monitored afresh — its predecessor's
+/// "already reported" mark can never suppress it. Lookups are map/set
+/// based (the old linear `Vec` scans made every heartbeat O(dp²) under
+/// watch/unwatch churn), and `unwatch` prunes the rank's reported
+/// marks so long-lived controllers do not accumulate dead keys.
 pub struct HeartbeatMonitor {
-    boards: Vec<(usize, Arc<MonitorBoard>)>,
-    /// Ranks already reported (do not re-report).
-    reported: Vec<usize>,
+    /// rank -> (incarnation, board)
+    boards: BTreeMap<usize, (u64, Arc<MonitorBoard>)>,
+    /// (rank, incarnation) pairs already reported (do not re-report).
+    reported: BTreeSet<(usize, u64)>,
+    next_incarnation: u64,
 }
 
 impl HeartbeatMonitor {
     pub fn new() -> Self {
-        HeartbeatMonitor { boards: Vec::new(), reported: Vec::new() }
+        HeartbeatMonitor {
+            boards: BTreeMap::new(),
+            reported: BTreeSet::new(),
+            next_incarnation: 0,
+        }
     }
 
     pub fn watch(&mut self, rank: usize, board: Arc<MonitorBoard>) {
-        self.boards.retain(|(r, _)| *r != rank);
-        self.reported.retain(|r| *r != rank);
-        self.boards.push((rank, board));
+        self.next_incarnation += 1;
+        self.prune_reported(rank);
+        self.boards.insert(rank, (self.next_incarnation, board));
     }
 
     pub fn unwatch(&mut self, rank: usize) {
-        self.boards.retain(|(r, _)| *r != rank);
-        self.reported.retain(|r| *r != rank);
+        self.boards.remove(&rank);
+        self.prune_reported(rank);
+    }
+
+    fn prune_reported(&mut self, rank: usize) {
+        let stale: Vec<(usize, u64)> = self
+            .reported
+            .range((rank, 0)..=(rank, u64::MAX))
+            .copied()
+            .collect();
+        for key in stale {
+            self.reported.remove(&key);
+        }
     }
 
     /// Current step tag of a rank (the heartbeat payload).
     pub fn tag_of(&self, rank: usize) -> Option<i64> {
         self.boards
-            .iter()
-            .find(|(r, _)| *r == rank)
+            .get(&rank)
             .map(|(_, b)| b.step_tag.load(Ordering::SeqCst))
+    }
+
+    /// Current incarnation of a rank's monitored worker.
+    pub fn incarnation_of(&self, rank: usize) -> Option<u64> {
+        self.boards.get(&rank).map(|(inc, _)| *inc)
     }
 
     /// One scan: returns any *new* failures.
     pub fn scan(&mut self) -> Vec<Detection> {
         let now = Instant::now();
         let mut out = Vec::new();
-        for (rank, board) in &self.boards {
-            if self.reported.contains(rank) {
+        let mut newly_reported = Vec::new();
+        for (&rank, (inc, board)) in &self.boards {
+            if self.reported.contains(&(rank, *inc)) {
                 continue;
             }
             let code = board.device_error.load(Ordering::SeqCst);
             if code >= 0 {
                 out.push(Detection {
-                    rank: *rank,
+                    rank,
                     kind: kind_from_code(code).unwrap_or(FailureKind::HardwareOther),
                     via_device_plugin: true,
                     at: now,
                 });
-                self.reported.push(*rank);
+                newly_reported.push((rank, *inc));
                 continue;
             }
             if !board.alive.load(Ordering::SeqCst) {
                 // Process lost with no hardware report: classified as a
                 // software failure by the monitoring process.
                 out.push(Detection {
-                    rank: *rank,
+                    rank,
                     kind: FailureKind::Segfault,
                     via_device_plugin: false,
                     at: now,
                 });
-                self.reported.push(*rank);
+                newly_reported.push((rank, *inc));
             }
         }
+        self.reported.extend(newly_reported);
         out
     }
 
     /// Ranks currently alive (and not reported failed).
     pub fn alive_ranks(&self) -> Vec<usize> {
-        self.boards
-            .iter()
-            .filter(|(r, b)| {
-                !self.reported.contains(r) && b.alive.load(Ordering::SeqCst)
-            })
-            .map(|(r, _)| *r)
-            .collect()
+        let mut out = Vec::new();
+        for (&rank, (inc, board)) in &self.boards {
+            if !self.reported.contains(&(rank, *inc))
+                && board.alive.load(Ordering::SeqCst)
+            {
+                out.push(rank);
+            }
+        }
+        out
     }
 }
 
@@ -167,6 +201,33 @@ mod tests {
         b.step_tag.store(17, Ordering::SeqCst);
         assert_eq!(mon.tag_of(0), Some(17));
         assert_eq!(mon.tag_of(9), None);
+    }
+
+    #[test]
+    fn watch_unwatch_churn_always_remonitors_replacements() {
+        // Regression: `reported` marks used to outlive a rank's worker,
+        // so a replacement on a previously-failed rank could be ignored.
+        let mut mon = HeartbeatMonitor::new();
+        for cycle in 0..5 {
+            let b = board();
+            mon.watch(7, b.clone());
+            assert_eq!(mon.alive_ranks(), vec![7], "cycle {cycle}");
+            b.alive.store(false, Ordering::SeqCst);
+            assert_eq!(mon.scan().len(), 1, "cycle {cycle}: death missed");
+            assert!(mon.scan().is_empty(), "cycle {cycle}: double report");
+            mon.unwatch(7);
+            assert!(mon.scan().is_empty());
+        }
+    }
+
+    #[test]
+    fn each_watch_opens_a_new_incarnation() {
+        let mut mon = HeartbeatMonitor::new();
+        mon.watch(0, board());
+        let first = mon.incarnation_of(0).unwrap();
+        mon.watch(0, board());
+        assert!(mon.incarnation_of(0).unwrap() > first);
+        assert_eq!(mon.incarnation_of(9), None);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
 
+pub mod chaos;
 pub mod checkpoint;
 pub mod cluster;
 pub mod comms;

@@ -4,6 +4,7 @@
 //!   train     run a real DP training job (optionally with an injected
 //!             failure) under FlashRecovery or the vanilla baseline
 //!   simulate  one paper-scale recovery scenario on the simulator
+//!   scenario  declarative chaos campaigns: list / run / export
 //!   info      print artifact/manifest information
 //!
 //! Examples:
@@ -13,6 +14,10 @@
 //!   flashrecovery train --mode vanilla --ckpt-interval 5 --timeout-s 3 \
 //!       --fail-rank 1 --fail-step 8
 //!   flashrecovery simulate --devices 4800 --params-b 175 --mode flash
+//!   flashrecovery scenario list
+//!   flashrecovery scenario run --spec rolling_cascade --seed 7
+//!   flashrecovery scenario run --spec my_campaign.json --journal out.jsonl
+//!   flashrecovery scenario export --spec flaky_node > flaky.json
 //!   flashrecovery info --size small
 
 use flashrecovery::cluster::failure::FailureKind;
@@ -29,6 +34,7 @@ fn main() -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("train") => train(&args),
         Some("simulate") => simulate(&args),
+        Some("scenario") => scenario(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -52,6 +58,9 @@ fn usage() {
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
          \u{20}         --fail-rank N --fail-step N --fail-phase fwdbwd|optstep\n\
          simulate: --devices N  --params-b N  --mode flash|vanilla  --runs N\n\
+         scenario: list | run --spec <name|file.json> [--seed N]\n\
+         \u{20}         [--devices N] [--journal out.jsonl] [--live]\n\
+         \u{20}         | export --spec <name> [--devices N]\n\
          info:     --size tiny|small|base"
     );
 }
@@ -157,6 +166,124 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         println!("    stage {name:<28} {v:>9.3} s");
     }
     Ok(())
+}
+
+/// `scenario list | run | export` — the chaos campaign CLI.
+fn scenario(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::chaos::{self, library};
+
+    let devices = args.usize_or("devices", 256);
+    match args.positional.get(1).map(String::as_str) {
+        Some("list") | None => {
+            println!("built-in chaos scenarios (--devices {devices}):");
+            for spec in library::all(devices) {
+                println!(
+                    "  {:<24} {} fault(s), mode={}  — {}",
+                    spec.name,
+                    spec.faults.len(),
+                    spec.mode.name(),
+                    spec.description
+                );
+            }
+            println!("\nrun one:  flashrecovery scenario run --spec <name> --seed N");
+            Ok(())
+        }
+        Some("export") => {
+            let name = args
+                .get("spec")
+                .ok_or_else(|| anyhow::anyhow!("export needs --spec <name>"))?;
+            let spec = library::by_name(name, devices)
+                .ok_or_else(|| anyhow::anyhow!("unknown built-in scenario {name:?}"))?;
+            println!("{}", spec.to_json().render_pretty());
+            Ok(())
+        }
+        Some("run") => {
+            let sel = args
+                .get("spec")
+                .ok_or_else(|| anyhow::anyhow!("run needs --spec <name|file.json>"))?;
+            let spec = match library::by_name(sel, devices) {
+                Some(s) => s,
+                None => chaos::ScenarioSpec::load(sel)?,
+            };
+            let seed = args.u64_or("seed", 1);
+
+            if args.bool_or("live", false) {
+                let out = chaos::run_live(&spec, seed)?;
+                println!(
+                    "[scenario:{}] live run: {} steps, {} recoveries, wall {:.1}s",
+                    spec.name,
+                    out.report.final_step,
+                    out.report.recoveries.len(),
+                    out.report.wall_s
+                );
+                for r in &out.report.recoveries {
+                    println!(
+                        "  recovery ranks {:?} at step {} -> resume {} \
+                         (lost {}), detect {:.3}s restart {:.3}s",
+                        r.failed_ranks, r.failed_at_step, r.resume_step,
+                        r.lost_steps, r.detection_s, r.restart_s
+                    );
+                }
+                return finish(&spec.name, &out.assertions);
+            }
+
+            let (report, journal) = chaos::run_campaign(&spec, seed)?;
+            if let Some(path) = args.get("journal") {
+                std::fs::write(path, journal.render())?;
+                println!("[scenario:{}] journal ({} events) -> {path}", spec.name, journal.len());
+            }
+            println!(
+                "[scenario:{}] seed {seed}, mode {}, {} nodes + {} spares @ {} devices",
+                spec.name,
+                report.mode.name(),
+                spec.cluster.active_nodes(),
+                spec.cluster.spare_nodes,
+                spec.cluster.devices
+            );
+            for (i, r) in report.recoveries.iter().enumerate() {
+                println!(
+                    "  recovery {i}: nodes {:?} at t={:.1}s  detect {:.1}s  \
+                     restart {:.1}s  total {:.1}s  merged {}  lost {}",
+                    r.nodes, r.started_s, r.detection_s, r.restart_s,
+                    r.total_s(), r.merged_faults, r.lost_steps
+                );
+            }
+            println!(
+                "  campaign: {} steps done, {} lost, downtime {:.1}s, \
+                 {} running / {} spare / {} unrecovered, journal digest {:016x}",
+                report.steps_completed,
+                report.lost_steps,
+                report.total_downtime_s,
+                report.final_running_nodes,
+                report.spares_left,
+                report.unrecovered_nodes,
+                journal.digest()
+            );
+            let outcomes = chaos::evaluate(&spec.assertions, &report);
+            finish(&spec.name, &outcomes)
+        }
+        Some(other) => {
+            anyhow::bail!("unknown scenario subcommand {other:?} (list|run|export)")
+        }
+    }
+}
+
+fn finish(name: &str, outcomes: &[flashrecovery::chaos::AssertionOutcome]) -> anyhow::Result<()> {
+    for o in outcomes {
+        println!(
+            "  assert {:<28} {}  ({})",
+            o.name,
+            if o.pass { "PASS" } else { "FAIL" },
+            o.detail
+        );
+    }
+    if flashrecovery::chaos::passed(outcomes) {
+        println!("[scenario:{name}] PASS");
+        Ok(())
+    } else {
+        println!("[scenario:{name}] FAIL");
+        std::process::exit(1);
+    }
 }
 
 fn info(args: &Args) -> anyhow::Result<()> {

@@ -14,6 +14,23 @@ pub mod manifest;
 
 pub use manifest::{load_manifest, AdamSpec, ModelDims, ModelManifest, ParamSpec};
 
+/// Skip a `#[test]` body when the live plane (artifacts + real xla)
+/// is unavailable — the offline-build default. With artifacts built
+/// and the real `xla` crate swapped in, every guarded test runs.
+#[macro_export]
+macro_rules! require_live_plane {
+    () => {
+        if !$crate::runtime::live_plane_available() {
+            eprintln!(
+                "skipping {}: live training plane unavailable \
+                 (run `make artifacts` + real xla backend)",
+                module_path!()
+            );
+            return;
+        }
+    };
+}
+
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -29,6 +46,14 @@ use std::sync::{Arc, Mutex, MutexGuard};
 fn xla_lock() -> MutexGuard<'static, ()> {
     static LOCK: Mutex<()> = Mutex::new(());
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Whether the live training plane can run here: compiled artifacts
+/// present AND a real PJRT backend (the vendored `xla` stub's client
+/// constructor fails by design — DESIGN.md §7). Tests and the chaos
+/// live path use this to fall back / skip instead of erroring.
+pub fn live_plane_available() -> bool {
+    crate::util::artifacts_dir().is_some() && xla::PjRtClient::cpu().is_ok()
 }
 
 /// Thin wrapper over the PJRT CPU client. Cheap to clone (Arc inside).
@@ -289,6 +314,7 @@ mod tests {
 
     #[test]
     fn init_is_deterministic_and_shaped() {
+        crate::require_live_plane!();
         let b = bundle();
         let p1 = b.init_params(0).unwrap();
         let p2 = b.init_params(0).unwrap();
@@ -311,6 +337,7 @@ mod tests {
 
     #[test]
     fn fwd_bwd_loss_near_uniform_and_grads_finite() {
+        crate::require_live_plane!();
         let b = bundle();
         let params = b.init_params(0).unwrap();
         let tokens = tokens_for(&b.manifest, 7);
@@ -325,6 +352,7 @@ mod tests {
 
     #[test]
     fn split_step_equals_fused_step() {
+        crate::require_live_plane!();
         let b = bundle();
         let params = b.init_params(3).unwrap();
         let m = b.zeros_like_params().unwrap();
@@ -360,6 +388,7 @@ mod tests {
 
     #[test]
     fn training_reduces_loss_on_fixed_batch() {
+        crate::require_live_plane!();
         let b = bundle();
         let mut params = b.init_params(0).unwrap();
         let mut m = b.zeros_like_params().unwrap();

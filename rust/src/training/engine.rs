@@ -52,6 +52,7 @@ mod tests {
 
     #[test]
     fn failure_free_run_converges_and_stays_consistent() {
+        crate::require_live_plane!();
         let e = engine();
         let report = e.run(ControllerConfig::flash(2, 12)).unwrap();
         assert_eq!(report.final_step, 12);
@@ -65,6 +66,7 @@ mod tests {
 
     #[test]
     fn flash_recovers_from_fwd_bwd_failure_at_step_i() {
+        crate::require_live_plane!();
         let e = engine();
         let mut cfg = ControllerConfig::flash(3, 10);
         cfg.failures = vec![FailurePlan {
@@ -90,6 +92,7 @@ mod tests {
 
     #[test]
     fn flash_recovers_from_optimizer_failure_at_step_i_plus_1() {
+        crate::require_live_plane!();
         let e = engine();
         let mut cfg = ControllerConfig::flash(2, 9);
         cfg.failures = vec![FailurePlan {
@@ -111,6 +114,7 @@ mod tests {
 
     #[test]
     fn flash_detection_is_fast() {
+        crate::require_live_plane!();
         let e = engine();
         let mut cfg = ControllerConfig::flash(2, 8);
         cfg.heartbeat_interval = Duration::from_millis(50);
@@ -128,6 +132,7 @@ mod tests {
 
     #[test]
     fn vanilla_recovers_from_checkpoint_with_lost_steps() {
+        crate::require_live_plane!();
         let e = engine();
         let dir = temp_dir("vanilla-e2e").unwrap();
         let mut cfg = ControllerConfig::vanilla(
@@ -161,6 +166,7 @@ mod tests {
 
     #[test]
     fn flash_loss_curve_is_continuous_across_recovery() {
+        crate::require_live_plane!();
         // The recovered run must produce the same loss trajectory as a
         // failure-free run: checkpoint-free recovery loses nothing.
         let e = engine();

@@ -124,6 +124,7 @@ mod tests {
 
     #[test]
     fn snapshot_roundtrip_is_exact() {
+        crate::require_live_plane!();
         let b = bundle();
         let mut s = WorkerState::init(&b, 5).unwrap();
         s.step = 9;
@@ -137,6 +138,7 @@ mod tests {
 
     #[test]
     fn from_snapshot_rejects_wrong_arity() {
+        crate::require_live_plane!();
         let b = bundle();
         let s = WorkerState::init(&b, 0).unwrap();
         let mut snap = s.to_snapshot().unwrap();
@@ -146,6 +148,7 @@ mod tests {
 
     #[test]
     fn from_snapshot_rejects_wrong_shape() {
+        crate::require_live_plane!();
         let b = bundle();
         let s = WorkerState::init(&b, 0).unwrap();
         let mut snap = s.to_snapshot().unwrap();
@@ -155,6 +158,7 @@ mod tests {
 
     #[test]
     fn max_param_diff_detects_divergence() {
+        crate::require_live_plane!();
         let b = bundle();
         let a = WorkerState::init(&b, 0).unwrap();
         let c = WorkerState::init(&b, 1).unwrap();

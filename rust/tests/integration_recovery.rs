@@ -18,6 +18,7 @@ fn engine() -> &'static TrainingEngine {
 
 #[test]
 fn two_sequential_failures_both_recover() {
+    flashrecovery::require_live_plane!();
     let mut cfg = ControllerConfig::flash(3, 14);
     cfg.failures = vec![
         FailurePlan { rank: 1, step: 4, phase: Phase::FwdBwd, kind: FailureKind::Segfault },
@@ -34,6 +35,7 @@ fn two_sequential_failures_both_recover() {
 
 #[test]
 fn replacement_rank_can_fail_again_later() {
+    flashrecovery::require_live_plane!();
     // rank 1 dies at step 3; later rank 0 dies at step 7 — the fleet
     // that recovers the second failure contains a replacement member.
     let mut cfg = ControllerConfig::flash(2, 10);
@@ -49,6 +51,7 @@ fn replacement_rank_can_fail_again_later() {
 
 #[test]
 fn shared_ranktable_is_updated_across_recovery() {
+    flashrecovery::require_live_plane!();
     let dir = temp_dir("rt-e2e").unwrap();
     let rt_path = dir.join("ranktable.json");
     let mut cfg = ControllerConfig::flash(2, 8);
@@ -74,6 +77,7 @@ fn shared_ranktable_is_updated_across_recovery() {
 
 #[test]
 fn vanilla_without_checkpoint_restarts_from_scratch() {
+    flashrecovery::require_live_plane!();
     let dir = temp_dir("vanilla-scratch").unwrap();
     let mut cfg =
         ControllerConfig::vanilla(2, 8, 0 /* no checkpoints */, Duration::from_millis(400));
@@ -95,6 +99,7 @@ fn vanilla_without_checkpoint_restarts_from_scratch() {
 
 #[test]
 fn vanilla_detection_waits_for_timeout_flash_does_not() {
+    flashrecovery::require_live_plane!();
     let timeout = Duration::from_millis(600);
     let fail = FailurePlan {
         rank: 1,
@@ -127,6 +132,7 @@ fn vanilla_detection_waits_for_timeout_flash_does_not() {
 
 #[test]
 fn dp4_failure_recovers_with_three_survivors() {
+    flashrecovery::require_live_plane!();
     let mut cfg = ControllerConfig::flash(4, 8);
     cfg.failures = vec![FailurePlan {
         rank: 2,
@@ -143,6 +149,7 @@ fn dp4_failure_recovers_with_three_survivors() {
 
 #[test]
 fn hardware_failure_reported_via_device_plugin_with_kind() {
+    flashrecovery::require_live_plane!();
     let mut cfg = ControllerConfig::flash(2, 6);
     cfg.failures = vec![FailurePlan {
         rank: 1,
@@ -158,6 +165,7 @@ fn hardware_failure_reported_via_device_plugin_with_kind() {
 
 #[test]
 fn simultaneous_two_rank_failure_recovers_from_single_survivor() {
+    flashrecovery::require_live_plane!();
     // dp=3, ranks 1 and 2 die at the same step: both are replaced and
     // restored from rank 0's replica in one episode.
     let mut cfg = ControllerConfig::flash(3, 8);
@@ -180,6 +188,7 @@ fn simultaneous_two_rank_failure_recovers_from_single_survivor() {
 
 #[test]
 fn whole_dp_group_loss_falls_back_to_checkpoint_path() {
+    flashrecovery::require_live_plane!();
     // Paper §III-G limitation 1: if every replica fails simultaneously
     // there is no source — FlashRecovery must fall back to the
     // checkpoint path (here: no checkpoint -> restart from scratch).
@@ -224,6 +233,7 @@ fn controller_config_from_job_config() {
     assert!(ControllerConfig::from_job(&job).is_err());
 
     // and a full run driven by the job config works end to end
+    flashrecovery::require_live_plane!();
     job.parallelism = ParallelismConfig::dp(2);
     job.recovery.mode = RecoveryMode::Flash;
     job.checkpoint.interval_steps = 0;
@@ -234,6 +244,7 @@ fn controller_config_from_job_config() {
 
 #[test]
 fn software_failure_classified_by_monitor_process() {
+    flashrecovery::require_live_plane!();
     let mut cfg = ControllerConfig::flash(2, 6);
     cfg.failures = vec![FailurePlan {
         rank: 0,

@@ -1,0 +1,131 @@
+//! Chaos-engine property tests: the determinism contract and campaign
+//! invariants, across the built-in scenario library.
+
+use flashrecovery::chaos::{evaluate, library, passed, run_campaign, ScenarioSpec};
+use flashrecovery::util::prop;
+
+/// Acceptance contract: for library scenarios × seeds, two runs of the
+/// same (spec, seed) produce byte-identical journals.
+#[test]
+fn determinism_three_scenarios_by_three_seeds() {
+    for name in ["single_fault", "rolling_cascade", "failure_during_recovery"] {
+        let spec = library::by_name(name, 256).unwrap();
+        for seed in [1u64, 99, 123_456_789] {
+            let (r1, j1) = run_campaign(&spec, seed).unwrap();
+            let (r2, j2) = run_campaign(&spec, seed).unwrap();
+            let (a, b) = (j1.render(), j2.render());
+            assert_eq!(a, b, "{name} seed {seed}: journals diverged");
+            assert!(!a.is_empty());
+            assert_eq!(r1.steps_completed, r2.steps_completed);
+            assert_eq!(r1.total_downtime_s, r2.total_downtime_s);
+        }
+    }
+}
+
+#[test]
+fn determinism_survives_spec_json_roundtrip() {
+    // A spec reloaded from its own JSON must replay the same journal —
+    // the spec hash is the identity, not the in-memory object.
+    let spec = library::by_name("flaky_node", 512).unwrap();
+    let reloaded = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+    let (_, j1) = run_campaign(&spec, 42).unwrap();
+    let (_, j2) = run_campaign(&reloaded, 42).unwrap();
+    assert_eq!(j1.render(), j2.render());
+}
+
+#[test]
+fn whole_library_passes_assertions_across_seeds_and_scales() {
+    for devices in [256usize, 1024] {
+        for spec in library::all(devices) {
+            for seed in [2u64, 31, 77] {
+                let (report, _) = run_campaign(&spec, seed).unwrap();
+                let outcomes = evaluate(&spec.assertions, &report);
+                assert!(
+                    passed(&outcomes),
+                    "{} @ {devices} seed {seed}: {:?}",
+                    spec.name,
+                    outcomes.iter().filter(|o| !o.pass).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_campaign_invariants_hold_for_random_seeds() {
+    // For any seed: recoveries are time-ordered and non-overlapping,
+    // downtime is bounded by (end - 0), and node accounting closes
+    // (running + spare + faulty == active + spares).
+    prop::check("campaign invariants", 40, |rng| {
+        let specs = library::all(256);
+        let spec = &specs[rng.below(specs.len() as u64) as usize];
+        let seed = rng.next_u64();
+        let (report, journal) =
+            run_campaign(spec, seed).map_err(|e| e.to_string())?;
+
+        let mut prev_end = 0.0f64;
+        for r in &report.recoveries {
+            prop::assert_prop(
+                r.started_s >= prev_end - 1e-9,
+                format!("overlapping recoveries at {}", r.started_s),
+            )?;
+            prop::assert_prop(r.restart_s >= 0.0, "negative restart")?;
+            prop::assert_prop(
+                r.detection_s > 0.0,
+                "non-positive detection",
+            )?;
+            prev_end = r.ended_s;
+        }
+        prop::assert_prop(
+            report.total_downtime_s <= report.end_s + 1e-6,
+            format!(
+                "downtime {} exceeds campaign span {}",
+                report.total_downtime_s, report.end_s
+            ),
+        )?;
+        let active = spec.cluster.active_nodes();
+        let accounted = report.final_running_nodes
+            + report.spares_left
+            + report.unrecovered_nodes;
+        prop::assert_eq_prop(&accounted, &(active + spec.cluster.spare_nodes))?;
+        prop::assert_prop(
+            journal.events().len() >= 2,
+            "journal missing campaign_start/campaign_end",
+        )
+    });
+}
+
+#[test]
+fn prop_seed_changes_move_the_journal() {
+    // Different seeds almost surely produce different journals (the
+    // RNG feeds victim picks and latency draws).
+    prop::check("seed sensitivity", 20, |rng| {
+        let spec = library::by_name("single_fault", 256).unwrap();
+        let s1 = rng.next_u64();
+        let s2 = s1.wrapping_add(1 + rng.below(1000));
+        let (_, j1) = run_campaign(&spec, s1).map_err(|e| e.to_string())?;
+        let (_, j2) = run_campaign(&spec, s2).map_err(|e| e.to_string())?;
+        prop::assert_prop(
+            j1.render() != j2.render(),
+            format!("seeds {s1} and {s2} gave identical journals"),
+        )
+    });
+}
+
+/// The two scenarios the acceptance criteria call out must complete —
+/// no panic, no deadlock (bounded queue drain) — and recover fully.
+#[test]
+fn cascade_and_mid_recovery_failures_complete_cleanly() {
+    for name in ["rolling_cascade", "failure_during_recovery"] {
+        for seed in [3u64, 17, 1001] {
+            let spec = library::by_name(name, 256).unwrap();
+            let (report, _) = run_campaign(&spec, seed).unwrap();
+            assert_eq!(
+                report.unrecovered_nodes, 0,
+                "{name} seed {seed} left nodes unrecovered"
+            );
+            assert!(report.merged_recoveries >= 1, "{name} seed {seed}");
+            assert!(report.end_s.is_finite());
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Vendored, offline subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this shim provides
+//! the exact API surface the repo uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Swap this path dependency for the real `anyhow = "1"` in
+//! `Cargo.toml` when a registry is available — no source changes needed.
+//!
+//! Semantics mirrored from upstream:
+//! * `Error` deliberately does **not** implement `std::error::Error`,
+//!   which is what lets the blanket `From<E: std::error::Error>` impl
+//!   coexist with `From<T> for T`;
+//! * `Display` shows the outermost context only; `{:#}` shows the whole
+//!   chain separated by `: `; `Debug` shows the chain as a `Caused by`
+//!   list (what `fn main() -> Result<()>` prints on error);
+//! * `downcast_ref` reaches through contexts to the root cause.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>` — `Result` with a boxed, context-carrying error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: a stack of human-readable context strings
+/// (outermost first) over a root cause.
+pub struct Error {
+    context: Vec<String>,
+    root: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Root cause used by `anyhow!`-style message errors.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a display-able message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            context: Vec::new(),
+            root: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Wrap an existing error as the root cause.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { context: Vec::new(), root: Box::new(error) }
+    }
+
+    /// Push a new outermost context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// Downcast the root cause by type (context layers are skipped,
+    /// matching upstream's chain-walking behaviour for wrapped roots).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.root.downcast_ref::<E>()
+    }
+
+    /// The root cause of this error.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        &*self.root
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>, sep: &str) -> fmt::Result {
+        for (i, c) in self.context.iter().enumerate() {
+            if i > 0 {
+                f.write_str(sep)?;
+            }
+            f.write_str(c)?;
+        }
+        if !self.context.is_empty() {
+            f.write_str(sep)?;
+        }
+        write!(f, "{}", self.root)
+    }
+}
+
+impl fmt::Display for Error {
+    // Outermost message only; `{:#}` renders the full chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            return self.write_chain(f, ": ");
+        }
+        match self.context.first() {
+            Some(c) => f.write_str(c),
+            None => write!(f, "{}", self.root),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.first() {
+            Some(c) => f.write_str(c)?,
+            None => write!(f, "{}", self.root)?,
+        }
+        let mut causes: Vec<String> =
+            self.context.iter().skip(1).cloned().collect();
+        if !self.context.is_empty() {
+            causes.push(self.root.to_string());
+        }
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Private conversion trait so `Context` has one impl covering both
+/// `Result<T, E: std::error::Error>` and `Result<T, anyhow::Error>`.
+pub trait IntoError {
+    fn into_anyhow(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_anyhow(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_anyhow(self) -> Error {
+        self
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or display-able value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::TimedOut, "timed out")
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading frame")
+            .unwrap_err()
+            .context("serving connection");
+        assert_eq!(format!("{e}"), "serving connection");
+        assert_eq!(
+            format!("{e:#}"),
+            "serving connection: reading frame: timed out"
+        );
+    }
+
+    #[test]
+    fn downcast_reaches_root_through_context() {
+        let e: Error = Err::<(), _>(io_err()).context("ctx").unwrap_err();
+        let ioe = e.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(ioe.kind(), std::io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(n: i32) -> Result<i32> {
+            ensure!(n >= 0, "negative: {n}");
+            if n == 1 {
+                bail!("one is not allowed");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(1).unwrap_err().to_string(), "one is not allowed");
+        assert_eq!(f(-3).unwrap_err().to_string(), "negative: -3");
+        let x = 7;
+        assert_eq!(anyhow!("x={x}").to_string(), "x=7");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+}

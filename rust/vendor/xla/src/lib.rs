@@ -1,0 +1,295 @@
+//! Vendored host-side stand-in for the `xla` crate (xla-rs bindings).
+//!
+//! The build environment has neither crates.io access nor the native
+//! `xla_extension` C++ libraries, so this crate keeps the repo
+//! compiling and every non-PJRT code path fully functional:
+//!
+//! * [`Literal`] — complete host implementation (shaped f32/i32
+//!   buffers): `scalar`, `vec1`, `reshape`, `to_vec`,
+//!   `get_first_element`, `element_count`, `ty`, `array_shape`;
+//! * PJRT surface ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`HloModuleProto`], [`XlaComputation`]) — present so callers
+//!   compile, but `PjRtClient::cpu()` returns an error: there is no
+//!   accelerator runtime to execute HLO here. Code must treat a failed
+//!   client construction as "live training plane unavailable" and fall
+//!   back to the discrete-event simulator (see DESIGN.md §7).
+//!
+//! Swap this path dependency for the real `xla` crate to light up the
+//! live training plane — the API subset matches call-for-call.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`'s role (implements
+/// `std::error::Error`, so `?` converts into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    fn pjrt_unavailable() -> Self {
+        Error::new(
+            "vendored xla stub: PJRT runtime unavailable in this build — \
+             swap rust/vendor/xla for the real xla crate to execute HLO \
+             artifacts (DESIGN.md §7)",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes (subset; the repo only moves f32 and s32 buffers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::S32(_) => ElementType::S32,
+        }
+    }
+}
+
+/// Host element types storable in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn wrap(xs: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(xs: Vec<Self>) -> Data {
+        Data::F32(xs)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(xs: Vec<Self>) -> Data {
+        Data::S32(xs)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::S32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape of a literal (`dims` in row-major order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host tensor: shaped buffer of one element type.
+#[derive(Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { data: T::wrap(vec![value]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            data: T::wrap(values.to_vec()),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    /// Reinterpret the buffer under new dimensions (element count must
+    /// be preserved — same contract as the real crate).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch ({})",
+                self.dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.data.ty())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error::new(format!(
+                "to_vec: literal holds {:?}, requested {:?}",
+                self.data.ty(),
+                T::TY
+            ))
+        })
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("get_first_element on empty literal"))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come out of PJRT execution), so this is unreachable in
+    /// practice and errors defensively.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new("stub literal is not a tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque placeholder).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::pjrt_unavailable())
+    }
+}
+
+/// Computation wrapper (opaque placeholder).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT device buffer (opaque placeholder).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::pjrt_unavailable())
+    }
+}
+
+/// PJRT client. Construction fails in the stub: callers use this as the
+/// "is the live training plane available?" probe.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::pjrt_unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "vendored-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::pjrt_unavailable())
+    }
+}
+
+/// Compiled executable (opaque placeholder).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::pjrt_unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.ty().unwrap(), ElementType::F32);
+    }
+
+    #[test]
+    fn literal_scalar_i32() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 7);
+        assert_eq!(l.element_count(), 1);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_rejects_mismatch() {
+        assert!(Literal::vec1(&[0f32; 6]).reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
