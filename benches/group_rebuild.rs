@@ -1,0 +1,53 @@
+//! Scale sweep for communication-group reconstruction: epoch-fenced
+//! rendezvous over a live TCP store at 256 -> 8192 simulated ranks.
+//!
+//! Ranktable and group math run at full cluster scale; live TCP agents
+//! (a fixed survivor sample + every replacement + the coordinator) run
+//! the real protocol concurrently, so wall-clock measures the per-node
+//! critical path — which the paper claims, and this bench asserts, is
+//! near-constant in cluster size.
+//!
+//! Emits `BENCH_group_rebuild.json` (via `BenchReport::write_json`),
+//! the artifact CI's bench gate compares against the committed
+//! baseline in `ci/BENCH_group_rebuild.baseline.json`.
+//!
+//!     cargo bench --bench group_rebuild
+
+use flashrecovery::coordinator::rendezvous::{rebuild_sweep, SweepConfig};
+
+fn main() {
+    let cfg = SweepConfig::default();
+    let report = rebuild_sweep(&cfg).expect("rebuild sweep");
+    report.print();
+    report
+        .write_json("BENCH_group_rebuild.json")
+        .expect("write BENCH_group_rebuild.json");
+    println!("wrote BENCH_group_rebuild.json");
+
+    // ---- asserted properties (the paper's scale-independence claim) ----
+    let min_scale = *cfg.scales.iter().min().unwrap();
+    let max_scale = *cfg.scales.iter().max().unwrap();
+    let p50 = |n: usize| {
+        report
+            .row_values(&format!("n={n}"))
+            .expect("row")[0]
+    };
+    let (lo, hi) = (p50(min_scale), p50(max_scale));
+    // near-flat: a 32x larger cluster may not cost more than 2x the
+    // wall-clock (tiny absolute p50s get a 2ms noise floor)
+    assert!(
+        hi <= 2.0 * lo + 2.0,
+        "rebuild p50 not scale-independent: {hi:.2}ms @ {max_scale} vs \
+         {lo:.2}ms @ {min_scale}"
+    );
+    // O(1) survivor message budget at every scale (exactly 3: fenced
+    // delta wait, arrive, release)
+    for &n in &cfg.scales {
+        let msgs = report.row_values(&format!("n={n}")).expect("row")[3];
+        assert!(msgs <= 3.0, "survivor msgs {msgs} at n={n} (budget is 3)");
+    }
+    println!(
+        "group_rebuild OK: p50 {lo:.2}ms @ {min_scale} -> {hi:.2}ms @ {max_scale} \
+         (<= 2x), survivor msgs O(1)"
+    );
+}

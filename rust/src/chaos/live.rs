@@ -17,10 +17,14 @@
 use super::engine::AssertionOutcome;
 use super::spec::{FaultFamily, ScenarioSpec};
 use crate::cluster::failure::FailureKind;
-use crate::coordinator::{ControllerConfig, RunReport};
+use crate::comms::tcp_store::TcpStoreServer;
+use crate::config::ParallelismConfig;
+use crate::coordinator::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
+use crate::coordinator::{ControllerConfig, RankEntry, Ranktable, RunReport};
 use crate::training::worker::{FailurePlan, Phase};
 use crate::training::TrainingEngine;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 
 fn parse_phase(s: &str) -> Phase {
     match s {
@@ -128,6 +132,64 @@ pub fn evaluate_live(spec: &ScenarioSpec, report: &RunReport) -> Vec<AssertionOu
     out
 }
 
+/// Drive the spec's scripted failures as *real* group-rebuild episodes
+/// over a live TCP store: one epoch-fenced rendezvous per failure
+/// step, with surviving ranks re-keying (O(1) messages each) and the
+/// failed ranks performing full replacement joins. Exercises the
+/// reconstruction protocol under chaos campaigns without requiring
+/// the xla training plane.
+pub fn drive_group_rebuilds(spec: &ScenarioSpec) -> Result<Vec<RebuildOutcome>> {
+    let plans = live_failure_plans(spec)?;
+    let dp = spec.live.dp.max(1);
+    let par = ParallelismConfig::dp(dp);
+    let mut table = Ranktable::new(
+        (0..dp)
+            .map(|rank| RankEntry {
+                rank,
+                node: rank,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 29000 + rank),
+            })
+            .collect(),
+    );
+    let server = TcpStoreServer::start()?;
+    // one rebuild episode per distinct failure step
+    let mut by_step: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for p in &plans {
+        let ranks = by_step.entry(p.step).or_default();
+        if !ranks.contains(&p.rank) {
+            ranks.push(p.rank);
+        }
+    }
+    let mut epoch = 0u64;
+    let mut episodes = Vec::with_capacity(by_step.len());
+    for (step, mut failed) in by_step {
+        failed.sort_unstable();
+        let replacements: Vec<RankEntry> = failed
+            .iter()
+            .map(|&r| RankEntry {
+                rank: r,
+                node: dp + (epoch as usize + 1) * dp + r,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
+            })
+            .collect();
+        let out = rebuild_episode(
+            &server,
+            &table,
+            &par,
+            &failed,
+            &replacements,
+            epoch,
+            &EpisodeConfig { live_survivors: dp },
+        )?;
+        epoch = out.epoch;
+        table = out.table.clone();
+        episodes.push(out);
+    }
+    Ok(episodes)
+}
+
 /// Run the spec's live plan end to end. Fails fast when the live
 /// training plane (real xla + artifacts) is unavailable.
 pub fn run_live(spec: &ScenarioSpec, seed: u64) -> Result<LiveOutcome> {
@@ -179,5 +241,36 @@ mod tests {
         let spec = library::by_name("rolling_cascade", 256).unwrap();
         // cascade spec carries no live hints on purpose
         assert!(live_failure_plans(&spec).is_err());
+    }
+
+    #[test]
+    fn live_bridge_drives_real_group_rebuild() {
+        // End to end over real sockets: one failure -> one epoch-fenced
+        // rendezvous in which survivors re-key and the failed rank's
+        // replacement fully joins.
+        let spec = library::by_name("single_fault", 256).unwrap();
+        let episodes = drive_group_rebuilds(&spec).unwrap();
+        assert_eq!(episodes.len(), 1);
+        let ep = &episodes[0];
+        assert_eq!(ep.epoch, 1);
+        assert_eq!(ep.replacements, 1);
+        assert!(ep.groups_rebuilt >= 1);
+        assert_eq!(ep.survivor_ops_max, 3, "survivors must stay O(1) msgs");
+        assert_eq!(ep.table.version, 2);
+        assert!(ep.wall_s > 0.0);
+    }
+
+    #[test]
+    fn live_bridge_flap_rebuilds_per_episode() {
+        // flaky_node kills the same rank three times at spaced steps:
+        // three rendezvous epochs, version advancing each time.
+        let spec = library::by_name("flaky_node", 256).unwrap();
+        let episodes = drive_group_rebuilds(&spec).unwrap();
+        assert_eq!(episodes.len(), 3);
+        for (i, ep) in episodes.iter().enumerate() {
+            assert_eq!(ep.epoch, i as u64 + 1);
+            assert_eq!(ep.replacements, 1);
+        }
+        assert_eq!(episodes.last().unwrap().table.version, 4);
     }
 }

@@ -34,5 +34,8 @@ pub use engine::{
     evaluate, passed, run_campaign, AssertionOutcome, CampaignRecovery, CampaignReport,
 };
 pub use journal::Journal;
-pub use live::{controller_config, evaluate_live, live_failure_plans, run_live, LiveOutcome};
+pub use live::{
+    controller_config, drive_group_rebuilds, evaluate_live, live_failure_plans,
+    run_live, LiveOutcome,
+};
 pub use spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, ScenarioSpec};

@@ -1,0 +1,347 @@
+//! Communication-group derivation: DP / TP / PP process groups from
+//! `Ranktable` x `ParallelismConfig` (paper §III-D).
+//!
+//! Every device belongs to exactly one group of each kind. After a
+//! failure, groups containing a substituted rank must re-establish
+//! their communicator (*rebuilt*), while every other group only
+//! re-stamps itself into the new rendezvous epoch (*re-keyed*) — the
+//! paper's differentiated normal/faulty-node strategy, which is what
+//! makes reconstruction cost independent of cluster size.
+
+use crate::config::{DeviceCoord, ParallelismConfig};
+use crate::coordinator::ranktable::{RankEntry, Ranktable};
+use anyhow::{bail, Result};
+
+/// Which parallelism axis a group spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GroupKind {
+    /// Gradient all-reduce group (spans the dp axis).
+    Dp,
+    /// Tensor-parallel group (spans the tp axis).
+    Tp,
+    /// Pipeline stage group (spans the pp axis).
+    Pp,
+}
+
+impl GroupKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GroupKind::Dp => "dp",
+            GroupKind::Tp => "tp",
+            GroupKind::Pp => "pp",
+        }
+    }
+}
+
+/// Stable identity of one communication group within a topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId {
+    pub kind: GroupKind,
+    pub index: usize,
+}
+
+/// One process group: ordered members plus the endpoint each member
+/// publishes in the ranktable, stamped with the rendezvous epoch its
+/// communicator was established in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommGroup {
+    pub id: GroupId,
+    /// Rendezvous epoch of the current communicator.
+    pub epoch: u64,
+    /// Global ranks, in axis order.
+    pub ranks: Vec<usize>,
+    /// Endpoint per member, parallel to `ranks`.
+    pub endpoints: Vec<String>,
+}
+
+impl CommGroup {
+    pub fn contains(&self, rank: usize) -> bool {
+        self.ranks.contains(&rank)
+    }
+}
+
+/// Result of re-keying a group set into a new epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RekeyStats {
+    /// Groups whose membership endpoints changed — communicator must
+    /// be re-established with the replacement node(s).
+    pub rebuilt: usize,
+    /// Groups untouched by the substitution — epoch re-stamp only.
+    pub rekeyed: usize,
+}
+
+/// The communication groups derived for a topology — either the full
+/// set (coordinator view) or one rank's three groups (node view).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupSet {
+    pub epoch: u64,
+    pub world: usize,
+    pub groups: Vec<CommGroup>,
+}
+
+/// rank -> endpoint lookup; errors unless the table covers exactly
+/// `world` contiguous ranks.
+fn endpoint_index(table: &Ranktable, world: usize) -> Result<Vec<String>> {
+    if table.entries.len() != world {
+        bail!(
+            "ranktable has {} entries but topology world size is {world}",
+            table.entries.len()
+        );
+    }
+    table.validate()?;
+    let mut addrs = vec![String::new(); world];
+    for e in &table.entries {
+        addrs[e.rank] = e.addr.clone();
+    }
+    Ok(addrs)
+}
+
+fn group(
+    id: GroupId,
+    epoch: u64,
+    ranks: Vec<usize>,
+    addrs: &[String],
+) -> CommGroup {
+    let endpoints = ranks.iter().map(|&r| addrs[r].clone()).collect();
+    CommGroup { id, epoch, ranks, endpoints }
+}
+
+/// The three group ids `rank` belongs to under `cfg`.
+pub fn group_ids_for(cfg: &ParallelismConfig, rank: usize) -> [GroupId; 3] {
+    let c = cfg.coord(rank);
+    [
+        GroupId { kind: GroupKind::Dp, index: c.pp * cfg.tp + c.tp },
+        GroupId { kind: GroupKind::Tp, index: c.dp * cfg.pp + c.pp },
+        GroupId { kind: GroupKind::Pp, index: c.dp * cfg.tp + c.tp },
+    ]
+}
+
+/// Members of `id`, in axis order.
+fn members(cfg: &ParallelismConfig, id: GroupId) -> Vec<usize> {
+    match id.kind {
+        GroupKind::Dp => {
+            let (pp, tp) = (id.index / cfg.tp, id.index % cfg.tp);
+            (0..cfg.dp)
+                .map(|dp| cfg.global(DeviceCoord { dp, pp, tp }))
+                .collect()
+        }
+        GroupKind::Tp => {
+            let (dp, pp) = (id.index / cfg.pp, id.index % cfg.pp);
+            (0..cfg.tp)
+                .map(|tp| cfg.global(DeviceCoord { dp, pp, tp }))
+                .collect()
+        }
+        GroupKind::Pp => {
+            let (dp, tp) = (id.index / cfg.tp, id.index % cfg.tp);
+            (0..cfg.pp)
+                .map(|pp| cfg.global(DeviceCoord { dp, pp, tp }))
+                .collect()
+        }
+    }
+}
+
+impl GroupSet {
+    /// Derive every group in the topology (coordinator view):
+    /// `pp*tp` DP groups, `dp*pp` TP groups, `dp*tp` PP groups.
+    pub fn derive(
+        table: &Ranktable,
+        cfg: &ParallelismConfig,
+        epoch: u64,
+    ) -> Result<GroupSet> {
+        cfg.validate()?;
+        let world = cfg.world_size();
+        let addrs = endpoint_index(table, world)?;
+        let mut groups =
+            Vec::with_capacity(cfg.pp * cfg.tp + cfg.dp * cfg.pp + cfg.dp * cfg.tp);
+        for (kind, count) in [
+            (GroupKind::Dp, cfg.pp * cfg.tp),
+            (GroupKind::Tp, cfg.dp * cfg.pp),
+            (GroupKind::Pp, cfg.dp * cfg.tp),
+        ] {
+            for index in 0..count {
+                let id = GroupId { kind, index };
+                groups.push(group(id, epoch, members(cfg, id), &addrs));
+            }
+        }
+        Ok(GroupSet { epoch, world, groups })
+    }
+
+    /// Derive only the three groups containing `rank` (node view) —
+    /// O(dp + tp + pp) work and memory, what a live device actually
+    /// materializes at any cluster size.
+    pub fn derive_for(
+        table: &Ranktable,
+        cfg: &ParallelismConfig,
+        epoch: u64,
+        rank: usize,
+    ) -> Result<GroupSet> {
+        cfg.validate()?;
+        let world = cfg.world_size();
+        if rank >= world {
+            bail!("rank {rank} outside world {world}");
+        }
+        let addrs = endpoint_index(table, world)?;
+        let groups = group_ids_for(cfg, rank)
+            .into_iter()
+            .map(|id| group(id, epoch, members(cfg, id), &addrs))
+            .collect();
+        Ok(GroupSet { epoch, world, groups })
+    }
+
+    pub fn group(&self, id: GroupId) -> Option<&CommGroup> {
+        self.groups.iter().find(|g| g.id == id)
+    }
+
+    /// Groups containing `rank` (three in the full set; up to three in
+    /// a node view).
+    pub fn groups_for(&self, rank: usize) -> Vec<&CommGroup> {
+        self.groups.iter().filter(|g| g.contains(rank)).collect()
+    }
+
+    /// Re-key the set into `epoch`, applying endpoint substitutions.
+    /// Groups containing a substituted rank are *rebuilt* (endpoints
+    /// refreshed); all others are only epoch re-stamped. O(k) in the
+    /// substitution count for the node view — independent of world.
+    pub fn rekey(&mut self, subs: &[RankEntry], epoch: u64) -> RekeyStats {
+        let mut stats = RekeyStats::default();
+        for g in &mut self.groups {
+            let mut touched = false;
+            for s in subs {
+                if let Some(i) = g.ranks.iter().position(|&r| r == s.rank) {
+                    g.endpoints[i] = s.addr.clone();
+                    touched = true;
+                }
+            }
+            g.epoch = epoch;
+            if touched {
+                stats.rebuilt += 1;
+            } else {
+                stats.rekeyed += 1;
+            }
+        }
+        self.epoch = epoch;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn entry(rank: usize) -> RankEntry {
+        RankEntry {
+            rank,
+            node: rank / 8,
+            device: rank % 8,
+            addr: format!("10.0.{}.{}:2900", rank / 8, rank % 8),
+        }
+    }
+
+    fn table(n: usize) -> Ranktable {
+        Ranktable::new((0..n).map(entry).collect())
+    }
+
+    #[test]
+    fn derive_partitions_world_per_kind() {
+        let cfg = ParallelismConfig::new(4, 3, 2);
+        let set = GroupSet::derive(&table(cfg.world_size()), &cfg, 1).unwrap();
+        for kind in [GroupKind::Dp, GroupKind::Tp, GroupKind::Pp] {
+            let mut seen: Vec<usize> = set
+                .groups
+                .iter()
+                .filter(|g| g.id.kind == kind)
+                .flat_map(|g| g.ranks.iter().copied())
+                .collect();
+            seen.sort();
+            let world: Vec<usize> = (0..cfg.world_size()).collect();
+            assert_eq!(seen, world, "{} groups must partition the world", kind.name());
+        }
+    }
+
+    #[test]
+    fn every_rank_in_exactly_three_groups() {
+        let cfg = ParallelismConfig::new(2, 2, 2);
+        let set = GroupSet::derive(&table(8), &cfg, 0).unwrap();
+        for r in 0..8 {
+            assert_eq!(set.groups_for(r).len(), 3, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn endpoints_track_ranktable() {
+        let cfg = ParallelismConfig::new(2, 2, 2);
+        let t = table(8);
+        let set = GroupSet::derive(&t, &cfg, 0).unwrap();
+        for g in &set.groups {
+            for (r, ep) in g.ranks.iter().zip(&g.endpoints) {
+                assert_eq!(ep, &t.entries[*r].addr);
+            }
+        }
+    }
+
+    #[test]
+    fn node_view_matches_full_view() {
+        let cfg = ParallelismConfig::new(3, 2, 2);
+        let t = table(cfg.world_size());
+        let full = GroupSet::derive(&t, &cfg, 4).unwrap();
+        for rank in [0, 5, 11] {
+            let node = GroupSet::derive_for(&t, &cfg, 4, rank).unwrap();
+            assert_eq!(node.groups.len(), 3);
+            for g in &node.groups {
+                assert!(g.contains(rank));
+                assert_eq!(full.group(g.id), Some(g));
+            }
+        }
+    }
+
+    #[test]
+    fn rekey_rebuilds_only_touched_groups() {
+        let cfg = ParallelismConfig::new(2, 2, 2);
+        let t = table(8);
+        let mut set = GroupSet::derive(&t, &cfg, 1).unwrap();
+        let mut sub = entry(3);
+        sub.addr = "10.9.9.9:2900".to_string();
+        let stats = set.rekey(&[sub.clone()], 2);
+        // rank 3 sits in exactly one group of each kind
+        assert_eq!(stats.rebuilt, 3);
+        assert_eq!(stats.rebuilt + stats.rekeyed, set.groups.len());
+        assert_eq!(set.epoch, 2);
+        for g in &set.groups {
+            assert_eq!(g.epoch, 2);
+            if let Some(i) = g.ranks.iter().position(|&r| r == 3) {
+                assert_eq!(g.endpoints[i], sub.addr);
+            }
+        }
+    }
+
+    #[test]
+    fn derive_rejects_mismatched_table() {
+        let cfg = ParallelismConfig::new(2, 2, 2);
+        assert!(GroupSet::derive(&table(7), &cfg, 0).is_err());
+        assert!(GroupSet::derive_for(&table(8), &cfg, 0, 8).is_err());
+    }
+
+    #[test]
+    fn prop_group_ids_consistent_with_membership() {
+        prop::check("group ids vs membership", 150, |rng| {
+            let dp = 1 + rng.below(4) as usize;
+            let pp = 1 + rng.below(3) as usize;
+            let tp = 1 + rng.below(3) as usize;
+            let cfg = ParallelismConfig::new(dp, pp, tp);
+            let set = GroupSet::derive(&table(cfg.world_size()), &cfg, 0)
+                .map_err(|e| e.to_string())?;
+            let rank = rng.below(cfg.world_size() as u64) as usize;
+            let ids = group_ids_for(&cfg, rank);
+            for id in ids {
+                let g = set.group(id).ok_or("missing group")?;
+                prop::assert_prop(
+                    g.contains(rank),
+                    format!("rank {rank} missing from its {:?}", id),
+                )?;
+            }
+            // and no other group claims the rank
+            prop::assert_eq_prop(&set.groups_for(rank).len(), &3)
+        });
+    }
+}

@@ -1,10 +1,13 @@
 //! Communication substrate: wire protocol, TCP key-value store (the
-//! TCPStore used during communication-group establishment), and
-//! in-process synchronous collectives for the DP training engine.
+//! TCPStore used during communication-group establishment), DP/TP/PP
+//! communication-group derivation, and in-process synchronous
+//! collectives for the DP training engine.
 
 pub mod collective;
+pub mod group;
 pub mod tcp_store;
 pub mod wire;
 
 pub use collective::{Collective, CollectiveError};
-pub use tcp_store::{establish, TcpStoreClient, TcpStoreServer};
+pub use group::{CommGroup, GroupId, GroupKind, GroupSet, RekeyStats};
+pub use tcp_store::{establish, FencedWait, TcpStoreClient, TcpStoreServer};

@@ -26,6 +26,12 @@ struct Shared {
     counters: Mutex<HashMap<String, i64>>,
     cv: Condvar,
     hellos: AtomicU64,
+    /// Rendezvous epoch: fenced waiters registered at an older epoch
+    /// are released with `EpochFenced` when this advances.
+    epoch: AtomicU64,
+    /// Total requests served (all opcodes) — lets tests assert that
+    /// rebuild traffic is independent of cluster size.
+    requests: AtomicU64,
 }
 
 /// The store server. Dropping it shuts the listener down.
@@ -85,6 +91,16 @@ impl TcpStoreServer {
     pub fn key_count(&self) -> usize {
         self.shared.map.lock().unwrap().len()
     }
+
+    /// Current rendezvous epoch (advanced by `AdvanceEpoch`).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Total requests served since start (all clients, all opcodes).
+    pub fn request_count(&self) -> u64 {
+        self.shared.requests.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for TcpStoreServer {
@@ -133,6 +149,7 @@ fn serve_connection(
 }
 
 fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
+    shared.requests.fetch_add(1, Ordering::Relaxed);
     match req {
         Request::Hello { .. } => {
             shared.hellos.fetch_add(1, Ordering::Relaxed);
@@ -172,22 +189,66 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
         Request::Count => {
             Response::CountIs(shared.map.lock().unwrap().len() as u64)
         }
+        Request::WaitEpoch { key, epoch } => {
+            let mut map = shared.map.lock().unwrap();
+            loop {
+                let current = shared.epoch.load(Ordering::SeqCst);
+                if current > epoch {
+                    return Response::EpochFenced { current };
+                }
+                if let Some(v) = map.get(&key) {
+                    return Response::Value(v.clone());
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return Response::NotFound;
+                }
+                let (guard, _timeout) = shared
+                    .cv
+                    .wait_timeout(map, Duration::from_millis(100))
+                    .unwrap();
+                map = guard;
+            }
+        }
+        Request::AdvanceEpoch { to } => {
+            let prev = shared.epoch.fetch_max(to, Ordering::SeqCst);
+            // Wake every blocked waiter so stale fenced waits observe
+            // the new epoch and return `EpochFenced`.
+            shared.cv.notify_all();
+            Response::Counter(prev.max(to) as i64)
+        }
     }
+}
+
+/// Outcome of an epoch-fenced wait: the published value, or notice
+/// that the rendezvous epoch moved past the one waited on. The latter
+/// is retryable — re-issue the wait at `current`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FencedWait {
+    Value(Vec<u8>),
+    Superseded { current: u64 },
 }
 
 /// Client connection to the store.
 pub struct TcpStoreClient {
     stream: TcpStream,
+    ops: u64,
 }
 
 impl TcpStoreClient {
     pub fn connect(addr: SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
         stream.set_nodelay(true).ok();
-        Ok(TcpStoreClient { stream })
+        Ok(TcpStoreClient { stream, ops: 0 })
+    }
+
+    /// Requests sent over this connection since connect — the quantity
+    /// the rendezvous protocol keeps O(1) per surviving node.
+    pub fn ops_sent(&self) -> u64 {
+        self.ops
     }
 
     fn call(&mut self, req: Request) -> Result<Response> {
+        self.ops += 1;
         write_frame(&mut self.stream, &req.encode())?;
         let body = read_frame(&mut self.stream)?;
         Response::decode(&body)
@@ -222,6 +283,31 @@ impl TcpStoreClient {
         self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
         match self.call(Request::Wait { key: key.into() })? {
             Response::Value(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Block until `key` is published or the store's rendezvous epoch
+    /// advances past `epoch` (a rebuild superseded this wait). Unlike
+    /// [`Self::wait`], a stale waiter is *released* with
+    /// [`FencedWait::Superseded`] rather than left hanging.
+    pub fn wait_epoch(&mut self, key: &str, epoch: u64) -> Result<FencedWait> {
+        self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        match self.call(Request::WaitEpoch { key: key.into(), epoch })? {
+            Response::Value(v) => Ok(FencedWait::Value(v)),
+            Response::EpochFenced { current } => {
+                Ok(FencedWait::Superseded { current })
+            }
+            Response::NotFound => bail!("store shut down during fenced wait"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Advance the store's rendezvous epoch (monotonic max); returns
+    /// the epoch after the advance. Releases all stale fenced waiters.
+    pub fn advance_epoch(&mut self, to: u64) -> Result<u64> {
+        match self.call(Request::AdvanceEpoch { to })? {
+            Response::Counter(v) => Ok(v as u64),
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -335,6 +421,78 @@ mod tests {
         assert_eq!(c1.len(), 10);
         assert_eq!(c2.len(), 10);
         assert_eq!(server.hello_count(), 20);
+    }
+
+    #[test]
+    fn epoch_bump_releases_stale_fenced_waiters() {
+        // A rebuild epoch bump must release waiters fenced at an older
+        // epoch with a retryable outcome — not leave them hanging.
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let t0 = Instant::now();
+        let waiter = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.wait_epoch("rdzv/1/delta", 1).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        assert_eq!(c.advance_epoch(2).unwrap(), 2);
+        let out = waiter.join().unwrap();
+        assert_eq!(out, FencedWait::Superseded { current: 2 });
+        assert!(t0.elapsed() < Duration::from_secs(10), "waiter hung");
+        assert_eq!(server.epoch(), 2);
+    }
+
+    #[test]
+    fn fenced_wait_delivers_value_at_current_epoch() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.advance_epoch(3).unwrap();
+        let waiter = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            // fenced at the *current* epoch: must behave like wait()
+            c.wait_epoch("rdzv/3/delta", 3).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        c.set("rdzv/3/delta", b"subs").unwrap();
+        assert_eq!(waiter.join().unwrap(), FencedWait::Value(b"subs".to_vec()));
+    }
+
+    #[test]
+    fn advance_epoch_is_monotonic_max() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        assert_eq!(c.advance_epoch(5).unwrap(), 5);
+        // going backwards is a no-op, not a rollback
+        assert_eq!(c.advance_epoch(2).unwrap(), 5);
+        assert_eq!(server.epoch(), 5);
+    }
+
+    #[test]
+    fn client_counts_ops_sent() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        assert_eq!(c.ops_sent(), 0);
+        c.hello(7).unwrap();
+        c.set("k", b"v").unwrap();
+        c.get("k").unwrap();
+        assert_eq!(c.ops_sent(), 3);
+        assert!(server.request_count() >= 3);
+    }
+
+    #[test]
+    fn server_shutdown_releases_fenced_waiters() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let waiter = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            // shutdown surfaces as an error, not a hang
+            c.wait_epoch("never", 0)
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        drop(server);
+        assert!(waiter.join().unwrap().is_err());
     }
 
     #[test]

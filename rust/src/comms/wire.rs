@@ -21,6 +21,14 @@ pub enum Request {
     Count,
     /// connection handshake (counts clients, used by establishment)
     Hello { client_id: u64 },
+    /// wait(key) fenced at a rendezvous epoch: blocks like `Wait`, but
+    /// if the store's epoch advances past `epoch` the waiter is
+    /// released with `EpochFenced` instead of the value (retryable —
+    /// re-issue at the returned epoch). The group-rebuild primitive.
+    WaitEpoch { key: String, epoch: u64 },
+    /// advance the store's rendezvous epoch to max(current, to) and
+    /// wake every blocked waiter -> Counter(new epoch)
+    AdvanceEpoch { to: u64 },
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -31,6 +39,9 @@ pub enum Response {
     Counter(i64),
     CountIs(u64),
     HelloAck,
+    /// A fenced wait was superseded: the store's rendezvous epoch is
+    /// now `current`, past the epoch the waiter was fenced at.
+    EpochFenced { current: u64 },
 }
 
 fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
@@ -88,6 +99,15 @@ impl Request {
                 body.push(5);
                 body.extend_from_slice(&client_id.to_le_bytes());
             }
+            Request::WaitEpoch { key, epoch } => {
+                body.push(6);
+                put_bytes(&mut body, key.as_bytes());
+                body.extend_from_slice(&epoch.to_le_bytes());
+            }
+            Request::AdvanceEpoch { to } => {
+                body.push(7);
+                body.extend_from_slice(&to.to_le_bytes());
+            }
         }
         frame(body)
     }
@@ -117,6 +137,21 @@ impl Request {
                 let client_id = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
                 Ok(Request::Hello { client_id })
             }
+            Some(6) => {
+                let key = get_string(body, &mut pos)?;
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                let epoch = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                Ok(Request::WaitEpoch { key, epoch })
+            }
+            Some(7) => {
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                let to = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                Ok(Request::AdvanceEpoch { to })
+            }
             other => bail!("bad request opcode {other:?}"),
         }
     }
@@ -141,6 +176,10 @@ impl Response {
                 body.extend_from_slice(&v.to_le_bytes());
             }
             Response::HelloAck => body.push(5),
+            Response::EpochFenced { current } => {
+                body.push(6);
+                body.extend_from_slice(&current.to_le_bytes());
+            }
         }
         frame(body)
     }
@@ -168,6 +207,13 @@ impl Response {
                 )))
             }
             Some(5) => Ok(Response::HelloAck),
+            Some(6) => {
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                let current = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                Ok(Response::EpochFenced { current })
+            }
             other => bail!("bad response opcode {other:?}"),
         }
     }
@@ -225,6 +271,8 @@ mod tests {
         roundtrip_req(Request::Add { key: "barrier".into(), delta: -7 });
         roundtrip_req(Request::Count);
         roundtrip_req(Request::Hello { client_id: u64::MAX });
+        roundtrip_req(Request::WaitEpoch { key: "rdzv/3/delta".into(), epoch: 3 });
+        roundtrip_req(Request::AdvanceEpoch { to: u64::MAX });
     }
 
     #[test]
@@ -235,6 +283,7 @@ mod tests {
         roundtrip_resp(Response::Counter(-1));
         roundtrip_resp(Response::CountIs(42));
         roundtrip_resp(Response::HelloAck);
+        roundtrip_resp(Response::EpochFenced { current: 9 });
     }
 
     #[test]

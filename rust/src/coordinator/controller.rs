@@ -10,11 +10,13 @@
 use super::detection::HeartbeatMonitor;
 use super::events::{RecoveryRecord, RunReport};
 use super::ranktable::{RankEntry, Ranktable, SharedRanktable};
+use super::rendezvous::{rebuild_episode, EpisodeConfig};
 use super::step_tag::plan_restore;
 use crate::checkpoint::CheckpointManager;
 
+use crate::comms::tcp_store::TcpStoreServer;
 use crate::comms::{Collective, CollectiveError};
-use crate::config::RecoveryMode;
+use crate::config::{ParallelismConfig, RecoveryMode};
 use crate::runtime::ModelBundle;
 use crate::training::data::{DataConfig, DataIterator};
 use crate::training::state::WorkerState;
@@ -55,6 +57,10 @@ pub struct ControllerConfig {
     pub max_wall: Duration,
     /// Shared-file ranktable location (maintained across recoveries).
     pub ranktable_path: Option<PathBuf>,
+    /// Rebuild communication groups over a live TCP store during flash
+    /// recovery (epoch-fenced rendezvous, DESIGN.md §8) instead of
+    /// substituting the ranktable in place.
+    pub rebuild_groups: bool,
 }
 
 impl ControllerConfig {
@@ -71,6 +77,7 @@ impl ControllerConfig {
             failures: Vec::new(),
             max_wall: Duration::from_secs(1800),
             ranktable_path: None,
+            rebuild_groups: true,
         }
     }
 
@@ -125,6 +132,11 @@ pub struct Controller {
     workers: BTreeMap<usize, WorkerHandle>,
     ranktable: Ranktable,
     shared_rt: Option<SharedRanktable>,
+    /// Live TCP plane for group reconstruction; `None` when disabled
+    /// or the local bind failed (recovery then degrades to in-place
+    /// ranktable substitution).
+    rebuild_plane: Option<TcpStoreServer>,
+    rebuild_epoch: u64,
     report: RunReport,
     stopped: BTreeMap<usize, u64>, // rank -> param hash
     parked: BTreeMap<usize, (u64, CollectiveError)>, // rank -> (state step, err)
@@ -150,6 +162,13 @@ impl Controller {
             .collect();
         let ranktable = Ranktable::new(entries);
         let shared_rt = cfg.ranktable_path.clone().map(SharedRanktable::new);
+        // Vanilla recovery re-establishes everything from scratch and
+        // never drives an episode — don't bind a listener for it.
+        let rebuild_plane = if cfg.rebuild_groups && cfg.mode == RecoveryMode::Flash {
+            TcpStoreServer::start().ok()
+        } else {
+            None
+        };
         Ok(Controller {
             bundle,
             cfg,
@@ -160,6 +179,8 @@ impl Controller {
             workers: BTreeMap::new(),
             ranktable,
             shared_rt,
+            rebuild_plane,
+            rebuild_epoch: 0,
             report: RunReport::default(),
             stopped: BTreeMap::new(),
             parked: BTreeMap::new(),
@@ -436,19 +457,48 @@ impl Controller {
         // 3. limited recreation: spawn replacements for failed ranks
         // only. A replacement inherits its rank's next scripted failure
         // (if any) so flap campaigns can kill the same rank repeatedly.
+        let mut replacement_entries: Vec<RankEntry> = Vec::with_capacity(dead.len());
         for &rank in &dead {
             self.consume_plan(rank);
             let state = WorkerState::init(&self.bundle, self.cfg.seed as i32)?;
             let next_plan = self.plan_for(rank);
             self.spawn_worker(rank, state, true, next_plan)?;
-            // ranktable substitution: the replacement "node"
-            let entry = RankEntry {
+            // the replacement "node"'s new resource entry
+            replacement_entries.push(RankEntry {
                 rank,
                 node: self.cfg.dp + self.report.recoveries.len() + rank,
                 device: 0,
                 addr: format!("127.0.0.1:{}", 31000 + rank),
-            };
-            self.ranktable.substitute(entry)?;
+            });
+        }
+
+        // 3b. group reconstruction over the live TCP plane: survivors
+        // re-key into the new epoch with O(1) messages each, only the
+        // replacements perform a full join (DESIGN.md §8). Each rank's
+        // rendezvous agent runs the real client protocol against the
+        // controller's store; the updated table every participant
+        // converged on becomes the published ranktable.
+        let t_rebuild = Instant::now();
+        let mut rebuild_s = 0.0;
+        if let Some(server) = &self.rebuild_plane {
+            let par = ParallelismConfig::dp(self.cfg.dp);
+            let outcome = rebuild_episode(
+                server,
+                &self.ranktable,
+                &par,
+                &dead,
+                &replacement_entries,
+                self.rebuild_epoch,
+                &EpisodeConfig { live_survivors: survivors.len() },
+            )?;
+            self.rebuild_epoch = outcome.epoch;
+            self.ranktable = outcome.table;
+            rebuild_s = t_rebuild.elapsed().as_secs_f64();
+        } else {
+            // no live plane: in-place substitution fallback
+            for entry in replacement_entries {
+                self.ranktable.substitute(entry)?;
+            }
         }
         self.publish_ranktable()?;
         let dead_replacements = self.await_parked(&dead, Duration::from_secs(120))?;
@@ -494,6 +544,7 @@ impl Controller {
             detection_s,
             restart_s,
             restore_s,
+            rebuild_s,
             total_s: detection_s + restart_s,
         });
         Ok(())
@@ -621,6 +672,7 @@ impl Controller {
             detection_s,
             restart_s,
             restore_s,
+            rebuild_s: 0.0, // vanilla re-establishes everything from scratch
             total_s: detection_s + restart_s,
         });
         Ok(())

@@ -26,6 +26,10 @@ pub struct RecoveryRecord {
     pub restart_s: f64,
     /// Portion of restart spent in replica/checkpoint state transfer.
     pub restore_s: f64,
+    /// Portion of restart spent rebuilding communication groups over
+    /// the live TCP plane (0 when the rebuild plane is disabled, and
+    /// for vanilla recoveries, which re-establish from scratch).
+    pub rebuild_s: f64,
     pub total_s: f64,
 }
 
@@ -45,6 +49,7 @@ impl RecoveryRecord {
             .set("detection_s", self.detection_s)
             .set("restart_s", self.restart_s)
             .set("restore_s", self.restore_s)
+            .set("rebuild_s", self.rebuild_s)
             .set("total_s", self.total_s);
         o
     }
@@ -121,11 +126,13 @@ mod tests {
             detection_s: 0.2,
             restart_s: 1.1,
             restore_s: 0.3,
+            rebuild_s: 0.1,
             total_s: 1.3,
         };
         let j = r.to_json();
         assert_eq!(j.get("mode").as_str(), Some("flash"));
         assert_eq!(j.get("lost_steps").as_i64(), Some(0));
+        assert_eq!(j.get("rebuild_s").as_f64(), Some(0.1));
     }
 
     #[test]

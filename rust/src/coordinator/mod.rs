@@ -6,6 +6,9 @@
 //!   collect/distribute baseline (§III-D, Tab. I).
 //! * [`step_tag`] — the step-tag protocol deciding when to stop/clean/
 //!   reset and whether to resume at step i or i+1 (§III-E).
+//! * [`rendezvous`] — epoch-fenced communication-group reconstruction
+//!   over the live TCP store: O(1) messages per surviving node,
+//!   full join for replacements only (§III-D; DESIGN.md §8).
 //! * [`controller`] — the global controller orchestrating detection,
 //!   scale-independent restart, and checkpoint-free recovery over the
 //!   real DP training engine.
@@ -15,10 +18,15 @@ pub mod controller;
 pub mod detection;
 pub mod events;
 pub mod ranktable;
+pub mod rendezvous;
 pub mod step_tag;
 
 pub use controller::{Controller, ControllerConfig};
 pub use detection::{Detection, HeartbeatMonitor};
 pub use events::{RecoveryRecord, RunReport};
 pub use ranktable::{original_update, RankEntry, Ranktable, SharedRanktable};
+pub use rendezvous::{
+    rebuild_episode, rebuild_sweep, EpisodeConfig, NodeSession, RebuildOutcome,
+    SweepConfig,
+};
 pub use step_tag::{decide, plan_restore, TagDecision};

@@ -1,11 +1,14 @@
 //! `flashrecovery` CLI — the Layer-3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train     run a real DP training job (optionally with an injected
-//!             failure) under FlashRecovery or the vanilla baseline
-//!   simulate  one paper-scale recovery scenario on the simulator
-//!   scenario  declarative chaos campaigns: list / run / export
-//!   info      print artifact/manifest information
+//!   train          run a real DP training job (optionally with an
+//!                  injected failure) under FlashRecovery or vanilla
+//!   simulate       one paper-scale recovery scenario on the simulator
+//!   scenario       declarative chaos campaigns: list / run / export
+//!   rebuild-bench  group-reconstruction scale sweep over the live TCP
+//!                  plane; emits BENCH_group_rebuild.json, optionally
+//!                  perf-gated against a committed baseline
+//!   info           print artifact/manifest information
 //!
 //! Examples:
 //!   flashrecovery train --size tiny --dp 2 --steps 20
@@ -18,6 +21,8 @@
 //!   flashrecovery scenario run --spec rolling_cascade --seed 7
 //!   flashrecovery scenario run --spec my_campaign.json --journal out.jsonl
 //!   flashrecovery scenario export --spec flaky_node > flaky.json
+//!   flashrecovery rebuild-bench --out BENCH_group_rebuild.json \
+//!       --baseline ci/BENCH_group_rebuild.baseline.json --gate 1.5
 //!   flashrecovery info --size small
 
 use flashrecovery::cluster::failure::FailureKind;
@@ -35,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         Some("train") => train(&args),
         Some("simulate") => simulate(&args),
         Some("scenario") => scenario(&args),
+        Some("rebuild-bench") => rebuild_bench(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -52,7 +58,7 @@ fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -61,6 +67,9 @@ fn usage() {
          scenario: list | run --spec <name|file.json> [--seed N]\n\
          \u{20}         [--devices N] [--journal out.jsonl] [--live]\n\
          \u{20}         | export --spec <name> [--devices N]\n\
+         rebuild-bench: [--scales 256,1024,4096,8192] [--samples N]\n\
+         \u{20}         [--failures N] [--live-survivors N] [--out FILE]\n\
+         \u{20}         [--baseline FILE --gate RATIO]\n\
          info:     --size tiny|small|base"
     );
 }
@@ -284,6 +293,57 @@ fn finish(name: &str, outcomes: &[flashrecovery::chaos::AssertionOutcome]) -> an
         println!("[scenario:{name}] FAIL");
         std::process::exit(1);
     }
+}
+
+/// `rebuild-bench` — the group-reconstruction scale sweep, with an
+/// optional perf gate against a committed baseline JSON (CI's
+/// bench-gate job fails the build on p50 regressions > --gate).
+fn rebuild_bench(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::coordinator::rendezvous::{rebuild_sweep, SweepConfig};
+    use flashrecovery::util::Json;
+
+    let mut cfg = SweepConfig::default();
+    if let Some(s) = args.get("scales") {
+        cfg.scales = s
+            .split(',')
+            .map(|x| x.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?;
+        if cfg.scales.is_empty() {
+            anyhow::bail!("--scales needs at least one rank count");
+        }
+    }
+    cfg.samples = args.u64_or("samples", cfg.samples as u64) as u32;
+    cfg.failures = args.usize_or("failures", cfg.failures);
+    cfg.live_survivors = args.usize_or("live-survivors", cfg.live_survivors);
+
+    let report = rebuild_sweep(&cfg)?;
+    report.print();
+    let out = args.str_or("out", "BENCH_group_rebuild.json");
+    report.write_json(&out)?;
+    println!("[rebuild-bench] wrote {out}");
+
+    if let Some(baseline_path) = args.get("baseline") {
+        let max_ratio = args.f64_or("gate", 1.5);
+        let text = std::fs::read_to_string(baseline_path)?;
+        let baseline =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+        let violations = report.gate(&baseline, 0, max_ratio);
+        if violations.is_empty() {
+            println!(
+                "[rebuild-bench] gate PASS (p50 within {max_ratio}x of {baseline_path})"
+            );
+        } else {
+            for v in &violations {
+                eprintln!("[rebuild-bench] gate FAIL: {v}");
+            }
+            eprintln!(
+                "[rebuild-bench] if this is an accepted change, refresh the \
+                 baseline: cp {out} {baseline_path} (see README)"
+            );
+            std::process::exit(1);
+        }
+    }
+    Ok(())
 }
 
 fn info(args: &Args) -> anyhow::Result<()> {

@@ -7,6 +7,7 @@
 
 use super::Histogram;
 use crate::util::Json;
+use std::path::Path;
 use std::time::Instant;
 
 /// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
@@ -115,7 +116,54 @@ impl BenchReport {
             })
             .collect();
         obj.set("rows", Json::Array(rows));
+        obj.set(
+            "notes",
+            Json::Array(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
         obj
+    }
+
+    /// Write the report as a structured JSON file (`BENCH_*.json`) —
+    /// the machine-readable sink CI uploads and perf-gates.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().render_pretty() + "\n")
+    }
+
+    /// Find a row's values by label.
+    pub fn row_values(&self, label: &str) -> Option<&[f64]> {
+        self.rows
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, vs)| vs.as_slice())
+    }
+
+    /// Perf-gate this report against a committed baseline (the same
+    /// JSON schema): every row label present in both must keep
+    /// `values[col] <= max_ratio x baseline`. Returns the violations;
+    /// empty means the gate passes. Rows absent from the baseline are
+    /// skipped so adding scales doesn't require a baseline refresh.
+    pub fn gate(&self, baseline: &Json, col: usize, max_ratio: f64) -> Vec<String> {
+        let empty: Vec<Json> = Vec::new();
+        let base_rows = baseline.get("rows").as_array().unwrap_or(&empty);
+        let mut violations = Vec::new();
+        for (label, values) in &self.rows {
+            let Some(base) = base_rows
+                .iter()
+                .find(|r| r.get("label").as_str() == Some(label.as_str()))
+            else {
+                continue;
+            };
+            let Some(bv) = base.get("values").idx(col).as_f64() else {
+                continue;
+            };
+            let Some(cv) = values.get(col).copied() else { continue };
+            if bv > 0.0 && cv > bv * max_ratio {
+                violations.push(format!(
+                    "{label}: {cv:.3} exceeds {max_ratio} x baseline {bv:.3}"
+                ));
+            }
+        }
+        violations
     }
 }
 
@@ -146,5 +194,41 @@ mod tests {
     fn report_rejects_bad_arity() {
         let mut r = BenchReport::new("demo", &["a", "b"]);
         r.row("x", vec![1.0]);
+    }
+
+    #[test]
+    fn write_json_is_parseable() {
+        let dir = crate::util::temp_dir("bench").unwrap();
+        let path = dir.join("BENCH_demo.json");
+        let mut r = BenchReport::new("demo", &["p50 ms"]);
+        r.row("n=256", vec![12.5]).note("sink test");
+        r.write_json(&path).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("name").as_str(), Some("demo"));
+        assert_eq!(back.get("rows").idx(0).get("values").idx(0).as_f64(), Some(12.5));
+        assert_eq!(back.get("notes").idx(0).as_str(), Some("sink test"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn gate_flags_only_regressions() {
+        let mut baseline = BenchReport::new("demo", &["p50 ms"]);
+        baseline
+            .row("n=256", vec![10.0])
+            .row("n=8192", vec![20.0]);
+        let base_json = baseline.to_json();
+
+        let mut ok = BenchReport::new("demo", &["p50 ms"]);
+        // within 1.5x, plus a row the baseline doesn't know (skipped)
+        ok.row("n=256", vec![14.9])
+            .row("n=8192", vec![29.0])
+            .row("n=16384", vec![500.0]);
+        assert!(ok.gate(&base_json, 0, 1.5).is_empty());
+
+        let mut bad = BenchReport::new("demo", &["p50 ms"]);
+        bad.row("n=256", vec![9.0]).row("n=8192", vec![31.0]);
+        let v = bad.gate(&base_json, 0, 1.5);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("n=8192"), "{v:?}");
     }
 }

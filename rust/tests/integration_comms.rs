@@ -1,8 +1,14 @@
 //! Integration tests over the real communication substrate: TCP store
-//! rendezvous, ranktable distribution through the store, and the
-//! serial-vs-parallel establishment comparison on real sockets.
+//! rendezvous, ranktable distribution through the store, the
+//! serial-vs-parallel establishment comparison on real sockets, and
+//! the scale-independence invariants of the epoch-fenced group
+//! rebuild protocol.
 
-use flashrecovery::comms::{establish, TcpStoreClient, TcpStoreServer};
+use flashrecovery::comms::{establish, FencedWait, TcpStoreClient, TcpStoreServer};
+use flashrecovery::config::ParallelismConfig;
+use flashrecovery::coordinator::rendezvous::{
+    rebuild_episode, topology_for, EpisodeConfig,
+};
 use flashrecovery::coordinator::{RankEntry, Ranktable};
 use flashrecovery::util::Json;
 use std::time::Duration;
@@ -110,6 +116,124 @@ fn parallel_establishment_not_slower_than_serial() {
     assert!(
         t_par.as_secs_f64() < t_serial.as_secs_f64() * 3.0 + 0.05,
         "parallel {t_par:?} vs serial {t_serial:?}"
+    );
+}
+
+fn sweep_table(n: usize) -> Ranktable {
+    Ranktable::new((0..n).map(entry).collect())
+}
+
+#[test]
+fn survivor_message_count_scale_independent_64_to_4096() {
+    // The scale-independence invariant (paper §III-D): as the cluster
+    // grows 64 -> 4096 ranks, the store messages each surviving node
+    // spends on a rebuild stay constant — 3 (fenced delta wait, arrive
+    // add, release wait) plus at most 1 for the barrier releaser. The
+    // coordinator budget stays O(replacements), and total store
+    // traffic tracks live participants, never world size.
+    let live = 8; // fixed live-agent sample at every scale
+    let mut budgets: Vec<u64> = Vec::new();
+    let mut totals: Vec<u64> = Vec::new();
+    for n in [64usize, 256, 1024, 4096] {
+        let par = topology_for(n);
+        assert_eq!(par.world_size(), n);
+        let server = TcpStoreServer::start().unwrap();
+        let table = sweep_table(n);
+        let failed = [1usize];
+        let replacement = RankEntry {
+            rank: 1,
+            node: n + 1,
+            device: 0,
+            addr: "10.200.0.1:2900".to_string(),
+        };
+        let before = server.request_count();
+        let out = rebuild_episode(
+            &server,
+            &table,
+            &par,
+            &failed,
+            &[replacement],
+            0,
+            &EpisodeConfig { live_survivors: live },
+        )
+        .unwrap();
+        assert_eq!(out.live_survivors, live);
+        budgets.push(out.survivor_ops_max);
+        assert_eq!(out.coordinator_ops, 1 + 4, "coordinator O(k) at n={n}");
+        assert_eq!(out.replacement_ops_max, 6, "replacement O(1) at n={n}");
+        totals.push(server.request_count() - before);
+    }
+    assert!(
+        budgets.windows(2).all(|w| w[0] == w[1]),
+        "survivor message count must not scale with the cluster: {budgets:?}"
+    );
+    assert_eq!(budgets[0], 3, "budget is exactly 3: {budgets:?}");
+    // total store traffic is bounded by participants, not world size:
+    // with an identical live-agent sample the per-episode request
+    // count is deterministic, so n=64 and n=4096 must match exactly
+    let (lo, hi) = (
+        *totals.iter().min().unwrap(),
+        *totals.iter().max().unwrap(),
+    );
+    assert_eq!(
+        lo, hi,
+        "store traffic must not grow with cluster size: {totals:?}"
+    );
+}
+
+#[test]
+fn rebuild_epoch_bump_releases_stale_waiter_during_churn() {
+    // Live-recovery gap behind `server_shutdown_releases_waiters`: a
+    // client parked on a *previous* epoch's key while the server
+    // churns through rebuilds must come back with a retryable
+    // `Superseded` outcome — not hang until its 300s read timeout —
+    // and succeed on the retry at the new epoch.
+    let cfg = ParallelismConfig::dp(4);
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+
+    let stale = std::thread::spawn(move || {
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        // parked at epoch 1 on a key that epoch never publishes (e.g.
+        // a join the failed node will never send)
+        let current = match c.wait_epoch("rdzv/1/join/99", 1).unwrap() {
+            FencedWait::Superseded { current } => current,
+            other => panic!("expected stale waiter superseded, got {other:?}"),
+        };
+        // retry at the epoch the fence reported: must resolve
+        c.wait_epoch(&format!("rdzv/{current}/delta"), current).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(60));
+
+    // two back-to-back rebuild episodes (server churn): epoch 1's keys
+    // are consumed and epoch 2 supersedes the stale waiter
+    let mut table = sweep_table(4);
+    let mut epoch = 0;
+    for tag in 0..2u64 {
+        let replacement = RankEntry {
+            rank: 2,
+            node: 100 + tag as usize,
+            device: 0,
+            addr: format!("10.9.{tag}.2:2900"),
+        };
+        let out = rebuild_episode(
+            &server,
+            &table,
+            &cfg,
+            &[2],
+            &[replacement],
+            epoch,
+            &EpisodeConfig { live_survivors: 4 },
+        )
+        .unwrap();
+        epoch = out.epoch;
+        table = out.table;
+    }
+    assert_eq!(epoch, 2);
+    let released = stale.join().unwrap();
+    assert!(
+        matches!(released, FencedWait::Value(_)),
+        "retry at the fenced epoch must see that epoch's delta: {released:?}"
     );
 }
 
