@@ -1,0 +1,49 @@
+//! Streaming-restore sweep: shard-aware checkpoint-free restore over
+//! real sockets at several model sizes x ZeRO shard counts.
+//!
+//! Each cell kills one rank per shard group and restores every lost
+//! shard from a distinct surviving replica, transfers running in
+//! parallel; the `1src` column is the same target count restored
+//! through a single source — the pre-refactor whole-model broadcast
+//! shape. The parallel path must beat the serialized baseline at the
+//! largest cell (the point of the refactor).
+//!
+//! Emits `BENCH_state_restore.json` (via `BenchReport::write_json`),
+//! the artifact CI's bench gate compares against the committed
+//! baseline in `ci/BENCH_state_restore.baseline.json`.
+//!
+//!     cargo bench --bench state_restore
+
+use flashrecovery::coordinator::restore::{restore_sweep, RestoreSweepConfig};
+
+fn main() {
+    let cfg = RestoreSweepConfig::default();
+    let report = restore_sweep(&cfg).expect("restore sweep");
+    report.print();
+    report
+        .write_json("BENCH_state_restore.json")
+        .expect("write BENCH_state_restore.json");
+    println!("wrote BENCH_state_restore.json");
+
+    // ---- asserted property: parallel per-shard restore beats the ----
+    // ---- single-source broadcast at the largest cell             ----
+    let elems = *cfg.sizes.iter().max().unwrap();
+    let shards = *cfg.shards.iter().max().unwrap();
+    let row = report
+        .row_values(&format!("elems={elems} shards={shards}"))
+        .expect("largest row");
+    let (parallel_p50, single_p50) = (row[0], row[5]);
+    assert!(
+        parallel_p50 < single_p50,
+        "parallel restore ({parallel_p50:.2}ms) must beat single-source \
+         broadcast ({single_p50:.2}ms) at elems={elems} shards={shards}"
+    );
+    // and the win should not be marginal at this size: the serialized
+    // baseline pays ~`shards` transfers back to back
+    println!(
+        "state_restore OK: parallel {parallel_p50:.2}ms vs single-source \
+         {single_p50:.2}ms at elems={elems} shards={shards} \
+         ({:.2}x)",
+        single_p50 / parallel_p50.max(1e-9)
+    );
+}

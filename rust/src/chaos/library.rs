@@ -1,10 +1,11 @@
 //! Built-in chaos scenario library.
 //!
-//! Seven parameterized campaigns, from the paper's single-failure
+//! Eight parameterized campaigns, from the paper's single-failure
 //! baseline to compound patterns production fleets actually see
 //! (ByteDance's robust-training report, Unicron): concurrent faults,
 //! rolling cascades, flapping hosts, failures striking mid-recovery,
-//! spare-pool exhaustion, and straggler degradation. Each spec carries
+//! spare-pool exhaustion, straggler degradation, and failures landing
+//! mid-*restore* (state streams aborted and replanned). Each spec carries
 //! assertions calibrated to the paper-fit latency model — recovery-time
 //! bounds are intentionally scale-independent (the paper's headline
 //! claim), so the same spec passes from 64 to 18k devices.
@@ -17,7 +18,7 @@ use crate::cluster::failure::FailureKind;
 use crate::config::RecoveryMode;
 
 /// Names of all built-in scenarios, in presentation order.
-pub const NAMES: [&str; 7] = [
+pub const NAMES: [&str; 8] = [
     "single_fault",
     "double_fault",
     "rolling_cascade",
@@ -25,6 +26,7 @@ pub const NAMES: [&str; 7] = [
     "failure_during_recovery",
     "spare_exhaustion",
     "straggler_degrade",
+    "restore_under_churn",
 ];
 
 fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
@@ -178,6 +180,46 @@ pub fn failure_during_recovery(devices: usize) -> ScenarioSpec {
     s
 }
 
+/// A second failure strikes while the first failure's *state restore*
+/// is mid-transfer: the epoch bump must abort every in-flight shard
+/// stream retryably and the replanned restore (both victims folded
+/// into one episode) must still converge. On the simulator path this
+/// behaves like `failure_during_recovery`; the live hints drive
+/// `chaos::live::drive_restores_under_churn` over real sockets.
+pub fn restore_under_churn(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "restore_under_churn",
+        "Second crash lands mid-restore; epoch bump aborts in-flight state streams, replanned restore converges",
+        devices,
+    );
+    s.cluster.spare_nodes = 2;
+    let mut f1 = FaultSpec {
+        at_s: 100.0,
+        failure: Some(FailureKind::Network),
+        ..Default::default()
+    };
+    f1.rank = Some(1);
+    f1.at_step = Some(4);
+    let mut f2 = FaultSpec {
+        at_s: 130.0,
+        failure: Some(FailureKind::Segfault),
+        ..Default::default()
+    };
+    f2.rank = Some(2);
+    f2.at_step = Some(6);
+    s.faults = vec![f1, f2];
+    s.live.dp = 4;
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(350.0),
+        max_total_downtime_s: Some(400.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_merged_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
 /// More simultaneous victims than spares: the pool empties, one node
 /// stays failed, and the job degrades gracefully instead of wedging.
 pub fn spare_exhaustion(devices: usize) -> ScenarioSpec {
@@ -249,6 +291,7 @@ pub fn by_name(name: &str, devices: usize) -> Option<ScenarioSpec> {
         "failure_during_recovery" => failure_during_recovery(devices),
         "spare_exhaustion" => spare_exhaustion(devices),
         "straggler_degrade" => straggler_degrade(devices),
+        "restore_under_churn" => restore_under_churn(devices),
         _ => return None,
     })
 }

@@ -16,15 +16,21 @@
 
 use super::engine::AssertionOutcome;
 use super::spec::{FaultFamily, ScenarioSpec};
+use crate::checkpoint::Snapshot;
 use crate::cluster::failure::FailureKind;
+use crate::comms::state_stream::{EpochFence, RestoreError, StreamConfig};
 use crate::comms::tcp_store::TcpStoreServer;
 use crate::config::ParallelismConfig;
 use crate::coordinator::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
+use crate::coordinator::restore::{
+    bump_epoch, plan_shard_restore, restore_episode, synthetic_snapshot,
+};
 use crate::coordinator::{ControllerConfig, RankEntry, Ranktable, RunReport};
 use crate::training::worker::{FailurePlan, Phase};
 use crate::training::TrainingEngine;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 fn parse_phase(s: &str) -> Phase {
     match s {
@@ -181,11 +187,192 @@ pub fn drive_group_rebuilds(spec: &ScenarioSpec) -> Result<Vec<RebuildOutcome>> 
             &failed,
             &replacements,
             epoch,
-            &EpisodeConfig { live_survivors: dp },
+            &EpisodeConfig { live_survivors: dp, ..Default::default() },
         )?;
         epoch = out.epoch;
         table = out.table.clone();
         episodes.push(out);
+    }
+    Ok(episodes)
+}
+
+/// Outcome of one live restore episode driven from a chaos spec.
+#[derive(Debug, Clone)]
+pub struct LiveRestoreOutcome {
+    /// Epoch the episode finally converged in.
+    pub epoch: u64,
+    /// Failure step the episode recovered (spec `at_step`).
+    pub step: u64,
+    pub resume_step: u64,
+    /// Ranks restored (replacements for the episode's victims, plus
+    /// any folded in by churn).
+    pub restored: Vec<usize>,
+    /// Distinct replica sources that served state.
+    pub sources: Vec<usize>,
+    pub bytes_moved: u64,
+    pub wall_s: f64,
+    /// Restore attempts aborted retryably by a mid-restore epoch bump
+    /// before the episode converged.
+    pub aborted_attempts: usize,
+}
+
+/// Per-rank f32 elements for the synthetic chaos model state — big
+/// enough to exercise multi-chunk transfers with a small chunk size.
+const CHAOS_STATE_ELEMS: usize = 30_000;
+
+fn chaos_states(dp: usize, step: u64) -> BTreeMap<usize, Snapshot> {
+    // DP replicas: identical bits on every rank by construction.
+    (0..dp).map(|r| (r, synthetic_snapshot(step, CHAOS_STATE_ELEMS))).collect()
+}
+
+/// Drive the spec's scripted failures as *real* checkpoint-free
+/// restore episodes over live sockets: per failure step, the victims'
+/// state shards are re-streamed from surviving replicas through the
+/// shard-aware planner and the epoch-fenced state-stream protocol
+/// (DESIGN.md §9). Companion of [`drive_group_rebuilds`], and like it
+/// requires no xla training plane — states are synthetic snapshots.
+pub fn drive_restores(spec: &ScenarioSpec) -> Result<Vec<LiveRestoreOutcome>> {
+    drive_restore_episodes(spec, false)
+}
+
+/// [`drive_restores`] with failure-during-restore churn: each episode
+/// (except the last) is first run throttled while the *next* failure
+/// strikes mid-transfer — the epoch bump must abort every in-flight
+/// transfer retryably, and the replanned episode (victims folded in)
+/// must still converge. This is the `restore_under_churn` scenario's
+/// live assertion.
+pub fn drive_restores_under_churn(spec: &ScenarioSpec) -> Result<Vec<LiveRestoreOutcome>> {
+    drive_restore_episodes(spec, true)
+}
+
+fn drive_restore_episodes(
+    spec: &ScenarioSpec,
+    churn: bool,
+) -> Result<Vec<LiveRestoreOutcome>> {
+    let plans = live_failure_plans(spec)?;
+    let dp = spec.live.dp.max(2);
+    let par = ParallelismConfig::dp(dp);
+    let server = TcpStoreServer::start()?;
+    let addr = server.addr();
+
+    // failure step -> distinct victim ranks (like drive_group_rebuilds)
+    let mut by_step: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for p in &plans {
+        let ranks = by_step.entry(p.step).or_default();
+        if !ranks.contains(&p.rank) {
+            ranks.push(p.rank);
+        }
+    }
+    let timeline: Vec<(u64, Vec<usize>)> = by_step.into_iter().collect();
+
+    let mut epoch = 0u64;
+    let mut episodes = Vec::with_capacity(timeline.len());
+    let mut i = 0;
+    while i < timeline.len() {
+        let (step, mut failed) = timeline[i].clone();
+        failed.sort_unstable();
+        let mut aborted_attempts = 0usize;
+        let fold_next = churn && i + 1 < timeline.len();
+
+        // Fleet state when the failure strikes: replicas at `step`.
+        let states = chaos_states(dp, step);
+        epoch += 1;
+        let fence = EpochFence::new(epoch);
+
+        if fold_next {
+            // First attempt, throttled so the next failure lands
+            // mid-transfer; a watcher bumps the epoch the way the
+            // controller does when detection fires during recovery.
+            // The throttled transfer takes >= ~300ms of mandatory
+            // per-chunk sleeps vs the 20ms watcher delay, so the bump
+            // deterministically lands in flight even on loaded CI.
+            let survivor_steps: Vec<(usize, u64)> = (0..dp)
+                .filter(|r| !failed.contains(r))
+                .map(|r| (r, step))
+                .collect();
+            let plan = plan_shard_restore(&par, &survivor_steps, &failed);
+            let throttled = StreamConfig {
+                chunk_bytes: 4 * 1024,
+                throttle: Some(Duration::from_millis(10)),
+                ..Default::default()
+            };
+            let watcher_fence = fence.clone();
+            let bump_to = epoch + 1;
+            let watcher = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                bump_epoch(addr, &watcher_fence, bump_to)
+            });
+            let attempt =
+                restore_episode(addr, &plan, &states, epoch, &fence, &throttled);
+            watcher
+                .join()
+                .map_err(|_| anyhow::anyhow!("epoch watcher panicked"))??;
+            match attempt {
+                Err(RestoreError::Superseded { current }) => {
+                    aborted_attempts += 1;
+                    epoch = current.max(epoch + 1);
+                }
+                Err(RestoreError::Fatal(e)) => {
+                    return Err(e.context("throttled restore attempt"))
+                }
+                Ok(_) => bail!(
+                    "mid-restore epoch bump failed to abort the in-flight episode"
+                ),
+            }
+            // Fold the second failure's victims in and replan.
+            let (_, next_failed) = timeline[i + 1].clone();
+            for r in next_failed {
+                if !failed.contains(&r) {
+                    failed.push(r);
+                }
+            }
+            failed.sort_unstable();
+            i += 1; // the folded step is consumed by this episode
+        }
+
+        let survivor_steps: Vec<(usize, u64)> = (0..dp)
+            .filter(|r| !failed.contains(r))
+            .map(|r| (r, step))
+            .collect();
+        if survivor_steps.is_empty() {
+            bail!("chaos restore episode at step {step} left no survivors");
+        }
+        let plan = plan_shard_restore(&par, &survivor_steps, &failed);
+        if !plan.replica_feasible() {
+            bail!("chaos restore episode at step {step} has unsourced shards");
+        }
+        let out = restore_episode(
+            addr,
+            &plan,
+            &states,
+            epoch,
+            &fence,
+            &StreamConfig::default(),
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        // Every restored rank must be a bit-exact replica again.
+        let reference = states[&plan.transfers[0].source].content_hash();
+        for (rank, snap) in &out.restored {
+            if snap.content_hash() != reference {
+                bail!("rank {rank} diverged after restore");
+            }
+        }
+        let mut sources: Vec<usize> =
+            out.transfers.iter().map(|t| t.source).collect();
+        sources.sort_unstable();
+        sources.dedup();
+        episodes.push(LiveRestoreOutcome {
+            epoch,
+            step,
+            resume_step: out.resume_step,
+            restored: out.restored.keys().copied().collect(),
+            sources,
+            bytes_moved: out.bytes_moved(),
+            wall_s: out.wall_s,
+            aborted_attempts,
+        });
+        i += 1;
     }
     Ok(episodes)
 }
@@ -258,6 +445,51 @@ mod tests {
         assert_eq!(ep.survivor_ops_max, 3, "survivors must stay O(1) msgs");
         assert_eq!(ep.table.version, 2);
         assert!(ep.wall_s > 0.0);
+    }
+
+    #[test]
+    fn live_bridge_drives_real_state_restore() {
+        // single_fault: one victim at one step -> one restore episode
+        // over real sockets, served by a surviving replica.
+        let spec = library::by_name("single_fault", 256).unwrap();
+        let episodes = drive_restores(&spec).unwrap();
+        assert_eq!(episodes.len(), 1);
+        let ep = &episodes[0];
+        assert_eq!(ep.restored, vec![1]);
+        assert_eq!(ep.resume_step, 4);
+        assert_eq!(ep.aborted_attempts, 0);
+        assert!(ep.bytes_moved > 0);
+        assert!(!ep.sources.contains(&1), "victim cannot serve itself");
+    }
+
+    #[test]
+    fn restore_under_churn_folds_second_failure() {
+        // The headline churn semantics: the second failure strikes
+        // while the first restore's streams are in flight. The epoch
+        // bump aborts the attempt retryably, the episode folds both
+        // victims in, and the replanned restore converges with every
+        // replica bit-identical.
+        let spec = library::by_name("restore_under_churn", 256).unwrap();
+        let episodes = drive_restores_under_churn(&spec).unwrap();
+        assert_eq!(episodes.len(), 1, "both failures fold into one episode");
+        let ep = &episodes[0];
+        assert_eq!(ep.aborted_attempts, 1, "first attempt must be superseded");
+        assert_eq!(ep.restored, vec![1, 2]);
+        assert!(ep.epoch >= 2, "abort bumps past the first epoch");
+        for s in &ep.sources {
+            assert!(![1usize, 2].contains(s), "victims cannot serve");
+        }
+    }
+
+    #[test]
+    fn restore_without_churn_runs_one_episode_per_failure_step() {
+        let spec = library::by_name("restore_under_churn", 256).unwrap();
+        let episodes = drive_restores(&spec).unwrap();
+        assert_eq!(episodes.len(), 2);
+        assert_eq!(episodes[0].restored, vec![1]);
+        assert_eq!(episodes[1].restored, vec![2]);
+        assert!(episodes.iter().all(|e| e.aborted_attempts == 0));
+        assert!(episodes[1].epoch > episodes[0].epoch);
     }
 
     #[test]

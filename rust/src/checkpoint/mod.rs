@@ -1,25 +1,31 @@
 //! Two-phase periodic checkpointing — the baseline FlashRecovery makes
-//! unnecessary (paper §II, Fig. 1/2).
+//! unnecessary (paper §II, Fig. 1/2) — plus the snapshot container the
+//! checkpoint-free restore path streams between replicas.
 //!
 //! * **k0 (snapshot)**: copy device state into host memory. Training is
 //!   stalled for this phase; its duration is the `k0` of eq. (1).
 //! * **k1 (persist)**: write the snapshot to storage. May run on a
 //!   background thread, overlapping training (`k1` "negligible").
 //!
-//! Binary format: `FLSH` magic, version, step, tensor count, then each
-//! tensor as `u64 len | f32 data`, followed by an FNV-1a checksum over
-//! everything before it. A truncated or bit-flipped file fails to load —
-//! exercised by the failure-injection tests.
+//! The binary format and the streaming encoder live in [`codec`]; both
+//! the file persist path and `comms::state_stream` (chunked socket
+//! transfer) share it, so a snapshot has exactly one canonical byte
+//! encoding.
 
-use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+pub mod codec;
+
+pub use codec::{
+    decode_snapshot, encode_snapshot, read_snapshot_from, write_snapshot_to,
+    SnapshotStream,
+};
+
+use crate::util::hash::{fnv1a, fnv1a_f32, FNV_OFFSET};
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
-
-const MAGIC: &[u8; 4] = b"FLSH";
-const VERSION: u32 = 2; // v2: word-wise checksum (§Perf optimization 2)
 
 /// Host-memory model state: one training rank's params + Adam moments.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,52 +39,19 @@ impl Snapshot {
     pub fn total_bytes(&self) -> usize {
         self.tensors.iter().map(|t| t.len() * 4).sum()
     }
-}
 
-/// Word-wise mixing checksum (FNV-style but 8 bytes per round): byte-
-/// at-a-time FNV costs ~2 ms/MB which dominates replica-restore encode
-/// at tens of MB of model state; this runs ~8x faster with the same
-/// bit-flip detection guarantees for our purposes.
-fn fnv1a(data: &[u8], mut hash: u64) -> u64 {
-    const K: u64 = 0x9E37_79B9_7F4A_7C15;
-    let mut chunks = data.chunks_exact(8);
-    for c in &mut chunks {
-        hash = (hash ^ u64::from_le_bytes(c.try_into().unwrap())).wrapping_mul(K);
-        hash ^= hash >> 29;
-    }
-    for b in chunks.remainder() {
-        hash = (hash ^ *b as u64).wrapping_mul(0x100_0000_01b3);
-    }
-    hash
-}
-
-/// Serialize a snapshot into any writer (file persist or the replica-
-/// broadcast byte stream used by checkpoint-free recovery).
-pub fn write_snapshot_to<W: Write>(mut w: W, snap: &Snapshot) -> Result<()> {
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
-    let put = |w: &mut W, bytes: &[u8], hash: &mut u64| -> Result<()> {
-        *hash = fnv1a(bytes, *hash);
-        w.write_all(bytes)?;
-        Ok(())
-    };
-    put(&mut w, MAGIC, &mut hash)?;
-    put(&mut w, &VERSION.to_le_bytes(), &mut hash)?;
-    put(&mut w, &snap.step.to_le_bytes(), &mut hash)?;
-    put(&mut w, &(snap.tensors.len() as u64).to_le_bytes(), &mut hash)?;
-    let mut buf = Vec::new();
-    for t in &snap.tensors {
-        put(&mut w, &(t.len() as u64).to_le_bytes(), &mut hash)?;
-        // f32 slice -> bytes without bytemuck: fixed-size chunk copies
-        // the compiler vectorises (§Perf optimization 3).
-        buf.resize(t.len() * 4, 0);
-        for (dst, x) in buf.chunks_exact_mut(4).zip(t.iter()) {
-            dst.copy_from_slice(&x.to_le_bytes());
+    /// Word-wise FNV over step + every tensor's exact bits (hashed in
+    /// place, no byte copy): two snapshots with equal hashes are
+    /// byte-identical replicas — the invariant checkpoint-free restore
+    /// must preserve, mirrored by `WorkerState::param_hash` on the
+    /// device side.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = fnv1a(&self.step.to_le_bytes(), FNV_OFFSET);
+        for t in &self.tensors {
+            h = fnv1a_f32(t, h);
         }
-        put(&mut w, &buf, &mut hash)?;
+        h
     }
-    w.write_all(&hash.to_le_bytes())?;
-    w.flush()?;
-    Ok(())
 }
 
 /// Serialize a snapshot to `path` (the k1 persist phase).
@@ -94,67 +67,10 @@ pub fn write_snapshot(path: &Path, snap: &Snapshot) -> Result<()> {
     Ok(())
 }
 
-/// Snapshot -> bytes (replica transfer payload).
-pub fn encode_snapshot(snap: &Snapshot) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(snap.total_bytes() + 64);
-    write_snapshot_to(&mut buf, snap).expect("vec write cannot fail");
-    buf
-}
-
-/// Load + verify a snapshot from any reader.
-pub fn read_snapshot_from<R: Read>(mut r: R) -> Result<Snapshot> {
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
-
-    let take = |r: &mut R, n: usize, hash: &mut u64| -> Result<Vec<u8>> {
-        let mut buf = vec![0u8; n];
-        r.read_exact(&mut buf)?;
-        *hash = fnv1a(&buf, *hash);
-        Ok(buf)
-    };
-
-    let magic = take(&mut r, 4, &mut hash)?;
-    if magic != MAGIC {
-        bail!("bad checkpoint magic");
-    }
-    let version = u32::from_le_bytes(take(&mut r, 4, &mut hash)?.try_into().unwrap());
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    let step = u64::from_le_bytes(take(&mut r, 8, &mut hash)?.try_into().unwrap());
-    let count = u64::from_le_bytes(take(&mut r, 8, &mut hash)?.try_into().unwrap()) as usize;
-    if count > 1_000_000 {
-        bail!("implausible tensor count {count}");
-    }
-    let mut tensors = Vec::with_capacity(count);
-    for _ in 0..count {
-        let len = u64::from_le_bytes(take(&mut r, 8, &mut hash)?.try_into().unwrap()) as usize;
-        if len > (1usize << 33) {
-            bail!("implausible tensor length {len}");
-        }
-        let bytes = take(&mut r, len * 4, &mut hash)?;
-        let mut t = Vec::with_capacity(len);
-        for c in bytes.chunks_exact(4) {
-            t.push(f32::from_le_bytes(c.try_into().unwrap()));
-        }
-        tensors.push(t);
-    }
-    let mut stored = [0u8; 8];
-    r.read_exact(&mut stored)?;
-    if u64::from_le_bytes(stored) != hash {
-        bail!("checkpoint checksum mismatch (corrupt file)");
-    }
-    Ok(Snapshot { step, tensors })
-}
-
 /// Load + verify a snapshot file.
 pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
     let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
     read_snapshot_from(BufReader::new(f))
-}
-
-/// Bytes -> snapshot (replica transfer payload).
-pub fn decode_snapshot(bytes: &[u8]) -> Result<Snapshot> {
-    read_snapshot_from(std::io::Cursor::new(bytes))
 }
 
 /// Timing of one checkpoint operation.
@@ -183,7 +99,12 @@ pub struct CheckpointManager {
 }
 
 impl CheckpointManager {
-    pub fn new(dir: impl Into<PathBuf>, rank: usize, keep: usize, async_persist: bool) -> Result<Self> {
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        rank: usize,
+        keep: usize,
+        async_persist: bool,
+    ) -> Result<Self> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
         let (persist_tx, persist_thread) = if async_persist {
@@ -335,6 +256,18 @@ mod tests {
         let mut bad = bytes.clone();
         bad[10] ^= 0x40;
         assert!(decode_snapshot(&bad).is_err());
+    }
+
+    #[test]
+    fn content_hash_tracks_replica_identity() {
+        let a = snap(9);
+        let mut b = snap(9);
+        assert_eq!(a.content_hash(), b.content_hash());
+        b.tensors[1][2] += 1e-6;
+        assert_ne!(a.content_hash(), b.content_hash());
+        let mut c = snap(9);
+        c.step = 10; // same bits, different step: not the same state
+        assert_ne!(a.content_hash(), c.content_hash());
     }
 
     #[test]

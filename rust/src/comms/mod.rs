@@ -1,13 +1,20 @@
 //! Communication substrate: wire protocol, TCP key-value store (the
 //! TCPStore used during communication-group establishment), DP/TP/PP
-//! communication-group derivation, and in-process synchronous
-//! collectives for the DP training engine.
+//! communication-group derivation, in-process synchronous collectives
+//! for the DP training engine, and the epoch-fenced state-stream
+//! protocol that ships model-state shards between replicas during
+//! checkpoint-free recovery (DESIGN.md §9).
 
 pub mod collective;
 pub mod group;
+pub mod state_stream;
 pub mod tcp_store;
 pub mod wire;
 
 pub use collective::{Collective, CollectiveError};
 pub use group::{CommGroup, GroupId, GroupKind, GroupSet, RekeyStats};
+pub use state_stream::{
+    fetch_snapshot, serve_snapshot, transfer_tag, EpochFence, Expect, RestoreError,
+    RestoreResult, StreamConfig,
+};
 pub use tcp_store::{establish, FencedWait, TcpStoreClient, TcpStoreServer};

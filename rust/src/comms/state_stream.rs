@@ -1,0 +1,769 @@
+//! Shard-aware state streaming: the checkpoint-free restore path as a
+//! real wire protocol (paper §III-E, Fig. 6; DESIGN.md §9).
+//!
+//! A surviving replica *serves* its snapshot to each rank that lost the
+//! same model-state shard; the transfer is chunked, per-chunk
+//! checksummed, and **epoch-fenced**: a restore begun under rendezvous
+//! epoch `e` aborts with a retryable [`RestoreError::Superseded`] the
+//! moment a failure-during-recovery bumps the epoch, instead of
+//! completing a transfer whose topology is already stale.
+//!
+//! Wire layout (all integers little-endian), one direction only
+//! (source -> target):
+//!
+//! ```text
+//! header   "FSTM" | version u32 | step u64 | epoch u64
+//!          | pp u32 | tp u32 | zero u32            (the ShardId)
+//!          | total_bytes u64 | chunk_bytes u32
+//! chunk    0x01 | index u32 | len u32 | payload | fnv1a(payload) u64
+//! abort    0x02 | current_epoch u64
+//! end      0x03 | chunk_count u32 | chained_hash u64
+//! ```
+//!
+//! The payload is the snapshot's canonical encoding
+//! (`checkpoint::codec`), produced lazily by `SnapshotStream` — the
+//! source never materialises the whole model in one buffer. `end`
+//! carries the chunk-chained word-wise hash; the payload additionally
+//! embeds the codec's own whole-stream checksum, so corruption is
+//! caught per chunk *and* end to end.
+//!
+//! Source discovery runs through the epoch-fenced TCP store: a source
+//! advertises `(epoch, transfer tag) -> host:port` with
+//! `AdvertiseRestore`; each target claims the tag with `ClaimRestore`,
+//! which blocks like a fenced wait and is released retryably when the
+//! epoch moves (`comms::wire`, `comms::tcp_store`).
+
+use crate::checkpoint::{codec, Snapshot};
+use crate::config::ShardId;
+use crate::util::hash::{fnv1a, FNV_OFFSET};
+use anyhow::anyhow;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const STREAM_MAGIC: &[u8; 4] = b"FSTM";
+const STREAM_VERSION: u32 = 1;
+const FRAME_CHUNK: u8 = 1;
+const FRAME_ABORT: u8 = 2;
+const FRAME_END: u8 = 3;
+
+/// Default transfer chunk: large enough to amortise syscalls, small
+/// enough that fence checks land within milliseconds of an epoch bump.
+pub const DEFAULT_CHUNK_BYTES: usize = 256 * 1024;
+const MIN_CHUNK_BYTES: usize = 4 * 1024;
+const MAX_CHUNK_BYTES: usize = 64 * 1024 * 1024;
+/// Sanity cap on a single snapshot transfer (16 GiB).
+const MAX_TOTAL_BYTES: u64 = 16 << 30;
+/// IO inactivity bound on data-plane sockets: a peer frozen by a
+/// network partition surfaces as a bounded `Fatal` stall within this
+/// window instead of hanging a transfer past the abort contract (the
+/// fence is only observable between frames).
+pub const IO_STALL_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Shared view of the current rendezvous epoch: the controller (or the
+/// chaos driver) advances it when a failure-during-recovery fences the
+/// cluster into a new epoch, and every in-flight transfer observes the
+/// bump between chunks.
+#[derive(Clone, Debug, Default)]
+pub struct EpochFence(Arc<AtomicU64>);
+
+impl EpochFence {
+    pub fn new(epoch: u64) -> Self {
+        EpochFence(Arc::new(AtomicU64::new(epoch)))
+    }
+
+    pub fn current(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Monotonic advance (max), mirroring the store's `AdvanceEpoch`.
+    pub fn advance(&self, to: u64) {
+        self.0.fetch_max(to, Ordering::SeqCst);
+    }
+}
+
+/// Why a transfer did not complete.
+#[derive(Debug)]
+pub enum RestoreError {
+    /// The rendezvous epoch moved past the transfer's fence — the
+    /// restore must be replanned and retried at `current`.
+    Superseded { current: u64 },
+    /// Permanent failure: IO, corruption, protocol violation.
+    Fatal(anyhow::Error),
+}
+
+impl RestoreError {
+    pub fn retryable(&self) -> bool {
+        matches!(self, RestoreError::Superseded { .. })
+    }
+}
+
+impl std::fmt::Display for RestoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RestoreError::Superseded { current } => {
+                write!(f, "restore superseded by epoch {current} (retryable)")
+            }
+            RestoreError::Fatal(e) => write!(f, "restore failed: {e:#}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for RestoreError {
+    fn from(e: std::io::Error) -> Self {
+        RestoreError::Fatal(e.into())
+    }
+}
+
+impl From<anyhow::Error> for RestoreError {
+    fn from(e: anyhow::Error) -> Self {
+        RestoreError::Fatal(e)
+    }
+}
+
+pub type RestoreResult<T> = std::result::Result<T, RestoreError>;
+
+/// Pack a (shard, source rank) pair into the store's opaque transfer
+/// tag: pp(12b) | tp(12b) | zero(20b) | source(20b). One tag names one
+/// advertised transfer, so several sources can serve the same shard
+/// concurrently (parallel per-shard restore).
+pub fn transfer_tag(shard: ShardId, source: usize) -> u64 {
+    debug_assert!(shard.pp < (1 << 12) && shard.tp < (1 << 12));
+    debug_assert!(shard.zero < (1 << 20) && source < (1 << 20));
+    ((shard.pp as u64) << 52)
+        | ((shard.tp as u64) << 40)
+        | ((shard.zero as u64) << 20)
+        | source as u64
+}
+
+/// Transfer parameters; `throttle` is a deterministic per-chunk delay
+/// for tests and chaos campaigns that need to land an epoch bump
+/// mid-transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    pub chunk_bytes: usize,
+    pub throttle: Option<Duration>,
+    /// How long a source waits for a receiver to connect before the
+    /// transfer is declared dead (bounded, never a hang).
+    pub accept_deadline: Duration,
+    /// Serve a listener's receivers one after another instead of
+    /// concurrently — models a source whose single uplink serializes
+    /// the legs (the pre-refactor broadcast baseline; used by the
+    /// `state_restore` bench, not the recovery path).
+    pub serial_serve: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            throttle: None,
+            accept_deadline: Duration::from_secs(60),
+            serial_serve: false,
+        }
+    }
+}
+
+/// The length-fixed stream header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamHeader {
+    pub step: u64,
+    pub epoch: u64,
+    pub shard: ShardId,
+    pub total_bytes: u64,
+    pub chunk_bytes: u32,
+}
+
+pub const HEADER_LEN: usize = 4 + 4 + 8 + 8 + 4 + 4 + 4 + 8 + 4;
+
+impl StreamHeader {
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        let mut pos = 0;
+        let mut put = |bytes: &[u8]| {
+            out[pos..pos + bytes.len()].copy_from_slice(bytes);
+            pos += bytes.len();
+        };
+        put(STREAM_MAGIC);
+        put(&STREAM_VERSION.to_le_bytes());
+        put(&self.step.to_le_bytes());
+        put(&self.epoch.to_le_bytes());
+        put(&(self.shard.pp as u32).to_le_bytes());
+        put(&(self.shard.tp as u32).to_le_bytes());
+        put(&(self.shard.zero as u32).to_le_bytes());
+        put(&self.total_bytes.to_le_bytes());
+        put(&self.chunk_bytes.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8; HEADER_LEN]) -> RestoreResult<StreamHeader> {
+        if &buf[0..4] != STREAM_MAGIC {
+            return Err(RestoreError::Fatal(anyhow!("bad state-stream magic")));
+        }
+        let u32_at = |at: usize| u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+        let u64_at = |at: usize| u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+        let version = u32_at(4);
+        if version != STREAM_VERSION {
+            return Err(RestoreError::Fatal(anyhow!(
+                "unsupported state-stream version {version}"
+            )));
+        }
+        Ok(StreamHeader {
+            step: u64_at(8),
+            epoch: u64_at(16),
+            shard: ShardId {
+                pp: u32_at(24) as usize,
+                tp: u32_at(28) as usize,
+                zero: u32_at(32) as usize,
+            },
+            total_bytes: u64_at(36),
+            chunk_bytes: u32_at(44),
+        })
+    }
+}
+
+/// Outcome of one served transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    pub bytes: u64,
+    pub chunks: u32,
+    pub wall_s: f64,
+}
+
+/// Outcome of one fetched transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct FetchStats {
+    pub bytes: u64,
+    pub chunks: u32,
+    pub wall_s: f64,
+}
+
+/// What the receiving side requires of the incoming stream.
+#[derive(Debug, Clone, Copy)]
+pub struct Expect {
+    pub epoch: u64,
+    pub shard: ShardId,
+    /// Required snapshot step (the episode's resume step), if pinned.
+    pub step: Option<u64>,
+}
+
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..])? {
+            0 => break,
+            n => filled += n,
+        }
+    }
+    Ok(filled)
+}
+
+/// Serve one snapshot to one receiver over `w`, chunked and fenced at
+/// `epoch`. Sends an abort frame (so the receiver fails retryably, not
+/// on a dead socket) and returns [`RestoreError::Superseded`] if the
+/// fence advances mid-transfer.
+pub fn serve_snapshot<W: Write>(
+    w: &mut W,
+    snap: &Snapshot,
+    shard: ShardId,
+    epoch: u64,
+    fence: &EpochFence,
+    cfg: &StreamConfig,
+) -> RestoreResult<ServeStats> {
+    let t0 = Instant::now();
+    // chunk length stays a multiple of 8 so the chained word-wise hash
+    // is boundary-stable between serve and fetch
+    let chunk_bytes = cfg.chunk_bytes.clamp(MIN_CHUNK_BYTES, MAX_CHUNK_BYTES) & !7;
+    let total_bytes = codec::encoded_len(snap) as u64;
+    let header = StreamHeader {
+        step: snap.step,
+        epoch,
+        shard,
+        total_bytes,
+        chunk_bytes: chunk_bytes as u32,
+    };
+    w.write_all(&header.encode())?;
+
+    let mut reader = codec::SnapshotStream::new(snap);
+    let mut buf = vec![0u8; chunk_bytes];
+    let mut index: u32 = 0;
+    let mut sent: u64 = 0;
+    let mut chained = FNV_OFFSET;
+    loop {
+        let current = fence.current();
+        if current > epoch {
+            w.write_all(&[FRAME_ABORT])?;
+            w.write_all(&current.to_le_bytes())?;
+            w.flush()?;
+            return Err(RestoreError::Superseded { current });
+        }
+        let n = read_full(&mut reader, &mut buf)?;
+        if n == 0 {
+            break;
+        }
+        let payload = &buf[..n];
+        let sum = fnv1a(payload, FNV_OFFSET);
+        chained = fnv1a(payload, chained);
+        w.write_all(&[FRAME_CHUNK])?;
+        w.write_all(&index.to_le_bytes())?;
+        w.write_all(&(n as u32).to_le_bytes())?;
+        w.write_all(payload)?;
+        w.write_all(&sum.to_le_bytes())?;
+        index += 1;
+        sent += n as u64;
+        if let Some(d) = cfg.throttle {
+            std::thread::sleep(d);
+        }
+    }
+    w.write_all(&[FRAME_END])?;
+    w.write_all(&index.to_le_bytes())?;
+    w.write_all(&chained.to_le_bytes())?;
+    w.flush()?;
+    debug_assert_eq!(sent, total_bytes);
+    Ok(ServeStats { bytes: sent, chunks: index, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Receive one snapshot from `r`, verifying the header against
+/// `expect`, every chunk's checksum, the chained end-of-stream hash,
+/// and the payload's embedded codec checksum. Returns retryably when
+/// either side's fence supersedes the transfer.
+pub fn fetch_snapshot<R: Read>(
+    r: &mut R,
+    expect: &Expect,
+    fence: &EpochFence,
+) -> RestoreResult<(Snapshot, FetchStats)> {
+    let t0 = Instant::now();
+    let mut hdr_buf = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr_buf)?;
+    let header = StreamHeader::decode(&hdr_buf)?;
+    if header.epoch != expect.epoch {
+        return Err(RestoreError::Fatal(anyhow!(
+            "stream epoch {} does not match claim epoch {}",
+            header.epoch,
+            expect.epoch
+        )));
+    }
+    if header.shard != expect.shard {
+        return Err(RestoreError::Fatal(anyhow!(
+            "stream carries shard {:?}, expected {:?}",
+            header.shard,
+            expect.shard
+        )));
+    }
+    if let Some(step) = expect.step {
+        if header.step != step {
+            return Err(RestoreError::Fatal(anyhow!(
+                "stream carries step {}, expected resume step {step}",
+                header.step
+            )));
+        }
+    }
+    if header.total_bytes > MAX_TOTAL_BYTES {
+        return Err(RestoreError::Fatal(anyhow!(
+            "implausible transfer size {}",
+            header.total_bytes
+        )));
+    }
+    let chunk_cap = header.chunk_bytes as usize;
+    if chunk_cap == 0 || chunk_cap > MAX_CHUNK_BYTES {
+        // validate before allocating the chunk buffer: a corrupt
+        // header must not trigger a multi-GB allocation
+        return Err(RestoreError::Fatal(anyhow!(
+            "implausible chunk size {}",
+            header.chunk_bytes
+        )));
+    }
+
+    // the header is not checksummed, so treat total_bytes as a claim:
+    // cap the eager allocation and let the buffer grow with verified
+    // chunks instead of trusting an 8-byte field with a multi-GiB
+    // allocation up front
+    let mut bytes =
+        Vec::with_capacity((header.total_bytes as usize).min(8 * 1024 * 1024));
+    let mut chained = FNV_OFFSET;
+    let mut next_index: u32 = 0;
+    let mut payload = vec![0u8; chunk_cap];
+    loop {
+        let current = fence.current();
+        if current > expect.epoch {
+            return Err(RestoreError::Superseded { current });
+        }
+        let mut kind = [0u8; 1];
+        r.read_exact(&mut kind)?;
+        match kind[0] {
+            FRAME_CHUNK => {
+                let mut meta = [0u8; 8];
+                r.read_exact(&mut meta)?;
+                let index = u32::from_le_bytes(meta[0..4].try_into().unwrap());
+                let len = u32::from_le_bytes(meta[4..8].try_into().unwrap()) as usize;
+                if index != next_index {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunk {index} out of order (expected {next_index})"
+                    )));
+                }
+                if len == 0 || len > payload.len() {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunk {index} has bad length {len}"
+                    )));
+                }
+                r.read_exact(&mut payload[..len])?;
+                let mut sum = [0u8; 8];
+                r.read_exact(&mut sum)?;
+                if u64::from_le_bytes(sum) != fnv1a(&payload[..len], FNV_OFFSET) {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunk {index} checksum mismatch (corrupt transfer)"
+                    )));
+                }
+                if bytes.len() as u64 + len as u64 > header.total_bytes {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunks exceed the promised {} bytes (corrupt header)",
+                        header.total_bytes
+                    )));
+                }
+                chained = fnv1a(&payload[..len], chained);
+                bytes.extend_from_slice(&payload[..len]);
+                next_index += 1;
+            }
+            FRAME_ABORT => {
+                let mut cur = [0u8; 8];
+                r.read_exact(&mut cur)?;
+                return Err(RestoreError::Superseded {
+                    current: u64::from_le_bytes(cur),
+                });
+            }
+            FRAME_END => {
+                let mut tail = [0u8; 12];
+                r.read_exact(&mut tail)?;
+                let count = u32::from_le_bytes(tail[0..4].try_into().unwrap());
+                let whole = u64::from_le_bytes(tail[4..12].try_into().unwrap());
+                if count != next_index {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "stream ended after {next_index} chunks, header promised {count}"
+                    )));
+                }
+                if whole != chained {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "end-of-stream hash mismatch (corrupt transfer)"
+                    )));
+                }
+                break;
+            }
+            other => {
+                return Err(RestoreError::Fatal(anyhow!(
+                    "unknown state-stream frame kind {other}"
+                )));
+            }
+        }
+    }
+    if bytes.len() as u64 != header.total_bytes {
+        return Err(RestoreError::Fatal(anyhow!(
+            "received {} bytes, header promised {}",
+            bytes.len(),
+            header.total_bytes
+        )));
+    }
+    let snap = codec::decode_snapshot(&bytes).map_err(RestoreError::Fatal)?;
+    if snap.step != header.step {
+        return Err(RestoreError::Fatal(anyhow!(
+            "payload step {} disagrees with header step {}",
+            snap.step,
+            header.step
+        )));
+    }
+    Ok((
+        snap,
+        FetchStats {
+            bytes: header.total_bytes,
+            chunks: next_index,
+            wall_s: t0.elapsed().as_secs_f64(),
+        },
+    ))
+}
+
+/// Serve `receivers` fenced transfers on a pre-bound listener — the
+/// shared source-side loop of the worker plane and the restore-episode
+/// driver. Connections are accepted under the fence + accept deadline,
+/// then every receiver is served *concurrently*: one slow leg must
+/// not stall (or IO-stall-timeout) the others, since each target's
+/// read clock starts the moment it connects. Each socket gets the IO
+/// stall bound, so a frozen receiver is a bounded `Fatal`, not a hang.
+pub fn serve_listener(
+    listener: &TcpListener,
+    snap: &Snapshot,
+    shard: ShardId,
+    epoch: u64,
+    receivers: usize,
+    fence: &EpochFence,
+    cfg: &StreamConfig,
+) -> RestoreResult<ServeStats> {
+    let t0 = Instant::now();
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| RestoreError::Fatal(e.into()))?;
+    let deadline = Instant::now() + cfg.accept_deadline;
+    let mut streams = Vec::with_capacity(receivers);
+    while streams.len() < receivers {
+        let current = fence.current();
+        if current > epoch {
+            return Err(RestoreError::Superseded { current });
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // some platforms let accepted sockets inherit the
+                // listener's non-blocking mode; the framed writes
+                // need blocking IO
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| RestoreError::Fatal(e.into()))?;
+                stream.set_write_timeout(Some(IO_STALL_TIMEOUT)).ok();
+                stream.set_nodelay(true).ok();
+                streams.push(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "only {} of {receivers} receivers connected within {:?}",
+                        streams.len(),
+                        cfg.accept_deadline
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(RestoreError::Fatal(e.into())),
+        }
+    }
+
+    let results: Vec<RestoreResult<ServeStats>> = if cfg.serial_serve {
+        streams
+            .iter_mut()
+            .map(|stream| serve_snapshot(stream, snap, shard, epoch, fence, cfg))
+            .collect()
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = streams
+                .iter_mut()
+                .map(|stream| {
+                    scope.spawn(move || {
+                        serve_snapshot(stream, snap, shard, epoch, fence, cfg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(RestoreError::Fatal(anyhow!("serve thread panicked")))
+                    })
+                })
+                .collect()
+        })
+    };
+    let mut bytes = 0u64;
+    let mut chunks = 0u32;
+    let mut superseded: Option<u64> = None;
+    let mut first_fatal: Option<anyhow::Error> = None;
+    for r in results {
+        match r {
+            Ok(s) => {
+                bytes += s.bytes;
+                chunks += s.chunks;
+            }
+            Err(RestoreError::Superseded { current }) => {
+                superseded = Some(superseded.unwrap_or(0).max(current));
+            }
+            Err(RestoreError::Fatal(e)) => {
+                first_fatal.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(current) = superseded {
+        return Err(RestoreError::Superseded { current });
+    }
+    if let Some(e) = first_fatal {
+        return Err(RestoreError::Fatal(e));
+    }
+    Ok(ServeStats { bytes, chunks, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Connect to an advertised source and fetch one shard, with connect
+/// and IO-stall bounds so a dead or frozen source is a bounded
+/// failure — the shared target-side entry of the worker plane and the
+/// restore-episode driver.
+pub fn fetch_from_addr(
+    addr: SocketAddr,
+    expect: &Expect,
+    fence: &EpochFence,
+) -> RestoreResult<(Snapshot, FetchStats)> {
+    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))
+        .map_err(|e| RestoreError::Fatal(e.into()))?;
+    stream.set_read_timeout(Some(IO_STALL_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    fetch_snapshot(&mut stream, expect, fence)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+    use std::net::{TcpListener, TcpStream};
+
+    fn snap(step: u64, elems: usize) -> Snapshot {
+        let t: Vec<f32> = (0..elems)
+            .map(|i| ((i as u64).wrapping_mul(2654435761) % 1000) as f32 * 0.001)
+            .collect();
+        Snapshot { step, tensors: vec![t.clone(), t] }
+    }
+
+    fn shard() -> ShardId {
+        ShardId { pp: 1, tp: 2, zero: 3 }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = StreamHeader {
+            step: 42,
+            epoch: 7,
+            shard: shard(),
+            total_bytes: 1 << 20,
+            chunk_bytes: 4096,
+        };
+        assert_eq!(StreamHeader::decode(&h.encode()).unwrap(), h);
+    }
+
+    #[test]
+    fn transfer_tags_are_injective_within_bounds() {
+        let mut seen = std::collections::BTreeSet::new();
+        for pp in 0..3 {
+            for tp in 0..3 {
+                for zero in 0..4 {
+                    for src in 0..5 {
+                        assert!(seen.insert(transfer_tag(ShardId { pp, tp, zero }, src)));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_memory_roundtrip_multi_chunk() {
+        let s = snap(9, 20_000); // ~160 KB payload
+        let fence = EpochFence::new(4);
+        let cfg = StreamConfig { chunk_bytes: 8 * 1024, ..Default::default() };
+        let mut wire = Vec::new();
+        let stats = serve_snapshot(&mut wire, &s, shard(), 4, &fence, &cfg).unwrap();
+        assert!(stats.chunks > 1, "must exercise the multi-chunk path");
+        assert_eq!(stats.bytes, codec::encoded_len(&s) as u64);
+
+        let expect = Expect { epoch: 4, shard: shard(), step: Some(9) };
+        let (back, fstats) =
+            fetch_snapshot(&mut Cursor::new(&wire), &expect, &fence).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(fstats.chunks, stats.chunks);
+        assert_eq!(fstats.bytes, stats.bytes);
+    }
+
+    #[test]
+    fn chunk_corruption_is_fatal_not_retryable() {
+        let s = snap(2, 5_000);
+        let fence = EpochFence::new(0);
+        let cfg = StreamConfig { chunk_bytes: 4096, ..Default::default() };
+        let mut wire = Vec::new();
+        serve_snapshot(&mut wire, &s, shard(), 0, &fence, &cfg).unwrap();
+        // flip a byte inside the first chunk payload (past header+frame meta)
+        let at = HEADER_LEN + 9 + 100;
+        wire[at] ^= 0x20;
+        let expect = Expect { epoch: 0, shard: shard(), step: None };
+        let err = fetch_snapshot(&mut Cursor::new(&wire), &expect, &fence).unwrap_err();
+        assert!(!err.retryable(), "corruption must not be retried: {err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn pre_bumped_fence_aborts_before_first_chunk() {
+        let s = snap(1, 1_000);
+        let fence = EpochFence::new(5);
+        fence.advance(6);
+        let mut wire = Vec::new();
+        let err = serve_snapshot(
+            &mut wire,
+            &s,
+            shard(),
+            5,
+            &fence,
+            &StreamConfig::default(),
+        )
+        .unwrap_err();
+        match err {
+            RestoreError::Superseded { current } => assert_eq!(current, 6),
+            other => panic!("expected superseded, got {other}"),
+        }
+        // the wire carries header + abort frame; the receiver sees a
+        // retryable outcome, not a truncated stream
+        let expect = Expect { epoch: 5, shard: shard(), step: None };
+        let err = fetch_snapshot(&mut Cursor::new(&wire), &expect, &fence).unwrap_err();
+        assert!(err.retryable(), "{err}");
+    }
+
+    #[test]
+    fn mid_transfer_epoch_bump_aborts_over_sockets() {
+        // Real sockets, throttled chunks, fence bumped mid-flight:
+        // the source aborts retryably and the target observes either
+        // the abort frame or its own fence — never a hang.
+        let s = snap(3, 50_000);
+        let fence = EpochFence::new(1);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let server_fence = fence.clone();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let cfg = StreamConfig {
+                chunk_bytes: 4096,
+                throttle: Some(Duration::from_millis(2)),
+                ..Default::default()
+            };
+            serve_snapshot(&mut stream, &s, shard(), 1, &server_fence, &cfg)
+        });
+
+        let bump_fence = fence.clone();
+        let bumper = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            bump_fence.advance(2);
+        });
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let expect = Expect { epoch: 1, shard: shard(), step: Some(3) };
+        let t0 = Instant::now();
+        let res = fetch_snapshot(&mut stream, &expect, &fence);
+        bumper.join().unwrap();
+        let serve_res = server.join().unwrap();
+        assert!(serve_res.is_err(), "source must abort");
+        let err = res.unwrap_err();
+        assert!(err.retryable(), "target must see a retryable abort: {err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "abort must be prompt, not a hang"
+        );
+    }
+
+    #[test]
+    fn fetch_rejects_wrong_shard_epoch_and_step() {
+        let s = snap(5, 100);
+        let fence = EpochFence::new(2);
+        let mut wire = Vec::new();
+        serve_snapshot(&mut wire, &s, shard(), 2, &fence, &StreamConfig::default())
+            .unwrap();
+        let wrong_shard = Expect {
+            epoch: 2,
+            shard: ShardId { pp: 0, tp: 0, zero: 0 },
+            step: None,
+        };
+        assert!(fetch_snapshot(&mut Cursor::new(&wire), &wrong_shard, &fence).is_err());
+        let wrong_epoch = Expect { epoch: 3, shard: shard(), step: None };
+        assert!(fetch_snapshot(&mut Cursor::new(&wire), &wrong_epoch, &fence).is_err());
+        let wrong_step = Expect { epoch: 2, shard: shard(), step: Some(6) };
+        assert!(fetch_snapshot(&mut Cursor::new(&wire), &wrong_step, &fence).is_err());
+    }
+}

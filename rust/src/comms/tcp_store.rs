@@ -189,26 +189,7 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
         Request::Count => {
             Response::CountIs(shared.map.lock().unwrap().len() as u64)
         }
-        Request::WaitEpoch { key, epoch } => {
-            let mut map = shared.map.lock().unwrap();
-            loop {
-                let current = shared.epoch.load(Ordering::SeqCst);
-                if current > epoch {
-                    return Response::EpochFenced { current };
-                }
-                if let Some(v) = map.get(&key) {
-                    return Response::Value(v.clone());
-                }
-                if stop.load(Ordering::Relaxed) {
-                    return Response::NotFound;
-                }
-                let (guard, _timeout) = shared
-                    .cv
-                    .wait_timeout(map, Duration::from_millis(100))
-                    .unwrap();
-                map = guard;
-            }
-        }
+        Request::WaitEpoch { key, epoch } => fenced_wait(shared, stop, &key, epoch),
         Request::AdvanceEpoch { to } => {
             let prev = shared.epoch.fetch_max(to, Ordering::SeqCst);
             // Wake every blocked waiter so stale fenced waits observe
@@ -216,6 +197,66 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
             shared.cv.notify_all();
             Response::Counter(prev.max(to) as i64)
         }
+        Request::AdvertiseRestore { epoch, tag, addr } => {
+            let current = shared.epoch.load(Ordering::SeqCst);
+            if current > epoch {
+                // the restore this source belongs to is already stale
+                return Response::EpochFenced { current };
+            }
+            shared
+                .map
+                .lock()
+                .unwrap()
+                .insert(restore_key(epoch, tag), addr.into_bytes());
+            shared.cv.notify_all();
+            Response::Ok
+        }
+        Request::ClaimRestore { epoch, tag } => {
+            fenced_wait(shared, stop, &restore_key(epoch, tag), epoch)
+        }
+        Request::AbortEpoch { unless_key, tombstone_key, tombstone, to } => {
+            // Atomic with `Set` and the fenced waits (all serialize on
+            // the map mutex): either the release key landed first and
+            // the abort is a no-op, or the epoch is fenced before any
+            // waiter can observe the late release — never a mix.
+            let mut map = shared.map.lock().unwrap();
+            if map.contains_key(&unless_key) {
+                Response::Counter(0)
+            } else {
+                map.insert(tombstone_key, tombstone);
+                shared.epoch.fetch_max(to, Ordering::SeqCst);
+                shared.cv.notify_all();
+                Response::Counter(1)
+            }
+        }
+    }
+}
+
+/// Store key under which a restore source's endpoint is advertised.
+fn restore_key(epoch: u64, tag: u64) -> String {
+    format!("restore/{epoch}/{tag:016x}")
+}
+
+/// Block until `key` is published or the rendezvous epoch passes
+/// `epoch` — the shared body of `WaitEpoch` and `ClaimRestore`.
+fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Response {
+    let mut map = shared.map.lock().unwrap();
+    loop {
+        let current = shared.epoch.load(Ordering::SeqCst);
+        if current > epoch {
+            return Response::EpochFenced { current };
+        }
+        if let Some(v) = map.get(key) {
+            return Response::Value(v.clone());
+        }
+        if stop.load(Ordering::Relaxed) {
+            return Response::NotFound;
+        }
+        let (guard, _timeout) = shared
+            .cv
+            .wait_timeout(map, Duration::from_millis(100))
+            .unwrap();
+        map = guard;
     }
 }
 
@@ -308,6 +349,61 @@ impl TcpStoreClient {
     pub fn advance_epoch(&mut self, to: u64) -> Result<u64> {
         match self.call(Request::AdvanceEpoch { to })? {
             Response::Counter(v) => Ok(v as u64),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Advertise this client's endpoint as the restore source for one
+    /// state transfer (`tag` packs shard + source rank). Returns
+    /// `None` on success, or `Some(current)` when the epoch has
+    /// already moved past `epoch` (stale — replan the restore).
+    pub fn advertise_restore(
+        &mut self,
+        epoch: u64,
+        tag: u64,
+        addr: &str,
+    ) -> Result<Option<u64>> {
+        let req = Request::AdvertiseRestore { epoch, tag, addr: addr.into() };
+        match self.call(req)? {
+            Response::Ok => Ok(None),
+            Response::EpochFenced { current } => Ok(Some(current)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Claim the restore source advertised for `tag`: blocks until the
+    /// advertisement lands or the epoch supersedes the claim (then
+    /// released retryably, never left hanging).
+    pub fn claim_restore(&mut self, epoch: u64, tag: u64) -> Result<FencedWait> {
+        self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        match self.call(Request::ClaimRestore { epoch, tag })? {
+            Response::Value(v) => Ok(FencedWait::Value(v)),
+            Response::EpochFenced { current } => {
+                Ok(FencedWait::Superseded { current })
+            }
+            Response::NotFound => bail!("store shut down during restore claim"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Atomically abort an epoch unless its release key was already
+    /// published (the supervised-barrier watchdog's weapon). Returns
+    /// true when the abort happened, false when the barrier won.
+    pub fn abort_epoch_unless(
+        &mut self,
+        unless_key: &str,
+        tombstone_key: &str,
+        tombstone: &[u8],
+        to: u64,
+    ) -> Result<bool> {
+        let req = Request::AbortEpoch {
+            unless_key: unless_key.into(),
+            tombstone_key: tombstone_key.into(),
+            tombstone: tombstone.to_vec(),
+            to,
+        };
+        match self.call(req)? {
+            Response::Counter(v) => Ok(v == 1),
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -479,6 +575,78 @@ mod tests {
         c.get("k").unwrap();
         assert_eq!(c.ops_sent(), 3);
         assert!(server.request_count() >= 3);
+    }
+
+    #[test]
+    fn restore_claim_blocks_until_advertised() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let claimer = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.claim_restore(3, 0xABC).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.advance_epoch(3).unwrap();
+        assert_eq!(c.advertise_restore(3, 0xABC, "10.0.0.1:9").unwrap(), None);
+        assert_eq!(
+            claimer.join().unwrap(),
+            FencedWait::Value(b"10.0.0.1:9".to_vec())
+        );
+    }
+
+    #[test]
+    fn restore_claim_released_retryably_by_epoch_bump() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let claimer = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            // claims a source that will never advertise (it died)
+            c.claim_restore(1, 0x42).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.advance_epoch(2).unwrap();
+        assert_eq!(
+            claimer.join().unwrap(),
+            FencedWait::Superseded { current: 2 }
+        );
+    }
+
+    #[test]
+    fn abort_epoch_unless_is_atomic_with_release() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        // release key present -> abort refused, nothing changes
+        c.set("ep1/go", b"go").unwrap();
+        assert!(!c
+            .abort_epoch_unless("ep1/go", "ep2/delta", b"!abort", 2)
+            .unwrap());
+        assert_eq!(server.epoch(), 0);
+        assert_eq!(c.get("ep2/delta").unwrap(), None);
+        // release key absent -> tombstone published + epoch fenced
+        assert!(c
+            .abort_epoch_unless("ep2/go", "ep3/delta", b"!abort", 3)
+            .unwrap());
+        assert_eq!(server.epoch(), 3);
+        assert_eq!(
+            c.get("ep3/delta").unwrap().as_deref(),
+            Some(&b"!abort"[..])
+        );
+    }
+
+    #[test]
+    fn stale_advertisement_is_fenced() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.advance_epoch(7).unwrap();
+        // advertising for an already-superseded epoch is rejected
+        assert_eq!(
+            c.advertise_restore(6, 0x1, "10.0.0.2:9").unwrap(),
+            Some(7)
+        );
+        // the current epoch is accepted
+        assert_eq!(c.advertise_restore(7, 0x1, "10.0.0.2:9").unwrap(), None);
     }
 
     #[test]

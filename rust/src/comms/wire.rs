@@ -29,6 +29,29 @@ pub enum Request {
     /// advance the store's rendezvous epoch to max(current, to) and
     /// wake every blocked waiter -> Counter(new epoch)
     AdvanceEpoch { to: u64 },
+    /// a restore source advertises `addr` for one state transfer
+    /// (`tag` = packed shard + source, see `state_stream::transfer_tag`)
+    /// under the given epoch -> Ok, or EpochFenced when the epoch has
+    /// already moved on (the advertisement would be stale)
+    AdvertiseRestore { epoch: u64, tag: u64, addr: String },
+    /// a restore target claims the advertised source for `tag`: blocks
+    /// like `WaitEpoch` until the advertisement lands -> Value(addr),
+    /// or EpochFenced when a failure-during-recovery bumps the epoch
+    /// (retryable — replan the restore at the returned epoch)
+    ClaimRestore { epoch: u64, tag: u64 },
+    /// atomically abort a rendezvous epoch *unless* its release key
+    /// already exists: under the store's map lock, if `unless_key` is
+    /// absent, publish `tombstone_key = tombstone` and advance the
+    /// epoch to `to` -> Counter(1); if `unless_key` is present the
+    /// barrier released first and nothing happens -> Counter(0).
+    /// Serialized with `Set` and the fenced waits, this closes the
+    /// supervised barrier's check-then-abort race.
+    AbortEpoch {
+        unless_key: String,
+        tombstone_key: String,
+        tombstone: Vec<u8>,
+        to: u64,
+    },
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -108,6 +131,24 @@ impl Request {
                 body.push(7);
                 body.extend_from_slice(&to.to_le_bytes());
             }
+            Request::AdvertiseRestore { epoch, tag, addr } => {
+                body.push(8);
+                body.extend_from_slice(&epoch.to_le_bytes());
+                body.extend_from_slice(&tag.to_le_bytes());
+                put_bytes(&mut body, addr.as_bytes());
+            }
+            Request::ClaimRestore { epoch, tag } => {
+                body.push(9);
+                body.extend_from_slice(&epoch.to_le_bytes());
+                body.extend_from_slice(&tag.to_le_bytes());
+            }
+            Request::AbortEpoch { unless_key, tombstone_key, tombstone, to } => {
+                body.push(10);
+                put_bytes(&mut body, unless_key.as_bytes());
+                put_bytes(&mut body, tombstone_key.as_bytes());
+                put_bytes(&mut body, tombstone);
+                body.extend_from_slice(&to.to_le_bytes());
+            }
         }
         frame(body)
     }
@@ -151,6 +192,37 @@ impl Request {
                 }
                 let to = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
                 Ok(Request::AdvanceEpoch { to })
+            }
+            Some(8) => {
+                if pos + 16 > body.len() {
+                    bail!("frame underrun");
+                }
+                let epoch = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                let tag = u64::from_le_bytes(body[pos + 8..pos + 16].try_into().unwrap());
+                pos += 16;
+                Ok(Request::AdvertiseRestore {
+                    epoch,
+                    tag,
+                    addr: get_string(body, &mut pos)?,
+                })
+            }
+            Some(9) => {
+                if pos + 16 > body.len() {
+                    bail!("frame underrun");
+                }
+                let epoch = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                let tag = u64::from_le_bytes(body[pos + 8..pos + 16].try_into().unwrap());
+                Ok(Request::ClaimRestore { epoch, tag })
+            }
+            Some(10) => {
+                let unless_key = get_string(body, &mut pos)?;
+                let tombstone_key = get_string(body, &mut pos)?;
+                let tombstone = get_bytes(body, &mut pos)?;
+                if pos + 8 > body.len() {
+                    bail!("frame underrun");
+                }
+                let to = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
+                Ok(Request::AbortEpoch { unless_key, tombstone_key, tombstone, to })
             }
             other => bail!("bad request opcode {other:?}"),
         }
@@ -273,6 +345,18 @@ mod tests {
         roundtrip_req(Request::Hello { client_id: u64::MAX });
         roundtrip_req(Request::WaitEpoch { key: "rdzv/3/delta".into(), epoch: 3 });
         roundtrip_req(Request::AdvanceEpoch { to: u64::MAX });
+        roundtrip_req(Request::AdvertiseRestore {
+            epoch: 5,
+            tag: 0xDEAD_BEEF_0042,
+            addr: "127.0.0.1:30321".into(),
+        });
+        roundtrip_req(Request::ClaimRestore { epoch: u64::MAX, tag: 0 });
+        roundtrip_req(Request::AbortEpoch {
+            unless_key: "rdzv/4/go".into(),
+            tombstone_key: "rdzv/5/delta".into(),
+            tombstone: b"!abort".to_vec(),
+            to: 5,
+        });
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 pub mod parallelism;
 
-pub use parallelism::{DeviceCoord, ParallelismConfig, ZeroMode};
+pub use parallelism::{DeviceCoord, ParallelismConfig, ShardId, ZeroMode};
 
 use crate::util::Json;
 use anyhow::{bail, Context, Result};

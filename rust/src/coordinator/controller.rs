@@ -8,12 +8,13 @@
 //! collective allreduce is the barrier the step-tag protocol brackets.
 
 use super::detection::HeartbeatMonitor;
-use super::events::{RecoveryRecord, RunReport};
+use super::events::{RecoveryRecord, RunReport, ShardRestoreStat};
 use super::ranktable::{RankEntry, Ranktable, SharedRanktable};
 use super::rendezvous::{rebuild_episode, EpisodeConfig};
-use super::step_tag::plan_restore;
+use super::restore::plan_shard_restore;
 use crate::checkpoint::CheckpointManager;
 
+use crate::comms::state_stream::EpochFence;
 use crate::comms::tcp_store::TcpStoreServer;
 use crate::comms::{Collective, CollectiveError};
 use crate::config::{ParallelismConfig, RecoveryMode};
@@ -25,7 +26,8 @@ use crate::training::worker::{
     WorkerEvent,
 };
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::TcpListener;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -61,6 +63,12 @@ pub struct ControllerConfig {
     /// recovery (epoch-fenced rendezvous, DESIGN.md §8) instead of
     /// substituting the ranktable in place.
     pub rebuild_groups: bool,
+    /// ZeRO partition-group size for the replica-location model (1 =
+    /// vanilla DP, fully replicated; must divide `dp`). Worker states
+    /// are physically full replicas either way — the shard model
+    /// drives restore *planning*: which surviving replica serves which
+    /// lost rank, and when no replica survives (checkpoint fallback).
+    pub zero_shards: usize,
 }
 
 impl ControllerConfig {
@@ -78,6 +86,7 @@ impl ControllerConfig {
             max_wall: Duration::from_secs(1800),
             ranktable_path: None,
             rebuild_groups: true,
+            zero_shards: 1,
         }
     }
 
@@ -102,6 +111,7 @@ impl ControllerConfig {
         }
         let mut c = Self::flash(job.parallelism.dp, job.steps);
         c.seed = job.seed;
+        c.zero_shards = job.parallelism.zero.shards();
         c.mode = job.recovery.mode;
         c.heartbeat_interval =
             Duration::from_secs_f64(job.cluster.heartbeat_interval_s.max(0.01));
@@ -149,6 +159,13 @@ impl Controller {
     pub fn new(bundle: Arc<ModelBundle>, cfg: ControllerConfig) -> Result<Self> {
         if cfg.dp == 0 {
             bail!("dp must be >= 1");
+        }
+        if cfg.zero_shards == 0 || cfg.dp % cfg.zero_shards != 0 {
+            bail!(
+                "zero_shards={} must divide dp={}",
+                cfg.zero_shards,
+                cfg.dp
+            );
         }
         let (event_tx, event_rx) = channel();
         let collective = Collective::new(cfg.dp, cfg.collective_timeout);
@@ -366,6 +383,15 @@ impl Controller {
                 self.report.checkpoints_taken += 1;
                 self.report.checkpoint_stall_s += k0_s;
             }
+            // State-transfer completions are consumed by the restore
+            // wait loop; seen here they are stragglers from an episode
+            // the controller already gave up on.
+            WorkerEvent::StateServed { .. } | WorkerEvent::StateRestored { .. } => {}
+            WorkerEvent::RestoreFailed { rank, ref detail, .. } => {
+                eprintln!(
+                    "[controller] late restore failure from rank {rank}: {detail}"
+                );
+            }
         }
     }
 
@@ -446,13 +472,21 @@ impl Controller {
             return self.vanilla_recover(detections, dead);
         }
 
-        // 2. step determination from the survivors' states (§III-E-b).
+        // 2. step determination + restore planning from the survivors'
+        // states (§III-E-b): the planner maps every lost ZeRO shard to
+        // a surviving replica source; a shard with no live replica
+        // forces the checkpoint fallback (§III-G.1, `can_recover`).
         let steps: Vec<(usize, u64)> = survivors
             .iter()
             .map(|r| (*r, self.parked[r].0))
             .collect();
-        let (resume_step, sources, behind) = plan_restore(&steps);
+        let par = ParallelismConfig::dp(self.cfg.dp).with_zero(self.cfg.zero_shards);
+        let plan = plan_shard_restore(&par, &steps, &dead);
+        let resume_step = plan.resume_step;
         let failed_at_step = steps.iter().map(|&(_, s)| s).min().unwrap();
+        if !plan.replica_feasible() {
+            return self.vanilla_recover(detections, dead);
+        }
 
         // 3. limited recreation: spawn replacements for failed ranks
         // only. A replacement inherits its rank's next scripted failure
@@ -481,7 +515,6 @@ impl Controller {
         let t_rebuild = Instant::now();
         let mut rebuild_s = 0.0;
         if let Some(server) = &self.rebuild_plane {
-            let par = ParallelismConfig::dp(self.cfg.dp);
             let outcome = rebuild_episode(
                 server,
                 &self.ranktable,
@@ -489,7 +522,10 @@ impl Controller {
                 &dead,
                 &replacement_entries,
                 self.rebuild_epoch,
-                &EpisodeConfig { live_survivors: survivors.len() },
+                &EpisodeConfig {
+                    live_survivors: survivors.len(),
+                    ..Default::default()
+                },
             )?;
             self.rebuild_epoch = outcome.epoch;
             self.ranktable = outcome.table;
@@ -506,22 +542,71 @@ impl Controller {
             bail!("replacement ranks {dead_replacements:?} died before restore");
         }
 
-        // 4. replica restore: one source broadcasts state to everyone
-        // whose state is behind `resume_step` (replacements + laggards).
+        // 4. replica restore: shard-aware streaming over real sockets
+        // (DESIGN.md §9). Every lost shard fetches from a surviving
+        // replica of the same shard; distinct transfers run in
+        // parallel instead of serialising through one broadcast root.
         let t_restore = Instant::now();
-        let mut receivers: Vec<usize> = dead.clone();
-        receivers.extend(behind.iter().copied());
-        let source = *sources.first().context("no replica source")?;
-        if !receivers.is_empty() {
-            let group = Collective::new(receivers.len() + 2, Duration::from_secs(300));
-            self.send(source, WorkerCommand::ServeState { group: group.clone() })?;
-            for &r in &receivers {
-                self.send(r, WorkerCommand::RestoreState { group: group.clone() })?;
+        let restore_epoch = self.rebuild_epoch;
+        let fence = EpochFence::new(restore_epoch);
+        let mut pending: BTreeSet<usize> = BTreeSet::new();
+        for tr in &plan.transfers {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?;
+            self.send(
+                tr.source,
+                WorkerCommand::ServeState {
+                    listener,
+                    shard: tr.shard,
+                    epoch: restore_epoch,
+                    receivers: tr.targets.len(),
+                    fence: fence.clone(),
+                },
+            )?;
+            for &target in &tr.targets {
+                self.send(
+                    target,
+                    WorkerCommand::RestoreState {
+                        source_rank: tr.source,
+                        source_addr: addr,
+                        shard: tr.shard,
+                        epoch: restore_epoch,
+                        expect_step: resume_step,
+                        fence: fence.clone(),
+                    },
+                )?;
+                pending.insert(target);
             }
-            // controller joins the broadcast to observe completion
-            group
-                .broadcast(None)
-                .map_err(|e| anyhow::anyhow!("restore broadcast failed: {e}"))?;
+        }
+        let mut shard_restores: Vec<ShardRestoreStat> = Vec::new();
+        let restore_deadline = Instant::now() + Duration::from_secs(180);
+        while !pending.is_empty() {
+            if Instant::now() > restore_deadline {
+                bail!("restore stalled: ranks {pending:?} never reported");
+            }
+            match self.event_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(WorkerEvent::StateRestored { rank, shard, source, bytes, wall_s }) => {
+                    pending.remove(&rank);
+                    shard_restores.push(ShardRestoreStat {
+                        shard,
+                        source,
+                        target: rank,
+                        bytes,
+                        wall_s,
+                    });
+                }
+                Ok(WorkerEvent::StateServed { .. }) => {}
+                Ok(WorkerEvent::RestoreFailed { rank, retryable, detail }) => {
+                    bail!(
+                        "restore of rank {rank} failed (retryable={retryable}): {detail}"
+                    );
+                }
+                Ok(ev) => self.handle_event(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("workers gone during restore")
+                }
+            }
         }
         let restore_s = t_restore.elapsed().as_secs_f64();
 
@@ -546,6 +631,7 @@ impl Controller {
             restore_s,
             rebuild_s,
             total_s: detection_s + restart_s,
+            shard_restores,
         });
         Ok(())
     }
@@ -674,6 +760,7 @@ impl Controller {
             restore_s,
             rebuild_s: 0.0, // vanilla re-establishes everything from scratch
             total_s: detection_s + restart_s,
+            shard_restores: Vec::new(),
         });
         Ok(())
     }

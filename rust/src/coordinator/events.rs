@@ -1,8 +1,34 @@
 //! Controller-side records of recovery episodes and run outcomes.
 
 use crate::cluster::failure::FailureKind;
-use crate::config::RecoveryMode;
+use crate::config::{RecoveryMode, ShardId};
 use crate::util::Json;
+
+/// One shard's streaming restore within a recovery episode: which
+/// surviving replica served which target, how many bytes moved, and
+/// how long the transfer took (DESIGN.md §9).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRestoreStat {
+    pub shard: ShardId,
+    pub source: usize,
+    pub target: usize,
+    pub bytes: u64,
+    pub wall_s: f64,
+}
+
+impl ShardRestoreStat {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("pp", self.shard.pp)
+            .set("tp", self.shard.tp)
+            .set("zero", self.shard.zero)
+            .set("source", self.source)
+            .set("target", self.target)
+            .set("bytes", self.bytes)
+            .set("wall_s", self.wall_s);
+        o
+    }
+}
 
 /// One failure + recovery episode, timed the way the paper's Tab. III
 /// reports it.
@@ -31,6 +57,9 @@ pub struct RecoveryRecord {
     /// for vanilla recoveries, which re-establish from scratch).
     pub rebuild_s: f64,
     pub total_s: f64,
+    /// Per-shard streaming transfers of this episode (empty for
+    /// vanilla recoveries and checkpoint fallbacks).
+    pub shard_restores: Vec<ShardRestoreStat>,
 }
 
 impl RecoveryRecord {
@@ -50,7 +79,11 @@ impl RecoveryRecord {
             .set("restart_s", self.restart_s)
             .set("restore_s", self.restore_s)
             .set("rebuild_s", self.rebuild_s)
-            .set("total_s", self.total_s);
+            .set("total_s", self.total_s)
+            .set(
+                "shard_restores",
+                Json::Array(self.shard_restores.iter().map(|s| s.to_json()).collect()),
+            );
         o
     }
 }
@@ -128,11 +161,21 @@ mod tests {
             restore_s: 0.3,
             rebuild_s: 0.1,
             total_s: 1.3,
+            shard_restores: vec![ShardRestoreStat {
+                shard: ShardId { pp: 0, tp: 0, zero: 1 },
+                source: 3,
+                target: 1,
+                bytes: 4096,
+                wall_s: 0.05,
+            }],
         };
         let j = r.to_json();
         assert_eq!(j.get("mode").as_str(), Some("flash"));
         assert_eq!(j.get("lost_steps").as_i64(), Some(0));
         assert_eq!(j.get("rebuild_s").as_f64(), Some(0.1));
+        let sr = j.get("shard_restores").idx(0);
+        assert_eq!(sr.get("source").as_usize(), Some(3));
+        assert_eq!(sr.get("bytes").as_i64(), Some(4096));
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! * [`rendezvous`] — epoch-fenced communication-group reconstruction
 //!   over the live TCP store: O(1) messages per surviving node,
 //!   full join for replacements only (§III-D; DESIGN.md §8).
+//! * [`restore`] — shard-aware restore planning (lost ZeRO shard ->
+//!   surviving replica source) and streaming restore episodes over the
+//!   live TCP plane (§III-E; DESIGN.md §9).
 //! * [`controller`] — the global controller orchestrating detection,
 //!   scale-independent restart, and checkpoint-free recovery over the
 //!   real DP training engine.
@@ -19,14 +22,19 @@ pub mod detection;
 pub mod events;
 pub mod ranktable;
 pub mod rendezvous;
+pub mod restore;
 pub mod step_tag;
 
 pub use controller::{Controller, ControllerConfig};
 pub use detection::{Detection, HeartbeatMonitor};
-pub use events::{RecoveryRecord, RunReport};
+pub use events::{RecoveryRecord, RunReport, ShardRestoreStat};
 pub use ranktable::{original_update, RankEntry, Ranktable, SharedRanktable};
 pub use rendezvous::{
-    rebuild_episode, rebuild_sweep, EpisodeConfig, NodeSession, RebuildOutcome,
-    SweepConfig,
+    rebuild_episode, rebuild_sweep, EpisodeConfig, EpochAborted, NodeSession,
+    RebuildOutcome, SweepConfig,
+};
+pub use restore::{
+    plan_shard_restore, restore_episode, restore_sweep, RestoreOutcome, RestorePlan,
+    RestoreSweepConfig, ShardTransfer, TransferStat,
 };
 pub use step_tag::{decide, plan_restore, TagDecision};

@@ -27,7 +27,60 @@ use crate::metrics::Histogram;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
-use std::time::Instant;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+/// Published as an epoch's delta when the epoch was administratively
+/// aborted (supervised-barrier early abort). Unambiguous: real deltas
+/// are JSON objects.
+const ABORT_MARKER: &[u8] = b"!abort";
+
+/// A rendezvous epoch was aborted before its barrier released — an
+/// agent died before arriving and the supervised barrier fenced the
+/// cluster out of the epoch instead of letting everyone hang. The
+/// episode is retryable: re-run with `from_epoch = current` (the
+/// aborted epoch's keys are tombstoned and must not be reused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochAborted {
+    pub current: u64,
+}
+
+impl std::fmt::Display for EpochAborted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rendezvous epoch aborted (supervised barrier); retry at epoch {}",
+            self.current
+        )
+    }
+}
+
+impl std::error::Error for EpochAborted {}
+
+/// Extract the retryable abort marker from an error chain.
+pub fn epoch_aborted(e: &anyhow::Error) -> Option<EpochAborted> {
+    e.downcast_ref::<EpochAborted>().copied()
+}
+
+/// Unwrap a fenced wait, translating supersession into the retryable
+/// [`EpochAborted`] — the one conversion every barrier/join/table wait
+/// shares.
+fn fenced_value(w: FencedWait) -> Result<Vec<u8>> {
+    match w {
+        FencedWait::Value(b) => Ok(b),
+        FencedWait::Superseded { current } => Err(EpochAborted { current }.into()),
+    }
+}
+
+/// [`fenced_value`] for delta reads: an abort tombstone published as
+/// the epoch's delta also aborts.
+fn delta_value(w: FencedWait, epoch: u64) -> Result<Vec<u8>> {
+    let b = fenced_value(w)?;
+    if b == ABORT_MARKER {
+        return Err(EpochAborted { current: epoch }.into());
+    }
+    Ok(b)
+}
 
 fn k_delta(epoch: u64) -> String {
     format!("rdzv/{epoch}/delta")
@@ -102,7 +155,9 @@ impl EpochRecord {
 /// Arrive at the epoch barrier. The closing participant publishes the
 /// release key *instead of* waiting on it (it just proved everyone
 /// arrived), so every participant spends exactly 2 messages here and
-/// the per-node budget stays deterministic.
+/// the per-node budget stays deterministic. The wait is epoch-fenced:
+/// a supervised-barrier abort releases arrived participants with a
+/// retryable [`EpochAborted`] instead of a 300s socket-timeout hang.
 fn arrive_and_release(
     client: &mut TcpStoreClient,
     epoch: u64,
@@ -112,7 +167,7 @@ fn arrive_and_release(
     if n >= participants as i64 {
         client.set(&k_go(epoch), b"go")?;
     } else {
-        client.wait(&k_go(epoch))?;
+        fenced_value(client.wait_epoch(&k_go(epoch), epoch)?)?;
     }
     Ok(())
 }
@@ -173,7 +228,14 @@ impl NodeSession {
         let mut target = target;
         let rec = loop {
             match self.client.wait_epoch(&k_delta(target), target)? {
-                FencedWait::Value(bytes) => break EpochRecord::parse(&bytes)?,
+                FencedWait::Value(bytes) => {
+                    if bytes == ABORT_MARKER {
+                        // the epoch we chased into was aborted; the
+                        // controller retries past the tombstone
+                        return Err(EpochAborted { current: target }.into());
+                    }
+                    break EpochRecord::parse(&bytes)?;
+                }
                 FencedWait::Superseded { current } => target = current,
             }
         };
@@ -184,7 +246,7 @@ impl NodeSession {
             // Missed at least one epoch's delta (or the cached table
             // diverged): resync from the full binary table — one extra
             // message, not a re-registration.
-            let bytes = self.client.wait(&k_table(target))?;
+            let bytes = fenced_value(self.client.wait_epoch(&k_table(target), target)?)?;
             self.table = Ranktable::decode_bin(&bytes)?;
             self.groups = GroupSet::derive_for(&self.table, cfg, target, self.rank)?;
             RekeyStats { rebuilt: self.groups.groups.len(), rekeyed: 0 }
@@ -215,8 +277,11 @@ pub fn replacement_join(
     let mut client = TcpStoreClient::connect(addr)?;
     client.hello(entry.rank as u64)?;
     client.set(&k_join(target, entry.rank), &entry.encode())?;
-    let rec = EpochRecord::parse(&client.wait(&k_delta(target))?)?;
-    let table = Ranktable::decode_bin(&client.wait(&k_table(target))?)?;
+    let delta = delta_value(client.wait_epoch(&k_delta(target), target)?, target)?;
+    let rec = EpochRecord::parse(&delta)?;
+    let table = Ranktable::decode_bin(&fenced_value(
+        client.wait_epoch(&k_table(target), target)?,
+    )?)?;
     let groups = GroupSet::derive_for(&table, cfg, target, entry.rank)?;
     arrive_and_release(&mut client, target, rec.participants)?;
     let ops = client.ops_sent();
@@ -246,7 +311,9 @@ pub fn coordinate(
     client.advance_epoch(target)?;
     let mut subs = Vec::with_capacity(failed.len());
     for &r in failed {
-        let bytes = client.wait(&k_join(target, r))?;
+        // fenced: a replacement that dies before registering releases
+        // the coordinator via the supervised-barrier abort
+        let bytes = fenced_value(client.wait_epoch(&k_join(target, r), target)?)?;
         let entry = RankEntry::decode(&bytes)?;
         if entry.rank != r {
             bail!("replacement for rank {r} registered as rank {}", entry.rank);
@@ -269,8 +336,51 @@ pub fn coordinate(
         // nobody to arrive: release immediately so nothing dangles
         client.set(&k_go(target), b"go")?;
     }
-    client.wait(&k_go(target))?;
+    fenced_value(client.wait_epoch(&k_go(target), target)?)?;
     Ok(CoordStats { epoch: target, joins: failed.len(), ops: client.ops_sent() - ops0 })
+}
+
+/// Tombstone the epoch *after* `target` and fence everyone out of
+/// `target` — **unless** `target`'s barrier already released (the
+/// store's `AbortEpoch` op checks the release key and fences in one
+/// atomic step, so "barrier won" vs "abort won" is a deterministic
+/// order, never a mix). On abort, every fenced waiter (arrive barrier,
+/// join harvest, delta chase) is released promptly with
+/// [`EpochAborted`]. The tombstoned epoch `target + 1` must not be
+/// reused — retries go to `target + 2` (i.e. `from_epoch = target + 1`).
+fn abort_epoch(addr: SocketAddr, target: u64) {
+    if let Ok(mut c) = TcpStoreClient::connect(addr) {
+        let _ = c.abort_epoch_unless(
+            &k_go(target),
+            &k_delta(target + 1),
+            ABORT_MARKER,
+            target + 1,
+        );
+    }
+}
+
+/// Supervised barrier: a watchdog that aborts epoch `target` if its
+/// release key has not been published within `deadline`. Signal the
+/// returned sender (or drop it after a successful episode) to stand
+/// the watchdog down.
+fn supervise_barrier(
+    addr: SocketAddr,
+    target: u64,
+    deadline: Duration,
+) -> (std::sync::mpsc::Sender<()>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let handle = std::thread::spawn(move || {
+        match rx.recv_timeout(deadline) {
+            Err(RecvTimeoutError::Timeout) => {}
+            _ => return, // episode finished (or its driver bailed) in time
+        }
+        // Deadline passed with the barrier possibly still closed: a
+        // participant died before arriving (DESIGN.md §8). The abort
+        // itself re-checks the release key atomically, so a barrier
+        // that released at the last instant is left untouched.
+        abort_epoch(addr, target);
+    });
+    (tx, handle)
 }
 
 /// How a rebuild episode is driven.
@@ -281,11 +391,19 @@ pub struct EpisodeConfig {
     /// so a fixed sample bounds socket count while ranktable and group
     /// math still run at full cluster scale.
     pub live_survivors: usize,
+    /// Supervised-barrier deadline: if the episode's arrive barrier
+    /// has not released by then (a participant died before arriving),
+    /// the watchdog aborts the epoch and every fenced waiter returns a
+    /// retryable [`EpochAborted`] — never a 300s socket-timeout stall.
+    pub join_deadline: Duration,
 }
 
 impl Default for EpisodeConfig {
     fn default() -> Self {
-        EpisodeConfig { live_survivors: 32 }
+        EpisodeConfig {
+            live_survivors: 32,
+            join_deadline: Duration::from_secs(120),
+        }
     }
 }
 
@@ -328,12 +446,15 @@ fn sample_stride(ranks: &[usize], cap: usize) -> Vec<usize> {
 /// real TCP client. Returns once every participant has converged on
 /// the new table and epoch.
 ///
-/// Failure semantics: an agent that dies before arriving stalls the
-/// episode until the store's client read timeout (300s) fires, after
-/// which the episode errors — a bounded failure, not a hang. Epoch
-/// keys are retained on the store (only epoch `e-1` is ever needed
-/// for late resync; pruning older epochs needs a delete op the wire
-/// protocol doesn't carry yet — tracked as a §8 limitation).
+/// Failure semantics: the barrier is *supervised* — an agent that dies
+/// before arriving trips the watchdog at `opts.join_deadline`, the
+/// epoch is aborted, and every fenced waiter (including this function)
+/// returns a retryable [`EpochAborted`] instead of stalling on the
+/// store's 300s client read timeout. Retry with
+/// `from_epoch = aborted.current` (the tombstoned epoch is skipped).
+/// Epoch keys are retained on the store (only epoch `e-1` is ever
+/// needed for late resync; pruning older epochs needs a delete op the
+/// wire protocol doesn't carry yet — tracked as a §8 limitation).
 pub fn rebuild_episode(
     server: &TcpStoreServer,
     table: &Ranktable,
@@ -376,6 +497,10 @@ pub fn rebuild_episode(
     let participants = sample.len() + replacements.len();
 
     let t0 = Instant::now();
+    // Supervised barrier (DESIGN.md §8): if any participant dies
+    // before arriving, the watchdog fences the epoch at the deadline
+    // and every blocked agent returns EpochAborted instead of hanging.
+    let (watch_tx, watchdog) = supervise_barrier(addr, target, opts.join_deadline);
     let mut survivor_threads = Vec::with_capacity(sessions.len());
     for mut s in sessions {
         let cfg = cfg.clone();
@@ -394,23 +519,56 @@ pub fn rebuild_episode(
         }));
     }
     let mut coord_table = table.clone();
-    let stats = coordinate(&mut coord, &mut coord_table, failed, target, participants)?;
+    let coord_res = coordinate(&mut coord, &mut coord_table, failed, target, participants);
+    if coord_res.is_err() {
+        // Release every blocked agent promptly (idempotent when the
+        // watchdog already fired), then collect them below.
+        abort_epoch(addr, target);
+    }
+    let _ = watch_tx.send(());
+    let _ = watchdog.join();
+
+    // Join every agent before surfacing any error — an abort must not
+    // leave threads behind.
+    let mut agent_err: Option<anyhow::Error> = None;
+    let mut survivors_done: Vec<(NodeSession, RejoinOutcome)> = Vec::new();
+    for h in survivor_threads {
+        match h.join() {
+            Ok(Ok(pair)) => survivors_done.push(pair),
+            Ok(Err(e)) => {
+                agent_err.get_or_insert(e);
+            }
+            Err(_) => {
+                agent_err.get_or_insert(anyhow::anyhow!("survivor agent panicked"));
+            }
+        }
+    }
+    let mut replacements_done: Vec<(NodeSession, u64)> = Vec::new();
+    for h in repl_threads {
+        match h.join() {
+            Ok(Ok(pair)) => replacements_done.push(pair),
+            Ok(Err(e)) => {
+                agent_err.get_or_insert(e);
+            }
+            Err(_) => {
+                agent_err.get_or_insert(anyhow::anyhow!("replacement agent panicked"));
+            }
+        }
+    }
+    let stats = coord_res?;
+    if let Some(e) = agent_err {
+        return Err(e);
+    }
 
     let mut survivor_ops_max = 0u64;
-    for h in survivor_threads {
-        let (s, out) = h
-            .join()
-            .map_err(|_| anyhow::anyhow!("survivor agent panicked"))??;
+    for (s, out) in survivors_done {
         if s.table != coord_table || s.epoch != target {
             bail!("survivor {} diverged after rejoin", s.rank);
         }
         survivor_ops_max = survivor_ops_max.max(out.ops);
     }
     let mut replacement_ops_max = 0u64;
-    for h in repl_threads {
-        let (s, ops) = h
-            .join()
-            .map_err(|_| anyhow::anyhow!("replacement agent panicked"))??;
+    for (s, ops) in replacements_done {
         if s.table != coord_table || s.epoch != target {
             bail!("replacement {} diverged after join", s.rank);
         }
@@ -520,7 +678,10 @@ pub fn rebuild_sweep(cfg: &SweepConfig) -> Result<BenchReport> {
                 &failed,
                 &replacements,
                 epoch,
-                &EpisodeConfig { live_survivors: cfg.live_survivors },
+                &EpisodeConfig {
+                    live_survivors: cfg.live_survivors,
+                    ..Default::default()
+                },
             )?;
             epoch = out.epoch;
             table = out.table;
@@ -607,7 +768,7 @@ mod tests {
             &[3],
             &[replacement(3, 0)],
             0,
-            &EpisodeConfig { live_survivors: 8 },
+            &EpisodeConfig { live_survivors: 8, ..Default::default() },
         )
         .unwrap();
         assert_eq!(out.epoch, 1);
@@ -640,7 +801,7 @@ mod tests {
                 &[1],
                 &[replacement(1, i)],
                 epoch,
-                &EpisodeConfig { live_survivors: 4 },
+                &EpisodeConfig { live_survivors: 4, ..Default::default() },
             )
             .unwrap();
             epoch = out.epoch;
@@ -687,6 +848,80 @@ mod tests {
         assert_eq!(session.groups.epoch, 2);
         // superseded wait + retried wait + table fetch + arrive + release
         assert_eq!(out.ops, 5);
+    }
+
+    #[test]
+    fn dead_participant_aborts_epoch_instead_of_stalling() {
+        // DESIGN §8 known limitation (1), resolved: an agent that died
+        // before arriving used to stall the episode until the store's
+        // 300s client read timeout. The supervised barrier now aborts
+        // the epoch at the join deadline, releasing every fenced
+        // waiter with a retryable EpochAborted; a retry past the
+        // tombstoned epoch converges.
+        let cfg = ParallelismConfig::dp(4);
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let t = table(4);
+
+        // one live survivor that WILL arrive; the second expected
+        // participant never does (it died before arriving)
+        let mut s = NodeSession::start(addr, 0, t.clone(), &cfg, 0).unwrap();
+        let cfg2 = cfg.clone();
+        let survivor = std::thread::spawn(move || s.rejoin(&cfg2, 1));
+
+        let (tx, watchdog) = supervise_barrier(addr, 1, Duration::from_millis(400));
+        let mut coord = TcpStoreClient::connect(addr).unwrap();
+        let mut ct = t.clone();
+        let no_failed: [usize; 0] = [];
+        let t0 = Instant::now();
+        let coord_res = coordinate(&mut coord, &mut ct, &no_failed, 1, 2);
+        let _ = tx.send(());
+        watchdog.join().unwrap();
+
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "abort must be prompt, not a read-timeout stall"
+        );
+        let cerr = coord_res.unwrap_err();
+        assert_eq!(
+            epoch_aborted(&cerr),
+            Some(EpochAborted { current: 2 }),
+            "{cerr:#}"
+        );
+        let serr = survivor.join().unwrap().unwrap_err();
+        assert!(epoch_aborted(&serr).is_some(), "{serr:#}");
+        assert_eq!(server.epoch(), 2, "abort must fence the epoch");
+
+        // retry past the tombstone (from_epoch = aborted current) with
+        // the participants that actually exist: converges
+        let out = rebuild_episode(
+            &server,
+            &t,
+            &cfg,
+            &[1],
+            &[replacement(1, 0)],
+            2,
+            &EpisodeConfig { live_survivors: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.epoch, 3);
+        assert_eq!(out.table.entries[1], replacement(1, 0));
+    }
+
+    #[test]
+    fn watchdog_stands_down_after_release() {
+        // A completed barrier must not be aborted retroactively.
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.set(&k_go(1), b"go").unwrap();
+        let (tx, watchdog) = supervise_barrier(addr, 1, Duration::from_millis(50));
+        // deliberately do NOT signal before the deadline
+        std::thread::sleep(Duration::from_millis(150));
+        watchdog.join().unwrap();
+        drop(tx);
+        assert_eq!(server.epoch(), 0, "released barrier must not be aborted");
+        assert_eq!(c.get(&k_delta(2)).unwrap(), None, "no tombstone");
     }
 
     #[test]

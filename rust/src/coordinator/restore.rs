@@ -1,0 +1,683 @@
+//! Shard-aware restore planning and streaming restore episodes — the
+//! paper's "checkpoint-free recovery within one step" (§III-E, Fig. 6)
+//! as a real protocol over the live TCP plane (DESIGN.md §9).
+//!
+//! [`plan_shard_restore`] grows the step-tag `plan_restore` into a full
+//! planner: it maps every lost ZeRO shard to a surviving replica source
+//! (the Fig. 3 replica-location model from `config::parallelism`) and
+//! schedules per-shard transfers that run in parallel — one socket per
+//! (source, targets) pair instead of one whole-model broadcast from a
+//! single root. A shard whose replicas all died is reported as
+//! *unsourced*, which is exactly `can_recover == false`: the episode
+//! must fall back to the checkpoint path (paper §III-G.1).
+//!
+//! [`restore_episode`] drives a plan end to end over real sockets:
+//! sources advertise ephemeral endpoints through the epoch-fenced
+//! store, targets claim and fetch, and a mid-restore epoch bump aborts
+//! every in-flight transfer with a retryable outcome — never a hang.
+
+use crate::checkpoint::Snapshot;
+use crate::comms::state_stream::{
+    fetch_from_addr, serve_listener, transfer_tag, EpochFence, Expect, RestoreError,
+    StreamConfig,
+};
+use crate::comms::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
+use crate::config::{ParallelismConfig, ShardId};
+use crate::metrics::bench::BenchReport;
+use crate::metrics::Histogram;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::time::Instant;
+
+/// One scheduled transfer: `source` serves its state to `targets`,
+/// which all hold (or must come to hold) the same model-state shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardTransfer {
+    pub shard: ShardId,
+    pub source: usize,
+    pub targets: Vec<usize>,
+}
+
+/// The full restore schedule for one recovery episode.
+#[derive(Debug, Clone)]
+pub struct RestorePlan {
+    /// Step every rank resumes from (max over the survivors' states —
+    /// dead ranks' progress is unrecoverable and ignored).
+    pub resume_step: u64,
+    /// Per-shard transfers; distinct transfers run in parallel.
+    pub transfers: Vec<ShardTransfer>,
+    /// Shards with restore targets but no surviving replica at the
+    /// resume step — replica restore is impossible for them
+    /// (`can_recover` false): checkpoint fallback.
+    pub unsourced: Vec<ShardId>,
+}
+
+impl RestorePlan {
+    /// True iff every lost or lagging shard has a live replica source.
+    pub fn replica_feasible(&self) -> bool {
+        self.unsourced.is_empty()
+    }
+
+    /// Every rank scheduled to receive state.
+    pub fn targets(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .transfers
+            .iter()
+            .flat_map(|t| t.targets.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Map every lost shard to a surviving replica source and schedule the
+/// transfers.
+///
+/// * `survivor_steps` — each surviving rank's *state* step (completed
+///   optimizer updates). Ranks absent from both lists (already stopped)
+///   are outside the episode.
+/// * `lost` — dead ranks awaiting replacements.
+///
+/// Semantics:
+/// * the resume step is the max over survivors only — a failure that
+///   raced the barrier can leave the dead rank's step tag *ahead* of
+///   every survivor, in which case the sole surviving replica (a
+///   "laggard" relative to the dead rank) is still the only valid
+///   source and its step wins;
+/// * surviving ranks behind the resume step are restore targets too
+///   (laggards), alongside the replacements;
+/// * within a shard, targets are spread round-robin across all sources
+///   at the resume step, so a wide DP group restores in parallel
+///   instead of serialising through one root.
+pub fn plan_shard_restore(
+    par: &ParallelismConfig,
+    survivor_steps: &[(usize, u64)],
+    lost: &[usize],
+) -> RestorePlan {
+    assert!(!survivor_steps.is_empty(), "no survivors to plan from");
+    let resume_step = survivor_steps.iter().map(|&(_, s)| s).max().unwrap();
+    let step_of: BTreeMap<usize, u64> = survivor_steps.iter().copied().collect();
+
+    let mut by_shard: BTreeMap<ShardId, Vec<usize>> = BTreeMap::new();
+    for g in 0..par.world_size() {
+        by_shard.entry(par.shard_id(g)).or_default().push(g);
+    }
+
+    let mut transfers = Vec::new();
+    let mut unsourced = Vec::new();
+    for (shard, members) in by_shard {
+        let mut sources = Vec::new();
+        let mut targets = Vec::new();
+        for m in members {
+            if lost.contains(&m) {
+                targets.push(m);
+            } else if let Some(&s) = step_of.get(&m) {
+                if s == resume_step {
+                    sources.push(m);
+                } else {
+                    targets.push(m); // laggard
+                }
+            }
+        }
+        if targets.is_empty() {
+            continue;
+        }
+        if sources.is_empty() {
+            unsourced.push(shard);
+            continue;
+        }
+        let mut per_source: Vec<Vec<usize>> = vec![Vec::new(); sources.len()];
+        for (i, t) in targets.into_iter().enumerate() {
+            per_source[i % sources.len()].push(t);
+        }
+        for (source, tg) in sources.into_iter().zip(per_source) {
+            if !tg.is_empty() {
+                transfers.push(ShardTransfer { shard, source, targets: tg });
+            }
+        }
+    }
+    RestorePlan { resume_step, transfers, unsourced }
+}
+
+/// One completed transfer's accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferStat {
+    pub shard: ShardId,
+    pub source: usize,
+    pub target: usize,
+    pub bytes: u64,
+    pub chunks: u32,
+    pub wall_s: f64,
+}
+
+/// Outcome of one restore episode.
+#[derive(Debug)]
+pub struct RestoreOutcome {
+    pub epoch: u64,
+    pub resume_step: u64,
+    /// Whole-episode wall clock (all transfers, run in parallel).
+    pub wall_s: f64,
+    pub transfers: Vec<TransferStat>,
+    /// rank -> restored state, for every target in the plan.
+    pub restored: BTreeMap<usize, Snapshot>,
+}
+
+impl RestoreOutcome {
+    pub fn bytes_moved(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes).sum()
+    }
+}
+
+/// Advance the rendezvous epoch on both planes at once: the store
+/// (releases blocked `ClaimRestore` waiters) and the in-memory fence
+/// (aborts in-flight chunk transfers). This is what folding a
+/// failure-during-recovery into the episode looks like on the wire.
+pub fn bump_epoch(store: SocketAddr, fence: &EpochFence, to: u64) -> Result<u64> {
+    let mut client = TcpStoreClient::connect(store)?;
+    let now = client.advance_epoch(to)?;
+    fence.advance(to);
+    Ok(now)
+}
+
+fn fatal(e: anyhow::Error) -> RestoreError {
+    RestoreError::Fatal(e)
+}
+
+/// Drive one restore episode over real sockets: every transfer's
+/// source binds an ephemeral listener and advertises it through the
+/// epoch-fenced store; every target claims its source, connects, and
+/// fetches the shard. All transfers run concurrently. Returns
+/// [`RestoreError::Superseded`] (retryable — replan at the new epoch)
+/// the moment any side observes an epoch bump.
+///
+/// Abort contract: the caller folds a failure-during-recovery in by
+/// calling [`bump_epoch`] with the same fence, which releases both
+/// blocked claims (store side) and in-flight chunk streams (fence
+/// side) promptly.
+pub fn restore_episode(
+    store: SocketAddr,
+    plan: &RestorePlan,
+    states: &BTreeMap<usize, Snapshot>,
+    epoch: u64,
+    fence: &EpochFence,
+    cfg: &StreamConfig,
+) -> Result<RestoreOutcome, RestoreError> {
+    if !plan.replica_feasible() {
+        return Err(fatal(anyhow!(
+            "plan has unsourced shards {:?} — checkpoint fallback required",
+            plan.unsourced
+        )));
+    }
+    for tr in &plan.transfers {
+        let src = states
+            .get(&tr.source)
+            .ok_or_else(|| fatal(anyhow!("no state for source rank {}", tr.source)))?;
+        if src.step != plan.resume_step {
+            return Err(fatal(anyhow!(
+                "source rank {} is at step {}, plan resumes at {}",
+                tr.source,
+                src.step,
+                plan.resume_step
+            )));
+        }
+    }
+
+    let t0 = Instant::now();
+    // Bind every transfer's listener up front so targets can be told
+    // their source address before any thread starts.
+    let mut endpoints = Vec::with_capacity(plan.transfers.len());
+    for tr in &plan.transfers {
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| fatal(e.into()))?;
+        let addr = listener.local_addr().map_err(|e| fatal(e.into()))?;
+        endpoints.push((listener, addr, tr));
+    }
+
+    // All agents run as scoped threads borrowing the source snapshots
+    // in place — no per-transfer deep copy of model state. Every
+    // thread is joined before any error surfaces, so an abort never
+    // leaves dangling agents behind.
+    let mut superseded: Option<u64> = None;
+    let mut first_fatal: Option<anyhow::Error> = None;
+    let mut transfers = Vec::new();
+    let mut restored = BTreeMap::new();
+    std::thread::scope(|scope| {
+        let mut source_threads = Vec::with_capacity(endpoints.len());
+        let mut target_threads = Vec::new();
+        for (listener, addr, tr) in &endpoints {
+            let snap = &states[&tr.source];
+            let tag = transfer_tag(tr.shard, tr.source);
+            let (shard, receivers) = (tr.shard, tr.targets.len());
+            source_threads.push(scope.spawn(move || -> Result<(), RestoreError> {
+                let mut client = TcpStoreClient::connect(store).map_err(fatal)?;
+                match client.advertise_restore(epoch, tag, &addr.to_string()) {
+                    Ok(None) => {}
+                    Ok(Some(current)) => {
+                        return Err(RestoreError::Superseded { current })
+                    }
+                    Err(e) => return Err(fatal(e)),
+                }
+                serve_listener(listener, snap, shard, epoch, receivers, fence, cfg)
+                    .map(|_| ())
+            }));
+
+            for &target in &tr.targets {
+                let (shard, source) = (tr.shard, tr.source);
+                let resume = plan.resume_step;
+                target_threads.push(scope.spawn(
+                    move || -> Result<(TransferStat, Snapshot), RestoreError> {
+                        let mut client =
+                            TcpStoreClient::connect(store).map_err(fatal)?;
+                        let addr_bytes = match client
+                            .claim_restore(epoch, transfer_tag(shard, source))
+                            .map_err(fatal)?
+                        {
+                            FencedWait::Value(v) => v,
+                            FencedWait::Superseded { current } => {
+                                return Err(RestoreError::Superseded { current })
+                            }
+                        };
+                        let addr: SocketAddr = String::from_utf8(addr_bytes)
+                            .map_err(|e| fatal(e.into()))?
+                            .parse()
+                            .map_err(|e: std::net::AddrParseError| fatal(e.into()))?;
+                        let expect = Expect { epoch, shard, step: Some(resume) };
+                        let (snap, stats) = fetch_from_addr(addr, &expect, fence)?;
+                        Ok((
+                            TransferStat {
+                                shard,
+                                source,
+                                target,
+                                bytes: stats.bytes,
+                                chunks: stats.chunks,
+                                wall_s: stats.wall_s,
+                            },
+                            snap,
+                        ))
+                    },
+                ));
+            }
+        }
+
+        for h in target_threads {
+            match h.join() {
+                Ok(Ok((stat, snap))) => {
+                    restored.insert(stat.target, snap);
+                    transfers.push(stat);
+                }
+                Ok(Err(RestoreError::Superseded { current })) => {
+                    superseded = Some(superseded.unwrap_or(0).max(current));
+                }
+                Ok(Err(RestoreError::Fatal(e))) => {
+                    first_fatal.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_fatal
+                        .get_or_insert(anyhow!("restore target thread panicked"));
+                }
+            }
+        }
+        for h in source_threads {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(RestoreError::Superseded { current })) => {
+                    superseded = Some(superseded.unwrap_or(0).max(current));
+                }
+                Ok(Err(RestoreError::Fatal(e))) => {
+                    first_fatal.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_fatal
+                        .get_or_insert(anyhow!("restore source thread panicked"));
+                }
+            }
+        }
+    });
+    if let Some(current) = superseded {
+        return Err(RestoreError::Superseded { current });
+    }
+    if let Some(e) = first_fatal {
+        return Err(RestoreError::Fatal(e));
+    }
+    Ok(RestoreOutcome {
+        epoch,
+        resume_step: plan.resume_step,
+        wall_s: t0.elapsed().as_secs_f64(),
+        transfers,
+        restored,
+    })
+}
+
+/// Deterministic synthetic model state for socket-level restore tests,
+/// chaos campaigns, and the bench sweep (three tensors, mimicking
+/// params ++ m ++ v). Identical `(step, elems)` means identical bits —
+/// the DP-replica invariant.
+pub fn synthetic_snapshot(step: u64, elems: usize) -> Snapshot {
+    let base = elems / 3;
+    let mut tensors = Vec::with_capacity(3);
+    for t in 0..3usize {
+        let n = if t == 0 { elems - 2 * base } else { base };
+        let v: Vec<f32> = (0..n)
+            .map(|i| {
+                let x = step
+                    .wrapping_mul(0x9E37_79B9)
+                    .wrapping_add((t * 1_000_003 + i) as u64 * 2_654_435_761)
+                    % 100_000;
+                x as f32 * 1e-5
+            })
+            .collect();
+        tensors.push(v);
+    }
+    Snapshot { step, tensors }
+}
+
+// ---------------------------------------------------------------- sweep
+
+/// Configuration for the `state_restore` bench and the
+/// `flashrecovery restore-bench` CLI.
+#[derive(Debug, Clone)]
+pub struct RestoreSweepConfig {
+    /// Model sizes as f32 elements per rank snapshot.
+    pub sizes: Vec<usize>,
+    /// ZeRO shard counts; each shard group loses one rank per episode.
+    pub shards: Vec<usize>,
+    /// Measured episodes per cell (one extra warmup is discarded).
+    pub samples: u32,
+    pub chunk_bytes: usize,
+}
+
+impl Default for RestoreSweepConfig {
+    fn default() -> Self {
+        RestoreSweepConfig {
+            sizes: vec![262_144, 1_048_576],
+            shards: vec![2, 4],
+            samples: 5,
+            chunk_bytes: crate::comms::state_stream::DEFAULT_CHUNK_BYTES,
+        }
+    }
+}
+
+/// Run one (size, shards) cell: kill one rank per ZeRO shard group and
+/// restore every lost shard from a distinct surviving replica, in
+/// parallel. Returns the per-episode wall-clock histogram + MB moved.
+fn run_parallel_cell(
+    cfg: &RestoreSweepConfig,
+    elems: usize,
+    shards: usize,
+    step: u64,
+) -> Result<(Histogram, f64, usize)> {
+    let par = ParallelismConfig::dp(2 * shards).with_zero(shards);
+    par.validate()?;
+    let lost: Vec<usize> = (0..shards).collect();
+    let survivor_steps: Vec<(usize, u64)> =
+        (shards..2 * shards).map(|r| (r, step)).collect();
+    let plan = plan_shard_restore(&par, &survivor_steps, &lost);
+    let states: BTreeMap<usize, Snapshot> = (shards..2 * shards)
+        .map(|r| (r, synthetic_snapshot(step, elems)))
+        .collect();
+    run_cell(cfg, &plan, &states, false)
+}
+
+/// The single-source baseline: the same number of targets restored
+/// from *one* surviving replica (the pre-refactor whole-model
+/// broadcast shape), serialised through a single socket endpoint
+/// (`serial_serve` models the lone source's single uplink).
+fn run_single_source_cell(
+    cfg: &RestoreSweepConfig,
+    elems: usize,
+    targets: usize,
+    step: u64,
+) -> Result<(Histogram, f64, usize)> {
+    let par = ParallelismConfig::dp(targets + 1);
+    let lost: Vec<usize> = (0..targets).collect();
+    let survivor_steps = vec![(targets, step)];
+    let plan = plan_shard_restore(&par, &survivor_steps, &lost);
+    let states: BTreeMap<usize, Snapshot> =
+        [(targets, synthetic_snapshot(step, elems))].into_iter().collect();
+    run_cell(cfg, &plan, &states, true)
+}
+
+fn run_cell(
+    cfg: &RestoreSweepConfig,
+    plan: &RestorePlan,
+    states: &BTreeMap<usize, Snapshot>,
+    serial_serve: bool,
+) -> Result<(Histogram, f64, usize)> {
+    let server = TcpStoreServer::start()?;
+    let stream_cfg = StreamConfig {
+        chunk_bytes: cfg.chunk_bytes,
+        serial_serve,
+        ..Default::default()
+    };
+    let mut h = Histogram::new();
+    let mut mb = 0.0;
+    let mut transfers = 0;
+    for i in 0..=cfg.samples {
+        let epoch = (i + 1) as u64;
+        let fence = EpochFence::new(epoch);
+        let out = restore_episode(server.addr(), plan, states, epoch, &fence, &stream_cfg)
+            .map_err(|e| anyhow!("{e}"))?;
+        if i > 0 {
+            // episode 0 is warmup (server threads, allocator)
+            h.record(out.wall_s);
+            mb = out.bytes_moved() as f64 / 1e6;
+            transfers = out.transfers.len();
+        }
+    }
+    Ok((h, mb, transfers))
+}
+
+/// Run the restore scale sweep and report per-cell wall-clock
+/// quantiles, bytes moved, and the single-source baseline. Column 0
+/// (`p50 ms`) is what CI's bench gate compares against the committed
+/// baseline; the last column is the serialized baseline the parallel
+/// path must beat.
+pub fn restore_sweep(cfg: &RestoreSweepConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new(
+        "state_restore: shard-aware streaming restore, size x shard sweep",
+        &["p50 ms", "mean ms", "max ms", "MB moved", "transfers", "1src p50 ms"],
+    );
+    for &elems in &cfg.sizes {
+        for &shards in &cfg.shards {
+            if shards < 2 {
+                anyhow::bail!("sweep needs >= 2 shard groups (got {shards})");
+            }
+            let (h, mb, transfers) = run_parallel_cell(cfg, elems, shards, 7)?;
+            let (single, _, _) = run_single_source_cell(cfg, elems, shards, 7)?;
+            report.row(
+                format!("elems={elems} shards={shards}"),
+                vec![
+                    h.p50() * 1e3,
+                    h.mean() * 1e3,
+                    h.max() * 1e3,
+                    mb,
+                    transfers as f64,
+                    single.p50() * 1e3,
+                ],
+            );
+        }
+    }
+    report.note(format!(
+        "{} samples/cell (+1 warmup), one lost rank per ZeRO shard group, \
+         chunk {} KiB; '1src' is the same target count restored through one \
+         source (the pre-refactor broadcast shape)",
+        cfg.samples,
+        cfg.chunk_bytes / 1024
+    ));
+    report.note(
+        "parallel per-shard restore must beat the single-source baseline at \
+         the largest cell (asserted by benches/state_restore.rs)",
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dp(n: usize) -> ParallelismConfig {
+        ParallelismConfig::dp(n)
+    }
+
+    #[test]
+    fn all_survivors_ahead_of_the_minimum_step() {
+        // Failure after the barrier: every survivor finished the update
+        // (i+1) while the dead rank stopped at i — resume at i+1, no
+        // laggards, replacements are the only targets.
+        let plan = plan_shard_restore(&dp(4), &[(1, 7), (2, 7), (3, 7)], &[0]);
+        assert_eq!(plan.resume_step, 7);
+        assert!(plan.replica_feasible());
+        assert_eq!(plan.targets(), vec![0]);
+        assert_eq!(plan.transfers.len(), 1);
+        assert!([1, 2, 3].contains(&plan.transfers[0].source));
+    }
+
+    #[test]
+    fn single_laggard_is_the_only_source_candidate() {
+        // The dead rank raced ahead of the barrier before dying; the
+        // sole survivor is "behind" the dead rank's progress but is
+        // still the only valid source — its step defines the resume.
+        let plan = plan_shard_restore(&dp(2), &[(1, 5)], &[0]);
+        assert_eq!(plan.resume_step, 5);
+        assert_eq!(plan.transfers.len(), 1);
+        assert_eq!(plan.transfers[0].source, 1);
+        assert_eq!(plan.transfers[0].targets, vec![0]);
+        assert!(plan.replica_feasible());
+    }
+
+    #[test]
+    fn mixed_laggards_and_replacements_in_one_episode() {
+        // rank 0 dead, rank 2 parked behind the resume step: both are
+        // targets, spread across the two up-to-date sources.
+        let plan = plan_shard_restore(&dp(4), &[(1, 7), (2, 6), (3, 7)], &[0]);
+        assert_eq!(plan.resume_step, 7);
+        let mut targets = plan.targets();
+        targets.sort_unstable();
+        assert_eq!(targets, vec![0, 2]);
+        let sources: Vec<usize> = plan.transfers.iter().map(|t| t.source).collect();
+        assert_eq!(plan.transfers.len(), 2, "parallel transfers: {plan:?}");
+        assert!(sources.contains(&1) && sources.contains(&3));
+    }
+
+    #[test]
+    fn each_lost_zero_shard_maps_to_a_distinct_replica() {
+        // dp=4, zero=2: shard groups {0,2} and {1,3}. Killing one rank
+        // per group restores each shard from the surviving member of
+        // the *same* group — two distinct sources, two transfers.
+        let par = dp(4).with_zero(2);
+        let plan = plan_shard_restore(&par, &[(2, 9), (3, 9)], &[0, 1]);
+        assert_eq!(plan.transfers.len(), 2);
+        let mut pairs: Vec<(usize, usize)> = plan
+            .transfers
+            .iter()
+            .map(|t| (t.source, t.targets[0]))
+            .collect();
+        pairs.sort_unstable();
+        assert_eq!(pairs, vec![(2, 0), (3, 1)]);
+        for t in &plan.transfers {
+            assert_eq!(par.shard_id(t.source), t.shard);
+            assert_eq!(par.shard_id(t.targets[0]), t.shard);
+        }
+    }
+
+    #[test]
+    fn shard_without_surviving_replica_is_unsourced() {
+        // Pure FSDP (zero == dp): no replicas exist, so a single loss
+        // is unsourced — exactly can_recover() == false.
+        let par = dp(4).with_zero(4);
+        assert!(!par.can_recover(&[2]));
+        let plan = plan_shard_restore(&par, &[(0, 3), (1, 3), (3, 3)], &[2]);
+        assert!(!plan.replica_feasible());
+        assert_eq!(plan.unsourced.len(), 1);
+        assert_eq!(plan.unsourced[0], par.shard_id(2));
+        assert!(plan.transfers.is_empty());
+    }
+
+    #[test]
+    fn whole_group_loss_with_laggard_only_shard_is_unsourced() {
+        // zero=2, dp=4: shard {1,3} loses rank 1 while rank 3 parked a
+        // step behind the global resume — no source at resume for that
+        // shard, so the plan demands checkpoint fallback.
+        let par = dp(4).with_zero(2);
+        let plan = plan_shard_restore(&par, &[(2, 7), (3, 6)], &[1]);
+        assert_eq!(plan.resume_step, 7);
+        assert!(!plan.replica_feasible());
+        assert_eq!(plan.unsourced, vec![par.shard_id(1)]);
+    }
+
+    #[test]
+    fn plan_skips_ranks_outside_the_episode() {
+        // rank 3 neither survived nor died (already stopped): it is
+        // not a target and not a source.
+        let plan = plan_shard_restore(&dp(4), &[(1, 4), (2, 4)], &[0]);
+        assert_eq!(plan.targets(), vec![0]);
+        for t in &plan.transfers {
+            assert_ne!(t.source, 3);
+            assert!(!t.targets.contains(&3));
+        }
+    }
+
+    #[test]
+    fn episode_restores_over_real_sockets() {
+        let par = dp(4).with_zero(2);
+        let plan = plan_shard_restore(&par, &[(2, 9), (3, 9)], &[0, 1]);
+        let states: BTreeMap<usize, Snapshot> = [2usize, 3]
+            .into_iter()
+            .map(|r| (r, synthetic_snapshot(9, 3000)))
+            .collect();
+        let server = TcpStoreServer::start().unwrap();
+        let fence = EpochFence::new(1);
+        let out = restore_episode(
+            server.addr(),
+            &plan,
+            &states,
+            1,
+            &fence,
+            &StreamConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(out.resume_step, 9);
+        assert_eq!(out.transfers.len(), 2);
+        assert_eq!(out.restored.len(), 2);
+        for (rank, snap) in &out.restored {
+            assert_eq!(snap.step, 9, "rank {rank}");
+            assert_eq!(snap.content_hash(), states[&2].content_hash());
+        }
+        // each lost shard came from a distinct surviving replica
+        let mut sources: Vec<usize> = out.transfers.iter().map(|t| t.source).collect();
+        sources.sort_unstable();
+        assert_eq!(sources, vec![2, 3]);
+    }
+
+    #[test]
+    fn unsourced_plan_is_rejected_by_the_episode_driver() {
+        let par = dp(2).with_zero(2);
+        let plan = plan_shard_restore(&par, &[(1, 3)], &[0]);
+        assert!(!plan.replica_feasible());
+        let server = TcpStoreServer::start().unwrap();
+        let fence = EpochFence::new(1);
+        let err = restore_episode(
+            server.addr(),
+            &plan,
+            &BTreeMap::new(),
+            1,
+            &fence,
+            &StreamConfig::default(),
+        )
+        .unwrap_err();
+        assert!(!err.retryable());
+        assert!(err.to_string().contains("checkpoint fallback"), "{err}");
+    }
+
+    #[test]
+    fn synthetic_snapshots_are_deterministic_replicas() {
+        let a = synthetic_snapshot(5, 1000);
+        let b = synthetic_snapshot(5, 1000);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_ne!(
+            a.content_hash(),
+            synthetic_snapshot(6, 1000).content_hash()
+        );
+        assert_eq!(a.tensors.iter().map(Vec::len).sum::<usize>(), 1000);
+    }
+}

@@ -8,6 +8,9 @@
 //!   rebuild-bench  group-reconstruction scale sweep over the live TCP
 //!                  plane; emits BENCH_group_rebuild.json, optionally
 //!                  perf-gated against a committed baseline
+//!   restore-bench  shard-aware streaming-restore sweep (model size x
+//!                  ZeRO shards) over real sockets; emits
+//!                  BENCH_state_restore.json, optionally perf-gated
 //!   info           print artifact/manifest information
 //!
 //! Examples:
@@ -41,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => simulate(&args),
         Some("scenario") => scenario(&args),
         Some("rebuild-bench") => rebuild_bench(&args),
+        Some("restore-bench") => restore_bench(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -58,7 +62,7 @@ fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -69,6 +73,9 @@ fn usage() {
          \u{20}         | export --spec <name> [--devices N]\n\
          rebuild-bench: [--scales 256,1024,4096,8192] [--samples N]\n\
          \u{20}         [--failures N] [--live-survivors N] [--out FILE]\n\
+         \u{20}         [--baseline FILE --gate RATIO]\n\
+         restore-bench: [--sizes 262144,1048576] [--shards 2,4]\n\
+         \u{20}         [--samples N] [--chunk-kib N] [--out FILE]\n\
          \u{20}         [--baseline FILE --gate RATIO]\n\
          info:     --size tiny|small|base"
     );
@@ -338,6 +345,64 @@ fn rebuild_bench(args: &Args) -> anyhow::Result<()> {
             }
             eprintln!(
                 "[rebuild-bench] if this is an accepted change, refresh the \
+                 baseline: cp {out} {baseline_path} (see README)"
+            );
+            std::process::exit(1);
+        }
+    }
+    Ok(())
+}
+
+/// `restore-bench` — the shard-aware streaming-restore sweep, with an
+/// optional perf gate against a committed baseline JSON (CI's
+/// bench-gate job fails the build on p50 regressions > --gate).
+fn restore_bench(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::coordinator::restore::{restore_sweep, RestoreSweepConfig};
+    use flashrecovery::util::Json;
+
+    let parse_list = |s: &str| -> anyhow::Result<Vec<usize>> {
+        let v = s
+            .split(',')
+            .map(|x| x.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?;
+        if v.is_empty() {
+            anyhow::bail!("list flag needs at least one value");
+        }
+        Ok(v)
+    };
+    let mut cfg = RestoreSweepConfig::default();
+    if let Some(s) = args.get("sizes") {
+        cfg.sizes = parse_list(s)?;
+    }
+    if let Some(s) = args.get("shards") {
+        cfg.shards = parse_list(s)?;
+    }
+    cfg.samples = args.u64_or("samples", cfg.samples as u64) as u32;
+    cfg.chunk_bytes =
+        args.usize_or("chunk-kib", cfg.chunk_bytes / 1024).max(4) * 1024;
+
+    let report = restore_sweep(&cfg)?;
+    report.print();
+    let out = args.str_or("out", "BENCH_state_restore.json");
+    report.write_json(&out)?;
+    println!("[restore-bench] wrote {out}");
+
+    if let Some(baseline_path) = args.get("baseline") {
+        let max_ratio = args.f64_or("gate", 1.5);
+        let text = std::fs::read_to_string(baseline_path)?;
+        let baseline =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+        let violations = report.gate(&baseline, 0, max_ratio);
+        if violations.is_empty() {
+            println!(
+                "[restore-bench] gate PASS (p50 within {max_ratio}x of {baseline_path})"
+            );
+        } else {
+            for v in &violations {
+                eprintln!("[restore-bench] gate FAIL: {v}");
+            }
+            eprintln!(
+                "[restore-bench] if this is an accepted change, refresh the \
                  baseline: cp {out} {baseline_path} (see README)"
             );
             std::process::exit(1);

@@ -20,11 +20,16 @@
 
 use super::data::DataIterator;
 use super::state::WorkerState;
-use crate::checkpoint::{decode_snapshot, encode_snapshot, CheckpointManager};
+use crate::checkpoint::CheckpointManager;
 use crate::cluster::failure::{FailureCategory, FailureKind};
+use crate::comms::state_stream::{
+    fetch_from_addr, serve_listener, EpochFence, Expect, RestoreError, StreamConfig,
+};
 use crate::comms::{Collective, CollectiveError};
+use crate::config::ShardId;
 use crate::runtime::{literal_tokens, ModelBundle};
 use anyhow::Result;
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -56,10 +61,26 @@ pub struct FailurePlan {
 pub enum WorkerCommand {
     /// Resume training from `resume_step` (state must already match).
     Continue { resume_step: u64 },
-    /// Act as the replica source: broadcast full state on `group`.
-    ServeState { group: Arc<Collective> },
-    /// Receive full state from the replica source on `group`.
-    RestoreState { group: Arc<Collective> },
+    /// Act as a replica source: stream this rank's state shard to
+    /// `receivers` targets over the pre-bound listener, fenced at
+    /// `epoch` (DESIGN.md §9).
+    ServeState {
+        listener: TcpListener,
+        shard: ShardId,
+        epoch: u64,
+        receivers: usize,
+        fence: EpochFence,
+    },
+    /// Fetch this rank's state shard from the replica source at
+    /// `source_addr`, verifying shard / epoch / resume step.
+    RestoreState {
+        source_rank: usize,
+        source_addr: SocketAddr,
+        shard: ShardId,
+        epoch: u64,
+        expect_step: u64,
+        fence: EpochFence,
+    },
     /// Exit cleanly.
     Stop,
 }
@@ -76,6 +97,21 @@ pub enum WorkerEvent {
     Stopped { rank: usize, state_step: u64, param_hash: u64 },
     /// A periodic checkpoint was taken (vanilla baseline).
     CheckpointTaken { rank: usize, step: u64, k0_s: f64 },
+    /// This rank finished serving its state shard to `targets` peers.
+    StateServed { rank: usize, targets: usize, bytes: u64, wall_s: f64 },
+    /// This rank's state was restored from `source` over the stream
+    /// plane; the controller folds the stats into the episode record.
+    StateRestored {
+        rank: usize,
+        shard: ShardId,
+        source: usize,
+        bytes: u64,
+        wall_s: f64,
+    },
+    /// A state transfer did not complete. `retryable` is true when the
+    /// transfer was superseded by an epoch bump (replan + retry), false
+    /// for IO/corruption failures.
+    RestoreFailed { rank: usize, retryable: bool, detail: String },
 }
 
 /// Shared monitoring state — the paper's monitoring process (liveness +
@@ -321,7 +357,10 @@ fn run_one_step(ctx: &mut WorkerCtx) -> StepOutcome {
     StepOutcome::Completed
 }
 
-/// Parked: blocking command loop during recovery.
+/// Parked: blocking command loop during recovery. State transfers run
+/// over the real stream plane; a failed transfer reports
+/// `RestoreFailed` and keeps the worker parked (the controller decides
+/// whether to retry the episode or tear down).
 fn park(ctx: &mut WorkerCtx) -> Disposition {
     loop {
         let cmd = match ctx.cmd_rx.recv() {
@@ -333,39 +372,52 @@ fn park(ctx: &mut WorkerCtx) -> Disposition {
                 send_stopped(ctx);
                 return Disposition::Exit;
             }
-            WorkerCommand::ServeState { group } => {
-                let snap = match ctx.state.to_snapshot() {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("[worker {}] snapshot failed: {e:#}", ctx.rank);
-                        return Disposition::Exit;
+            WorkerCommand::ServeState { listener, shard, epoch, receivers, fence } => {
+                match serve_shard(ctx, &listener, shard, epoch, receivers, &fence) {
+                    Ok((bytes, wall_s)) => {
+                        let _ = ctx.event_tx.send(WorkerEvent::StateServed {
+                            rank: ctx.rank,
+                            targets: receivers,
+                            bytes,
+                            wall_s,
+                        });
                     }
-                };
-                let bytes = Arc::new(encode_snapshot(&snap));
-                if group.broadcast(Some(bytes)).is_err() {
-                    return Disposition::Exit;
-                }
-            }
-            WorkerCommand::RestoreState { group } => {
-                let bytes = match group.broadcast(None) {
-                    Ok(b) => b,
-                    Err(_) => return Disposition::Exit,
-                };
-                let snap = match decode_snapshot(&bytes) {
-                    Ok(s) => s,
                     Err(e) => {
-                        eprintln!("[worker {}] bad replica payload: {e:#}", ctx.rank);
-                        return Disposition::Exit;
-                    }
-                };
-                match WorkerState::from_snapshot(&ctx.bundle, &snap) {
-                    Ok(s) => ctx.state = s,
-                    Err(e) => {
-                        eprintln!("[worker {}] restore failed: {e:#}", ctx.rank);
-                        return Disposition::Exit;
+                        eprintln!("[worker {}] serve failed: {e}", ctx.rank);
+                        let _ = ctx.event_tx.send(WorkerEvent::RestoreFailed {
+                            rank: ctx.rank,
+                            retryable: e.retryable(),
+                            detail: e.to_string(),
+                        });
                     }
                 }
             }
+            WorkerCommand::RestoreState {
+                source_rank,
+                source_addr,
+                shard,
+                epoch,
+                expect_step,
+                fence,
+            } => match fetch_shard(ctx, source_addr, shard, epoch, expect_step, &fence) {
+                Ok((bytes, wall_s)) => {
+                    let _ = ctx.event_tx.send(WorkerEvent::StateRestored {
+                        rank: ctx.rank,
+                        shard,
+                        source: source_rank,
+                        bytes,
+                        wall_s,
+                    });
+                }
+                Err(e) => {
+                    eprintln!("[worker {}] restore failed: {e}", ctx.rank);
+                    let _ = ctx.event_tx.send(WorkerEvent::RestoreFailed {
+                        rank: ctx.rank,
+                        retryable: e.retryable(),
+                        detail: e.to_string(),
+                    });
+                }
+            },
             WorkerCommand::Continue { resume_step } => {
                 assert_eq!(
                     ctx.state.step, resume_step,
@@ -379,6 +431,51 @@ fn park(ctx: &mut WorkerCtx) -> Disposition {
             }
         }
     }
+}
+
+/// Source side of a shard transfer: snapshot once, then stream it to
+/// each receiver in turn over the pre-bound listener (the fenced,
+/// stall-bounded serve loop lives in `comms::state_stream`).
+fn serve_shard(
+    ctx: &WorkerCtx,
+    listener: &TcpListener,
+    shard: ShardId,
+    epoch: u64,
+    receivers: usize,
+    fence: &EpochFence,
+) -> Result<(u64, f64), RestoreError> {
+    let snap = ctx
+        .state
+        .to_snapshot()
+        .map_err(|e| RestoreError::Fatal(e.context("snapshot for serve")))?;
+    let stats = serve_listener(
+        listener,
+        &snap,
+        shard,
+        epoch,
+        receivers,
+        fence,
+        &StreamConfig::default(),
+    )?;
+    Ok((stats.bytes, stats.wall_s))
+}
+
+/// Target side of a shard transfer: claim nothing (the controller
+/// already routed the source address), connect, fetch, install.
+fn fetch_shard(
+    ctx: &mut WorkerCtx,
+    source_addr: SocketAddr,
+    shard: ShardId,
+    epoch: u64,
+    expect_step: u64,
+    fence: &EpochFence,
+) -> Result<(u64, f64), RestoreError> {
+    let expect = Expect { epoch, shard, step: Some(expect_step) };
+    let (snap, stats) = fetch_from_addr(source_addr, &expect, fence)?;
+    let state = WorkerState::from_snapshot(&ctx.bundle, &snap)
+        .map_err(|e| RestoreError::Fatal(e.context("installing restored state")))?;
+    ctx.state = state;
+    Ok((stats.bytes, stats.wall_s))
 }
 
 /// Concatenate gradient literals into one flat f32 buffer (a single

@@ -3,6 +3,7 @@
 //! that are unavailable in the offline build environment.
 
 pub mod args;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
@@ -16,14 +17,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 /// FNV-1a over a byte slice — the identity hash for chaos scenario
 /// specs and journal digests (the byte-at-a-time reference variant;
-/// `checkpoint` keeps its faster word-wise flavour for bulk data).
+/// bulk data uses the word-wise [`hash::fnv1a`]). Kept as a top-level
+/// alias so existing call sites stay one import away.
 pub fn fnv1a(data: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in data {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
+    hash::fnv1a_bytes(data)
 }
 
 /// Create a unique temporary directory under the system temp dir

@@ -154,7 +154,7 @@ fn survivor_message_count_scale_independent_64_to_4096() {
             &failed,
             &[replacement],
             0,
-            &EpisodeConfig { live_survivors: live },
+            &EpisodeConfig { live_survivors: live, ..Default::default() },
         )
         .unwrap();
         assert_eq!(out.live_survivors, live);
@@ -223,7 +223,7 @@ fn rebuild_epoch_bump_releases_stale_waiter_during_churn() {
             &[2],
             &[replacement],
             epoch,
-            &EpisodeConfig { live_survivors: 4 },
+            &EpisodeConfig { live_survivors: 4, ..Default::default() },
         )
         .unwrap();
         epoch = out.epoch;

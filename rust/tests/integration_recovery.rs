@@ -187,6 +187,47 @@ fn simultaneous_two_rank_failure_recovers_from_single_survivor() {
 }
 
 #[test]
+fn one_failure_per_zero_shard_group_restores_from_distinct_replicas() {
+    flashrecovery::require_live_plane!();
+    // dp=4 sharded 2 ways: shard groups {0,2} and {1,3}. Kill one rank
+    // per group at the same step; the streaming restore must source
+    // each lost shard from the surviving replica of the same group
+    // (two distinct sources, parallel transfers) and end bit-exact.
+    let mut cfg = ControllerConfig::flash(4, 8);
+    cfg.zero_shards = 2;
+    cfg.failures = vec![
+        FailurePlan { rank: 0, step: 4, phase: Phase::FwdBwd, kind: FailureKind::Network },
+        FailurePlan { rank: 1, step: 4, phase: Phase::FwdBwd, kind: FailureKind::Segfault },
+    ];
+    let report = engine().run(cfg).unwrap();
+    assert_eq!(report.final_step, 8);
+    assert_eq!(report.final_param_divergence, 0.0);
+    let restores: Vec<_> = report
+        .recoveries
+        .iter()
+        .flat_map(|r| r.shard_restores.iter())
+        .collect();
+    assert!(!restores.is_empty(), "flash recovery must stream state");
+    for s in &restores {
+        assert!(s.bytes > 0);
+        assert_ne!(s.source, s.target);
+        // replica-location invariant: source and target share a shard
+        assert_eq!(s.source % 2, s.target % 2, "{s:?}");
+    }
+    // when both ranks fail in one episode, the two lost shards must be
+    // served by two distinct surviving replicas
+    for r in &report.recoveries {
+        if r.failed_ranks.len() == 2 {
+            let mut srcs: Vec<usize> =
+                r.shard_restores.iter().map(|s| s.source).collect();
+            srcs.sort_unstable();
+            srcs.dedup();
+            assert_eq!(srcs.len(), 2, "distinct replica per lost shard: {r:?}");
+        }
+    }
+}
+
+#[test]
 fn whole_dp_group_loss_falls_back_to_checkpoint_path() {
     flashrecovery::require_live_plane!();
     // Paper §III-G limitation 1: if every replica fails simultaneously

@@ -1,0 +1,209 @@
+//! Integration tests for the checkpoint-free restore wire protocol
+//! (DESIGN.md §9): shard-aware streaming restore over real TCP
+//! sockets, source discovery through the epoch-fenced store, and
+//! failure-during-restore abort semantics.
+//!
+//! These run against synthetic snapshots (the `Snapshot` container is
+//! plain host memory), so the full protocol — planner, store
+//! advertise/claim, chunked checksummed streams, epoch fencing —
+//! exercises on every offline CI run with no xla plane required.
+
+use flashrecovery::checkpoint::Snapshot;
+use flashrecovery::comms::state_stream::{EpochFence, RestoreError, StreamConfig};
+use flashrecovery::comms::tcp_store::TcpStoreServer;
+use flashrecovery::config::ParallelismConfig;
+use flashrecovery::coordinator::restore::{
+    bump_epoch, plan_shard_restore, restore_episode, synthetic_snapshot,
+};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+fn replica_states(ranks: &[usize], step: u64, elems: usize) -> BTreeMap<usize, Snapshot> {
+    ranks
+        .iter()
+        .map(|&r| (r, synthetic_snapshot(step, elems)))
+        .collect()
+}
+
+#[test]
+fn one_rank_killed_per_zero_shard_group_restores_from_distinct_replicas() {
+    // The acceptance scenario: dp=8 sharded 4 ways -> four shard
+    // groups of two replicas each. Kill one rank per group; every lost
+    // shard must be restored from the surviving replica of the *same*
+    // group — four distinct sources, four parallel socket transfers —
+    // and every DP-group member must be byte-identical afterwards.
+    let par = ParallelismConfig::dp(8).with_zero(4);
+    let lost = vec![0usize, 1, 2, 3];
+    let survivors: Vec<usize> = (4..8).collect();
+    let step = 11;
+    let survivor_steps: Vec<(usize, u64)> =
+        survivors.iter().map(|&r| (r, step)).collect();
+
+    let plan = plan_shard_restore(&par, &survivor_steps, &lost);
+    assert!(plan.replica_feasible());
+    assert_eq!(plan.transfers.len(), 4, "one parallel transfer per lost shard");
+
+    let states = replica_states(&survivors, step, 12_000);
+    let server = TcpStoreServer::start().unwrap();
+    let fence = EpochFence::new(1);
+    let out = restore_episode(
+        server.addr(),
+        &plan,
+        &states,
+        1,
+        &fence,
+        &StreamConfig::default(),
+    )
+    .unwrap();
+
+    // each lost shard came from a distinct surviving replica of the
+    // same shard group
+    let mut sources: Vec<usize> = out.transfers.iter().map(|t| t.source).collect();
+    sources.sort_unstable();
+    assert_eq!(sources, survivors, "distinct replica per lost shard");
+    for t in &out.transfers {
+        assert_eq!(par.shard_id(t.source), t.shard);
+        assert_eq!(par.shard_id(t.target), t.shard);
+        assert!(t.bytes > 0);
+    }
+
+    // byte-identical state across the whole DP group afterwards — the
+    // param_hash parity the paper's module 3 promises
+    let reference = states[&4].content_hash();
+    assert_eq!(out.restored.len(), 4);
+    for (&rank, snap) in &out.restored {
+        assert_eq!(snap.step, step, "rank {rank} resumed at the wrong step");
+        assert_eq!(
+            snap.content_hash(),
+            reference,
+            "rank {rank} is not a bit-exact replica after restore"
+        );
+    }
+}
+
+#[test]
+fn laggards_and_replacements_restore_in_one_episode() {
+    // Mixed episode: rank 0 died, rank 2 parked one step behind the
+    // resume point. Both stream from the up-to-date survivors, spread
+    // across distinct sources.
+    let par = ParallelismConfig::dp(4);
+    let plan = plan_shard_restore(&par, &[(1, 7), (2, 6), (3, 7)], &[0]);
+    assert_eq!(plan.resume_step, 7);
+    assert_eq!(plan.targets(), vec![0, 2]);
+
+    let mut states = replica_states(&[1, 3], 7, 6_000);
+    states.insert(2, synthetic_snapshot(6, 6_000)); // the laggard
+    let server = TcpStoreServer::start().unwrap();
+    let fence = EpochFence::new(1);
+    let out = restore_episode(
+        server.addr(),
+        &plan,
+        &states,
+        1,
+        &fence,
+        &StreamConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(out.restored.len(), 2);
+    let reference = states[&1].content_hash();
+    for snap in out.restored.values() {
+        assert_eq!(snap.step, 7);
+        assert_eq!(snap.content_hash(), reference);
+    }
+    let sources: Vec<usize> = out.transfers.iter().map(|t| t.source).collect();
+    assert!(sources.contains(&1) && sources.contains(&3), "{sources:?}");
+}
+
+#[test]
+fn mid_restore_epoch_bump_aborts_retryably_then_retry_converges() {
+    // The failure-during-recovery contract end to end: a restore is in
+    // flight (throttled chunks over real sockets) when the epoch is
+    // bumped — every transfer must abort with a *retryable* outcome
+    // promptly (no hang, no torn state), and the retried episode at
+    // the new epoch must converge.
+    let par = ParallelismConfig::dp(4);
+    let lost = vec![0usize];
+    let survivor_steps = vec![(1usize, 5u64), (2, 5), (3, 5)];
+    let plan = plan_shard_restore(&par, &survivor_steps, &lost);
+    let states = replica_states(&[1, 2, 3], 5, 40_000);
+
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+    let fence = EpochFence::new(1);
+
+    let watcher_fence = fence.clone();
+    let watcher = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(25));
+        bump_epoch(addr, &watcher_fence, 2).unwrap()
+    });
+
+    // ~40 chunks x 10ms of mandatory throttle sleeps (>= ~400ms) vs a
+    // 25ms bump: the abort deterministically lands mid-transfer even
+    // on a loaded machine.
+    let throttled = StreamConfig {
+        chunk_bytes: 4 * 1024,
+        throttle: Some(Duration::from_millis(10)),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let err = restore_episode(addr, &plan, &states, 1, &fence, &throttled)
+        .expect_err("epoch bump must abort the in-flight episode");
+    assert_eq!(watcher.join().unwrap(), 2);
+    match err {
+        RestoreError::Superseded { current } => assert_eq!(current, 2),
+        RestoreError::Fatal(e) => panic!("abort must be retryable, got: {e:#}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "abort must be prompt, never a hang"
+    );
+
+    // retry at the new epoch: clean convergence
+    let out = restore_episode(addr, &plan, &states, 2, &fence, &StreamConfig::default())
+        .expect("retry at the bumped epoch must converge");
+    assert_eq!(out.restored.len(), 1);
+    assert_eq!(
+        out.restored[&0].content_hash(),
+        states[&1].content_hash()
+    );
+}
+
+#[test]
+fn claim_blocked_on_dead_source_is_released_by_epoch_bump() {
+    // A target whose source died before advertising must not hang on
+    // the store: the epoch bump releases the claim retryably. Driven
+    // at the episode level by pointing the plan at a source with no
+    // state-serving thread (we simulate by bumping before any
+    // advertisement can matter).
+    let server = TcpStoreServer::start().unwrap();
+    let addr = server.addr();
+    let mut client =
+        flashrecovery::comms::tcp_store::TcpStoreClient::connect(addr).unwrap();
+    let claimer = std::thread::spawn(move || {
+        let mut c =
+            flashrecovery::comms::tcp_store::TcpStoreClient::connect(addr).unwrap();
+        let t0 = Instant::now();
+        let out = c.claim_restore(1, 0x7777).unwrap();
+        (out, t0.elapsed())
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    client.advance_epoch(2).unwrap();
+    let (out, waited) = claimer.join().unwrap();
+    assert_eq!(
+        out,
+        flashrecovery::comms::tcp_store::FencedWait::Superseded { current: 2 }
+    );
+    assert!(waited < Duration::from_secs(30));
+}
+
+#[test]
+fn unsourced_shard_demands_checkpoint_fallback() {
+    // Pure FSDP: the lost shard has no replica anywhere. The planner
+    // must say so (can_recover == false) rather than serving stale or
+    // wrong-shard state.
+    let par = ParallelismConfig::dp(4).with_zero(4);
+    assert!(!par.can_recover(&[1]));
+    let plan = plan_shard_restore(&par, &[(0, 3), (2, 3), (3, 3)], &[1]);
+    assert!(!plan.replica_feasible());
+    assert_eq!(plan.unsourced, vec![par.shard_id(1)]);
+}
