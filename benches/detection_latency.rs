@@ -1,0 +1,51 @@
+//! Scale sweep for active failure detection: leased heartbeats over a
+//! live TCP store at 64 -> 4096 simulated ranks (DESIGN.md §10).
+//!
+//! The lease table runs at full fleet scale (the monitor's O(alive)
+//! scan is part of what is measured); live TCP agents (a fixed worker
+//! sample including the victim) push real `Heartbeat` frames, so the
+//! measured quantity is the wall clock from the victim's last good
+//! heartbeat to the `LeaseMonitor` detection — which the paper claims,
+//! and this bench asserts, is within seconds and independent of
+//! cluster size (heartbeats are O(1) per worker).
+//!
+//! Emits `BENCH_detection_latency.json` (via `BenchReport::write_json`),
+//! the artifact CI's bench gate compares against the committed
+//! baseline in `ci/BENCH_detection_latency.baseline.json`.
+//!
+//!     cargo bench --bench detection_latency
+
+use flashrecovery::coordinator::{detection_sweep, DetectionSweepConfig};
+
+fn main() {
+    let cfg = DetectionSweepConfig::default();
+    let report = detection_sweep(&cfg).expect("detection sweep");
+    report.print();
+    report
+        .write_json("BENCH_detection_latency.json")
+        .expect("write BENCH_detection_latency.json");
+    println!("wrote BENCH_detection_latency.json");
+
+    // ---- asserted properties (the paper's §III-C claim) ---------------
+    let min_scale = *cfg.scales.iter().min().unwrap();
+    let max_scale = *cfg.scales.iter().max().unwrap();
+    let p50 = |n: usize| report.row_values(&format!("n={n}")).expect("row")[0];
+    let (lo, hi) = (p50(min_scale), p50(max_scale));
+    // near-flat: a 64x larger fleet may not cost more than 2x the
+    // detection latency (small absolute p50s get a 5ms noise floor)
+    assert!(
+        hi <= 2.0 * lo + 5.0,
+        "detection p50 not scale-independent: {hi:.2}ms @ {max_scale} vs \
+         {lo:.2}ms @ {min_scale}"
+    );
+    // "within seconds": every scale's p50 far under the 1800s
+    // collective-timeout baseline — and under one second outright
+    for &n in &cfg.scales {
+        let v = p50(n);
+        assert!(v < 1000.0, "detection p50 {v:.1}ms at n={n} not within seconds");
+    }
+    println!(
+        "detection_latency OK: p50 {lo:.2}ms @ {min_scale} -> {hi:.2}ms @ \
+         {max_scale} (<= 2x), O(1) heartbeats/worker"
+    );
+}

@@ -1,11 +1,12 @@
 //! Built-in chaos scenario library.
 //!
-//! Eight parameterized campaigns, from the paper's single-failure
+//! Nine parameterized campaigns, from the paper's single-failure
 //! baseline to compound patterns production fleets actually see
 //! (ByteDance's robust-training report, Unicron): concurrent faults,
 //! rolling cascades, flapping hosts, failures striking mid-recovery,
-//! spare-pool exhaustion, straggler degradation, and failures landing
-//! mid-*restore* (state streams aborted and replanned). Each spec carries
+//! spare-pool exhaustion, straggler degradation, failures landing
+//! mid-*restore* (state streams aborted and replanned), and silent
+//! hangs (alive worker, frozen step tag). Each spec carries
 //! assertions calibrated to the paper-fit latency model — recovery-time
 //! bounds are intentionally scale-independent (the paper's headline
 //! claim), so the same spec passes from 64 to 18k devices.
@@ -18,7 +19,7 @@ use crate::cluster::failure::FailureKind;
 use crate::config::RecoveryMode;
 
 /// Names of all built-in scenarios, in presentation order.
-pub const NAMES: [&str; 8] = [
+pub const NAMES: [&str; 9] = [
     "single_fault",
     "double_fault",
     "rolling_cascade",
@@ -27,6 +28,7 @@ pub const NAMES: [&str; 8] = [
     "spare_exhaustion",
     "straggler_degrade",
     "restore_under_churn",
+    "silent_hang",
 ];
 
 fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
@@ -220,6 +222,43 @@ pub fn restore_under_churn(devices: usize) -> ScenarioSpec {
     s
 }
 
+/// An *alive* worker silently stops making progress — stuck in a
+/// collective, wedged driver, hard straggler — while its liveness
+/// flag stays green. On the simulator path this is a severe straggler
+/// evicted after the patience window; the live hints drive
+/// `chaos::live::drive_live_detection`, where the wire monitor must
+/// catch the frozen step tag via the stall-vs-median rule and chain
+/// detection → group rebuild → shard restore over real sockets
+/// (DESIGN.md §10).
+pub fn silent_hang(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "silent_hang",
+        "Alive-but-stuck worker: frozen step tag caught by DP-median stall detection, evicted, recovered end to end",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    let mut f = FaultSpec {
+        family: FaultFamily::Straggler,
+        at_s: 150.0,
+        slowdown: 4.0,
+        duration_s: 600.0,
+        ..Default::default()
+    };
+    f.rank = Some(1);
+    f.at_step = Some(4);
+    s.faults.push(f);
+    s.live.dp = 4;
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(250.0),
+        max_total_downtime_s: Some(300.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_stragglers_evicted: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
 /// More simultaneous victims than spares: the pool empties, one node
 /// stays failed, and the job degrades gracefully instead of wedging.
 pub fn spare_exhaustion(devices: usize) -> ScenarioSpec {
@@ -292,6 +331,7 @@ pub fn by_name(name: &str, devices: usize) -> Option<ScenarioSpec> {
         "spare_exhaustion" => spare_exhaustion(devices),
         "straggler_degrade" => straggler_degrade(devices),
         "restore_under_churn" => restore_under_churn(devices),
+        "silent_hang" => silent_hang(devices),
         _ => return None,
     })
 }

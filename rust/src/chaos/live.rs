@@ -17,20 +17,25 @@
 use super::engine::AssertionOutcome;
 use super::spec::{FaultFamily, ScenarioSpec};
 use crate::checkpoint::Snapshot;
-use crate::cluster::failure::FailureKind;
+use crate::cluster::failure::{FailureCategory, FailureKind};
 use crate::comms::state_stream::{EpochFence, RestoreError, StreamConfig};
 use crate::comms::tcp_store::TcpStoreServer;
 use crate::config::ParallelismConfig;
+use crate::coordinator::detection::{Detection, LeaseConfig, LeaseMonitor};
 use crate::coordinator::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
 use crate::coordinator::restore::{
     bump_epoch, plan_shard_restore, restore_episode, synthetic_snapshot,
 };
 use crate::coordinator::{ControllerConfig, RankEntry, Ranktable, RunReport};
-use crate::training::worker::{FailurePlan, Phase};
+use crate::training::worker::{
+    kind_code, spawn_heartbeat, FailurePlan, HeartbeatCfg, MonitorBoard, Phase,
+};
 use crate::training::TrainingEngine;
-use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
-use std::time::Duration;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn parse_phase(s: &str) -> Phase {
     match s {
@@ -377,6 +382,308 @@ fn drive_restore_episodes(
     Ok(episodes)
 }
 
+// ------------------------------------------------------------------
+// Live detection: the full detection → rebuild → restore pipeline
+// ------------------------------------------------------------------
+
+/// How one victim presents to the wire-plane monitor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LiveFailureMode {
+    /// Process death: beats stop (hardware kinds push their device
+    /// code in the emitter's dying gasp first).
+    Die,
+    /// Silent hang: the worker stays alive and beating, but its step
+    /// tag freezes while the group advances — detectable only via the
+    /// stall-vs-median rule, never via liveness.
+    Hang,
+}
+
+/// Failure step -> victims `(rank, kind, mode)` for the live driver.
+type DetectionTimeline = BTreeMap<u64, Vec<(usize, FailureKind, LiveFailureMode)>>;
+
+/// Expand the spec's faults into per-step live-detection victims.
+/// Unlike [`live_failure_plans`] (worker `FailurePlan`s), stragglers
+/// are *supported* here: a straggler fault maps to a silent hang, the
+/// failure class this driver exists to exercise.
+fn live_detection_timeline(spec: &ScenarioSpec) -> Result<DetectionTimeline> {
+    let dp = spec.live.dp.max(2);
+    let mut by_step: DetectionTimeline = BTreeMap::new();
+    let mut push = |step: u64, rank: usize, kind: FailureKind, mode: LiveFailureMode| {
+        let v = by_step.entry(step).or_default();
+        if !v.iter().any(|&(r, _, _)| r == rank) {
+            v.push((rank, kind, mode));
+        }
+    };
+    for (i, f) in spec.faults.iter().enumerate() {
+        let rank = |d: usize| f.rank.unwrap_or(d) % dp;
+        let step = f
+            .at_step
+            .with_context(|| format!("fault {i}: live path needs \"at_step\""))?;
+        let kind = f.failure.unwrap_or(FailureKind::Segfault);
+        match f.family {
+            FaultFamily::Crash => push(step, rank(i + 1), kind, LiveFailureMode::Die),
+            FaultFamily::Cascade => {
+                for j in 0..f.nodes {
+                    push(
+                        step + j as u64,
+                        (rank(i + 1) + j) % dp,
+                        kind,
+                        LiveFailureMode::Die,
+                    );
+                }
+            }
+            FaultFamily::Flap => {
+                for j in 0..f.times {
+                    push(
+                        step + j as u64 * f.period_steps.max(1),
+                        rank(i + 1),
+                        kind,
+                        LiveFailureMode::Die,
+                    );
+                }
+            }
+            FaultFamily::Straggler => {
+                push(step, rank(i + 1), FailureKind::Timeout, LiveFailureMode::Hang)
+            }
+            other => bail!(
+                "fault {i}: {:?} has no live detection equivalent — run this \
+                 scenario on the simulator path",
+                other.name()
+            ),
+        }
+    }
+    Ok(by_step)
+}
+
+/// One live detection → rebuild → restore episode.
+#[derive(Debug, Clone)]
+pub struct LiveDetectionOutcome {
+    /// Failure step the episode recovered (spec `at_step`).
+    pub step: u64,
+    /// Rendezvous epoch the episode converged in.
+    pub epoch: u64,
+    /// What the wire monitor reported, in detection order.
+    pub detections: Vec<Detection>,
+    /// Max measured last-good-heartbeat → detection latency (s).
+    pub detection_s: f64,
+    pub rebuild_s: f64,
+    pub restore_s: f64,
+    /// Failure induced → every victim restored, end to end.
+    pub total_s: f64,
+    pub resume_step: u64,
+    /// Ranks restored by the episode.
+    pub restored: Vec<usize>,
+}
+
+/// Drive the spec's failures through the *whole* live pipeline over
+/// real sockets, with no xla dependency (DESIGN.md §10): per failure
+/// step, synthetic worker agents (monitor board + real heartbeat
+/// emitter each) push beats to a live `TcpStoreServer`; the victims
+/// die or silently hang; the [`LeaseMonitor`] detects them on the
+/// wire with a *measured* latency; and the episode chains straight
+/// into an epoch-fenced group rebuild and a shard-aware state restore
+/// on the same store — detection → rendezvous → restore as one
+/// end-to-end episode. Companion of [`drive_group_rebuilds`] and
+/// [`drive_restores`], which exercise the later stages in isolation.
+pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutcome>> {
+    let timeline = live_detection_timeline(spec)?;
+    let dp = spec.live.dp.max(2);
+    let par = ParallelismConfig::dp(dp);
+    let server = TcpStoreServer::start()?;
+    let addr = server.addr();
+    let interval = Duration::from_millis(15);
+    let mut mon = LeaseMonitor::new(LeaseConfig {
+        interval,
+        lease_misses: 3,
+        stall_after: Duration::from_millis(120),
+        stall_margin: 2,
+    });
+    let mut table = Ranktable::new(
+        (0..dp)
+            .map(|rank| RankEntry {
+                rank,
+                node: rank,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 29000 + rank),
+            })
+            .collect(),
+    );
+
+    let mut boards: BTreeMap<usize, Arc<MonitorBoard>> = BTreeMap::new();
+    let mut incarnations: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut emitters: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut next_inc = 0u64;
+    for rank in 0..dp {
+        next_inc += 1;
+        let b = MonitorBoard::new();
+        mon.admit(rank, next_inc, Instant::now());
+        emitters.push(spawn_heartbeat(
+            rank,
+            b.clone(),
+            HeartbeatCfg { store: addr, interval, incarnation: next_inc },
+        ));
+        boards.insert(rank, b);
+        incarnations.insert(rank, next_inc);
+    }
+
+    let mut epoch = 0u64;
+    let mut sim_step = 0u64;
+    let mut outcomes = Vec::with_capacity(timeline.len());
+    for (step, victims) in timeline {
+        // the fleet advances to the failure step; every lease gets a
+        // fresh grace so prior episodes' clocks cannot leak in
+        sim_step = sim_step.max(step);
+        for b in boards.values() {
+            b.step_tag.store(sim_step as i64, Ordering::SeqCst);
+        }
+        let now = Instant::now();
+        for rank in 0..dp {
+            mon.admit(rank, incarnations[&rank], now);
+        }
+
+        // induce the failures
+        let t0 = Instant::now();
+        let mut hang_victims = Vec::new();
+        for &(rank, kind, mode) in &victims {
+            let b = &boards[&rank];
+            match mode {
+                LiveFailureMode::Die => {
+                    if kind.category() == FailureCategory::Hardware {
+                        b.device_error.store(kind_code(kind), Ordering::SeqCst);
+                    }
+                    b.alive.store(false, Ordering::SeqCst);
+                }
+                LiveFailureMode::Hang => hang_victims.push(rank),
+            }
+        }
+
+        // detect on the wire while the survivors keep training
+        let expected: BTreeSet<usize> = victims.iter().map(|&(r, _, _)| r).collect();
+        let mut detections: Vec<Detection> = Vec::new();
+        let deadline = t0 + Duration::from_secs(30);
+        while detections.len() < expected.len() {
+            if Instant::now() > deadline {
+                bail!("live detection timed out at step {step}");
+            }
+            std::thread::sleep(interval);
+            sim_step += 1;
+            for (r, b) in &boards {
+                if !expected.contains(r) {
+                    b.step_tag.store(sim_step as i64, Ordering::SeqCst);
+                }
+            }
+            for beat in server.beats() {
+                mon.observe_beat(&beat);
+            }
+            for d in mon.scan(Instant::now()) {
+                if expected.contains(&d.rank)
+                    && !detections.iter().any(|e| e.rank == d.rank)
+                {
+                    detections.push(d);
+                }
+            }
+        }
+        let detection_s = detections.iter().filter_map(|d| d.latency_s).fold(0.0, f64::max);
+        // a detected hang is evicted: the stuck worker is torn down
+        // like any other victim before its rank is rebuilt
+        for &rank in &hang_victims {
+            boards[&rank].alive.store(false, Ordering::SeqCst);
+        }
+
+        // chain into the rendezvous rebuild on the same store
+        let failed: Vec<usize> = expected.iter().copied().collect();
+        let replacements: Vec<RankEntry> = failed
+            .iter()
+            .map(|&r| RankEntry {
+                rank: r,
+                node: dp + (epoch as usize + 1) * dp + r,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
+            })
+            .collect();
+        let t_rebuild = Instant::now();
+        let out = rebuild_episode(
+            &server,
+            &table,
+            &par,
+            &failed,
+            &replacements,
+            epoch,
+            &EpisodeConfig { live_survivors: dp, ..Default::default() },
+        )?;
+        let rebuild_s = t_rebuild.elapsed().as_secs_f64();
+        epoch = out.epoch;
+        table = out.table.clone();
+
+        // ... and straight into the shard restore at the survivors'
+        // step, still on the same store and epoch
+        let resume = sim_step;
+        let survivor_steps: Vec<(usize, u64)> = (0..dp)
+            .filter(|r| !failed.contains(r))
+            .map(|r| (r, resume))
+            .collect();
+        if survivor_steps.is_empty() {
+            bail!("live detection episode at step {step} left no survivors");
+        }
+        let states: BTreeMap<usize, Snapshot> = survivor_steps
+            .iter()
+            .map(|&(r, _)| (r, synthetic_snapshot(resume, CHAOS_STATE_ELEMS)))
+            .collect();
+        let plan = plan_shard_restore(&par, &survivor_steps, &failed);
+        if !plan.replica_feasible() {
+            bail!("live detection episode at step {step} has unsourced shards");
+        }
+        let t_restore = Instant::now();
+        let fence = EpochFence::new(epoch);
+        let rout = restore_episode(addr, &plan, &states, epoch, &fence, &StreamConfig::default())
+            .map_err(|e| anyhow!("{e}"))?;
+        let restore_s = t_restore.elapsed().as_secs_f64();
+        let reference = states[&plan.transfers[0].source].content_hash();
+        for (rank, snap) in &rout.restored {
+            if snap.content_hash() != reference {
+                bail!("rank {rank} diverged after live-detection restore");
+            }
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+
+        // respawn the victims under fresh incarnations
+        for &rank in &failed {
+            next_inc += 1;
+            let b = MonitorBoard::new();
+            b.step_tag.store(resume as i64, Ordering::SeqCst);
+            mon.admit(rank, next_inc, Instant::now());
+            emitters.push(spawn_heartbeat(
+                rank,
+                b.clone(),
+                HeartbeatCfg { store: addr, interval, incarnation: next_inc },
+            ));
+            boards.insert(rank, b);
+            incarnations.insert(rank, next_inc);
+        }
+
+        outcomes.push(LiveDetectionOutcome {
+            step,
+            epoch,
+            detections,
+            detection_s,
+            rebuild_s,
+            restore_s,
+            total_s,
+            resume_step: rout.resume_step,
+            restored: rout.restored.keys().copied().collect(),
+        });
+    }
+
+    for b in boards.values() {
+        b.alive.store(false, Ordering::SeqCst);
+    }
+    drop(server);
+    for e in emitters {
+        let _ = e.join();
+    }
+    Ok(outcomes)
+}
+
 /// Run the spec's live plan end to end. Fails fast when the live
 /// training plane (real xla + artifacts) is unavailable.
 pub fn run_live(spec: &ScenarioSpec, seed: u64) -> Result<LiveOutcome> {
@@ -392,6 +699,7 @@ pub fn run_live(spec: &ScenarioSpec, seed: u64) -> Result<LiveOutcome> {
 mod tests {
     use super::*;
     use crate::chaos::library;
+    use crate::coordinator::detection::DetectionPath;
 
     #[test]
     fn single_fault_maps_to_one_plan() {
@@ -490,6 +798,80 @@ mod tests {
         assert_eq!(episodes[1].restored, vec![2]);
         assert!(episodes.iter().all(|e| e.aborted_attempts == 0));
         assert!(episodes[1].epoch > episodes[0].epoch);
+    }
+
+    #[test]
+    fn live_detection_recovers_silent_hang_end_to_end() {
+        // The headline §10 semantics: an *alive* worker whose step tag
+        // freezes while the group advances is detected via the
+        // stall-vs-median rule over real sockets (liveness alone can
+        // never see it), then recovered — rendezvous rebuild + shard
+        // restore chained on the same store, one episode end to end.
+        let spec = library::by_name("silent_hang", 256).unwrap();
+        let episodes = drive_live_detection(&spec).unwrap();
+        assert_eq!(episodes.len(), 1);
+        let ep = &episodes[0];
+        assert_eq!(ep.detections.len(), 1);
+        let d = &ep.detections[0];
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.path, DetectionPath::StepStall, "{d:?}");
+        assert_eq!(d.kind, FailureKind::Timeout);
+        assert!(d.latency_s.unwrap() > 0.0, "stall latency must be measured");
+        assert!(ep.detection_s > 0.0 && ep.detection_s < 30.0);
+        assert_eq!(ep.restored, vec![1]);
+        assert_eq!(ep.epoch, 1);
+        assert!(ep.resume_step >= 4, "survivors advanced past the hang");
+        assert!(ep.rebuild_s > 0.0 && ep.restore_s > 0.0);
+    }
+
+    #[test]
+    fn live_detection_measures_lease_expiry_for_process_death() {
+        let spec = library::by_name("single_fault", 256).unwrap();
+        let episodes = drive_live_detection(&spec).unwrap();
+        assert_eq!(episodes.len(), 1);
+        let ep = &episodes[0];
+        let d = &ep.detections[0];
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.path, DetectionPath::LeaseExpiry);
+        assert_eq!(d.kind, FailureKind::Segfault);
+        // measured from the last good heartbeat: at least the lease
+        // (3 x 15ms), never the sampled model's number
+        assert!(ep.detection_s >= 0.045, "measured {}", ep.detection_s);
+        assert_eq!(ep.restored, vec![1]);
+    }
+
+    #[test]
+    fn live_detection_classifies_hardware_kind_via_dying_gasp() {
+        // restore_under_churn's first fault is a Network (hardware)
+        // death, the second a Segfault: the device code pushed in the
+        // emitter's dying gasp must win classification even though
+        // death and report land in the same interval.
+        let spec = library::by_name("restore_under_churn", 256).unwrap();
+        let episodes = drive_live_detection(&spec).unwrap();
+        assert_eq!(episodes.len(), 2);
+        let first = &episodes[0].detections[0];
+        assert_eq!(first.kind, FailureKind::Network, "{first:?}");
+        assert_eq!(first.path, DetectionPath::DevicePlugin);
+        assert!(first.via_device_plugin);
+        let second = &episodes[1].detections[0];
+        assert_eq!(second.kind, FailureKind::Segfault);
+        assert_eq!(second.path, DetectionPath::LeaseExpiry);
+        assert!(episodes[1].epoch > episodes[0].epoch);
+    }
+
+    #[test]
+    fn live_detection_flap_redetects_across_incarnations() {
+        // The same rank dies three times: each replacement's fresh
+        // incarnation must be re-monitored (its predecessor's lease
+        // and reported marks can never mask it).
+        let spec = library::by_name("flaky_node", 256).unwrap();
+        let episodes = drive_live_detection(&spec).unwrap();
+        assert_eq!(episodes.len(), 3);
+        for (i, ep) in episodes.iter().enumerate() {
+            assert_eq!(ep.epoch, i as u64 + 1);
+            assert_eq!(ep.restored.len(), 1);
+            assert_eq!(ep.detections[0].path, DetectionPath::LeaseExpiry);
+        }
     }
 
     #[test]

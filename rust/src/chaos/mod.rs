@@ -14,7 +14,7 @@
 //!   `(spec, seed)` pairs produce byte-identical journals;
 //! * [`engine`] — the campaign interpreter over the calibrated cluster
 //!   simulator (shared protocol math with `cluster::scenario`);
-//! * [`library`] — eight built-in scenarios from the paper baseline to
+//! * [`library`] — nine built-in scenarios from the paper baseline to
 //!   compound production patterns;
 //! * [`live`] — the same specs driven against the real in-process
 //!   training plane (controller + worker threads) via scripted
@@ -35,8 +35,8 @@ pub use engine::{
 };
 pub use journal::Journal;
 pub use live::{
-    controller_config, drive_group_rebuilds, drive_restores,
+    controller_config, drive_group_rebuilds, drive_live_detection, drive_restores,
     drive_restores_under_churn, evaluate_live, live_failure_plans, run_live,
-    LiveOutcome, LiveRestoreOutcome,
+    LiveDetectionOutcome, LiveOutcome, LiveRestoreOutcome,
 };
 pub use spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, ScenarioSpec};

@@ -102,6 +102,254 @@ impl Read for SnapshotStream<'_> {
     }
 }
 
+/// Incremental (push-based) snapshot decoder — the receive-side dual
+/// of [`SnapshotStream`]. Feed verified byte runs in arrival order
+/// ([`SnapshotDecoder::push`]) and close with
+/// [`SnapshotDecoder::finish`]; the decoder parses fields in place, so
+/// its own buffering never exceeds a few dozen bytes (one fixed-size
+/// field plus sub-word carries) no matter how the stream was chunked —
+/// a receiver's peak memory is the decoded tensors themselves plus one
+/// in-flight chunk, not encoded + decoded at once (DESIGN.md §9).
+///
+/// Checksum discipline is identical to [`read_snapshot_from`]: the
+/// trailing word-wise hash is verified over the same per-field
+/// segmentation, with multi-word tensor data folded in 8-byte-aligned
+/// runs (boundary-stable, see `util::hash::fnv1a`).
+pub struct SnapshotDecoder {
+    hash: u64,
+    state: DecodeState,
+    /// Partial fixed-size field (header / tensor length / trailer).
+    pending: Vec<u8>,
+    step: u64,
+    tensors: Vec<Vec<f32>>,
+    tensors_expected: usize,
+    /// Bytes of the current tensor's data still to arrive.
+    data_left: usize,
+    tensor: Vec<f32>,
+    /// Partial f32 carried across pushes (< 4 bytes).
+    f32_carry: [u8; 4],
+    f32_carry_len: usize,
+    /// Partial hash word carried across pushes (< 8 bytes).
+    hash_carry: [u8; 8],
+    hash_carry_len: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DecodeState {
+    Header,
+    TensorLen,
+    TensorData,
+    Trailer,
+    Done,
+}
+
+impl SnapshotDecoder {
+    pub fn new() -> Self {
+        SnapshotDecoder {
+            hash: FNV_OFFSET,
+            state: DecodeState::Header,
+            pending: Vec::with_capacity(24),
+            step: 0,
+            tensors: Vec::new(),
+            tensors_expected: 0,
+            data_left: 0,
+            tensor: Vec::new(),
+            f32_carry: [0; 4],
+            f32_carry_len: 0,
+            hash_carry: [0; 8],
+            hash_carry_len: 0,
+        }
+    }
+
+    /// Bytes the decoder itself is buffering (excludes the decoded
+    /// tensors, which are the output) — bounded by one fixed-size
+    /// field plus the sub-word carries; asserted in tests.
+    pub fn buffered_bytes(&self) -> usize {
+        self.pending.len() + self.f32_carry_len + self.hash_carry_len
+    }
+
+    /// Accumulate into `pending` until it holds `need` bytes; returns
+    /// the number of input bytes consumed, and whether the field is
+    /// now complete.
+    fn fill_pending(&mut self, data: &[u8], need: usize) -> (usize, bool) {
+        let take = data.len().min(need - self.pending.len());
+        self.pending.extend_from_slice(&data[..take]);
+        (take, self.pending.len() == need)
+    }
+
+    /// Fold a run of the current tensor's data bytes into the field
+    /// hash, preserving 8-byte alignment across pushes. `last` marks
+    /// the end of the tensor's data, where the (< 8 byte) remainder is
+    /// folded exactly as the contiguous reference would.
+    fn hash_data(&mut self, mut run: &[u8], last: bool) {
+        if self.hash_carry_len > 0 {
+            let take = run.len().min(8 - self.hash_carry_len);
+            self.hash_carry[self.hash_carry_len..self.hash_carry_len + take]
+                .copy_from_slice(&run[..take]);
+            self.hash_carry_len += take;
+            run = &run[take..];
+            if self.hash_carry_len == 8 {
+                self.hash = fnv1a(&self.hash_carry, self.hash);
+                self.hash_carry_len = 0;
+            }
+        }
+        let aligned = run.len() & !7;
+        if aligned > 0 {
+            self.hash = fnv1a(&run[..aligned], self.hash);
+        }
+        let rest = &run[aligned..];
+        self.hash_carry[self.hash_carry_len..self.hash_carry_len + rest.len()]
+            .copy_from_slice(rest);
+        self.hash_carry_len += rest.len();
+        if last && self.hash_carry_len > 0 {
+            self.hash = fnv1a(&self.hash_carry[..self.hash_carry_len], self.hash);
+            self.hash_carry_len = 0;
+        }
+    }
+
+    /// Feed the next run of stream bytes, in order.
+    pub fn push(&mut self, mut data: &[u8]) -> Result<()> {
+        while !data.is_empty() {
+            match self.state {
+                DecodeState::Header => {
+                    let (used, complete) = self.fill_pending(data, 24);
+                    data = &data[used..];
+                    if !complete {
+                        continue;
+                    }
+                    let buf = std::mem::take(&mut self.pending);
+                    if &buf[0..4] != MAGIC {
+                        bail!("bad checkpoint magic");
+                    }
+                    // field-by-field, matching the encode side
+                    for (from, to) in [(0, 4), (4, 8), (8, 16), (16, 24)] {
+                        self.hash = fnv1a(&buf[from..to], self.hash);
+                    }
+                    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+                    if version != VERSION {
+                        bail!("unsupported checkpoint version {version}");
+                    }
+                    self.step = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+                    let count = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+                    if count > 1_000_000 {
+                        bail!("implausible tensor count {count}");
+                    }
+                    self.tensors_expected = count;
+                    self.pending = buf; // reuse the allocation
+                    self.pending.clear();
+                    self.state = if count == 0 {
+                        DecodeState::Trailer
+                    } else {
+                        DecodeState::TensorLen
+                    };
+                }
+                DecodeState::TensorLen => {
+                    let (used, complete) = self.fill_pending(data, 8);
+                    data = &data[used..];
+                    if !complete {
+                        continue;
+                    }
+                    self.hash = fnv1a(&self.pending, self.hash);
+                    let len = u64::from_le_bytes(self.pending[..8].try_into().unwrap()) as usize;
+                    self.pending.clear();
+                    if len > (1usize << 33) {
+                        bail!("implausible tensor length {len}");
+                    }
+                    // `len` is only a claim until the trailer hash
+                    // verifies: cap the eager allocation and grow with
+                    // the data that actually arrives
+                    self.tensor = Vec::with_capacity(len.min(1 << 22));
+                    self.data_left = len * 4;
+                    self.state = if len == 0 {
+                        self.finish_tensor();
+                        self.next_after_tensor()
+                    } else {
+                        DecodeState::TensorData
+                    };
+                }
+                DecodeState::TensorData => {
+                    let take = data.len().min(self.data_left);
+                    let (run, rest) = data.split_at(take);
+                    data = rest;
+                    self.data_left -= take;
+                    let last = self.data_left == 0;
+                    self.hash_data(run, last);
+                    // parse f32s in place, carrying < 4-byte fragments
+                    let mut run = run;
+                    if self.f32_carry_len > 0 {
+                        let need = 4 - self.f32_carry_len;
+                        let take = run.len().min(need);
+                        self.f32_carry[self.f32_carry_len..self.f32_carry_len + take]
+                            .copy_from_slice(&run[..take]);
+                        self.f32_carry_len += take;
+                        run = &run[take..];
+                        if self.f32_carry_len == 4 {
+                            self.tensor.push(f32::from_le_bytes(self.f32_carry));
+                            self.f32_carry_len = 0;
+                        }
+                    }
+                    let mut words = run.chunks_exact(4);
+                    for w in &mut words {
+                        self.tensor.push(f32::from_le_bytes(w.try_into().unwrap()));
+                    }
+                    let rem = words.remainder();
+                    self.f32_carry[..rem.len()].copy_from_slice(rem);
+                    self.f32_carry_len = rem.len();
+                    if last {
+                        debug_assert_eq!(self.f32_carry_len, 0);
+                        self.finish_tensor();
+                        self.state = self.next_after_tensor();
+                    }
+                }
+                DecodeState::Trailer => {
+                    let (used, complete) = self.fill_pending(data, 8);
+                    data = &data[used..];
+                    if !complete {
+                        continue;
+                    }
+                    let stored = u64::from_le_bytes(self.pending[..8].try_into().unwrap());
+                    if stored != self.hash {
+                        bail!("checkpoint checksum mismatch (corrupt payload)");
+                    }
+                    self.pending.clear();
+                    self.state = DecodeState::Done;
+                }
+                DecodeState::Done => {
+                    bail!("trailing bytes after snapshot trailer");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_tensor(&mut self) {
+        self.tensors.push(std::mem::take(&mut self.tensor));
+    }
+
+    fn next_after_tensor(&self) -> DecodeState {
+        if self.tensors.len() == self.tensors_expected {
+            DecodeState::Trailer
+        } else {
+            DecodeState::TensorLen
+        }
+    }
+
+    /// Close the stream: errors unless exactly one whole, checksummed
+    /// snapshot was pushed.
+    pub fn finish(self) -> Result<Snapshot> {
+        if self.state != DecodeState::Done {
+            bail!("truncated snapshot stream (state {:?})", self.state);
+        }
+        Ok(Snapshot { step: self.step, tensors: self.tensors })
+    }
+}
+
+impl Default for SnapshotDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Serialize a snapshot into any writer (file persist or a socket).
 pub fn write_snapshot_to<W: Write>(mut w: W, snap: &Snapshot) -> Result<()> {
     let mut stream = SnapshotStream::new(snap);
@@ -218,5 +466,75 @@ mod tests {
             bad[at] ^= 0x08;
             assert!(decode_snapshot(&bad).is_err(), "flip at {at} undetected");
         }
+    }
+
+    /// Push `bytes` through an incremental decoder in runs of `chunk`
+    /// bytes, asserting the decoder's own buffering stays bounded.
+    fn incremental(bytes: &[u8], chunk: usize) -> Result<Snapshot> {
+        let mut dec = SnapshotDecoder::new();
+        for run in bytes.chunks(chunk.max(1)) {
+            dec.push(run)?;
+            assert!(
+                dec.buffered_bytes() < 40,
+                "decoder buffered {} bytes (chunk {chunk})",
+                dec.buffered_bytes()
+            );
+        }
+        dec.finish()
+    }
+
+    #[test]
+    fn incremental_decoder_matches_reference_at_any_granularity() {
+        // multi-tensor snapshot with odd lengths (exercises both the
+        // f32 and the 8-byte hash carries across push boundaries)
+        let s = Snapshot {
+            step: 31,
+            tensors: vec![
+                (0..301).map(|i| i as f32 * 0.25).collect(),
+                vec![],
+                (0..64).map(|i| -(i as f32)).collect(),
+                vec![f32::MIN, f32::MAX, 0.0],
+            ],
+        };
+        let bytes = encode_snapshot(&s);
+        for chunk in [1, 3, 7, 8, 13, 64, 4096, bytes.len()] {
+            assert_eq!(incremental(&bytes, chunk).unwrap(), s, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn incremental_decoder_buffering_is_bounded_by_carries_not_payload() {
+        // DESIGN §9 known limitation, resolved: the receive side used
+        // to buffer the whole encoded payload before decoding (~2x
+        // peak). The incremental decoder holds only a fixed-size field
+        // plus sub-word carries, regardless of snapshot size.
+        let s = Snapshot {
+            step: 7,
+            tensors: vec![vec![1.0; 50_000], vec![2.0; 30_001], vec![3.0; 11]],
+        };
+        let bytes = encode_snapshot(&s);
+        assert!(bytes.len() > 300_000, "need a payload that would hurt to buffer");
+        assert_eq!(incremental(&bytes, 1024).unwrap(), s);
+    }
+
+    #[test]
+    fn incremental_decoder_rejects_corruption_and_truncation() {
+        let s = snap(5);
+        let bytes = encode_snapshot(&s);
+        for at in [0, 9, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x10;
+            assert!(incremental(&bad, 16).is_err(), "flip at {at} undetected");
+        }
+        // truncation at every state boundary fails in finish()
+        for cut in [3, 20, 30, bytes.len() - 1] {
+            let mut dec = SnapshotDecoder::new();
+            dec.push(&bytes[..cut]).unwrap();
+            assert!(dec.finish().is_err(), "truncation at {cut} undetected");
+        }
+        // trailing garbage is rejected eagerly
+        let mut dec = SnapshotDecoder::new();
+        dec.push(&bytes).unwrap();
+        assert!(dec.push(&[0xFF]).is_err());
     }
 }

@@ -376,12 +376,13 @@ pub fn fetch_snapshot<R: Read>(
         )));
     }
 
-    // the header is not checksummed, so treat total_bytes as a claim:
-    // cap the eager allocation and let the buffer grow with verified
-    // chunks instead of trusting an 8-byte field with a multi-GiB
-    // allocation up front
-    let mut bytes =
-        Vec::with_capacity((header.total_bytes as usize).min(8 * 1024 * 1024));
+    // Verified chunks feed the incremental decoder as they arrive
+    // (DESIGN.md §9): the receiver's peak memory is the decoded
+    // tensors plus one chunk buffer — never encoded + decoded at
+    // once, and never a multi-GiB eager allocation off an 8-byte
+    // header field.
+    let mut decoder = codec::SnapshotDecoder::new();
+    let mut received: u64 = 0;
     let mut chained = FNV_OFFSET;
     let mut next_index: u32 = 0;
     let mut payload = vec![0u8; chunk_cap];
@@ -416,14 +417,15 @@ pub fn fetch_snapshot<R: Read>(
                         "chunk {index} checksum mismatch (corrupt transfer)"
                     )));
                 }
-                if bytes.len() as u64 + len as u64 > header.total_bytes {
+                if received + len as u64 > header.total_bytes {
                     return Err(RestoreError::Fatal(anyhow!(
                         "chunks exceed the promised {} bytes (corrupt header)",
                         header.total_bytes
                     )));
                 }
                 chained = fnv1a(&payload[..len], chained);
-                bytes.extend_from_slice(&payload[..len]);
+                decoder.push(&payload[..len]).map_err(RestoreError::Fatal)?;
+                received += len as u64;
                 next_index += 1;
             }
             FRAME_ABORT => {
@@ -457,14 +459,13 @@ pub fn fetch_snapshot<R: Read>(
             }
         }
     }
-    if bytes.len() as u64 != header.total_bytes {
+    if received != header.total_bytes {
         return Err(RestoreError::Fatal(anyhow!(
-            "received {} bytes, header promised {}",
-            bytes.len(),
+            "received {received} bytes, header promised {}",
             header.total_bytes
         )));
     }
-    let snap = codec::decode_snapshot(&bytes).map_err(RestoreError::Fatal)?;
+    let snap = decoder.finish().map_err(RestoreError::Fatal)?;
     if snap.step != header.step {
         return Err(RestoreError::Fatal(anyhow!(
             "payload step {} disagrees with header step {}",
@@ -662,6 +663,25 @@ mod tests {
         assert_eq!(back, s);
         assert_eq!(fstats.chunks, stats.chunks);
         assert_eq!(fstats.bytes, stats.bytes);
+    }
+
+    #[test]
+    fn fetch_decodes_incrementally_with_odd_tensor_sizes() {
+        // Multi-tensor snapshot with word-unaligned tensor lengths
+        // crossing many chunk boundaries: the receive path now feeds
+        // verified chunks straight into the incremental decoder
+        // (bounded receiver memory, DESIGN.md §9) and must agree
+        // bit-for-bit with the reference codec.
+        let t = |n: usize| (0..n).map(|i| (i as f32).sin()).collect::<Vec<f32>>();
+        let s = Snapshot { step: 4, tensors: vec![t(10_001), t(333), t(7), t(0)] };
+        let fence = EpochFence::new(2);
+        let cfg = StreamConfig { chunk_bytes: 4 * 1024, ..Default::default() };
+        let mut wire = Vec::new();
+        let stats = serve_snapshot(&mut wire, &s, shard(), 2, &fence, &cfg).unwrap();
+        assert!(stats.chunks > 5, "must cross many chunk boundaries");
+        let expect = Expect { epoch: 2, shard: shard(), step: Some(4) };
+        let (back, _) = fetch_snapshot(&mut Cursor::new(&wire), &expect, &fence).unwrap();
+        assert_eq!(back, s);
     }
 
     #[test]

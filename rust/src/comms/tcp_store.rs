@@ -16,14 +16,36 @@ use std::collections::HashMap;
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock a store mutex, recovering from poisoning: one panicking
+/// handler thread must degrade to at worst a stale value for *its*
+/// client, never cascade panics into every later request (the map is
+/// plain data — there is no invariant a partial update could tear
+/// that the wire protocol does not already tolerate).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One worker's latest heartbeat as the store recorded it. `at` is the
+/// server's receive clock — lease math never trusts sender timestamps.
+#[derive(Debug, Clone, Copy)]
+pub struct BeatRecord {
+    pub rank: u64,
+    pub incarnation: u64,
+    pub step_tag: i64,
+    pub device_code: i64,
+    pub at: Instant,
+}
 
 #[derive(Default)]
 struct Shared {
     map: Mutex<HashMap<String, Vec<u8>>>,
     counters: Mutex<HashMap<String, i64>>,
+    /// rank -> latest heartbeat (highest incarnation wins).
+    beats: Mutex<HashMap<u64, BeatRecord>>,
     cv: Condvar,
     hellos: AtomicU64,
     /// Rendezvous epoch: fenced waiters registered at an older epoch
@@ -89,7 +111,20 @@ impl TcpStoreServer {
 
     /// Number of keys currently stored.
     pub fn key_count(&self) -> usize {
-        self.shared.map.lock().unwrap().len()
+        lock(&self.shared.map).len()
+    }
+
+    /// Number of live barrier/arrive counters (pruned with the map's
+    /// per-epoch keys on epoch advance).
+    pub fn counter_count(&self) -> usize {
+        lock(&self.shared.counters).len()
+    }
+
+    /// Snapshot of every rank's latest heartbeat record — what the
+    /// controller-side [`crate::coordinator::LeaseMonitor`] consumes
+    /// each scan.
+    pub fn beats(&self) -> Vec<BeatRecord> {
+        lock(&self.shared.beats).values().copied().collect()
     }
 
     /// Current rendezvous epoch (advanced by `AdvanceEpoch`).
@@ -156,16 +191,16 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
             Response::HelloAck
         }
         Request::Set { key, value } => {
-            shared.map.lock().unwrap().insert(key, value);
+            lock(&shared.map).insert(key, value);
             shared.cv.notify_all();
             Response::Ok
         }
-        Request::Get { key } => match shared.map.lock().unwrap().get(&key) {
+        Request::Get { key } => match lock(&shared.map).get(&key) {
             Some(v) => Response::Value(v.clone()),
             None => Response::NotFound,
         },
         Request::Wait { key } => {
-            let mut map = shared.map.lock().unwrap();
+            let mut map = lock(&shared.map);
             loop {
                 if let Some(v) = map.get(&key) {
                     return Response::Value(v.clone());
@@ -176,26 +211,26 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
                 let (guard, _timeout) = shared
                     .cv
                     .wait_timeout(map, Duration::from_millis(100))
-                    .unwrap();
+                    .unwrap_or_else(PoisonError::into_inner);
                 map = guard;
             }
         }
         Request::Add { key, delta } => {
-            let mut counters = shared.counters.lock().unwrap();
+            let mut counters = lock(&shared.counters);
             let v = counters.entry(key).or_insert(0);
             *v += delta;
             Response::Counter(*v)
         }
-        Request::Count => {
-            Response::CountIs(shared.map.lock().unwrap().len() as u64)
-        }
+        Request::Count => Response::CountIs(lock(&shared.map).len() as u64),
         Request::WaitEpoch { key, epoch } => fenced_wait(shared, stop, &key, epoch),
         Request::AdvanceEpoch { to } => {
             let prev = shared.epoch.fetch_max(to, Ordering::SeqCst);
+            let current = prev.max(to);
+            prune_stale_epochs(shared, current);
             // Wake every blocked waiter so stale fenced waits observe
             // the new epoch and return `EpochFenced`.
             shared.cv.notify_all();
-            Response::Counter(prev.max(to) as i64)
+            Response::Counter(current as i64)
         }
         Request::AdvertiseRestore { epoch, tag, addr } => {
             let current = shared.epoch.load(Ordering::SeqCst);
@@ -203,11 +238,7 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
                 // the restore this source belongs to is already stale
                 return Response::EpochFenced { current };
             }
-            shared
-                .map
-                .lock()
-                .unwrap()
-                .insert(restore_key(epoch, tag), addr.into_bytes());
+            lock(&shared.map).insert(restore_key(epoch, tag), addr.into_bytes());
             shared.cv.notify_all();
             Response::Ok
         }
@@ -219,17 +250,72 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
             // the map mutex): either the release key landed first and
             // the abort is a no-op, or the epoch is fenced before any
             // waiter can observe the late release — never a mix.
-            let mut map = shared.map.lock().unwrap();
+            let mut map = lock(&shared.map);
             if map.contains_key(&unless_key) {
                 Response::Counter(0)
             } else {
                 map.insert(tombstone_key, tombstone);
-                shared.epoch.fetch_max(to, Ordering::SeqCst);
+                let prev = shared.epoch.fetch_max(to, Ordering::SeqCst);
+                drop(map);
+                prune_stale_epochs(shared, prev.max(to));
                 shared.cv.notify_all();
                 Response::Counter(1)
             }
         }
+        Request::Heartbeat { rank, incarnation, step_tag, device_code } => {
+            let mut beats = lock(&shared.beats);
+            let rec = BeatRecord { rank, incarnation, step_tag, device_code, at: Instant::now() };
+            match beats.get(&rank) {
+                // a stale incarnation must never refresh its
+                // replacement's lease
+                Some(old) if old.incarnation > incarnation => {}
+                _ => {
+                    beats.insert(rank, rec);
+                }
+            }
+            Response::Ok
+        }
+        Request::DelPrefix { prefix } => {
+            let mut removed = 0i64;
+            let mut map = lock(&shared.map);
+            map.retain(|k, _| {
+                let keep = !k.starts_with(&prefix);
+                removed += i64::from(!keep);
+                keep
+            });
+            drop(map);
+            let mut counters = lock(&shared.counters);
+            counters.retain(|k, _| {
+                let keep = !k.starts_with(&prefix);
+                removed += i64::from(!keep);
+                keep
+            });
+            Response::Counter(removed)
+        }
     }
+}
+
+/// Drop every per-epoch rendezvous/restore key (and arrive counter)
+/// for epochs `<= current - 2`. Only epoch `e-1` is ever needed for
+/// late resync (DESIGN.md §8), so epoch advance keeps the store's key
+/// count bounded by two epochs' worth instead of leaking one key set
+/// per recovery forever.
+fn prune_stale_epochs(shared: &Shared, current: u64) {
+    let keep_from = current.saturating_sub(1);
+    let stale = |key: &str| -> bool {
+        for prefix in ["rdzv/", "restore/"] {
+            if let Some(rest) = key.strip_prefix(prefix) {
+                if let Some((e, _)) = rest.split_once('/') {
+                    if let Ok(e) = e.parse::<u64>() {
+                        return e < keep_from;
+                    }
+                }
+            }
+        }
+        false
+    };
+    lock(&shared.map).retain(|k, _| !stale(k));
+    lock(&shared.counters).retain(|k, _| !stale(k));
 }
 
 /// Store key under which a restore source's endpoint is advertised.
@@ -240,7 +326,7 @@ fn restore_key(epoch: u64, tag: u64) -> String {
 /// Block until `key` is published or the rendezvous epoch passes
 /// `epoch` — the shared body of `WaitEpoch` and `ClaimRestore`.
 fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Response {
-    let mut map = shared.map.lock().unwrap();
+    let mut map = lock(&shared.map);
     loop {
         let current = shared.epoch.load(Ordering::SeqCst);
         if current > epoch {
@@ -255,7 +341,7 @@ fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Res
         let (guard, _timeout) = shared
             .cv
             .wait_timeout(map, Duration::from_millis(100))
-            .unwrap();
+            .unwrap_or_else(PoisonError::into_inner);
         map = guard;
     }
 }
@@ -404,6 +490,32 @@ impl TcpStoreClient {
         };
         match self.call(req)? {
             Response::Counter(v) => Ok(v == 1),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Push one liveness beat for `(rank, incarnation)`. Fire-and-ack:
+    /// one round trip, O(1) payload — the per-worker cost the
+    /// detection-latency bench asserts is scale-independent.
+    pub fn heartbeat(
+        &mut self,
+        rank: u64,
+        incarnation: u64,
+        step_tag: i64,
+        device_code: i64,
+    ) -> Result<()> {
+        let req = Request::Heartbeat { rank, incarnation, step_tag, device_code };
+        match self.call(req)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Delete every key (and counter) starting with `prefix`; returns
+    /// how many entries were removed.
+    pub fn del_prefix(&mut self, prefix: &str) -> Result<i64> {
+        match self.call(Request::DelPrefix { prefix: prefix.into() })? {
+            Response::Counter(v) => Ok(v),
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -661,6 +773,103 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         drop(server);
         assert!(waiter.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn poisoned_map_still_answers_requests() {
+        // Regression (DESIGN §10 hardening): a panicking handler
+        // thread used to poison the map mutex and turn every later
+        // `.lock().unwrap()` into a cascading panic — one bad client
+        // killed the whole control plane. The guard is now recovered.
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.set("pre", b"survives").unwrap();
+
+        let sh = server.shared.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = sh.map.lock().unwrap();
+            panic!("poison the map mutex (expected panic)");
+        })
+        .join();
+        assert!(server.shared.map.is_poisoned(), "setup: mutex must be poisoned");
+
+        assert_eq!(c.get("pre").unwrap().as_deref(), Some(&b"survives"[..]));
+        c.set("post", b"v").unwrap();
+        assert_eq!(c.get("post").unwrap().as_deref(), Some(&b"v"[..]));
+        assert_eq!(server.key_count(), 2);
+        // fenced waits cross the same mutex + condvar
+        c.advance_epoch(1).unwrap();
+        assert_eq!(
+            c.wait_epoch("absent", 0).unwrap(),
+            FencedWait::Superseded { current: 1 }
+        );
+    }
+
+    #[test]
+    fn heartbeat_upserts_latest_beat_per_rank() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.heartbeat(3, 1, 7, -1).unwrap();
+        c.heartbeat(3, 1, 8, -1).unwrap();
+        c.heartbeat(9, 2, 0, 4).unwrap();
+        let beats = server.beats();
+        assert_eq!(beats.len(), 2);
+        let b3 = beats.iter().find(|b| b.rank == 3).unwrap();
+        assert_eq!((b3.incarnation, b3.step_tag, b3.device_code), (1, 8, -1));
+        let b9 = beats.iter().find(|b| b.rank == 9).unwrap();
+        assert_eq!((b9.incarnation, b9.step_tag, b9.device_code), (2, 0, 4));
+    }
+
+    #[test]
+    fn stale_incarnation_beat_cannot_refresh_replacement_lease() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.heartbeat(5, 2, 10, -1).unwrap(); // replacement, incarnation 2
+        c.heartbeat(5, 1, 99, -1).unwrap(); // zombie predecessor
+        let beats = server.beats();
+        let b = beats.iter().find(|b| b.rank == 5).unwrap();
+        assert_eq!((b.incarnation, b.step_tag), (2, 10));
+    }
+
+    #[test]
+    fn del_prefix_removes_keys_and_counters() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.set("rdzv/1/delta", b"d").unwrap();
+        c.set("rdzv/1/table", b"t").unwrap();
+        c.set("rdzv/2/delta", b"d").unwrap();
+        c.add("rdzv/1/arrived", 1).unwrap();
+        assert_eq!(c.del_prefix("rdzv/1/").unwrap(), 3);
+        assert_eq!(c.get("rdzv/1/delta").unwrap(), None);
+        assert_eq!(c.get("rdzv/2/delta").unwrap().as_deref(), Some(&b"d"[..]));
+        assert_eq!(c.del_prefix("nothing/").unwrap(), 0);
+    }
+
+    #[test]
+    fn epoch_advance_prunes_epochs_two_behind() {
+        // DESIGN §8 known limitation, resolved: per-epoch keys used to
+        // be retained forever. Advancing to epoch e drops every
+        // rdzv/restore key of epochs <= e-2; e and e-1 (late resync)
+        // stay.
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        for e in 1..=4u64 {
+            c.set(&format!("rdzv/{e}/delta"), b"d").unwrap();
+            c.set(&format!("rdzv/{e}/table"), b"t").unwrap();
+            c.set(&format!("restore/{e}/00ff"), b"a").unwrap();
+            c.add(&format!("rdzv/{e}/arrived"), 1).unwrap();
+        }
+        c.set("ranktable/v1", b"keep").unwrap();
+        c.advance_epoch(4).unwrap();
+        // epochs 1 and 2 pruned, 3 and 4 retained, non-epoch keys kept
+        assert_eq!(c.get("rdzv/1/delta").unwrap(), None);
+        assert_eq!(c.get("rdzv/2/table").unwrap(), None);
+        assert_eq!(c.get("restore/2/00ff").unwrap(), None);
+        assert!(c.get("rdzv/3/delta").unwrap().is_some());
+        assert!(c.get("rdzv/4/table").unwrap().is_some());
+        assert!(c.get("ranktable/v1").unwrap().is_some());
+        assert_eq!(server.key_count(), 1 + 2 * 3);
+        assert_eq!(server.counter_count(), 2);
     }
 
     #[test]

@@ -52,6 +52,23 @@ pub enum Request {
         tombstone: Vec<u8>,
         to: u64,
     },
+    /// one worker liveness beat (the paper's monitoring process +
+    /// device plugin on the wire, DESIGN.md §10): upserts the rank's
+    /// beat record keyed by `(rank, incarnation)` — a beat from a
+    /// stale incarnation is dropped, so a replacement's lease can
+    /// never be refreshed by its dead predecessor -> Ok
+    Heartbeat {
+        rank: u64,
+        incarnation: u64,
+        /// Paper step tag: i / -1 / i+1 (stall detection input).
+        step_tag: i64,
+        /// Device-plugin hardware report: -1 = none, else a
+        /// `FailureKind` discriminant.
+        device_code: i64,
+    },
+    /// delete every key starting with `prefix` -> Counter(removed).
+    /// The pruning primitive behind bounded per-epoch key retention.
+    DelPrefix { prefix: String },
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -149,6 +166,17 @@ impl Request {
                 put_bytes(&mut body, tombstone);
                 body.extend_from_slice(&to.to_le_bytes());
             }
+            Request::Heartbeat { rank, incarnation, step_tag, device_code } => {
+                body.push(11);
+                body.extend_from_slice(&rank.to_le_bytes());
+                body.extend_from_slice(&incarnation.to_le_bytes());
+                body.extend_from_slice(&step_tag.to_le_bytes());
+                body.extend_from_slice(&device_code.to_le_bytes());
+            }
+            Request::DelPrefix { prefix } => {
+                body.push(12);
+                put_bytes(&mut body, prefix.as_bytes());
+            }
         }
         frame(body)
     }
@@ -224,6 +252,19 @@ impl Request {
                 let to = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
                 Ok(Request::AbortEpoch { unless_key, tombstone_key, tombstone, to })
             }
+            Some(11) => {
+                if pos + 32 > body.len() {
+                    bail!("frame underrun");
+                }
+                let u = |at: usize| u64::from_le_bytes(body[at..at + 8].try_into().unwrap());
+                Ok(Request::Heartbeat {
+                    rank: u(pos),
+                    incarnation: u(pos + 8),
+                    step_tag: u(pos + 16) as i64,
+                    device_code: u(pos + 24) as i64,
+                })
+            }
+            Some(12) => Ok(Request::DelPrefix { prefix: get_string(body, &mut pos)? }),
             other => bail!("bad request opcode {other:?}"),
         }
     }
@@ -357,6 +398,19 @@ mod tests {
             tombstone: b"!abort".to_vec(),
             to: 5,
         });
+        roundtrip_req(Request::Heartbeat {
+            rank: 4096,
+            incarnation: u64::MAX,
+            step_tag: -1,
+            device_code: 3,
+        });
+        roundtrip_req(Request::Heartbeat {
+            rank: 0,
+            incarnation: 1,
+            step_tag: i64::MAX,
+            device_code: -1,
+        });
+        roundtrip_req(Request::DelPrefix { prefix: "rdzv/3/".into() });
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! training steps through the AOT-compiled PJRT executables; the
 //! collective allreduce is the barrier the step-tag protocol brackets.
 
-use super::detection::HeartbeatMonitor;
+use super::detection::{Detection, HeartbeatMonitor, LeaseConfig, LeaseMonitor};
 use super::events::{RecoveryRecord, RunReport, ShardRestoreStat};
 use super::ranktable::{RankEntry, Ranktable, SharedRanktable};
 use super::rendezvous::{rebuild_episode, EpisodeConfig};
@@ -22,8 +22,8 @@ use crate::runtime::ModelBundle;
 use crate::training::data::{DataConfig, DataIterator};
 use crate::training::state::WorkerState;
 use crate::training::worker::{
-    now_ms, worker_main, FailurePlan, MonitorBoard, WorkerCommand, WorkerCtx,
-    WorkerEvent,
+    now_ms, spawn_heartbeat, worker_main, FailurePlan, HeartbeatCfg, MonitorBoard,
+    WorkerCommand, WorkerCtx, WorkerEvent,
 };
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
@@ -129,6 +129,16 @@ struct WorkerHandle {
     cmd_tx: Sender<WorkerCommand>,
     board: Arc<MonitorBoard>,
     thread: Option<std::thread::JoinHandle<()>>,
+    /// Heartbeat emitter pushing this worker's beats to the live
+    /// plane; `None` when the plane is down. Exits on its own within
+    /// one push interval of the worker's death.
+    hb: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Worker heartbeat push interval: half the controller's scan period
+/// (floored at 5 ms), so a 3-miss lease expires within ~1.5 scans.
+fn hb_emit_interval(cfg: &ControllerConfig) -> Duration {
+    (cfg.heartbeat_interval / 2).max(Duration::from_millis(5))
 }
 
 /// The controller: owns the worker fleet for one training run.
@@ -142,10 +152,14 @@ pub struct Controller {
     workers: BTreeMap<usize, WorkerHandle>,
     ranktable: Ranktable,
     shared_rt: Option<SharedRanktable>,
-    /// Live TCP plane for group reconstruction; `None` when disabled
-    /// or the local bind failed (recovery then degrades to in-place
-    /// ranktable substitution).
+    /// Live TCP plane for group reconstruction, heartbeats, and state
+    /// discovery; `None` when disabled or the local bind failed
+    /// (recovery then degrades to in-place ranktable substitution and
+    /// board-scan detection).
     rebuild_plane: Option<TcpStoreServer>,
+    /// Wire-plane detection over leased heartbeats (DESIGN.md §10);
+    /// present exactly when `rebuild_plane` is.
+    lease: Option<LeaseMonitor>,
     rebuild_epoch: u64,
     report: RunReport,
     stopped: BTreeMap<usize, u64>, // rank -> param hash
@@ -186,6 +200,17 @@ impl Controller {
         } else {
             None
         };
+        let lease = rebuild_plane.as_ref().map(|_| {
+            LeaseMonitor::new(LeaseConfig {
+                interval: hb_emit_interval(&cfg),
+                lease_misses: 3,
+                // slack for slow PJRT steps: lockstep keeps the group
+                // within one tag of the median, so margin 2 plus ten
+                // scan periods of patience cannot false-positive
+                stall_after: cfg.heartbeat_interval * 10,
+                stall_margin: 2,
+            })
+        });
         Ok(Controller {
             bundle,
             cfg,
@@ -197,6 +222,7 @@ impl Controller {
             ranktable,
             shared_rt,
             rebuild_plane,
+            lease,
             rebuild_epoch: 0,
             report: RunReport::default(),
             stopped: BTreeMap::new(),
@@ -253,13 +279,43 @@ impl Controller {
             .name(format!("worker-{rank}"))
             .spawn(move || worker_main(ctx))?;
         self.monitor.watch(rank, board.clone());
+        // Light the wire plane for this worker: open its lease and
+        // spawn the heartbeat emitter under the fresh incarnation.
+        let hb = match (self.lease.as_mut(), self.rebuild_plane.as_ref()) {
+            (Some(lease), Some(server)) => {
+                let inc = self
+                    .monitor
+                    .incarnation_of(rank)
+                    .expect("rank was just watched");
+                lease.admit(rank, inc, Instant::now());
+                Some(spawn_heartbeat(
+                    rank,
+                    board.clone(),
+                    HeartbeatCfg {
+                        store: server.addr(),
+                        interval: hb_emit_interval(&self.cfg),
+                        incarnation: inc,
+                    },
+                ))
+            }
+            _ => None,
+        };
         if let Some(old) = self.workers.insert(
             rank,
-            WorkerHandle { rank, cmd_tx, board, thread: Some(thread) },
+            WorkerHandle { rank, cmd_tx, board, thread: Some(thread), hb },
         ) {
-            // join the previous (dead) thread for this rank
-            if let Some(t) = old.thread {
+            // Join the previous worker thread and its emitter. Drop
+            // the command sender *first*: a stall-detected worker is
+            // dead to the cluster but its thread may still be parked,
+            // and a parked worker only exits once its channel closes —
+            // joining while holding the sender would deadlock.
+            let WorkerHandle { cmd_tx: old_tx, thread: old_thread, hb: old_hb, .. } = old;
+            drop(old_tx);
+            if let Some(t) = old_thread {
                 let _ = t.join();
+            }
+            if let Some(h) = old_hb {
+                let _ = h.join();
             }
         }
         Ok(())
@@ -305,12 +361,28 @@ impl Controller {
             // ---- heartbeat scan (detection) ---------------------------
             if last_scan.elapsed() >= self.cfg.heartbeat_interval {
                 last_scan = Instant::now();
-                let detections: Vec<_> = self
-                    .monitor
-                    .scan()
+                // wire plane first (measured latencies), board scan as
+                // the authoritative fallback; dedup by rank
+                let mut detections = self.wire_scan();
+                for d in self.monitor.scan() {
+                    if !detections.iter().any(|e| e.rank == d.rank) {
+                        detections.push(d);
+                    }
+                }
+                let mut detections: Vec<_> = detections
                     .into_iter()
                     .filter(|d| !self.stopped.contains_key(&d.rank))
                     .collect();
+                // board detections that won the race still get the
+                // wire plane's measured last-good-beat gap
+                if let Some(lease) = self.lease.as_ref() {
+                    let now = Instant::now();
+                    for d in detections.iter_mut() {
+                        if d.latency_s.is_none() {
+                            d.latency_s = lease.since_last_beat(d.rank, now);
+                        }
+                    }
+                }
                 if !detections.is_empty() {
                     let dead: Vec<usize> =
                         detections.iter().map(|d| d.rank).collect();
@@ -328,6 +400,9 @@ impl Controller {
         for (_, w) in self.workers.iter_mut() {
             if let Some(t) = w.thread.take() {
                 let _ = t.join();
+            }
+            if let Some(h) = w.hb.take() {
+                let _ = h.join();
             }
         }
         let hashes: Vec<u64> = self.stopped.values().copied().collect();
@@ -361,6 +436,21 @@ impl Controller {
         *self.plans_fired.entry(rank).or_insert(0) += 1;
     }
 
+    /// Scan the live heartbeat plane (when up): drain the store's
+    /// beat records into the lease monitor and return new wire
+    /// detections — lease expiries, pushed device codes, and step-tag
+    /// stalls the board scan cannot see.
+    fn wire_scan(&mut self) -> Vec<Detection> {
+        let (lease, server) = match (self.lease.as_mut(), self.rebuild_plane.as_ref()) {
+            (Some(lease), Some(server)) => (lease, server),
+            _ => return Vec::new(),
+        };
+        for b in server.beats() {
+            lease.observe_beat(&b);
+        }
+        lease.scan(Instant::now())
+    }
+
     fn handle_event(&mut self, ev: WorkerEvent) {
         match ev {
             WorkerEvent::Loss { rank, step, loss } => {
@@ -378,6 +468,9 @@ impl Controller {
             WorkerEvent::Stopped { rank, param_hash, .. } => {
                 self.stopped.insert(rank, param_hash);
                 self.monitor.unwatch(rank);
+                if let Some(lease) = self.lease.as_mut() {
+                    lease.evict(rank);
+                }
             }
             WorkerEvent::CheckpointTaken { k0_s, .. } => {
                 self.report.checkpoints_taken += 1;
@@ -443,10 +536,17 @@ impl Controller {
     fn flash_recover(&mut self, detections: &[super::detection::Detection]) -> Result<()> {
         let t_aware = Instant::now();
         let mut dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
-        let detection_s = self
-            .first_death_ms(&dead)
-            .map(|d_ms| (now_ms().saturating_sub(d_ms)) as f64 / 1e3)
-            .unwrap_or(0.0);
+        // Detection latency: *measured* on the wire (last good
+        // heartbeat -> detection) whenever the live plane is up; the
+        // in-process boards' ground-truth death stamps only when it
+        // is not (DESIGN.md §10).
+        let measured = detections.iter().filter_map(|d| d.latency_s).reduce(f64::max);
+        let detection_measured = measured.is_some();
+        let detection_s = measured.unwrap_or_else(|| {
+            self.first_death_ms(&dead)
+                .map(|d_ms| (now_ms().saturating_sub(d_ms)) as f64 / 1e3)
+                .unwrap_or(0.0)
+        });
 
         // 1. stop/clean/reset: poison the collective so survivors park.
         self.collective.poison();
@@ -616,6 +716,18 @@ impl Controller {
         for rank in 0..self.cfg.dp {
             self.send(rank, WorkerCommand::Continue { resume_step })?;
         }
+        // The recovered fleet gets a fresh lease grace: beats pushed
+        // while workers sat parked carried frozen (pre-restore) tags,
+        // which must not feed the stall detector as if they were
+        // training-time silence.
+        if let Some(lease) = self.lease.as_mut() {
+            let now = Instant::now();
+            for rank in 0..self.cfg.dp {
+                if let Some(inc) = self.monitor.incarnation_of(rank) {
+                    lease.admit(rank, inc, now);
+                }
+            }
+        }
 
         let restart_s = t_aware.elapsed().as_secs_f64();
         self.report.recoveries.push(RecoveryRecord {
@@ -627,6 +739,7 @@ impl Controller {
             resume_step,
             lost_steps: 0, // checkpoint-free: at most the in-flight step
             detection_s,
+            detection_measured,
             restart_s,
             restore_s,
             rebuild_s,
@@ -689,13 +802,21 @@ impl Controller {
             .max()
             .unwrap_or(0);
 
-        // Indiscriminate teardown: stop every survivor, join all threads.
-        for &r in &survivors {
+        // Indiscriminate teardown: stop everything, join all threads.
+        // Stop goes to every rank (not just survivors): a
+        // stall-detected worker counts as dead but its thread may
+        // still be parked, and it must drain the command before the
+        // join below.
+        let ranks: Vec<usize> = self.workers.keys().copied().collect();
+        for r in ranks {
             let _ = self.send(r, WorkerCommand::Stop);
         }
         for (_, w) in self.workers.iter_mut() {
             if let Some(t) = w.thread.take() {
                 let _ = t.join();
+            }
+            if let Some(h) = w.hb.take() {
+                let _ = h.join();
             }
         }
         // drain Stopped events; these are not "job complete" stops
@@ -756,6 +877,10 @@ impl Controller {
             resume_step,
             lost_steps: failed_at_step.saturating_sub(resume_step),
             detection_s,
+            // vanilla's detection model is the passive collective
+            // timeout; even on a fallback from flash it reports the
+            // boards' ground truth, not a wire measurement
+            detection_measured: false,
             restart_s,
             restore_s,
             rebuild_s: 0.0, // vanilla re-establishes everything from scratch
@@ -782,6 +907,9 @@ impl Controller {
         for (_, w) in self.workers.iter_mut() {
             if let Some(t) = w.thread.take() {
                 let _ = t.join();
+            }
+            if let Some(h) = w.hb.take() {
+                let _ = h.join();
             }
         }
     }

@@ -1,22 +1,67 @@
-//! Active real-time failure detection (paper §III-C).
+//! Active real-time failure detection (paper §III-C; DESIGN.md §10).
 //!
-//! Two detection paths feed the controller:
-//! * **monitoring process** — per-worker liveness (`alive` flag on the
-//!   [`MonitorBoard`]): a dead training process is noticed within one
-//!   heartbeat scan;
-//! * **device plugin** — per-node hardware status (`device_error`):
-//!   hardware failures are reported with their [`FailureKind`]
-//!   immediately, before liveness is even lost.
+//! Two monitors feed the controller:
 //!
-//! This replaces the passive baseline where peers discover a failure
-//! only when a collective hangs into its (default 1800 s) timeout.
+//! * [`HeartbeatMonitor`] — the in-process fallback: per-worker
+//!   liveness (`alive`) and device-plugin (`device_error`) flags on the
+//!   [`MonitorBoard`], scanned every heartbeat interval. Used when the
+//!   live TCP plane is down.
+//! * [`LeaseMonitor`] — detection as a *wire protocol*: every worker
+//!   pushes `Heartbeat {rank, incarnation, step_tag, device_code}` to
+//!   the controller's `TcpStoreServer` on a fixed interval, and the
+//!   monitor derives three failure classes from the beat records:
+//!   1. **device plugin** — a pushed `device_code` reports a hardware
+//!      failure with its [`FailureKind`] before liveness is even lost;
+//!   2. **lease expiry** — no beat within `lease_misses x interval`:
+//!      process/node loss;
+//!   3. **step-tag stall** — a rank whose step tag is frozen
+//!      `stall_after` *and* behind the DP-group median by
+//!      `stall_margin`: a silent hang / hard straggler. This is the
+//!      failure class a liveness flag cannot see at all — a worker
+//!      stuck in a collective keeps `alive == true` forever.
+//!
+//! Every wire detection carries a **measured** latency (last good
+//! heartbeat → detection, on the controller's clock), which is what
+//! `RecoveryRecord.detection_s` reports when the live plane is up —
+//! replacing the passive baseline where peers discover a failure only
+//! when a collective hangs into its (default 1800 s) timeout.
 
 use crate::cluster::failure::FailureKind;
-use crate::training::worker::{kind_from_code, MonitorBoard};
+use crate::comms::tcp_store::{BeatRecord, TcpStoreServer};
+use crate::metrics::bench::BenchReport;
+use crate::metrics::Histogram;
+use crate::training::worker::{
+    kind_from_code, spawn_heartbeat, HeartbeatCfg, MonitorBoard,
+};
+use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Which detection path noticed a failure first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectionPath {
+    /// Hardware error code reported by the device plugin.
+    DevicePlugin,
+    /// In-process liveness flag observed false (board scan fallback).
+    Liveness,
+    /// Heartbeat lease expired on the wire: process/node loss.
+    LeaseExpiry,
+    /// Step tag frozen behind the DP-group median: silent hang.
+    StepStall,
+}
+
+impl DetectionPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DetectionPath::DevicePlugin => "device_plugin",
+            DetectionPath::Liveness => "liveness",
+            DetectionPath::LeaseExpiry => "lease_expiry",
+            DetectionPath::StepStall => "step_stall",
+        }
+    }
+}
 
 /// One detected failure.
 #[derive(Debug, Clone)]
@@ -24,9 +69,280 @@ pub struct Detection {
     pub rank: usize,
     pub kind: FailureKind,
     /// Which path noticed it first.
+    pub path: DetectionPath,
+    /// Legacy alias of `path == DevicePlugin` (recovery records).
     pub via_device_plugin: bool,
+    /// Measured last-good-heartbeat → detection latency, on the
+    /// monitor's clock. `None` for board-scan detections (no wire
+    /// timestamps to measure from).
+    pub latency_s: Option<f64>,
     pub at: Instant,
 }
+
+// ------------------------------------------------------------------
+// Wire-plane detection: leased heartbeats
+// ------------------------------------------------------------------
+
+/// Lease/stall thresholds for the wire monitor, all derived from the
+/// worker push interval.
+#[derive(Debug, Clone, Copy)]
+pub struct LeaseConfig {
+    /// Worker heartbeat push interval.
+    pub interval: Duration,
+    /// Missed intervals before a silent peer is declared lost.
+    pub lease_misses: u32,
+    /// A frozen step tag older than this is a stall *candidate*.
+    pub stall_after: Duration,
+    /// Steps behind the DP-group median before a stall candidate is
+    /// reported. >= 2 tolerates the one-step skew a synchronous DP
+    /// group can legitimately show around the gradient barrier.
+    pub stall_margin: i64,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> Self {
+        LeaseConfig {
+            interval: Duration::from_millis(50),
+            lease_misses: 3,
+            stall_after: Duration::from_millis(500),
+            stall_margin: 2,
+        }
+    }
+}
+
+impl LeaseConfig {
+    /// The liveness lease: beats older than this mean the worker (or
+    /// its node, or its network path) is gone.
+    pub fn lease(&self) -> Duration {
+        self.interval * self.lease_misses.max(1)
+    }
+}
+
+/// One admitted worker's lease state.
+#[derive(Debug, Clone, Copy)]
+struct Lease {
+    incarnation: u64,
+    last_beat: Instant,
+    /// Raw step tag of the last beat (may be -1 mid-optimizer).
+    tag: i64,
+    /// Last non-negative tag — the comparable notion of progress.
+    progress: i64,
+    /// When `tag` last changed (any change resets the stall clock).
+    tag_since: Instant,
+    /// Sticky device-plugin report (-1 = none).
+    device_code: i64,
+}
+
+/// Controller-side monitor over wire heartbeats.
+///
+/// Membership is explicit: [`LeaseMonitor::admit`] opens a lease (with
+/// a fresh grace period) for `(rank, incarnation)` and
+/// [`LeaseMonitor::evict`] closes it; beats for unknown ranks or stale
+/// incarnations are ignored, so a zombie predecessor can never refresh
+/// its replacement's lease and a stopped rank's parting beats are
+/// inert. Bookkeeping mirrors [`HeartbeatMonitor`]: `reported` marks
+/// are keyed by `(rank, incarnation)` and pruned on re-admission.
+pub struct LeaseMonitor {
+    cfg: LeaseConfig,
+    leases: BTreeMap<usize, Lease>,
+    reported: BTreeSet<(usize, u64)>,
+}
+
+impl LeaseMonitor {
+    pub fn new(cfg: LeaseConfig) -> Self {
+        LeaseMonitor { cfg, leases: BTreeMap::new(), reported: BTreeSet::new() }
+    }
+
+    pub fn config(&self) -> &LeaseConfig {
+        &self.cfg
+    }
+
+    /// Open (or reopen) a lease for `(rank, incarnation)` with a grace
+    /// period starting at `now` — the worker has until the lease runs
+    /// out to land its first beat.
+    pub fn admit(&mut self, rank: usize, incarnation: u64, now: Instant) {
+        self.prune_reported(rank);
+        self.leases.insert(
+            rank,
+            Lease {
+                incarnation,
+                last_beat: now,
+                tag: i64::MIN,
+                progress: i64::MIN,
+                tag_since: now,
+                device_code: -1,
+            },
+        );
+    }
+
+    /// Close a rank's lease (clean stop / teardown).
+    pub fn evict(&mut self, rank: usize) {
+        self.leases.remove(&rank);
+        self.prune_reported(rank);
+    }
+
+    fn prune_reported(&mut self, rank: usize) {
+        let stale: Vec<(usize, u64)> = self
+            .reported
+            .range((rank, 0)..=(rank, u64::MAX))
+            .copied()
+            .collect();
+        for key in stale {
+            self.reported.remove(&key);
+        }
+    }
+
+    /// Feed one beat. Beats for unadmitted ranks and stale
+    /// incarnations are dropped; a beat for a *newer* incarnation than
+    /// admitted (shouldn't happen, but the wire is the wire) resets
+    /// the lease.
+    pub fn observe(
+        &mut self,
+        rank: usize,
+        incarnation: u64,
+        step_tag: i64,
+        device_code: i64,
+        at: Instant,
+    ) {
+        let Some(l) = self.leases.get_mut(&rank) else {
+            return;
+        };
+        if incarnation < l.incarnation {
+            return;
+        }
+        if incarnation > l.incarnation {
+            l.incarnation = incarnation;
+            l.last_beat = at;
+            l.tag = step_tag;
+            l.progress = step_tag.max(-1);
+            l.tag_since = at;
+            l.device_code = device_code;
+            return;
+        }
+        if at < l.last_beat {
+            // stale replay (store snapshots are re-drained every
+            // scan, and re-admission must not be backdated by a
+            // pre-grace record): teaches nothing new
+            return;
+        }
+        l.last_beat = at;
+        if step_tag != l.tag {
+            l.tag = step_tag;
+            l.tag_since = at;
+        }
+        if step_tag >= 0 {
+            l.progress = l.progress.max(step_tag);
+        }
+        if device_code >= 0 {
+            // sticky: a device report survives later (raced) beats
+            l.device_code = device_code;
+        }
+    }
+
+    /// Feed one store-recorded beat (the usual path: the controller
+    /// drains `TcpStoreServer::beats` every scan).
+    pub fn observe_beat(&mut self, b: &BeatRecord) {
+        self.observe(b.rank as usize, b.incarnation, b.step_tag, b.device_code, b.at);
+    }
+
+    /// Incarnation currently leased for `rank`.
+    pub fn incarnation_of(&self, rank: usize) -> Option<u64> {
+        self.leases.get(&rank).map(|l| l.incarnation)
+    }
+
+    /// Seconds since `rank`'s last good beat — the measured component
+    /// of `detection_s` even when another path won the detection race.
+    pub fn since_last_beat(&self, rank: usize, now: Instant) -> Option<f64> {
+        self.leases
+            .get(&rank)
+            .map(|l| now.saturating_duration_since(l.last_beat).as_secs_f64())
+    }
+
+    /// Upper median of the unreported ranks' progress tags — the
+    /// group's notion of "where training is".
+    fn median_progress(&self) -> Option<i64> {
+        let mut tags = Vec::with_capacity(self.leases.len());
+        for (&rank, l) in &self.leases {
+            if l.progress >= 0 && !self.reported.contains(&(rank, l.incarnation)) {
+                tags.push(l.progress);
+            }
+        }
+        if tags.is_empty() {
+            return None;
+        }
+        tags.sort_unstable();
+        Some(tags[tags.len() / 2])
+    }
+
+    /// One scan over the lease table: returns any *new* failures.
+    /// Classification precedence per rank: device plugin (a hardware
+    /// report must win even when the lease expired in the same
+    /// interval — the misclassification race), then lease expiry, then
+    /// step-tag stall.
+    pub fn scan(&mut self, now: Instant) -> Vec<Detection> {
+        let lease = self.cfg.lease();
+        let median = self.median_progress();
+        let mut out = Vec::new();
+        let mut newly_reported = Vec::new();
+        for (&rank, l) in &self.leases {
+            if self.reported.contains(&(rank, l.incarnation)) {
+                continue;
+            }
+            let silent_for = now.saturating_duration_since(l.last_beat);
+            if l.device_code >= 0 {
+                out.push(Detection {
+                    rank,
+                    kind: kind_from_code(l.device_code).unwrap_or(FailureKind::HardwareOther),
+                    path: DetectionPath::DevicePlugin,
+                    via_device_plugin: true,
+                    latency_s: Some(silent_for.as_secs_f64()),
+                    at: now,
+                });
+                newly_reported.push((rank, l.incarnation));
+                continue;
+            }
+            if silent_for > lease {
+                // Process lost with no hardware report: classified as
+                // a software failure by the monitoring process.
+                out.push(Detection {
+                    rank,
+                    kind: FailureKind::Segfault,
+                    path: DetectionPath::LeaseExpiry,
+                    via_device_plugin: false,
+                    latency_s: Some(silent_for.as_secs_f64()),
+                    at: now,
+                });
+                newly_reported.push((rank, l.incarnation));
+                continue;
+            }
+            if let Some(m) = median {
+                let frozen_for = now.saturating_duration_since(l.tag_since);
+                if l.progress >= 0
+                    && frozen_for > self.cfg.stall_after
+                    && m - l.progress >= self.cfg.stall_margin
+                {
+                    // Alive but not making progress while the group
+                    // moves on: silent hang / hard straggler.
+                    out.push(Detection {
+                        rank,
+                        kind: FailureKind::Timeout,
+                        path: DetectionPath::StepStall,
+                        via_device_plugin: false,
+                        latency_s: Some(frozen_for.as_secs_f64()),
+                        at: now,
+                    });
+                    newly_reported.push((rank, l.incarnation));
+                }
+            }
+        }
+        self.reported.extend(newly_reported);
+        out
+    }
+}
+
+// ------------------------------------------------------------------
+// In-process fallback: board scans
+// ------------------------------------------------------------------
 
 /// Scans all workers' monitor boards every heartbeat interval.
 ///
@@ -102,7 +418,9 @@ impl HeartbeatMonitor {
                 out.push(Detection {
                     rank,
                     kind: kind_from_code(code).unwrap_or(FailureKind::HardwareOther),
+                    path: DetectionPath::DevicePlugin,
                     via_device_plugin: true,
+                    latency_s: None,
                     at: now,
                 });
                 newly_reported.push((rank, *inc));
@@ -114,7 +432,9 @@ impl HeartbeatMonitor {
                 out.push(Detection {
                     rank,
                     kind: FailureKind::Segfault,
+                    path: DetectionPath::Liveness,
                     via_device_plugin: false,
+                    latency_s: None,
                     at: now,
                 });
                 newly_reported.push((rank, *inc));
@@ -144,6 +464,183 @@ impl Default for HeartbeatMonitor {
     }
 }
 
+// ------------------------------------------------------------------
+// Detection-latency sweep (the `detect-bench` CLI / bench target)
+// ------------------------------------------------------------------
+
+/// Configuration for the detection-latency scale sweep.
+#[derive(Debug, Clone)]
+pub struct DetectionSweepConfig {
+    /// Simulated fleet sizes: the monitor's lease table runs at full
+    /// scale (its O(alive) scan is part of what is measured).
+    pub scales: Vec<usize>,
+    /// Measured kill→detect episodes per scale (+1 discarded warmup).
+    pub samples: u32,
+    /// Ranks driven as *live* wire agents (real heartbeat emitter
+    /// threads over real sockets), victim included. Every worker runs
+    /// the identical O(1)-per-beat protocol, so a fixed sample bounds
+    /// thread/socket count while the lease table scans at full scale —
+    /// the same scale model as the rendezvous sweep (DESIGN.md §8).
+    pub live_agents: usize,
+    /// Heartbeat push interval.
+    pub interval: Duration,
+    /// Missed intervals before lease expiry.
+    pub lease_misses: u32,
+}
+
+impl Default for DetectionSweepConfig {
+    fn default() -> Self {
+        DetectionSweepConfig {
+            scales: vec![64, 256, 1024, 4096],
+            samples: 5,
+            live_agents: 16,
+            interval: Duration::from_millis(20),
+            lease_misses: 5,
+        }
+    }
+}
+
+/// Run the detection-latency scale sweep: per scale, a victim worker
+/// dies (its emitter goes silent) and the wall clock from its last
+/// good heartbeat to the `LeaseMonitor` detection is measured over
+/// real sockets. Column 0 (`p50 ms`) is what CI's bench gate compares
+/// against the committed baseline; flatness across scales is the
+/// paper's "within seconds, independent of cluster size" claim —
+/// heartbeats are O(1) per worker and the scan is O(alive).
+pub fn detection_sweep(cfg: &DetectionSweepConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new(
+        "detection_latency: leased heartbeats over the live TCP plane, scale sweep",
+        &["p50 ms", "mean ms", "max ms", "scan p50 us", "live agents"],
+    );
+    for &n in &cfg.scales {
+        if n < 2 {
+            bail!("sweep scale must be >= 2 ranks (got {n})");
+        }
+        let lease_cfg = LeaseConfig {
+            interval: cfg.interval,
+            lease_misses: cfg.lease_misses,
+            // liveness only: stalls are exercised by tests + the chaos
+            // driver, not this latency sweep
+            stall_after: Duration::from_secs(3600),
+            stall_margin: 2,
+        };
+        let server = TcpStoreServer::start()?;
+        let addr = server.addr();
+        let mut mon = LeaseMonitor::new(lease_cfg);
+        let t_admit = Instant::now();
+        for r in 0..n {
+            mon.admit(r, 1, t_admit);
+        }
+
+        // live wire agents: an evenly-strided sample; the victim is
+        // one of them so its silence is a real absence of packets
+        let live = cfg.live_agents.clamp(2, n);
+        let stride = n / live;
+        let sample: Vec<usize> = (0..live).map(|i| i * stride).collect();
+        let victim = sample[1];
+        let virtuals: Vec<usize> = (0..n).filter(|r| !sample.contains(r)).collect();
+
+        let mut emitters = Vec::new();
+        let mut boards: BTreeMap<usize, Arc<MonitorBoard>> = BTreeMap::new();
+        for &r in &sample {
+            let b = MonitorBoard::new();
+            emitters.push(spawn_heartbeat(
+                r,
+                b.clone(),
+                HeartbeatCfg { store: addr, interval: cfg.interval, incarnation: 1 },
+            ));
+            boards.insert(r, b);
+        }
+
+        let mut h = Histogram::new();
+        let mut scan_h = Histogram::new();
+        let mut incarnation = 1u64;
+        for i in 0..=cfg.samples {
+            // settle: the victim's emitter must have a beat on record
+            std::thread::sleep(cfg.interval);
+            for b in server.beats() {
+                mon.observe_beat(&b);
+            }
+            let _ = mon.scan(Instant::now()); // drain any stragglers
+            // fresh grace for the victim so the episode starts clean
+            mon.admit(victim, incarnation, Instant::now());
+
+            let t0 = Instant::now();
+            boards[&victim].alive.store(false, Ordering::SeqCst);
+            let deadline = t0 + Duration::from_secs(30);
+            let latency_s = loop {
+                if Instant::now() > deadline {
+                    bail!("detection timed out at n={n}");
+                }
+                let now = Instant::now();
+                // virtual ranks' beats keep flowing (full-scale lease
+                // table churn — the O(alive) cost under test)
+                for &r in &virtuals {
+                    mon.observe(r, 1, 0, -1, now);
+                }
+                for b in server.beats() {
+                    mon.observe_beat(&b);
+                }
+                let t_scan = Instant::now();
+                let ds = mon.scan(Instant::now());
+                scan_h.record(t_scan.elapsed().as_secs_f64());
+                if let Some(d) = ds.iter().find(|d| d.rank == victim) {
+                    break d.latency_s.unwrap_or_else(|| t0.elapsed().as_secs_f64());
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            };
+            if i > 0 {
+                // episode 0 is warmup (server threads, allocator)
+                h.record(latency_s);
+            }
+            if i == cfg.samples {
+                break; // last episode: no revive, teardown follows
+            }
+            // revive the victim under a new incarnation
+            incarnation += 1;
+            let b = MonitorBoard::new();
+            emitters.push(spawn_heartbeat(
+                victim,
+                b.clone(),
+                HeartbeatCfg { store: addr, interval: cfg.interval, incarnation },
+            ));
+            boards.insert(victim, b);
+            mon.admit(victim, incarnation, Instant::now());
+        }
+        for b in boards.values() {
+            b.alive.store(false, Ordering::SeqCst);
+        }
+        drop(server);
+        for e in emitters {
+            let _ = e.join();
+        }
+        report.row(
+            format!("n={n}"),
+            vec![
+                h.p50() * 1e3,
+                h.mean() * 1e3,
+                h.max() * 1e3,
+                scan_h.p50() * 1e6,
+                live as f64,
+            ],
+        );
+    }
+    report.note(format!(
+        "{} samples/scale (+1 warmup); lease = {} x {:?}; latency measured \
+         last-good-heartbeat -> detection over real sockets; lease table at \
+         full scale, {} live emitters",
+        cfg.samples,
+        cfg.lease_misses,
+        cfg.interval,
+        cfg.live_agents
+    ));
+    report.note(
+        "scale-independence: beats are O(1)/worker, the scan O(alive) — p50 \
+         stays within 2x from the smallest to the largest scale",
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +668,8 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].rank, 3);
         assert!(!d[0].via_device_plugin);
+        assert_eq!(d[0].path, DetectionPath::Liveness);
+        assert_eq!(d[0].latency_s, None);
         // reported once only
         assert!(mon.scan().is_empty());
         assert!(mon.alive_ranks().is_empty());
@@ -191,6 +690,7 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].kind, FailureKind::Network);
         assert!(d[0].via_device_plugin);
+        assert_eq!(d[0].path, DetectionPath::DevicePlugin);
     }
 
     #[test]
@@ -241,5 +741,223 @@ mod tests {
         mon.watch(0, board());
         assert!(mon.scan().is_empty());
         assert_eq!(mon.alive_ranks(), vec![0]);
+    }
+
+    // ---------------- LeaseMonitor ----------------
+
+    fn lease_cfg() -> LeaseConfig {
+        LeaseConfig {
+            interval: Duration::from_millis(10),
+            lease_misses: 3,
+            stall_after: Duration::from_millis(50),
+            stall_margin: 2,
+        }
+    }
+
+    fn net_code() -> i64 {
+        FailureKind::all()
+            .iter()
+            .position(|k| *k == FailureKind::Network)
+            .unwrap() as i64
+    }
+
+    /// Build a monitor with `n` admitted ranks all beating at `t0`.
+    fn fleet(n: usize, t0: Instant) -> LeaseMonitor {
+        let mut mon = LeaseMonitor::new(lease_cfg());
+        for r in 0..n {
+            mon.admit(r, 1, t0);
+            mon.observe(r, 1, 0, -1, t0);
+        }
+        mon
+    }
+
+    #[test]
+    fn fresh_leases_report_nothing() {
+        let t0 = Instant::now();
+        let mut mon = fleet(4, t0);
+        assert!(mon.scan(t0 + Duration::from_millis(5)).is_empty());
+    }
+
+    #[test]
+    fn lease_expiry_detects_silent_worker_with_measured_latency() {
+        let t0 = Instant::now();
+        let mut mon = fleet(4, t0);
+        // ranks 0,1,2 keep beating; rank 3 goes silent
+        let later = t0 + Duration::from_millis(40);
+        for r in 0..3 {
+            mon.observe(r, 1, 1, -1, later);
+        }
+        let now = t0 + Duration::from_millis(45);
+        let d = mon.scan(now);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rank, 3);
+        assert_eq!(d[0].path, DetectionPath::LeaseExpiry);
+        assert_eq!(d[0].kind, FailureKind::Segfault);
+        let lat = d[0].latency_s.expect("wire detections carry latency");
+        assert!(lat >= 0.030 && lat < 0.2, "measured latency {lat}");
+        // reported once only
+        assert!(mon.scan(now + Duration::from_millis(50)).is_empty());
+    }
+
+    #[test]
+    fn device_code_beats_lease_expiry_in_the_same_interval() {
+        // Misclassification race: the device plugin's hardware report
+        // lands in the same interval as the process death. The scan
+        // sees both an expired lease *and* a device code — the
+        // hardware kind must win, never a generic Segfault.
+        let t0 = Instant::now();
+        let mut mon = fleet(2, t0);
+        // final-gasp beat carrying the device code, then silence
+        mon.observe(1, 1, 3, net_code(), t0 + Duration::from_millis(2));
+        let now = t0 + Duration::from_millis(200); // lease long expired
+        let d = mon.scan(now);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rank, 1);
+        assert_eq!(d[0].kind, FailureKind::Network, "hardware kind must win");
+        assert_eq!(d[0].path, DetectionPath::DevicePlugin);
+        assert!(d[0].via_device_plugin);
+    }
+
+    #[test]
+    fn stall_behind_median_is_a_silent_hang() {
+        // Rank 1 freezes at tag 5 while the group advances: alive (its
+        // beats keep arriving) but not progressing — the failure class
+        // a liveness flag cannot see.
+        let t0 = Instant::now();
+        let mut mon = LeaseMonitor::new(lease_cfg());
+        for r in 0..4 {
+            mon.admit(r, 1, t0);
+            mon.observe(r, 1, 5, -1, t0);
+        }
+        // beats keep flowing; survivors' tags advance, rank 1 frozen
+        for tick in 1..=8i64 {
+            let at = t0 + Duration::from_millis(10 * tick as u64);
+            for r in [0usize, 2, 3] {
+                mon.observe(r, 1, 5 + tick, -1, at);
+            }
+            mon.observe(1, 1, 5, -1, at);
+        }
+        let now = t0 + Duration::from_millis(85);
+        let d = mon.scan(now);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rank, 1);
+        assert_eq!(d[0].path, DetectionPath::StepStall);
+        assert_eq!(d[0].kind, FailureKind::Timeout);
+        let lat = d[0].latency_s.expect("stall latency measured");
+        assert!(lat >= 0.050, "frozen-for latency {lat}");
+    }
+
+    #[test]
+    fn straggler_resuming_before_threshold_is_not_reported() {
+        // Misclassification race 2: a slow worker that resumes before
+        // the stall threshold must not be evicted.
+        let t0 = Instant::now();
+        let mut mon = LeaseMonitor::new(lease_cfg());
+        for r in 0..4 {
+            mon.admit(r, 1, t0);
+            mon.observe(r, 1, 5, -1, t0);
+        }
+        // group advances; rank 1 lags 3 steps behind but resumes at
+        // t=40ms, inside the 50ms stall window
+        for tick in 1..=4i64 {
+            let at = t0 + Duration::from_millis(10 * tick as u64);
+            for r in [0usize, 2, 3] {
+                mon.observe(r, 1, 5 + tick, -1, at);
+            }
+            mon.observe(1, 1, 5, -1, at);
+        }
+        mon.observe(1, 1, 6, -1, t0 + Duration::from_millis(40));
+        // scan *after* the stall window would have fired for tag 5
+        let d = mon.scan(t0 + Duration::from_millis(60));
+        assert!(d.is_empty(), "resumed straggler misreported: {d:?}");
+    }
+
+    #[test]
+    fn lockstep_freeze_does_not_false_positive() {
+        // When a peer dies, every survivor blocks in the collective at
+        // the *same* tag: nobody is behind the median, so stall
+        // detection stays quiet (the lease/liveness path owns that
+        // failure).
+        let t0 = Instant::now();
+        let mut mon = LeaseMonitor::new(lease_cfg());
+        for r in 0..4 {
+            mon.admit(r, 1, t0);
+            mon.observe(r, 1, 9, -1, t0);
+        }
+        for tick in 1..=10u64 {
+            let at = t0 + Duration::from_millis(10 * tick);
+            for r in 0..4 {
+                mon.observe(r, 1, 9, -1, at); // all frozen together
+            }
+        }
+        assert!(mon.scan(t0 + Duration::from_millis(105)).is_empty());
+    }
+
+    #[test]
+    fn zombie_incarnation_cannot_refresh_replacement_lease() {
+        let t0 = Instant::now();
+        let mut mon = LeaseMonitor::new(lease_cfg());
+        mon.admit(0, 2, t0); // replacement, incarnation 2
+        mon.observe(0, 2, 4, -1, t0);
+        // zombie predecessor's beat must be inert
+        mon.observe(0, 1, 99, -1, t0 + Duration::from_millis(100));
+        let d = mon.scan(t0 + Duration::from_millis(100));
+        assert_eq!(d.len(), 1, "replacement lease must expire: {d:?}");
+        assert_eq!(d[0].path, DetectionPath::LeaseExpiry);
+    }
+
+    #[test]
+    fn readmission_clears_reported_marks() {
+        let t0 = Instant::now();
+        let mut mon = fleet(2, t0);
+        let d = mon.scan(t0 + Duration::from_millis(100));
+        assert_eq!(d.len(), 2, "both leases expired");
+        mon.admit(0, 2, t0 + Duration::from_millis(100));
+        mon.observe(0, 2, 0, -1, t0 + Duration::from_millis(100));
+        assert!(mon.scan(t0 + Duration::from_millis(105)).is_empty());
+        assert_eq!(mon.incarnation_of(0), Some(2));
+        mon.evict(1);
+        assert_eq!(mon.incarnation_of(1), None);
+    }
+
+    #[test]
+    fn optimizer_tag_does_not_break_stall_math() {
+        // tag -1 (optimizer phase) must neither poison the median nor
+        // hide a hang: progress tracks the last non-negative tag.
+        let t0 = Instant::now();
+        let mut mon = LeaseMonitor::new(lease_cfg());
+        for r in 0..4 {
+            mon.admit(r, 1, t0);
+            mon.observe(r, 1, 5, -1, t0);
+        }
+        // rank 1 freezes inside the optimizer (tag -1) at t=10ms
+        mon.observe(1, 1, -1, -1, t0 + Duration::from_millis(10));
+        for tick in 2..=9i64 {
+            let at = t0 + Duration::from_millis(10 * tick as u64);
+            for r in [0usize, 2, 3] {
+                mon.observe(r, 1, 4 + tick, -1, at);
+            }
+            mon.observe(1, 1, -1, -1, at);
+        }
+        let d = mon.scan(t0 + Duration::from_millis(95));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rank, 1);
+        assert_eq!(d[0].path, DetectionPath::StepStall);
+    }
+
+    #[test]
+    fn detection_sweep_smoke() {
+        // tiny end-to-end sweep over real sockets
+        let cfg = DetectionSweepConfig {
+            scales: vec![8],
+            samples: 1,
+            live_agents: 4,
+            interval: Duration::from_millis(10),
+            lease_misses: 3,
+        };
+        let report = detection_sweep(&cfg).unwrap();
+        let row = report.row_values("n=8").expect("row");
+        assert!(row[0] > 0.0, "p50 must be measured: {row:?}");
+        assert!(row[0] < 10_000.0, "p50 implausible: {row:?}");
     }
 }

@@ -48,6 +48,11 @@ pub struct RecoveryRecord {
     pub lost_steps: u64,
     /// Failure occurrence -> controller aware.
     pub detection_s: f64,
+    /// True when `detection_s` was *measured* on the live heartbeat
+    /// plane (wall clock from last good heartbeat to detection,
+    /// DESIGN.md §10); false when it fell back to the in-process
+    /// boards' ground-truth death stamps.
+    pub detection_measured: bool,
     /// Controller aware -> all workers training again.
     pub restart_s: f64,
     /// Portion of restart spent in replica/checkpoint state transfer.
@@ -76,6 +81,7 @@ impl RecoveryRecord {
             .set("resume_step", self.resume_step)
             .set("lost_steps", self.lost_steps)
             .set("detection_s", self.detection_s)
+            .set("detection_measured", self.detection_measured)
             .set("restart_s", self.restart_s)
             .set("restore_s", self.restore_s)
             .set("rebuild_s", self.rebuild_s)
@@ -157,6 +163,7 @@ mod tests {
             resume_step: 10,
             lost_steps: 0,
             detection_s: 0.2,
+            detection_measured: true,
             restart_s: 1.1,
             restore_s: 0.3,
             rebuild_s: 0.1,
@@ -172,6 +179,7 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("mode").as_str(), Some("flash"));
         assert_eq!(j.get("lost_steps").as_i64(), Some(0));
+        assert_eq!(j.get("detection_measured").as_bool(), Some(true));
         assert_eq!(j.get("rebuild_s").as_f64(), Some(0.1));
         let sr = j.get("shard_restores").idx(0);
         assert_eq!(sr.get("source").as_usize(), Some(3));

@@ -1,7 +1,9 @@
 //! The FlashRecovery coordinator — the paper's system contribution.
 //!
 //! * [`detection`] — active real-time failure detection (§III-C):
-//!   heartbeat monitor + device plugin boards.
+//!   the wire-plane [`LeaseMonitor`] (leased heartbeats, device-code
+//!   classification, step-tag stall / silent-hang detection; DESIGN.md
+//!   §10) plus the in-process board-scan fallback.
 //! * [`ranktable`] — O(1) shared-file ranktable vs the O(n)
 //!   collect/distribute baseline (§III-D, Tab. I).
 //! * [`step_tag`] — the step-tag protocol deciding when to stop/clean/
@@ -26,7 +28,10 @@ pub mod restore;
 pub mod step_tag;
 
 pub use controller::{Controller, ControllerConfig};
-pub use detection::{Detection, HeartbeatMonitor};
+pub use detection::{
+    detection_sweep, Detection, DetectionPath, DetectionSweepConfig,
+    HeartbeatMonitor, LeaseConfig, LeaseMonitor,
+};
 pub use events::{RecoveryRecord, RunReport, ShardRestoreStat};
 pub use ranktable::{original_update, RankEntry, Ranktable, SharedRanktable};
 pub use rendezvous::{

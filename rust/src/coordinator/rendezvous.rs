@@ -452,9 +452,11 @@ fn sample_stride(ranks: &[usize], cap: usize) -> Vec<usize> {
 /// returns a retryable [`EpochAborted`] instead of stalling on the
 /// store's 300s client read timeout. Retry with
 /// `from_epoch = aborted.current` (the tombstoned epoch is skipped).
-/// Epoch keys are retained on the store (only epoch `e-1` is ever
-/// needed for late resync; pruning older epochs needs a delete op the
-/// wire protocol doesn't carry yet — tracked as a §8 limitation).
+/// Store hygiene: advancing into the new epoch prunes every
+/// `rdzv/…`/`restore/…` key (and arrive counter) of epochs `<= e-2`
+/// server-side — only `e-1` is ever needed for late resync — so the
+/// key count stays bounded by two epochs' worth across arbitrarily
+/// many recoveries (the `DelPrefix` wire op covers ad-hoc pruning).
 pub fn rebuild_episode(
     server: &TcpStoreServer,
     table: &Ranktable,
@@ -811,6 +813,51 @@ mod tests {
         assert_eq!(t.version, 4); // three substitutions
         assert_eq!(t.entries[1], replacement(1, 2));
         assert_eq!(server.epoch(), 3);
+    }
+
+    #[test]
+    fn store_keys_stay_bounded_across_many_episodes() {
+        // DESIGN §8 known limitation, resolved: per-epoch keys
+        // (rdzv/<e>/…, restore/<e>/…) used to be retained forever —
+        // one leaked key set per recovery. Epoch advance now prunes
+        // epochs <= e-2, so ten recovery episodes end with the same
+        // bounded key count as two.
+        let cfg = ParallelismConfig::dp(4);
+        let server = TcpStoreServer::start().unwrap();
+        let mut t = table(4);
+        let mut epoch = 0;
+        let mut count_after_two = 0;
+        for i in 0..10 {
+            let out = rebuild_episode(
+                &server,
+                &t,
+                &cfg,
+                &[1],
+                &[replacement(1, i)],
+                epoch,
+                &EpisodeConfig { live_survivors: 4, ..Default::default() },
+            )
+            .unwrap();
+            epoch = out.epoch;
+            t = out.table;
+            if i == 1 {
+                count_after_two = server.key_count();
+            }
+        }
+        assert_eq!(epoch, 10);
+        // keys for at most epochs {e-1, e}: 4 map keys each (delta,
+        // table, join/1, go) -> hard bound 8, and no growth vs run #2
+        assert!(
+            server.key_count() <= count_after_two.max(8),
+            "store leaked: {} keys after 10 episodes vs {} after 2",
+            server.key_count(),
+            count_after_two
+        );
+        assert!(
+            server.counter_count() <= 2,
+            "arrive counters leaked: {}",
+            server.counter_count()
+        );
     }
 
     #[test]

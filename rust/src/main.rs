@@ -11,6 +11,9 @@
 //!   restore-bench  shard-aware streaming-restore sweep (model size x
 //!                  ZeRO shards) over real sockets; emits
 //!                  BENCH_state_restore.json, optionally perf-gated
+//!   detect-bench   detection-latency sweep over leased heartbeats
+//!                  (64 -> 4096 ranks); emits
+//!                  BENCH_detection_latency.json, optionally perf-gated
 //!   info           print artifact/manifest information
 //!
 //! Examples:
@@ -45,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         Some("scenario") => scenario(&args),
         Some("rebuild-bench") => rebuild_bench(&args),
         Some("restore-bench") => restore_bench(&args),
+        Some("detect-bench") => detect_bench(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -62,7 +66,7 @@ fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|detect-bench|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -77,6 +81,9 @@ fn usage() {
          restore-bench: [--sizes 262144,1048576] [--shards 2,4]\n\
          \u{20}         [--samples N] [--chunk-kib N] [--out FILE]\n\
          \u{20}         [--baseline FILE --gate RATIO]\n\
+         detect-bench: [--scales 64,256,1024,4096] [--samples N]\n\
+         \u{20}         [--live-agents N] [--interval-ms N] [--lease-misses N]\n\
+         \u{20}         [--out FILE] [--baseline FILE --gate RATIO]\n\
          info:     --size tiny|small|base"
     );
 }
@@ -302,12 +309,46 @@ fn finish(name: &str, outcomes: &[flashrecovery::chaos::AssertionOutcome]) -> an
     }
 }
 
+/// Shared `--baseline FILE --gate RATIO` handling for the bench
+/// subcommands: compares column 0 (p50) of `report` against the
+/// committed baseline and exits non-zero on any regression beyond the
+/// gate ratio. No-op when `--baseline` is absent.
+fn gate_against_baseline(
+    prefix: &str,
+    report: &flashrecovery::metrics::bench::BenchReport,
+    out: &str,
+    args: &Args,
+) -> anyhow::Result<()> {
+    use flashrecovery::util::Json;
+
+    let Some(baseline_path) = args.get("baseline") else {
+        return Ok(());
+    };
+    let max_ratio = args.f64_or("gate", 1.5);
+    let text = std::fs::read_to_string(baseline_path)?;
+    let baseline =
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    let violations = report.gate(&baseline, 0, max_ratio);
+    if violations.is_empty() {
+        println!("[{prefix}] gate PASS (p50 within {max_ratio}x of {baseline_path})");
+    } else {
+        for v in &violations {
+            eprintln!("[{prefix}] gate FAIL: {v}");
+        }
+        eprintln!(
+            "[{prefix}] if this is an accepted change, refresh the \
+             baseline: cp {out} {baseline_path} (see README)"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 /// `rebuild-bench` — the group-reconstruction scale sweep, with an
 /// optional perf gate against a committed baseline JSON (CI's
 /// bench-gate job fails the build on p50 regressions > --gate).
 fn rebuild_bench(args: &Args) -> anyhow::Result<()> {
     use flashrecovery::coordinator::rendezvous::{rebuild_sweep, SweepConfig};
-    use flashrecovery::util::Json;
 
     let mut cfg = SweepConfig::default();
     if let Some(s) = args.get("scales") {
@@ -328,29 +369,7 @@ fn rebuild_bench(args: &Args) -> anyhow::Result<()> {
     let out = args.str_or("out", "BENCH_group_rebuild.json");
     report.write_json(&out)?;
     println!("[rebuild-bench] wrote {out}");
-
-    if let Some(baseline_path) = args.get("baseline") {
-        let max_ratio = args.f64_or("gate", 1.5);
-        let text = std::fs::read_to_string(baseline_path)?;
-        let baseline =
-            Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-        let violations = report.gate(&baseline, 0, max_ratio);
-        if violations.is_empty() {
-            println!(
-                "[rebuild-bench] gate PASS (p50 within {max_ratio}x of {baseline_path})"
-            );
-        } else {
-            for v in &violations {
-                eprintln!("[rebuild-bench] gate FAIL: {v}");
-            }
-            eprintln!(
-                "[rebuild-bench] if this is an accepted change, refresh the \
-                 baseline: cp {out} {baseline_path} (see README)"
-            );
-            std::process::exit(1);
-        }
-    }
-    Ok(())
+    gate_against_baseline("rebuild-bench", &report, &out, args)
 }
 
 /// `restore-bench` — the shard-aware streaming-restore sweep, with an
@@ -358,7 +377,6 @@ fn rebuild_bench(args: &Args) -> anyhow::Result<()> {
 /// bench-gate job fails the build on p50 regressions > --gate).
 fn restore_bench(args: &Args) -> anyhow::Result<()> {
     use flashrecovery::coordinator::restore::{restore_sweep, RestoreSweepConfig};
-    use flashrecovery::util::Json;
 
     let parse_list = |s: &str| -> anyhow::Result<Vec<usize>> {
         let v = s
@@ -386,29 +404,41 @@ fn restore_bench(args: &Args) -> anyhow::Result<()> {
     let out = args.str_or("out", "BENCH_state_restore.json");
     report.write_json(&out)?;
     println!("[restore-bench] wrote {out}");
+    gate_against_baseline("restore-bench", &report, &out, args)
+}
 
-    if let Some(baseline_path) = args.get("baseline") {
-        let max_ratio = args.f64_or("gate", 1.5);
-        let text = std::fs::read_to_string(baseline_path)?;
-        let baseline =
-            Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
-        let violations = report.gate(&baseline, 0, max_ratio);
-        if violations.is_empty() {
-            println!(
-                "[restore-bench] gate PASS (p50 within {max_ratio}x of {baseline_path})"
-            );
-        } else {
-            for v in &violations {
-                eprintln!("[restore-bench] gate FAIL: {v}");
-            }
-            eprintln!(
-                "[restore-bench] if this is an accepted change, refresh the \
-                 baseline: cp {out} {baseline_path} (see README)"
-            );
-            std::process::exit(1);
+/// `detect-bench` — the detection-latency scale sweep over leased
+/// heartbeats (DESIGN.md §10), with an optional perf gate against a
+/// committed baseline JSON (CI's bench-gate job fails the build on
+/// p50 regressions > --gate).
+fn detect_bench(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::coordinator::{detection_sweep, DetectionSweepConfig};
+    use std::time::Duration;
+
+    let mut cfg = DetectionSweepConfig::default();
+    if let Some(s) = args.get("scales") {
+        cfg.scales = s
+            .split(',')
+            .map(|x| x.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?;
+        if cfg.scales.is_empty() {
+            anyhow::bail!("--scales needs at least one rank count");
         }
     }
-    Ok(())
+    cfg.samples = args.u64_or("samples", cfg.samples as u64) as u32;
+    cfg.live_agents = args.usize_or("live-agents", cfg.live_agents);
+    cfg.interval = Duration::from_millis(
+        args.u64_or("interval-ms", cfg.interval.as_millis() as u64).max(1),
+    );
+    cfg.lease_misses =
+        args.u64_or("lease-misses", cfg.lease_misses as u64).max(1) as u32;
+
+    let report = detection_sweep(&cfg)?;
+    report.print();
+    let out = args.str_or("out", "BENCH_detection_latency.json");
+    report.write_json(&out)?;
+    println!("[detect-bench] wrote {out}");
+    gate_against_baseline("detect-bench", &report, &out, args)
 }
 
 fn info(args: &Args) -> anyhow::Result<()> {

@@ -25,6 +25,7 @@ use crate::cluster::failure::{FailureCategory, FailureKind};
 use crate::comms::state_stream::{
     fetch_from_addr, serve_listener, EpochFence, Expect, RestoreError, StreamConfig,
 };
+use crate::comms::tcp_store::TcpStoreClient;
 use crate::comms::{Collective, CollectiveError};
 use crate::config::ShardId;
 use crate::runtime::{literal_tokens, ModelBundle};
@@ -33,7 +34,7 @@ use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Step tag value while the optimizer is executing (paper rule 4).
 pub const TAG_OPTIMIZER: i64 = -1;
@@ -140,12 +141,73 @@ impl MonitorBoard {
     }
 }
 
-fn kind_code(kind: FailureKind) -> i64 {
+pub fn kind_code(kind: FailureKind) -> i64 {
     FailureKind::all().iter().position(|k| *k == kind).unwrap() as i64
 }
 
 pub fn kind_from_code(code: i64) -> Option<FailureKind> {
     FailureKind::all().get(code as usize).copied()
+}
+
+/// Where and how a worker's heartbeat emitter pushes beats.
+#[derive(Debug, Clone, Copy)]
+pub struct HeartbeatCfg {
+    /// The controller's `TcpStoreServer`.
+    pub store: SocketAddr,
+    /// Push interval; the monitor's lease is a multiple of it.
+    pub interval: Duration,
+    /// Worker incarnation stamped on every beat — a replacement's
+    /// lease can never be refreshed by its dead predecessor.
+    pub incarnation: u64,
+}
+
+/// Spawn the heartbeat emitter for one worker: the paper's per-process
+/// monitoring process + per-node device plugin pushing over the live
+/// wire (DESIGN.md §10). Reads the board's atomics and pushes one
+/// `Heartbeat` frame per interval — O(1) per worker per beat.
+///
+/// The device plugin outlives the training process: when the worker
+/// dies (`alive == false`) with a pending hardware report, one final
+/// beat carrying the `device_code` still reaches the wire before the
+/// emitter exits, so the monitor classifies the failure by its
+/// hardware kind even when the death and the report race into the
+/// same interval. A silent hang, by contrast, keeps the emitter alive
+/// and pushing a frozen `step_tag` — exactly what the monitor's stall
+/// detection consumes.
+pub fn spawn_heartbeat(
+    rank: usize,
+    board: Arc<MonitorBoard>,
+    cfg: HeartbeatCfg,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("hb-{rank}"))
+        .spawn(move || {
+            let Ok(mut client) = TcpStoreClient::connect(cfg.store) else {
+                return; // no plane: the board-scan fallback covers us
+            };
+            loop {
+                let tag = board.step_tag.load(Ordering::SeqCst);
+                if !board.alive.load(Ordering::SeqCst) {
+                    // Dying gasp: the hardware report must reach the
+                    // wire even though the process is gone. Load the
+                    // code *after* observing death — failure paths
+                    // store `device_error` before dropping `alive`,
+                    // so this load cannot miss a report the way a
+                    // pre-check load raced against both stores could.
+                    let code = board.device_error.load(Ordering::SeqCst);
+                    if code >= 0 {
+                        let _ = client.heartbeat(rank as u64, cfg.incarnation, tag, code);
+                    }
+                    return;
+                }
+                let code = board.device_error.load(Ordering::SeqCst);
+                if client.heartbeat(rank as u64, cfg.incarnation, tag, code).is_err() {
+                    return; // store gone (controller teardown)
+                }
+                std::thread::sleep(cfg.interval);
+            }
+        })
+        .expect("spawn heartbeat emitter")
 }
 
 /// Everything a worker thread needs.
