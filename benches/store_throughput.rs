@@ -1,0 +1,47 @@
+//! Store data-plane throughput sweep: the striped + per-key-parked +
+//! batched store (DESIGN.md §11) under a mixed-opcode workload at
+//! 64 -> 8192 simulated clients multiplexed over a bounded socket set.
+//!
+//! Two asserted properties:
+//!
+//! * **batched beats serial**: pipelined `Batch` clients deliver at
+//!   least 2x the ops/s of one-op-per-round-trip clients at 4096
+//!   simulated clients — the data-plane redesign's headline number;
+//! * **flat at scale**: batched per-op p50 at the largest client
+//!   count stays within 2x of the smallest (plus a small noise
+//!   floor) — striped locks and per-key parking keep the plane free
+//!   of global serialization points.
+//!
+//! Emits `BENCH_store_throughput.json` (via `BenchReport::write_json`),
+//! the artifact CI's bench gate compares against the committed
+//! baseline in `ci/BENCH_store_throughput.baseline.json`.
+//!
+//!     cargo bench --bench store_throughput
+
+use flashrecovery::comms::store_bench::{check_report, store_sweep, StoreSweepConfig};
+
+fn main() {
+    let cfg = StoreSweepConfig::default();
+    let report = store_sweep(&cfg).expect("store sweep");
+    report.print();
+    report
+        .write_json("BENCH_store_throughput.json")
+        .expect("write BENCH_store_throughput.json");
+    println!("wrote BENCH_store_throughput.json");
+
+    // ---- asserted properties (ISSUE 5 acceptance) ---------------------
+    // the same checks `store-bench --assert` runs in bench-gate:
+    // batched >= 2x serial ops/s at 4096 clients, per-op p50 flat
+    check_report(&cfg, &report).expect("acceptance properties");
+    let row = |n: usize| report.row_values(&format!("n={n}")).expect("row")[0];
+    let (min_scale, max_scale) = (
+        *cfg.clients.iter().min().unwrap(),
+        *cfg.clients.iter().max().unwrap(),
+    );
+    println!(
+        "store_throughput OK: p50 {:.2}us/op @ {min_scale} -> {:.2}us/op @ \
+         {max_scale} (<= 2x), batched >= 2x serial",
+        row(min_scale),
+        row(max_scale)
+    );
+}

@@ -28,7 +28,8 @@ use crate::coordinator::restore::{
 };
 use crate::coordinator::{ControllerConfig, RankEntry, Ranktable, RunReport};
 use crate::training::worker::{
-    kind_code, spawn_heartbeat, FailurePlan, HeartbeatCfg, MonitorBoard, Phase,
+    kind_code, spawn_heartbeat, spawn_node_heartbeat, FailurePlan, HeartbeatCfg,
+    MonitorBoard, NodeAgentCfg, NodeRank, Phase,
 };
 use crate::training::TrainingEngine;
 use anyhow::{anyhow, bail, Context, Result};
@@ -513,18 +514,21 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
     let mut incarnations: BTreeMap<usize, u64> = BTreeMap::new();
     let mut emitters: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut next_inc = 0u64;
+    // The initial fleet is one simulated *node*: its ranks' beats are
+    // coalesced through a single node agent — one Batch frame per
+    // interval for the whole fleet (DESIGN.md §11) — while respawned
+    // replacements below run per-process emitters, so both beat
+    // planes are exercised in one episode chain.
+    let mut members: Vec<NodeRank> = Vec::with_capacity(dp);
     for rank in 0..dp {
         next_inc += 1;
         let b = MonitorBoard::new();
         mon.admit(rank, next_inc, Instant::now());
-        emitters.push(spawn_heartbeat(
-            rank,
-            b.clone(),
-            HeartbeatCfg { store: addr, interval, incarnation: next_inc },
-        ));
+        members.push(NodeRank { rank, incarnation: next_inc, board: b.clone() });
         boards.insert(rank, b);
         incarnations.insert(rank, next_inc);
     }
+    emitters.push(spawn_node_heartbeat(members, NodeAgentCfg { store: addr, interval }));
 
     let mut epoch = 0u64;
     let mut sim_step = 0u64;

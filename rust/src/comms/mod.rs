@@ -8,6 +8,7 @@
 pub mod collective;
 pub mod group;
 pub mod state_stream;
+pub mod store_bench;
 pub mod tcp_store;
 pub mod wire;
 
@@ -18,3 +19,4 @@ pub use state_stream::{
     RestoreResult, StreamConfig,
 };
 pub use tcp_store::{establish, FencedWait, TcpStoreClient, TcpStoreServer};
+pub use wire::{Bytes, Request, Response};

@@ -1,0 +1,295 @@
+//! Store data-plane throughput sweep (DESIGN.md §11) — the
+//! `store-bench` CLI / `benches/store_throughput.rs` target.
+//!
+//! Measures the redesigned store (lock stripes, per-key waiter
+//! parking, `Arc<[u8]>` values, pooled workers) under a mixed-opcode
+//! workload at 64 → 8192 *simulated clients*, in two client modes:
+//!
+//! * **batched** — each connection pipelines its simulated clients'
+//!   ops as `Batch` frames (the §8 survivor re-key / node-agent
+//!   coalescing pattern): ops per round-trip is the whole point of
+//!   the data plane;
+//! * **serial** — the same ops, one per round-trip: the old client
+//!   model, kept as the in-tree baseline the acceptance criterion
+//!   compares against.
+//!
+//! Scale model (same as the rendezvous and detection sweeps): the
+//! simulated-client count drives keys, counters, heartbeat ranks, and
+//! total op volume at full scale, while real sockets are bounded by
+//! `connections` driver threads — exactly the coalescing a per-node
+//! agent performs for its local ranks. Column 0 (`p50 us/op`, batched)
+//! is what CI's bench gate compares against the committed baseline;
+//! the bench target additionally asserts batched throughput ≥ 2x
+//! serial at 4096 clients and flat-at-scale per-op p50.
+
+use super::tcp_store::{TcpStoreClient, TcpStoreServer};
+use super::wire::{Request, Response};
+use crate::metrics::bench::BenchReport;
+use crate::metrics::Histogram;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::net::SocketAddr;
+use std::time::Instant;
+
+/// Ops per `Batch` frame in batched mode — large enough to amortise
+/// the round-trip, small enough to keep frames in the tens of KB.
+const BATCH_OPS: usize = 128;
+
+/// Mixed ops one simulated client issues per repeat: set, read back,
+/// wait-hit (the parked-wait fast path), a contended counter add, one
+/// heartbeat, and a second read.
+const MIX_OPS: usize = 6;
+
+/// Configuration for the store throughput sweep.
+#[derive(Debug, Clone)]
+pub struct StoreSweepConfig {
+    /// Simulated client counts (keys/counters/ranks at full scale).
+    pub clients: Vec<usize>,
+    /// Real TCP connections (== driver threads) the simulated clients
+    /// are multiplexed over.
+    pub connections: usize,
+    /// Repeats of the 6-op mix per simulated client per round.
+    pub repeats: usize,
+    /// Measured rounds per (scale, mode); one extra warmup round is
+    /// discarded.
+    pub rounds: u32,
+}
+
+impl Default for StoreSweepConfig {
+    fn default() -> Self {
+        StoreSweepConfig {
+            clients: vec![64, 1024, 4096, 8192],
+            connections: 64,
+            repeats: 2,
+            rounds: 5,
+        }
+    }
+}
+
+/// The 6-op mix for simulated client `id` in round `round`.
+fn mix(id: usize, round: u32, out: &mut Vec<Request>) {
+    let key = format!("bench/k{id}");
+    let value = format!("payload-{id}-{round}-0123456789abcdef").into_bytes();
+    out.push(Request::Set { key: key.clone(), value });
+    out.push(Request::Get { key: key.clone() });
+    // wait on a key this same pipeline just published: exercises the
+    // wait path's fast hit (and, in serial mode, a real Wait RTT)
+    out.push(Request::Wait { key: key.clone() });
+    out.push(Request::Add { key: format!("bench/ctr{}", id % 32), delta: 1 });
+    out.push(Request::Heartbeat {
+        rank: id as u64,
+        incarnation: 1,
+        step_tag: round as i64,
+        device_code: -1,
+    });
+    out.push(Request::Get { key });
+}
+
+/// What one driver thread reports for one round.
+struct DriverOut {
+    /// Per-op latency samples (one per frame: frame RTT / ops in it).
+    samples: Vec<f64>,
+    ops: u64,
+    busy_s: f64,
+}
+
+fn check_resps(n_sent: usize, resps: &[Response]) -> Result<()> {
+    if resps.len() != n_sent {
+        bail!("batch executed {} of {n_sent} ops", resps.len());
+    }
+    Ok(())
+}
+
+/// Run one round for one driver thread owning `ids`.
+fn drive_round(
+    addr: SocketAddr,
+    ids: &[usize],
+    round: u32,
+    repeats: usize,
+    batched: bool,
+) -> Result<DriverOut> {
+    let mut client = TcpStoreClient::connect(addr)?;
+    let mut reqs: Vec<Request> = Vec::with_capacity(ids.len() * MIX_OPS * repeats);
+    for rep in 0..repeats {
+        for &id in ids {
+            mix(id, round * repeats.max(1) as u32 + rep as u32, &mut reqs);
+        }
+    }
+    let total_ops = reqs.len() as u64;
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    if batched {
+        let mut iter = reqs.into_iter().peekable();
+        while iter.peek().is_some() {
+            let chunk: Vec<Request> = iter.by_ref().take(BATCH_OPS).collect();
+            let n = chunk.len();
+            let t = Instant::now();
+            let resps = client.batch(chunk)?;
+            samples.push(t.elapsed().as_secs_f64() / n as f64);
+            check_resps(n, &resps)?;
+        }
+    } else {
+        for req in reqs {
+            let t = Instant::now();
+            let _ = client.roundtrip(req)?;
+            samples.push(t.elapsed().as_secs_f64());
+        }
+    }
+    Ok(DriverOut { samples, ops: total_ops, busy_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Run every round of one (scale, mode) cell on a fresh server;
+/// returns (per-op histogram, ops/s over the measured rounds).
+fn run_cell(cfg: &StoreSweepConfig, clients: usize, batched: bool) -> Result<(Histogram, f64)> {
+    let server = TcpStoreServer::start()?;
+    let addr = server.addr();
+    let conns = cfg.connections.clamp(1, clients);
+    // evenly partition simulated client ids over the connections
+    let id_sets: Vec<Vec<usize>> = (0..conns)
+        .map(|c| (0..clients).filter(|id| id % conns == c).collect())
+        .collect();
+
+    let mut hist = Histogram::new();
+    let mut measured_ops = 0u64;
+    let mut measured_busy = 0.0f64;
+    for round in 0..=cfg.rounds {
+        let mut handles = Vec::with_capacity(conns);
+        for ids in &id_sets {
+            let ids = ids.clone();
+            let repeats = cfg.repeats.max(1);
+            handles.push(std::thread::spawn(move || {
+                drive_round(addr, &ids, round, repeats, batched)
+            }));
+        }
+        let mut round_busy = 0.0f64;
+        let mut round_ops = 0u64;
+        let mut outs = Vec::with_capacity(conns);
+        for h in handles {
+            outs.push(h.join().expect("driver thread panicked")?);
+        }
+        if round == 0 {
+            continue; // warmup: server pool + allocator settle
+        }
+        for out in outs {
+            round_busy = round_busy.max(out.busy_s);
+            round_ops += out.ops;
+            for s in out.samples {
+                hist.record(s);
+            }
+        }
+        measured_ops += round_ops;
+        // rounds are synchronized by join, so the per-round critical
+        // path (slowest driver) is what wall-clock throughput pays
+        measured_busy += round_busy;
+    }
+    let ops_per_s = if measured_busy > 0.0 {
+        measured_ops as f64 / measured_busy
+    } else {
+        0.0
+    };
+    Ok((hist, ops_per_s))
+}
+
+/// Run the store throughput sweep. Column 0 (`p50 us/op`, batched
+/// mode) is the value CI's bench gate compares against the committed
+/// baseline in `ci/BENCH_store_throughput.baseline.json`.
+pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new(
+        "store_throughput: striped+parked+batched data plane, mixed workload",
+        &["p50 us/op", "ops/s", "serial us/op", "serial ops/s", "speedup x", "conns"],
+    );
+    for &n in &cfg.clients {
+        if n == 0 {
+            bail!("sweep needs at least one simulated client");
+        }
+        let (batched_h, batched_ops) = run_cell(cfg, n, true)?;
+        let (serial_h, serial_ops) = run_cell(cfg, n, false)?;
+        let speedup = if serial_ops > 0.0 { batched_ops / serial_ops } else { 0.0 };
+        report.row(
+            format!("n={n}"),
+            vec![
+                batched_h.p50() * 1e6,
+                batched_ops,
+                serial_h.p50() * 1e6,
+                serial_ops,
+                speedup,
+                cfg.connections.min(n) as f64,
+            ],
+        );
+    }
+    report.note(format!(
+        "{} rounds/cell (+1 warmup), {} x 6-op mix per simulated client \
+         (set/get/wait-hit/add/heartbeat/get), {} connections; batched mode \
+         pipelines {} ops per frame, serial mode pays one RTT per op",
+        cfg.rounds, cfg.repeats, cfg.connections, BATCH_OPS
+    ));
+    report.note(
+        "flat-at-scale: per-op p50 stays within 2x from the smallest to the \
+         largest client count (striped locks + per-key parking, no global \
+         serialization); batched >= 2x serial ops/s at 4096 clients",
+    );
+    Ok(report)
+}
+
+/// The sweep's acceptance properties (ISSUE 5), shared by the bench
+/// target and `store-bench --assert` (which bench-gate runs):
+/// batched ≥ 2x serial ops/s at 4096 clients (or the largest swept
+/// scale), and batched per-op p50 flat — ≤ 2x from the smallest to
+/// the largest scale, with a 5us noise floor for loaded runners.
+pub fn check_report(cfg: &StoreSweepConfig, report: &BenchReport) -> Result<()> {
+    let (Some(&min_scale), Some(&max_scale)) =
+        (cfg.clients.iter().min(), cfg.clients.iter().max())
+    else {
+        return Ok(());
+    };
+    let row = |n: usize| {
+        report
+            .row_values(&format!("n={n}"))
+            .ok_or_else(|| anyhow!("missing sweep row n={n}"))
+    };
+    let compare_at = if cfg.clients.contains(&4096) { 4096 } else { max_scale };
+    let speedup = row(compare_at)?[4];
+    ensure!(
+        speedup >= 2.0,
+        "batched plane must be >= 2x serial ops/s at {compare_at} clients \
+         (got {speedup:.2}x)"
+    );
+    let (lo, hi) = (row(min_scale)?[0], row(max_scale)?[0]);
+    ensure!(
+        hi <= 2.0 * lo + 5.0,
+        "store per-op p50 not scale-independent: {hi:.2}us @ {max_scale} vs \
+         {lo:.2}us @ {min_scale}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_smoke_reports_both_modes() {
+        let cfg = StoreSweepConfig {
+            clients: vec![16],
+            connections: 4,
+            repeats: 1,
+            rounds: 2,
+        };
+        let report = store_sweep(&cfg).unwrap();
+        let row = report.row_values("n=16").expect("row");
+        assert!(row[0] > 0.0, "batched p50 must be measured: {row:?}");
+        assert!(row[1] > 0.0, "batched ops/s must be measured: {row:?}");
+        assert!(row[2] > 0.0, "serial p50 must be measured: {row:?}");
+        assert!(row[3] > 0.0, "serial ops/s must be measured: {row:?}");
+        assert_eq!(row[5], 4.0);
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_balanced() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        mix(7, 3, &mut a);
+        mix(7, 3, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), MIX_OPS);
+    }
+}

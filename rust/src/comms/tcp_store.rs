@@ -1,24 +1,42 @@
 //! A real TCP key-value store — the PyTorch `TCPStore` analogue used
-//! during communication-group establishment (paper §III-D).
+//! during communication-group establishment (paper §III-D) and, since
+//! §8–§10, the single funnel for rendezvous, restore discovery, and
+//! leased heartbeats.
 //!
-//! The server is thread-per-connection (adequate at single-host scale);
-//! clients support `set`/`get`/`wait`/`add`/`count`. `wait` blocks
-//! server-side on a condvar until the key is published — exactly how
-//! rank 0 publishes the rendezvous info that other ranks wait on.
+//! Data plane (DESIGN.md §11): state is sharded into [`STRIPES`] lock
+//! stripes keyed by key hash (beats by rank), so unrelated keys never
+//! contend; blocked `wait`s park on **per-key slots**, so a `Set`
+//! wakes exactly the waiters of that key instead of broadcasting to
+//! every blocked rank (epoch advances and shutdown are the only
+//! broadcasts). Values are stored as [`Bytes`] (`Arc<[u8]>`) — a
+//! `Get`/`Wait` response is a refcount bump, never a deep copy — and
+//! each connection reuses one read and one write buffer. Connections
+//! are served by a worker pool that reuses threads across connection
+//! churn and grows only to the concurrency high-water mark, replacing
+//! the old thread-per-connection loop whose `JoinHandle` list grew
+//! without bound.
 //!
 //! [`establish`] measures store-establishment for `n` clients with a
 //! configurable parallelism degree: `p = 1` is the serialized baseline
 //! of Fig. 10, `p > 1` is FlashRecovery's parallelized strategy.
 
-use super::wire::{read_frame, write_frame, Request, Response};
+use super::wire::{
+    read_frame, write_frame, Bytes, Request, Response, MAX_FRAME_BYTES,
+};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::io::ErrorKind;
+use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock stripes for `map`/`counters`/`parked` (and, by rank, `beats`).
+/// Power of two; 16 keeps per-stripe contention negligible at the
+/// 8192-simulated-client sweep while the array stays cache-friendly.
+const STRIPES: usize = 16;
 
 /// Lock a store mutex, recovering from poisoning: one panicking
 /// handler thread must degrade to at worst a stale value for *its*
@@ -40,20 +58,119 @@ pub struct BeatRecord {
     pub at: Instant,
 }
 
+/// Waiters parked on one key: they all wait on this slot's condvar
+/// (with the owning stripe's mutex), so a `Set` of the key notifies
+/// exactly them.
+struct WaitSlot {
+    cv: Arc<Condvar>,
+    waiters: usize,
+}
+
+impl WaitSlot {
+    fn new() -> Self {
+        WaitSlot { cv: Arc::new(Condvar::new()), waiters: 0 }
+    }
+}
+
+/// One lock stripe's worth of store state.
 #[derive(Default)]
+struct Stripe {
+    map: HashMap<String, Bytes>,
+    counters: HashMap<String, i64>,
+    parked: HashMap<String, WaitSlot>,
+}
+
+impl Default for WaitSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 struct Shared {
-    map: Mutex<HashMap<String, Vec<u8>>>,
-    counters: Mutex<HashMap<String, i64>>,
-    /// rank -> latest heartbeat (highest incarnation wins).
-    beats: Mutex<HashMap<u64, BeatRecord>>,
-    cv: Condvar,
+    stripes: Vec<Mutex<Stripe>>,
+    /// rank % STRIPES -> (rank -> latest heartbeat; highest
+    /// incarnation wins).
+    beats: Vec<Mutex<HashMap<u64, BeatRecord>>>,
     hellos: AtomicU64,
     /// Rendezvous epoch: fenced waiters registered at an older epoch
     /// are released with `EpochFenced` when this advances.
     epoch: AtomicU64,
-    /// Total requests served (all opcodes) — lets tests assert that
-    /// rebuild traffic is independent of cluster size.
+    /// Logical requests served (each batched sub-op counts as one) —
+    /// lets tests assert that rebuild traffic is independent of
+    /// cluster size even when ops are pipelined.
     requests: AtomicU64,
+    /// Wire frames read (a `Batch` of k ops is one frame) — the
+    /// round-trip count the pipelined client amortises.
+    frames: AtomicU64,
+    /// Parked waiters *released by a publish* (the waiter parked at
+    /// least once, then found its key's value). Deliberately not a
+    /// raw condvar-notify count — notifies race timeout boundaries
+    /// and spurious wakeups, so only the deterministic observable is
+    /// counted: per-key parking makes this exactly the matching
+    /// waiters per publish, never the whole herd.
+    wakeups: AtomicU64,
+    /// Pool workers currently alive, and total ever spawned.
+    live_workers: AtomicUsize,
+    /// Readiness tokens: each pool worker announces one token per
+    /// "ready for one connection" cycle; the accept loop consumes one
+    /// token per accepted connection and spawns a fresh worker when
+    /// none is available. Token conservation guarantees every queued
+    /// connection has a committed consumer — a busy pool can never
+    /// starve a new connection behind long-blocked peers.
+    free_workers: AtomicUsize,
+    workers_spawned: AtomicU64,
+}
+
+impl Shared {
+    fn new() -> Self {
+        Shared {
+            stripes: (0..STRIPES).map(|_| Mutex::new(Stripe::default())).collect(),
+            beats: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            hellos: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            wakeups: AtomicU64::new(0),
+            live_workers: AtomicUsize::new(0),
+            free_workers: AtomicUsize::new(0),
+            workers_spawned: AtomicU64::new(0),
+        }
+    }
+
+    fn stripe_for(&self, key: &str) -> &Mutex<Stripe> {
+        let h = crate::util::fnv1a(key.as_bytes()) as usize;
+        &self.stripes[h % STRIPES]
+    }
+
+    fn beats_for(&self, rank: u64) -> &Mutex<HashMap<u64, BeatRecord>> {
+        &self.beats[(rank as usize) % STRIPES]
+    }
+
+    /// Insert `key = value` and wake exactly that key's parked
+    /// waiters (the per-key parking protocol's publish half).
+    fn set_value(&self, key: String, value: Bytes) {
+        let mut g = lock(self.stripe_for(&key));
+        let cv = g.parked.get(&key).map(|s| s.cv.clone());
+        g.map.insert(key, value);
+        drop(g);
+        if let Some(cv) = cv {
+            cv.notify_all();
+        }
+    }
+
+    /// Broadcast to every parked waiter — only for the rare global
+    /// transitions (epoch advance, shutdown), never per `Set`.
+    fn wake_all(&self) {
+        for stripe in &self.stripes {
+            let g = lock(stripe);
+            let cvs: Vec<Arc<Condvar>> =
+                g.parked.values().map(|s| s.cv.clone()).collect();
+            drop(g);
+            for cv in cvs {
+                cv.notify_all();
+            }
+        }
+    }
 }
 
 /// The store server. Dropping it shuts the listener down.
@@ -67,24 +184,55 @@ pub struct TcpStoreServer {
 impl TcpStoreServer {
     /// Bind on 127.0.0.1 with an OS-assigned port.
     pub fn start() -> Result<Self> {
-        let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+        Self::start_on("127.0.0.1:0".parse().expect("literal addr"))
+    }
+
+    /// Bind on a specific local address (e.g. a test racing a client
+    /// that retries a known endpoint before the store is up).
+    pub fn start_on(bind: SocketAddr) -> Result<Self> {
+        let listener = TcpListener::bind(bind).context("bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let shared = Arc::new(Shared::default());
+        let shared = Arc::new(Shared::new());
         let stop = Arc::new(AtomicBool::new(false));
 
         let accept_shared = shared.clone();
         let accept_stop = stop.clone();
         let accept_thread = std::thread::spawn(move || {
+            // Worker pool: accepted connections flow through a shared
+            // queue; a worker serves one connection at a time and then
+            // returns to the queue. A new worker is spawned only when
+            // no idle worker exists, so the pool (and its JoinHandle
+            // list) is bounded by the concurrency high-water mark —
+            // connection *churn* reuses threads instead of leaking one
+            // handle per connection.
+            let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
+            let conn_rx = Arc::new(Mutex::new(conn_rx));
             let mut workers: Vec<JoinHandle<()>> = Vec::new();
             while !accept_stop.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let sh = accept_shared.clone();
-                        let st = accept_stop.clone();
-                        workers.push(std::thread::spawn(move || {
-                            let _ = serve_connection(stream, sh, st);
-                        }));
+                        // Consume one readiness token; if none is
+                        // available every live worker is (or may soon
+                        // be) busy — possibly parked in a fenced wait
+                        // — so this connection gets its own worker.
+                        let has_free = accept_shared
+                            .free_workers
+                            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                                v.checked_sub(1)
+                            })
+                            .is_ok();
+                        if !has_free {
+                            let sh = accept_shared.clone();
+                            let st = accept_stop.clone();
+                            let rx = conn_rx.clone();
+                            sh.live_workers.fetch_add(1, Ordering::SeqCst);
+                            sh.workers_spawned.fetch_add(1, Ordering::Relaxed);
+                            workers.push(std::thread::spawn(move || {
+                                pool_worker(rx, sh, st)
+                            }));
+                        }
+                        let _ = conn_tx.send(stream);
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_micros(200));
@@ -92,6 +240,9 @@ impl TcpStoreServer {
                     Err(_) => break,
                 }
             }
+            // Closing the queue releases idle workers; parked waiters
+            // are released by the server's Drop broadcast.
+            drop(conn_tx);
             for w in workers {
                 let _ = w.join();
             }
@@ -109,22 +260,34 @@ impl TcpStoreServer {
         self.shared.hellos.load(Ordering::Relaxed)
     }
 
-    /// Number of keys currently stored.
+    /// Number of keys currently stored (all stripes).
     pub fn key_count(&self) -> usize {
-        lock(&self.shared.map).len()
+        self.shared.stripes.iter().map(|s| lock(s).map.len()).sum()
     }
 
     /// Number of live barrier/arrive counters (pruned with the map's
     /// per-epoch keys on epoch advance).
     pub fn counter_count(&self) -> usize {
-        lock(&self.shared.counters).len()
+        self.shared.stripes.iter().map(|s| lock(s).counters.len()).sum()
     }
 
     /// Snapshot of every rank's latest heartbeat record — what the
     /// controller-side [`crate::coordinator::LeaseMonitor`] consumes
     /// each scan.
     pub fn beats(&self) -> Vec<BeatRecord> {
-        lock(&self.shared.beats).values().copied().collect()
+        let mut out = Vec::new();
+        self.beats_into(&mut out);
+        out
+    }
+
+    /// [`Self::beats`] into a caller-owned scratch buffer (cleared
+    /// first) — the controller's per-scan path, allocation-free at
+    /// steady state.
+    pub fn beats_into(&self, out: &mut Vec<BeatRecord>) {
+        out.clear();
+        for stripe in &self.shared.beats {
+            out.extend(lock(stripe).values().copied());
+        }
     }
 
     /// Current rendezvous epoch (advanced by `AdvanceEpoch`).
@@ -132,138 +295,281 @@ impl TcpStoreServer {
         self.shared.epoch.load(Ordering::SeqCst)
     }
 
-    /// Total requests served since start (all clients, all opcodes).
+    /// Logical requests served since start (batched sub-ops count
+    /// individually).
     pub fn request_count(&self) -> u64 {
         self.shared.requests.load(Ordering::Relaxed)
+    }
+
+    /// Wire frames read since start (one per round-trip; a `Batch` of
+    /// k ops is one frame).
+    pub fn frame_count(&self) -> u64 {
+        self.shared.frames.load(Ordering::Relaxed)
+    }
+
+    /// Parked waiters released by a publish so far (timeout polls and
+    /// fence/shutdown releases excluded). With per-key parking, one
+    /// `Set` contributes exactly its key's parked-waiter count — the
+    /// thundering-herd regression metric.
+    pub fn wake_count(&self) -> u64 {
+        self.shared.wakeups.load(Ordering::Relaxed)
+    }
+
+    /// Waiters currently parked on per-key slots (all stripes).
+    pub fn parked_waiters(&self) -> usize {
+        self.shared
+            .stripes
+            .iter()
+            .map(|s| lock(s).parked.values().map(|w| w.waiters).sum::<usize>())
+            .sum()
+    }
+
+    /// Pool workers currently alive (== the connection-concurrency
+    /// high-water mark, not the historical connection count).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::SeqCst)
+    }
+
+    /// Pool workers ever spawned — stays near the peak concurrency
+    /// under connection churn (thread reuse).
+    pub fn workers_spawned(&self) -> u64 {
+        self.shared.workers_spawned.load(Ordering::Relaxed)
     }
 }
 
 impl Drop for TcpStoreServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        // Wake any `wait`ers so their handler threads can observe stop.
-        self.shared.cv.notify_all();
+        // Wake every parked waiter so their pool workers can observe
+        // stop; idle workers exit when the accept thread closes the
+        // connection queue.
+        self.shared.wake_all();
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
     }
 }
 
-fn serve_connection(
-    mut stream: TcpStream,
+/// Pool worker: serve one connection at a time from the shared queue.
+/// Each cycle announces one readiness token *before* dequeueing, so
+/// the accept loop's spawn decision never relies on a stale idle
+/// count (see `Shared::free_workers`). Holding the queue mutex across
+/// `recv` is deliberate — one worker receives while the rest of the
+/// ready pool parks on the mutex.
+fn pool_worker(
+    rx: Arc<Mutex<Receiver<TcpStream>>>,
     shared: Arc<Shared>,
     stop: Arc<AtomicBool>,
+) {
+    // The first cycle does not announce: a worker is only spawned for
+    // a connection that found no token, so its first dequeue is
+    // already paid for — announcing would mint a phantom token and
+    // resurrect the stale-count starvation this scheme exists to fix.
+    let mut announce = false;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if announce {
+            shared.free_workers.fetch_add(1, Ordering::SeqCst);
+        }
+        announce = true;
+        let conn = {
+            let guard = lock(&rx);
+            match guard.recv() {
+                Ok(c) => c,
+                Err(_) => break, // queue closed: shutdown
+            }
+        };
+        let _ = serve_connection(conn, &shared, &stop);
+    }
+    shared.live_workers.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// `read_exact` that tolerates the connection's 100ms read-timeout
+/// polls without desyncing the stream: a timeout *before any byte of
+/// `buf` arrived* returns `Ok(false)` when `idle_ok` (the caller's
+/// stop-flag poll point); a timeout *mid-buffer* keeps reading — the
+/// peer has committed to this frame, and abandoning consumed bytes
+/// would make the next header read misparse the remainder. Large
+/// `Batch`/table frames make multi-read frames routine, so this is
+/// load-bearing, not defensive. Shutdown still interrupts a stalled
+/// mid-frame read via the stop flag.
+fn read_exact_persist(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    idle_ok: bool,
+) -> std::io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(ErrorKind::UnexpectedEof.into()),
+            Ok(n) => got += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if got == 0 && idle_ok {
+                    return Ok(false);
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return Err(ErrorKind::UnexpectedEof.into());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame into the reusable buffer, or `Ok(false)` for an
+/// idle poll (no bytes consumed — the caller rechecks the stop flag).
+fn read_frame_idle_aware(
+    stream: &mut TcpStream,
+    body: &mut Vec<u8>,
+    stop: &AtomicBool,
+) -> std::io::Result<bool> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_persist(stream, &mut len_buf, stop, true)? {
+        return Ok(false);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame too large: {len}"),
+        ));
+    }
+    body.clear();
+    body.resize(len, 0);
+    read_exact_persist(stream, body, stop, false)?;
+    Ok(true)
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    shared: &Shared,
+    stop: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(Some(Duration::from_millis(100)))
         .ok();
+    // Per-connection reusable buffers: at steady state a request/
+    // response cycle allocates nothing on the framing path.
+    let mut read_buf: Vec<u8> = Vec::new();
+    let mut write_buf: Vec<u8> = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        let body = match read_frame(&mut stream) {
-            Ok(b) => b,
-            Err(e) => {
-                // timeout -> poll the stop flag; EOF/reset -> done
-                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
-                    if matches!(
-                        ioe.kind(),
-                        ErrorKind::WouldBlock | ErrorKind::TimedOut
-                    ) {
-                        continue;
-                    }
-                }
-                return Ok(());
-            }
-        };
-        let req = Request::decode(&body)?;
-        let resp = handle(&shared, &stop, req);
-        write_frame(&mut stream, &resp.encode())?;
+        match read_frame_idle_aware(&mut stream, &mut read_buf, stop) {
+            Ok(true) => {}
+            Ok(false) => continue, // idle poll: recheck the stop flag
+            Err(_) => return Ok(()), // EOF/reset: done
+        }
+        shared.frames.fetch_add(1, Ordering::Relaxed);
+        let req = Request::decode(&read_buf)?;
+        let resp = handle(shared, stop, req);
+        resp.encode_into(&mut write_buf);
+        write_frame(&mut stream, &write_buf)?;
     }
 }
 
 fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
+    if let Request::Batch(items) = req {
+        // Pipelined sequence: execute serially, stop at the first
+        // fence so a superseded prefix never commits its dependent
+        // tail (e.g. a survivor's arrive after its delta wait was
+        // fenced). Nesting is rejected at decode.
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            let resp = handle(shared, stop, item);
+            let fenced = matches!(resp, Response::EpochFenced { .. });
+            out.push(resp);
+            if fenced {
+                break;
+            }
+        }
+        return Response::Multi(out);
+    }
     shared.requests.fetch_add(1, Ordering::Relaxed);
     match req {
+        Request::Batch(_) => unreachable!("handled above"),
         Request::Hello { .. } => {
             shared.hellos.fetch_add(1, Ordering::Relaxed);
             Response::HelloAck
         }
         Request::Set { key, value } => {
-            lock(&shared.map).insert(key, value);
-            shared.cv.notify_all();
+            shared.set_value(key, value.into());
             Response::Ok
         }
-        Request::Get { key } => match lock(&shared.map).get(&key) {
-            Some(v) => Response::Value(v.clone()),
-            None => Response::NotFound,
-        },
-        Request::Wait { key } => {
-            let mut map = lock(&shared.map);
-            loop {
-                if let Some(v) = map.get(&key) {
-                    return Response::Value(v.clone());
-                }
-                if stop.load(Ordering::Relaxed) {
-                    return Response::NotFound;
-                }
-                let (guard, _timeout) = shared
-                    .cv
-                    .wait_timeout(map, Duration::from_millis(100))
-                    .unwrap_or_else(PoisonError::into_inner);
-                map = guard;
+        Request::Get { key } => {
+            let g = lock(shared.stripe_for(&key));
+            match g.map.get(&key) {
+                Some(v) => Response::Value(v.clone()),
+                None => Response::NotFound,
             }
         }
+        // An unfenced wait is a fenced wait that can never be
+        // superseded (only published values, shutdown, or an epoch
+        // broadcast wake it — and the epoch check never trips).
+        Request::Wait { key } => fenced_wait(shared, stop, &key, u64::MAX),
         Request::Add { key, delta } => {
-            let mut counters = lock(&shared.counters);
-            let v = counters.entry(key).or_insert(0);
+            let mut g = lock(shared.stripe_for(&key));
+            let v = g.counters.entry(key).or_insert(0);
             *v += delta;
             Response::Counter(*v)
         }
-        Request::Count => Response::CountIs(lock(&shared.map).len() as u64),
+        Request::Count => {
+            let total: usize =
+                shared.stripes.iter().map(|s| lock(s).map.len()).sum();
+            Response::CountIs(total as u64)
+        }
         Request::WaitEpoch { key, epoch } => fenced_wait(shared, stop, &key, epoch),
         Request::AdvanceEpoch { to } => {
             let prev = shared.epoch.fetch_max(to, Ordering::SeqCst);
             let current = prev.max(to);
             prune_stale_epochs(shared, current);
-            // Wake every blocked waiter so stale fenced waits observe
-            // the new epoch and return `EpochFenced`.
-            shared.cv.notify_all();
+            // The one legitimate broadcast besides shutdown: every
+            // fenced waiter must observe the new epoch and return
+            // `EpochFenced`.
+            shared.wake_all();
             Response::Counter(current as i64)
         }
         Request::AdvertiseRestore { epoch, tag, addr } => {
             let current = shared.epoch.load(Ordering::SeqCst);
             if current > epoch {
                 // the restore this source belongs to is already stale
-                return Response::EpochFenced { current };
+                Response::EpochFenced { current }
+            } else {
+                shared.set_value(restore_key(epoch, tag), addr.into_bytes().into());
+                Response::Ok
             }
-            lock(&shared.map).insert(restore_key(epoch, tag), addr.into_bytes());
-            shared.cv.notify_all();
-            Response::Ok
         }
         Request::ClaimRestore { epoch, tag } => {
             fenced_wait(shared, stop, &restore_key(epoch, tag), epoch)
         }
         Request::AbortEpoch { unless_key, tombstone_key, tombstone, to } => {
-            // Atomic with `Set` and the fenced waits (all serialize on
-            // the map mutex): either the release key landed first and
-            // the abort is a no-op, or the epoch is fenced before any
-            // waiter can observe the late release — never a mix.
-            let mut map = lock(&shared.map);
-            if map.contains_key(&unless_key) {
+            // Atomic with `Set` and the fenced waits on the release
+            // key's stripe: either the release key landed first and
+            // the abort is a no-op, or the epoch is fenced while that
+            // stripe is held — so no waiter can slip between a late
+            // release and the fence — before the tombstone publishes.
+            // Never a mix.
+            let g = lock(shared.stripe_for(&unless_key));
+            if g.map.contains_key(&unless_key) {
                 Response::Counter(0)
             } else {
-                map.insert(tombstone_key, tombstone);
                 let prev = shared.epoch.fetch_max(to, Ordering::SeqCst);
-                drop(map);
+                drop(g);
+                shared.set_value(tombstone_key, tombstone.into());
                 prune_stale_epochs(shared, prev.max(to));
-                shared.cv.notify_all();
+                shared.wake_all();
                 Response::Counter(1)
             }
         }
         Request::Heartbeat { rank, incarnation, step_tag, device_code } => {
-            let mut beats = lock(&shared.beats);
+            let mut beats = lock(shared.beats_for(rank));
             let rec = BeatRecord { rank, incarnation, step_tag, device_code, at: Instant::now() };
             match beats.get(&rank) {
                 // a stale incarnation must never refresh its
@@ -277,19 +583,19 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
         }
         Request::DelPrefix { prefix } => {
             let mut removed = 0i64;
-            let mut map = lock(&shared.map);
-            map.retain(|k, _| {
-                let keep = !k.starts_with(&prefix);
-                removed += i64::from(!keep);
-                keep
-            });
-            drop(map);
-            let mut counters = lock(&shared.counters);
-            counters.retain(|k, _| {
-                let keep = !k.starts_with(&prefix);
-                removed += i64::from(!keep);
-                keep
-            });
+            for stripe in &shared.stripes {
+                let mut g = lock(stripe);
+                g.map.retain(|k, _| {
+                    let keep = !k.starts_with(&prefix);
+                    removed += i64::from(!keep);
+                    keep
+                });
+                g.counters.retain(|k, _| {
+                    let keep = !k.starts_with(&prefix);
+                    removed += i64::from(!keep);
+                    keep
+                });
+            }
             Response::Counter(removed)
         }
     }
@@ -314,8 +620,11 @@ fn prune_stale_epochs(shared: &Shared, current: u64) {
         }
         false
     };
-    lock(&shared.map).retain(|k, _| !stale(k));
-    lock(&shared.counters).retain(|k, _| !stale(k));
+    for stripe in &shared.stripes {
+        let mut g = lock(stripe);
+        g.map.retain(|k, _| !stale(k));
+        g.counters.retain(|k, _| !stale(k));
+    }
 }
 
 /// Store key under which a restore source's endpoint is advertised.
@@ -324,25 +633,47 @@ fn restore_key(epoch: u64, tag: u64) -> String {
 }
 
 /// Block until `key` is published or the rendezvous epoch passes
-/// `epoch` — the shared body of `WaitEpoch` and `ClaimRestore`.
+/// `epoch` — the shared body of `Wait`, `WaitEpoch` and
+/// `ClaimRestore`. The waiter parks on the key's own slot: only a
+/// `Set` of this key (or an epoch/shutdown broadcast) notifies it. A
+/// waiter that parked and is then released by its key's publish is
+/// counted in `wakeups` — the deterministic per-key-parking metric
+/// (raw notify counts would race timeout boundaries and spurious
+/// wakeups).
 fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Response {
-    let mut map = lock(&shared.map);
+    let stripe = shared.stripe_for(key);
+    let mut g = lock(stripe);
+    let mut parked = false;
     loop {
         let current = shared.epoch.load(Ordering::SeqCst);
         if current > epoch {
             return Response::EpochFenced { current };
         }
-        if let Some(v) = map.get(key) {
+        if let Some(v) = g.map.get(key) {
+            if parked {
+                shared.wakeups.fetch_add(1, Ordering::Relaxed);
+            }
             return Response::Value(v.clone());
         }
         if stop.load(Ordering::Relaxed) {
             return Response::NotFound;
         }
-        let (guard, _timeout) = shared
-            .cv
-            .wait_timeout(map, Duration::from_millis(100))
+        let cv = {
+            let slot = g.parked.entry(key.to_string()).or_default();
+            slot.waiters += 1;
+            slot.cv.clone()
+        };
+        parked = true;
+        let (guard, _timeout) = cv
+            .wait_timeout(g, Duration::from_millis(100))
             .unwrap_or_else(PoisonError::into_inner);
-        map = guard;
+        g = guard;
+        if let Some(slot) = g.parked.get_mut(key) {
+            slot.waiters -= 1;
+            if slot.waiters == 0 {
+                g.parked.remove(key);
+            }
+        }
     }
 }
 
@@ -351,7 +682,7 @@ fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Res
 /// is retryable — re-issue the wait at `current`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FencedWait {
-    Value(Vec<u8>),
+    Value(Bytes),
     Superseded { current: u64 },
 }
 
@@ -368,8 +699,11 @@ impl TcpStoreClient {
         Ok(TcpStoreClient { stream, ops: 0 })
     }
 
-    /// Requests sent over this connection since connect — the quantity
-    /// the rendezvous protocol keeps O(1) per surviving node.
+    /// Logical store operations the server executed for this
+    /// connection — the quantity the rendezvous protocol keeps O(1)
+    /// per surviving node. Batched sub-ops count individually (a
+    /// fence-aborted batch tail, which never executed, does not), so
+    /// pipelining changes round-trips, not message budgets.
     pub fn ops_sent(&self) -> u64 {
         self.ops
     }
@@ -379,6 +713,48 @@ impl TcpStoreClient {
         write_frame(&mut self.stream, &req.encode())?;
         let body = read_frame(&mut self.stream)?;
         Response::decode(&body)
+    }
+
+    /// Send one raw request and return its raw response — the generic
+    /// op runner the throughput bench and property tests drive.
+    pub fn roundtrip(&mut self, req: Request) -> Result<Response> {
+        self.call(req)
+    }
+
+    /// Execute `reqs` as one pipelined `Batch` frame: one round-trip
+    /// for the whole sequence. The server runs the ops serially and
+    /// stops at the first `EpochFenced` (included in the returned
+    /// responses; the skipped tail is absent), so dependent suffixes
+    /// never run against a superseded epoch.
+    pub fn batch(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = reqs.len();
+        let blocking = reqs.iter().any(|r| {
+            matches!(
+                r,
+                Request::Wait { .. }
+                    | Request::WaitEpoch { .. }
+                    | Request::ClaimRestore { .. }
+            )
+        });
+        if blocking {
+            // waits can exceed the default read path; use a long timeout
+            self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        }
+        write_frame(&mut self.stream, &Request::Batch(reqs).encode())?;
+        let body = read_frame(&mut self.stream)?;
+        match Response::decode(&body)? {
+            Response::Multi(rs) => {
+                if rs.len() > n {
+                    bail!("batch returned {} responses for {n} ops", rs.len());
+                }
+                self.ops += rs.len() as u64;
+                Ok(rs)
+            }
+            other => bail!("unexpected batch response {other:?}"),
+        }
     }
 
     /// Handshake; returns once the server acknowledged.
@@ -396,7 +772,7 @@ impl TcpStoreClient {
         }
     }
 
-    pub fn get(&mut self, key: &str) -> Result<Option<Vec<u8>>> {
+    pub fn get(&mut self, key: &str) -> Result<Option<Bytes>> {
         match self.call(Request::Get { key: key.into() })? {
             Response::Value(v) => Ok(Some(v)),
             Response::NotFound => Ok(None),
@@ -405,7 +781,7 @@ impl TcpStoreClient {
     }
 
     /// Block until `key` is published.
-    pub fn wait(&mut self, key: &str) -> Result<Vec<u8>> {
+    pub fn wait(&mut self, key: &str) -> Result<Bytes> {
         // waits can exceed the default read path; use a long timeout
         self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
         match self.call(Request::Wait { key: key.into() })? {
@@ -496,7 +872,9 @@ impl TcpStoreClient {
 
     /// Push one liveness beat for `(rank, incarnation)`. Fire-and-ack:
     /// one round trip, O(1) payload — the per-worker cost the
-    /// detection-latency bench asserts is scale-independent.
+    /// detection-latency bench asserts is scale-independent. (A node
+    /// agent coalescing several local ranks sends one `Batch` of these
+    /// instead; see `training::worker::spawn_node_heartbeat`.)
     pub fn heartbeat(
         &mut self,
         rank: u64,
@@ -590,7 +968,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         let mut c = TcpStoreClient::connect(addr).unwrap();
         c.set("late", b"v").unwrap();
-        assert_eq!(waiter.join().unwrap(), b"v");
+        assert_eq!(&waiter.join().unwrap()[..], b"v");
     }
 
     #[test]
@@ -664,7 +1042,10 @@ mod tests {
         });
         std::thread::sleep(Duration::from_millis(50));
         c.set("rdzv/3/delta", b"subs").unwrap();
-        assert_eq!(waiter.join().unwrap(), FencedWait::Value(b"subs".to_vec()));
+        assert_eq!(
+            waiter.join().unwrap(),
+            FencedWait::Value(Bytes::from(&b"subs"[..]))
+        );
     }
 
     #[test]
@@ -690,6 +1071,147 @@ mod tests {
     }
 
     #[test]
+    fn batch_pipelines_ops_in_one_frame() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        let resps = c
+            .batch(vec![
+                Request::Set { key: "a".into(), value: b"1".to_vec() },
+                Request::Get { key: "a".into() },
+                Request::Add { key: "n".into(), delta: 5 },
+                Request::Heartbeat { rank: 1, incarnation: 1, step_tag: 0, device_code: -1 },
+            ])
+            .unwrap();
+        assert_eq!(resps.len(), 4);
+        assert_eq!(resps[0], Response::Ok);
+        assert_eq!(resps[1], Response::Value(Bytes::from(&b"1"[..])));
+        assert_eq!(resps[2], Response::Counter(5));
+        assert_eq!(resps[3], Response::Ok);
+        // one wire frame, four logical ops: pipelining amortises the
+        // round-trip without changing message budgets
+        assert_eq!(server.frame_count(), 1);
+        assert_eq!(c.ops_sent(), 4);
+        assert_eq!(server.request_count(), 4);
+        assert_eq!(server.beats().len(), 1);
+    }
+
+    #[test]
+    fn batch_stops_at_epoch_fence() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.advance_epoch(5).unwrap();
+        let resps = c
+            .batch(vec![
+                Request::Set { key: "x".into(), value: b"1".to_vec() },
+                Request::WaitEpoch { key: "absent".into(), epoch: 2 },
+                Request::Set { key: "never".into(), value: b"2".to_vec() },
+            ])
+            .unwrap();
+        // the fenced wait is the last executed op; the tail is skipped
+        assert_eq!(resps.len(), 2);
+        assert_eq!(resps[0], Response::Ok);
+        assert_eq!(resps[1], Response::EpochFenced { current: 5 });
+        assert!(c.get("x").unwrap().is_some());
+        assert_eq!(c.get("never").unwrap(), None);
+    }
+
+    #[test]
+    fn wait_inside_batch_blocks_then_runs_tail() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let waiter = std::thread::spawn(move || {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.batch(vec![
+                Request::WaitEpoch { key: "late".into(), epoch: 0 },
+                Request::Add { key: "after".into(), delta: 1 },
+            ])
+            .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        // the batched Add must not run before its wait releases
+        assert_eq!(c.add("after", 0).unwrap(), 0);
+        c.set("late", b"v").unwrap();
+        let resps = waiter.join().unwrap();
+        assert_eq!(resps[0], Response::Value(Bytes::from(&b"v"[..])));
+        assert_eq!(resps[1], Response::Counter(1));
+    }
+
+    #[test]
+    fn set_wakes_only_matching_waiters() {
+        // The thundering-herd regression (§11): the old single global
+        // condvar woke every blocked waiter on every Set. Per-key
+        // parking notifies exactly the matching key's slot, so K
+        // waiters on K distinct keys are released by exactly K
+        // publishes — `wake_count` counts publish-released parked
+        // waiters (deterministic), never raw condvar notifies.
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let k = 6;
+        let mut waiters = Vec::new();
+        for i in 0..k {
+            waiters.push(std::thread::spawn(move || {
+                let mut c = TcpStoreClient::connect(addr).unwrap();
+                c.wait(&format!("park/{i}")).unwrap()
+            }));
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.parked_waiters() < k {
+            assert!(Instant::now() < deadline, "waiters never parked");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let wake0 = server.wake_count();
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.set("park/3", b"v3").unwrap();
+        assert_eq!(&waiters.remove(3).join().unwrap()[..], b"v3");
+        assert_eq!(
+            server.wake_count() - wake0,
+            1,
+            "one publish must release exactly its own key's waiter"
+        );
+        for i in [0usize, 1, 2, 4, 5] {
+            c.set(&format!("park/{i}"), b"v").unwrap();
+        }
+        for w in waiters {
+            w.join().unwrap();
+        }
+        assert_eq!(
+            server.wake_count() - wake0,
+            k as u64,
+            "K publishes to K distinct keys must release exactly K waiters"
+        );
+    }
+
+    #[test]
+    fn worker_pool_reuses_threads_across_connection_churn() {
+        // Regression (§11 satellite): the old accept loop spawned one
+        // thread per connection and pushed every JoinHandle into a Vec
+        // joined only at shutdown — a long churn of short-lived
+        // connections grew both without bound. The pool hands finished
+        // workers the next connection instead.
+        let server = TcpStoreServer::start().unwrap();
+        for i in 0..50 {
+            {
+                let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+                c.set("churn", format!("v{i}").as_bytes()).unwrap();
+            }
+            // let the worker observe the EOF and return to the pool
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            server.live_workers() <= 8,
+            "live workers must track peak concurrency, not churn: {}",
+            server.live_workers()
+        );
+        assert!(
+            server.workers_spawned() <= 16,
+            "threads must be reused across churn: {} spawns for 50 connections",
+            server.workers_spawned()
+        );
+        assert_eq!(server.key_count(), 1);
+    }
+
+    #[test]
     fn restore_claim_blocks_until_advertised() {
         let server = TcpStoreServer::start().unwrap();
         let addr = server.addr();
@@ -703,7 +1225,7 @@ mod tests {
         assert_eq!(c.advertise_restore(3, 0xABC, "10.0.0.1:9").unwrap(), None);
         assert_eq!(
             claimer.join().unwrap(),
-            FencedWait::Value(b"10.0.0.1:9".to_vec())
+            FencedWait::Value(Bytes::from(&b"10.0.0.1:9"[..]))
         );
     }
 
@@ -776,28 +1298,34 @@ mod tests {
     }
 
     #[test]
-    fn poisoned_map_still_answers_requests() {
+    fn poisoned_stripe_still_answers_requests() {
         // Regression (DESIGN §10 hardening): a panicking handler
-        // thread used to poison the map mutex and turn every later
+        // thread used to poison the store mutex and turn every later
         // `.lock().unwrap()` into a cascading panic — one bad client
-        // killed the whole control plane. The guard is now recovered.
+        // killed the whole control plane. Stripe guards are recovered.
         let server = TcpStoreServer::start().unwrap();
         let mut c = TcpStoreClient::connect(server.addr()).unwrap();
         c.set("pre", b"survives").unwrap();
 
-        let sh = server.shared.clone();
-        let _ = std::thread::spawn(move || {
-            let _guard = sh.map.lock().unwrap();
-            panic!("poison the map mutex (expected panic)");
-        })
-        .join();
-        assert!(server.shared.map.is_poisoned(), "setup: mutex must be poisoned");
+        for key in ["pre", "post"] {
+            let sh = server.shared.clone();
+            let key = key.to_string();
+            let _ = std::thread::spawn(move || {
+                let _guard = sh.stripe_for(&key).lock().unwrap();
+                panic!("poison a stripe mutex (expected panic)");
+            })
+            .join();
+        }
+        assert!(
+            server.shared.stripe_for("pre").is_poisoned(),
+            "setup: stripe must be poisoned"
+        );
 
         assert_eq!(c.get("pre").unwrap().as_deref(), Some(&b"survives"[..]));
         c.set("post", b"v").unwrap();
         assert_eq!(c.get("post").unwrap().as_deref(), Some(&b"v"[..]));
         assert_eq!(server.key_count(), 2);
-        // fenced waits cross the same mutex + condvar
+        // fenced waits cross the same stripes + parking slots
         c.advance_epoch(1).unwrap();
         assert_eq!(
             c.wait_epoch("absent", 0).unwrap(),

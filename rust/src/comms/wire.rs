@@ -3,9 +3,35 @@
 //! Frames: `u32-le length | u8 opcode | payload`. Payload strings are
 //! `u32-le len | bytes`. Deliberately tiny — just enough to implement
 //! the PyTorch-TCPStore-style set/get/wait/add operations.
+//!
+//! Since the data-plane redesign (DESIGN.md §11):
+//!
+//! * values travel as [`Bytes`] (`Arc<[u8]>`) so the store can answer
+//!   `Get`/`Wait` with a reference-count bump instead of a deep copy;
+//! * `Batch`/`Multi` carry a pipelined op sequence in one frame — one
+//!   round-trip for multi-op protocols (survivor re-key, per-node
+//!   heartbeat coalescing). The server executes a batch serially and
+//!   **stops at the first `EpochFenced` response** (the remaining ops
+//!   are not executed), so fenced sequences never run their tail
+//!   against a superseded epoch;
+//! * responses are encoded into a reusable per-connection buffer
+//!   ([`Response::encode_into`]) instead of a fresh `Vec` per frame,
+//!   and [`read_frame_into`] reuses the connection's read buffer.
 
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
+
+/// Reference-counted value bytes: cloned by refcount on the store's
+/// hot path, copied only at the wire boundary.
+pub type Bytes = std::sync::Arc<[u8]>;
+
+/// Cap on ops per `Batch` frame (sanity bound for decode).
+pub const MAX_BATCH_OPS: usize = 65_536;
+
+/// Hard cap on one wire frame's body — shared by every reader (the
+/// client codec here and the server's idle-aware read path) so the
+/// two sides can never disagree on what is "too large".
+pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
@@ -40,12 +66,13 @@ pub enum Request {
     /// (retryable — replan the restore at the returned epoch)
     ClaimRestore { epoch: u64, tag: u64 },
     /// atomically abort a rendezvous epoch *unless* its release key
-    /// already exists: under the store's map lock, if `unless_key` is
-    /// absent, publish `tombstone_key = tombstone` and advance the
-    /// epoch to `to` -> Counter(1); if `unless_key` is present the
-    /// barrier released first and nothing happens -> Counter(0).
-    /// Serialized with `Set` and the fenced waits, this closes the
-    /// supervised barrier's check-then-abort race.
+    /// already exists: under the release key's stripe lock, if
+    /// `unless_key` is absent, fence the epoch to `to`, then publish
+    /// `tombstone_key = tombstone` -> Counter(1); if `unless_key` is
+    /// present the barrier released first and nothing happens ->
+    /// Counter(0). Serialized with `Set` and the fenced waits on that
+    /// stripe, this closes the supervised barrier's check-then-abort
+    /// race.
     AbortEpoch {
         unless_key: String,
         tombstone_key: String,
@@ -69,12 +96,18 @@ pub enum Request {
     /// delete every key starting with `prefix` -> Counter(removed).
     /// The pruning primitive behind bounded per-epoch key retention.
     DelPrefix { prefix: String },
+    /// pipelined op sequence, executed serially server-side ->
+    /// Multi(responses). Execution stops at the first `EpochFenced`
+    /// sub-response (included in the Multi; the tail is skipped), so a
+    /// fenced prefix can never commit its dependent suffix. Batches do
+    /// not nest.
+    Batch(Vec<Request>),
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Response {
     Ok,
-    Value(Vec<u8>),
+    Value(Bytes),
     NotFound,
     Counter(i64),
     CountIs(u64),
@@ -82,6 +115,9 @@ pub enum Response {
     /// A fenced wait was superseded: the store's rendezvous epoch is
     /// now `current`, past the epoch the waiter was fenced at.
     EpochFenced { current: u64 },
+    /// Per-op responses for a `Batch`; possibly shorter than the batch
+    /// when an `EpochFenced` aborted the tail.
+    Multi(Vec<Response>),
 }
 
 fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
@@ -113,25 +149,28 @@ fn get_string(buf: &[u8], pos: &mut usize) -> Result<String> {
 }
 
 impl Request {
-    pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::new();
+    /// Append the opcode + payload *body* (no length prefix) to
+    /// `body` — the form `Batch` nests. Nested items are encoded in
+    /// place with a back-patched length (no per-item allocation),
+    /// mirroring `Response::Multi`.
+    fn encode_body_into(&self, body: &mut Vec<u8>) {
         match self {
             Request::Set { key, value } => {
                 body.push(0);
-                put_bytes(&mut body, key.as_bytes());
-                put_bytes(&mut body, value);
+                put_bytes(body, key.as_bytes());
+                put_bytes(body, value);
             }
             Request::Get { key } => {
                 body.push(1);
-                put_bytes(&mut body, key.as_bytes());
+                put_bytes(body, key.as_bytes());
             }
             Request::Wait { key } => {
                 body.push(2);
-                put_bytes(&mut body, key.as_bytes());
+                put_bytes(body, key.as_bytes());
             }
             Request::Add { key, delta } => {
                 body.push(3);
-                put_bytes(&mut body, key.as_bytes());
+                put_bytes(body, key.as_bytes());
                 body.extend_from_slice(&delta.to_le_bytes());
             }
             Request::Count => body.push(4),
@@ -141,7 +180,7 @@ impl Request {
             }
             Request::WaitEpoch { key, epoch } => {
                 body.push(6);
-                put_bytes(&mut body, key.as_bytes());
+                put_bytes(body, key.as_bytes());
                 body.extend_from_slice(&epoch.to_le_bytes());
             }
             Request::AdvanceEpoch { to } => {
@@ -152,7 +191,7 @@ impl Request {
                 body.push(8);
                 body.extend_from_slice(&epoch.to_le_bytes());
                 body.extend_from_slice(&tag.to_le_bytes());
-                put_bytes(&mut body, addr.as_bytes());
+                put_bytes(body, addr.as_bytes());
             }
             Request::ClaimRestore { epoch, tag } => {
                 body.push(9);
@@ -161,9 +200,9 @@ impl Request {
             }
             Request::AbortEpoch { unless_key, tombstone_key, tombstone, to } => {
                 body.push(10);
-                put_bytes(&mut body, unless_key.as_bytes());
-                put_bytes(&mut body, tombstone_key.as_bytes());
-                put_bytes(&mut body, tombstone);
+                put_bytes(body, unless_key.as_bytes());
+                put_bytes(body, tombstone_key.as_bytes());
+                put_bytes(body, tombstone);
                 body.extend_from_slice(&to.to_le_bytes());
             }
             Request::Heartbeat { rank, incarnation, step_tag, device_code } => {
@@ -175,10 +214,28 @@ impl Request {
             }
             Request::DelPrefix { prefix } => {
                 body.push(12);
-                put_bytes(&mut body, prefix.as_bytes());
+                put_bytes(body, prefix.as_bytes());
+            }
+            Request::Batch(items) => {
+                body.push(13);
+                body.extend_from_slice(&(items.len() as u32).to_le_bytes());
+                for item in items {
+                    let at = body.len();
+                    body.extend_from_slice(&[0u8; 4]);
+                    item.encode_body_into(body);
+                    let len = (body.len() - at - 4) as u32;
+                    body[at..at + 4].copy_from_slice(&len.to_le_bytes());
+                }
             }
         }
-        frame(body)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![0u8; 4];
+        self.encode_body_into(&mut out);
+        let len = (out.len() - 4) as u32;
+        out[..4].copy_from_slice(&len.to_le_bytes());
+        out
     }
 
     pub fn decode(body: &[u8]) -> Result<Request> {
@@ -265,43 +322,85 @@ impl Request {
                 })
             }
             Some(12) => Ok(Request::DelPrefix { prefix: get_string(body, &mut pos)? }),
+            Some(13) => {
+                let count = get_u32(body, &mut pos)? as usize;
+                if count > MAX_BATCH_OPS {
+                    bail!("batch too large: {count} ops");
+                }
+                let mut items = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    let sub = get_bytes(body, &mut pos)?;
+                    if sub.first() == Some(&13) {
+                        bail!("nested batch rejected");
+                    }
+                    items.push(Request::decode(&sub)?);
+                }
+                Ok(Request::Batch(items))
+            }
             other => bail!("bad request opcode {other:?}"),
         }
     }
 }
 
 impl Response {
-    pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::new();
+    /// Append the opcode + payload body to `out` (no length prefix).
+    fn encode_body_into(&self, out: &mut Vec<u8>) {
         match self {
-            Response::Ok => body.push(0),
+            Response::Ok => out.push(0),
             Response::Value(v) => {
-                body.push(1);
-                put_bytes(&mut body, v);
+                out.push(1);
+                put_bytes(out, v);
             }
-            Response::NotFound => body.push(2),
+            Response::NotFound => out.push(2),
             Response::Counter(v) => {
-                body.push(3);
-                body.extend_from_slice(&v.to_le_bytes());
+                out.push(3);
+                out.extend_from_slice(&v.to_le_bytes());
             }
             Response::CountIs(v) => {
-                body.push(4);
-                body.extend_from_slice(&v.to_le_bytes());
+                out.push(4);
+                out.extend_from_slice(&v.to_le_bytes());
             }
-            Response::HelloAck => body.push(5),
+            Response::HelloAck => out.push(5),
             Response::EpochFenced { current } => {
-                body.push(6);
-                body.extend_from_slice(&current.to_le_bytes());
+                out.push(6);
+                out.extend_from_slice(&current.to_le_bytes());
+            }
+            Response::Multi(items) => {
+                out.push(7);
+                out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+                for item in items {
+                    let at = out.len();
+                    out.extend_from_slice(&[0u8; 4]);
+                    item.encode_body_into(out);
+                    let len = (out.len() - at - 4) as u32;
+                    out[at..at + 4].copy_from_slice(&len.to_le_bytes());
+                }
             }
         }
-        frame(body)
+    }
+
+    /// Encode the full frame (length prefix + body) into a reusable
+    /// buffer — the server's per-connection hot path: no allocation
+    /// once the buffer has grown to the connection's working set.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&[0u8; 4]);
+        self.encode_body_into(out);
+        let len = (out.len() - 4) as u32;
+        out[..4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
     }
 
     pub fn decode(body: &[u8]) -> Result<Response> {
         let mut pos = 1;
         match body.first() {
             Some(0) => Ok(Response::Ok),
-            Some(1) => Ok(Response::Value(get_bytes(body, &mut pos)?)),
+            Some(1) => Ok(Response::Value(Bytes::from(get_bytes(body, &mut pos)?))),
             Some(2) => Ok(Response::NotFound),
             Some(3) => {
                 if pos + 8 > body.len() {
@@ -327,29 +426,46 @@ impl Response {
                 let current = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
                 Ok(Response::EpochFenced { current })
             }
+            Some(7) => {
+                let count = get_u32(body, &mut pos)? as usize;
+                if count > MAX_BATCH_OPS {
+                    bail!("multi too large: {count} responses");
+                }
+                let mut items = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    let sub = get_bytes(body, &mut pos)?;
+                    if sub.first() == Some(&7) {
+                        bail!("nested multi rejected");
+                    }
+                    items.push(Response::decode(&sub)?);
+                }
+                Ok(Response::Multi(items))
+            }
             other => bail!("bad response opcode {other:?}"),
         }
     }
 }
 
-fn frame(body: Vec<u8>) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 + body.len());
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend(body);
-    out
-}
-
 /// Read one length-prefixed frame body from a stream.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut body = Vec::new();
+    read_frame_into(r, &mut body)?;
+    Ok(body)
+}
+
+/// Read one length-prefixed frame body into a reusable buffer — the
+/// server's per-connection read path (no allocation at steady state).
+pub fn read_frame_into<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<()> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len > 256 * 1024 * 1024 {
+    if len > MAX_FRAME_BYTES {
         bail!("frame too large: {len}");
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)?;
-    Ok(body)
+    body.clear();
+    body.resize(len, 0);
+    r.read_exact(body)?;
+    Ok(())
 }
 
 /// Write one pre-encoded frame (already length-prefixed).
@@ -416,12 +532,51 @@ mod tests {
     #[test]
     fn response_roundtrips() {
         roundtrip_resp(Response::Ok);
-        roundtrip_resp(Response::Value(vec![0; 1000]));
+        roundtrip_resp(Response::Value(Bytes::from(vec![0u8; 1000])));
         roundtrip_resp(Response::NotFound);
         roundtrip_resp(Response::Counter(-1));
         roundtrip_resp(Response::CountIs(42));
         roundtrip_resp(Response::HelloAck);
         roundtrip_resp(Response::EpochFenced { current: 9 });
+    }
+
+    #[test]
+    fn batch_roundtrips() {
+        roundtrip_req(Request::Batch(vec![]));
+        roundtrip_req(Request::Batch(vec![
+            Request::Set { key: "a".into(), value: vec![7; 64] },
+            Request::WaitEpoch { key: "rdzv/2/delta".into(), epoch: 2 },
+            Request::Add { key: "rdzv/2/arrived".into(), delta: 1 },
+            Request::Heartbeat { rank: 3, incarnation: 2, step_tag: 9, device_code: -1 },
+        ]));
+        roundtrip_resp(Response::Multi(vec![]));
+        roundtrip_resp(Response::Multi(vec![
+            Response::Ok,
+            Response::Value(Bytes::from(&b"delta"[..])),
+            Response::Counter(4),
+            Response::EpochFenced { current: 3 },
+        ]));
+    }
+
+    #[test]
+    fn nested_batch_is_rejected() {
+        let nested = Request::Batch(vec![Request::Batch(vec![Request::Count])]);
+        let enc = nested.encode();
+        assert!(Request::decode(&enc[4..]).is_err());
+        let multi = Response::Multi(vec![Response::Multi(vec![Response::Ok])]);
+        let enc = multi.encode();
+        assert!(Response::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let mut buf = Vec::new();
+        Response::Value(Bytes::from(&b"abcdef"[..])).encode_into(&mut buf);
+        let first = buf.clone();
+        // a second, smaller encode reuses (and truncates) the buffer
+        Response::Ok.encode_into(&mut buf);
+        assert_eq!(Response::decode(&buf[4..]).unwrap(), Response::Ok);
+        assert_eq!(Response::decode(&first[4..]).unwrap(), Response::Value(Bytes::from(&b"abcdef"[..])));
     }
 
     #[test]
@@ -431,6 +586,20 @@ mod tests {
         let mut cursor = std::io::Cursor::new(enc.clone());
         let body = read_frame(&mut cursor).unwrap();
         assert_eq!(Request::decode(&body).unwrap(), msg);
+    }
+
+    #[test]
+    fn read_frame_into_reuses_buffer() {
+        let a = Request::Set { key: "a".into(), value: vec![9; 100] }.encode();
+        let b = Request::Count.encode();
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let mut cursor = std::io::Cursor::new(stream);
+        let mut buf = Vec::new();
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert!(matches!(Request::decode(&buf).unwrap(), Request::Set { .. }));
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(Request::decode(&buf).unwrap(), Request::Count);
     }
 
     #[test]

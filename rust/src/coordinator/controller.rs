@@ -160,6 +160,10 @@ pub struct Controller {
     /// Wire-plane detection over leased heartbeats (DESIGN.md §10);
     /// present exactly when `rebuild_plane` is.
     lease: Option<LeaseMonitor>,
+    /// Reused snapshot buffer for the per-scan beat drain — the scan
+    /// runs every heartbeat interval for the whole job, so it must not
+    /// allocate a fresh Vec each time.
+    beat_scratch: Vec<crate::comms::tcp_store::BeatRecord>,
     rebuild_epoch: u64,
     report: RunReport,
     stopped: BTreeMap<usize, u64>, // rank -> param hash
@@ -223,6 +227,7 @@ impl Controller {
             shared_rt,
             rebuild_plane,
             lease,
+            beat_scratch: Vec::new(),
             rebuild_epoch: 0,
             report: RunReport::default(),
             stopped: BTreeMap::new(),
@@ -445,8 +450,9 @@ impl Controller {
             (Some(lease), Some(server)) => (lease, server),
             _ => return Vec::new(),
         };
-        for b in server.beats() {
-            lease.observe_beat(&b);
+        server.beats_into(&mut self.beat_scratch);
+        for b in &self.beat_scratch {
+            lease.observe_beat(b);
         }
         lease.scan(Instant::now())
     }

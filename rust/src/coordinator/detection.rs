@@ -31,7 +31,8 @@ use crate::comms::tcp_store::{BeatRecord, TcpStoreServer};
 use crate::metrics::bench::BenchReport;
 use crate::metrics::Histogram;
 use crate::training::worker::{
-    kind_from_code, spawn_heartbeat, HeartbeatCfg, MonitorBoard,
+    kind_from_code, spawn_heartbeat, spawn_node_heartbeat, HeartbeatCfg,
+    MonitorBoard, NodeAgentCfg, NodeRank,
 };
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
@@ -486,6 +487,12 @@ pub struct DetectionSweepConfig {
     pub interval: Duration,
     /// Missed intervals before lease expiry.
     pub lease_misses: u32,
+    /// Push the live sample's beats through one *node agent* (a single
+    /// `Batch` frame per interval for all sampled ranks, DESIGN.md
+    /// §11) instead of one emitter connection per rank. Off by
+    /// default so the committed baseline measures the per-process
+    /// emitter path.
+    pub node_agent: bool,
 }
 
 impl Default for DetectionSweepConfig {
@@ -496,6 +503,7 @@ impl Default for DetectionSweepConfig {
             live_agents: 16,
             interval: Duration::from_millis(20),
             lease_misses: 5,
+            node_agent: false,
         }
     }
 }
@@ -543,13 +551,27 @@ pub fn detection_sweep(cfg: &DetectionSweepConfig) -> Result<BenchReport> {
         let mut emitters = Vec::new();
         let mut boards: BTreeMap<usize, Arc<MonitorBoard>> = BTreeMap::new();
         for &r in &sample {
-            let b = MonitorBoard::new();
-            emitters.push(spawn_heartbeat(
-                r,
-                b.clone(),
-                HeartbeatCfg { store: addr, interval: cfg.interval, incarnation: 1 },
+            boards.insert(r, MonitorBoard::new());
+        }
+        if cfg.node_agent {
+            // coalesced mode: the whole sample's beats ride one Batch
+            // frame per interval through a single node agent
+            let members: Vec<NodeRank> = sample
+                .iter()
+                .map(|&r| NodeRank { rank: r, incarnation: 1, board: boards[&r].clone() })
+                .collect();
+            emitters.push(spawn_node_heartbeat(
+                members,
+                NodeAgentCfg { store: addr, interval: cfg.interval },
             ));
-            boards.insert(r, b);
+        } else {
+            for &r in &sample {
+                emitters.push(spawn_heartbeat(
+                    r,
+                    boards[&r].clone(),
+                    HeartbeatCfg { store: addr, interval: cfg.interval, incarnation: 1 },
+                ));
+            }
         }
 
         let mut h = Histogram::new();
@@ -628,11 +650,16 @@ pub fn detection_sweep(cfg: &DetectionSweepConfig) -> Result<BenchReport> {
     report.note(format!(
         "{} samples/scale (+1 warmup); lease = {} x {:?}; latency measured \
          last-good-heartbeat -> detection over real sockets; lease table at \
-         full scale, {} live emitters",
+         full scale, {} live emitters ({})",
         cfg.samples,
         cfg.lease_misses,
         cfg.interval,
-        cfg.live_agents
+        cfg.live_agents,
+        if cfg.node_agent {
+            "coalesced through one node agent"
+        } else {
+            "one connection per rank"
+        }
     ));
     report.note(
         "scale-independence: beats are O(1)/worker, the scan O(alive) — p50 \
@@ -954,6 +981,26 @@ mod tests {
             live_agents: 4,
             interval: Duration::from_millis(10),
             lease_misses: 3,
+            node_agent: false,
+        };
+        let report = detection_sweep(&cfg).unwrap();
+        let row = report.row_values("n=8").expect("row");
+        assert!(row[0] > 0.0, "p50 must be measured: {row:?}");
+        assert!(row[0] < 10_000.0, "p50 implausible: {row:?}");
+    }
+
+    #[test]
+    fn detection_sweep_smoke_node_agent() {
+        // same sweep with the sample's beats coalesced through one
+        // node agent: detection semantics (lease expiry of a victim
+        // whose beats stop) must be mode-independent
+        let cfg = DetectionSweepConfig {
+            scales: vec![8],
+            samples: 1,
+            live_agents: 4,
+            interval: Duration::from_millis(10),
+            lease_misses: 3,
+            node_agent: true,
         };
         let report = detection_sweep(&cfg).unwrap();
         let row = report.row_values("n=8").expect("row");

@@ -8,10 +8,11 @@
 //! * **surviving nodes** keep their store connection and cached
 //!   ranktable, and re-key into the new epoch by consuming one O(k)
 //!   delta record (k = replacements) — **3 store messages** each,
-//!   regardless of cluster size;
+//!   regardless of cluster size (pipelined into 2 round-trips via the
+//!   store's `Batch` op, DESIGN.md §11);
 //! * **replacement nodes** perform a full join: register their entry,
 //!   fetch the full table (compact binary), derive their groups —
-//!   **6 store messages** each;
+//!   **6 store messages** each (4 round-trips);
 //! * the **coordinator** exchanges O(k) messages total.
 //!
 //! No per-node re-registration, no all-gather: total store traffic is
@@ -21,6 +22,7 @@
 use super::ranktable::{RankEntry, Ranktable};
 use crate::comms::group::{GroupSet, RekeyStats};
 use crate::comms::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
+use crate::comms::wire::{Bytes, Request, Response};
 use crate::config::ParallelismConfig;
 use crate::metrics::bench::BenchReport;
 use crate::metrics::Histogram;
@@ -65,21 +67,33 @@ pub fn epoch_aborted(e: &anyhow::Error) -> Option<EpochAborted> {
 /// Unwrap a fenced wait, translating supersession into the retryable
 /// [`EpochAborted`] — the one conversion every barrier/join/table wait
 /// shares.
-fn fenced_value(w: FencedWait) -> Result<Vec<u8>> {
+fn fenced_value(w: FencedWait) -> Result<Bytes> {
     match w {
         FencedWait::Value(b) => Ok(b),
         FencedWait::Superseded { current } => Err(EpochAborted { current }.into()),
     }
 }
 
-/// [`fenced_value`] for delta reads: an abort tombstone published as
-/// the epoch's delta also aborts.
-fn delta_value(w: FencedWait, epoch: u64) -> Result<Vec<u8>> {
-    let b = fenced_value(w)?;
-    if b == ABORT_MARKER {
+/// [`fenced_value`] for batched sub-responses: a fenced wait inside a
+/// pipelined sequence aborts retryably, a shutdown surfaces as an
+/// error, anything else is a protocol violation.
+fn fenced_response(r: Option<Response>) -> Result<Bytes> {
+    match r {
+        Some(Response::Value(b)) => Ok(b),
+        Some(Response::EpochFenced { current }) => {
+            Err(EpochAborted { current }.into())
+        }
+        Some(Response::NotFound) => bail!("store shut down during fenced wait"),
+        other => bail!("unexpected batched response {other:?}"),
+    }
+}
+
+/// Reject an abort-marker tombstone published as an epoch's delta.
+fn check_delta(bytes: &[u8], epoch: u64) -> Result<()> {
+    if bytes == ABORT_MARKER {
         return Err(EpochAborted { current: epoch }.into());
     }
-    Ok(b)
+    Ok(())
 }
 
 fn k_delta(epoch: u64) -> String {
@@ -152,24 +166,36 @@ impl EpochRecord {
     }
 }
 
-/// Arrive at the epoch barrier. The closing participant publishes the
-/// release key *instead of* waiting on it (it just proved everyone
-/// arrived), so every participant spends exactly 2 messages here and
+/// Release half of the epoch barrier, given this participant's arrive
+/// count `n`: the closing participant publishes the release key
+/// *instead of* waiting on it (it just proved everyone arrived), so
 /// the per-node budget stays deterministic. The wait is epoch-fenced:
 /// a supervised-barrier abort releases arrived participants with a
 /// retryable [`EpochAborted`] instead of a 300s socket-timeout hang.
-fn arrive_and_release(
+fn release_barrier(
     client: &mut TcpStoreClient,
     epoch: u64,
+    n: i64,
     participants: usize,
 ) -> Result<()> {
-    let n = client.add(&k_arrived(epoch), 1)?;
     if n >= participants as i64 {
         client.set(&k_go(epoch), b"go")?;
     } else {
         fenced_value(client.wait_epoch(&k_go(epoch), epoch)?)?;
     }
     Ok(())
+}
+
+/// Arrive at the epoch barrier and release (2 messages). Survivors
+/// pipeline the arrive into their delta batch instead; this is the
+/// replacement path's tail.
+fn arrive_and_release(
+    client: &mut TcpStoreClient,
+    epoch: u64,
+    participants: usize,
+) -> Result<()> {
+    let n = client.add(&k_arrived(epoch), 1)?;
+    release_barrier(client, epoch, n, participants)
 }
 
 /// What a surviving node's rejoin cost: group bookkeeping plus the
@@ -213,12 +239,25 @@ impl NodeSession {
         self.client.ops_sent()
     }
 
-    /// Normal-node rejoin into epoch `target`: one fenced wait for the
-    /// delta, apply it to the cached table, re-key groups, arrive.
-    /// O(1) store messages regardless of cluster size. If the epoch
-    /// was superseded mid-wait the rejoin chases the newest epoch; if
-    /// a delta was missed entirely it falls back to one full-table
-    /// fetch (still O(1) messages).
+    /// Normal-node rejoin into epoch `target`: the fenced delta wait
+    /// and the arrive `Add` go out **pipelined as one `Batch` frame**
+    /// (one round-trip; the store executes them serially and skips the
+    /// arrive if the wait is fenced), then the delta is applied to the
+    /// cached table, groups re-key, and the barrier releases — still
+    /// exactly 3 logical store messages regardless of cluster size,
+    /// now in 2 round-trips. If the epoch was superseded mid-wait the
+    /// rejoin chases the newest epoch; if a delta was missed entirely
+    /// it falls back to one full-table fetch (still O(1) messages).
+    ///
+    /// Pipelining moves the arrive *before* the local delta apply /
+    /// re-key: an arrive now attests "delta received", not "re-keyed".
+    /// A survivor that fails between its arrive and its re-key no
+    /// longer trips the supervised-barrier watchdog (the barrier can
+    /// release); instead its error surfaces through the episode's
+    /// thread join + table-convergence checks — a deliberate trade:
+    /// the failure is reported immediately rather than after the
+    /// watchdog's `join_deadline`, at the cost of the barrier itself
+    /// certifying one step less.
     pub fn rejoin(
         &mut self,
         cfg: &ParallelismConfig,
@@ -226,17 +265,31 @@ impl NodeSession {
     ) -> Result<RejoinOutcome> {
         let ops0 = self.client.ops_sent();
         let mut target = target;
-        let rec = loop {
-            match self.client.wait_epoch(&k_delta(target), target)? {
-                FencedWait::Value(bytes) => {
-                    if bytes == ABORT_MARKER {
-                        // the epoch we chased into was aborted; the
-                        // controller retries past the tombstone
-                        return Err(EpochAborted { current: target }.into());
-                    }
-                    break EpochRecord::parse(&bytes)?;
+        let (rec, arrived) = loop {
+            let mut resps = self
+                .client
+                .batch(vec![
+                    Request::WaitEpoch { key: k_delta(target), epoch: target },
+                    Request::Add { key: k_arrived(target), delta: 1 },
+                ])?
+                .into_iter();
+            match resps.next() {
+                Some(Response::Value(bytes)) => {
+                    // the epoch we (possibly) chased into was aborted;
+                    // the controller retries past the tombstone
+                    check_delta(&bytes, target)?;
+                    let rec = EpochRecord::parse(&bytes)?;
+                    let n = match resps.next() {
+                        Some(Response::Counter(n)) => n,
+                        other => bail!("unexpected arrive response {other:?}"),
+                    };
+                    break (rec, n);
                 }
-                FencedWait::Superseded { current } => target = current,
+                Some(Response::EpochFenced { current }) => target = current,
+                Some(Response::NotFound) => {
+                    bail!("store shut down during fenced wait")
+                }
+                other => bail!("unexpected rejoin response {other:?}"),
             }
         };
         let applied = self.apply_delta(&rec);
@@ -252,7 +305,7 @@ impl NodeSession {
             RekeyStats { rebuilt: self.groups.groups.len(), rekeyed: 0 }
         };
         self.epoch = target;
-        arrive_and_release(&mut self.client, target, rec.participants)?;
+        release_barrier(&mut self.client, target, arrived, rec.participants)?;
         Ok(RejoinOutcome { rekey, ops: self.client.ops_sent() - ops0, epoch: target })
     }
 
@@ -266,7 +319,10 @@ impl NodeSession {
 
 /// Replacement-node full join into epoch `target`: register the new
 /// entry, fetch the delta (for the barrier size) and the full binary
-/// table, derive groups, arrive. Returns the session and the store
+/// table — **pipelined as one `Batch` frame** (register + both fenced
+/// waits in a single round-trip) — then derive groups and arrive.
+/// Still 6 logical store messages, now in 4 round-trips (hello,
+/// batch, arrive, release). Returns the session and the store
 /// messages it cost.
 pub fn replacement_join(
     addr: SocketAddr,
@@ -276,12 +332,24 @@ pub fn replacement_join(
 ) -> Result<(NodeSession, u64)> {
     let mut client = TcpStoreClient::connect(addr)?;
     client.hello(entry.rank as u64)?;
-    client.set(&k_join(target, entry.rank), &entry.encode())?;
-    let delta = delta_value(client.wait_epoch(&k_delta(target), target)?, target)?;
+    let mut resps = client
+        .batch(vec![
+            Request::Set {
+                key: k_join(target, entry.rank),
+                value: entry.encode(),
+            },
+            Request::WaitEpoch { key: k_delta(target), epoch: target },
+            Request::WaitEpoch { key: k_table(target), epoch: target },
+        ])?
+        .into_iter();
+    match resps.next() {
+        Some(Response::Ok) => {}
+        other => bail!("unexpected join-register response {other:?}"),
+    }
+    let delta = fenced_response(resps.next())?;
+    check_delta(&delta, target)?;
     let rec = EpochRecord::parse(&delta)?;
-    let table = Ranktable::decode_bin(&fenced_value(
-        client.wait_epoch(&k_table(target), target)?,
-    )?)?;
+    let table = Ranktable::decode_bin(&fenced_response(resps.next())?)?;
     let groups = GroupSet::derive_for(&table, cfg, target, entry.rank)?;
     arrive_and_release(&mut client, target, rec.participants)?;
     let ops = client.ops_sent();
@@ -782,8 +850,8 @@ mod tests {
         assert_eq!(out.groups_rebuilt, 3);
         assert_eq!(out.groups_rekeyed + out.groups_rebuilt, 2 * 2 + 2 * 2 + 2 * 2);
         // deterministic message budgets: survivors exactly 3 (fenced
-        // delta wait, arrive, release), replacements exactly 6,
-        // coordinator k + 4
+        // delta wait + arrive pipelined in one batch frame, release),
+        // replacements exactly 6, coordinator k + 4
         assert_eq!(out.survivor_ops_max, 3);
         assert_eq!(out.replacement_ops_max, 6);
         assert_eq!(out.coordinator_ops, 1 + 4);
@@ -893,7 +961,9 @@ mod tests {
         assert_eq!(out.epoch, 2);
         assert_eq!(session.table, coord_table);
         assert_eq!(session.groups.epoch, 2);
-        // superseded wait + retried wait + table fetch + arrive + release
+        // executed ops: superseded batch stops at the fenced wait (1),
+        // the retried batch runs delta wait + arrive (2), then the
+        // table resync fetch (1) and the release wait (1)
         assert_eq!(out.ops, 5);
     }
 

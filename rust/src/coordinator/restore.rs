@@ -277,7 +277,7 @@ pub fn restore_episode(
                                 return Err(RestoreError::Superseded { current })
                             }
                         };
-                        let addr: SocketAddr = String::from_utf8(addr_bytes)
+                        let addr: SocketAddr = std::str::from_utf8(&addr_bytes)
                             .map_err(|e| fatal(e.into()))?
                             .parse()
                             .map_err(|e: std::net::AddrParseError| fatal(e.into()))?;

@@ -14,6 +14,10 @@
 //!   detect-bench   detection-latency sweep over leased heartbeats
 //!                  (64 -> 4096 ranks); emits
 //!                  BENCH_detection_latency.json, optionally perf-gated
+//!   store-bench    store data-plane throughput sweep (mixed opcodes,
+//!                  batched vs serial clients, 64 -> 8192 simulated
+//!                  clients); emits BENCH_store_throughput.json,
+//!                  optionally perf-gated
 //!   info           print artifact/manifest information
 //!
 //! Examples:
@@ -49,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         Some("rebuild-bench") => rebuild_bench(&args),
         Some("restore-bench") => restore_bench(&args),
         Some("detect-bench") => detect_bench(&args),
+        Some("store-bench") => store_bench(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -66,7 +71,7 @@ fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|detect-bench|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|detect-bench|store-bench|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -83,7 +88,10 @@ fn usage() {
          \u{20}         [--baseline FILE --gate RATIO]\n\
          detect-bench: [--scales 64,256,1024,4096] [--samples N]\n\
          \u{20}         [--live-agents N] [--interval-ms N] [--lease-misses N]\n\
-         \u{20}         [--out FILE] [--baseline FILE --gate RATIO]\n\
+         \u{20}         [--node-agent] [--out FILE] [--baseline FILE --gate RATIO]\n\
+         store-bench: [--clients 64,1024,4096,8192] [--connections N]\n\
+         \u{20}         [--repeats N] [--rounds N] [--assert] [--out FILE]\n\
+         \u{20}         [--baseline FILE --gate RATIO]\n\
          info:     --size tiny|small|base"
     );
 }
@@ -432,6 +440,7 @@ fn detect_bench(args: &Args) -> anyhow::Result<()> {
     );
     cfg.lease_misses =
         args.u64_or("lease-misses", cfg.lease_misses as u64).max(1) as u32;
+    cfg.node_agent = args.bool_or("node-agent", cfg.node_agent);
 
     let report = detection_sweep(&cfg)?;
     report.print();
@@ -439,6 +448,43 @@ fn detect_bench(args: &Args) -> anyhow::Result<()> {
     report.write_json(&out)?;
     println!("[detect-bench] wrote {out}");
     gate_against_baseline("detect-bench", &report, &out, args)
+}
+
+/// `store-bench` — the store data-plane throughput sweep (DESIGN.md
+/// §11): mixed-opcode workload, batched vs serial client modes, with
+/// an optional perf gate against a committed baseline JSON (CI's
+/// bench-gate job fails the build on batched per-op p50 regressions
+/// > --gate).
+fn store_bench(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::comms::store_bench::{check_report, store_sweep, StoreSweepConfig};
+
+    let mut cfg = StoreSweepConfig::default();
+    if let Some(s) = args.get("clients") {
+        cfg.clients = s
+            .split(',')
+            .map(|x| x.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?;
+        if cfg.clients.is_empty() {
+            anyhow::bail!("--clients needs at least one count");
+        }
+    }
+    cfg.connections = args.usize_or("connections", cfg.connections).max(1);
+    cfg.repeats = args.usize_or("repeats", cfg.repeats).max(1);
+    cfg.rounds = args.u64_or("rounds", cfg.rounds as u64).max(1) as u32;
+
+    let report = store_sweep(&cfg)?;
+    report.print();
+    let out = args.str_or("out", "BENCH_store_throughput.json");
+    report.write_json(&out)?;
+    println!("[store-bench] wrote {out}");
+    if args.bool_or("assert", false) {
+        // the acceptance properties (batched >= 2x serial at 4096
+        // clients, flat per-op p50) — what bench-gate enforces on top
+        // of the baseline ratio
+        check_report(&cfg, &report)?;
+        println!("[store-bench] acceptance assertions PASS");
+    }
+    gate_against_baseline("store-bench", &report, &out, args)
 }
 
 fn info(args: &Args) -> anyhow::Result<()> {

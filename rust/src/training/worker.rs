@@ -161,6 +161,42 @@ pub struct HeartbeatCfg {
     pub incarnation: u64,
 }
 
+/// True when `board`'s worker is dead with no hardware report pending
+/// — nothing a late store connection could still deliver for it.
+fn board_done(board: &MonitorBoard) -> bool {
+    !board.alive.load(Ordering::SeqCst)
+        && board.device_error.load(Ordering::SeqCst) < 0
+}
+
+/// Connect to the store with bounded exponential backoff: an emitter
+/// that starts before the store is up (controller still binding, or a
+/// replacement racing the recovery episode) must still lease in
+/// instead of silently forfeiting the wire plane. Gives up — and lets
+/// the board-scan fallback cover the ranks — once the attempts are
+/// exhausted or `abandoned()` reports there is nobody left to beat
+/// for (per-process: its one board; node agent: *every* member, so
+/// one rank dying early cannot strand its healthy peers).
+fn connect_with_backoff(
+    store: SocketAddr,
+    interval: Duration,
+    abandoned: impl Fn() -> bool,
+) -> Option<TcpStoreClient> {
+    let mut delay = interval.max(Duration::from_millis(5));
+    for attempt in 0..12 {
+        match TcpStoreClient::connect(store) {
+            Ok(c) => return Some(c),
+            Err(_) => {
+                if abandoned() || attempt == 11 {
+                    return None;
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+    None
+}
+
 /// Spawn the heartbeat emitter for one worker: the paper's per-process
 /// monitoring process + per-node device plugin pushing over the live
 /// wire (DESIGN.md §10). Reads the board's atomics and pushes one
@@ -182,7 +218,12 @@ pub fn spawn_heartbeat(
     std::thread::Builder::new()
         .name(format!("hb-{rank}"))
         .spawn(move || {
-            let Ok(mut client) = TcpStoreClient::connect(cfg.store) else {
+            // Bounded-backoff connect: a worker starting before the
+            // store is up still leases in (the old emitter exited
+            // silently on the first refused connect).
+            let Some(mut client) =
+                connect_with_backoff(cfg.store, cfg.interval, || board_done(&board))
+            else {
                 return; // no plane: the board-scan fallback covers us
             };
             loop {
@@ -208,6 +249,95 @@ pub fn spawn_heartbeat(
             }
         })
         .expect("spawn heartbeat emitter")
+}
+
+/// One local rank a node agent pushes beats for.
+pub struct NodeRank {
+    pub rank: usize,
+    pub incarnation: u64,
+    pub board: Arc<MonitorBoard>,
+}
+
+/// Where and how a node agent pushes its coalesced beats.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeAgentCfg {
+    /// The controller's `TcpStoreServer`.
+    pub store: SocketAddr,
+    /// Push interval; the monitor's lease is a multiple of it.
+    pub interval: Duration,
+}
+
+/// Node-agent heartbeat mode: one emitter per *node* pushing every
+/// local rank's beat as a single `Batch` frame per interval — the
+/// wire cost per node drops from `ranks x RTT` to one RTT while every
+/// rank still gets its own O(1) beat record (and its own lease,
+/// incarnation, and stall clock on the monitor).
+///
+/// Per-rank semantics match [`spawn_heartbeat`] exactly: a dying
+/// rank's pending hardware report still reaches the wire in the
+/// agent's next batch (the dying gasp), after which the rank is
+/// dropped from the batch — its lease then expires like any silent
+/// peer's. A silently *hanging* rank keeps beating with a frozen step
+/// tag, feeding the monitor's stall detection. The agent exits once
+/// every member is done or the store is gone.
+pub fn spawn_node_heartbeat(
+    members: Vec<NodeRank>,
+    cfg: NodeAgentCfg,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("hb-node".to_string())
+        .spawn(move || {
+            if members.is_empty() {
+                return;
+            }
+            let Some(mut client) = connect_with_backoff(cfg.store, cfg.interval, || {
+                members.iter().all(|m| board_done(&m.board))
+            }) else {
+                return; // no plane: the board-scan fallback covers us
+            };
+            let mut done = vec![false; members.len()];
+            loop {
+                let mut beats = Vec::with_capacity(members.len());
+                for (i, m) in members.iter().enumerate() {
+                    if done[i] {
+                        continue;
+                    }
+                    let tag = m.board.step_tag.load(Ordering::SeqCst);
+                    if !m.board.alive.load(Ordering::SeqCst) {
+                        // Dying gasp: load the code *after* observing
+                        // death (failure paths store `device_error`
+                        // before dropping `alive`), same ordering
+                        // argument as the per-process emitter.
+                        let code = m.board.device_error.load(Ordering::SeqCst);
+                        if code >= 0 {
+                            beats.push(crate::comms::wire::Request::Heartbeat {
+                                rank: m.rank as u64,
+                                incarnation: m.incarnation,
+                                step_tag: tag,
+                                device_code: code,
+                            });
+                        }
+                        done[i] = true;
+                        continue;
+                    }
+                    let code = m.board.device_error.load(Ordering::SeqCst);
+                    beats.push(crate::comms::wire::Request::Heartbeat {
+                        rank: m.rank as u64,
+                        incarnation: m.incarnation,
+                        step_tag: tag,
+                        device_code: code,
+                    });
+                }
+                if !beats.is_empty() && client.batch(beats).is_err() {
+                    return; // store gone (controller teardown)
+                }
+                if done.iter().all(|d| *d) {
+                    return; // every member dead and flushed
+                }
+                std::thread::sleep(cfg.interval);
+            }
+        })
+        .expect("spawn node heartbeat agent")
 }
 
 /// Everything a worker thread needs.
@@ -564,4 +694,119 @@ fn unflatten_grads(ctx: &WorkerCtx, flat: &[f32]) -> Result<Vec<xla::Literal>> {
     }
     anyhow::ensure!(pos == flat.len(), "gradient buffer size mismatch");
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::tcp_store::TcpStoreServer;
+
+    #[test]
+    fn heartbeat_emitter_retries_until_store_is_up() {
+        // Regression (§11 satellite): the emitter used to exit
+        // silently when its first connect failed, so a worker that
+        // started before the store was bound never leased in. The
+        // bounded backoff must carry it across the gap.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe); // port free: the emitter's first connects fail
+
+        let board = MonitorBoard::new();
+        board.step_tag.store(4, Ordering::SeqCst);
+        let hb = spawn_heartbeat(
+            3,
+            board.clone(),
+            HeartbeatCfg { store: addr, interval: Duration::from_millis(10), incarnation: 2 },
+        );
+        std::thread::sleep(Duration::from_millis(80));
+        let server = TcpStoreServer::start_on(addr).expect("rebind probed port");
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(b) = server.beats().iter().find(|b| b.rank == 3) {
+                assert_eq!(b.incarnation, 2);
+                assert_eq!(b.step_tag, 4);
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "emitter never leased in after the store came up"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        board.alive.store(false, Ordering::SeqCst);
+        hb.join().unwrap();
+    }
+
+    #[test]
+    fn node_agent_coalesces_beats_into_one_frame_per_interval() {
+        let server = TcpStoreServer::start().unwrap();
+        let members: Vec<NodeRank> = (0..4)
+            .map(|rank| {
+                let board = MonitorBoard::new();
+                board.step_tag.store(7, Ordering::SeqCst);
+                NodeRank { rank, incarnation: 1, board }
+            })
+            .collect();
+        let boards: Vec<Arc<MonitorBoard>> =
+            members.iter().map(|m| m.board.clone()).collect();
+        let agent = spawn_node_heartbeat(
+            members,
+            NodeAgentCfg { store: server.addr(), interval: Duration::from_millis(10) },
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.beats().len() < 4 {
+            assert!(Instant::now() < deadline, "agent never pushed all ranks");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // coalescing: 4 ranks' beats ride one Batch frame per
+        // interval, so logical ops outnumber wire frames ~4x
+        let frames = server.frame_count();
+        let requests = server.request_count();
+        assert!(
+            requests >= 3 * frames,
+            "beats must be coalesced: {requests} ops over {frames} frames"
+        );
+        for b in boards.iter() {
+            b.alive.store(false, Ordering::SeqCst);
+        }
+        agent.join().unwrap();
+    }
+
+    #[test]
+    fn node_agent_dying_gasp_carries_device_code() {
+        let server = TcpStoreServer::start().unwrap();
+        let victim = MonitorBoard::new();
+        let peer = MonitorBoard::new();
+        let members = vec![
+            NodeRank { rank: 0, incarnation: 1, board: victim.clone() },
+            NodeRank { rank: 1, incarnation: 1, board: peer.clone() },
+        ];
+        let agent = spawn_node_heartbeat(
+            members,
+            NodeAgentCfg { store: server.addr(), interval: Duration::from_millis(10) },
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.beats().len() < 2 {
+            assert!(Instant::now() < deadline, "agent never pushed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // hardware death: the code is stored before alive drops, and
+        // the agent's next batch must still carry it
+        let code = kind_code(FailureKind::Network);
+        victim.device_error.store(code, Ordering::SeqCst);
+        victim.alive.store(false, Ordering::SeqCst);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let beats = server.beats();
+            let b = beats.iter().find(|b| b.rank == 0).unwrap();
+            if b.device_code == code {
+                break;
+            }
+            assert!(Instant::now() < deadline, "dying gasp never reached the wire");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        peer.alive.store(false, Ordering::SeqCst);
+        agent.join().unwrap();
+    }
 }

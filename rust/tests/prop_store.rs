@@ -1,0 +1,135 @@
+//! Property tests for the store data plane (DESIGN.md §11): any
+//! sequence of non-blocking ops observes the same responses and the
+//! same final store state whether it is executed one-op-per-round-trip
+//! or chunked into pipelined `Batch` frames — batching is a transport
+//! optimization, never a semantic change.
+
+use flashrecovery::comms::{Request, Response, TcpStoreClient, TcpStoreServer};
+use flashrecovery::util::prop;
+
+/// Generate one random non-blocking op over a small key pool (small
+/// so ops collide and ordering actually matters).
+fn gen_op(rng: &mut flashrecovery::util::Rng) -> Request {
+    let key = format!("k{}", rng.below(8));
+    match rng.below(6) {
+        0 => Request::Set {
+            key,
+            value: (0..rng.below(24)).map(|_| rng.next_u64() as u8).collect(),
+        },
+        1 => Request::Get { key },
+        2 => Request::Add { key, delta: rng.below(9) as i64 - 4 },
+        3 => Request::Count,
+        4 => Request::Heartbeat {
+            rank: rng.below(4),
+            incarnation: 1 + rng.below(3),
+            step_tag: rng.below(100) as i64,
+            device_code: -1,
+        },
+        _ => Request::Hello { client_id: rng.below(100) },
+    }
+}
+
+/// Canonical observable state: every pool key's value, every pool
+/// counter, and the key count.
+fn observe(client: &mut TcpStoreClient) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..8 {
+        let key = format!("k{i}");
+        out.push(format!("{key}={:?}", client.get(&key).unwrap()));
+        out.push(format!("{key}+={}", client.add(&key, 0).unwrap()));
+    }
+    out.push(format!("count={}", client.count().unwrap()));
+    out
+}
+
+#[test]
+fn batched_and_serial_execution_are_equivalent() {
+    prop::check("batch == serial for any non-blocking op sequence", 30, |rng| {
+        let ops: Vec<Request> = (0..rng.below(40) + 1).map(|_| gen_op(rng)).collect();
+
+        // serial: one op per round-trip
+        let serial_server = TcpStoreServer::start().map_err(|e| e.to_string())?;
+        let mut sc =
+            TcpStoreClient::connect(serial_server.addr()).map_err(|e| e.to_string())?;
+        let mut serial_resps = Vec::with_capacity(ops.len());
+        for op in &ops {
+            serial_resps.push(sc.roundtrip(op.clone()).map_err(|e| e.to_string())?);
+        }
+
+        // batched: the same ops chunked into random-size Batch frames
+        let batch_server = TcpStoreServer::start().map_err(|e| e.to_string())?;
+        let mut bc =
+            TcpStoreClient::connect(batch_server.addr()).map_err(|e| e.to_string())?;
+        let mut batch_resps: Vec<Response> = Vec::with_capacity(ops.len());
+        let mut rest = ops.as_slice();
+        while !rest.is_empty() {
+            let take = (rng.below(5) as usize + 1).min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            batch_resps
+                .extend(bc.batch(chunk.to_vec()).map_err(|e| e.to_string())?);
+            rest = tail;
+        }
+
+        prop::assert_eq_prop(&serial_resps, &batch_resps)?;
+        prop::assert_eq_prop(&observe(&mut sc), &observe(&mut bc))?;
+        prop::assert_eq_prop(
+            &serial_server.key_count(),
+            &batch_server.key_count(),
+        )?;
+        prop::assert_eq_prop(
+            &serial_server.counter_count(),
+            &batch_server.counter_count(),
+        )?;
+        // logical message budgets are transport-independent: the
+        // client op count and the server's executed-request count do
+        // not change when ops are pipelined
+        prop::assert_eq_prop(&(sc.ops_sent() >= ops.len() as u64), &true)?;
+        prop::assert_eq_prop(&(bc.ops_sent() >= ops.len() as u64), &true)?;
+        // frames, by contrast, must shrink under batching whenever a
+        // chunk held more than one op
+        prop::assert_prop(
+            batch_server.frame_count() <= serial_server.frame_count(),
+            format!(
+                "batched frames {} > serial frames {}",
+                batch_server.frame_count(),
+                serial_server.frame_count()
+            ),
+        )
+    });
+}
+
+#[test]
+fn batched_heartbeats_equal_serial_heartbeats() {
+    // The node-agent coalescing path: a Batch of Heartbeat ops must
+    // leave the same beat table as the same beats pushed one by one
+    // (including stale-incarnation suppression inside one batch).
+    let beats = vec![
+        Request::Heartbeat { rank: 1, incarnation: 2, step_tag: 5, device_code: -1 },
+        Request::Heartbeat { rank: 1, incarnation: 1, step_tag: 99, device_code: -1 },
+        Request::Heartbeat { rank: 2, incarnation: 1, step_tag: 7, device_code: 3 },
+        Request::Heartbeat { rank: 1, incarnation: 2, step_tag: 6, device_code: -1 },
+    ];
+
+    let serial = TcpStoreServer::start().unwrap();
+    let mut sc = TcpStoreClient::connect(serial.addr()).unwrap();
+    for b in &beats {
+        sc.roundtrip(b.clone()).unwrap();
+    }
+
+    let batched = TcpStoreServer::start().unwrap();
+    let mut bc = TcpStoreClient::connect(batched.addr()).unwrap();
+    let resps = bc.batch(beats).unwrap();
+    assert!(resps.iter().all(|r| *r == Response::Ok));
+
+    let canon = |server: &TcpStoreServer| {
+        let mut v: Vec<(u64, u64, i64, i64)> = server
+            .beats()
+            .iter()
+            .map(|b| (b.rank, b.incarnation, b.step_tag, b.device_code))
+            .collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(canon(&serial), canon(&batched));
+    assert_eq!(canon(&serial), vec![(1, 2, 6, -1), (2, 1, 7, 3)]);
+}
