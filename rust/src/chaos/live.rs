@@ -19,7 +19,7 @@ use super::spec::{FaultFamily, ScenarioSpec};
 use crate::checkpoint::Snapshot;
 use crate::cluster::failure::{FailureCategory, FailureKind};
 use crate::comms::state_stream::{EpochFence, RestoreError, StreamConfig};
-use crate::comms::tcp_store::TcpStoreServer;
+use crate::comms::tcp_store::{TcpStoreClient, TcpStoreServer};
 use crate::config::ParallelismConfig;
 use crate::coordinator::detection::{Detection, LeaseConfig, LeaseMonitor};
 use crate::coordinator::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
@@ -27,6 +27,7 @@ use crate::coordinator::restore::{
     bump_epoch, plan_shard_restore, restore_episode, synthetic_snapshot,
 };
 use crate::coordinator::{ControllerConfig, RankEntry, Ranktable, RunReport};
+use crate::telemetry::{global, trace};
 use crate::training::worker::{
     kind_code, spawn_heartbeat, spawn_node_heartbeat, FailurePlan, HeartbeatCfg,
     MonitorBoard, NodeAgentCfg, NodeRank, Phase,
@@ -474,6 +475,9 @@ pub struct LiveDetectionOutcome {
     pub resume_step: u64,
     /// Ranks restored by the episode.
     pub restored: Vec<usize>,
+    /// Flight-recorder trace id of the episode (0 while the recorder
+    /// is off) — key into `telemetry::trace::{spans_for, events_for}`.
+    pub trace_id: u64,
 }
 
 /// Drive the spec's failures through the *whole* live pipeline over
@@ -545,7 +549,11 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
             mon.admit(rank, incarnations[&rank], now);
         }
 
-        // induce the failures
+        // induce the failures; the episode root span opens here so its
+        // wall interval tracks `total_s`, with one child per phase
+        let mut episode = trace::root("episode", "controller");
+        episode.set_detail(format!("step={step} victims={}", victims.len()));
+        let mut span_detect = episode.child("detection", "controller");
         let t0 = Instant::now();
         let mut hang_victims = Vec::new();
         for &(rank, kind, mode) in &victims {
@@ -588,6 +596,11 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
             }
         }
         let detection_s = detections.iter().filter_map(|d| d.latency_s).fold(0.0, f64::max);
+        span_detect.set_detail(format!(
+            "detected={} measured_s={detection_s:.4}",
+            detections.len()
+        ));
+        span_detect.end();
         // a detected hang is evicted: the stuck worker is torn down
         // like any other victim before its rank is rebuilt
         for &rank in &hang_victims {
@@ -605,6 +618,7 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
                 addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
             })
             .collect();
+        let mut span_rebuild = episode.child("rebuild", "controller");
         let t_rebuild = Instant::now();
         let out = rebuild_episode(
             &server,
@@ -616,8 +630,28 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
             &EpisodeConfig { live_survivors: dp, ..Default::default() },
         )?;
         let rebuild_s = t_rebuild.elapsed().as_secs_f64();
+        span_rebuild.set_detail(format!("epoch={} failed={failed:?}", out.epoch));
+        span_rebuild.end();
         epoch = out.epoch;
         table = out.table.clone();
+
+        // mid-episode introspection: pull the store's live metrics
+        // snapshot over the Stats wire op and pin it to the trace
+        if let Some(ctx) = episode.ctx() {
+            if let Ok(snap) = TcpStoreClient::connect(addr).and_then(|mut c| c.stats()) {
+                trace::event_in(
+                    ctx,
+                    "store-stats",
+                    "controller",
+                    format!(
+                        "requests={} frames={} epoch={}",
+                        snap.counter("store.requests"),
+                        snap.counter("store.frames"),
+                        snap.gauge("store.epoch"),
+                    ),
+                );
+            }
+        }
 
         // ... and straight into the shard restore at the survivors'
         // step, still on the same store and epoch
@@ -637,11 +671,19 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
         if !plan.replica_feasible() {
             bail!("live detection episode at step {step} has unsourced shards");
         }
+        let mut span_restore = episode.child("restore", "controller");
+        let stream_cfg = StreamConfig { trace: span_restore.ctx(), ..Default::default() };
         let t_restore = Instant::now();
         let fence = EpochFence::new(epoch);
-        let rout = restore_episode(addr, &plan, &states, epoch, &fence, &StreamConfig::default())
+        let rout = restore_episode(addr, &plan, &states, epoch, &fence, &stream_cfg)
             .map_err(|e| anyhow!("{e}"))?;
         let restore_s = t_restore.elapsed().as_secs_f64();
+        span_restore.set_detail(format!(
+            "resume_step={} bytes={}",
+            rout.resume_step,
+            rout.bytes_moved()
+        ));
+        span_restore.end();
         let reference = states[&plan.transfers[0].source].content_hash();
         for (rank, snap) in &rout.restored {
             if snap.content_hash() != reference {
@@ -649,6 +691,15 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
             }
         }
         let total_s = t0.elapsed().as_secs_f64();
+        let trace_id = episode.trace_id();
+        episode.set_detail(format!("epoch={epoch} total_s={total_s:.4}"));
+        episode.end();
+        let reg = global();
+        reg.observe("episode.detection_s", detection_s);
+        reg.observe("episode.rebuild_s", rebuild_s);
+        reg.observe("episode.restore_s", restore_s);
+        reg.observe("episode.total_s", total_s);
+        reg.inc("episode.recovered");
 
         // respawn the victims under fresh incarnations
         for &rank in &failed {
@@ -675,6 +726,7 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
             total_s,
             resume_step: rout.resume_step,
             restored: rout.restored.keys().copied().collect(),
+            trace_id,
         });
     }
 

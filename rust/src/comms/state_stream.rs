@@ -15,10 +15,17 @@
 //! header   "FSTM" | version u32 | step u64 | epoch u64
 //!          | pp u32 | tp u32 | zero u32            (the ShardId)
 //!          | total_bytes u64 | chunk_bytes u32
+//! trace    0x04 | trace_id u64 | span_id u64       (optional, once)
 //! chunk    0x01 | index u32 | len u32 | payload | fnv1a(payload) u64
 //! abort    0x02 | current_epoch u64
 //! end      0x03 | chunk_count u32 | chained_hash u64
 //! ```
+//!
+//! The trace frame is emitted (immediately after the header) only when
+//! [`StreamConfig::trace`] carries a recording context, so untraced
+//! streams stay byte-identical to version 1; it lets the receiver's
+//! fetch span nest under the source's serve span in one flight-recorder
+//! trace (DESIGN.md §12).
 //!
 //! The payload is the snapshot's canonical encoding
 //! (`checkpoint::codec`), produced lazily by `SnapshotStream` — the
@@ -35,6 +42,7 @@
 
 use crate::checkpoint::{codec, Snapshot};
 use crate::config::ShardId;
+use crate::telemetry::{trace, TraceCtx};
 use crate::util::hash::{fnv1a, FNV_OFFSET};
 use anyhow::anyhow;
 use std::io::{ErrorKind, Read, Write};
@@ -48,6 +56,7 @@ const STREAM_VERSION: u32 = 1;
 const FRAME_CHUNK: u8 = 1;
 const FRAME_ABORT: u8 = 2;
 const FRAME_END: u8 = 3;
+const FRAME_TRACE: u8 = 4;
 
 /// Default transfer chunk: large enough to amortise syscalls, small
 /// enough that fence checks land within milliseconds of an epoch bump.
@@ -153,6 +162,10 @@ pub struct StreamConfig {
     /// the legs (the pre-refactor broadcast baseline; used by the
     /// `state_restore` bench, not the recovery path).
     pub serial_serve: bool,
+    /// Flight-recorder context the transfer's spans nest under; also
+    /// forwarded in-band (`FRAME_TRACE`) so the receiver joins the
+    /// same trace. `None` (the default) leaves the wire untouched.
+    pub trace: Option<TraceCtx>,
 }
 
 impl Default for StreamConfig {
@@ -162,6 +175,7 @@ impl Default for StreamConfig {
             throttle: None,
             accept_deadline: Duration::from_secs(60),
             serial_serve: false,
+            trace: None,
         }
     }
 }
@@ -286,6 +300,14 @@ pub fn serve_snapshot<W: Write>(
     };
     w.write_all(&header.encode())?;
 
+    let mut span = trace::from_opt_ctx(cfg.trace, "serve_state", "state-stream");
+    if let Some(ctx) = span.ctx() {
+        let mut ctx_buf = Vec::with_capacity(trace::CTX_WIRE_LEN);
+        ctx.encode_into(&mut ctx_buf);
+        w.write_all(&[FRAME_TRACE])?;
+        w.write_all(&ctx_buf)?;
+    }
+
     let mut reader = codec::SnapshotStream::new(snap);
     let mut buf = vec![0u8; chunk_bytes];
     let mut index: u32 = 0;
@@ -322,6 +344,7 @@ pub fn serve_snapshot<W: Write>(
     w.write_all(&chained.to_le_bytes())?;
     w.flush()?;
     debug_assert_eq!(sent, total_bytes);
+    span.set_detail(format!("bytes={sent} chunks={index}"));
     Ok(ServeStats { bytes: sent, chunks: index, wall_s: t0.elapsed().as_secs_f64() })
 }
 
@@ -382,6 +405,7 @@ pub fn fetch_snapshot<R: Read>(
     // once, and never a multi-GiB eager allocation off an 8-byte
     // header field.
     let mut decoder = codec::SnapshotDecoder::new();
+    let mut span = trace::from_opt_ctx(None, "fetch_state", "state-stream");
     let mut received: u64 = 0;
     let mut chained = FNV_OFFSET;
     let mut next_index: u32 = 0;
@@ -435,6 +459,14 @@ pub fn fetch_snapshot<R: Read>(
                     current: u64::from_le_bytes(cur),
                 });
             }
+            FRAME_TRACE => {
+                let mut ctx_buf = [0u8; trace::CTX_WIRE_LEN];
+                r.read_exact(&mut ctx_buf)?;
+                let ctx = TraceCtx::decode(&ctx_buf).filter(|_| !span.active());
+                if let Some(ctx) = ctx {
+                    span = trace::from_ctx(ctx, "fetch_state", "state-stream");
+                }
+            }
             FRAME_END => {
                 let mut tail = [0u8; 12];
                 r.read_exact(&mut tail)?;
@@ -473,6 +505,7 @@ pub fn fetch_snapshot<R: Read>(
             header.step
         )));
     }
+    span.set_detail(format!("bytes={received} chunks={next_index}"));
     Ok((
         snap,
         FetchStats {
@@ -682,6 +715,33 @@ mod tests {
         let expect = Expect { epoch: 2, shard: shard(), step: Some(4) };
         let (back, _) = fetch_snapshot(&mut Cursor::new(&wire), &expect, &fence).unwrap();
         assert_eq!(back, s);
+    }
+
+    #[test]
+    fn trace_frame_rides_in_band_and_stitches_fetch_under_serve() {
+        trace::set_recording(true);
+        let root = trace::root("restore", "test");
+        let tid = root.trace_id();
+        let s = snap(6, 2_000);
+        let fence = EpochFence::new(1);
+        let cfg = StreamConfig { chunk_bytes: 4096, trace: root.ctx(), ..Default::default() };
+        let mut wire = Vec::new();
+        serve_snapshot(&mut wire, &s, shard(), 1, &fence, &cfg).unwrap();
+        assert_eq!(wire[HEADER_LEN], FRAME_TRACE, "trace frame must follow the header");
+        let expect = Expect { epoch: 1, shard: shard(), step: Some(6) };
+        let (back, _) = fetch_snapshot(&mut Cursor::new(&wire), &expect, &fence).unwrap();
+        assert_eq!(back, s);
+        root.end();
+        let spans = trace::spans_for(tid);
+        let serve = spans.iter().find(|sp| sp.name == "serve_state").unwrap();
+        let fetch = spans.iter().find(|sp| sp.name == "fetch_state").unwrap();
+        assert_eq!(fetch.parent, serve.span_id, "fetch must nest under serve");
+        assert!(serve.detail.contains("bytes="), "{}", serve.detail);
+        // an untraced config leaves the wire byte-identical to v1:
+        // the first frame after the header is a chunk, not a trace
+        let mut plain = Vec::new();
+        serve_snapshot(&mut plain, &s, shard(), 1, &fence, &StreamConfig::default()).unwrap();
+        assert_eq!(plain[HEADER_LEN], FRAME_CHUNK);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use super::tcp_store::{TcpStoreClient, TcpStoreServer};
 use super::wire::{Request, Response};
 use crate::metrics::bench::BenchReport;
 use crate::metrics::Histogram;
+use crate::telemetry::{trace, TraceCtx};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::net::SocketAddr;
 use std::time::Instant;
@@ -106,8 +107,10 @@ fn drive_round(
     round: u32,
     repeats: usize,
     batched: bool,
+    trace: Option<TraceCtx>,
 ) -> Result<DriverOut> {
     let mut client = TcpStoreClient::connect(addr)?;
+    client.set_trace_ctx(trace);
     let mut reqs: Vec<Request> = Vec::with_capacity(ids.len() * MIX_OPS * repeats);
     for rep in 0..repeats {
         for &id in ids {
@@ -139,7 +142,12 @@ fn drive_round(
 
 /// Run every round of one (scale, mode) cell on a fresh server;
 /// returns (per-op histogram, ops/s over the measured rounds).
-fn run_cell(cfg: &StoreSweepConfig, clients: usize, batched: bool) -> Result<(Histogram, f64)> {
+fn run_cell(
+    cfg: &StoreSweepConfig,
+    clients: usize,
+    batched: bool,
+    trace: Option<TraceCtx>,
+) -> Result<(Histogram, f64)> {
     let server = TcpStoreServer::start()?;
     let addr = server.addr();
     let conns = cfg.connections.clamp(1, clients);
@@ -157,7 +165,7 @@ fn run_cell(cfg: &StoreSweepConfig, clients: usize, batched: bool) -> Result<(Hi
             let ids = ids.clone();
             let repeats = cfg.repeats.max(1);
             handles.push(std::thread::spawn(move || {
-                drive_round(addr, &ids, round, repeats, batched)
+                drive_round(addr, &ids, round, repeats, batched, trace)
             }));
         }
         let mut round_busy = 0.0f64;
@@ -201,8 +209,8 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
         if n == 0 {
             bail!("sweep needs at least one simulated client");
         }
-        let (batched_h, batched_ops) = run_cell(cfg, n, true)?;
-        let (serial_h, serial_ops) = run_cell(cfg, n, false)?;
+        let (batched_h, batched_ops) = run_cell(cfg, n, true, None)?;
+        let (serial_h, serial_ops) = run_cell(cfg, n, false, None)?;
         let speedup = if serial_ops > 0.0 { batched_ops / serial_ops } else { 0.0 };
         report.row(
             format!("n={n}"),
@@ -260,6 +268,30 @@ pub fn check_report(cfg: &StoreSweepConfig, report: &BenchReport) -> Result<()> 
          {lo:.2}us @ {min_scale}"
     );
     Ok(())
+}
+
+/// Flight-recorder overhead on the batched hot path (DESIGN.md §12):
+/// run one batched cell with the recorder off, then again with it on
+/// and every frame stamped with a live trace context (16 extra wire
+/// bytes per frame + one recorded event per frame server-side), and
+/// return `(off_p50, on_p50)` per-op latencies in seconds. The bench
+/// target asserts on ≤ 1.05x off plus a small noise floor.
+///
+/// Toggles (and finally disables) the process-global recorder, so
+/// call it only from a single-threaded bench/CLI context — never
+/// concurrently with code that records traces.
+pub fn telemetry_overhead(cfg: &StoreSweepConfig, clients: usize) -> Result<(f64, f64)> {
+    trace::set_recording(false);
+    let (off, _) = run_cell(cfg, clients, true, None)?;
+    trace::set_recording(true);
+    let on = {
+        let root = trace::root("store-bench", "bench");
+        let (on, _) = run_cell(cfg, clients, true, root.ctx())?;
+        on
+    };
+    trace::set_recording(false);
+    trace::clear();
+    Ok((off.p50(), on.p50()))
 }
 
 #[cfg(test)]

@@ -23,6 +23,7 @@
 use super::wire::{
     read_frame, write_frame, Bytes, Request, Response, MAX_FRAME_BYTES,
 };
+use crate::telemetry::{trace, Counter, Gauge, Registry, Snapshot, TraceCtx};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read};
@@ -91,50 +92,87 @@ struct Shared {
     /// rank % STRIPES -> (rank -> latest heartbeat; highest
     /// incarnation wins).
     beats: Vec<Mutex<HashMap<u64, BeatRecord>>>,
-    hellos: AtomicU64,
+    /// Per-server metrics registry (DESIGN.md §12) — served verbatim
+    /// by the `Stats` wire op. Per-server (not the process-global
+    /// registry) so parallel test servers never share counters. The
+    /// fields below are cached handles into it: the hot path updates
+    /// an atomic cell, never a name map.
+    metrics: Registry,
+    hellos: Counter,
     /// Rendezvous epoch: fenced waiters registered at an older epoch
-    /// are released with `EpochFenced` when this advances.
+    /// are released with `EpochFenced` when this advances. Protocol
+    /// state, not a metric (fence checks need SeqCst ordering) — the
+    /// snapshot mirrors it as a gauge.
     epoch: AtomicU64,
     /// Logical requests served (each batched sub-op counts as one) —
     /// lets tests assert that rebuild traffic is independent of
     /// cluster size even when ops are pipelined.
-    requests: AtomicU64,
+    requests: Counter,
     /// Wire frames read (a `Batch` of k ops is one frame) — the
     /// round-trip count the pipelined client amortises.
-    frames: AtomicU64,
+    frames: Counter,
     /// Parked waiters *released by a publish* (the waiter parked at
     /// least once, then found its key's value). Deliberately not a
     /// raw condvar-notify count — notifies race timeout boundaries
     /// and spurious wakeups, so only the deterministic observable is
     /// counted: per-key parking makes this exactly the matching
     /// waiters per publish, never the whole herd.
-    wakeups: AtomicU64,
+    wakeups: Counter,
     /// Pool workers currently alive, and total ever spawned.
-    live_workers: AtomicUsize,
+    live_workers: Gauge,
     /// Readiness tokens: each pool worker announces one token per
     /// "ready for one connection" cycle; the accept loop consumes one
     /// token per accepted connection and spawns a fresh worker when
     /// none is available. Token conservation guarantees every queued
     /// connection has a committed consumer — a busy pool can never
-    /// starve a new connection behind long-blocked peers.
+    /// starve a new connection behind long-blocked peers. Functional
+    /// state (the spawn decision runs a checked-sub CAS on it), so it
+    /// stays a raw atomic rather than a registry gauge.
     free_workers: AtomicUsize,
-    workers_spawned: AtomicU64,
+    workers_spawned: Counter,
 }
 
 impl Shared {
     fn new() -> Self {
+        let metrics = Registry::new();
+        let hellos = metrics.counter("store.hellos");
+        let requests = metrics.counter("store.requests");
+        let frames = metrics.counter("store.frames");
+        let wakeups = metrics.counter("store.wakeups");
+        let live_workers = metrics.gauge("store.live_workers");
+        let workers_spawned = metrics.counter("store.workers_spawned");
         Shared {
             stripes: (0..STRIPES).map(|_| Mutex::new(Stripe::default())).collect(),
             beats: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
-            hellos: AtomicU64::new(0),
+            metrics,
+            hellos,
             epoch: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            frames: AtomicU64::new(0),
-            wakeups: AtomicU64::new(0),
-            live_workers: AtomicUsize::new(0),
+            requests,
+            frames,
+            wakeups,
+            live_workers,
             free_workers: AtomicUsize::new(0),
-            workers_spawned: AtomicU64::new(0),
+            workers_spawned,
         }
+    }
+
+    /// Registry snapshot plus the derived levels (key/counter/parked
+    /// populations, epoch) refreshed at capture time — the `Stats`
+    /// wire op's payload.
+    fn metrics_snapshot(&self) -> Snapshot {
+        let keys: usize = self.stripes.iter().map(|s| lock(s).map.len()).sum();
+        let counters: usize =
+            self.stripes.iter().map(|s| lock(s).counters.len()).sum();
+        let parked: usize = self
+            .stripes
+            .iter()
+            .map(|s| lock(s).parked.values().map(|w| w.waiters).sum::<usize>())
+            .sum();
+        self.metrics.gauge("store.keys").set(keys as i64);
+        self.metrics.gauge("store.counters").set(counters as i64);
+        self.metrics.gauge("store.parked_waiters").set(parked as i64);
+        self.metrics.gauge("store.epoch").set(self.epoch.load(Ordering::SeqCst) as i64);
+        self.metrics.snapshot()
     }
 
     fn stripe_for(&self, key: &str) -> &Mutex<Stripe> {
@@ -226,8 +264,8 @@ impl TcpStoreServer {
                             let sh = accept_shared.clone();
                             let st = accept_stop.clone();
                             let rx = conn_rx.clone();
-                            sh.live_workers.fetch_add(1, Ordering::SeqCst);
-                            sh.workers_spawned.fetch_add(1, Ordering::Relaxed);
+                            sh.live_workers.add(1);
+                            sh.workers_spawned.inc();
                             workers.push(std::thread::spawn(move || {
                                 pool_worker(rx, sh, st)
                             }));
@@ -257,7 +295,13 @@ impl TcpStoreServer {
 
     /// Number of Hello handshakes seen (establishment bookkeeping).
     pub fn hello_count(&self) -> u64 {
-        self.shared.hellos.load(Ordering::Relaxed)
+        self.shared.hellos.get()
+    }
+
+    /// Snapshot of the server's metrics registry — the same payload
+    /// the `Stats` wire op serves to remote clients.
+    pub fn metrics_snapshot(&self) -> Snapshot {
+        self.shared.metrics_snapshot()
     }
 
     /// Number of keys currently stored (all stripes).
@@ -298,13 +342,13 @@ impl TcpStoreServer {
     /// Logical requests served since start (batched sub-ops count
     /// individually).
     pub fn request_count(&self) -> u64 {
-        self.shared.requests.load(Ordering::Relaxed)
+        self.shared.requests.get()
     }
 
     /// Wire frames read since start (one per round-trip; a `Batch` of
     /// k ops is one frame).
     pub fn frame_count(&self) -> u64 {
-        self.shared.frames.load(Ordering::Relaxed)
+        self.shared.frames.get()
     }
 
     /// Parked waiters released by a publish so far (timeout polls and
@@ -312,7 +356,7 @@ impl TcpStoreServer {
     /// `Set` contributes exactly its key's parked-waiter count — the
     /// thundering-herd regression metric.
     pub fn wake_count(&self) -> u64 {
-        self.shared.wakeups.load(Ordering::Relaxed)
+        self.shared.wakeups.get()
     }
 
     /// Waiters currently parked on per-key slots (all stripes).
@@ -327,13 +371,13 @@ impl TcpStoreServer {
     /// Pool workers currently alive (== the connection-concurrency
     /// high-water mark, not the historical connection count).
     pub fn live_workers(&self) -> usize {
-        self.shared.live_workers.load(Ordering::SeqCst)
+        self.shared.live_workers.get().max(0) as usize
     }
 
     /// Pool workers ever spawned — stays near the peak concurrency
     /// under connection churn (thread reuse).
     pub fn workers_spawned(&self) -> u64 {
-        self.shared.workers_spawned.load(Ordering::Relaxed)
+        self.shared.workers_spawned.get()
     }
 }
 
@@ -383,7 +427,7 @@ fn pool_worker(
         };
         let _ = serve_connection(conn, &shared, &stop);
     }
-    shared.live_workers.fetch_sub(1, Ordering::SeqCst);
+    shared.live_workers.sub(1);
 }
 
 /// `read_exact` that tolerates the connection's 100ms read-timeout
@@ -467,8 +511,14 @@ fn serve_connection(
             Ok(false) => continue, // idle poll: recheck the stop flag
             Err(_) => return Ok(()), // EOF/reset: done
         }
-        shared.frames.fetch_add(1, Ordering::Relaxed);
-        let req = Request::decode(&read_buf)?;
+        shared.frames.inc();
+        let (req, ctx) = Request::decode_traced(&read_buf)?;
+        // A traced frame stitches the server into the sender's
+        // episode trace: one instant per frame on the store track,
+        // attached to the remote sender's span.
+        if let Some(ctx) = ctx {
+            trace::event_in(ctx, req.op_name(), "store", String::new());
+        }
         let resp = handle(shared, stop, req);
         resp.encode_into(&mut write_buf);
         write_frame(&mut stream, &write_buf)?;
@@ -492,11 +542,11 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
         }
         return Response::Multi(out);
     }
-    shared.requests.fetch_add(1, Ordering::Relaxed);
+    shared.requests.inc();
     match req {
         Request::Batch(_) => unreachable!("handled above"),
         Request::Hello { .. } => {
-            shared.hellos.fetch_add(1, Ordering::Relaxed);
+            shared.hellos.inc();
             Response::HelloAck
         }
         Request::Set { key, value } => {
@@ -581,6 +631,10 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
             }
             Response::Ok
         }
+        Request::Stats => {
+            let snap = shared.metrics_snapshot();
+            Response::Value(snap.to_json().render().into_bytes().into())
+        }
         Request::DelPrefix { prefix } => {
             let mut removed = 0i64;
             for stripe in &shared.stripes {
@@ -651,7 +705,7 @@ fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Res
         }
         if let Some(v) = g.map.get(key) {
             if parked {
-                shared.wakeups.fetch_add(1, Ordering::Relaxed);
+                shared.wakeups.inc();
             }
             return Response::Value(v.clone());
         }
@@ -690,13 +744,24 @@ pub enum FencedWait {
 pub struct TcpStoreClient {
     stream: TcpStream,
     ops: u64,
+    /// Trace context stamped onto every outgoing frame (16 trailing
+    /// bytes, DESIGN.md §12); `None` sends classic untraced frames.
+    trace_ctx: Option<TraceCtx>,
 }
 
 impl TcpStoreClient {
     pub fn connect(addr: SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
         stream.set_nodelay(true).ok();
-        Ok(TcpStoreClient { stream, ops: 0 })
+        Ok(TcpStoreClient { stream, ops: 0, trace_ctx: None })
+    }
+
+    /// Stamp (or clear) the trace context carried by this client's
+    /// subsequent frames — typically the current episode span's
+    /// [`Span::ctx`](crate::telemetry::Span::ctx), so the store's
+    /// per-frame events stitch into the caller's trace.
+    pub fn set_trace_ctx(&mut self, ctx: Option<TraceCtx>) {
+        self.trace_ctx = ctx;
     }
 
     /// Logical store operations the server executed for this
@@ -710,7 +775,7 @@ impl TcpStoreClient {
 
     fn call(&mut self, req: Request) -> Result<Response> {
         self.ops += 1;
-        write_frame(&mut self.stream, &req.encode())?;
+        write_frame(&mut self.stream, &req.encode_traced(self.trace_ctx))?;
         let body = read_frame(&mut self.stream)?;
         Response::decode(&body)
     }
@@ -743,7 +808,10 @@ impl TcpStoreClient {
             // waits can exceed the default read path; use a long timeout
             self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
         }
-        write_frame(&mut self.stream, &Request::Batch(reqs).encode())?;
+        write_frame(
+            &mut self.stream,
+            &Request::Batch(reqs).encode_traced(self.trace_ctx),
+        )?;
         let body = read_frame(&mut self.stream)?;
         match Response::decode(&body)? {
             Response::Multi(rs) => {
@@ -908,6 +976,16 @@ impl TcpStoreClient {
     pub fn count(&mut self) -> Result<u64> {
         match self.call(Request::Count)? {
             Response::CountIs(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the server's live metrics snapshot (`Stats` wire op) —
+    /// readable mid-episode, including while other clients block in
+    /// fenced waits.
+    pub fn stats(&mut self) -> Result<Snapshot> {
+        match self.call(Request::Stats)? {
+            Response::Value(v) => Snapshot::parse(&v),
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -1398,6 +1476,57 @@ mod tests {
         assert!(c.get("ranktable/v1").unwrap().is_some());
         assert_eq!(server.key_count(), 1 + 2 * 3);
         assert_eq!(server.counter_count(), 2);
+    }
+
+    #[test]
+    fn stats_wire_op_serves_live_snapshot_mid_run() {
+        let server = TcpStoreServer::start().unwrap();
+        let addr = server.addr();
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.hello(1).unwrap();
+        c.set("k", b"v").unwrap();
+        // park a waiter so the snapshot is taken mid-episode, with
+        // another client blocked server-side
+        let waiter = std::thread::spawn(move || {
+            let mut w = TcpStoreClient::connect(addr).unwrap();
+            w.wait("late").unwrap()
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.parked_waiters() < 1 {
+            assert!(Instant::now() < deadline, "waiter never parked");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let snap = c.stats().unwrap();
+        assert!(snap.counter("store.requests") >= 3, "{snap:?}");
+        assert!(snap.counter("store.frames") >= 3, "{snap:?}");
+        assert_eq!(snap.gauge("store.keys"), 1, "{snap:?}");
+        assert_eq!(snap.gauge("store.parked_waiters"), 1, "{snap:?}");
+        // the wire snapshot equals the in-process accessor view
+        assert_eq!(snap.counter("store.hellos"), server.hello_count());
+        c.set("late", b"v").unwrap();
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn traced_frames_stitch_into_the_clients_trace() {
+        trace::set_recording(true);
+        let root = trace::root("episode", "client");
+        let trace_id = root.trace_id();
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        c.set_trace_ctx(root.ctx());
+        c.set("traced", b"v").unwrap();
+        c.get("traced").unwrap();
+        c.batch(vec![Request::Add { key: "n".into(), delta: 1 }]).unwrap();
+        // untraced again: no further events for this trace
+        c.set_trace_ctx(None);
+        c.set("untraced", b"v").unwrap();
+        root.end();
+
+        let events = trace::events_for(trace_id);
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, ["Set", "Get", "Batch"], "{events:?}");
+        assert!(events.iter().all(|e| e.track == "store"));
     }
 
     #[test]

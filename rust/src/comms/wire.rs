@@ -16,8 +16,15 @@
 //!   against a superseded epoch;
 //! * responses are encoded into a reusable per-connection buffer
 //!   ([`Response::encode_into`]) instead of a fresh `Vec` per frame,
-//!   and [`read_frame_into`] reuses the connection's read buffer.
+//!   and [`read_frame_into`] reuses the connection's read buffer;
+//! * any request frame may carry an **optional trailing trace
+//!   context** (16 bytes, DESIGN.md §12) after its structured fields —
+//!   [`Request::encode_traced`] appends it, [`Request::decode_traced`]
+//!   recovers it, and decoders that don't know the field ignore
+//!   trailing bytes, so old and new peers interoperate in both
+//!   directions.
 
+use crate::telemetry::trace::TraceCtx;
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 
@@ -102,6 +109,10 @@ pub enum Request {
     /// fenced prefix can never commit its dependent suffix. Batches do
     /// not nest.
     Batch(Vec<Request>),
+    /// live introspection (DESIGN.md §12): serve the store's unified
+    /// metrics-registry snapshot -> Value(JSON bytes), readable
+    /// mid-episode by any client (`telemetry::Snapshot::parse`).
+    Stats,
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -148,7 +159,37 @@ fn get_string(buf: &[u8], pos: &mut usize) -> Result<String> {
     Ok(String::from_utf8(get_bytes(buf, pos)?)?)
 }
 
+fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    if *pos + 8 > buf.len() {
+        bail!("frame underrun");
+    }
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
 impl Request {
+    /// Short op label used by the flight recorder's per-frame events.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Set { .. } => "Set",
+            Request::Get { .. } => "Get",
+            Request::Wait { .. } => "Wait",
+            Request::Add { .. } => "Add",
+            Request::Count => "Count",
+            Request::Hello { .. } => "Hello",
+            Request::WaitEpoch { .. } => "WaitEpoch",
+            Request::AdvanceEpoch { .. } => "AdvanceEpoch",
+            Request::AdvertiseRestore { .. } => "AdvertiseRestore",
+            Request::ClaimRestore { .. } => "ClaimRestore",
+            Request::AbortEpoch { .. } => "AbortEpoch",
+            Request::Heartbeat { .. } => "Heartbeat",
+            Request::DelPrefix { .. } => "DelPrefix",
+            Request::Batch(_) => "Batch",
+            Request::Stats => "Stats",
+        }
+    }
+
     /// Append the opcode + payload *body* (no length prefix) to
     /// `body` — the form `Batch` nests. Nested items are encoded in
     /// place with a back-patched length (no per-item allocation),
@@ -227,101 +268,103 @@ impl Request {
                     body[at..at + 4].copy_from_slice(&len.to_le_bytes());
                 }
             }
+            Request::Stats => body.push(14),
         }
     }
 
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_traced(None)
+    }
+
+    /// Encode the full frame, appending the optional trace context
+    /// after the structured payload (inside the length prefix) —
+    /// context adds zero logical ops and zero extra frames, it rides
+    /// the request it annotates.
+    pub fn encode_traced(&self, ctx: Option<TraceCtx>) -> Vec<u8> {
         let mut out = vec![0u8; 4];
         self.encode_body_into(&mut out);
+        if let Some(ctx) = ctx {
+            ctx.encode_into(&mut out);
+        }
         let len = (out.len() - 4) as u32;
         out[..4].copy_from_slice(&len.to_le_bytes());
         out
     }
 
+    /// Decode one request, ignoring any trailing bytes (the pre-§12
+    /// behaviour every deployed decoder shares — which is exactly what
+    /// makes the trailing trace context backward compatible).
     pub fn decode(body: &[u8]) -> Result<Request> {
+        Ok(Self::decode_at(body)?.0)
+    }
+
+    /// Decode one request plus its optional trailing [`TraceCtx`]:
+    /// a context is present iff exactly [`trace::CTX_WIRE_LEN`] bytes
+    /// remain after the structured fields (and the trace id is
+    /// non-zero). Frames from peers that never append a context decode
+    /// with `None`.
+    ///
+    /// [`trace::CTX_WIRE_LEN`]: crate::telemetry::trace::CTX_WIRE_LEN
+    pub fn decode_traced(body: &[u8]) -> Result<(Request, Option<TraceCtx>)> {
+        let (req, end) = Self::decode_at(body)?;
+        Ok((req, TraceCtx::decode(&body[end..])))
+    }
+
+    /// Decode one request and report how many bytes its structured
+    /// fields consumed — every arm advances `pos` past everything it
+    /// reads, so `body[consumed..]` is exactly the trailing extension
+    /// area.
+    fn decode_at(body: &[u8]) -> Result<(Request, usize)> {
         let mut pos = 1;
-        match body.first() {
-            Some(0) => Ok(Request::Set {
+        let req = match body.first() {
+            Some(0) => Request::Set {
                 key: get_string(body, &mut pos)?,
                 value: get_bytes(body, &mut pos)?,
-            }),
-            Some(1) => Ok(Request::Get { key: get_string(body, &mut pos)? }),
-            Some(2) => Ok(Request::Wait { key: get_string(body, &mut pos)? }),
+            },
+            Some(1) => Request::Get { key: get_string(body, &mut pos)? },
+            Some(2) => Request::Wait { key: get_string(body, &mut pos)? },
             Some(3) => {
                 let key = get_string(body, &mut pos)?;
-                if pos + 8 > body.len() {
-                    bail!("frame underrun");
-                }
-                let delta = i64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                Ok(Request::Add { key, delta })
+                let delta = get_u64(body, &mut pos)? as i64;
+                Request::Add { key, delta }
             }
-            Some(4) => Ok(Request::Count),
-            Some(5) => {
-                if pos + 8 > body.len() {
-                    bail!("frame underrun");
-                }
-                let client_id = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                Ok(Request::Hello { client_id })
-            }
+            Some(4) => Request::Count,
+            Some(5) => Request::Hello { client_id: get_u64(body, &mut pos)? },
             Some(6) => {
                 let key = get_string(body, &mut pos)?;
-                if pos + 8 > body.len() {
-                    bail!("frame underrun");
-                }
-                let epoch = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                Ok(Request::WaitEpoch { key, epoch })
+                let epoch = get_u64(body, &mut pos)?;
+                Request::WaitEpoch { key, epoch }
             }
-            Some(7) => {
-                if pos + 8 > body.len() {
-                    bail!("frame underrun");
-                }
-                let to = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                Ok(Request::AdvanceEpoch { to })
-            }
+            Some(7) => Request::AdvanceEpoch { to: get_u64(body, &mut pos)? },
             Some(8) => {
-                if pos + 16 > body.len() {
-                    bail!("frame underrun");
-                }
-                let epoch = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                let tag = u64::from_le_bytes(body[pos + 8..pos + 16].try_into().unwrap());
-                pos += 16;
-                Ok(Request::AdvertiseRestore {
+                let epoch = get_u64(body, &mut pos)?;
+                let tag = get_u64(body, &mut pos)?;
+                Request::AdvertiseRestore {
                     epoch,
                     tag,
                     addr: get_string(body, &mut pos)?,
-                })
+                }
             }
             Some(9) => {
-                if pos + 16 > body.len() {
-                    bail!("frame underrun");
-                }
-                let epoch = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                let tag = u64::from_le_bytes(body[pos + 8..pos + 16].try_into().unwrap());
-                Ok(Request::ClaimRestore { epoch, tag })
+                let epoch = get_u64(body, &mut pos)?;
+                let tag = get_u64(body, &mut pos)?;
+                Request::ClaimRestore { epoch, tag }
             }
             Some(10) => {
                 let unless_key = get_string(body, &mut pos)?;
                 let tombstone_key = get_string(body, &mut pos)?;
                 let tombstone = get_bytes(body, &mut pos)?;
-                if pos + 8 > body.len() {
-                    bail!("frame underrun");
-                }
-                let to = u64::from_le_bytes(body[pos..pos + 8].try_into().unwrap());
-                Ok(Request::AbortEpoch { unless_key, tombstone_key, tombstone, to })
+                let to = get_u64(body, &mut pos)?;
+                Request::AbortEpoch { unless_key, tombstone_key, tombstone, to }
             }
             Some(11) => {
-                if pos + 32 > body.len() {
-                    bail!("frame underrun");
-                }
-                let u = |at: usize| u64::from_le_bytes(body[at..at + 8].try_into().unwrap());
-                Ok(Request::Heartbeat {
-                    rank: u(pos),
-                    incarnation: u(pos + 8),
-                    step_tag: u(pos + 16) as i64,
-                    device_code: u(pos + 24) as i64,
-                })
+                let rank = get_u64(body, &mut pos)?;
+                let incarnation = get_u64(body, &mut pos)?;
+                let step_tag = get_u64(body, &mut pos)? as i64;
+                let device_code = get_u64(body, &mut pos)? as i64;
+                Request::Heartbeat { rank, incarnation, step_tag, device_code }
             }
-            Some(12) => Ok(Request::DelPrefix { prefix: get_string(body, &mut pos)? }),
+            Some(12) => Request::DelPrefix { prefix: get_string(body, &mut pos)? },
             Some(13) => {
                 let count = get_u32(body, &mut pos)? as usize;
                 if count > MAX_BATCH_OPS {
@@ -335,10 +378,12 @@ impl Request {
                     }
                     items.push(Request::decode(&sub)?);
                 }
-                Ok(Request::Batch(items))
+                Request::Batch(items)
             }
+            Some(14) => Request::Stats,
             other => bail!("bad request opcode {other:?}"),
-        }
+        };
+        Ok((req, pos))
     }
 }
 
@@ -492,6 +537,19 @@ mod tests {
         assert_eq!(Response::decode(body).unwrap(), r);
     }
 
+    /// The traced roundtrip doubles as a position-accounting check:
+    /// if any `decode_at` arm under-consumes its fields, the leftover
+    /// bytes break the exactly-16-trailing-bytes rule and the context
+    /// comes back mangled or `None`.
+    fn roundtrip_traced(r: Request) {
+        let ctx = TraceCtx { trace_id: 0xA1B2_C3D4_E5F6_0708, span_id: 42 };
+        let enc = r.encode_traced(Some(ctx));
+        let body = &enc[4..];
+        assert_eq!(Request::decode_traced(body).unwrap(), (r.clone(), Some(ctx)), "{r:?}");
+        // a context-unaware decoder ignores the trailing bytes
+        assert_eq!(Request::decode(body).unwrap(), r, "{r:?}");
+    }
+
     #[test]
     fn request_roundtrips() {
         roundtrip_req(Request::Set { key: "k".into(), value: vec![1, 2, 3] });
@@ -527,6 +585,62 @@ mod tests {
             device_code: -1,
         });
         roundtrip_req(Request::DelPrefix { prefix: "rdzv/3/".into() });
+        roundtrip_req(Request::Stats);
+    }
+
+    #[test]
+    fn every_request_carries_optional_trace_context() {
+        roundtrip_traced(Request::Set { key: "k".into(), value: vec![1, 2, 3] });
+        roundtrip_traced(Request::Get { key: "ranktable/v1".into() });
+        roundtrip_traced(Request::Wait { key: "".into() });
+        roundtrip_traced(Request::Add { key: "barrier".into(), delta: -7 });
+        roundtrip_traced(Request::Count);
+        roundtrip_traced(Request::Hello { client_id: u64::MAX });
+        roundtrip_traced(Request::WaitEpoch { key: "rdzv/3/delta".into(), epoch: 3 });
+        roundtrip_traced(Request::AdvanceEpoch { to: u64::MAX });
+        roundtrip_traced(Request::AdvertiseRestore {
+            epoch: 5,
+            tag: 0xDEAD_BEEF_0042,
+            addr: "127.0.0.1:30321".into(),
+        });
+        roundtrip_traced(Request::ClaimRestore { epoch: u64::MAX, tag: 0 });
+        roundtrip_traced(Request::AbortEpoch {
+            unless_key: "rdzv/4/go".into(),
+            tombstone_key: "rdzv/5/delta".into(),
+            tombstone: b"!abort".to_vec(),
+            to: 5,
+        });
+        roundtrip_traced(Request::Heartbeat {
+            rank: 4096,
+            incarnation: u64::MAX,
+            step_tag: -1,
+            device_code: 3,
+        });
+        roundtrip_traced(Request::DelPrefix { prefix: "rdzv/3/".into() });
+        roundtrip_traced(Request::Batch(vec![
+            Request::Set { key: "a".into(), value: vec![7; 64] },
+            Request::Add { key: "rdzv/2/arrived".into(), delta: 1 },
+        ]));
+        roundtrip_traced(Request::Stats);
+    }
+
+    #[test]
+    fn untraced_frames_decode_with_no_context() {
+        let reqs = [
+            Request::Count,
+            Request::Hello { client_id: 7 },
+            Request::Heartbeat { rank: 1, incarnation: 1, step_tag: 0, device_code: -1 },
+            Request::Stats,
+        ];
+        for r in reqs {
+            let enc = r.encode();
+            let (back, ctx) = Request::decode_traced(&enc[4..]).unwrap();
+            assert_eq!(back, r);
+            assert_eq!(ctx, None, "{r:?}");
+        }
+        // an all-zero context is the unrecorded sentinel -> None
+        let enc = Request::Count.encode_traced(Some(TraceCtx { trace_id: 0, span_id: 0 }));
+        assert_eq!(Request::decode_traced(&enc[4..]).unwrap().1, None);
     }
 
     #[test]

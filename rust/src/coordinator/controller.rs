@@ -19,6 +19,7 @@ use crate::comms::tcp_store::TcpStoreServer;
 use crate::comms::{Collective, CollectiveError};
 use crate::config::{ParallelismConfig, RecoveryMode};
 use crate::runtime::ModelBundle;
+use crate::telemetry::{global, log, trace};
 use crate::training::data::{DataConfig, DataIterator};
 use crate::training::state::WorkerState;
 use crate::training::worker::{
@@ -487,9 +488,9 @@ impl Controller {
             // the controller already gave up on.
             WorkerEvent::StateServed { .. } | WorkerEvent::StateRestored { .. } => {}
             WorkerEvent::RestoreFailed { rank, ref detail, .. } => {
-                eprintln!(
-                    "[controller] late restore failure from rank {rank}: {detail}"
-                );
+                log::warn("controller", || {
+                    format!("late restore failure from rank {rank}: {detail}")
+                });
             }
         }
     }
@@ -540,8 +541,12 @@ impl Controller {
     /// FlashRecovery (paper §III-D/E): selective recreation of failed
     /// ranks, replica-based state restore, resume at step i or i+1.
     fn flash_recover(&mut self, detections: &[super::detection::Detection]) -> Result<()> {
+        let mut episode = trace::root("flash_recover", "controller");
         let t_aware = Instant::now();
         let mut dead: Vec<usize> = detections.iter().map(|d| d.rank).collect();
+        log::info("controller", || {
+            format!("flash recovery: detected ranks {dead:?} ({:?})", detections[0].kind)
+        });
         // Detection latency: *measured* on the wire (last good
         // heartbeat -> detection) whenever the live plane is up; the
         // in-process boards' ground-truth death stamps only when it
@@ -618,6 +623,7 @@ impl Controller {
         // rendezvous agent runs the real client protocol against the
         // controller's store; the updated table every participant
         // converged on becomes the published ranktable.
+        let mut span_rebuild = episode.child("rebuild", "controller");
         let t_rebuild = Instant::now();
         let mut rebuild_s = 0.0;
         if let Some(server) = &self.rebuild_plane {
@@ -642,6 +648,8 @@ impl Controller {
                 self.ranktable.substitute(entry)?;
             }
         }
+        span_rebuild.set_detail(format!("epoch={}", self.rebuild_epoch));
+        span_rebuild.end();
         self.publish_ranktable()?;
         let dead_replacements = self.await_parked(&dead, Duration::from_secs(120))?;
         if !dead_replacements.is_empty() {
@@ -652,6 +660,7 @@ impl Controller {
         // (DESIGN.md §9). Every lost shard fetches from a surviving
         // replica of the same shard; distinct transfers run in
         // parallel instead of serialising through one broadcast root.
+        let mut span_restore = episode.child("restore", "controller");
         let t_restore = Instant::now();
         let restore_epoch = self.rebuild_epoch;
         let fence = EpochFence::new(restore_epoch);
@@ -667,6 +676,7 @@ impl Controller {
                     epoch: restore_epoch,
                     receivers: tr.targets.len(),
                     fence: fence.clone(),
+                    trace: span_restore.ctx(),
                 },
             )?;
             for &target in &tr.targets {
@@ -715,6 +725,11 @@ impl Controller {
             }
         }
         let restore_s = t_restore.elapsed().as_secs_f64();
+        span_restore.set_detail(format!(
+            "transfers={} resume_step={resume_step}",
+            shard_restores.len()
+        ));
+        span_restore.end();
 
         // 5. rebuild the communication group and continue training.
         self.collective.reset(self.cfg.dp);
@@ -736,6 +751,20 @@ impl Controller {
         }
 
         let restart_s = t_aware.elapsed().as_secs_f64();
+        episode.set_detail(format!("ranks={dead:?} resume_step={resume_step}"));
+        episode.end();
+        let reg = global();
+        reg.observe("controller.detection_s", detection_s);
+        reg.observe("controller.rebuild_s", rebuild_s);
+        reg.observe("controller.restore_s", restore_s);
+        reg.observe("controller.restart_s", restart_s);
+        reg.inc("controller.flash_recoveries");
+        log::info("controller", || {
+            format!(
+                "flash recovery done: ranks {dead:?} resume_step={resume_step} \
+                 restart_s={restart_s:.3}"
+            )
+        });
         self.report.recoveries.push(RecoveryRecord {
             mode: RecoveryMode::Flash,
             failed_ranks: dead,
@@ -874,6 +903,13 @@ impl Controller {
         self.publish_ranktable()?;
 
         let restart_s = t_restart.elapsed().as_secs_f64();
+        global().inc("controller.vanilla_recoveries");
+        log::info("controller", || {
+            format!(
+                "vanilla recovery done: ranks {dead:?} resume_step={resume_step} \
+                 restart_s={restart_s:.3}"
+            )
+        });
         self.report.recoveries.push(RecoveryRecord {
             mode: RecoveryMode::Vanilla,
             failed_ranks: dead,

@@ -26,6 +26,7 @@ use crate::comms::wire::{Bytes, Request, Response};
 use crate::config::ParallelismConfig;
 use crate::metrics::bench::BenchReport;
 use crate::metrics::Histogram;
+use crate::telemetry::log;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
 use std::net::SocketAddr;
@@ -299,6 +300,12 @@ impl NodeSession {
             // Missed at least one epoch's delta (or the cached table
             // diverged): resync from the full binary table — one extra
             // message, not a re-registration.
+            log::debug("rendezvous", || {
+                format!(
+                    "rank {} missed a delta; full-table resync at epoch {target}",
+                    self.rank
+                )
+            });
             let bytes = fenced_value(self.client.wait_epoch(&k_table(target), target)?)?;
             self.table = Ranktable::decode_bin(&bytes)?;
             self.groups = GroupSet::derive_for(&self.table, cfg, target, self.rank)?;
@@ -417,6 +424,9 @@ pub fn coordinate(
 /// [`EpochAborted`]. The tombstoned epoch `target + 1` must not be
 /// reused — retries go to `target + 2` (i.e. `from_epoch = target + 1`).
 fn abort_epoch(addr: SocketAddr, target: u64) {
+    log::warn("rendezvous", || {
+        format!("aborting epoch {target} (supervised barrier)")
+    });
     if let Ok(mut c) = TcpStoreClient::connect(addr) {
         let _ = c.abort_epoch_unless(
             &k_go(target),
@@ -552,6 +562,12 @@ pub fn rebuild_episode(
     }
     let target = from_epoch + 1;
     let addr = server.addr();
+    log::info("rendezvous", || {
+        format!(
+            "rebuild episode: epoch {target}, {} failed, world {world}",
+            failed.len()
+        )
+    });
 
     // Pre-existing state: survivors already hold store connections and
     // the cached table from `from_epoch` — established outside the
@@ -645,6 +661,14 @@ pub fn rebuild_episode(
         replacement_ops_max = replacement_ops_max.max(ops);
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    log::debug("rendezvous", || {
+        format!(
+            "epoch {target} converged in {:.1}ms: survivor ops {survivor_ops_max}, \
+             replacement ops {replacement_ops_max}, coordinator ops {}",
+            wall_s * 1e3,
+            stats.ops
+        )
+    });
 
     // Bookkeeping off the timed path: full-set rebuilt/re-keyed split.
     let mut full = GroupSet::derive(table, cfg, from_epoch)?;

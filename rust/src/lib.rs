@@ -28,5 +28,6 @@ pub mod coordinator;
 pub mod metrics;
 pub mod recovery_model;
 pub mod runtime;
+pub mod telemetry;
 pub mod training;
 pub mod util;

@@ -18,6 +18,10 @@
 //!                  batched vs serial clients, 64 -> 8192 simulated
 //!                  clients); emits BENCH_store_throughput.json,
 //!                  optionally perf-gated
+//!   trace          run a live chaos scenario with the flight recorder
+//!                  on and write a Perfetto-viewable Chrome trace
+//!                  (plus an optional JSONL journal); --check
+//!                  self-validates the trace against the episode
 //!   info           print artifact/manifest information
 //!
 //! Examples:
@@ -33,6 +37,7 @@
 //!   flashrecovery scenario export --spec flaky_node > flaky.json
 //!   flashrecovery rebuild-bench --out BENCH_group_rebuild.json \
 //!       --baseline ci/BENCH_group_rebuild.baseline.json --gate 1.5
+//!   flashrecovery trace silent_hang --out trace.json --check
 //!   flashrecovery info --size small
 
 use flashrecovery::cluster::failure::FailureKind;
@@ -54,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         Some("restore-bench") => restore_bench(&args),
         Some("detect-bench") => detect_bench(&args),
         Some("store-bench") => store_bench(&args),
+        Some("trace") => trace_cmd(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -71,7 +77,7 @@ fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|detect-bench|store-bench|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|detect-bench|store-bench|trace|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -92,6 +98,8 @@ fn usage() {
          store-bench: [--clients 64,1024,4096,8192] [--connections N]\n\
          \u{20}         [--repeats N] [--rounds N] [--assert] [--out FILE]\n\
          \u{20}         [--baseline FILE --gate RATIO]\n\
+         trace:    <name|file.json> [--devices N] [--out trace.json]\n\
+         \u{20}         [--journal FILE] [--check]\n\
          info:     --size tiny|small|base"
     );
 }
@@ -485,6 +493,111 @@ fn store_bench(args: &Args) -> anyhow::Result<()> {
         println!("[store-bench] acceptance assertions PASS");
     }
     gate_against_baseline("store-bench", &report, &out, args)
+}
+
+/// `trace <scenario>` — run a live chaos scenario with the flight
+/// recorder on and export the episode(s) as a Chrome trace-event JSON
+/// (open in Perfetto / chrome://tracing). `--journal FILE` also dumps
+/// the compact JSONL journal; `--check` self-validates the document
+/// schema and reconciles the rebuild/restore span durations against
+/// the episode outcome (±1ms), exiting non-zero on any violation —
+/// CI's telemetry smoke step runs exactly this.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::chaos::{self, library};
+    use flashrecovery::telemetry::{global, trace};
+    use flashrecovery::util::Json;
+
+    let devices = args.usize_or("devices", 256);
+    let sel = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("trace needs a scenario: <name|file.json>"))?;
+    let spec = match library::by_name(sel, devices) {
+        Some(s) => s,
+        None => chaos::ScenarioSpec::load(sel)?,
+    };
+
+    trace::set_recording(true);
+    let outcomes = chaos::drive_live_detection(&spec)?;
+    trace::set_recording(false);
+
+    let mut events: Vec<Json> = Vec::new();
+    for out in &outcomes {
+        println!(
+            "[trace:{}] episode step {}: epoch {}, detect {:.3}s, rebuild {:.3}s, \
+             restore {:.3}s, total {:.3}s, trace_id {:016x}",
+            spec.name, out.step, out.epoch, out.detection_s, out.rebuild_s,
+            out.restore_s, out.total_s, out.trace_id
+        );
+        let doc = trace::chrome_trace(out.trace_id);
+        if let Some(evs) = doc.get("traceEvents").as_array() {
+            events.extend(evs.iter().cloned());
+        }
+    }
+    // Episodes run sequentially on one monotonic clock, so their
+    // concatenated events keep the ts order validate_chrome_trace
+    // demands.
+    let mut doc = Json::object();
+    doc.set("displayTimeUnit", "ms").set("traceEvents", Json::Array(events));
+
+    let out_path = args.str_or("out", "trace.json");
+    std::fs::write(&out_path, doc.render())?;
+    println!("[trace:{}] chrome trace -> {out_path} (open in ui.perfetto.dev)", spec.name);
+    if let Some(path) = args.get("journal") {
+        std::fs::write(path, trace::journal(0))?;
+        println!("[trace:{}] jsonl journal -> {path}", spec.name);
+    }
+
+    let snap = global().snapshot();
+    println!(
+        "[trace:{}] registry: {} episodes recovered",
+        spec.name,
+        snap.counter("episode.recovered")
+    );
+
+    if args.bool_or("check", false) {
+        trace::validate_chrome_trace(&doc)
+            .map_err(|e| anyhow::anyhow!("trace schema violation: {e}"))?;
+        for out in &outcomes {
+            check_episode_trace(out)?;
+        }
+        println!("[trace:{}] check PASS ({} episode(s))", spec.name, outcomes.len());
+    }
+    Ok(())
+}
+
+/// One episode's span tree must carry detection/rebuild/restore under
+/// the episode root, with rebuild/restore wall intervals reconciling
+/// ±1ms against the outcome's measured phase durations.
+fn check_episode_trace(out: &flashrecovery::chaos::LiveDetectionOutcome) -> anyhow::Result<()> {
+    use flashrecovery::telemetry::trace;
+
+    let spans = trace::spans_for(out.trace_id);
+    let root = spans
+        .iter()
+        .find(|s| s.name == "episode" && s.parent == 0)
+        .ok_or_else(|| anyhow::anyhow!("episode {}: no root span", out.step))?;
+    for name in ["detection", "rebuild", "restore"] {
+        if !spans.iter().any(|s| s.name == name && s.parent == root.span_id) {
+            anyhow::bail!("episode {}: no {name} span under the root", out.step);
+        }
+    }
+    // detection_s is a measured heartbeat->detection latency, not the
+    // phase's wall interval, so only rebuild/restore reconcile.
+    for (name, wall) in [("rebuild", out.rebuild_s), ("restore", out.restore_s)] {
+        let s = spans
+            .iter()
+            .find(|s| s.name == name && s.parent == root.span_id)
+            .expect("presence checked above");
+        let dur = s.duration_s();
+        if (dur - wall).abs() > 1e-3 {
+            anyhow::bail!(
+                "episode {}: {name} span {dur:.4}s vs outcome {wall:.4}s (> 1ms apart)",
+                out.step
+            );
+        }
+    }
+    Ok(())
 }
 
 fn info(args: &Args) -> anyhow::Result<()> {

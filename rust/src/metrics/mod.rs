@@ -7,61 +7,133 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Streaming histogram over f64 samples. Keeps all samples (experiment
-/// scales here are small) so quantiles are exact.
-#[derive(Debug, Clone, Default)]
+/// Streaming histogram over f64 samples. The default mode keeps every
+/// sample (bench scales are small, quantiles exact); bounded mode
+/// ([`Histogram::with_capacity`]) keeps an Algorithm-R reservoir so
+/// million-record chaos soaks stay flat in memory, while
+/// count/sum/min/max stay exact (running) and std stays exact
+/// (Welford) — only quantiles become reservoir estimates.
+#[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Reservoir bound; 0 = unbounded exact mode.
+    cap: usize,
     samples: Vec<f64>,
+    count: u64,
+    total: f64,
+    lo: f64,
+    hi: f64,
+    /// Welford accumulators — exact mean/variance at any count.
+    w_mean: f64,
+    w_m2: f64,
+    /// SplitMix64 state (inline `util::rng` step) for reservoir draws;
+    /// fixed seed keeps soak quantiles reproducible.
+    rng: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::sized(0)
+    }
 }
 
 impl Histogram {
     pub fn new() -> Self {
-        Self::default()
+        Self::sized(0)
+    }
+
+    /// Bounded-reservoir mode: exact until `cap` samples, uniform
+    /// reservoir sampling past it (memory stays O(cap) forever).
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Self::sized(cap)
+    }
+
+    fn sized(cap: usize) -> Self {
+        Histogram {
+            cap,
+            samples: Vec::new(),
+            count: 0,
+            total: 0.0,
+            lo: f64::INFINITY,
+            hi: f64::NEG_INFINITY,
+            w_mean: 0.0,
+            w_m2: 0.0,
+            rng: 0x5DEE_CE66_D1CE_4E5B,
+        }
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        self.count += 1;
+        self.total += v;
+        self.lo = self.lo.min(v);
+        self.hi = self.hi.max(v);
+        let d = v - self.w_mean;
+        self.w_mean += d / self.count as f64;
+        self.w_m2 += d * (v - self.w_mean);
+        if self.cap == 0 || self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Algorithm R: admit with probability cap/count by drawing
+            // a slot over [0, count); in-range draws replace a
+            // uniformly chosen resident.
+            let j = self.next_rand() % self.count;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
     }
 
+    /// Total samples recorded (not the resident reservoir size).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.count == 0
+    }
+
+    /// Samples resident in memory (`== len()` in unbounded mode).
+    pub fn resident(&self) -> usize {
+        self.samples.len()
     }
 
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.total
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             0.0
         } else {
-            self.sum() / self.samples.len() as f64
+            self.total / self.count as f64
         }
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.lo
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.hi
     }
 
     pub fn std(&self) -> f64 {
-        if self.samples.len() < 2 {
+        if self.count < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        let var = self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
-            / (self.samples.len() - 1) as f64;
-        var.sqrt()
+        (self.w_m2 / (self.count - 1) as f64).sqrt()
     }
 
-    /// Exact quantile, q in [0,1], linear interpolation.
+    /// Quantile over resident samples — exact unless the reservoir
+    /// spilled — q in [0,1], linear interpolation.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -209,6 +281,45 @@ mod tests {
             h.record(v);
         }
         assert!((h.std() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn bounded_mode_is_exact_below_capacity() {
+        let mut h = Histogram::with_capacity(100);
+        for i in 1..=50 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 50);
+        assert_eq!(h.resident(), 50);
+        assert!((h.p50() - 25.5).abs() < 1e-9);
+        assert!((h.quantile(1.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_reservoir_memory_stays_flat_over_1m_records() {
+        // Regression: the unbounded histogram grew one f64 per record
+        // forever — a long chaos soak leaked without bound. Bounded
+        // mode must hold residency at `cap` across 1M records while
+        // count/sum/min/max/mean/std stay exact.
+        let cap = 1024;
+        let mut h = Histogram::with_capacity(cap);
+        let n = 1_000_000u64;
+        for i in 0..n {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), n as usize);
+        assert_eq!(h.resident(), cap, "reservoir must not grow past cap");
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), (n - 1) as f64);
+        assert!((h.mean() - 499_999.5).abs() < 1e-6);
+        // uniform 0..n-1: sample std = sqrt(n*(n+1)/12) ~= 288675.28
+        assert!((h.std() - 288_675.28).abs() < 1.0, "std={}", h.std());
+        // quantiles are estimates over a 1024-sample uniform reservoir
+        let p50 = h.p50();
+        assert!(
+            (350_000.0..650_000.0).contains(&p50),
+            "reservoir p50 estimate off: {p50}"
+        );
     }
 
     #[test]

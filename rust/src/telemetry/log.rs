@@ -1,0 +1,137 @@
+//! Leveled, env-filtered logger for coordinator/comms hot paths —
+//! replaces raw `eprintln!` so nightly-soak artifacts capture messages
+//! with timestamps and targets instead of interleaved stderr
+//! (DESIGN.md §12).
+//!
+//! Filtering: `FLASH_LOG=off|error|warn|info|debug` (default `warn`).
+//! Messages are lazy — the closure only runs when the level passes the
+//! filter, so debug logging on the §11 data plane costs one relaxed
+//! atomic load when disabled.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Severity, ordered `Error < Warn < Info < Debug`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// Active threshold: 0 = off, otherwise a [`Level`] as u8.
+/// 0xFF = not yet initialised from the environment.
+static THRESHOLD: AtomicU8 = AtomicU8::new(0xFF);
+
+fn parse_level(s: &str) -> u8 {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" | "0" => 0,
+        "error" => Level::Error as u8,
+        "warn" | "warning" => Level::Warn as u8,
+        "info" => Level::Info as u8,
+        "debug" | "trace" | "all" => Level::Debug as u8,
+        _ => Level::Warn as u8,
+    }
+}
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Ordering::Relaxed);
+    if t != 0xFF {
+        return t;
+    }
+    let t = std::env::var("FLASH_LOG").map_or(Level::Warn as u8, |v| parse_level(&v));
+    THRESHOLD.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Override the env-derived filter (CLI flags, tests). `None` = off.
+pub fn set_level(level: Option<Level>) {
+    THRESHOLD.store(level.map_or(0, |l| l as u8), Ordering::Relaxed);
+}
+
+/// Would a message at `level` currently be emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= threshold()
+}
+
+fn clock() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Emit one line — `[   12.345s WARN  store] message` — when `level`
+/// passes the filter. The message closure is only invoked on emit.
+pub fn log(level: Level, target: &str, msg: impl FnOnce() -> String) {
+    if !enabled(level) {
+        return;
+    }
+    let t = clock().elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {}", level.tag(), msg());
+}
+
+pub fn error(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Error, target, msg);
+}
+
+pub fn warn(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_all_levels() {
+        assert_eq!(parse_level("off"), 0);
+        assert_eq!(parse_level("ERROR"), Level::Error as u8);
+        assert_eq!(parse_level("warn"), Level::Warn as u8);
+        assert_eq!(parse_level("info"), Level::Info as u8);
+        assert_eq!(parse_level("debug"), Level::Debug as u8);
+        // unknown values fall back to the default, not to silence
+        assert_eq!(parse_level("verbose?"), Level::Warn as u8);
+    }
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn lazy_message_skipped_when_filtered() {
+        // The global threshold is shared across the parallel test
+        // binary, so restore the default before returning.
+        set_level(Some(Level::Error));
+        let mut ran = false;
+        debug("test", || {
+            ran = true;
+            String::new()
+        });
+        assert!(!ran, "filtered message closure must not run");
+        assert!(enabled(Level::Error) && !enabled(Level::Warn));
+        set_level(Some(Level::Warn));
+    }
+}

@@ -1,0 +1,15 @@
+//! Recovery flight recorder (DESIGN.md §12): structured spans/events
+//! with wire-propagated trace context ([`trace`]), a unified metrics
+//! registry with snapshot/diff semantics ([`registry`]), and a
+//! leveled env-filtered logger ([`log`], `FLASH_LOG=debug`).
+//!
+//! Hand-rolled like `util` — no external crates — and inert by
+//! default: recording costs one atomic load until
+//! [`trace::set_recording`] turns the recorder on.
+
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{global, Counter, Gauge, Registry, Series, SeriesStat, Snapshot};
+pub use trace::{Span, SpanRecord, TraceCtx};

@@ -1,0 +1,345 @@
+//! Unified metrics registry: named counters / gauges / series behind
+//! cheap cloneable handles, with snapshot + diff semantics and a JSON
+//! schema shared by benches, chaos assertions, the store's `Stats`
+//! wire op, and CI gates (DESIGN.md §12).
+//!
+//! Handles are lock-free on the update path (relaxed atomics); series
+//! are bounded-reservoir [`Histogram`]s so long soaks stay flat in
+//! memory. The store owns a per-server [`Registry`] instance (parallel
+//! tests never collide); process-wide phase metrics use [`global`].
+
+use crate::metrics::Histogram;
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// Resident samples kept per series (reservoir bound).
+const SERIES_RESERVOIR: usize = 4096;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Monotonic counter handle. Clone freely; clones share the cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level handle (goes up and down).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, d: i64) {
+        self.0.fetch_sub(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Distribution handle backed by a bounded-reservoir [`Histogram`].
+#[derive(Debug, Clone)]
+pub struct Series(Arc<Mutex<Histogram>>);
+
+impl Series {
+    fn new() -> Series {
+        Series(Arc::new(Mutex::new(Histogram::with_capacity(SERIES_RESERVOIR))))
+    }
+
+    pub fn record(&self, v: f64) {
+        lock(&self.0).record(v);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        lock(&self.0).clone()
+    }
+}
+
+/// Named-metric registry. Lookup get-or-creates; cache the returned
+/// handle on hot paths so updates never touch the name maps.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    series: Mutex<BTreeMap<String, Series>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a named counter.
+    pub fn counter(&self, name: &str) -> Counter {
+        lock(&self.counters).entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create a named gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        lock(&self.gauges).entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create a named series.
+    pub fn series(&self, name: &str) -> Series {
+        lock(&self.series).entry(name.to_string()).or_insert_with(Series::new).clone()
+    }
+
+    /// One-shot conveniences for cold call sites without a cached
+    /// handle.
+    pub fn inc(&self, name: &str) {
+        self.counter(name).inc();
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        self.counter(name).add(n);
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        self.series(name).record(v);
+    }
+
+    /// Point-in-time view of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for (k, c) in lock(&self.counters).iter() {
+            snap.counters.insert(k.clone(), c.get());
+        }
+        for (k, g) in lock(&self.gauges).iter() {
+            snap.gauges.insert(k.clone(), g.get());
+        }
+        for (k, s) in lock(&self.series).iter() {
+            snap.series.insert(k.clone(), SeriesStat::of(&lock(&s.0)));
+        }
+        snap
+    }
+}
+
+/// The process-wide registry (controller phase timings, CLI metrics).
+pub fn global() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::new)
+}
+
+/// Summary of one series inside a [`Snapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesStat {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl SeriesStat {
+    fn of(h: &Histogram) -> SeriesStat {
+        if h.is_empty() {
+            return SeriesStat { count: 0, sum: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0 };
+        }
+        SeriesStat {
+            count: h.len() as u64,
+            sum: h.sum(),
+            min: h.min(),
+            max: h.max(),
+            p50: h.p50(),
+            p95: h.p95(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("count", self.count)
+            .set("sum", self.sum)
+            .set("min", self.min)
+            .set("max", self.max)
+            .set("p50", self.p50)
+            .set("p95", self.p95);
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<SeriesStat> {
+        Ok(SeriesStat {
+            count: v.get("count").as_i64().context("count")? as u64,
+            sum: v.get("sum").as_f64().context("sum")?,
+            min: v.get("min").as_f64().context("min")?,
+            max: v.get("max").as_f64().context("max")?,
+            p50: v.get("p50").as_f64().context("p50")?,
+            p95: v.get("p95").as_f64().context("p95")?,
+        })
+    }
+}
+
+/// Point-in-time view of a [`Registry`] — diffable, JSON-round-trip —
+/// the payload behind the store's `Stats` wire op.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub series: BTreeMap<String, SeriesStat>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Counters become deltas against `older`; gauges and series keep
+    /// their current values (levels and distributions, not rates).
+    pub fn diff(&self, older: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), v.saturating_sub(older.counter(k))))
+            .collect();
+        Snapshot { counters, gauges: self.gauges.clone(), series: self.series.clone() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::object();
+        for (k, v) in &self.counters {
+            counters.set(k, *v);
+        }
+        let mut gauges = Json::object();
+        for (k, v) in &self.gauges {
+            gauges.set(k, *v);
+        }
+        let mut series = Json::object();
+        for (k, v) in &self.series {
+            series.set(k, v.to_json());
+        }
+        let mut o = Json::object();
+        o.set("counters", counters).set("gauges", gauges).set("series", series);
+        o
+    }
+
+    /// Parse a snapshot from wire bytes (the `Stats` response value).
+    pub fn parse(bytes: &[u8]) -> Result<Snapshot> {
+        let text = std::str::from_utf8(bytes).context("snapshot utf8")?;
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut snap = Snapshot::default();
+        if let Some(o) = v.get("counters").as_object() {
+            for (k, n) in o {
+                snap.counters.insert(k.clone(), n.as_i64().context("counter")? as u64);
+            }
+        }
+        if let Some(o) = v.get("gauges").as_object() {
+            for (k, n) in o {
+                snap.gauges.insert(k.clone(), n.as_i64().context("gauge")?);
+            }
+        }
+        if let Some(o) = v.get("series").as_object() {
+            for (k, s) in o {
+                snap.series.insert(k.clone(), SeriesStat::from_json(s)?);
+            }
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_across_clones() {
+        let r = Registry::new();
+        let a = r.counter("frames");
+        let b = r.counter("frames");
+        a.add(2);
+        b.inc();
+        assert_eq!(r.counter("frames").get(), 3);
+
+        let g = r.gauge("live");
+        g.set(5);
+        g.sub(2);
+        assert_eq!(r.gauge("live").get(), 3);
+
+        let s = r.series("lat");
+        s.record(1.0);
+        r.observe("lat", 3.0);
+        assert_eq!(s.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_diff_subtracts_counters_only() {
+        let r = Registry::new();
+        r.add("ops", 10);
+        r.gauge("depth").set(4);
+        let before = r.snapshot();
+        r.add("ops", 7);
+        r.gauge("depth").set(9);
+        r.observe("wall", 0.25);
+        let after = r.snapshot();
+        let d = after.diff(&before);
+        assert_eq!(d.counter("ops"), 7);
+        assert_eq!(d.gauge("depth"), 9, "gauges stay levels");
+        assert_eq!(d.series["wall"].count, 1);
+        // missing-in-older counters diff from zero
+        r.inc("new");
+        assert_eq!(r.snapshot().diff(&before).counter("new"), 1);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let r = Registry::new();
+        r.add("frames", 42);
+        r.gauge("workers").set(-3);
+        for v in [0.5, 1.5, 2.5, 9.5] {
+            r.observe("lat_us", v);
+        }
+        let snap = r.snapshot();
+        let back = Snapshot::parse(snap.to_json().render().as_bytes()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.counter("frames"), 42);
+        assert_eq!(back.gauge("workers"), -3);
+        assert_eq!(back.series["lat_us"].count, 4);
+        assert!((back.series["lat_us"].max - 9.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_series_serialises_finite() {
+        // min/max of an empty histogram are +/-inf — the snapshot must
+        // stay valid JSON
+        let r = Registry::new();
+        let _ = r.series("untouched");
+        let snap = r.snapshot();
+        let text = snap.to_json().render();
+        assert!(!text.contains("inf"), "{text}");
+        assert_eq!(Snapshot::parse(text.as_bytes()).unwrap(), snap);
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        global().add("telemetry_test_global", 2);
+        assert!(global().snapshot().counter("telemetry_test_global") >= 2);
+    }
+}

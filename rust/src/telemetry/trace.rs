@@ -1,0 +1,642 @@
+//! Flight-recorder tracer: structured spans and point events with
+//! monotonic timestamps, parent/child nesting, and an episode-scoped
+//! `trace_id` that crosses the wire as an optional trailing
+//! [`TraceCtx`] on store frames (DESIGN.md §12). Hand-rolled like
+//! `util/rng` — no external crates, safe to leave compiled into the
+//! offline build.
+//!
+//! The recorder is a process-global, lock-striped store of *finished*
+//! records: a [`Span`] carries its own identity while open and pushes
+//! one [`SpanRecord`] when it ends (or drops), so the hot path takes a
+//! stripe lock exactly once per span. While recording is off (the
+//! default) spans are inert — zero ids, nothing stored, no clock read.
+//!
+//! Export: Chrome trace-event JSON ([`chrome_trace`], loadable in
+//! Perfetto / `chrome://tracing`) and a compact JSONL journal
+//! ([`journal`]).
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Wire size of an encoded trace context (two u64-le).
+pub const CTX_WIRE_LEN: usize = 16;
+
+/// Trace identity propagated across the wire: the episode's `trace_id`
+/// plus the sender's current `span_id` (the remote parent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// Append the 16-byte wire form: `trace_id` u64-le, `span_id`
+    /// u64-le.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.trace_id.to_le_bytes());
+        out.extend_from_slice(&self.span_id.to_le_bytes());
+    }
+
+    /// Decode from exactly [`CTX_WIRE_LEN`] bytes. `None` on length
+    /// mismatch or a zero `trace_id` (the unrecorded sentinel).
+    pub fn decode(bytes: &[u8]) -> Option<TraceCtx> {
+        if bytes.len() != CTX_WIRE_LEN {
+            return None;
+        }
+        let trace_id = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        let span_id = u64::from_le_bytes(bytes[8..].try_into().unwrap());
+        if trace_id == 0 {
+            return None;
+        }
+        Some(TraceCtx { trace_id, span_id })
+    }
+}
+
+/// A finished span: one contiguous `[start_us, end_us]` interval on a
+/// named track, nested under `parent` (0 = trace root).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    pub name: String,
+    pub track: String,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub detail: String,
+}
+
+impl SpanRecord {
+    pub fn duration_s(&self) -> f64 {
+        self.end_us.saturating_sub(self.start_us) as f64 / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("t", "span")
+            .set("trace", hex_id(self.trace_id))
+            .set("span", hex_id(self.span_id))
+            .set("parent", hex_id(self.parent))
+            .set("name", self.name.as_str())
+            .set("track", self.track.as_str())
+            .set("start_us", self.start_us)
+            .set("end_us", self.end_us);
+        if !self.detail.is_empty() {
+            o.set("detail", self.detail.as_str());
+        }
+        o
+    }
+}
+
+/// A point event, attached to a span (possibly a remote one).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub name: String,
+    pub track: String,
+    pub at_us: u64,
+    pub detail: String,
+}
+
+impl EventRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("t", "event")
+            .set("trace", hex_id(self.trace_id))
+            .set("span", hex_id(self.span_id))
+            .set("name", self.name.as_str())
+            .set("track", self.track.as_str())
+            .set("at_us", self.at_us);
+        if !self.detail.is_empty() {
+            o.set("detail", self.detail.as_str());
+        }
+        o
+    }
+}
+
+const STRIPES: usize = 8;
+
+struct Recorder {
+    spans: Vec<Mutex<Vec<SpanRecord>>>,
+    events: Vec<Mutex<Vec<EventRecord>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        spans: (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
+        events: (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
+    })
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process's (monotonic) trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Turn the flight recorder on or off. Spans created while off are
+/// inert; previously stored records are kept until [`clear`].
+pub fn set_recording(on: bool) {
+    epoch(); // pin the time origin no later than the first span
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+pub fn recording() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+fn stripe(id: u64) -> usize {
+    (id as usize) % STRIPES
+}
+
+fn push_span(rec: SpanRecord) {
+    if recording() {
+        lock(&recorder().spans[stripe(rec.span_id)]).push(rec);
+    }
+}
+
+fn push_event(rec: EventRecord) {
+    if recording() {
+        lock(&recorder().events[stripe(rec.span_id)]).push(rec);
+    }
+}
+
+/// A live span. Ends (and records itself) on [`Span::end`] or drop.
+/// Inert — `trace_id == 0`, no storage, no clock reads — when the
+/// recorder was off at creation.
+#[derive(Debug)]
+pub struct Span {
+    trace_id: u64,
+    span_id: u64,
+    parent: u64,
+    name: String,
+    track: String,
+    start_us: u64,
+    detail: String,
+}
+
+impl Span {
+    fn open(trace_id: u64, parent: u64, name: &str, track: &str) -> Span {
+        if trace_id == 0 || !recording() {
+            return Span {
+                trace_id: 0,
+                span_id: 0,
+                parent: 0,
+                name: String::new(),
+                track: String::new(),
+                start_us: 0,
+                detail: String::new(),
+            };
+        }
+        Span {
+            trace_id,
+            span_id: next_id(),
+            parent,
+            name: name.to_string(),
+            track: track.to_string(),
+            start_us: now_us(),
+            detail: String::new(),
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.trace_id != 0
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    pub fn span_id(&self) -> u64 {
+        self.span_id
+    }
+
+    /// This span's wire context; `None` while the recorder is inert.
+    pub fn ctx(&self) -> Option<TraceCtx> {
+        self.active().then_some(TraceCtx { trace_id: self.trace_id, span_id: self.span_id })
+    }
+
+    /// Open a child span nested under this one.
+    pub fn child(&self, name: &str, track: &str) -> Span {
+        Span::open(self.trace_id, self.span_id, name, track)
+    }
+
+    /// Attach a free-form annotation carried into the export.
+    pub fn set_detail(&mut self, detail: impl Into<String>) {
+        if self.active() {
+            self.detail = detail.into();
+        }
+    }
+
+    /// Record a point event on this span.
+    pub fn event(&self, name: &str) {
+        if self.active() {
+            push_event(EventRecord {
+                trace_id: self.trace_id,
+                span_id: self.span_id,
+                name: name.to_string(),
+                track: self.track.clone(),
+                at_us: now_us(),
+                detail: String::new(),
+            });
+        }
+    }
+
+    /// Close the span now (dropping it does the same).
+    pub fn end(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.trace_id == 0 {
+            return;
+        }
+        let rec = SpanRecord {
+            trace_id: self.trace_id,
+            span_id: self.span_id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            track: std::mem::take(&mut self.track),
+            start_us: self.start_us,
+            end_us: now_us(),
+            detail: std::mem::take(&mut self.detail),
+        };
+        self.trace_id = 0;
+        push_span(rec);
+    }
+}
+
+/// Start a new trace: a root span under a fresh `trace_id`.
+pub fn root(name: &str, track: &str) -> Span {
+    if !recording() {
+        return Span::open(0, 0, name, track);
+    }
+    Span::open(next_id(), 0, name, track)
+}
+
+/// Continue a trace received over the wire: a span nested under the
+/// remote sender's span.
+pub fn from_ctx(ctx: TraceCtx, name: &str, track: &str) -> Span {
+    Span::open(ctx.trace_id, ctx.span_id, name, track)
+}
+
+/// [`from_ctx`] for an optional context: `None` yields an inert span,
+/// so call sites carrying `Option<TraceCtx>` need no branching.
+pub fn from_opt_ctx(ctx: Option<TraceCtx>, name: &str, track: &str) -> Span {
+    match ctx {
+        Some(ctx) => from_ctx(ctx, name, track),
+        None => Span::open(0, 0, name, track),
+    }
+}
+
+/// A point event attached to a remote context (e.g. one store frame).
+pub fn event_in(ctx: TraceCtx, name: &str, track: &str, detail: String) {
+    if recording() {
+        push_event(EventRecord {
+            trace_id: ctx.trace_id,
+            span_id: ctx.span_id,
+            name: name.to_string(),
+            track: track.to_string(),
+            at_us: now_us(),
+            detail,
+        });
+    }
+}
+
+// ------------------------------------------------------------- export
+
+fn hex_id(id: u64) -> String {
+    // u64 ids would lose precision as JSON f64 — render as hex text
+    format!("{id:016x}")
+}
+
+fn collect(trace_id: u64) -> (Vec<SpanRecord>, Vec<EventRecord>) {
+    let keep = |t: u64| trace_id == 0 || t == trace_id;
+    let mut spans = Vec::new();
+    for m in &recorder().spans {
+        spans.extend(lock(m).iter().filter(|s| keep(s.trace_id)).cloned());
+    }
+    spans.sort_by_key(|s| (s.start_us, s.span_id));
+    let mut events = Vec::new();
+    for m in &recorder().events {
+        events.extend(lock(m).iter().filter(|e| keep(e.trace_id)).cloned());
+    }
+    events.sort_by_key(|e| (e.at_us, e.span_id));
+    (spans, events)
+}
+
+/// Finished spans of one trace, sorted by start time.
+pub fn spans_for(trace_id: u64) -> Vec<SpanRecord> {
+    collect(trace_id).0
+}
+
+/// Point events of one trace, sorted by timestamp.
+pub fn events_for(trace_id: u64) -> Vec<EventRecord> {
+    collect(trace_id).1
+}
+
+/// Drop every stored record (between episodes / in tests). Does not
+/// change the recording flag.
+pub fn clear() {
+    for m in &recorder().spans {
+        lock(m).clear();
+    }
+    for m in &recorder().events {
+        lock(m).clear();
+    }
+}
+
+/// Export one trace (`trace_id == 0`: every trace) as Chrome
+/// trace-event JSON — open in Perfetto (<https://ui.perfetto.dev>) or
+/// `chrome://tracing`. Spans are `ph:"X"` complete events (`ts`/`dur`
+/// in µs), point events `ph:"i"` instants, and each track gets a
+/// `thread_name` metadata record. Non-metadata events are sorted by
+/// `ts`, so timestamps are monotonic in file order.
+pub fn chrome_trace(trace_id: u64) -> Json {
+    let (spans, events) = collect(trace_id);
+    let mut tracks: Vec<String> = spans
+        .iter()
+        .map(|s| s.track.clone())
+        .chain(events.iter().map(|e| e.track.clone()))
+        .collect();
+    tracks.sort();
+    tracks.dedup();
+    let tid_of = |track: &str| tracks.iter().position(|t| t == track).unwrap() + 1;
+
+    let mut evs: Vec<Json> = Vec::new();
+    for (i, t) in tracks.iter().enumerate() {
+        let mut m = Json::object();
+        m.set("ph", "M").set("pid", 1usize).set("tid", i + 1).set("name", "thread_name");
+        let mut args = Json::object();
+        args.set("name", t.as_str());
+        m.set("args", args);
+        evs.push(m);
+    }
+
+    // merge spans and instants into one ts-ordered stream
+    let mut timed: Vec<(u64, u64, Json)> = Vec::new();
+    for s in &spans {
+        let mut e = Json::object();
+        e.set("ph", "X")
+            .set("pid", 1usize)
+            .set("tid", tid_of(&s.track))
+            .set("name", s.name.as_str())
+            .set("cat", "span")
+            .set("ts", s.start_us)
+            .set("dur", s.end_us.saturating_sub(s.start_us));
+        let mut args = Json::object();
+        args.set("trace_id", hex_id(s.trace_id))
+            .set("span_id", hex_id(s.span_id))
+            .set("parent", hex_id(s.parent));
+        if !s.detail.is_empty() {
+            args.set("detail", s.detail.as_str());
+        }
+        e.set("args", args);
+        timed.push((s.start_us, s.span_id, e));
+    }
+    for ev in &events {
+        let mut e = Json::object();
+        e.set("ph", "i")
+            .set("pid", 1usize)
+            .set("tid", tid_of(&ev.track))
+            .set("name", ev.name.as_str())
+            .set("cat", "event")
+            .set("ts", ev.at_us)
+            .set("s", "t");
+        let mut args = Json::object();
+        args.set("trace_id", hex_id(ev.trace_id)).set("span_id", hex_id(ev.span_id));
+        if !ev.detail.is_empty() {
+            args.set("detail", ev.detail.as_str());
+        }
+        e.set("args", args);
+        timed.push((ev.at_us, ev.span_id, e));
+    }
+    timed.sort_by_key(|(ts, id, _)| (*ts, *id));
+    evs.extend(timed.into_iter().map(|(_, _, e)| e));
+
+    let mut out = Json::object();
+    out.set("displayTimeUnit", "ms").set("traceEvents", Json::Array(evs));
+    out
+}
+
+/// Compact JSONL journal of one trace (`trace_id == 0`: every trace):
+/// one record per line, time-ordered, spans and events merged.
+pub fn journal(trace_id: u64) -> String {
+    let (spans, events) = collect(trace_id);
+    let mut lines: Vec<(u64, u64, String)> = Vec::new();
+    for s in &spans {
+        lines.push((s.start_us, s.span_id, s.to_json().render()));
+    }
+    for e in &events {
+        lines.push((e.at_us, e.span_id, e.to_json().render()));
+    }
+    lines.sort_by_key(|(ts, id, _)| (*ts, *id));
+    let mut out = String::new();
+    for (_, _, l) in lines {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+/// Validate a Chrome trace-event document: object shape, per-event
+/// required fields, non-negative durations, and monotonic `ts` across
+/// non-metadata events. Returns a description of the first violation.
+pub fn validate_chrome_trace(doc: &Json) -> Result<(), String> {
+    let evs = doc
+        .get("traceEvents")
+        .as_array()
+        .ok_or_else(|| "traceEvents missing or not an array".to_string())?;
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, e) in evs.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .as_str()
+            .ok_or_else(|| format!("event {i}: ph missing"))?;
+        if e.get("name").as_str().is_none() {
+            return Err(format!("event {i}: name missing"));
+        }
+        if e.get("pid").as_f64().is_none() || e.get("tid").as_f64().is_none() {
+            return Err(format!("event {i}: pid/tid missing"));
+        }
+        if ph == "M" {
+            continue;
+        }
+        let ts = e
+            .get("ts")
+            .as_f64()
+            .ok_or_else(|| format!("event {i}: ts missing"))?;
+        if ts < last_ts {
+            return Err(format!("event {i}: ts {ts} < previous {last_ts} (not monotonic)"));
+        }
+        last_ts = ts;
+        if ph == "X" {
+            let dur = e
+                .get("dur")
+                .as_f64()
+                .ok_or_else(|| format!("event {i}: dur missing on X event"))?;
+            if dur < 0.0 {
+                return Err(format!("event {i}: negative dur {dur}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the recorder is process-global and the test binary runs in
+    // parallel, so tests only ever *enable* recording and assert on
+    // their own trace_id — never on global counts, never disabling.
+
+    #[test]
+    fn ctx_wire_roundtrip() {
+        let ctx = TraceCtx { trace_id: 0xDEAD_BEEF_0123_4567, span_id: 42 };
+        let mut buf = Vec::new();
+        ctx.encode_into(&mut buf);
+        assert_eq!(buf.len(), CTX_WIRE_LEN);
+        assert_eq!(TraceCtx::decode(&buf), Some(ctx));
+        // wrong length or zero trace_id: no context
+        assert_eq!(TraceCtx::decode(&buf[..15]), None);
+        assert_eq!(TraceCtx::decode(&[0u8; 16]), None);
+    }
+
+    #[test]
+    fn spans_nest_and_record() {
+        set_recording(true);
+        let mut root = root("episode", "controller");
+        let trace = root.trace_id();
+        assert!(trace != 0);
+        let root_id = root.span_id();
+        {
+            let child = root.child("detection", "controller");
+            assert_eq!(child.trace_id(), trace);
+            child.event("first-beat-missed");
+        }
+        root.set_detail("step=4");
+        root.end();
+
+        let spans = spans_for(trace);
+        assert_eq!(spans.len(), 2);
+        let child = spans.iter().find(|s| s.name == "detection").unwrap();
+        let rootr = spans.iter().find(|s| s.name == "episode").unwrap();
+        assert_eq!(child.parent, root_id);
+        assert_eq!(rootr.parent, 0);
+        assert_eq!(rootr.detail, "step=4");
+        assert!(child.start_us >= rootr.start_us);
+        assert!(child.end_us <= rootr.end_us);
+        let events = events_for(trace);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].span_id, child.span_id);
+    }
+
+    #[test]
+    fn remote_ctx_stitches_into_same_trace() {
+        set_recording(true);
+        let root = root("episode", "controller");
+        let ctx = root.ctx().unwrap();
+        // "other process": continue from the wire context
+        from_ctx(ctx, "serve", "store").end();
+        event_in(ctx, "frame", "store", "op=Set".to_string());
+        let trace = root.trace_id();
+        root.end();
+
+        let spans = spans_for(trace);
+        assert_eq!(spans.len(), 2);
+        let serve = spans.iter().find(|s| s.name == "serve").unwrap();
+        assert_eq!(serve.parent, ctx.span_id);
+        let events = events_for(trace);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].detail, "op=Set");
+    }
+
+    #[test]
+    fn inert_ctx_spawns_inert_spans() {
+        // zero trace_id (no recording upstream) stays inert even while
+        // the recorder is on — no phantom records
+        set_recording(true);
+        let s = from_ctx(TraceCtx { trace_id: 0, span_id: 0 }, "x", "y");
+        assert!(!s.active());
+        assert_eq!(s.ctx(), None);
+        s.end();
+    }
+
+    #[test]
+    fn chrome_export_is_schema_valid_and_monotonic() {
+        set_recording(true);
+        let mut r = root("episode", "controller");
+        r.set_detail("scenario=silent_hang");
+        {
+            let c1 = r.child("rebuild", "controller");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            c1.end();
+        }
+        {
+            let c2 = r.child("restore", "worker/1");
+            c2.event("shard-done");
+            c2.end();
+        }
+        let trace = r.trace_id();
+        r.end();
+
+        let doc = chrome_trace(trace);
+        validate_chrome_trace(&doc).unwrap();
+        // parse back from rendered text, as the CLI check does
+        let parsed = Json::parse(&doc.render()).unwrap();
+        validate_chrome_trace(&parsed).unwrap();
+        let evs = parsed.get("traceEvents").as_array().unwrap();
+        // 2 tracks -> 2 metadata + 3 spans + 1 instant
+        assert_eq!(evs.len(), 6);
+        let names: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").as_str()).collect();
+        for required in ["episode", "rebuild", "restore", "shard-done"] {
+            assert!(names.contains(&required), "{required} missing from {names:?}");
+        }
+        // journal holds the same records, one JSON object per line
+        let j = journal(trace);
+        assert_eq!(j.lines().count(), 4);
+        for line in j.lines() {
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        let no_events = Json::parse(r#"{"foo": 1}"#).unwrap();
+        assert!(validate_chrome_trace(&no_events).is_err());
+        let bad_ts = Json::parse(
+            r#"{"traceEvents":[
+                {"ph":"X","pid":1,"tid":1,"name":"a","ts":10,"dur":1},
+                {"ph":"X","pid":1,"tid":1,"name":"b","ts":5,"dur":1}]}"#,
+        )
+        .unwrap();
+        let err = validate_chrome_trace(&bad_ts).unwrap_err();
+        assert!(err.contains("monotonic"), "{err}");
+        let no_dur = Json::parse(
+            r#"{"traceEvents":[{"ph":"X","pid":1,"tid":1,"name":"a","ts":1}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&no_dur).is_err());
+    }
+}

@@ -29,6 +29,7 @@ use crate::comms::tcp_store::TcpStoreClient;
 use crate::comms::{Collective, CollectiveError};
 use crate::config::ShardId;
 use crate::runtime::{literal_tokens, ModelBundle};
+use crate::telemetry::{log, TraceCtx};
 use anyhow::Result;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
@@ -71,6 +72,10 @@ pub enum WorkerCommand {
         epoch: u64,
         receivers: usize,
         fence: EpochFence,
+        /// Flight-recorder context of the controller's restore span;
+        /// the serve spans (and the in-band stream trace frame) nest
+        /// under it. `None` when the recorder is off.
+        trace: Option<TraceCtx>,
     },
     /// Fetch this rank's state shard from the replica source at
     /// `source_addr`, verifying shard / epoch / resume step.
@@ -416,7 +421,7 @@ pub fn worker_main(mut ctx: WorkerCtx) {
                 }
             }
             StepOutcome::Fatal(e) => {
-                eprintln!("[worker {}] fatal: {e:#}", ctx.rank);
+                log::error("worker", || format!("rank {}: fatal: {e:#}", ctx.rank));
                 return;
             }
         }
@@ -564,8 +569,8 @@ fn park(ctx: &mut WorkerCtx) -> Disposition {
                 send_stopped(ctx);
                 return Disposition::Exit;
             }
-            WorkerCommand::ServeState { listener, shard, epoch, receivers, fence } => {
-                match serve_shard(ctx, &listener, shard, epoch, receivers, &fence) {
+            WorkerCommand::ServeState { listener, shard, epoch, receivers, fence, trace } => {
+                match serve_shard(ctx, &listener, shard, epoch, receivers, &fence, trace) {
                     Ok((bytes, wall_s)) => {
                         let _ = ctx.event_tx.send(WorkerEvent::StateServed {
                             rank: ctx.rank,
@@ -575,7 +580,9 @@ fn park(ctx: &mut WorkerCtx) -> Disposition {
                         });
                     }
                     Err(e) => {
-                        eprintln!("[worker {}] serve failed: {e}", ctx.rank);
+                        log::warn("worker", || {
+                            format!("rank {}: serve failed: {e}", ctx.rank)
+                        });
                         let _ = ctx.event_tx.send(WorkerEvent::RestoreFailed {
                             rank: ctx.rank,
                             retryable: e.retryable(),
@@ -602,7 +609,9 @@ fn park(ctx: &mut WorkerCtx) -> Disposition {
                     });
                 }
                 Err(e) => {
-                    eprintln!("[worker {}] restore failed: {e}", ctx.rank);
+                    log::warn("worker", || {
+                        format!("rank {}: restore failed: {e}", ctx.rank)
+                    });
                     let _ = ctx.event_tx.send(WorkerEvent::RestoreFailed {
                         rank: ctx.rank,
                         retryable: e.retryable(),
@@ -635,6 +644,7 @@ fn serve_shard(
     epoch: u64,
     receivers: usize,
     fence: &EpochFence,
+    trace: Option<TraceCtx>,
 ) -> Result<(u64, f64), RestoreError> {
     let snap = ctx
         .state
@@ -647,7 +657,7 @@ fn serve_shard(
         epoch,
         receivers,
         fence,
-        &StreamConfig::default(),
+        &StreamConfig { trace, ..Default::default() },
     )?;
     Ok((stats.bytes, stats.wall_s))
 }

@@ -1,0 +1,92 @@
+//! Flight-recorder end-to-end test (DESIGN.md §12): the live
+//! detection → rendezvous → restore chain over real sockets must
+//! stitch into ONE trace — three phase spans sharing the episode's
+//! trace_id, nested under its root span, with non-overlapping wall
+//! intervals that reconcile against the outcome's measured phase
+//! durations — and the Chrome export of that trace must be
+//! schema-valid.
+//!
+//! The recorder and registry are process-global and tests run in
+//! parallel, so this test only ever *enables* recording and filters
+//! every assertion by its own episode's trace_id.
+
+use flashrecovery::chaos::{drive_live_detection, library};
+use flashrecovery::telemetry::trace;
+
+#[test]
+fn silent_hang_episode_stitches_into_one_trace() {
+    trace::set_recording(true);
+    let spec = library::by_name("silent_hang", 256).unwrap();
+    let episodes = drive_live_detection(&spec).unwrap();
+    assert_eq!(episodes.len(), 1);
+    let ep = &episodes[0];
+    assert_ne!(ep.trace_id, 0, "recorder on => the episode must carry a trace id");
+
+    let spans = trace::spans_for(ep.trace_id);
+    let root = spans
+        .iter()
+        .find(|s| s.name == "episode" && s.parent == 0)
+        .expect("episode root span");
+    let phase = |name: &str| {
+        spans
+            .iter()
+            .find(|s| s.name == name && s.parent == root.span_id)
+            .unwrap_or_else(|| panic!("no {name} span under the episode root"))
+    };
+    let detect = phase("detection");
+    let rebuild = phase("rebuild");
+    let restore = phase("restore");
+
+    // phases run sequentially: strictly ordered, non-overlapping wall
+    // intervals, all inside the root's interval
+    assert!(detect.end_us <= rebuild.start_us, "detection overlaps rebuild");
+    assert!(rebuild.end_us <= restore.start_us, "rebuild overlaps restore");
+    assert!(root.start_us <= detect.start_us && restore.end_us <= root.end_us);
+
+    // span durations reconcile with the outcome's measured phase
+    // fields (±1ms): the spans open/close adjacent to the same Instant
+    // reads the outcome reports. detection_s is a measured
+    // heartbeat→detection latency, not a wall interval, so only
+    // rebuild/restore reconcile.
+    for (span, wall, name) in
+        [(rebuild, ep.rebuild_s, "rebuild"), (restore, ep.restore_s, "restore")]
+    {
+        let dur = span.duration_s();
+        assert!(
+            (dur - wall).abs() <= 1e-3,
+            "{name}: span {dur:.4}s vs outcome {wall:.4}s"
+        );
+    }
+    assert!(
+        root.duration_s() >= ep.rebuild_s + ep.restore_s,
+        "episode root must cover its phases"
+    );
+
+    // the state transfer stitched in over the wire: the source's serve
+    // span nests under the restore span (via StreamConfig::trace), the
+    // target's fetch span under the serve span (via the in-band
+    // FRAME_TRACE frame) — all on the same trace
+    let serve = spans
+        .iter()
+        .find(|s| s.name == "serve_state")
+        .expect("serve_state span on the episode trace");
+    assert_eq!(serve.parent, restore.span_id, "serve must nest under restore");
+    let fetch = spans
+        .iter()
+        .find(|s| s.name == "fetch_state")
+        .expect("fetch_state span on the episode trace");
+    assert_eq!(fetch.parent, serve.span_id, "fetch must stitch under serve");
+
+    // mid-episode introspection: the Stats wire op's snapshot landed
+    // on the trace as a store-stats event
+    let events = trace::events_for(ep.trace_id);
+    let stats = events
+        .iter()
+        .find(|e| e.name == "store-stats")
+        .expect("store-stats event on the episode trace");
+    assert!(stats.detail.contains("requests="), "detail: {:?}", stats.detail);
+
+    // and the Chrome export of exactly this trace is schema-valid
+    let doc = trace::chrome_trace(ep.trace_id);
+    trace::validate_chrome_trace(&doc).unwrap();
+}
