@@ -28,7 +28,7 @@ fn main() {
         drop(c1);
         let (t_par, c2) = establish(server.addr(), n, 8).expect("parallel");
         drop(c2);
-        assert_eq!(server.hello_count(), 2 * n as u64);
+        assert_eq!(server.metrics_snapshot().counter("store.hellos"), 2 * n as u64);
         real.row(
             format!("n={n}"),
             vec![t_serial.as_secs_f64() * 1e3, t_par.as_secs_f64() * 1e3],

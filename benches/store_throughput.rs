@@ -2,7 +2,7 @@
 //! batched store (DESIGN.md §11) under a mixed-opcode workload at
 //! 64 -> 8192 simulated clients multiplexed over a bounded socket set.
 //!
-//! Two asserted properties:
+//! Asserted properties:
 //!
 //! * **batched beats serial**: pipelined `Batch` clients deliver at
 //!   least 2x the ops/s of one-op-per-round-trip clients at 4096
@@ -11,6 +11,11 @@
 //!   count stays within 2x of the smallest (plus a small noise
 //!   floor) — striped locks and per-key parking keep the plane free
 //!   of global serialization points;
+//! * **replication is cheap**: the `repl p50 us/op` column re-runs
+//!   the batched cell against a quorum-replicated store (primary +
+//!   1 log-shipping replica, DESIGN.md §13) and must stay within
+//!   1.5x of the un-replicated batched p50 — group-commit quorum
+//!   acks off the hot path;
 //! * **telemetry is cheap**: with the flight recorder on and every
 //!   frame carrying a trace context (DESIGN.md §12), batched per-op
 //!   p50 stays within 5% of the recorder-off run (plus a small noise
@@ -35,20 +40,24 @@ fn main() {
         .expect("write BENCH_store_throughput.json");
     println!("wrote BENCH_store_throughput.json");
 
-    // ---- asserted properties (ISSUE 5 acceptance) ---------------------
-    // the same checks `store-bench --assert` runs in bench-gate:
-    // batched >= 2x serial ops/s at 4096 clients, per-op p50 flat
+    // ---- asserted properties (ISSUE 5 + ISSUE 7 acceptance) -----------
+    // the same checks `bench store --assert` runs in bench-gate:
+    // batched >= 2x serial ops/s at 4096 clients, per-op p50 flat,
+    // quorum-replicated p50 <= 1.5x un-replicated batched p50
     check_report(&cfg, &report).expect("acceptance properties");
     let row = |n: usize| report.row_values(&format!("n={n}")).expect("row")[0];
+    let repl = |n: usize| report.row_values(&format!("n={n}")).expect("row")[6];
     let (min_scale, max_scale) = (
         *cfg.clients.iter().min().unwrap(),
         *cfg.clients.iter().max().unwrap(),
     );
     println!(
         "store_throughput OK: p50 {:.2}us/op @ {min_scale} -> {:.2}us/op @ \
-         {max_scale} (<= 2x), batched >= 2x serial",
+         {max_scale} (<= 2x), batched >= 2x serial, replicated p50 \
+         {:.2}us/op @ {max_scale} (<= 1.5x un-replicated)",
         row(min_scale),
-        row(max_scale)
+        row(max_scale),
+        repl(max_scale)
     );
 
     // ---- telemetry overhead guard (flight recorder, DESIGN.md §12) ----

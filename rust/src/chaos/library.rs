@@ -1,12 +1,14 @@
 //! Built-in chaos scenario library.
 //!
-//! Nine parameterized campaigns, from the paper's single-failure
+//! Eleven parameterized campaigns, from the paper's single-failure
 //! baseline to compound patterns production fleets actually see
 //! (ByteDance's robust-training report, Unicron): concurrent faults,
 //! rolling cascades, flapping hosts, failures striking mid-recovery,
 //! spare-pool exhaustion, straggler degradation, failures landing
-//! mid-*restore* (state streams aborted and replanned), and silent
-//! hangs (alive worker, frozen step tag). Each spec carries
+//! mid-*restore* (state streams aborted and replanned), silent
+//! hangs (alive worker, frozen step tag), and coordination-plane
+//! failover — the store primary dying mid-rendezvous and the
+//! controller dying mid-restore (DESIGN.md §13). Each spec carries
 //! assertions calibrated to the paper-fit latency model — recovery-time
 //! bounds are intentionally scale-independent (the paper's headline
 //! claim), so the same spec passes from 64 to 18k devices.
@@ -19,7 +21,7 @@ use crate::cluster::failure::FailureKind;
 use crate::config::RecoveryMode;
 
 /// Names of all built-in scenarios, in presentation order.
-pub const NAMES: [&str; 9] = [
+pub const NAMES: [&str; 11] = [
     "single_fault",
     "double_fault",
     "rolling_cascade",
@@ -29,6 +31,8 @@ pub const NAMES: [&str; 9] = [
     "straggler_degrade",
     "restore_under_churn",
     "silent_hang",
+    "store_crash_mid_rendezvous",
+    "controller_crash_mid_restore",
 ];
 
 fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
@@ -312,6 +316,64 @@ pub fn straggler_degrade(devices: usize) -> ScenarioSpec {
     s
 }
 
+/// The coordination plane's own primary dies mid-rendezvous: the
+/// store crash lands while rendezvous waits are parked on it. On the
+/// simulator path this behaves like `single_fault` (the latency model
+/// folds coordination-plane failover into the restart stage); the
+/// live hints drive `chaos::live::drive_store_crash_mid_rendezvous`,
+/// where the parked wait must fail over to the promoted replica and
+/// wake exactly once, with the survivor re-key budget intact
+/// (DESIGN.md §13).
+pub fn store_crash_mid_rendezvous(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "store_crash_mid_rendezvous",
+        "Store primary killed while rendezvous waits are parked; promoted replica finishes the episode",
+        devices,
+    );
+    s.faults.push(FaultSpec { at_s: 120.0, ..Default::default() });
+    s.faults[0].rank = Some(1);
+    s.faults[0].at_step = Some(4);
+    s.live.dp = 4;
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(250.0),
+        max_total_downtime_s: Some(300.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_steps_completed: Some(60),
+        ..Default::default()
+    };
+    s
+}
+
+/// The controller crashes between group rebuild and state restore —
+/// together with its co-located store primary. On the simulator path
+/// this behaves like `single_fault` with a slightly later strike; the
+/// live hints drive `chaos::live::drive_controller_crash_mid_restore`,
+/// where a standby controller must adopt the lease table and the
+/// in-flight episode checkpoint from the promoted replica and finish
+/// the restore bit-exactly (DESIGN.md §13).
+pub fn controller_crash_mid_restore(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "controller_crash_mid_restore",
+        "Controller and store primary crash after rebuild; standby adopts the episode checkpoint and finishes the restore",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    s.faults.push(FaultSpec { at_s: 130.0, ..Default::default() });
+    s.faults[0].rank = Some(1);
+    s.faults[0].at_step = Some(4);
+    s.live.dp = 4;
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(250.0),
+        max_total_downtime_s: Some(300.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_steps_completed: Some(60),
+        ..Default::default()
+    };
+    s
+}
+
 /// All built-in scenarios at the given device count.
 pub fn all(devices: usize) -> Vec<ScenarioSpec> {
     NAMES
@@ -332,6 +394,8 @@ pub fn by_name(name: &str, devices: usize) -> Option<ScenarioSpec> {
         "straggler_degrade" => straggler_degrade(devices),
         "restore_under_churn" => restore_under_churn(devices),
         "silent_hang" => silent_hang(devices),
+        "store_crash_mid_rendezvous" => store_crash_mid_rendezvous(devices),
+        "controller_crash_mid_restore" => controller_crash_mid_restore(devices),
         _ => return None,
     })
 }

@@ -18,15 +18,19 @@ use super::engine::AssertionOutcome;
 use super::spec::{FaultFamily, ScenarioSpec};
 use crate::checkpoint::Snapshot;
 use crate::cluster::failure::{FailureCategory, FailureKind};
+use crate::comms::replication::{ReplicaSet, StoreSession};
 use crate::comms::state_stream::{EpochFence, RestoreError, StreamConfig};
-use crate::comms::tcp_store::{TcpStoreClient, TcpStoreServer};
+use crate::comms::tcp_store::TcpStoreServer;
 use crate::config::ParallelismConfig;
 use crate::coordinator::detection::{Detection, LeaseConfig, LeaseMonitor};
 use crate::coordinator::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
 use crate::coordinator::restore::{
     bump_epoch, plan_shard_restore, restore_episode, synthetic_snapshot,
 };
-use crate::coordinator::{ControllerConfig, RankEntry, Ranktable, RunReport};
+use crate::coordinator::{
+    encode_leases, ControllerConfig, EpisodeCheckpoint, EpisodePhase, RankEntry,
+    Ranktable, RunReport, StandbyController, K_EPISODE, K_LEASES,
+};
 use crate::telemetry::{global, trace};
 use crate::training::worker::{
     kind_code, spawn_heartbeat, spawn_node_heartbeat, FailurePlan, HeartbeatCfg,
@@ -167,13 +171,7 @@ pub fn drive_group_rebuilds(spec: &ScenarioSpec) -> Result<Vec<RebuildOutcome>> 
     );
     let server = TcpStoreServer::start()?;
     // one rebuild episode per distinct failure step
-    let mut by_step: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
-    for p in &plans {
-        let ranks = by_step.entry(p.step).or_default();
-        if !ranks.contains(&p.rank) {
-            ranks.push(p.rank);
-        }
-    }
+    let by_step = rebuild_timeline(&plans);
     let mut epoch = 0u64;
     let mut episodes = Vec::with_capacity(by_step.len());
     for (step, mut failed) in by_step {
@@ -188,7 +186,7 @@ pub fn drive_group_rebuilds(spec: &ScenarioSpec) -> Result<Vec<RebuildOutcome>> 
             })
             .collect();
         let out = rebuild_episode(
-            &server,
+            &server.endpoints(),
             &table,
             &par,
             &failed,
@@ -201,6 +199,20 @@ pub fn drive_group_rebuilds(spec: &ScenarioSpec) -> Result<Vec<RebuildOutcome>> 
         episodes.push(out);
     }
     Ok(episodes)
+}
+
+/// Collapse scripted failure plans into one rendezvous/restore episode
+/// per distinct failure step (victims deduplicated, in rank order of
+/// first appearance).
+fn rebuild_timeline(plans: &[FailurePlan]) -> BTreeMap<u64, Vec<usize>> {
+    let mut by_step: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for p in plans {
+        let ranks = by_step.entry(p.step).or_default();
+        if !ranks.contains(&p.rank) {
+            ranks.push(p.rank);
+        }
+    }
+    by_step
 }
 
 /// Outcome of one live restore episode driven from a chaos spec.
@@ -260,17 +272,11 @@ fn drive_restore_episodes(
     let dp = spec.live.dp.max(2);
     let par = ParallelismConfig::dp(dp);
     let server = TcpStoreServer::start()?;
-    let addr = server.addr();
+    let eps = server.endpoints();
 
     // failure step -> distinct victim ranks (like drive_group_rebuilds)
-    let mut by_step: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
-    for p in &plans {
-        let ranks = by_step.entry(p.step).or_default();
-        if !ranks.contains(&p.rank) {
-            ranks.push(p.rank);
-        }
-    }
-    let timeline: Vec<(u64, Vec<usize>)> = by_step.into_iter().collect();
+    let timeline: Vec<(u64, Vec<usize>)> =
+        rebuild_timeline(&plans).into_iter().collect();
 
     let mut epoch = 0u64;
     let mut episodes = Vec::with_capacity(timeline.len());
@@ -305,12 +311,13 @@ fn drive_restore_episodes(
             };
             let watcher_fence = fence.clone();
             let bump_to = epoch + 1;
+            let watcher_eps = eps.clone();
             let watcher = std::thread::spawn(move || {
                 std::thread::sleep(Duration::from_millis(20));
-                bump_epoch(addr, &watcher_fence, bump_to)
+                bump_epoch(&watcher_eps, &watcher_fence, bump_to)
             });
             let attempt =
-                restore_episode(addr, &plan, &states, epoch, &fence, &throttled);
+                restore_episode(&eps, &plan, &states, epoch, &fence, &throttled);
             watcher
                 .join()
                 .map_err(|_| anyhow::anyhow!("epoch watcher panicked"))??;
@@ -349,7 +356,7 @@ fn drive_restore_episodes(
             bail!("chaos restore episode at step {step} has unsourced shards");
         }
         let out = restore_episode(
-            addr,
+            &eps,
             &plan,
             &states,
             epoch,
@@ -495,7 +502,7 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
     let dp = spec.live.dp.max(2);
     let par = ParallelismConfig::dp(dp);
     let server = TcpStoreServer::start()?;
-    let addr = server.addr();
+    let eps = server.endpoints();
     let interval = Duration::from_millis(15);
     let mut mon = LeaseMonitor::new(LeaseConfig {
         interval,
@@ -532,7 +539,10 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
         boards.insert(rank, b);
         incarnations.insert(rank, next_inc);
     }
-    emitters.push(spawn_node_heartbeat(members, NodeAgentCfg { store: addr, interval }));
+    emitters.push(spawn_node_heartbeat(
+        members,
+        NodeAgentCfg { store: eps.clone(), interval },
+    ));
 
     let mut epoch = 0u64;
     let mut sim_step = 0u64;
@@ -621,7 +631,7 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
         let mut span_rebuild = episode.child("rebuild", "controller");
         let t_rebuild = Instant::now();
         let out = rebuild_episode(
-            &server,
+            &server.endpoints(),
             &table,
             &par,
             &failed,
@@ -638,7 +648,9 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
         // mid-episode introspection: pull the store's live metrics
         // snapshot over the Stats wire op and pin it to the trace
         if let Some(ctx) = episode.ctx() {
-            if let Ok(snap) = TcpStoreClient::connect(addr).and_then(|mut c| c.stats()) {
+            if let Ok(snap) =
+                StoreSession::try_connect(&eps).and_then(|mut c| c.stats())
+            {
                 trace::event_in(
                     ctx,
                     "store-stats",
@@ -675,7 +687,7 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
         let stream_cfg = StreamConfig { trace: span_restore.ctx(), ..Default::default() };
         let t_restore = Instant::now();
         let fence = EpochFence::new(epoch);
-        let rout = restore_episode(addr, &plan, &states, epoch, &fence, &stream_cfg)
+        let rout = restore_episode(&eps, &plan, &states, epoch, &fence, &stream_cfg)
             .map_err(|e| anyhow!("{e}"))?;
         let restore_s = t_restore.elapsed().as_secs_f64();
         span_restore.set_detail(format!(
@@ -710,7 +722,7 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
             emitters.push(spawn_heartbeat(
                 rank,
                 b.clone(),
-                HeartbeatCfg { store: addr, interval, incarnation: next_inc },
+                HeartbeatCfg { store: eps.clone(), interval, incarnation: next_inc },
             ));
             boards.insert(rank, b);
             incarnations.insert(rank, next_inc);
@@ -736,6 +748,258 @@ pub fn drive_live_detection(spec: &ScenarioSpec) -> Result<Vec<LiveDetectionOutc
     drop(server);
     for e in emitters {
         let _ = e.join();
+    }
+    Ok(outcomes)
+}
+
+// ------------------------------------------------------------------
+// Coordination-plane failover: store/controller crashes mid-recovery
+// ------------------------------------------------------------------
+
+/// Outcome of a store-primary crash injected into a live rendezvous.
+#[derive(Debug, Clone)]
+pub struct StoreFailoverOutcome {
+    /// Address of the primary killed while waits were parked on it.
+    pub killed: std::net::SocketAddr,
+    /// Value the parked rendezvous wait woke with after failing over
+    /// to the promoted replica (exactly one wake).
+    pub sentinel: Vec<u8>,
+    /// Rebuild episodes completed on the failed-over plane.
+    pub episodes: Vec<RebuildOutcome>,
+}
+
+/// Drive the spec's failure timeline as group rebuilds over a
+/// *replicated* coordination plane (primary + one quorum replica),
+/// with the primary killed while a rendezvous-plane wait is parked on
+/// it: the parked session must fail over to the promoted replica and
+/// wake exactly once, and every subsequent epoch-fenced rebuild
+/// episode must converge on the failed-over store with the survivor
+/// re-key budget intact (3 logical ops / 2 RTTs, DESIGN.md §13). The
+/// live teeth of the `store_crash_mid_rendezvous` scenario — and,
+/// run over the other live-capable specs, the proof that each passes
+/// with a coordinator crash injected.
+pub fn drive_store_crash_mid_rendezvous(
+    spec: &ScenarioSpec,
+) -> Result<StoreFailoverOutcome> {
+    let plans = live_failure_plans(spec)?;
+    let timeline = rebuild_timeline(&plans);
+    let dp = spec.live.dp.max(1);
+    let par = ParallelismConfig::dp(dp);
+    let mut table = Ranktable::new(
+        (0..dp)
+            .map(|rank| RankEntry {
+                rank,
+                node: rank,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 29000 + rank),
+            })
+            .collect(),
+    );
+    let mut set = ReplicaSet::start(1)?;
+    let eps = set.endpoints();
+
+    // Park a rendezvous-plane wait on the primary, exactly like a
+    // survivor blocked on a release barrier when the store dies.
+    let parked_eps = eps.clone();
+    let parked = std::thread::spawn(move || -> Result<Vec<u8>> {
+        let mut s = StoreSession::connect(parked_eps)?;
+        Ok(s.wait("rdzv/failover-sentinel")?.to_vec())
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let parked_now = set
+            .primary_server()
+            .map(|p| p.metrics_snapshot().gauge("store.parked_waiters"))
+            .unwrap_or(0);
+        if parked_now >= 1 {
+            break;
+        }
+        if Instant::now() > deadline {
+            bail!("sentinel wait never parked on the primary");
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let killed = set
+        .kill_primary()
+        .ok_or_else(|| anyhow!("replica set has no primary to kill"))?;
+
+    // The release lands on whichever node discovery promotes; the
+    // parked session replays its wait there and wakes exactly once.
+    let mut releaser = StoreSession::connect(eps.clone())?;
+    releaser.set("rdzv/failover-sentinel", b"released")?;
+    let sentinel =
+        parked.join().map_err(|_| anyhow!("parked waiter panicked"))??;
+
+    // ... then the whole failure timeline rebuilds on the failed-over
+    // plane, survivor budget intact.
+    let mut epoch = 0u64;
+    let mut episodes = Vec::with_capacity(timeline.len());
+    for (step, mut failed) in timeline {
+        failed.sort_unstable();
+        let replacements: Vec<RankEntry> = failed
+            .iter()
+            .map(|&r| RankEntry {
+                rank: r,
+                node: dp + (epoch as usize + 1) * dp + r,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
+            })
+            .collect();
+        let out = rebuild_episode(
+            &eps,
+            &table,
+            &par,
+            &failed,
+            &replacements,
+            epoch,
+            &EpisodeConfig { live_survivors: dp, ..Default::default() },
+        )?;
+        epoch = out.epoch;
+        table = out.table.clone();
+        episodes.push(out);
+    }
+    Ok(StoreFailoverOutcome { killed, sentinel, episodes })
+}
+
+/// Outcome of a controller crash injected between rebuild and restore.
+#[derive(Debug, Clone)]
+pub struct ControllerFailoverOutcome {
+    /// Failure step the adopted episode recovered (spec `at_step`).
+    pub step: u64,
+    /// Epoch the standby adopted and restored at.
+    pub epoch: u64,
+    /// Phase of the adopted checkpoint (always `Restore` here).
+    pub adopted_phase: EpisodePhase,
+    /// Leases the standby re-opened from the replicated table.
+    pub adopted_leases: usize,
+    /// Ranks restored by the standby.
+    pub restored: Vec<usize>,
+    pub bytes_moved: u64,
+    /// Every restored replica matched the survivors bit for bit.
+    pub bit_exact: bool,
+}
+
+/// Drive the spec's failures as half-finished recovery episodes a
+/// *standby controller* must adopt and finish: per failure step, the
+/// first controller completes detection and group rebuild, persists
+/// the episode checkpoint and lease table to the replicated store,
+/// and crashes together with the store primary before any shard
+/// moves. The standby adopts the coordination state from the promoted
+/// replica, resumes the restore at the adopted epoch, and the
+/// restored replicas must be bit-exact (DESIGN.md §13). The live
+/// teeth of the `controller_crash_mid_restore` scenario.
+pub fn drive_controller_crash_mid_restore(
+    spec: &ScenarioSpec,
+) -> Result<Vec<ControllerFailoverOutcome>> {
+    let plans = live_failure_plans(spec)?;
+    let timeline = rebuild_timeline(&plans);
+    let dp = spec.live.dp.max(2);
+    let par = ParallelismConfig::dp(dp);
+    let mut outcomes = Vec::with_capacity(timeline.len());
+    for (step, mut failed) in timeline {
+        failed.sort_unstable();
+        // Fresh replicated plane per episode: each crash consumes its
+        // primary (and the controller that owned it).
+        let mut set = ReplicaSet::start(1)?;
+        let eps = set.endpoints();
+        let table = Ranktable::new(
+            (0..dp)
+                .map(|rank| RankEntry {
+                    rank,
+                    node: rank,
+                    device: 0,
+                    addr: format!("127.0.0.1:{}", 29000 + rank),
+                })
+                .collect(),
+        );
+        let replacements: Vec<RankEntry> = failed
+            .iter()
+            .map(|&r| RankEntry {
+                rank: r,
+                node: 2 * dp + r,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
+            })
+            .collect();
+
+        // Phase 1 — the first controller: groups rebuilt, episode
+        // checkpoint + lease table persisted to the replicated store.
+        let out = rebuild_episode(
+            &eps,
+            &table,
+            &par,
+            &failed,
+            &replacements,
+            0,
+            &EpisodeConfig { live_survivors: dp, ..Default::default() },
+        )?;
+        let mut ctl = StoreSession::connect(eps.clone())?;
+        let leases: Vec<(usize, u64)> =
+            (0..dp).filter(|r| !failed.contains(r)).map(|r| (r, 1)).collect();
+        ctl.set(K_LEASES, &encode_leases(&leases))?;
+        let ck = EpisodeCheckpoint {
+            phase: EpisodePhase::Restore,
+            epoch: out.epoch,
+            dead: failed.clone(),
+            resume_step: step,
+            detection_s: 0.05,
+            rebuild_s: out.wall_s,
+        };
+        ctl.set(K_EPISODE, &ck.encode())?;
+        drop(ctl);
+
+        // ... and crashes together with the store primary.
+        set.kill_primary()
+            .ok_or_else(|| anyhow!("replica set has no primary to kill"))?;
+
+        // Phase 2 — the standby adopts from the promoted replica and
+        // finishes the restore at the adopted epoch.
+        let mut standby = StandbyController::adopt(&eps)?;
+        let adopted = standby
+            .adopted
+            .episode
+            .clone()
+            .ok_or_else(|| anyhow!("standby adopted no episode checkpoint"))?;
+        let survivor_steps: Vec<(usize, u64)> = (0..dp)
+            .filter(|r| !adopted.dead.contains(r))
+            .map(|r| (r, adopted.resume_step))
+            .collect();
+        if survivor_steps.is_empty() {
+            bail!("controller failover episode at step {step} left no survivors");
+        }
+        let states: BTreeMap<usize, Snapshot> = survivor_steps
+            .iter()
+            .map(|&(r, _)| {
+                (r, synthetic_snapshot(adopted.resume_step, CHAOS_STATE_ELEMS))
+            })
+            .collect();
+        let plan = plan_shard_restore(&par, &survivor_steps, &adopted.dead);
+        if !plan.replica_feasible() {
+            bail!("controller failover episode at step {step} has unsourced shards");
+        }
+        let fence = EpochFence::new(adopted.epoch);
+        let adopted_leases = standby.adopted.leases.len();
+        let rout =
+            standby.resume_restore(&plan, &states, &fence, &StreamConfig::default())?;
+        let reference = states[&plan.transfers[0].source].content_hash();
+        let bit_exact =
+            rout.restored.values().all(|s| s.content_hash() == reference);
+
+        // The finished episode's checkpoint must be gone from the
+        // failed-over plane.
+        let mut check = StoreSession::connect(eps)?;
+        if check.get(K_EPISODE)?.is_some() {
+            bail!("episode checkpoint survived the standby's completion");
+        }
+        outcomes.push(ControllerFailoverOutcome {
+            step,
+            epoch: adopted.epoch,
+            adopted_phase: adopted.phase,
+            adopted_leases,
+            restored: rout.restored.keys().copied().collect(),
+            bytes_moved: rout.bytes_moved(),
+            bit_exact,
+        });
     }
     Ok(outcomes)
 }
@@ -942,5 +1206,60 @@ mod tests {
             assert_eq!(ep.replacements, 1);
         }
         assert_eq!(episodes.last().unwrap().table.version, 4);
+    }
+
+    #[test]
+    fn store_primary_crash_mid_rendezvous_fails_over() {
+        // The headline §13 semantics: the store primary dies while a
+        // rendezvous wait is parked on it. The parked session fails
+        // over to the promoted replica, wakes exactly once, and the
+        // full rebuild runs on the failed-over plane with the
+        // survivor re-key budget intact.
+        let spec = library::by_name("store_crash_mid_rendezvous", 256).unwrap();
+        let out = drive_store_crash_mid_rendezvous(&spec).unwrap();
+        assert_eq!(out.sentinel.as_slice(), b"released");
+        assert_eq!(out.episodes.len(), 1);
+        let ep = &out.episodes[0];
+        assert_eq!(ep.epoch, 1);
+        assert_eq!(ep.replacements, 1);
+        assert_eq!(ep.survivor_ops_max, 3, "re-key budget must survive failover");
+        assert_eq!(ep.table.version, 2);
+    }
+
+    #[test]
+    fn every_live_scenario_survives_a_coordinator_crash() {
+        // Acceptance: each live-capable scenario's rebuild timeline
+        // still converges — budgets intact — with a coordinator
+        // (store-primary) crash injected mid-rendezvous.
+        for name in
+            ["single_fault", "double_fault", "flaky_node", "restore_under_churn"]
+        {
+            let spec = library::by_name(name, 256).unwrap();
+            let out = drive_store_crash_mid_rendezvous(&spec).unwrap();
+            assert_eq!(out.sentinel.as_slice(), b"released", "{name}");
+            assert!(!out.episodes.is_empty(), "{name}");
+            for ep in &out.episodes {
+                assert_eq!(ep.survivor_ops_max, 3, "{name}: survivor budget");
+                assert!(ep.groups_rebuilt + ep.groups_rekeyed > 0, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn controller_crash_mid_restore_is_adopted_and_finished() {
+        // The standby controller adopts the lease table and in-flight
+        // episode checkpoint from the promoted replica and drives the
+        // half-finished restore to a bit-exact finish.
+        let spec = library::by_name("controller_crash_mid_restore", 256).unwrap();
+        let episodes = drive_controller_crash_mid_restore(&spec).unwrap();
+        assert_eq!(episodes.len(), 1);
+        let ep = &episodes[0];
+        assert_eq!(ep.step, 4);
+        assert_eq!(ep.epoch, 1);
+        assert_eq!(ep.adopted_phase, EpisodePhase::Restore);
+        assert_eq!(ep.adopted_leases, 3, "survivor leases adopted");
+        assert_eq!(ep.restored, vec![1]);
+        assert!(ep.bit_exact, "restore must stay bit-exact across failover");
+        assert!(ep.bytes_moved > 0);
     }
 }

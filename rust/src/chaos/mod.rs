@@ -14,8 +14,9 @@
 //!   `(spec, seed)` pairs produce byte-identical journals;
 //! * [`engine`] — the campaign interpreter over the calibrated cluster
 //!   simulator (shared protocol math with `cluster::scenario`);
-//! * [`library`] — nine built-in scenarios from the paper baseline to
-//!   compound production patterns;
+//! * [`library`] — eleven built-in scenarios from the paper baseline
+//!   to compound production patterns, including coordination-plane
+//!   failover (store primary / controller crashes mid-recovery);
 //! * [`live`] — the same specs driven against the real in-process
 //!   training plane (controller + worker threads) via scripted
 //!   failure plans.
@@ -35,8 +36,10 @@ pub use engine::{
 };
 pub use journal::Journal;
 pub use live::{
-    controller_config, drive_group_rebuilds, drive_live_detection, drive_restores,
-    drive_restores_under_churn, evaluate_live, live_failure_plans, run_live,
-    LiveDetectionOutcome, LiveOutcome, LiveRestoreOutcome,
+    controller_config, drive_controller_crash_mid_restore, drive_group_rebuilds,
+    drive_live_detection, drive_restores, drive_restores_under_churn,
+    drive_store_crash_mid_rendezvous, evaluate_live, live_failure_plans, run_live,
+    ControllerFailoverOutcome, LiveDetectionOutcome, LiveOutcome, LiveRestoreOutcome,
+    StoreFailoverOutcome,
 };
 pub use spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, ScenarioSpec};

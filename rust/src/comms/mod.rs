@@ -3,10 +3,12 @@
 //! communication-group derivation, in-process synchronous collectives
 //! for the DP training engine, and the epoch-fenced state-stream
 //! protocol that ships model-state shards between replicas during
-//! checkpoint-free recovery (DESIGN.md §9).
+//! checkpoint-free recovery (DESIGN.md §9), plus the replicated
+//! coordination plane and its endpoint-set client API (DESIGN.md §13).
 
 pub mod collective;
 pub mod group;
+pub mod replication;
 pub mod state_stream;
 pub mod store_bench;
 pub mod tcp_store;
@@ -14,6 +16,10 @@ pub mod wire;
 
 pub use collective::{Collective, CollectiveError};
 pub use group::{CommGroup, GroupId, GroupKind, GroupSet, RekeyStats};
+pub use replication::{
+    repl_status, ReplStatusInfo, ReplicaSet, Replicator, StoreEndpoints,
+    StoreRole, StoreSession,
+};
 pub use state_stream::{
     fetch_snapshot, serve_snapshot, transfer_tag, EpochFence, Expect, RestoreError,
     RestoreResult, StreamConfig,

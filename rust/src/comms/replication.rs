@@ -1,0 +1,1052 @@
+//! Coordination-plane HA (DESIGN.md §13): epoch-consistent log
+//! shipping across 2–3 store nodes, and the endpoint-set client API
+//! that rides it.
+//!
+//! * [`Replicator`] — the primary's group-commit log: every committed
+//!   mutating op is assigned a monotonic log index *under the same
+//!   lock that applied it* (so local apply order and log order can
+//!   never diverge across concurrent connections), batches of entries
+//!   are shipped to replicas as one `Replicate` frame, and a client
+//!   ack is released only once a quorum of replicas appended
+//!   (`wait_committed`). With zero live replicas the plane degrades
+//!   to un-replicated operation — availability over durability.
+//! * [`StoreEndpoints`] / [`StoreSession`] — the client redesign:
+//!   instead of `TcpStoreClient::connect(addr)` hard-coding one
+//!   endpoint, a session owns the endpoint set, discovers the current
+//!   primary via `ReplStatus`, and transparently fails over on an IO
+//!   error or `NotPrimary` — including mid-`Wait`/`WaitEpoch`, where
+//!   the parked wait is replayed against the new primary. Batches
+//!   that carry non-idempotent ops (`Add`) are wrapped in a `Dedup`
+//!   envelope so a replayed frame can never double-apply.
+//! * [`ReplicaSet`] — in-process primary + N replicas, the harness
+//!   the controller's rebuild plane, the chaos drivers, and the
+//!   replicated-mode bench column all build on.
+
+use super::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
+use super::wire::{Bytes, Request, Response};
+use crate::telemetry::{trace::TraceCtx, Snapshot};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Wire byte for the primary role in `ReplStatus` payloads.
+pub const ROLE_PRIMARY: u8 = 0;
+/// Wire byte for the replica role in `ReplStatus` payloads.
+pub const ROLE_REPLICA: u8 = 1;
+
+/// Connect timeout for discovery probes and replica log connections —
+/// short, so a dead endpoint costs milliseconds, not the client
+/// connect default.
+const PROBE_CONNECT: Duration = Duration::from_millis(250);
+
+/// How long a session keeps rediscovering before giving up on a
+/// failover (covers the promote + replicator-spawn window).
+const FAILOVER_PATIENCE: Duration = Duration::from_secs(10);
+
+/// Failover retries per logical op before surfacing the error.
+const SESSION_RETRIES: usize = 6;
+
+/// Entries the dedup cache retains (FIFO) — bounds replicated memory
+/// while comfortably covering every in-flight replayable op.
+const DEDUP_CAP: usize = 4096;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Dedup cache
+// ---------------------------------------------------------------------------
+
+/// Exactly-once cache: encoded responses keyed by client-chosen dedup
+/// id, FIFO-bounded. Replicated via `DedupDone` log entries so a
+/// failed-over primary still refuses to re-execute a replayed op.
+pub(crate) struct DedupMap {
+    map: HashMap<u64, Vec<u8>>,
+    order: VecDeque<u64>,
+}
+
+impl DedupMap {
+    pub(crate) fn new() -> Self {
+        DedupMap { map: HashMap::new(), order: VecDeque::new() }
+    }
+
+    pub(crate) fn get(&self, id: u64) -> Option<Vec<u8>> {
+        self.map.get(&id).cloned()
+    }
+
+    pub(crate) fn insert(&mut self, id: u64, resp: Vec<u8>) {
+        if self.map.insert(id, resp).is_none() {
+            self.order.push_back(id);
+            if self.order.len() > DEDUP_CAP {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replicator (primary side)
+// ---------------------------------------------------------------------------
+
+struct LogInner {
+    /// Entries assigned an index but not yet handed to the shipper.
+    queue: Vec<(u64, Request)>,
+    next_index: u64,
+}
+
+struct CommitState {
+    /// Highest log index known appended on a quorum of replicas.
+    watermark: u64,
+    /// No live replicas left: acks release immediately (documented
+    /// availability-over-durability degradation).
+    degraded: bool,
+    live_replicas: usize,
+}
+
+/// The primary's replication log: index assignment, group-commit
+/// shipping, and quorum tracking. One shipper thread drains the
+/// queue and ships each drained batch as a single `Replicate` frame
+/// per replica; entries appended under one lock acquisition are
+/// therefore always shipped in the same frame (the atomic-contiguity
+/// guarantee `Dedup` batches rely on).
+pub struct Replicator {
+    inner: Mutex<LogInner>,
+    ship_cv: Condvar,
+    commit: Mutex<CommitState>,
+    commit_cv: Condvar,
+    stop: AtomicBool,
+    shipper: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Replicator {
+    /// Connect to `peers` and start the shipper. `next_index` is the
+    /// first index this primary will assign (applied + 1 on a
+    /// freshly promoted replica; 1 on a new plane). Unreachable peers
+    /// are dropped immediately.
+    pub fn start(peers: &[SocketAddr], next_index: u64) -> Arc<Replicator> {
+        let mut conns = Vec::new();
+        for &p in peers {
+            if let Ok(mut c) = TcpStoreClient::connect_with_timeout(p, PROBE_CONNECT) {
+                // bound a stalled replica read so shutdown can't wedge
+                let _ = c.set_read_window(Some(Duration::from_secs(2)));
+                conns.push(c);
+            }
+        }
+        let next_index = next_index.max(1);
+        let repl = Arc::new(Replicator {
+            inner: Mutex::new(LogInner { queue: Vec::new(), next_index }),
+            ship_cv: Condvar::new(),
+            commit: Mutex::new(CommitState {
+                watermark: next_index - 1,
+                degraded: conns.is_empty(),
+                live_replicas: conns.len(),
+            }),
+            commit_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            shipper: Mutex::new(None),
+        });
+        let r2 = repl.clone();
+        let h = std::thread::spawn(move || shipper_loop(&r2, conns));
+        *lock(&repl.shipper) = Some(h);
+        repl
+    }
+
+    /// Run `apply` and, when it reports loggable entries, assign them
+    /// consecutive log indices — apply and index assignment happen
+    /// under ONE lock, so two racing connections can never apply in
+    /// one order and log in the other. Returns the last assigned
+    /// index, if any. `apply` must never block (blocking ops are
+    /// never logged).
+    pub(crate) fn apply_logged(
+        &self,
+        apply: impl FnOnce() -> (Response, Vec<Request>),
+    ) -> (Response, Option<u64>) {
+        let mut g = lock(&self.inner);
+        let (resp, entries) = apply();
+        if entries.is_empty() {
+            return (resp, None);
+        }
+        let mut last = 0;
+        for e in entries {
+            let idx = g.next_index;
+            g.next_index += 1;
+            g.queue.push((idx, e));
+            last = idx;
+        }
+        drop(g);
+        self.ship_cv.notify_all();
+        (resp, Some(last))
+    }
+
+    /// Append pre-executed entries in one lock acquisition (they ship
+    /// in one `Replicate` frame). Returns the last assigned index.
+    pub(crate) fn append(&self, entries: Vec<Request>) -> Option<u64> {
+        if entries.is_empty() {
+            return None;
+        }
+        let (_, idx) = self.apply_logged(|| (Response::Ok, entries));
+        idx
+    }
+
+    /// Block until `index` is on a quorum of replicas (or the plane
+    /// is degraded / shutting down). Bounded: a shipper wedged for
+    /// 10s degrades to availability rather than freezing the data
+    /// plane.
+    pub fn wait_committed(&self, index: u64) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut cs = lock(&self.commit);
+        while cs.watermark < index
+            && !cs.degraded
+            && !self.stop.load(Ordering::Relaxed)
+            && Instant::now() < deadline
+        {
+            let (g, _) = self
+                .commit_cv
+                .wait_timeout(cs, Duration::from_millis(50))
+                .unwrap_or_else(PoisonError::into_inner);
+            cs = g;
+        }
+    }
+
+    /// Live replica connections (0 = degraded un-replicated mode).
+    pub fn live_replicas(&self) -> usize {
+        lock(&self.commit).live_replicas
+    }
+
+    /// Stop the shipper (after it drains any queued entries) and join.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.ship_cv.notify_all();
+        self.commit_cv.notify_all();
+        if let Some(h) = lock(&self.shipper).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn shipper_loop(r: &Replicator, mut conns: Vec<TcpStoreClient>) {
+    let mut acked: Vec<u64> = vec![0; conns.len()];
+    let mut live: Vec<bool> = vec![true; conns.len()];
+    loop {
+        let batch = {
+            let mut g = lock(&r.inner);
+            while g.queue.is_empty() && !r.stop.load(Ordering::Relaxed) {
+                let (g2, _) = r
+                    .ship_cv
+                    .wait_timeout(g, Duration::from_millis(100))
+                    .unwrap_or_else(PoisonError::into_inner);
+                g = g2;
+            }
+            if g.queue.is_empty() {
+                // stop requested and nothing left to drain
+                break;
+            }
+            std::mem::take(&mut g.queue)
+        };
+        let start = batch[0].0;
+        let last = batch[batch.len() - 1].0;
+        let ops: Vec<Request> = batch.into_iter().map(|(_, op)| op).collect();
+        let frame = Request::Replicate { start_index: start, ops };
+        for i in 0..conns.len() {
+            if !live[i] {
+                continue;
+            }
+            match conns[i].roundtrip(frame.clone()) {
+                Ok(Response::Counter(a)) if a as u64 >= last => acked[i] = a as u64,
+                // short ack (gap) or IO error: the replica is lost —
+                // drop it rather than stall the plane behind it
+                _ => live[i] = false,
+            }
+        }
+        let n_live = live.iter().filter(|l| **l).count();
+        // quorum = primary + 1 replica, the majority of both a 2-node
+        // and a 3-node plane, so the watermark is the highest live
+        // replica ack (degraded: everything assigned is "committed")
+        let new_mark = if n_live == 0 {
+            last
+        } else {
+            acked
+                .iter()
+                .zip(&live)
+                .filter(|(_, l)| **l)
+                .map(|(a, _)| *a)
+                .max()
+                .unwrap_or(last)
+        };
+        let mut cs = lock(&r.commit);
+        cs.live_replicas = n_live;
+        cs.degraded = n_live == 0;
+        if new_mark > cs.watermark {
+            cs.watermark = new_mark;
+        }
+        drop(cs);
+        r.commit_cv.notify_all();
+    }
+    // release every committer on the way out
+    let mut cs = lock(&r.commit);
+    cs.degraded = true;
+    drop(cs);
+    r.commit_cv.notify_all();
+}
+
+// ---------------------------------------------------------------------------
+// StoreEndpoints
+// ---------------------------------------------------------------------------
+
+/// The set of store node addresses a client may talk to. Replaces the
+/// bare `SocketAddr` that used to be threaded through `establish`,
+/// the heartbeat emitters, rendezvous, restore discovery, and the
+/// controller: every consumer now owns the full set and can fail
+/// over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreEndpoints {
+    addrs: Vec<SocketAddr>,
+}
+
+impl StoreEndpoints {
+    /// Single-node plane (the backward-compatible common case).
+    pub fn one(addr: SocketAddr) -> Self {
+        StoreEndpoints { addrs: vec![addr] }
+    }
+
+    /// Multi-node plane. The first address is the primary hint;
+    /// discovery still probes every endpoint.
+    pub fn new(addrs: Vec<SocketAddr>) -> Self {
+        assert!(!addrs.is_empty(), "endpoint set must not be empty");
+        StoreEndpoints { addrs }
+    }
+
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// Best-guess primary without a discovery round-trip (used by
+    /// latency-sensitive bursts like `establish`).
+    pub fn primary_hint(&self) -> SocketAddr {
+        self.addrs[0]
+    }
+}
+
+impl From<SocketAddr> for StoreEndpoints {
+    fn from(addr: SocketAddr) -> Self {
+        StoreEndpoints::one(addr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StoreSession (client side)
+// ---------------------------------------------------------------------------
+
+/// One node's replication status as reported by `ReplStatus`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplStatusInfo {
+    pub role: StoreRole,
+    pub applied: u64,
+    pub epoch: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreRole {
+    Primary,
+    Replica,
+}
+
+/// Ask one connection for its replication status.
+pub fn repl_status(c: &mut TcpStoreClient) -> Result<ReplStatusInfo> {
+    match c.roundtrip(Request::ReplStatus)? {
+        Response::Value(v) if v.len() == 17 => {
+            let role =
+                if v[0] == ROLE_PRIMARY { StoreRole::Primary } else { StoreRole::Replica };
+            let applied = u64::from_le_bytes(v[1..9].try_into().expect("len checked"));
+            let epoch = u64::from_le_bytes(v[9..17].try_into().expect("len checked"));
+            Ok(ReplStatusInfo { role, applied, epoch })
+        }
+        other => bail!("unexpected ReplStatus response {other:?}"),
+    }
+}
+
+static SESSION_NONCE: AtomicU64 = AtomicU64::new(1);
+
+/// Session-owning store client: discovers the primary among its
+/// endpoint set, then behaves like a `TcpStoreClient` whose every op
+/// transparently survives a primary crash. Blocking waits are
+/// replayed against the new primary; non-idempotent ops retry under a
+/// stable `Dedup` id so a replay can never double-apply.
+pub struct StoreSession {
+    endpoints: StoreEndpoints,
+    client: TcpStoreClient,
+    primary: SocketAddr,
+    ops: u64,
+    dedup_base: u64,
+    dedup_seq: u64,
+    trace_ctx: Option<TraceCtx>,
+}
+
+impl StoreSession {
+    /// Connect, retrying discovery for up to 10s (covers a plane that
+    /// is mid-failover when the session starts).
+    pub fn connect(endpoints: StoreEndpoints) -> Result<Self> {
+        Self::connect_within(endpoints, FAILOVER_PATIENCE)
+    }
+
+    /// One discovery pass, no retry loop — the building block
+    /// `connect` and the heartbeat emitters' bounded backoff wrap.
+    pub fn try_connect(endpoints: &StoreEndpoints) -> Result<Self> {
+        let (primary, client) = discover(endpoints)?;
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let nonce = SESSION_NONCE.fetch_add(1, Ordering::Relaxed);
+        let mut seed = [0u8; 16];
+        seed[..8].copy_from_slice(&nanos.to_le_bytes());
+        seed[8..].copy_from_slice(&nonce.to_le_bytes());
+        Ok(StoreSession {
+            endpoints: endpoints.clone(),
+            client,
+            primary,
+            ops: 0,
+            dedup_base: crate::util::fnv1a(&seed),
+            dedup_seq: 0,
+            trace_ctx: None,
+        })
+    }
+
+    /// Connect with an explicit discovery deadline.
+    pub fn connect_within(endpoints: StoreEndpoints, patience: Duration) -> Result<Self> {
+        let deadline = Instant::now() + patience;
+        loop {
+            match Self::try_connect(&endpoints) {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    /// The primary this session currently talks to.
+    pub fn primary_addr(&self) -> SocketAddr {
+        self.primary
+    }
+
+    pub fn endpoints(&self) -> &StoreEndpoints {
+        &self.endpoints
+    }
+
+    /// Logical ops acknowledged by the store for this session —
+    /// counts like `TcpStoreClient::ops_sent` (batched sub-ops
+    /// individually; dedup envelopes are free), so protocol message
+    /// budgets are unchanged by the session layer.
+    pub fn ops_sent(&self) -> u64 {
+        self.ops
+    }
+
+    /// Stamp (or clear) the trace context on every outgoing frame;
+    /// survives failover (re-stamped onto the replacement
+    /// connection).
+    pub fn set_trace_ctx(&mut self, ctx: Option<TraceCtx>) {
+        self.trace_ctx = ctx;
+        self.client.set_trace_ctx(ctx);
+    }
+
+    fn next_dedup_id(&mut self) -> u64 {
+        self.dedup_seq += 1;
+        self.dedup_base.wrapping_add(self.dedup_seq)
+    }
+
+    /// Tear down the current connection and rediscover the primary.
+    fn fail_over(&mut self) -> Result<()> {
+        let deadline = Instant::now() + FAILOVER_PATIENCE;
+        loop {
+            match discover(&self.endpoints) {
+                Ok((primary, mut client)) => {
+                    client.set_trace_ctx(self.trace_ctx);
+                    self.primary = primary;
+                    self.client = client;
+                    return Ok(());
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Retry core for non-blocking ops: NotPrimary or an IO error
+    /// triggers failover; anything else is the answer.
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for _ in 0..SESSION_RETRIES {
+            match self.client.roundtrip(req.clone()) {
+                Ok(Response::NotPrimary) => self.fail_over()?,
+                Ok(resp) => {
+                    self.ops += 1;
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    self.fail_over()?;
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("store session: retries exhausted")))
+    }
+
+    /// Retry core for blocking waits: additionally treats a
+    /// `NotFound` release (the dying server's shutdown broadcast) as
+    /// a failover trigger, replaying the parked wait against the new
+    /// primary.
+    fn call_wait(&mut self, req: Request) -> Result<Response> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for _ in 0..SESSION_RETRIES {
+            self.client.set_read_window(Some(Duration::from_secs(300)))?;
+            match self.client.roundtrip(req.clone()) {
+                Ok(Response::NotPrimary) | Ok(Response::NotFound) => self.fail_over()?,
+                Ok(resp) => {
+                    self.ops += 1;
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    self.fail_over()?;
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("store session: wait retries exhausted")))
+    }
+
+    pub fn hello(&mut self, client_id: u64) -> Result<()> {
+        match self.call(Request::Hello { client_id })? {
+            Response::HelloAck => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: &[u8]) -> Result<()> {
+        match self.call(Request::Set { key: key.into(), value: value.into() })? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn get(&mut self, key: &str) -> Result<Option<Bytes>> {
+        match self.call(Request::Get { key: key.into() })? {
+            Response::Value(v) => Ok(Some(v)),
+            Response::NotFound => Ok(None),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Non-idempotent: retried under a stable dedup id, so a replay
+    /// after failover returns the cached counter instead of adding
+    /// twice.
+    pub fn add(&mut self, key: &str, delta: i64) -> Result<i64> {
+        let id = self.next_dedup_id();
+        let req = Request::Dedup {
+            id,
+            op: Box::new(Request::Add { key: key.into(), delta }),
+        };
+        match self.call(req)? {
+            Response::Counter(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn count(&mut self) -> Result<u64> {
+        match self.call(Request::Count)? {
+            Response::CountIs(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Block until `key` is published — replayed against the new
+    /// primary if the one this session parked on dies.
+    pub fn wait(&mut self, key: &str) -> Result<Bytes> {
+        match self.call_wait(Request::Wait { key: key.into() })? {
+            Response::Value(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Epoch-fenced wait, failover-transparent like [`Self::wait`].
+    pub fn wait_epoch(&mut self, key: &str, epoch: u64) -> Result<FencedWait> {
+        match self.call_wait(Request::WaitEpoch { key: key.into(), epoch })? {
+            Response::Value(v) => Ok(FencedWait::Value(v)),
+            Response::EpochFenced { current } => Ok(FencedWait::Superseded { current }),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn advance_epoch(&mut self, to: u64) -> Result<u64> {
+        match self.call(Request::AdvanceEpoch { to })? {
+            Response::Counter(v) => Ok(v as u64),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn advertise_restore(
+        &mut self,
+        epoch: u64,
+        tag: u64,
+        addr: &str,
+    ) -> Result<Option<u64>> {
+        let req = Request::AdvertiseRestore { epoch, tag, addr: addr.into() };
+        match self.call(req)? {
+            Response::Ok => Ok(None),
+            Response::EpochFenced { current } => Ok(Some(current)),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn claim_restore(&mut self, epoch: u64, tag: u64) -> Result<FencedWait> {
+        match self.call_wait(Request::ClaimRestore { epoch, tag })? {
+            Response::Value(v) => Ok(FencedWait::Value(v)),
+            Response::EpochFenced { current } => Ok(FencedWait::Superseded { current }),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn abort_epoch_unless(
+        &mut self,
+        unless_key: &str,
+        tombstone_key: &str,
+        tombstone: &[u8],
+        to: u64,
+    ) -> Result<bool> {
+        let req = Request::AbortEpoch {
+            unless_key: unless_key.into(),
+            tombstone_key: tombstone_key.into(),
+            tombstone: tombstone.to_vec(),
+            to,
+        };
+        match self.call(req)? {
+            Response::Counter(v) => Ok(v == 1),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn heartbeat(
+        &mut self,
+        rank: u64,
+        incarnation: u64,
+        step_tag: i64,
+        device_code: i64,
+    ) -> Result<()> {
+        let req = Request::Heartbeat { rank, incarnation, step_tag, device_code };
+        match self.call(req)? {
+            Response::Ok => Ok(()),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn del_prefix(&mut self, prefix: &str) -> Result<i64> {
+        match self.call(Request::DelPrefix { prefix: prefix.into() })? {
+            Response::Counter(v) => Ok(v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Snapshot> {
+        match self.call(Request::Stats)? {
+            Response::Value(v) => Snapshot::parse(&v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Pipelined batch, failover-transparent. A batch containing any
+    /// `Add` is wrapped in a `Dedup` envelope whose id is stable
+    /// across retries: if the primary dies after executing the batch
+    /// but before the ack arrives, the replay returns the replicated
+    /// cached responses — no double-applied counter, no lost publish.
+    pub fn batch(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = reqs.len();
+        let blocking = reqs.iter().any(Request::is_blocking);
+        let wait_pos: Vec<usize> = reqs
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_blocking())
+            .map(|(i, _)| i)
+            .collect();
+        let needs_dedup = reqs.iter().any(|r| matches!(r, Request::Add { .. }));
+        let req = if needs_dedup {
+            let id = self.next_dedup_id();
+            Request::Dedup { id, op: Box::new(Request::Batch(reqs)) }
+        } else {
+            Request::Batch(reqs)
+        };
+        let mut last_err: Option<anyhow::Error> = None;
+        for _ in 0..SESSION_RETRIES {
+            if blocking {
+                self.client.set_read_window(Some(Duration::from_secs(300)))?;
+            }
+            match self.client.roundtrip(req.clone()) {
+                Ok(Response::Multi(rs)) => {
+                    // a blocking sub-op released by the dying server's
+                    // shutdown broadcast answers NotFound: replay the
+                    // whole batch against the new primary
+                    if wait_pos
+                        .iter()
+                        .any(|&i| rs.get(i) == Some(&Response::NotFound))
+                    {
+                        self.fail_over()?;
+                        continue;
+                    }
+                    if rs.len() > n {
+                        bail!("batch returned {} responses for {n} ops", rs.len());
+                    }
+                    self.ops += rs.len() as u64;
+                    return Ok(rs);
+                }
+                Ok(Response::NotPrimary) => self.fail_over()?,
+                Ok(other) => bail!("unexpected batch response {other:?}"),
+                Err(e) => {
+                    last_err = Some(e);
+                    self.fail_over()?;
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("store session: batch retries exhausted")))
+    }
+}
+
+/// Probe every endpoint: an existing primary wins immediately;
+/// otherwise the most advanced reachable replica — max `(epoch,
+/// applied)`, ties broken by endpoint order so concurrent discoverers
+/// elect the same node — is promoted. The epoch is the fence: a
+/// replica behind on epoch can never be chosen over one that has seen
+/// the newer epoch, so a failed-over plane never serves a stale
+/// epoch.
+fn discover(eps: &StoreEndpoints) -> Result<(SocketAddr, TcpStoreClient)> {
+    let mut best: Option<(u64, u64, usize)> = None;
+    for (i, &addr) in eps.addrs().iter().enumerate() {
+        let Ok(mut c) = TcpStoreClient::connect_with_timeout(addr, PROBE_CONNECT) else {
+            continue;
+        };
+        let Ok(st) = repl_status(&mut c) else { continue };
+        if st.role == StoreRole::Primary {
+            return Ok((addr, c));
+        }
+        let better = match best {
+            None => true,
+            Some((e, a, _)) => (st.epoch, st.applied) > (e, a),
+        };
+        if better {
+            best = Some((st.epoch, st.applied, i));
+        }
+    }
+    let Some((_, _, i)) = best else {
+        bail!("no reachable store endpoint in {:?}", eps.addrs());
+    };
+    let addr = eps.addrs()[i];
+    let mut c = TcpStoreClient::connect_with_timeout(addr, PROBE_CONNECT)?;
+    let peers: Vec<String> = eps
+        .addrs()
+        .iter()
+        .enumerate()
+        .filter(|(j, _)| *j != i)
+        .map(|(_, a)| a.to_string())
+        .collect();
+    match c.roundtrip(Request::Promote { peers })? {
+        Response::Ok => Ok((addr, c)),
+        other => bail!("unexpected Promote response {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReplicaSet (in-process plane harness)
+// ---------------------------------------------------------------------------
+
+/// An in-process replicated coordination plane: one primary plus N
+/// replicas, wired together at start. The controller's rebuild plane,
+/// the failover chaos drivers, and the replicated-mode store bench
+/// all run on one of these. `replicas == 0` degenerates to a plain
+/// un-replicated primary with zero added overhead.
+pub struct ReplicaSet {
+    primary: Option<TcpStoreServer>,
+    replicas: Vec<TcpStoreServer>,
+    addrs: Vec<SocketAddr>,
+}
+
+impl ReplicaSet {
+    pub fn start(replicas: usize) -> Result<Self> {
+        let primary = TcpStoreServer::start()?;
+        let mut reps = Vec::new();
+        for _ in 0..replicas {
+            let s = TcpStoreServer::start()?;
+            s.set_replica();
+            reps.push(s);
+        }
+        let peer_addrs: Vec<SocketAddr> = reps.iter().map(|r| r.addr()).collect();
+        primary.promote(&peer_addrs);
+        let mut addrs = vec![primary.addr()];
+        addrs.extend(peer_addrs);
+        Ok(ReplicaSet { primary: Some(primary), replicas: reps, addrs })
+    }
+
+    /// The full endpoint set (includes a killed primary's address —
+    /// sessions skip dead endpoints during discovery).
+    pub fn endpoints(&self) -> StoreEndpoints {
+        StoreEndpoints::new(self.addrs.clone())
+    }
+
+    /// Address of the original primary slot (the legacy single-addr
+    /// call sites' view of the plane).
+    pub fn addr(&self) -> SocketAddr {
+        self.addrs[0]
+    }
+
+    pub fn primary_server(&self) -> Option<&TcpStoreServer> {
+        self.primary.as_ref()
+    }
+
+    pub fn replica_servers(&self) -> &[TcpStoreServer] {
+        &self.replicas
+    }
+
+    /// Crash the primary (drops the server: listener closes, parked
+    /// waiters release, the replication shipper drains and stops).
+    /// Returns its address, or None if already killed.
+    pub fn kill_primary(&mut self) -> Option<SocketAddr> {
+        self.primary.take().map(|p| p.addr())
+    }
+
+    /// A fresh failover-capable session onto this plane.
+    pub fn session(&self) -> Result<StoreSession> {
+        StoreSession::connect(self.endpoints())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wait_parked(server: &TcpStoreServer, n: i64) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics_snapshot().gauge("store.parked_waiters") < n {
+            assert!(Instant::now() < deadline, "waiters never parked");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn endpoints_basics() {
+        let a: SocketAddr = "127.0.0.1:1001".parse().unwrap();
+        let b: SocketAddr = "127.0.0.1:1002".parse().unwrap();
+        let eps = StoreEndpoints::new(vec![a, b]);
+        assert_eq!(eps.addrs(), &[a, b]);
+        assert_eq!(eps.primary_hint(), a);
+        assert_eq!(StoreEndpoints::from(a), StoreEndpoints::one(a));
+    }
+
+    #[test]
+    fn dedup_map_is_fifo_bounded() {
+        let mut m = DedupMap::new();
+        for id in 0..(DEDUP_CAP as u64 + 10) {
+            m.insert(id, vec![id as u8]);
+        }
+        assert_eq!(m.len(), DEDUP_CAP);
+        assert_eq!(m.get(0), None, "oldest entries evicted");
+        assert!(m.get(DEDUP_CAP as u64 + 9).is_some());
+        // re-insert of a live id neither grows nor re-orders
+        m.insert(DEDUP_CAP as u64 + 9, vec![1]);
+        assert_eq!(m.len(), DEDUP_CAP);
+    }
+
+    #[test]
+    fn session_works_against_single_unreplicated_server() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut s = StoreSession::connect(server.endpoints()).unwrap();
+        assert_eq!(s.primary_addr(), server.addr());
+        s.set("k", b"v").unwrap();
+        assert_eq!(s.get("k").unwrap().as_deref(), Some(&b"v"[..]));
+        assert_eq!(s.add("n", 3).unwrap(), 3);
+        assert_eq!(s.add("n", 4).unwrap(), 7);
+        assert_eq!(s.ops_sent(), 4);
+    }
+
+    #[test]
+    fn quorum_acked_writes_are_on_the_replica_by_ack_time() {
+        let set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        s.set("a", b"1").unwrap();
+        s.add("ctr", 5).unwrap();
+        s.advance_epoch(3).unwrap();
+        // the ack required the replica's append: read it back directly
+        let replica = &set.replica_servers()[0];
+        let mut rc = TcpStoreClient::connect(replica.addr()).unwrap();
+        assert_eq!(rc.get("a").unwrap().as_deref(), Some(&b"1"[..]));
+        assert_eq!(replica.epoch(), 3);
+        // and the replica refuses mutations
+        assert_eq!(
+            rc.roundtrip(Request::Set { key: "x".into(), value: b"v".to_vec() }).unwrap(),
+            Response::NotPrimary
+        );
+        assert_eq!(
+            rc.roundtrip(Request::Wait { key: "x".into() }).unwrap(),
+            Response::NotPrimary
+        );
+    }
+
+    #[test]
+    fn session_discovers_primary_regardless_of_endpoint_order() {
+        let set = ReplicaSet::start(2).unwrap();
+        let mut addrs = set.endpoints().addrs().to_vec();
+        addrs.reverse(); // replicas listed first
+        let mut s = StoreSession::connect(StoreEndpoints::new(addrs)).unwrap();
+        assert_eq!(s.primary_addr(), set.addr());
+        s.set("k", b"v").unwrap();
+        assert_eq!(s.get("k").unwrap().as_deref(), Some(&b"v"[..]));
+    }
+
+    #[test]
+    fn dedup_replay_returns_cached_response_without_reexecution() {
+        let server = TcpStoreServer::start().unwrap();
+        let mut c = TcpStoreClient::connect(server.addr()).unwrap();
+        let req = Request::Dedup {
+            id: 42,
+            op: Box::new(Request::Add { key: "ctr".into(), delta: 5 }),
+        };
+        assert_eq!(c.roundtrip(req.clone()).unwrap(), Response::Counter(5));
+        // replay: cached answer, counter unchanged
+        assert_eq!(c.roundtrip(req).unwrap(), Response::Counter(5));
+        assert_eq!(c.add("ctr", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn failover_preserves_quorum_acked_state_and_epoch_fence() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        s.set("a", b"1").unwrap();
+        s.advance_epoch(3).unwrap();
+        set.kill_primary();
+        // a fresh session discovers + promotes the surviving replica
+        let mut s2 = set.session().unwrap();
+        assert_eq!(s2.get("a").unwrap().as_deref(), Some(&b"1"[..]));
+        // the fence survived: a wait fenced at an older epoch is
+        // released as superseded, never served stale
+        assert_eq!(
+            s2.wait_epoch("absent", 2).unwrap(),
+            FencedWait::Superseded { current: 3 }
+        );
+        // and the old session's next op transparently fails over too
+        s.set("b", b"2").unwrap();
+        assert_eq!(s2.get("b").unwrap().as_deref(), Some(&b"2"[..]));
+    }
+
+    #[test]
+    fn failover_resumes_parked_wait_exactly_once() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let eps = set.endpoints();
+        let waiter = std::thread::spawn(move || {
+            let mut s = StoreSession::connect(eps).unwrap();
+            s.wait("late").unwrap()
+        });
+        wait_parked(set.primary_server().unwrap(), 1);
+        set.kill_primary();
+        // publish on the failed-over plane: the parked wait must
+        // resume against the new primary and see exactly this value
+        let mut pub_s = set.session().unwrap();
+        pub_s.set("late", b"v").unwrap();
+        assert_eq!(&waiter.join().unwrap()[..], b"v");
+        // the publish itself was not lost
+        assert_eq!(pub_s.get("late").unwrap().as_deref(), Some(&b"v"[..]));
+    }
+
+    #[test]
+    fn failover_mid_batch_rekey_is_exactly_once() {
+        // the survivor re-key shape: batch([WaitEpoch(delta), Add(arrived)])
+        let mut set = ReplicaSet::start(1).unwrap();
+        let eps = set.endpoints();
+        let survivor = std::thread::spawn(move || {
+            let mut s = StoreSession::connect(eps).unwrap();
+            s.batch(vec![
+                Request::WaitEpoch { key: "rdzv/1/delta".into(), epoch: 1 },
+                Request::Add { key: "rdzv/1/arrived".into(), delta: 1 },
+            ])
+            .unwrap()
+        });
+        wait_parked(set.primary_server().unwrap(), 1);
+        set.kill_primary();
+        let mut coord = set.session().unwrap();
+        coord.set("rdzv/1/delta", b"plan").unwrap();
+        let rs = survivor.join().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0], Response::Value(Bytes::from(&b"plan"[..])));
+        assert_eq!(rs[1], Response::Counter(1));
+        // exactly once: the replayed batch did not double-arrive
+        assert_eq!(coord.add("rdzv/1/arrived", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn fenced_prefix_rule_holds_across_failover() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let eps = set.endpoints();
+        let survivor = std::thread::spawn(move || {
+            let mut s = StoreSession::connect(eps).unwrap();
+            s.batch(vec![
+                Request::WaitEpoch { key: "rdzv/1/delta".into(), epoch: 1 },
+                Request::Add { key: "rdzv/1/arrived".into(), delta: 1 },
+            ])
+            .unwrap()
+        });
+        wait_parked(set.primary_server().unwrap(), 1);
+        set.kill_primary();
+        // instead of publishing, the new primary's epoch moves on:
+        // the replayed batch must fence and never run its Add tail
+        let mut coord = set.session().unwrap();
+        coord.advance_epoch(5).unwrap();
+        let rs = survivor.join().unwrap();
+        assert_eq!(rs, vec![Response::EpochFenced { current: 5 }]);
+        assert_eq!(coord.add("rdzv/1/arrived", 0).unwrap(), 0, "fenced tail must not run");
+    }
+
+    #[test]
+    fn degraded_plane_keeps_serving_after_losing_every_replica() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        s.set("pre", b"1").unwrap();
+        // crash the only replica: the primary must degrade to
+        // un-replicated operation instead of wedging behind its peer
+        set.replicas.clear();
+        s.set("post", b"2").unwrap();
+        assert_eq!(s.add("ctr", 1).unwrap(), 1);
+        assert_eq!(s.get("post").unwrap().as_deref(), Some(&b"2"[..]));
+    }
+
+    #[test]
+    fn session_batch_without_add_is_not_dedup_wrapped() {
+        // heartbeat coalescing batches are idempotent: no envelope
+        let server = TcpStoreServer::start().unwrap();
+        let mut s = StoreSession::connect(server.endpoints()).unwrap();
+        let rs = s
+            .batch(vec![
+                Request::Heartbeat { rank: 1, incarnation: 1, step_tag: 0, device_code: -1 },
+                Request::Heartbeat { rank: 2, incarnation: 1, step_tag: 0, device_code: -1 },
+            ])
+            .unwrap();
+        assert_eq!(rs, vec![Response::Ok, Response::Ok]);
+        assert_eq!(s.ops_sent(), 2);
+        assert_eq!(server.beats().len(), 2);
+    }
+}

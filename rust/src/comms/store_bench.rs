@@ -13,6 +13,12 @@
 //!   model, kept as the in-tree baseline the acceptance criterion
 //!   compares against.
 //!
+//! A third *replicated* column re-runs the batched cell against a
+//! quorum-replicated plane (primary + `replicas` log-shipping
+//! followers, DESIGN.md §13): every mutating op is acked only after
+//! quorum append, and the acceptance criterion bounds the replicated
+//! per-op p50 at ≤ 1.5x the un-replicated batched p50.
+//!
 //! Scale model (same as the rendezvous and detection sweeps): the
 //! simulated-client count drives keys, counters, heartbeat ranks, and
 //! total op volume at full scale, while real sockets are bounded by
@@ -22,6 +28,7 @@
 //! the bench target additionally asserts batched throughput ≥ 2x
 //! serial at 4096 clients and flat-at-scale per-op p50.
 
+use super::replication::ReplicaSet;
 use super::tcp_store::{TcpStoreClient, TcpStoreServer};
 use super::wire::{Request, Response};
 use crate::metrics::bench::BenchReport;
@@ -53,6 +60,9 @@ pub struct StoreSweepConfig {
     /// Measured rounds per (scale, mode); one extra warmup round is
     /// discarded.
     pub rounds: u32,
+    /// Log-shipping replicas behind the replicated column's primary
+    /// (0 degenerates to an un-replicated plane).
+    pub replicas: usize,
 }
 
 impl Default for StoreSweepConfig {
@@ -62,6 +72,7 @@ impl Default for StoreSweepConfig {
             connections: 64,
             repeats: 2,
             rounds: 5,
+            replicas: 1,
         }
     }
 }
@@ -140,7 +151,7 @@ fn drive_round(
     Ok(DriverOut { samples, ops: total_ops, busy_s: t0.elapsed().as_secs_f64() })
 }
 
-/// Run every round of one (scale, mode) cell on a fresh server;
+/// Run every round of one (scale, mode) cell on a fresh plain server;
 /// returns (per-op histogram, ops/s over the measured rounds).
 fn run_cell(
     cfg: &StoreSweepConfig,
@@ -149,7 +160,29 @@ fn run_cell(
     trace: Option<TraceCtx>,
 ) -> Result<(Histogram, f64)> {
     let server = TcpStoreServer::start()?;
-    let addr = server.addr();
+    run_cell_on(server.addr(), cfg, clients, batched, trace)
+}
+
+/// Run every round of one batched cell against a quorum-replicated
+/// plane: mutating ops ack only after the primary has shipped them to
+/// its `cfg.replicas` followers (DESIGN.md §13).
+fn run_replicated_cell(
+    cfg: &StoreSweepConfig,
+    clients: usize,
+) -> Result<(Histogram, f64)> {
+    let set = ReplicaSet::start(cfg.replicas)?;
+    run_cell_on(set.addr(), cfg, clients, true, None)
+}
+
+/// The driver loop of one (scale, mode) cell against an already
+/// running store at `addr`.
+fn run_cell_on(
+    addr: SocketAddr,
+    cfg: &StoreSweepConfig,
+    clients: usize,
+    batched: bool,
+    trace: Option<TraceCtx>,
+) -> Result<(Histogram, f64)> {
     let conns = cfg.connections.clamp(1, clients);
     // evenly partition simulated client ids over the connections
     let id_sets: Vec<Vec<usize>> = (0..conns)
@@ -203,7 +236,15 @@ fn run_cell(
 pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
     let mut report = BenchReport::new(
         "store_throughput: striped+parked+batched data plane, mixed workload",
-        &["p50 us/op", "ops/s", "serial us/op", "serial ops/s", "speedup x", "conns"],
+        &[
+            "p50 us/op",
+            "ops/s",
+            "serial us/op",
+            "serial ops/s",
+            "speedup x",
+            "conns",
+            "repl p50 us/op",
+        ],
     );
     for &n in &cfg.clients {
         if n == 0 {
@@ -211,6 +252,7 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
         }
         let (batched_h, batched_ops) = run_cell(cfg, n, true, None)?;
         let (serial_h, serial_ops) = run_cell(cfg, n, false, None)?;
+        let (repl_h, _) = run_replicated_cell(cfg, n)?;
         let speedup = if serial_ops > 0.0 { batched_ops / serial_ops } else { 0.0 };
         report.row(
             format!("n={n}"),
@@ -221,28 +263,34 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
                 serial_ops,
                 speedup,
                 cfg.connections.min(n) as f64,
+                repl_h.p50() * 1e6,
             ],
         );
     }
     report.note(format!(
         "{} rounds/cell (+1 warmup), {} x 6-op mix per simulated client \
          (set/get/wait-hit/add/heartbeat/get), {} connections; batched mode \
-         pipelines {} ops per frame, serial mode pays one RTT per op",
-        cfg.rounds, cfg.repeats, cfg.connections, BATCH_OPS
+         pipelines {} ops per frame, serial mode pays one RTT per op; the \
+         repl column re-runs the batched cell with {} quorum replica(s) \
+         behind the primary",
+        cfg.rounds, cfg.repeats, cfg.connections, BATCH_OPS, cfg.replicas
     ));
     report.note(
         "flat-at-scale: per-op p50 stays within 2x from the smallest to the \
          largest client count (striped locks + per-key parking, no global \
-         serialization); batched >= 2x serial ops/s at 4096 clients",
+         serialization); batched >= 2x serial ops/s at 4096 clients; \
+         quorum-replicated p50 <= 1.5x un-replicated batched p50",
     );
     Ok(report)
 }
 
-/// The sweep's acceptance properties (ISSUE 5), shared by the bench
-/// target and `store-bench --assert` (which bench-gate runs):
-/// batched ≥ 2x serial ops/s at 4096 clients (or the largest swept
-/// scale), and batched per-op p50 flat — ≤ 2x from the smallest to
-/// the largest scale, with a 5us noise floor for loaded runners.
+/// The sweep's acceptance properties (ISSUE 5 + ISSUE 7), shared by
+/// the bench target and `bench store --assert` (which bench-gate
+/// runs): batched ≥ 2x serial ops/s at 4096 clients (or the largest
+/// swept scale); batched per-op p50 flat — ≤ 2x from the smallest to
+/// the largest scale; and quorum-replicated per-op p50 ≤ 1.5x the
+/// un-replicated batched p50 per scale. All with a 5us noise floor
+/// for loaded runners.
 pub fn check_report(cfg: &StoreSweepConfig, report: &BenchReport) -> Result<()> {
     let (Some(&min_scale), Some(&max_scale)) =
         (cfg.clients.iter().min(), cfg.clients.iter().max())
@@ -267,6 +315,16 @@ pub fn check_report(cfg: &StoreSweepConfig, report: &BenchReport) -> Result<()> 
         "store per-op p50 not scale-independent: {hi:.2}us @ {max_scale} vs \
          {lo:.2}us @ {min_scale}"
     );
+    for &n in &cfg.clients {
+        let r = row(n)?;
+        let (plain, repl) = (r[0], r[6]);
+        ensure!(
+            repl <= 1.5 * plain + 5.0,
+            "quorum replication too expensive at n={n}: repl p50 {repl:.2}us \
+             vs {:.2}us allowed (1.5x un-replicated {plain:.2}us + 5us floor)",
+            1.5 * plain + 5.0
+        );
+    }
     Ok(())
 }
 
@@ -299,12 +357,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn sweep_smoke_reports_both_modes() {
+    fn sweep_smoke_reports_all_modes() {
         let cfg = StoreSweepConfig {
             clients: vec![16],
             connections: 4,
             repeats: 1,
             rounds: 2,
+            replicas: 1,
         };
         let report = store_sweep(&cfg).unwrap();
         let row = report.row_values("n=16").expect("row");
@@ -313,6 +372,7 @@ mod tests {
         assert!(row[2] > 0.0, "serial p50 must be measured: {row:?}");
         assert!(row[3] > 0.0, "serial ops/s must be measured: {row:?}");
         assert_eq!(row[5], 4.0);
+        assert!(row[6] > 0.0, "replicated p50 must be measured: {row:?}");
     }
 
     #[test]

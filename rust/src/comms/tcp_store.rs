@@ -20,6 +20,9 @@
 //! configurable parallelism degree: `p = 1` is the serialized baseline
 //! of Fig. 10, `p > 1` is FlashRecovery's parallelized strategy.
 
+use super::replication::{
+    DedupMap, Replicator, StoreEndpoints, ROLE_PRIMARY, ROLE_REPLICA,
+};
 use super::wire::{
     read_frame, write_frame, Bytes, Request, Response, MAX_FRAME_BYTES,
 };
@@ -28,7 +31,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
@@ -130,6 +133,22 @@ struct Shared {
     /// stays a raw atomic rather than a registry gauge.
     free_workers: AtomicUsize,
     workers_spawned: Counter,
+    /// [`ROLE_PRIMARY`] (the backward-compatible default — a lone
+    /// server serves everything) or [`ROLE_REPLICA`] (mutations are
+    /// refused with `NotPrimary`; only `Replicate` frames from the
+    /// primary mutate state). Flipped by `Promote` / `set_replica`.
+    role: AtomicU8,
+    /// Highest replication log index applied on this node. On the
+    /// primary it advances as ops are logged; on a replica, as
+    /// `Replicate` frames apply. Discovery compares it (after the
+    /// epoch) to elect the most advanced replica.
+    applied: AtomicU64,
+    /// Exactly-once cache for `Dedup`-wrapped ops, replicated via
+    /// `DedupDone` log entries so replays are refused across failover.
+    dedup: Mutex<DedupMap>,
+    /// The primary's log shipper (None = un-replicated: the entire
+    /// replication path is skipped, zero added overhead).
+    repl: Mutex<Option<Arc<Replicator>>>,
 }
 
 impl Shared {
@@ -153,6 +172,10 @@ impl Shared {
             live_workers,
             free_workers: AtomicUsize::new(0),
             workers_spawned,
+            role: AtomicU8::new(ROLE_PRIMARY),
+            applied: AtomicU64::new(0),
+            dedup: Mutex::new(DedupMap::new()),
+            repl: Mutex::new(None),
         }
     }
 
@@ -294,6 +317,7 @@ impl TcpStoreServer {
     }
 
     /// Number of Hello handshakes seen (establishment bookkeeping).
+    #[deprecated(note = "use metrics_snapshot().counter(\"store.hellos\")")]
     pub fn hello_count(&self) -> u64 {
         self.shared.hellos.get()
     }
@@ -305,12 +329,14 @@ impl TcpStoreServer {
     }
 
     /// Number of keys currently stored (all stripes).
+    #[deprecated(note = "use metrics_snapshot().gauge(\"store.keys\")")]
     pub fn key_count(&self) -> usize {
         self.shared.stripes.iter().map(|s| lock(s).map.len()).sum()
     }
 
     /// Number of live barrier/arrive counters (pruned with the map's
     /// per-epoch keys on epoch advance).
+    #[deprecated(note = "use metrics_snapshot().gauge(\"store.counters\")")]
     pub fn counter_count(&self) -> usize {
         self.shared.stripes.iter().map(|s| lock(s).counters.len()).sum()
     }
@@ -341,12 +367,14 @@ impl TcpStoreServer {
 
     /// Logical requests served since start (batched sub-ops count
     /// individually).
+    #[deprecated(note = "use metrics_snapshot().counter(\"store.requests\")")]
     pub fn request_count(&self) -> u64 {
         self.shared.requests.get()
     }
 
     /// Wire frames read since start (one per round-trip; a `Batch` of
     /// k ops is one frame).
+    #[deprecated(note = "use metrics_snapshot().counter(\"store.frames\")")]
     pub fn frame_count(&self) -> u64 {
         self.shared.frames.get()
     }
@@ -355,11 +383,13 @@ impl TcpStoreServer {
     /// fence/shutdown releases excluded). With per-key parking, one
     /// `Set` contributes exactly its key's parked-waiter count — the
     /// thundering-herd regression metric.
+    #[deprecated(note = "use metrics_snapshot().counter(\"store.wakeups\")")]
     pub fn wake_count(&self) -> u64 {
         self.shared.wakeups.get()
     }
 
     /// Waiters currently parked on per-key slots (all stripes).
+    #[deprecated(note = "use metrics_snapshot().gauge(\"store.parked_waiters\")")]
     pub fn parked_waiters(&self) -> usize {
         self.shared
             .stripes
@@ -370,19 +400,55 @@ impl TcpStoreServer {
 
     /// Pool workers currently alive (== the connection-concurrency
     /// high-water mark, not the historical connection count).
+    #[deprecated(note = "use metrics_snapshot().gauge(\"store.live_workers\")")]
     pub fn live_workers(&self) -> usize {
         self.shared.live_workers.get().max(0) as usize
     }
 
     /// Pool workers ever spawned — stays near the peak concurrency
     /// under connection churn (thread reuse).
+    #[deprecated(note = "use metrics_snapshot().counter(\"store.workers_spawned\")")]
     pub fn workers_spawned(&self) -> u64 {
         self.shared.workers_spawned.get()
+    }
+
+    /// Demote this server to a log-shipping replica: it refuses
+    /// client mutations with `NotPrimary` and mutates only by
+    /// applying `Replicate` frames from the primary. Reads (`Get`/
+    /// `Count`/`Stats`) and discovery ops stay served.
+    pub fn set_replica(&self) {
+        self.shared.role.store(ROLE_REPLICA, Ordering::SeqCst);
+    }
+
+    /// Promote this server to primary of a plane whose replicas are
+    /// `peers` (empty slice: un-replicated — no shipper is started).
+    /// Idempotent: a second promote keeps the running replicator, so
+    /// racing discoverers cannot double-spawn shippers.
+    pub fn promote(&self, peers: &[SocketAddr]) {
+        promote_shared(&self.shared, peers);
+    }
+
+    /// This server as a single-node endpoint set — the bridge from
+    /// legacy single-address call sites onto the session API.
+    pub fn endpoints(&self) -> StoreEndpoints {
+        StoreEndpoints::one(self.addr)
+    }
+
+    /// Replication log index applied on this node (0 = nothing
+    /// logged yet).
+    pub fn applied_index(&self) -> u64 {
+        self.shared.applied.load(Ordering::SeqCst)
     }
 }
 
 impl Drop for TcpStoreServer {
     fn drop(&mut self) {
+        // Drain and stop the replication shipper first, so every
+        // entry this primary acked is on the wire to its replicas
+        // before the listener closes.
+        if let Some(r) = lock(&self.shared.repl).take() {
+            r.shutdown();
+        }
         self.stop.store(true, Ordering::Relaxed);
         // Wake every parked waiter so their pool workers can observe
         // stop; idle workers exit when the accept thread closes the
@@ -525,26 +591,336 @@ fn serve_connection(
     }
 }
 
+/// Per-frame entry point. Dispatch runs in [`handle_inner`]; this
+/// wrapper holds the frame's one quorum wait: after every op of the
+/// frame is applied and logged, block once until the *highest* index
+/// the frame enqueued is on a quorum of replicas (group commit —
+/// a k-op `Batch` pays one commit wait, not k).
 fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
-    if let Request::Batch(items) = req {
-        // Pipelined sequence: execute serially, stop at the first
-        // fence so a superseded prefix never commits its dependent
-        // tail (e.g. a survivor's arrive after its delta wait was
-        // fenced). Nesting is rejected at decode.
-        let mut out = Vec::with_capacity(items.len());
-        for item in items {
-            let resp = handle(shared, stop, item);
-            let fenced = matches!(resp, Response::EpochFenced { .. });
-            out.push(resp);
-            if fenced {
-                break;
+    let repl = lock(&shared.repl).clone();
+    let mut highest = 0u64;
+    let resp = handle_inner(shared, stop, repl.as_deref(), &mut highest, req);
+    if highest > 0 {
+        if let Some(r) = repl.as_deref() {
+            r.wait_committed(highest);
+        }
+    }
+    resp
+}
+
+/// Ops a replica serves directly: reads, discovery, and the
+/// replication protocol itself. Everything else answers `NotPrimary`
+/// so the client's session fails over.
+fn replica_serves(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Hello { .. }
+            | Request::Get { .. }
+            | Request::Count
+            | Request::Stats
+            | Request::Replicate { .. }
+            | Request::ReplStatus
+            | Request::Promote { .. }
+    )
+}
+
+fn handle_inner(
+    shared: &Shared,
+    stop: &AtomicBool,
+    repl: Option<&Replicator>,
+    highest: &mut u64,
+    req: Request,
+) -> Response {
+    if shared.role.load(Ordering::SeqCst) == ROLE_REPLICA && !replica_serves(&req) {
+        shared.requests.inc();
+        return Response::NotPrimary;
+    }
+    match req {
+        Request::Batch(items) => {
+            // Pipelined sequence: execute serially, stop at the first
+            // fence so a superseded prefix never commits its dependent
+            // tail (e.g. a survivor's arrive after its delta wait was
+            // fenced). Nesting is rejected at decode. A blocking
+            // sub-op released by the shutdown broadcast (`NotFound`
+            // under `stop`) also stops the batch: the dying server
+            // must not run the tail the wait was guarding — the
+            // client replays the rest against the new primary.
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                let blocking = item.is_blocking();
+                let resp = handle_inner(shared, stop, repl, highest, item);
+                let fenced = matches!(resp, Response::EpochFenced { .. });
+                let released = blocking
+                    && resp == Response::NotFound
+                    && stop.load(Ordering::Relaxed);
+                out.push(resp);
+                if fenced || released {
+                    break;
+                }
+            }
+            Response::Multi(out)
+        }
+        Request::Dedup { id, op } => {
+            handle_dedup(shared, stop, repl, highest, id, *op)
+        }
+        Request::Replicate { start_index, ops } => {
+            shared.requests.inc();
+            handle_replicate(shared, stop, start_index, ops)
+        }
+        Request::ReplStatus => {
+            shared.requests.inc();
+            repl_status_response(shared)
+        }
+        Request::Promote { peers } => {
+            shared.requests.inc();
+            let addrs: Vec<SocketAddr> =
+                peers.iter().filter_map(|p| p.parse().ok()).collect();
+            promote_shared(shared, &addrs);
+            Response::Ok
+        }
+        req if req.is_mutating() => {
+            shared.requests.inc();
+            apply_mutating(shared, stop, repl, highest, req)
+        }
+        req => {
+            shared.requests.inc();
+            apply_op(shared, stop, req)
+        }
+    }
+}
+
+/// Apply a mutating op and, when replicated, log it under the same
+/// lock that applied it (apply order == log order, even across racing
+/// connections). Conditional mutations (`AbortEpoch`,
+/// `AdvertiseRestore`) are logged only when they actually mutated.
+fn apply_mutating(
+    shared: &Shared,
+    stop: &AtomicBool,
+    repl: Option<&Replicator>,
+    highest: &mut u64,
+    req: Request,
+) -> Response {
+    match repl {
+        Some(r) => {
+            let (resp, idx) = r.apply_logged(|| {
+                let resp = apply_op(shared, stop, req.clone());
+                if loggable(&req, &resp) {
+                    (resp, vec![req])
+                } else {
+                    (resp, Vec::new())
+                }
+            });
+            if let Some(idx) = idx {
+                bump_applied(shared, highest, idx);
+            }
+            resp
+        }
+        None => apply_op(shared, stop, req),
+    }
+}
+
+/// Should this executed op enter the replication log? Unconditional
+/// mutations always do; conditional ones only when their response
+/// shows they fired.
+fn loggable(req: &Request, resp: &Response) -> bool {
+    match req {
+        Request::Set { .. }
+        | Request::Add { .. }
+        | Request::AdvanceEpoch { .. }
+        | Request::DelPrefix { .. }
+        | Request::Heartbeat { .. }
+        | Request::DedupDone { .. } => true,
+        Request::AbortEpoch { .. } => matches!(resp, Response::Counter(1)),
+        Request::AdvertiseRestore { .. } => matches!(resp, Response::Ok),
+        _ => false,
+    }
+}
+
+fn bump_applied(shared: &Shared, highest: &mut u64, idx: u64) {
+    shared.applied.fetch_max(idx, Ordering::SeqCst);
+    *highest = (*highest).max(idx);
+}
+
+/// A `Response` body (no length prefix) — what the dedup cache stores
+/// and `DedupDone` entries ship.
+fn encode_resp_body(resp: &Response) -> Vec<u8> {
+    let mut buf = Vec::new();
+    resp.encode_into(&mut buf);
+    buf.split_off(4)
+}
+
+/// Exactly-once envelope: a cached id answers from the dedup table
+/// without re-executing; a fresh id executes, then installs + logs
+/// the cached response *in the same log append* as its mutations, so
+/// a replica holds either none or all of {ops, done-marker} — a
+/// failed-over primary can never re-execute a half-replicated op.
+fn handle_dedup(
+    shared: &Shared,
+    stop: &AtomicBool,
+    repl: Option<&Replicator>,
+    highest: &mut u64,
+    id: u64,
+    op: Request,
+) -> Response {
+    if let Some(cached) = lock(&shared.dedup).get(id) {
+        return Response::decode(&cached).unwrap_or(Response::NotFound);
+    }
+    match op {
+        Request::Batch(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            let mut entries: Vec<Request> = Vec::new();
+            for item in items {
+                shared.requests.inc();
+                let blocking = item.is_blocking();
+                let resp = apply_op(shared, stop, item.clone());
+                if loggable(&item, &resp) {
+                    entries.push(item);
+                }
+                let fenced = matches!(resp, Response::EpochFenced { .. });
+                let released = blocking
+                    && resp == Response::NotFound
+                    && stop.load(Ordering::Relaxed);
+                out.push(resp);
+                if released {
+                    // Dying server: ship nothing, cache nothing. The
+                    // executed prefix dies with this primary (its
+                    // replicas never saw it), and the client replays
+                    // the whole batch — exactly once — on the
+                    // survivor.
+                    return Response::Multi(out);
+                }
+                if fenced {
+                    break;
+                }
+            }
+            let resp = Response::Multi(out);
+            let body = encode_resp_body(&resp);
+            lock(&shared.dedup).insert(id, body.clone());
+            entries.push(Request::DedupDone { id, resp: body });
+            if let Some(r) = repl {
+                if let Some(idx) = r.append(entries) {
+                    bump_applied(shared, highest, idx);
+                }
+            }
+            resp
+        }
+        single if single.is_blocking() => {
+            shared.requests.inc();
+            let resp = apply_op(shared, stop, single);
+            if resp == Response::NotFound && stop.load(Ordering::Relaxed) {
+                // shutdown release: uncached, the client replays fresh
+                return resp;
+            }
+            let body = encode_resp_body(&resp);
+            lock(&shared.dedup).insert(id, body.clone());
+            if let Some(r) = repl {
+                let done = Request::DedupDone { id, resp: body };
+                if let Some(idx) = r.append(vec![done]) {
+                    bump_applied(shared, highest, idx);
+                }
+            }
+            resp
+        }
+        single => {
+            shared.requests.inc();
+            match repl {
+                Some(r) => {
+                    let (resp, idx) = r.apply_logged(|| {
+                        let resp = apply_op(shared, stop, single.clone());
+                        let body = encode_resp_body(&resp);
+                        lock(&shared.dedup).insert(id, body.clone());
+                        let mut entries = Vec::new();
+                        if loggable(&single, &resp) {
+                            entries.push(single);
+                        }
+                        entries.push(Request::DedupDone { id, resp: body });
+                        (resp, entries)
+                    });
+                    if let Some(idx) = idx {
+                        bump_applied(shared, highest, idx);
+                    }
+                    resp
+                }
+                None => {
+                    let resp = apply_op(shared, stop, single);
+                    let body = encode_resp_body(&resp);
+                    lock(&shared.dedup).insert(id, body);
+                    resp
+                }
             }
         }
-        return Response::Multi(out);
     }
-    shared.requests.inc();
+}
+
+/// Replica side of log shipping: apply every not-yet-applied entry of
+/// a contiguous frame and ack the applied index. A frame that starts
+/// beyond `applied + 1` (a gap — this replica missed a frame) is
+/// refused with a short ack, which the primary treats as replica
+/// loss; already-applied prefixes (a re-ship) are skipped idempotently.
+fn handle_replicate(
+    shared: &Shared,
+    stop: &AtomicBool,
+    start_index: u64,
+    ops: Vec<Request>,
+) -> Response {
+    let applied = shared.applied.load(Ordering::SeqCst);
+    if start_index > applied + 1 {
+        return Response::Counter(applied as i64);
+    }
+    let mut idx = start_index;
+    for op in ops {
+        if idx > shared.applied.load(Ordering::SeqCst) {
+            if op.is_mutating() {
+                let _ = apply_op(shared, stop, op);
+            }
+            shared.applied.store(idx, Ordering::SeqCst);
+        }
+        idx += 1;
+    }
+    Response::Counter(shared.applied.load(Ordering::SeqCst) as i64)
+}
+
+/// `ReplStatus` payload: `role u8 | applied u64-le | epoch u64-le`.
+/// The epoch leads the election key — a replica behind on epoch can
+/// never be promoted over one that has seen the newer epoch.
+fn repl_status_response(shared: &Shared) -> Response {
+    let mut v = Vec::with_capacity(17);
+    v.push(shared.role.load(Ordering::SeqCst));
+    v.extend_from_slice(&shared.applied.load(Ordering::SeqCst).to_le_bytes());
+    v.extend_from_slice(&shared.epoch.load(Ordering::SeqCst).to_le_bytes());
+    Response::Value(v.into())
+}
+
+/// Flip to primary and (once) start the log shipper toward `peers`.
+/// Idempotent under racing `Promote`s: the first wins, later ones
+/// keep the running replicator.
+fn promote_shared(shared: &Shared, peers: &[SocketAddr]) {
+    shared.role.store(ROLE_PRIMARY, Ordering::SeqCst);
+    let mut g = lock(&shared.repl);
+    if g.is_none() && !peers.is_empty() {
+        let next = shared.applied.load(Ordering::SeqCst) + 1;
+        *g = Some(Replicator::start(peers, next));
+    }
+}
+
+/// Execute one non-container op against local state — the shared
+/// apply path for client-issued ops on the primary and `Replicate`d
+/// entries on replicas. Never logs; callers decide that.
+fn apply_op(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
     match req {
-        Request::Batch(_) => unreachable!("handled above"),
+        // containers and replication-protocol ops never reach the
+        // apply path (dispatched in handle_inner; rejected at decode
+        // inside Replicate frames) — answer benignly, never panic on
+        // a hostile frame
+        Request::Batch(_)
+        | Request::Dedup { .. }
+        | Request::Replicate { .. }
+        | Request::ReplStatus
+        | Request::Promote { .. } => Response::NotFound,
+        Request::DedupDone { id, resp } => {
+            lock(&shared.dedup).insert(id, resp);
+            Response::Ok
+        }
         Request::Hello { .. } => {
             shared.hellos.inc();
             Response::HelloAck
@@ -751,9 +1127,24 @@ pub struct TcpStoreClient {
 
 impl TcpStoreClient {
     pub fn connect(addr: SocketAddr) -> Result<Self> {
-        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))?;
+        Self::connect_with_timeout(addr, Duration::from_secs(10))
+    }
+
+    /// Connect with an explicit connect timeout — discovery probes
+    /// use a short one so a dead endpoint costs milliseconds, not the
+    /// 10s client default.
+    pub fn connect_with_timeout(addr: SocketAddr, timeout: Duration) -> Result<Self> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
         stream.set_nodelay(true).ok();
         Ok(TcpStoreClient { stream, ops: 0, trace_ctx: None })
+    }
+
+    /// Set (or clear) the stream's read timeout — the session layer
+    /// widens it around blocking waits and bounds it on replication
+    /// log connections.
+    pub(crate) fn set_read_window(&mut self, d: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(d)?;
+        Ok(())
     }
 
     /// Stamp (or clear) the trace context carried by this client's
@@ -796,14 +1187,7 @@ impl TcpStoreClient {
             return Ok(Vec::new());
         }
         let n = reqs.len();
-        let blocking = reqs.iter().any(|r| {
-            matches!(
-                r,
-                Request::Wait { .. }
-                    | Request::WaitEpoch { .. }
-                    | Request::ClaimRestore { .. }
-            )
-        });
+        let blocking = reqs.iter().any(Request::is_blocking);
         if blocking {
             // waits can exceed the default read path; use a long timeout
             self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
@@ -1074,7 +1458,7 @@ mod tests {
         let server = TcpStoreServer::start().unwrap();
         let (_elapsed, clients) = establish(server.addr(), 16, 4).unwrap();
         assert_eq!(clients.len(), 16);
-        assert_eq!(server.hello_count(), 16);
+        assert_eq!(server.metrics_snapshot().counter("store.hellos"), 16);
     }
 
     #[test]
@@ -1084,7 +1468,7 @@ mod tests {
         let (_t2, c2) = establish(server.addr(), 10, 10).unwrap();
         assert_eq!(c1.len(), 10);
         assert_eq!(c2.len(), 10);
-        assert_eq!(server.hello_count(), 20);
+        assert_eq!(server.metrics_snapshot().counter("store.hellos"), 20);
     }
 
     #[test]
@@ -1145,7 +1529,7 @@ mod tests {
         c.set("k", b"v").unwrap();
         c.get("k").unwrap();
         assert_eq!(c.ops_sent(), 3);
-        assert!(server.request_count() >= 3);
+        assert!(server.metrics_snapshot().counter("store.requests") >= 3);
     }
 
     #[test]
@@ -1167,9 +1551,10 @@ mod tests {
         assert_eq!(resps[3], Response::Ok);
         // one wire frame, four logical ops: pipelining amortises the
         // round-trip without changing message budgets
-        assert_eq!(server.frame_count(), 1);
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.counter("store.frames"), 1);
         assert_eq!(c.ops_sent(), 4);
-        assert_eq!(server.request_count(), 4);
+        assert_eq!(snap.counter("store.requests"), 4);
         assert_eq!(server.beats().len(), 1);
     }
 
@@ -1234,16 +1619,16 @@ mod tests {
             }));
         }
         let deadline = Instant::now() + Duration::from_secs(10);
-        while server.parked_waiters() < k {
+        while server.metrics_snapshot().gauge("store.parked_waiters") < k as i64 {
             assert!(Instant::now() < deadline, "waiters never parked");
             std::thread::sleep(Duration::from_millis(2));
         }
-        let wake0 = server.wake_count();
+        let wake0 = server.metrics_snapshot().counter("store.wakeups");
         let mut c = TcpStoreClient::connect(addr).unwrap();
         c.set("park/3", b"v3").unwrap();
         assert_eq!(&waiters.remove(3).join().unwrap()[..], b"v3");
         assert_eq!(
-            server.wake_count() - wake0,
+            server.metrics_snapshot().counter("store.wakeups") - wake0,
             1,
             "one publish must release exactly its own key's waiter"
         );
@@ -1254,7 +1639,7 @@ mod tests {
             w.join().unwrap();
         }
         assert_eq!(
-            server.wake_count() - wake0,
+            server.metrics_snapshot().counter("store.wakeups") - wake0,
             k as u64,
             "K publishes to K distinct keys must release exactly K waiters"
         );
@@ -1276,17 +1661,18 @@ mod tests {
             // let the worker observe the EOF and return to the pool
             std::thread::sleep(Duration::from_millis(2));
         }
+        let snap = server.metrics_snapshot();
         assert!(
-            server.live_workers() <= 8,
+            snap.gauge("store.live_workers") <= 8,
             "live workers must track peak concurrency, not churn: {}",
-            server.live_workers()
+            snap.gauge("store.live_workers")
         );
         assert!(
-            server.workers_spawned() <= 16,
+            snap.counter("store.workers_spawned") <= 16,
             "threads must be reused across churn: {} spawns for 50 connections",
-            server.workers_spawned()
+            snap.counter("store.workers_spawned")
         );
-        assert_eq!(server.key_count(), 1);
+        assert_eq!(snap.gauge("store.keys"), 1);
     }
 
     #[test]
@@ -1402,7 +1788,7 @@ mod tests {
         assert_eq!(c.get("pre").unwrap().as_deref(), Some(&b"survives"[..]));
         c.set("post", b"v").unwrap();
         assert_eq!(c.get("post").unwrap().as_deref(), Some(&b"v"[..]));
-        assert_eq!(server.key_count(), 2);
+        assert_eq!(server.metrics_snapshot().gauge("store.keys"), 2);
         // fenced waits cross the same stripes + parking slots
         c.advance_epoch(1).unwrap();
         assert_eq!(
@@ -1474,8 +1860,9 @@ mod tests {
         assert!(c.get("rdzv/3/delta").unwrap().is_some());
         assert!(c.get("rdzv/4/table").unwrap().is_some());
         assert!(c.get("ranktable/v1").unwrap().is_some());
-        assert_eq!(server.key_count(), 1 + 2 * 3);
-        assert_eq!(server.counter_count(), 2);
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.gauge("store.keys"), 1 + 2 * 3);
+        assert_eq!(snap.gauge("store.counters"), 2);
     }
 
     #[test]
@@ -1492,7 +1879,7 @@ mod tests {
             w.wait("late").unwrap()
         });
         let deadline = Instant::now() + Duration::from_secs(10);
-        while server.parked_waiters() < 1 {
+        while server.metrics_snapshot().gauge("store.parked_waiters") < 1 {
             assert!(Instant::now() < deadline, "waiter never parked");
             std::thread::sleep(Duration::from_millis(2));
         }
@@ -1501,8 +1888,11 @@ mod tests {
         assert!(snap.counter("store.frames") >= 3, "{snap:?}");
         assert_eq!(snap.gauge("store.keys"), 1, "{snap:?}");
         assert_eq!(snap.gauge("store.parked_waiters"), 1, "{snap:?}");
-        // the wire snapshot equals the in-process accessor view
-        assert_eq!(snap.counter("store.hellos"), server.hello_count());
+        // the wire snapshot equals the in-process snapshot view
+        assert_eq!(
+            snap.counter("store.hellos"),
+            server.metrics_snapshot().counter("store.hellos")
+        );
         c.set("late", b"v").unwrap();
         waiter.join().unwrap();
     }

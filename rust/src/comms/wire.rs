@@ -113,6 +113,32 @@ pub enum Request {
     /// metrics-registry snapshot -> Value(JSON bytes), readable
     /// mid-episode by any client (`telemetry::Snapshot::parse`).
     Stats,
+    /// replication log shipment, primary -> replica (DESIGN.md §13):
+    /// apply `ops` starting at log index `start_index` ->
+    /// Counter(replica's applied index). Entries are flat committed
+    /// mutations (plus `DedupDone` markers); `Batch`, `Dedup` and
+    /// nested `Replicate` are rejected at decode.
+    Replicate { start_index: u64, ops: Vec<Request> },
+    /// replication status probe -> Value(17 bytes: `role u8 |
+    /// applied-index u64-le | epoch u64-le`). The `StoreSession`
+    /// primary-discovery primitive — cheap enough to send to every
+    /// endpoint on (re)connect.
+    ReplStatus,
+    /// promote the receiving node to primary, shipping its log to the
+    /// given peer replica addresses from now on -> Ok. Idempotent on
+    /// an existing primary.
+    Promote { peers: Vec<String> },
+    /// exactly-once wrapper (client failover replay primitive):
+    /// execute `op` once and cache its encoded response under `id`; a
+    /// replayed `Dedup` with the same id returns the cached response
+    /// without re-executing -> the inner op's response. May wrap a
+    /// `Batch`; never wraps `Replicate`/`Dedup`/`DedupDone`.
+    Dedup { id: u64, op: Box<Request> },
+    /// log-only entry: a dedup-cached encoded response being
+    /// replicated so the cache survives failover. Never sent by
+    /// clients; a replica installs the cache entry instead of
+    /// re-executing anything -> Ok.
+    DedupDone { id: u64, resp: Vec<u8> },
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -129,6 +155,10 @@ pub enum Response {
     /// Per-op responses for a `Batch`; possibly shorter than the batch
     /// when an `EpochFenced` aborted the tail.
     Multi(Vec<Response>),
+    /// The receiving store node is a replica: mutating and blocking
+    /// ops must go to the primary. The `StoreSession` treats this as
+    /// a failover trigger — rediscover the primary and retry.
+    NotPrimary,
 }
 
 fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
@@ -187,7 +217,39 @@ impl Request {
             Request::DelPrefix { .. } => "DelPrefix",
             Request::Batch(_) => "Batch",
             Request::Stats => "Stats",
+            Request::Replicate { .. } => "Replicate",
+            Request::ReplStatus => "ReplStatus",
+            Request::Promote { .. } => "Promote",
+            Request::Dedup { .. } => "Dedup",
+            Request::DedupDone { .. } => "DedupDone",
         }
+    }
+
+    /// Ops that may park server-side until another client publishes
+    /// (or the epoch fence trips). Blocking ops are never shipped to
+    /// replicas and force a fresh replay after failover.
+    pub fn is_blocking(&self) -> bool {
+        matches!(
+            self,
+            Request::Wait { .. } | Request::WaitEpoch { .. } | Request::ClaimRestore { .. }
+        )
+    }
+
+    /// Ops that mutate replicated store state — the candidate set for
+    /// the primary's replication log. `Batch`/`Dedup` containers are
+    /// not themselves logged; their executed sub-ops are.
+    pub fn is_mutating(&self) -> bool {
+        matches!(
+            self,
+            Request::Set { .. }
+                | Request::Add { .. }
+                | Request::AdvanceEpoch { .. }
+                | Request::DelPrefix { .. }
+                | Request::Heartbeat { .. }
+                | Request::AbortEpoch { .. }
+                | Request::AdvertiseRestore { .. }
+                | Request::DedupDone { .. }
+        )
     }
 
     /// Append the opcode + payload *body* (no length prefix) to
@@ -269,6 +331,40 @@ impl Request {
                 }
             }
             Request::Stats => body.push(14),
+            Request::Replicate { start_index, ops } => {
+                body.push(15);
+                body.extend_from_slice(&start_index.to_le_bytes());
+                body.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+                for item in ops {
+                    let at = body.len();
+                    body.extend_from_slice(&[0u8; 4]);
+                    item.encode_body_into(body);
+                    let len = (body.len() - at - 4) as u32;
+                    body[at..at + 4].copy_from_slice(&len.to_le_bytes());
+                }
+            }
+            Request::ReplStatus => body.push(16),
+            Request::Promote { peers } => {
+                body.push(17);
+                body.extend_from_slice(&(peers.len() as u32).to_le_bytes());
+                for p in peers {
+                    put_bytes(body, p.as_bytes());
+                }
+            }
+            Request::Dedup { id, op } => {
+                body.push(18);
+                body.extend_from_slice(&id.to_le_bytes());
+                let at = body.len();
+                body.extend_from_slice(&[0u8; 4]);
+                op.encode_body_into(body);
+                let len = (body.len() - at - 4) as u32;
+                body[at..at + 4].copy_from_slice(&len.to_le_bytes());
+            }
+            Request::DedupDone { id, resp } => {
+                body.push(19);
+                body.extend_from_slice(&id.to_le_bytes());
+                put_bytes(body, resp);
+            }
         }
     }
 
@@ -373,14 +469,57 @@ impl Request {
                 let mut items = Vec::with_capacity(count.min(1024));
                 for _ in 0..count {
                     let sub = get_bytes(body, &mut pos)?;
-                    if sub.first() == Some(&13) {
-                        bail!("nested batch rejected");
+                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18) | Some(&19)) {
+                        bail!("nested batch/replication op rejected");
                     }
                     items.push(Request::decode(&sub)?);
                 }
                 Request::Batch(items)
             }
             Some(14) => Request::Stats,
+            Some(15) => {
+                let start_index = get_u64(body, &mut pos)?;
+                let count = get_u32(body, &mut pos)? as usize;
+                if count > MAX_BATCH_OPS {
+                    bail!("replicate too large: {count} ops");
+                }
+                let mut ops = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    let sub = get_bytes(body, &mut pos)?;
+                    // the log carries flat committed mutations (plus
+                    // DedupDone cache installs) — containers and Dedup
+                    // wrappers never appear as entries
+                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18)) {
+                        bail!("nested container rejected in replicate");
+                    }
+                    ops.push(Request::decode(&sub)?);
+                }
+                Request::Replicate { start_index, ops }
+            }
+            Some(16) => Request::ReplStatus,
+            Some(17) => {
+                let count = get_u32(body, &mut pos)? as usize;
+                if count > 64 {
+                    bail!("too many promote peers: {count}");
+                }
+                let mut peers = Vec::with_capacity(count);
+                for _ in 0..count {
+                    peers.push(get_string(body, &mut pos)?);
+                }
+                Request::Promote { peers }
+            }
+            Some(18) => {
+                let id = get_u64(body, &mut pos)?;
+                let sub = get_bytes(body, &mut pos)?;
+                if matches!(sub.first(), Some(&15) | Some(&18) | Some(&19)) {
+                    bail!("dedup may not wrap replication ops");
+                }
+                Request::Dedup { id, op: Box::new(Request::decode(&sub)?) }
+            }
+            Some(19) => {
+                let id = get_u64(body, &mut pos)?;
+                Request::DedupDone { id, resp: get_bytes(body, &mut pos)? }
+            }
             other => bail!("bad request opcode {other:?}"),
         };
         Ok((req, pos))
@@ -421,6 +560,7 @@ impl Response {
                     out[at..at + 4].copy_from_slice(&len.to_le_bytes());
                 }
             }
+            Response::NotPrimary => out.push(8),
         }
     }
 
@@ -486,6 +626,7 @@ impl Response {
                 }
                 Ok(Response::Multi(items))
             }
+            Some(8) => Ok(Response::NotPrimary),
             other => bail!("bad response opcode {other:?}"),
         }
     }
@@ -586,6 +727,32 @@ mod tests {
         });
         roundtrip_req(Request::DelPrefix { prefix: "rdzv/3/".into() });
         roundtrip_req(Request::Stats);
+        roundtrip_req(Request::ReplStatus);
+        roundtrip_req(Request::Promote {
+            peers: vec!["127.0.0.1:30001".into(), "127.0.0.1:30002".into()],
+        });
+        roundtrip_req(Request::Promote { peers: vec![] });
+        roundtrip_req(Request::Replicate {
+            start_index: 41,
+            ops: vec![
+                Request::Set { key: "k".into(), value: vec![1, 2] },
+                Request::Add { key: "rdzv/2/arrived".into(), delta: 1 },
+                Request::AdvanceEpoch { to: 3 },
+                Request::DedupDone { id: 9, resp: vec![0] },
+            ],
+        });
+        roundtrip_req(Request::Dedup {
+            id: u64::MAX,
+            op: Box::new(Request::Add { key: "ctr".into(), delta: 1 }),
+        });
+        roundtrip_req(Request::Dedup {
+            id: 7,
+            op: Box::new(Request::Batch(vec![
+                Request::WaitEpoch { key: "rdzv/1/delta".into(), epoch: 1 },
+                Request::Add { key: "rdzv/1/arrived".into(), delta: 1 },
+            ])),
+        });
+        roundtrip_req(Request::DedupDone { id: 3, resp: vec![3, 1, 0, 0, 0, 0, 0, 0, 0] });
     }
 
     #[test]
@@ -622,6 +789,17 @@ mod tests {
             Request::Add { key: "rdzv/2/arrived".into(), delta: 1 },
         ]));
         roundtrip_traced(Request::Stats);
+        roundtrip_traced(Request::ReplStatus);
+        roundtrip_traced(Request::Promote { peers: vec!["127.0.0.1:30001".into()] });
+        roundtrip_traced(Request::Replicate {
+            start_index: 5,
+            ops: vec![Request::Set { key: "k".into(), value: vec![1] }],
+        });
+        roundtrip_traced(Request::Dedup {
+            id: 11,
+            op: Box::new(Request::Add { key: "ctr".into(), delta: 2 }),
+        });
+        roundtrip_traced(Request::DedupDone { id: 11, resp: vec![0] });
     }
 
     #[test]
@@ -652,6 +830,7 @@ mod tests {
         roundtrip_resp(Response::CountIs(42));
         roundtrip_resp(Response::HelloAck);
         roundtrip_resp(Response::EpochFenced { current: 9 });
+        roundtrip_resp(Response::NotPrimary);
     }
 
     #[test]
@@ -680,6 +859,37 @@ mod tests {
         let multi = Response::Multi(vec![Response::Multi(vec![Response::Ok])]);
         let enc = multi.encode();
         assert!(Response::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn replication_ops_reject_bad_nesting() {
+        // the log never carries containers or Dedup wrappers
+        for bad in [
+            Request::Batch(vec![Request::Count]),
+            Request::Replicate { start_index: 1, ops: vec![] },
+            Request::Dedup { id: 1, op: Box::new(Request::Count) },
+        ] {
+            let enc = Request::Replicate { start_index: 1, ops: vec![bad] }.encode();
+            assert!(Request::decode(&enc[4..]).is_err());
+        }
+        // Dedup wraps client ops (incl. Batch), never replication ops
+        for bad in [
+            Request::Replicate { start_index: 1, ops: vec![] },
+            Request::Dedup { id: 2, op: Box::new(Request::Count) },
+            Request::DedupDone { id: 2, resp: vec![0] },
+        ] {
+            let enc = Request::Dedup { id: 1, op: Box::new(bad) }.encode();
+            assert!(Request::decode(&enc[4..]).is_err());
+        }
+        // batches never smuggle replication ops either
+        for bad in [
+            Request::Replicate { start_index: 1, ops: vec![] },
+            Request::Dedup { id: 1, op: Box::new(Request::Count) },
+            Request::DedupDone { id: 1, resp: vec![0] },
+        ] {
+            let enc = Request::Batch(vec![Request::Count, bad]).encode();
+            assert!(Request::decode(&enc[4..]).is_err());
+        }
     }
 
     #[test]

@@ -10,12 +10,12 @@
 use super::detection::{Detection, HeartbeatMonitor, LeaseConfig, LeaseMonitor};
 use super::events::{RecoveryRecord, RunReport, ShardRestoreStat};
 use super::ranktable::{RankEntry, Ranktable, SharedRanktable};
-use super::rendezvous::{rebuild_episode, EpisodeConfig};
-use super::restore::plan_shard_restore;
-use crate::checkpoint::CheckpointManager;
+use super::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
+use super::restore::{plan_shard_restore, restore_episode, RestoreOutcome, RestorePlan};
+use crate::checkpoint::{CheckpointManager, Snapshot};
 
-use crate::comms::state_stream::EpochFence;
-use crate::comms::tcp_store::TcpStoreServer;
+use crate::comms::replication::{ReplicaSet, StoreEndpoints, StoreSession};
+use crate::comms::state_stream::{EpochFence, StreamConfig};
 use crate::comms::{Collective, CollectiveError};
 use crate::config::{ParallelismConfig, RecoveryMode};
 use crate::runtime::ModelBundle;
@@ -70,6 +70,12 @@ pub struct ControllerConfig {
     /// drives restore *planning*: which surviving replica serves which
     /// lost rank, and when no replica survives (checkpoint fallback).
     pub zero_shards: usize,
+    /// Store replicas behind the coordination plane (DESIGN.md §13).
+    /// 0 = a plain un-replicated primary; 1–2 = every mutating store
+    /// op is quorum-acked onto that many standby replicas, and a
+    /// standby controller can adopt the lease table + in-flight
+    /// episode checkpoint after a primary crash.
+    pub store_replicas: usize,
 }
 
 impl ControllerConfig {
@@ -88,6 +94,7 @@ impl ControllerConfig {
             ranktable_path: None,
             rebuild_groups: true,
             zero_shards: 1,
+            store_replicas: 0,
         }
     }
 
@@ -124,6 +131,257 @@ impl ControllerConfig {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Replicated coordination state (DESIGN.md §13): what a standby
+// controller adopts after the primary controller dies.
+// ---------------------------------------------------------------------------
+
+/// Store key holding the serialized lease table (rank -> incarnation).
+pub const K_LEASES: &str = "ctl/leases";
+/// Store key holding the in-flight recovery episode checkpoint.
+pub const K_EPISODE: &str = "ctl/episode";
+
+/// Where a recovery episode was when its checkpoint was written.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EpisodePhase {
+    /// Failure detected; the fleet is parking, no epoch advanced yet.
+    Detection,
+    /// Replacements spawned; the rendezvous epoch is being rebuilt.
+    Rebuild,
+    /// Groups rebuilt; shard transfers are (or are about to be) in
+    /// flight at the checkpointed epoch.
+    Restore,
+}
+
+impl EpisodePhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EpisodePhase::Detection => "detection",
+            EpisodePhase::Rebuild => "rebuild",
+            EpisodePhase::Restore => "restore",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "detection" => Ok(EpisodePhase::Detection),
+            "rebuild" => Ok(EpisodePhase::Rebuild),
+            "restore" => Ok(EpisodePhase::Restore),
+            other => bail!("unknown episode phase {other:?}"),
+        }
+    }
+}
+
+/// The in-flight [`RecoveryRecord`] skeleton, persisted to the
+/// replicated store at each phase boundary of `flash_recover` and
+/// deleted when the episode completes. `key=value;` encoded so a
+/// standby built at a different version can still parse the fields it
+/// knows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpisodeCheckpoint {
+    pub phase: EpisodePhase,
+    /// Rendezvous epoch the episode targets (phase >= Rebuild).
+    pub epoch: u64,
+    pub dead: Vec<usize>,
+    /// Resume step from the restore plan (0 while unplanned).
+    pub resume_step: u64,
+    pub detection_s: f64,
+    pub rebuild_s: f64,
+}
+
+impl EpisodeCheckpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let dead: Vec<String> = self.dead.iter().map(|r| r.to_string()).collect();
+        format!(
+            "phase={};epoch={};dead={};resume_step={};detection_s={:.6};rebuild_s={:.6}",
+            self.phase.as_str(),
+            self.epoch,
+            dead.join(" "),
+            self.resume_step,
+            self.detection_s,
+            self.rebuild_s,
+        )
+        .into_bytes()
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes).context("episode checkpoint utf8")?;
+        let mut phase = None;
+        let mut epoch = 0u64;
+        let mut dead = Vec::new();
+        let mut resume_step = 0u64;
+        let mut detection_s = 0.0f64;
+        let mut rebuild_s = 0.0f64;
+        for kv in text.split(';') {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("episode checkpoint field {kv:?}"))?;
+            match k {
+                "phase" => phase = Some(EpisodePhase::parse(v)?),
+                "epoch" => epoch = v.parse().context("epoch")?,
+                "dead" => {
+                    dead = v
+                        .split_whitespace()
+                        .map(str::parse)
+                        .collect::<Result<_, _>>()
+                        .context("dead ranks")?
+                }
+                "resume_step" => resume_step = v.parse().context("resume_step")?,
+                "detection_s" => detection_s = v.parse().context("detection_s")?,
+                "rebuild_s" => rebuild_s = v.parse().context("rebuild_s")?,
+                _ => {} // forward-compatible: ignore unknown fields
+            }
+        }
+        Ok(EpisodeCheckpoint {
+            phase: phase.context("episode checkpoint missing phase")?,
+            epoch,
+            dead,
+            resume_step,
+            detection_s,
+            rebuild_s,
+        })
+    }
+}
+
+/// `rank:incarnation` pairs, comma-joined. Empty table -> empty value.
+pub fn encode_leases(leases: &[(usize, u64)]) -> Vec<u8> {
+    let parts: Vec<String> =
+        leases.iter().map(|(r, i)| format!("{r}:{i}")).collect();
+    parts.join(",").into_bytes()
+}
+
+pub fn parse_leases(bytes: &[u8]) -> Result<Vec<(usize, u64)>> {
+    let text = std::str::from_utf8(bytes).context("lease table utf8")?;
+    text.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|pair| {
+            let (r, i) = pair
+                .split_once(':')
+                .with_context(|| format!("lease entry {pair:?}"))?;
+            Ok((r.parse().context("rank")?, i.parse().context("incarnation")?))
+        })
+        .collect()
+}
+
+/// Everything a standby controller recovers from the replicated store.
+#[derive(Debug, Clone)]
+pub struct AdoptedState {
+    pub leases: Vec<(usize, u64)>,
+    pub episode: Option<EpisodeCheckpoint>,
+}
+
+/// Read the lease table and in-flight episode checkpoint back out of
+/// the (possibly failed-over) coordination plane.
+pub fn adopt_coordination_state(session: &mut StoreSession) -> Result<AdoptedState> {
+    let leases = match session.get(K_LEASES)? {
+        Some(b) => parse_leases(&b)?,
+        None => Vec::new(),
+    };
+    let episode = match session.get(K_EPISODE)? {
+        Some(b) => Some(EpisodeCheckpoint::parse(&b)?),
+        None => None,
+    };
+    Ok(AdoptedState { leases, episode })
+}
+
+/// A standby controller: connects to the surviving coordination plane
+/// (discovering the promoted primary if the original died), adopts the
+/// replicated lease table and episode checkpoint, and resumes a
+/// half-finished detection -> rebuild -> restore episode where the dead
+/// controller left off.
+pub struct StandbyController {
+    session: StoreSession,
+    pub adopted: AdoptedState,
+}
+
+impl StandbyController {
+    pub fn adopt(store: &StoreEndpoints) -> Result<StandbyController> {
+        let mut session = StoreSession::try_connect(store)?;
+        let adopted = adopt_coordination_state(&mut session)?;
+        Ok(StandbyController { session, adopted })
+    }
+
+    /// Re-open every adopted lease in a fresh monitor with a full
+    /// grace window: adopted workers are presumed alive until they
+    /// miss beats against the *new* controller's clock, so adoption
+    /// itself can never false-positive a detection.
+    pub fn resume_lease_monitor(&self, cfg: LeaseConfig) -> LeaseMonitor {
+        let mut m = LeaseMonitor::new(cfg);
+        let now = Instant::now();
+        for &(rank, inc) in &self.adopted.leases {
+            m.admit(rank, inc, now);
+        }
+        m
+    }
+
+    /// Finish the rendezvous the dead controller left mid-flight
+    /// (adopted phase <= Rebuild): re-drives the epoch-fenced episode
+    /// from the store's *current* epoch — safe because a half-applied
+    /// epoch advance is fenced, never resumable — then rolls the
+    /// checkpoint forward to the restore phase.
+    pub fn resume_rebuild(
+        &mut self,
+        table: &Ranktable,
+        par: &ParallelismConfig,
+        replacements: &[RankEntry],
+        opts: &EpisodeConfig,
+    ) -> Result<RebuildOutcome> {
+        let ck = self
+            .adopted
+            .episode
+            .clone()
+            .context("no adopted episode to resume")?;
+        if ck.phase > EpisodePhase::Rebuild {
+            bail!("episode already past rebuild (phase {:?})", ck.phase);
+        }
+        let from = self.session.stats()?.gauge("store.epoch").max(0) as u64;
+        let eps = self.session.endpoints().clone();
+        let out = rebuild_episode(&eps, table, par, &ck.dead, replacements, from, opts)?;
+        let next = EpisodeCheckpoint {
+            phase: EpisodePhase::Restore,
+            epoch: out.epoch,
+            ..ck
+        };
+        self.checkpoint(&next)?;
+        self.adopted.episode = Some(next);
+        Ok(out)
+    }
+
+    /// Finish the shard-restore leg at the adopted epoch, then clear
+    /// the episode checkpoint — the episode is over.
+    pub fn resume_restore(
+        &mut self,
+        plan: &RestorePlan,
+        states: &std::collections::BTreeMap<usize, Snapshot>,
+        fence: &EpochFence,
+        stream: &StreamConfig,
+    ) -> Result<RestoreOutcome> {
+        let epoch = self
+            .adopted
+            .episode
+            .as_ref()
+            .context("no adopted episode to resume")?
+            .epoch;
+        let eps = self.session.endpoints().clone();
+        let out = restore_episode(&eps, plan, states, epoch, fence, stream)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.clear_episode()?;
+        Ok(out)
+    }
+
+    /// Overwrite the replicated episode checkpoint.
+    pub fn checkpoint(&mut self, ck: &EpisodeCheckpoint) -> Result<()> {
+        self.session.set(K_EPISODE, &ck.encode())
+    }
+
+    /// Delete the replicated episode checkpoint (episode complete).
+    pub fn clear_episode(&mut self) -> Result<()> {
+        self.session.del_prefix(K_EPISODE)?;
+        self.adopted.episode = None;
+        Ok(())
+    }
+}
+
 struct WorkerHandle {
     #[allow(dead_code)]
     rank: usize,
@@ -153,11 +411,16 @@ pub struct Controller {
     workers: BTreeMap<usize, WorkerHandle>,
     ranktable: Ranktable,
     shared_rt: Option<SharedRanktable>,
-    /// Live TCP plane for group reconstruction, heartbeats, and state
-    /// discovery; `None` when disabled or the local bind failed
-    /// (recovery then degrades to in-place ranktable substitution and
-    /// board-scan detection).
-    rebuild_plane: Option<TcpStoreServer>,
+    /// Live coordination plane for group reconstruction, heartbeats,
+    /// and state discovery — a primary store plus
+    /// `cfg.store_replicas` quorum-acked replicas (DESIGN.md §13);
+    /// `None` when disabled or the local bind failed (recovery then
+    /// degrades to in-place ranktable substitution and board-scan
+    /// detection).
+    rebuild_plane: Option<ReplicaSet>,
+    /// Controller's own session onto the plane, used to persist the
+    /// lease table and episode checkpoints a standby would adopt.
+    ctl: Option<StoreSession>,
     /// Wire-plane detection over leased heartbeats (DESIGN.md §10);
     /// present exactly when `rebuild_plane` is.
     lease: Option<LeaseMonitor>,
@@ -201,10 +464,11 @@ impl Controller {
         // Vanilla recovery re-establishes everything from scratch and
         // never drives an episode — don't bind a listener for it.
         let rebuild_plane = if cfg.rebuild_groups && cfg.mode == RecoveryMode::Flash {
-            TcpStoreServer::start().ok()
+            ReplicaSet::start(cfg.store_replicas).ok()
         } else {
             None
         };
+        let ctl = rebuild_plane.as_ref().and_then(|p| p.session().ok());
         let lease = rebuild_plane.as_ref().map(|_| {
             LeaseMonitor::new(LeaseConfig {
                 interval: hb_emit_interval(&cfg),
@@ -227,6 +491,7 @@ impl Controller {
             ranktable,
             shared_rt,
             rebuild_plane,
+            ctl,
             lease,
             beat_scratch: Vec::new(),
             rebuild_epoch: 0,
@@ -298,7 +563,7 @@ impl Controller {
                     rank,
                     board.clone(),
                     HeartbeatCfg {
-                        store: server.addr(),
+                        store: server.endpoints(),
                         interval: hb_emit_interval(&self.cfg),
                         incarnation: inc,
                     },
@@ -324,7 +589,49 @@ impl Controller {
                 let _ = h.join();
             }
         }
+        self.persist_leases();
         Ok(())
+    }
+
+    /// Replicate the live lease table (rank -> incarnation) so a
+    /// standby controller can adopt it after a primary-controller
+    /// crash. Best-effort: a plane hiccup degrades adoption fidelity,
+    /// never the training run.
+    fn persist_leases(&mut self) {
+        if self.ctl.is_none() {
+            return;
+        }
+        let leases: Vec<(usize, u64)> = self
+            .workers
+            .keys()
+            .copied()
+            .filter(|r| !self.stopped.contains_key(r))
+            .filter_map(|r| Some((r, self.monitor.incarnation_of(r)?)))
+            .collect();
+        let encoded = encode_leases(&leases);
+        if let Some(ctl) = self.ctl.as_mut() {
+            if let Err(e) = ctl.set(K_LEASES, &encoded) {
+                log::warn("controller", || format!("lease persist failed: {e}"));
+            }
+        }
+    }
+
+    /// Replicate an episode checkpoint at a phase boundary.
+    fn persist_episode(&mut self, ck: &EpisodeCheckpoint) {
+        if let Some(ctl) = self.ctl.as_mut() {
+            if let Err(e) = ctl.set(K_EPISODE, &ck.encode()) {
+                log::warn("controller", || {
+                    format!("episode checkpoint persist failed: {e}")
+                });
+            }
+        }
+    }
+
+    /// Drop the episode checkpoint — the episode completed.
+    fn clear_episode(&mut self) {
+        if let Some(ctl) = self.ctl.as_mut() {
+            let _ = ctl.del_prefix(K_EPISODE);
+        }
     }
 
     fn publish_ranktable(&self) -> Result<()> {
@@ -447,7 +754,8 @@ impl Controller {
     /// detections — lease expiries, pushed device codes, and step-tag
     /// stalls the board scan cannot see.
     fn wire_scan(&mut self) -> Vec<Detection> {
-        let (lease, server) = match (self.lease.as_mut(), self.rebuild_plane.as_ref()) {
+        let primary = self.rebuild_plane.as_ref().and_then(|p| p.primary_server());
+        let (lease, server) = match (self.lease.as_mut(), primary) {
             (Some(lease), Some(server)) => (lease, server),
             _ => return Vec::new(),
         };
@@ -478,6 +786,7 @@ impl Controller {
                 if let Some(lease) = self.lease.as_mut() {
                     lease.evict(rank);
                 }
+                self.persist_leases();
             }
             WorkerEvent::CheckpointTaken { k0_s, .. } => {
                 self.report.checkpoints_taken += 1;
@@ -559,6 +868,18 @@ impl Controller {
                 .unwrap_or(0.0)
         });
 
+        // Episode checkpoint (DESIGN.md §13): replicate the in-flight
+        // RecoveryRecord skeleton at each phase boundary so a standby
+        // controller can adopt and resume a half-finished episode.
+        self.persist_episode(&EpisodeCheckpoint {
+            phase: EpisodePhase::Detection,
+            epoch: self.rebuild_epoch + 1,
+            dead: dead.clone(),
+            resume_step: 0,
+            detection_s,
+            rebuild_s: 0.0,
+        });
+
         // 1. stop/clean/reset: poison the collective so survivors park.
         self.collective.poison();
 
@@ -598,6 +919,14 @@ impl Controller {
         if !plan.replica_feasible() {
             return self.vanilla_recover(detections, dead);
         }
+        self.persist_episode(&EpisodeCheckpoint {
+            phase: EpisodePhase::Rebuild,
+            epoch: self.rebuild_epoch + 1,
+            dead: dead.clone(),
+            resume_step,
+            detection_s,
+            rebuild_s: 0.0,
+        });
 
         // 3. limited recreation: spawn replacements for failed ranks
         // only. A replacement inherits its rank's next scripted failure
@@ -628,7 +957,7 @@ impl Controller {
         let mut rebuild_s = 0.0;
         if let Some(server) = &self.rebuild_plane {
             let outcome = rebuild_episode(
-                server,
+                &server.endpoints(),
                 &self.ranktable,
                 &par,
                 &dead,
@@ -650,6 +979,14 @@ impl Controller {
         }
         span_rebuild.set_detail(format!("epoch={}", self.rebuild_epoch));
         span_rebuild.end();
+        self.persist_episode(&EpisodeCheckpoint {
+            phase: EpisodePhase::Restore,
+            epoch: self.rebuild_epoch,
+            dead: dead.clone(),
+            resume_step,
+            detection_s,
+            rebuild_s,
+        });
         self.publish_ranktable()?;
         let dead_replacements = self.await_parked(&dead, Duration::from_secs(120))?;
         if !dead_replacements.is_empty() {
@@ -749,6 +1086,8 @@ impl Controller {
                 }
             }
         }
+        self.persist_leases();
+        self.clear_episode();
 
         let restart_s = t_aware.elapsed().as_secs_f64();
         episode.set_detail(format!("ranks={dead:?} resume_step={resume_step}"));
@@ -902,6 +1241,7 @@ impl Controller {
         }
         self.publish_ranktable()?;
 
+        self.clear_episode();
         let restart_s = t_restart.elapsed().as_secs_f64();
         global().inc("controller.vanilla_recoveries");
         log::info("controller", || {
@@ -954,5 +1294,146 @@ impl Controller {
                 let _ = h.join();
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::restore::synthetic_snapshot;
+
+    #[test]
+    fn episode_checkpoint_roundtrip() {
+        let ck = EpisodeCheckpoint {
+            phase: EpisodePhase::Rebuild,
+            epoch: 4,
+            dead: vec![1, 3, 7],
+            resume_step: 9,
+            detection_s: 0.25,
+            rebuild_s: 0.125,
+        };
+        assert_eq!(EpisodeCheckpoint::parse(&ck.encode()).unwrap(), ck);
+        // empty dead set and zero timings survive too
+        let empty = EpisodeCheckpoint {
+            phase: EpisodePhase::Detection,
+            epoch: 0,
+            dead: vec![],
+            resume_step: 0,
+            detection_s: 0.0,
+            rebuild_s: 0.0,
+        };
+        assert_eq!(EpisodeCheckpoint::parse(&empty.encode()).unwrap(), empty);
+        assert!(EpisodeCheckpoint::parse(b"phase=warp;epoch=1").is_err());
+        assert!(EpisodeCheckpoint::parse(b"epoch=1").is_err(), "phase required");
+    }
+
+    #[test]
+    fn lease_table_roundtrip() {
+        let leases = vec![(0usize, 1u64), (2, 1), (4, 3)];
+        assert_eq!(parse_leases(&encode_leases(&leases)).unwrap(), leases);
+        assert_eq!(parse_leases(&encode_leases(&[])).unwrap(), Vec::new());
+        assert!(parse_leases(b"0:1,borked").is_err());
+    }
+
+    #[test]
+    fn standby_adopts_replicated_state_after_primary_crash() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        let ck = EpisodeCheckpoint {
+            phase: EpisodePhase::Restore,
+            epoch: 4,
+            dead: vec![1, 3],
+            resume_step: 9,
+            detection_s: 0.25,
+            rebuild_s: 0.125,
+        };
+        s.set(K_EPISODE, &ck.encode()).unwrap();
+        s.set(K_LEASES, &encode_leases(&[(0, 1), (2, 1), (4, 2)])).unwrap();
+        let eps = set.endpoints();
+        set.kill_primary();
+
+        let standby = StandbyController::adopt(&eps).unwrap();
+        assert_eq!(standby.adopted.leases, vec![(0, 1), (2, 1), (4, 2)]);
+        assert_eq!(standby.adopted.episode, Some(ck));
+        // adopted workers get a fresh grace window: no instant expiry
+        let mut monitor = standby.resume_lease_monitor(LeaseConfig {
+            interval: Duration::from_millis(5),
+            lease_misses: 3,
+            stall_after: Duration::from_secs(10),
+            stall_margin: 2,
+        });
+        assert!(monitor.scan(Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn standby_resumes_half_finished_episode() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        // the dying controller got as far as planning (phase=Rebuild)
+        let ck = EpisodeCheckpoint {
+            phase: EpisodePhase::Rebuild,
+            epoch: 1,
+            dead: vec![1],
+            resume_step: 5,
+            detection_s: 0.1,
+            rebuild_s: 0.0,
+        };
+        s.set(K_EPISODE, &ck.encode()).unwrap();
+        let eps = set.endpoints();
+        set.kill_primary();
+
+        let mut standby = StandbyController::adopt(&eps).unwrap();
+        let par = ParallelismConfig::dp(4);
+        let table = Ranktable::new(
+            (0..4)
+                .map(|rank| RankEntry {
+                    rank,
+                    node: rank,
+                    device: 0,
+                    addr: format!("10.0.0.{rank}:2900"),
+                })
+                .collect(),
+        );
+        let replacement = RankEntry {
+            rank: 1,
+            node: 100,
+            device: 0,
+            addr: "10.9.0.1:2900".into(),
+        };
+        let out = standby
+            .resume_rebuild(
+                &table,
+                &par,
+                std::slice::from_ref(&replacement),
+                &EpisodeConfig {
+                    live_survivors: 3,
+                    join_deadline: Duration::from_secs(30),
+                },
+            )
+            .unwrap();
+        assert_eq!(out.epoch, 1, "resumes the adopted episode's target epoch");
+        assert_eq!(out.table.entries[1], replacement);
+        let rolled = standby.adopted.episode.clone().unwrap();
+        assert_eq!(rolled.phase, EpisodePhase::Restore);
+        assert_eq!(rolled.epoch, 1);
+
+        // restore leg: bit-exact state lands on the lost rank
+        let par2 = ParallelismConfig::dp(2);
+        let plan = plan_shard_restore(&par2, &[(1, 5)], &[0]);
+        let states: BTreeMap<usize, Snapshot> =
+            [(1usize, synthetic_snapshot(5, 300))].into_iter().collect();
+        let fence = EpochFence::new(rolled.epoch);
+        let out2 = standby
+            .resume_restore(&plan, &states, &fence, &StreamConfig::default())
+            .unwrap();
+        assert_eq!(
+            out2.restored[&0].content_hash(),
+            states[&1].content_hash(),
+            "restore must be bit-exact after controller failover"
+        );
+        // episode checkpoint cleared on completion — visible to peers
+        assert!(standby.adopted.episode.is_none());
+        let mut reader = StoreSession::try_connect(&eps).unwrap();
+        assert_eq!(reader.get(K_EPISODE).unwrap(), None);
     }
 }

@@ -533,7 +533,7 @@ pub fn detection_sweep(cfg: &DetectionSweepConfig) -> Result<BenchReport> {
             stall_margin: 2,
         };
         let server = TcpStoreServer::start()?;
-        let addr = server.addr();
+        let eps = server.endpoints();
         let mut mon = LeaseMonitor::new(lease_cfg);
         let t_admit = Instant::now();
         for r in 0..n {
@@ -562,14 +562,18 @@ pub fn detection_sweep(cfg: &DetectionSweepConfig) -> Result<BenchReport> {
                 .collect();
             emitters.push(spawn_node_heartbeat(
                 members,
-                NodeAgentCfg { store: addr, interval: cfg.interval },
+                NodeAgentCfg { store: eps.clone(), interval: cfg.interval },
             ));
         } else {
             for &r in &sample {
                 emitters.push(spawn_heartbeat(
                     r,
                     boards[&r].clone(),
-                    HeartbeatCfg { store: addr, interval: cfg.interval, incarnation: 1 },
+                    HeartbeatCfg {
+                        store: eps.clone(),
+                        interval: cfg.interval,
+                        incarnation: 1,
+                    },
                 ));
             }
         }
@@ -624,7 +628,7 @@ pub fn detection_sweep(cfg: &DetectionSweepConfig) -> Result<BenchReport> {
             emitters.push(spawn_heartbeat(
                 victim,
                 b.clone(),
-                HeartbeatCfg { store: addr, interval: cfg.interval, incarnation },
+                HeartbeatCfg { store: eps.clone(), interval: cfg.interval, incarnation },
             ));
             boards.insert(victim, b);
             mon.admit(victim, incarnation, Instant::now());

@@ -27,7 +27,11 @@ pub mod rendezvous;
 pub mod restore;
 pub mod step_tag;
 
-pub use controller::{Controller, ControllerConfig};
+pub use controller::{
+    adopt_coordination_state, encode_leases, parse_leases, AdoptedState, Controller,
+    ControllerConfig, EpisodeCheckpoint, EpisodePhase, StandbyController, K_EPISODE,
+    K_LEASES,
+};
 pub use detection::{
     detection_sweep, Detection, DetectionPath, DetectionSweepConfig,
     HeartbeatMonitor, LeaseConfig, LeaseMonitor,

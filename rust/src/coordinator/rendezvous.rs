@@ -21,7 +21,8 @@
 
 use super::ranktable::{RankEntry, Ranktable};
 use crate::comms::group::{GroupSet, RekeyStats};
-use crate::comms::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
+use crate::comms::replication::{StoreEndpoints, StoreSession};
+use crate::comms::tcp_store::{FencedWait, TcpStoreServer};
 use crate::comms::wire::{Bytes, Request, Response};
 use crate::config::ParallelismConfig;
 use crate::metrics::bench::BenchReport;
@@ -29,7 +30,6 @@ use crate::metrics::Histogram;
 use crate::telemetry::log;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
-use std::net::SocketAddr;
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
@@ -174,7 +174,7 @@ impl EpochRecord {
 /// a supervised-barrier abort releases arrived participants with a
 /// retryable [`EpochAborted`] instead of a 300s socket-timeout hang.
 fn release_barrier(
-    client: &mut TcpStoreClient,
+    client: &mut StoreSession,
     epoch: u64,
     n: i64,
     participants: usize,
@@ -191,7 +191,7 @@ fn release_barrier(
 /// pipeline the arrive into their delta batch instead; this is the
 /// replacement path's tail.
 fn arrive_and_release(
-    client: &mut TcpStoreClient,
+    client: &mut StoreSession,
     epoch: u64,
     participants: usize,
 ) -> Result<()> {
@@ -210,10 +210,11 @@ pub struct RejoinOutcome {
     pub epoch: u64,
 }
 
-/// A node's persistent rendezvous state: store connection, cached
+/// A node's persistent rendezvous state: failover-transparent store
+/// session (over the full coordination-plane endpoint set), cached
 /// ranktable, and its own three communication groups.
 pub struct NodeSession {
-    client: TcpStoreClient,
+    client: StoreSession,
     pub rank: usize,
     pub epoch: u64,
     pub table: Ranktable,
@@ -223,13 +224,13 @@ pub struct NodeSession {
 impl NodeSession {
     /// Establish a surviving node's session from its cached state.
     pub fn start(
-        addr: SocketAddr,
+        store: StoreEndpoints,
         rank: usize,
         table: Ranktable,
         cfg: &ParallelismConfig,
         epoch: u64,
     ) -> Result<NodeSession> {
-        let mut client = TcpStoreClient::connect(addr)?;
+        let mut client = StoreSession::connect(store)?;
         client.hello(rank as u64)?;
         let groups = GroupSet::derive_for(&table, cfg, epoch, rank)?;
         Ok(NodeSession { client, rank, epoch, table, groups })
@@ -332,12 +333,12 @@ impl NodeSession {
 /// batch, arrive, release). Returns the session and the store
 /// messages it cost.
 pub fn replacement_join(
-    addr: SocketAddr,
+    store: StoreEndpoints,
     target: u64,
     entry: RankEntry,
     cfg: &ParallelismConfig,
 ) -> Result<(NodeSession, u64)> {
-    let mut client = TcpStoreClient::connect(addr)?;
+    let mut client = StoreSession::connect(store)?;
     client.hello(entry.rank as u64)?;
     let mut resps = client
         .batch(vec![
@@ -376,7 +377,7 @@ pub struct CoordStats {
 /// the replacement registrations, publish the delta + binary table,
 /// and wait for the arrive-barrier release. O(k) messages.
 pub fn coordinate(
-    client: &mut TcpStoreClient,
+    client: &mut StoreSession,
     table: &mut Ranktable,
     failed: &[usize],
     target: u64,
@@ -423,11 +424,11 @@ pub fn coordinate(
 /// join harvest, delta chase) is released promptly with
 /// [`EpochAborted`]. The tombstoned epoch `target + 1` must not be
 /// reused — retries go to `target + 2` (i.e. `from_epoch = target + 1`).
-fn abort_epoch(addr: SocketAddr, target: u64) {
+fn abort_epoch(store: &StoreEndpoints, target: u64) {
     log::warn("rendezvous", || {
         format!("aborting epoch {target} (supervised barrier)")
     });
-    if let Ok(mut c) = TcpStoreClient::connect(addr) {
+    if let Ok(mut c) = StoreSession::try_connect(store) {
         let _ = c.abort_epoch_unless(
             &k_go(target),
             &k_delta(target + 1),
@@ -442,7 +443,7 @@ fn abort_epoch(addr: SocketAddr, target: u64) {
 /// returned sender (or drop it after a successful episode) to stand
 /// the watchdog down.
 fn supervise_barrier(
-    addr: SocketAddr,
+    store: StoreEndpoints,
     target: u64,
     deadline: Duration,
 ) -> (std::sync::mpsc::Sender<()>, std::thread::JoinHandle<()>) {
@@ -456,7 +457,7 @@ fn supervise_barrier(
         // participant died before arriving (DESIGN.md §8). The abort
         // itself re-checks the release key atomically, so a barrier
         // that released at the last instant is left untouched.
-        abort_epoch(addr, target);
+        abort_epoch(&store, target);
     });
     (tx, handle)
 }
@@ -519,10 +520,13 @@ fn sample_stride(ranks: &[usize], cap: usize) -> Vec<usize> {
     (0..cap).map(|i| ranks[(i as f64 * step) as usize]).collect()
 }
 
-/// Drive one rebuild episode end to end over a live store: surviving
-/// nodes (sampled), replacement joins, and the coordinator, each as a
-/// real TCP client. Returns once every participant has converged on
-/// the new table and epoch.
+/// Drive one rebuild episode end to end over a live coordination
+/// plane (the full `StoreEndpoints` set — every participant is a
+/// failover-transparent [`StoreSession`], so a primary crash
+/// mid-episode re-parks waits on the promoted replica instead of
+/// failing the episode): surviving nodes (sampled), replacement
+/// joins, and the coordinator, each as a real TCP client. Returns
+/// once every participant has converged on the new table and epoch.
 ///
 /// Failure semantics: the barrier is *supervised* — an agent that dies
 /// before arriving trips the watchdog at `opts.join_deadline`, the
@@ -536,7 +540,7 @@ fn sample_stride(ranks: &[usize], cap: usize) -> Vec<usize> {
 /// key count stays bounded by two epochs' worth across arbitrarily
 /// many recoveries (the `DelPrefix` wire op covers ad-hoc pruning).
 pub fn rebuild_episode(
-    server: &TcpStoreServer,
+    store: &StoreEndpoints,
     table: &Ranktable,
     cfg: &ParallelismConfig,
     failed: &[usize],
@@ -561,7 +565,6 @@ pub fn rebuild_episode(
         bail!("table has {} entries, topology world is {world}", table.entries.len());
     }
     let target = from_epoch + 1;
-    let addr = server.addr();
     log::info("rendezvous", || {
         format!(
             "rebuild episode: epoch {target}, {} failed, world {world}",
@@ -576,9 +579,15 @@ pub fn rebuild_episode(
     let sample = sample_stride(&survivors, opts.live_survivors);
     let mut sessions = Vec::with_capacity(sample.len());
     for &rank in &sample {
-        sessions.push(NodeSession::start(addr, rank, table.clone(), cfg, from_epoch)?);
+        sessions.push(NodeSession::start(
+            store.clone(),
+            rank,
+            table.clone(),
+            cfg,
+            from_epoch,
+        )?);
     }
-    let mut coord = TcpStoreClient::connect(addr)?;
+    let mut coord = StoreSession::connect(store.clone())?;
     coord.hello(u64::MAX)?;
     let participants = sample.len() + replacements.len();
 
@@ -586,7 +595,7 @@ pub fn rebuild_episode(
     // Supervised barrier (DESIGN.md §8): if any participant dies
     // before arriving, the watchdog fences the epoch at the deadline
     // and every blocked agent returns EpochAborted instead of hanging.
-    let (watch_tx, watchdog) = supervise_barrier(addr, target, opts.join_deadline);
+    let (watch_tx, watchdog) = supervise_barrier(store.clone(), target, opts.join_deadline);
     let mut survivor_threads = Vec::with_capacity(sessions.len());
     for mut s in sessions {
         let cfg = cfg.clone();
@@ -600,8 +609,9 @@ pub fn rebuild_episode(
     let mut repl_threads = Vec::with_capacity(replacements.len());
     for entry in replacements.iter().cloned() {
         let cfg = cfg.clone();
+        let store = store.clone();
         repl_threads.push(std::thread::spawn(move || {
-            replacement_join(addr, target, entry, &cfg)
+            replacement_join(store, target, entry, &cfg)
         }));
     }
     let mut coord_table = table.clone();
@@ -609,7 +619,7 @@ pub fn rebuild_episode(
     if coord_res.is_err() {
         // Release every blocked agent promptly (idempotent when the
         // watchdog already fired), then collect them below.
-        abort_epoch(addr, target);
+        abort_epoch(store, target);
     }
     let _ = watch_tx.send(());
     let _ = watchdog.join();
@@ -766,7 +776,7 @@ pub fn rebuild_sweep(cfg: &SweepConfig) -> Result<BenchReport> {
                 })
                 .collect();
             let out = rebuild_episode(
-                &server,
+                &server.endpoints(),
                 &table,
                 &par,
                 &failed,
@@ -856,7 +866,7 @@ mod tests {
         let server = TcpStoreServer::start().unwrap();
         let t = table(8);
         let out = rebuild_episode(
-            &server,
+            &server.endpoints(),
             &t,
             &cfg,
             &[3],
@@ -889,7 +899,7 @@ mod tests {
         let mut epoch = 0;
         for i in 0..3 {
             let out = rebuild_episode(
-                &server,
+                &server.endpoints(),
                 &t,
                 &cfg,
                 &[1],
@@ -918,10 +928,10 @@ mod tests {
         let server = TcpStoreServer::start().unwrap();
         let mut t = table(4);
         let mut epoch = 0;
-        let mut count_after_two = 0;
+        let mut count_after_two = 0i64;
         for i in 0..10 {
             let out = rebuild_episode(
-                &server,
+                &server.endpoints(),
                 &t,
                 &cfg,
                 &[1],
@@ -933,22 +943,23 @@ mod tests {
             epoch = out.epoch;
             t = out.table;
             if i == 1 {
-                count_after_two = server.key_count();
+                count_after_two = server.metrics_snapshot().gauge("store.keys");
             }
         }
         assert_eq!(epoch, 10);
         // keys for at most epochs {e-1, e}: 4 map keys each (delta,
         // table, join/1, go) -> hard bound 8, and no growth vs run #2
+        let snap = server.metrics_snapshot();
         assert!(
-            server.key_count() <= count_after_two.max(8),
+            snap.gauge("store.keys") <= count_after_two.max(8),
             "store leaked: {} keys after 10 episodes vs {} after 2",
-            server.key_count(),
+            snap.gauge("store.keys"),
             count_after_two
         );
         assert!(
-            server.counter_count() <= 2,
+            snap.gauge("store.counters") <= 2,
             "arrive counters leaked: {}",
-            server.counter_count()
+            snap.gauge("store.counters")
         );
     }
 
@@ -960,14 +971,13 @@ mod tests {
         // gap, and resyncs from the binary table — without hanging.
         let cfg = ParallelismConfig::dp(4);
         let server = TcpStoreServer::start().unwrap();
-        let addr = server.addr();
         let t0 = table(4);
         let mut session =
-            NodeSession::start(addr, 0, t0.clone(), &cfg, 0).unwrap();
+            NodeSession::start(server.endpoints(), 0, t0.clone(), &cfg, 0).unwrap();
 
         // two epochs happen without this session participating
         let mut coord_table = t0;
-        let mut coord = TcpStoreClient::connect(addr).unwrap();
+        let mut coord = StoreSession::connect(server.endpoints()).unwrap();
         coord_table.substitute(replacement(1, 0)).unwrap();
         coord_table.substitute(replacement(2, 1)).unwrap();
         coord.advance_epoch(2).unwrap();
@@ -1001,17 +1011,18 @@ mod tests {
         // tombstoned epoch converges.
         let cfg = ParallelismConfig::dp(4);
         let server = TcpStoreServer::start().unwrap();
-        let addr = server.addr();
         let t = table(4);
 
         // one live survivor that WILL arrive; the second expected
         // participant never does (it died before arriving)
-        let mut s = NodeSession::start(addr, 0, t.clone(), &cfg, 0).unwrap();
+        let mut s =
+            NodeSession::start(server.endpoints(), 0, t.clone(), &cfg, 0).unwrap();
         let cfg2 = cfg.clone();
         let survivor = std::thread::spawn(move || s.rejoin(&cfg2, 1));
 
-        let (tx, watchdog) = supervise_barrier(addr, 1, Duration::from_millis(400));
-        let mut coord = TcpStoreClient::connect(addr).unwrap();
+        let (tx, watchdog) =
+            supervise_barrier(server.endpoints(), 1, Duration::from_millis(400));
+        let mut coord = StoreSession::connect(server.endpoints()).unwrap();
         let mut ct = t.clone();
         let no_failed: [usize; 0] = [];
         let t0 = Instant::now();
@@ -1036,7 +1047,7 @@ mod tests {
         // retry past the tombstone (from_epoch = aborted current) with
         // the participants that actually exist: converges
         let out = rebuild_episode(
-            &server,
+            &server.endpoints(),
             &t,
             &cfg,
             &[1],
@@ -1053,10 +1064,10 @@ mod tests {
     fn watchdog_stands_down_after_release() {
         // A completed barrier must not be aborted retroactively.
         let server = TcpStoreServer::start().unwrap();
-        let addr = server.addr();
-        let mut c = TcpStoreClient::connect(addr).unwrap();
+        let mut c = StoreSession::connect(server.endpoints()).unwrap();
         c.set(&k_go(1), b"go").unwrap();
-        let (tx, watchdog) = supervise_barrier(addr, 1, Duration::from_millis(50));
+        let (tx, watchdog) =
+            supervise_barrier(server.endpoints(), 1, Duration::from_millis(50));
         // deliberately do NOT signal before the deadline
         std::thread::sleep(Duration::from_millis(150));
         watchdog.join().unwrap();
@@ -1071,9 +1082,11 @@ mod tests {
         let server = TcpStoreServer::start().unwrap();
         let t = table(4);
         let opts = EpisodeConfig::default();
-        assert!(rebuild_episode(&server, &t, &cfg, &[1], &[], 0, &opts).is_err());
+        assert!(
+            rebuild_episode(&server.endpoints(), &t, &cfg, &[1], &[], 0, &opts).is_err()
+        );
         assert!(rebuild_episode(
-            &server,
+            &server.endpoints(),
             &t,
             &cfg,
             &[1],

@@ -21,7 +21,8 @@ use crate::comms::state_stream::{
     fetch_from_addr, serve_listener, transfer_tag, EpochFence, Expect, RestoreError,
     StreamConfig,
 };
-use crate::comms::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
+use crate::comms::replication::{StoreEndpoints, StoreSession};
+use crate::comms::tcp_store::{FencedWait, TcpStoreServer};
 use crate::config::{ParallelismConfig, ShardId};
 use crate::metrics::bench::BenchReport;
 use crate::metrics::Histogram;
@@ -173,8 +174,8 @@ impl RestoreOutcome {
 /// (releases blocked `ClaimRestore` waiters) and the in-memory fence
 /// (aborts in-flight chunk transfers). This is what folding a
 /// failure-during-recovery into the episode looks like on the wire.
-pub fn bump_epoch(store: SocketAddr, fence: &EpochFence, to: u64) -> Result<u64> {
-    let mut client = TcpStoreClient::connect(store)?;
+pub fn bump_epoch(store: &StoreEndpoints, fence: &EpochFence, to: u64) -> Result<u64> {
+    let mut client = StoreSession::try_connect(store)?;
     let now = client.advance_epoch(to)?;
     fence.advance(to);
     Ok(now)
@@ -196,7 +197,7 @@ fn fatal(e: anyhow::Error) -> RestoreError {
 /// blocked claims (store side) and in-flight chunk streams (fence
 /// side) promptly.
 pub fn restore_episode(
-    store: SocketAddr,
+    store: &StoreEndpoints,
     plan: &RestorePlan,
     states: &BTreeMap<usize, Snapshot>,
     epoch: u64,
@@ -249,7 +250,7 @@ pub fn restore_episode(
             let tag = transfer_tag(tr.shard, tr.source);
             let (shard, receivers) = (tr.shard, tr.targets.len());
             source_threads.push(scope.spawn(move || -> Result<(), RestoreError> {
-                let mut client = TcpStoreClient::connect(store).map_err(fatal)?;
+                let mut client = StoreSession::try_connect(store).map_err(fatal)?;
                 match client.advertise_restore(epoch, tag, &addr.to_string()) {
                     Ok(None) => {}
                     Ok(Some(current)) => {
@@ -267,7 +268,7 @@ pub fn restore_episode(
                 target_threads.push(scope.spawn(
                     move || -> Result<(TransferStat, Snapshot), RestoreError> {
                         let mut client =
-                            TcpStoreClient::connect(store).map_err(fatal)?;
+                            StoreSession::try_connect(store).map_err(fatal)?;
                         let addr_bytes = match client
                             .claim_restore(epoch, transfer_tag(shard, source))
                             .map_err(fatal)?
@@ -455,8 +456,9 @@ fn run_cell(
     for i in 0..=cfg.samples {
         let epoch = (i + 1) as u64;
         let fence = EpochFence::new(epoch);
-        let out = restore_episode(server.addr(), plan, states, epoch, &fence, &stream_cfg)
-            .map_err(|e| anyhow!("{e}"))?;
+        let out =
+            restore_episode(&server.endpoints(), plan, states, epoch, &fence, &stream_cfg)
+                .map_err(|e| anyhow!("{e}"))?;
         if i > 0 {
             // episode 0 is warmup (server threads, allocator)
             h.record(out.wall_s);
@@ -628,7 +630,7 @@ mod tests {
         let server = TcpStoreServer::start().unwrap();
         let fence = EpochFence::new(1);
         let out = restore_episode(
-            server.addr(),
+            &server.endpoints(),
             &plan,
             &states,
             1,
@@ -657,7 +659,7 @@ mod tests {
         let server = TcpStoreServer::start().unwrap();
         let fence = EpochFence::new(1);
         let err = restore_episode(
-            server.addr(),
+            &server.endpoints(),
             &plan,
             &BTreeMap::new(),
             1,

@@ -5,19 +5,17 @@
 //!                  injected failure) under FlashRecovery or vanilla
 //!   simulate       one paper-scale recovery scenario on the simulator
 //!   scenario       declarative chaos campaigns: list / run / export
-//!   rebuild-bench  group-reconstruction scale sweep over the live TCP
-//!                  plane; emits BENCH_group_rebuild.json, optionally
-//!                  perf-gated against a committed baseline
-//!   restore-bench  shard-aware streaming-restore sweep (model size x
-//!                  ZeRO shards) over real sockets; emits
-//!                  BENCH_state_restore.json, optionally perf-gated
-//!   detect-bench   detection-latency sweep over leased heartbeats
-//!                  (64 -> 4096 ranks); emits
-//!                  BENCH_detection_latency.json, optionally perf-gated
-//!   store-bench    store data-plane throughput sweep (mixed opcodes,
-//!                  batched vs serial clients, 64 -> 8192 simulated
-//!                  clients); emits BENCH_store_throughput.json,
-//!                  optionally perf-gated
+//!   bench          unified bench runner: `bench <suite>` with suite
+//!                  one of rebuild (group-reconstruction scale sweep),
+//!                  restore (shard-aware streaming restore), detect
+//!                  (detection latency over leased heartbeats), store
+//!                  (store data-plane throughput, plain + replicated);
+//!                  emits a BENCH_*.json report, optionally perf-gated
+//!                  against a committed baseline via
+//!                  `--baseline <path> [--gate [RATIO]] [--json <out>]`
+//!                  (the legacy `rebuild-bench` / `restore-bench` /
+//!                  `detect-bench` / `store-bench` spellings remain as
+//!                  deprecated aliases with identical flags)
 //!   trace          run a live chaos scenario with the flight recorder
 //!                  on and write a Perfetto-viewable Chrome trace
 //!                  (plus an optional JSONL journal); --check
@@ -35,8 +33,8 @@
 //!   flashrecovery scenario run --spec rolling_cascade --seed 7
 //!   flashrecovery scenario run --spec my_campaign.json --journal out.jsonl
 //!   flashrecovery scenario export --spec flaky_node > flaky.json
-//!   flashrecovery rebuild-bench --out BENCH_group_rebuild.json \
-//!       --baseline ci/BENCH_group_rebuild.baseline.json --gate 1.5
+//!   flashrecovery bench rebuild --json BENCH_group_rebuild.json \
+//!       --baseline ci/BENCH_group_rebuild.baseline.json --gate
 //!   flashrecovery trace silent_hang --out trace.json --check
 //!   flashrecovery info --size small
 
@@ -46,7 +44,7 @@ use flashrecovery::coordinator::ControllerConfig;
 use flashrecovery::runtime::load_manifest;
 use flashrecovery::training::worker::{FailurePlan, Phase};
 use flashrecovery::training::TrainingEngine;
-use flashrecovery::util::{artifacts_dir, Args};
+use flashrecovery::util::{artifacts_dir, Args, BenchFlags};
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
@@ -55,10 +53,11 @@ fn main() -> anyhow::Result<()> {
         Some("train") => train(&args),
         Some("simulate") => simulate(&args),
         Some("scenario") => scenario(&args),
-        Some("rebuild-bench") => rebuild_bench(&args),
-        Some("restore-bench") => restore_bench(&args),
-        Some("detect-bench") => detect_bench(&args),
-        Some("store-bench") => store_bench(&args),
+        Some("bench") => bench(&args),
+        Some("rebuild-bench") => deprecated_bench("rebuild-bench", "rebuild", &args),
+        Some("restore-bench") => deprecated_bench("restore-bench", "restore", &args),
+        Some("detect-bench") => deprecated_bench("detect-bench", "detect", &args),
+        Some("store-bench") => deprecated_bench("store-bench", "store", &args),
         Some("trace") => trace_cmd(&args),
         Some("info") => info(&args),
         Some(other) => {
@@ -73,11 +72,41 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+/// `bench <suite>` — the unified bench runner.
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let suite = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("bench needs a suite: rebuild|restore|detect|store"))?;
+    run_bench_suite(suite, args)
+}
+
+/// The legacy per-suite subcommands, kept so committed CI workflows
+/// and scripts keep working; they forward to the unified runner with
+/// identical flags.
+fn deprecated_bench(old: &str, suite: &str, args: &Args) -> anyhow::Result<()> {
+    eprintln!(
+        "[{old}] deprecated spelling — use `flashrecovery bench {suite}` (same flags)"
+    );
+    run_bench_suite(suite, args)
+}
+
+fn run_bench_suite(suite: &str, args: &Args) -> anyhow::Result<()> {
+    match suite {
+        "rebuild" => rebuild_bench(args),
+        "restore" => restore_bench(args),
+        "detect" => detect_bench(args),
+        "store" => store_bench(args),
+        other => anyhow::bail!("unknown bench suite {other:?} (rebuild|restore|detect|store)"),
+    }
+}
+
 fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|scenario|rebuild-bench|restore-bench|detect-bench|store-bench|trace|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|bench|trace|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -86,18 +115,19 @@ fn usage() {
          scenario: list | run --spec <name|file.json> [--seed N]\n\
          \u{20}         [--devices N] [--journal out.jsonl] [--live]\n\
          \u{20}         | export --spec <name> [--devices N]\n\
-         rebuild-bench: [--scales 256,1024,4096,8192] [--samples N]\n\
-         \u{20}         [--failures N] [--live-survivors N] [--out FILE]\n\
-         \u{20}         [--baseline FILE --gate RATIO]\n\
-         restore-bench: [--sizes 262144,1048576] [--shards 2,4]\n\
-         \u{20}         [--samples N] [--chunk-kib N] [--out FILE]\n\
-         \u{20}         [--baseline FILE --gate RATIO]\n\
-         detect-bench: [--scales 64,256,1024,4096] [--samples N]\n\
-         \u{20}         [--live-agents N] [--interval-ms N] [--lease-misses N]\n\
-         \u{20}         [--node-agent] [--out FILE] [--baseline FILE --gate RATIO]\n\
-         store-bench: [--clients 64,1024,4096,8192] [--connections N]\n\
-         \u{20}         [--repeats N] [--rounds N] [--assert] [--out FILE]\n\
-         \u{20}         [--baseline FILE --gate RATIO]\n\
+         bench:    <rebuild|restore|detect|store>\n\
+         \u{20}         [--baseline FILE] [--gate [RATIO]] [--json FILE]\n\
+         \u{20}         rebuild: [--scales 256,1024,4096,8192] [--samples N]\n\
+         \u{20}                  [--failures N] [--live-survivors N]\n\
+         \u{20}         restore: [--sizes 262144,1048576] [--shards 2,4]\n\
+         \u{20}                  [--samples N] [--chunk-kib N]\n\
+         \u{20}         detect:  [--scales 64,256,1024,4096] [--samples N]\n\
+         \u{20}                  [--live-agents N] [--interval-ms N]\n\
+         \u{20}                  [--lease-misses N] [--node-agent]\n\
+         \u{20}         store:   [--clients 64,1024,4096,8192] [--connections N]\n\
+         \u{20}                  [--repeats N] [--rounds N] [--replicas N] [--assert]\n\
+         \u{20}         (legacy aliases: rebuild-bench restore-bench\n\
+         \u{20}          detect-bench store-bench, same flags + --out)\n\
          trace:    <name|file.json> [--devices N] [--out trace.json]\n\
          \u{20}         [--journal FILE] [--check]\n\
          info:     --size tiny|small|base"
@@ -325,22 +355,21 @@ fn finish(name: &str, outcomes: &[flashrecovery::chaos::AssertionOutcome]) -> an
     }
 }
 
-/// Shared `--baseline FILE --gate RATIO` handling for the bench
-/// subcommands: compares column 0 (p50) of `report` against the
-/// committed baseline and exits non-zero on any regression beyond the
-/// gate ratio. No-op when `--baseline` is absent.
+/// Shared `--baseline FILE [--gate RATIO]` handling for the bench
+/// suites: compares column 0 (p50) of `report` against the committed
+/// baseline and exits non-zero on any regression beyond the gate
+/// ratio. No-op when `--baseline` is absent.
 fn gate_against_baseline(
     prefix: &str,
     report: &flashrecovery::metrics::bench::BenchReport,
-    out: &str,
-    args: &Args,
+    flags: &BenchFlags,
 ) -> anyhow::Result<()> {
     use flashrecovery::util::Json;
 
-    let Some(baseline_path) = args.get("baseline") else {
+    let Some(baseline_path) = flags.baseline.as_deref() else {
         return Ok(());
     };
-    let max_ratio = args.f64_or("gate", 1.5);
+    let max_ratio = flags.gate;
     let text = std::fs::read_to_string(baseline_path)?;
     let baseline =
         Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
@@ -353,77 +382,62 @@ fn gate_against_baseline(
         }
         eprintln!(
             "[{prefix}] if this is an accepted change, refresh the \
-             baseline: cp {out} {baseline_path} (see README)"
+             baseline: cp {} {baseline_path} (see README)",
+            flags.out
         );
         std::process::exit(1);
     }
     Ok(())
 }
 
-/// `rebuild-bench` — the group-reconstruction scale sweep, with an
+/// `bench rebuild` — the group-reconstruction scale sweep, with an
 /// optional perf gate against a committed baseline JSON (CI's
 /// bench-gate job fails the build on p50 regressions > --gate).
 fn rebuild_bench(args: &Args) -> anyhow::Result<()> {
     use flashrecovery::coordinator::rendezvous::{rebuild_sweep, SweepConfig};
 
     let mut cfg = SweepConfig::default();
-    if let Some(s) = args.get("scales") {
-        cfg.scales = s
-            .split(',')
-            .map(|x| x.trim().parse::<usize>())
-            .collect::<Result<Vec<_>, _>>()?;
-        if cfg.scales.is_empty() {
-            anyhow::bail!("--scales needs at least one rank count");
-        }
+    if let Some(scales) = args.usize_list("scales")? {
+        cfg.scales = scales;
     }
     cfg.samples = args.u64_or("samples", cfg.samples as u64) as u32;
     cfg.failures = args.usize_or("failures", cfg.failures);
     cfg.live_survivors = args.usize_or("live-survivors", cfg.live_survivors);
 
+    let flags = args.bench_flags("BENCH_group_rebuild.json");
     let report = rebuild_sweep(&cfg)?;
     report.print();
-    let out = args.str_or("out", "BENCH_group_rebuild.json");
-    report.write_json(&out)?;
-    println!("[rebuild-bench] wrote {out}");
-    gate_against_baseline("rebuild-bench", &report, &out, args)
+    report.write_json(&flags.out)?;
+    println!("[bench rebuild] wrote {}", flags.out);
+    gate_against_baseline("bench rebuild", &report, &flags)
 }
 
-/// `restore-bench` — the shard-aware streaming-restore sweep, with an
+/// `bench restore` — the shard-aware streaming-restore sweep, with an
 /// optional perf gate against a committed baseline JSON (CI's
 /// bench-gate job fails the build on p50 regressions > --gate).
 fn restore_bench(args: &Args) -> anyhow::Result<()> {
     use flashrecovery::coordinator::restore::{restore_sweep, RestoreSweepConfig};
 
-    let parse_list = |s: &str| -> anyhow::Result<Vec<usize>> {
-        let v = s
-            .split(',')
-            .map(|x| x.trim().parse::<usize>())
-            .collect::<Result<Vec<_>, _>>()?;
-        if v.is_empty() {
-            anyhow::bail!("list flag needs at least one value");
-        }
-        Ok(v)
-    };
     let mut cfg = RestoreSweepConfig::default();
-    if let Some(s) = args.get("sizes") {
-        cfg.sizes = parse_list(s)?;
+    if let Some(sizes) = args.usize_list("sizes")? {
+        cfg.sizes = sizes;
     }
-    if let Some(s) = args.get("shards") {
-        cfg.shards = parse_list(s)?;
+    if let Some(shards) = args.usize_list("shards")? {
+        cfg.shards = shards;
     }
     cfg.samples = args.u64_or("samples", cfg.samples as u64) as u32;
     cfg.chunk_bytes =
         args.usize_or("chunk-kib", cfg.chunk_bytes / 1024).max(4) * 1024;
 
+    let flags = args.bench_flags("BENCH_state_restore.json");
     let report = restore_sweep(&cfg)?;
     report.print();
-    let out = args.str_or("out", "BENCH_state_restore.json");
-    report.write_json(&out)?;
-    println!("[restore-bench] wrote {out}");
-    gate_against_baseline("restore-bench", &report, &out, args)
+    report.write_json(&flags.out)?;
+    println!("[bench restore] wrote {}", flags.out);
+    gate_against_baseline("bench restore", &report, &flags)
 }
 
-/// `detect-bench` — the detection-latency scale sweep over leased
+/// `bench detect` — the detection-latency scale sweep over leased
 /// heartbeats (DESIGN.md §10), with an optional perf gate against a
 /// committed baseline JSON (CI's bench-gate job fails the build on
 /// p50 regressions > --gate).
@@ -432,14 +446,8 @@ fn detect_bench(args: &Args) -> anyhow::Result<()> {
     use std::time::Duration;
 
     let mut cfg = DetectionSweepConfig::default();
-    if let Some(s) = args.get("scales") {
-        cfg.scales = s
-            .split(',')
-            .map(|x| x.trim().parse::<usize>())
-            .collect::<Result<Vec<_>, _>>()?;
-        if cfg.scales.is_empty() {
-            anyhow::bail!("--scales needs at least one rank count");
-        }
+    if let Some(scales) = args.usize_list("scales")? {
+        cfg.scales = scales;
     }
     cfg.samples = args.u64_or("samples", cfg.samples as u64) as u32;
     cfg.live_agents = args.usize_or("live-agents", cfg.live_agents);
@@ -450,49 +458,45 @@ fn detect_bench(args: &Args) -> anyhow::Result<()> {
         args.u64_or("lease-misses", cfg.lease_misses as u64).max(1) as u32;
     cfg.node_agent = args.bool_or("node-agent", cfg.node_agent);
 
+    let flags = args.bench_flags("BENCH_detection_latency.json");
     let report = detection_sweep(&cfg)?;
     report.print();
-    let out = args.str_or("out", "BENCH_detection_latency.json");
-    report.write_json(&out)?;
-    println!("[detect-bench] wrote {out}");
-    gate_against_baseline("detect-bench", &report, &out, args)
+    report.write_json(&flags.out)?;
+    println!("[bench detect] wrote {}", flags.out);
+    gate_against_baseline("bench detect", &report, &flags)
 }
 
-/// `store-bench` — the store data-plane throughput sweep (DESIGN.md
-/// §11): mixed-opcode workload, batched vs serial client modes, with
-/// an optional perf gate against a committed baseline JSON (CI's
-/// bench-gate job fails the build on batched per-op p50 regressions
-/// > --gate).
+/// `bench store` — the store data-plane throughput sweep (DESIGN.md
+/// §11): mixed-opcode workload, batched vs serial client modes plus a
+/// quorum-replicated column (DESIGN.md §13), with an optional perf
+/// gate against a committed baseline JSON (CI's bench-gate job fails
+/// the build on batched per-op p50 regressions > --gate).
 fn store_bench(args: &Args) -> anyhow::Result<()> {
     use flashrecovery::comms::store_bench::{check_report, store_sweep, StoreSweepConfig};
 
     let mut cfg = StoreSweepConfig::default();
-    if let Some(s) = args.get("clients") {
-        cfg.clients = s
-            .split(',')
-            .map(|x| x.trim().parse::<usize>())
-            .collect::<Result<Vec<_>, _>>()?;
-        if cfg.clients.is_empty() {
-            anyhow::bail!("--clients needs at least one count");
-        }
+    if let Some(clients) = args.usize_list("clients")? {
+        cfg.clients = clients;
     }
     cfg.connections = args.usize_or("connections", cfg.connections).max(1);
     cfg.repeats = args.usize_or("repeats", cfg.repeats).max(1);
     cfg.rounds = args.u64_or("rounds", cfg.rounds as u64).max(1) as u32;
+    cfg.replicas = args.usize_or("replicas", cfg.replicas);
 
+    let flags = args.bench_flags("BENCH_store_throughput.json");
     let report = store_sweep(&cfg)?;
     report.print();
-    let out = args.str_or("out", "BENCH_store_throughput.json");
-    report.write_json(&out)?;
-    println!("[store-bench] wrote {out}");
+    report.write_json(&flags.out)?;
+    println!("[bench store] wrote {}", flags.out);
     if args.bool_or("assert", false) {
         // the acceptance properties (batched >= 2x serial at 4096
-        // clients, flat per-op p50) — what bench-gate enforces on top
-        // of the baseline ratio
+        // clients, flat per-op p50, replicated acks within 1.5x of
+        // the un-replicated batched path) — what bench-gate enforces
+        // on top of the baseline ratio
         check_report(&cfg, &report)?;
-        println!("[store-bench] acceptance assertions PASS");
+        println!("[bench store] acceptance assertions PASS");
     }
-    gate_against_baseline("store-bench", &report, &out, args)
+    gate_against_baseline("bench store", &report, &flags)
 }
 
 /// `trace <scenario>` — run a live chaos scenario with the flight

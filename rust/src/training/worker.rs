@@ -25,7 +25,7 @@ use crate::cluster::failure::{FailureCategory, FailureKind};
 use crate::comms::state_stream::{
     fetch_from_addr, serve_listener, EpochFence, Expect, RestoreError, StreamConfig,
 };
-use crate::comms::tcp_store::TcpStoreClient;
+use crate::comms::replication::{StoreEndpoints, StoreSession};
 use crate::comms::{Collective, CollectiveError};
 use crate::config::ShardId;
 use crate::runtime::{literal_tokens, ModelBundle};
@@ -155,10 +155,11 @@ pub fn kind_from_code(code: i64) -> Option<FailureKind> {
 }
 
 /// Where and how a worker's heartbeat emitter pushes beats.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct HeartbeatCfg {
-    /// The controller's `TcpStoreServer`.
-    pub store: SocketAddr,
+    /// The coordination plane's endpoint set (one address for an
+    /// un-replicated store; the emitter fails over across the set).
+    pub store: StoreEndpoints,
     /// Push interval; the monitor's lease is a multiple of it.
     pub interval: Duration,
     /// Worker incarnation stamped on every beat — a replacement's
@@ -176,20 +177,24 @@ fn board_done(board: &MonitorBoard) -> bool {
 /// Connect to the store with bounded exponential backoff: an emitter
 /// that starts before the store is up (controller still binding, or a
 /// replacement racing the recovery episode) must still lease in
-/// instead of silently forfeiting the wire plane. Gives up — and lets
-/// the board-scan fallback cover the ranks — once the attempts are
-/// exhausted or `abandoned()` reports there is nobody left to beat
-/// for (per-process: its one board; node agent: *every* member, so
-/// one rank dying early cannot strand its healthy peers).
+/// instead of silently forfeiting the wire plane. Every attempt is a
+/// full discovery pass over the *whole* endpoint set — the old loop
+/// retried one address only, so a worker started during a primary
+/// crash never leased in even though a replica was one endpoint away.
+/// Gives up — and lets the board-scan fallback cover the ranks — once
+/// the attempts are exhausted or `abandoned()` reports there is
+/// nobody left to beat for (per-process: its one board; node agent:
+/// *every* member, so one rank dying early cannot strand its healthy
+/// peers).
 fn connect_with_backoff(
-    store: SocketAddr,
+    store: &StoreEndpoints,
     interval: Duration,
     abandoned: impl Fn() -> bool,
-) -> Option<TcpStoreClient> {
+) -> Option<StoreSession> {
     let mut delay = interval.max(Duration::from_millis(5));
     for attempt in 0..12 {
-        match TcpStoreClient::connect(store) {
-            Ok(c) => return Some(c),
+        match StoreSession::try_connect(store) {
+            Ok(s) => return Some(s),
             Err(_) => {
                 if abandoned() || attempt == 11 {
                     return None;
@@ -227,7 +232,7 @@ pub fn spawn_heartbeat(
             // store is up still leases in (the old emitter exited
             // silently on the first refused connect).
             let Some(mut client) =
-                connect_with_backoff(cfg.store, cfg.interval, || board_done(&board))
+                connect_with_backoff(&cfg.store, cfg.interval, || board_done(&board))
             else {
                 return; // no plane: the board-scan fallback covers us
             };
@@ -264,10 +269,11 @@ pub struct NodeRank {
 }
 
 /// Where and how a node agent pushes its coalesced beats.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NodeAgentCfg {
-    /// The controller's `TcpStoreServer`.
-    pub store: SocketAddr,
+    /// The coordination plane's endpoint set (the agent's batched
+    /// beats fail over across it like any session op).
+    pub store: StoreEndpoints,
     /// Push interval; the monitor's lease is a multiple of it.
     pub interval: Duration,
 }
@@ -295,7 +301,7 @@ pub fn spawn_node_heartbeat(
             if members.is_empty() {
                 return;
             }
-            let Some(mut client) = connect_with_backoff(cfg.store, cfg.interval, || {
+            let Some(mut client) = connect_with_backoff(&cfg.store, cfg.interval, || {
                 members.iter().all(|m| board_done(&m.board))
             }) else {
                 return; // no plane: the board-scan fallback covers us
@@ -726,7 +732,11 @@ mod tests {
         let hb = spawn_heartbeat(
             3,
             board.clone(),
-            HeartbeatCfg { store: addr, interval: Duration::from_millis(10), incarnation: 2 },
+            HeartbeatCfg {
+                store: StoreEndpoints::one(addr),
+                interval: Duration::from_millis(10),
+                incarnation: 2,
+            },
         );
         std::thread::sleep(Duration::from_millis(80));
         let server = TcpStoreServer::start_on(addr).expect("rebind probed port");
@@ -749,6 +759,41 @@ mod tests {
     }
 
     #[test]
+    fn heartbeat_emitter_walks_full_endpoint_set() {
+        // Satellite bugfix: the backoff loop used to retry a single
+        // address — a worker started during a primary crash never
+        // leased in even though a live endpoint was one probe away.
+        // With the first endpoint dead, the emitter must still reach
+        // the second.
+        let dead = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead_addr = dead.local_addr().unwrap();
+        drop(dead); // nothing listens here again
+        let live = TcpStoreServer::start().unwrap();
+
+        let board = MonitorBoard::new();
+        board.step_tag.store(9, Ordering::SeqCst);
+        let hb = spawn_heartbeat(
+            5,
+            board.clone(),
+            HeartbeatCfg {
+                store: StoreEndpoints::new(vec![dead_addr, live.addr()]),
+                interval: Duration::from_millis(10),
+                incarnation: 1,
+            },
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !live.beats().iter().any(|b| b.rank == 5 && b.step_tag == 9) {
+            assert!(
+                Instant::now() < deadline,
+                "emitter never walked past the dead endpoint"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        board.alive.store(false, Ordering::SeqCst);
+        hb.join().unwrap();
+    }
+
+    #[test]
     fn node_agent_coalesces_beats_into_one_frame_per_interval() {
         let server = TcpStoreServer::start().unwrap();
         let members: Vec<NodeRank> = (0..4)
@@ -762,7 +807,10 @@ mod tests {
             members.iter().map(|m| m.board.clone()).collect();
         let agent = spawn_node_heartbeat(
             members,
-            NodeAgentCfg { store: server.addr(), interval: Duration::from_millis(10) },
+            NodeAgentCfg {
+                store: server.endpoints(),
+                interval: Duration::from_millis(10),
+            },
         );
         let deadline = Instant::now() + Duration::from_secs(10);
         while server.beats().len() < 4 {
@@ -770,9 +818,12 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         // coalescing: 4 ranks' beats ride one Batch frame per
-        // interval, so logical ops outnumber wire frames ~4x
-        let frames = server.frame_count();
-        let requests = server.request_count();
+        // interval, so logical ops outnumber wire frames ~4x (one
+        // frame is the session's discovery probe, which carries no
+        // logical store op)
+        let snap = server.metrics_snapshot();
+        let frames = snap.counter("store.frames").saturating_sub(1);
+        let requests = snap.counter("store.requests").saturating_sub(1);
         assert!(
             requests >= 3 * frames,
             "beats must be coalesced: {requests} ops over {frames} frames"
@@ -794,7 +845,10 @@ mod tests {
         ];
         let agent = spawn_node_heartbeat(
             members,
-            NodeAgentCfg { store: server.addr(), interval: Duration::from_millis(10) },
+            NodeAgentCfg {
+                store: server.endpoints(),
+                interval: Duration::from_millis(10),
+            },
         );
         let deadline = Instant::now() + Duration::from_secs(10);
         while server.beats().len() < 2 {

@@ -1,8 +1,26 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! args, plus the shared flag surface of the `bench` suites
+//! ([`BenchFlags`], comma-separated count lists).
 
 use std::collections::BTreeMap;
+
+/// Shared flags of every `flashrecovery bench <suite>` invocation
+/// (and its deprecated per-suite aliases): where to write the JSON
+/// report (`--json`, with `--out` kept as an alias), the optional
+/// committed baseline to gate against, and the gate ratio. `--gate`
+/// works both bare (defaults to 1.5x) and valued (`--gate 1.3`);
+/// gating only runs when `--baseline` is present.
+#[derive(Debug, Clone)]
+pub struct BenchFlags {
+    /// Output path for the suite's JSON report.
+    pub out: String,
+    /// Committed baseline JSON to gate p50 regressions against.
+    pub baseline: Option<String>,
+    /// Max allowed p50 ratio vs the baseline.
+    pub gate: f64,
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -70,6 +88,45 @@ impl Args {
             Some(_) | None => default,
         }
     }
+
+    /// Parse the shared bench flags with a per-suite default output
+    /// path (see [`BenchFlags`]).
+    pub fn bench_flags(&self, default_out: &str) -> BenchFlags {
+        let out = self
+            .get("json")
+            .or_else(|| self.get("out"))
+            .unwrap_or(default_out)
+            .to_string();
+        let gate = match self.get("gate") {
+            None | Some("true") => 1.5,
+            Some(v) => v.parse().unwrap_or(1.5),
+        };
+        BenchFlags {
+            out,
+            baseline: self.get("baseline").map(str::to_string),
+            gate,
+        }
+    }
+
+    /// Comma-separated count list, e.g. `--scales 64,256,1024`.
+    /// `Ok(None)` when the flag is absent; an error on an empty or
+    /// unparsable list.
+    pub fn usize_list(&self, key: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        let Some(raw) = self.get(key) else {
+            return Ok(None);
+        };
+        let v = raw
+            .split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(str::parse::<usize>)
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("--{key} {raw:?}: {e}"))?;
+        if v.is_empty() {
+            anyhow::bail!("--{key} needs at least one value");
+        }
+        Ok(Some(v))
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +174,41 @@ mod tests {
         assert_eq!(a.usize_or("n", 7), 7);
         assert_eq!(a.str_or("mode", "x"), "x");
         assert!(!a.bool_or("flag", false));
+    }
+
+    #[test]
+    fn bench_flags_unified_form() {
+        // the `bench <suite>` surface: --json output, bare --gate
+        let a = args("bench rebuild --json r.json --baseline b.json --gate");
+        let f = a.bench_flags("default.json");
+        assert_eq!(f.out, "r.json");
+        assert_eq!(f.baseline.as_deref(), Some("b.json"));
+        assert!((f.gate - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_flags_deprecated_form() {
+        // the legacy per-suite surface bench-gate.yml still uses:
+        // --out output, valued --gate
+        let a = args("store-bench --out s.json --baseline b.json --gate 1.3");
+        let f = a.bench_flags("default.json");
+        assert_eq!(f.out, "s.json");
+        assert_eq!(f.baseline.as_deref(), Some("b.json"));
+        assert!((f.gate - 1.3).abs() < 1e-12);
+        // no baseline, no output flag -> suite default, no gating
+        let f = args("store-bench").bench_flags("default.json");
+        assert_eq!(f.out, "default.json");
+        assert!(f.baseline.is_none());
+    }
+
+    #[test]
+    fn usize_list_parses_and_rejects() {
+        let a = args("bench detect --scales 64,256,1024");
+        assert_eq!(a.usize_list("scales").unwrap(), Some(vec![64, 256, 1024]));
+        // trailing comma tolerated, empty and junk lists rejected
+        assert_eq!(args("--scales 64,").usize_list("scales").unwrap(), Some(vec![64]));
+        assert!(args("--scales=,").usize_list("scales").is_err());
+        assert!(args("--scales nope").usize_list("scales").is_err());
+        assert_eq!(args("bench").usize_list("scales").unwrap(), None);
     }
 }

@@ -8,7 +8,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 
-pub use args::Args;
+pub use args::{Args, BenchFlags};
 pub use json::Json;
 pub use rng::Rng;
 

@@ -49,7 +49,7 @@ fn rendezvous_via_store_like_torchrun() {
     for w in waiters {
         assert_eq!(w.join().unwrap(), 4);
     }
-    assert_eq!(server.hello_count(), 4);
+    assert_eq!(server.metrics_snapshot().counter("store.hellos"), 4);
 }
 
 #[test]
@@ -112,7 +112,7 @@ fn parallel_establishment_not_slower_than_serial() {
     let (t_serial, c1) = establish(server.addr(), n, 1).unwrap();
     let (t_par, c2) = establish(server.addr(), n, 8).unwrap();
     assert_eq!(c1.len() + c2.len(), 2 * n);
-    assert_eq!(server.hello_count(), 2 * n as u64);
+    assert_eq!(server.metrics_snapshot().counter("store.hellos"), 2 * n as u64);
     assert!(
         t_par.as_secs_f64() < t_serial.as_secs_f64() * 3.0 + 0.05,
         "parallel {t_par:?} vs serial {t_serial:?}"
@@ -146,9 +146,9 @@ fn survivor_message_count_scale_independent_64_to_4096() {
             device: 0,
             addr: "10.200.0.1:2900".to_string(),
         };
-        let before = server.request_count();
+        let before = server.metrics_snapshot().counter("store.requests");
         let out = rebuild_episode(
-            &server,
+            &server.endpoints(),
             &table,
             &par,
             &failed,
@@ -161,7 +161,7 @@ fn survivor_message_count_scale_independent_64_to_4096() {
         budgets.push(out.survivor_ops_max);
         assert_eq!(out.coordinator_ops, 1 + 4, "coordinator O(k) at n={n}");
         assert_eq!(out.replacement_ops_max, 6, "replacement O(1) at n={n}");
-        totals.push(server.request_count() - before);
+        totals.push(server.metrics_snapshot().counter("store.requests") - before);
     }
     assert!(
         budgets.windows(2).all(|w| w[0] == w[1]),
@@ -217,7 +217,7 @@ fn rebuild_epoch_bump_releases_stale_waiter_during_churn() {
             addr: format!("10.9.{tag}.2:2900"),
         };
         let out = rebuild_episode(
-            &server,
+            &server.endpoints(),
             &table,
             &cfg,
             &[2],

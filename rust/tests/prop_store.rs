@@ -73,12 +73,12 @@ fn batched_and_serial_execution_are_equivalent() {
         prop::assert_eq_prop(&serial_resps, &batch_resps)?;
         prop::assert_eq_prop(&observe(&mut sc), &observe(&mut bc))?;
         prop::assert_eq_prop(
-            &serial_server.key_count(),
-            &batch_server.key_count(),
+            &serial_server.metrics_snapshot().gauge("store.keys"),
+            &batch_server.metrics_snapshot().gauge("store.keys"),
         )?;
         prop::assert_eq_prop(
-            &serial_server.counter_count(),
-            &batch_server.counter_count(),
+            &serial_server.metrics_snapshot().gauge("store.counters"),
+            &batch_server.metrics_snapshot().gauge("store.counters"),
         )?;
         // logical message budgets are transport-independent: the
         // client op count and the server's executed-request count do
@@ -87,13 +87,13 @@ fn batched_and_serial_execution_are_equivalent() {
         prop::assert_eq_prop(&(bc.ops_sent() >= ops.len() as u64), &true)?;
         // frames, by contrast, must shrink under batching whenever a
         // chunk held more than one op
+        let (batch_frames, serial_frames) = (
+            batch_server.metrics_snapshot().counter("store.frames"),
+            serial_server.metrics_snapshot().counter("store.frames"),
+        );
         prop::assert_prop(
-            batch_server.frame_count() <= serial_server.frame_count(),
-            format!(
-                "batched frames {} > serial frames {}",
-                batch_server.frame_count(),
-                serial_server.frame_count()
-            ),
+            batch_frames <= serial_frames,
+            format!("batched frames {batch_frames} > serial frames {serial_frames}"),
         )
     });
 }
