@@ -8,6 +8,8 @@
 
 pub mod collective;
 pub mod group;
+#[cfg(target_os = "linux")]
+mod reactor;
 pub mod replication;
 pub mod state_stream;
 pub mod store_bench;
@@ -24,5 +26,5 @@ pub use state_stream::{
     fetch_snapshot, serve_snapshot, transfer_tag, EpochFence, Expect, RestoreError,
     RestoreResult, StreamConfig,
 };
-pub use tcp_store::{establish, FencedWait, TcpStoreClient, TcpStoreServer};
+pub use tcp_store::{establish, FencedWait, StoreCore, TcpStoreClient, TcpStoreServer};
 pub use wire::{Bytes, Request, Response};

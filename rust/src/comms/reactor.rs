@@ -1,0 +1,810 @@
+//! Readiness-driven store core (DESIGN.md §14): one event-loop thread
+//! serves every connection through epoll, replacing thread-per-blocked
+//! -client with per-connection frame state machines. Blocked `Wait` /
+//! `WaitEpoch` / `ClaimRestore` ops are parked *entries* in the same
+//! per-key slots the threaded core parks threads in — a `Set` enqueues
+//! exactly its key's entry ids onto a wakeup queue the loop drains by
+//! resuming the suspended frame. Replication commit waits park the
+//! same way (the shipper pings an eventfd instead of a condvar).
+//!
+//! Equivalence contract with the threaded core (`tcp_store::handle`):
+//! identical wire format, one frame in flight per connection, the same
+//! `wait_poll` fence→value→stop decision order, the same per-op
+//! metrics accounting, and the same replication/dedup log layout. The
+//! op-budget, failover and dedup tests run against either core
+//! unchanged.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::replication::{Replicator, ROLE_REPLICA};
+use super::tcp_store::{
+    apply_mutating, apply_op, bump_applied, encode_resp_body,
+    handle_replicate, lock, loggable, promote_shared, repl_status_response,
+    replica_serves, restore_key, run_thread_core, wait_poll, Shared,
+    WakeEvent,
+};
+use super::wire::{Request, Response, MAX_FRAME_BYTES};
+use crate::telemetry::trace;
+use crate::util::epoll::{
+    Epoll, EpollEvent, WakeFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
+    EPOLLRDHUP,
+};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Matches the threaded core's `Replicator::wait_committed` deadline.
+const COMMIT_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Event-loop entry point — the body of the store's serve thread.
+/// Falls back to the threaded core's accept loop if epoll/eventfd
+/// setup fails (it already owns the thread, so the fallback is free).
+pub(super) fn run(listener: TcpListener, shared: Arc<Shared>, stop: Arc<AtomicBool>) {
+    let (epoll, waker) = match (Epoll::new(), WakeFd::new()) {
+        (Ok(e), Ok(w)) => (e, w),
+        _ => return run_thread_core(listener, shared, stop),
+    };
+    let waker = Arc::new(waker);
+    if epoll.add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER).is_err()
+        || epoll.add(waker.raw_fd(), EPOLLIN, TOKEN_WAKER).is_err()
+    {
+        return run_thread_core(listener, shared, stop);
+    }
+    let hook: Arc<dyn Fn() + Send + Sync> = {
+        let w = waker.clone();
+        Arc::new(move || w.wake())
+    };
+    *lock(&shared.reactor_waker) = Some(hook.clone());
+    shared.core_threads.set(1); // the event loop is the whole core
+
+    let mut r = Reactor {
+        shared,
+        stop,
+        epoll,
+        waker,
+        wake_hook: hook,
+        listener,
+        conns: HashMap::new(),
+        pending: HashMap::new(),
+        commit_waits: Vec::new(),
+        runnable: Vec::new(),
+        next_token: FIRST_CONN_TOKEN,
+        scratch: vec![0u8; 64 * 1024],
+    };
+    r.event_loop();
+    r.shutdown_drain();
+}
+
+/// What a connection is doing between readiness events.
+enum ConnState {
+    /// Reading request bytes (or flushing a response).
+    Idle,
+    /// A blocking op parked this connection's frame on a key slot.
+    Parked,
+    /// The frame executed; its response is held until the replication
+    /// watermark covers the ops it logged.
+    AwaitCommit,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Buffered inbound bytes (possibly several pipelined frames).
+    buf: Vec<u8>,
+    /// The encoded response being flushed; empty = nothing in flight.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    state: ConnState,
+    interest: u32,
+}
+
+/// Which envelope the in-flight frame arrived under — decides how the
+/// collected responses fold up and whether/how they are logged.
+enum Wrapper {
+    Single,
+    Batch,
+    DedupSingle { id: u64 },
+    DedupBatch { id: u64 },
+}
+
+/// A suspended frame: everything `handle_inner` kept on its stack,
+/// lifted into a heap entry so the frame survives parking.
+struct Pending {
+    conn: u64,
+    wrapper: Wrapper,
+    /// Ops not yet executed (tail of a batch; the single op itself).
+    rest: VecDeque<Request>,
+    /// Responses collected so far.
+    out: Vec<Response>,
+    /// Loggable ops accumulated under a dedup envelope — appended to
+    /// the replication log in one frame with the `DedupDone` marker.
+    entries: Vec<Request>,
+    /// Highest log index this frame shipped (0 = nothing logged).
+    highest: u64,
+    /// Replication snapshot taken once per frame, like `handle`.
+    repl: Option<Arc<Replicator>>,
+    /// A blocking sub-op was released by the shutdown broadcast —
+    /// suppress dedup caching/logging, exactly like the threaded core.
+    released: bool,
+    /// The key/epoch the frame is parked on (valid while `Parked`).
+    wait_key: String,
+    wait_epoch: u64,
+}
+
+/// A response withheld until its log index commits (or the replica set
+/// degrades / the deadline passes — `wait_committed`'s exits).
+struct CommitWait {
+    conn: u64,
+    repl: Arc<Replicator>,
+    index: u64,
+    deadline: Instant,
+    resp: Response,
+}
+
+struct Reactor {
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    epoll: Epoll,
+    waker: Arc<WakeFd>,
+    wake_hook: Arc<dyn Fn() + Send + Sync>,
+    listener: TcpListener,
+    conns: HashMap<u64, Conn>,
+    /// Suspended frames, keyed by connection token (one frame in
+    /// flight per connection, so the token doubles as the entry id
+    /// stored in `WaitSlot::entries`).
+    pending: HashMap<u64, Pending>,
+    commit_waits: Vec<CommitWait>,
+    /// Connections with a freshly flushed response whose buffered
+    /// pipelined frames should be processed this drain round.
+    runnable: Vec<u64>,
+    next_token: u64,
+    scratch: Vec<u8>,
+}
+
+impl Reactor {
+    fn event_loop(&mut self) {
+        let mut events = vec![EpollEvent::default(); 1024];
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let n = match self.epoll.wait(&mut events, 100) {
+                Ok(n) => n,
+                Err(_) => return,
+            };
+            let ready: Vec<(u64, u32)> =
+                events.iter().take(n).map(|e| (e.token(), e.events())).collect();
+            for (token, bits) in ready {
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.waker.drain(),
+                    _ => self.conn_event(token, bits),
+                }
+            }
+            self.drain_ready();
+        }
+    }
+
+    /// Fan out queued publish wakes, release due commit waits, and run
+    /// buffered pipelined frames — repeating until a fixpoint (each
+    /// iteration consumes buffered work, so this terminates).
+    fn drain_ready(&mut self) {
+        loop {
+            let wakes = std::mem::take(&mut *lock(&self.shared.pending_wakes));
+            for ev in wakes {
+                match ev {
+                    WakeEvent::Key(k) => self.wake_key(&k),
+                    WakeEvent::All => self.wake_all_entries(),
+                }
+            }
+            self.release_due_commits();
+            let run = std::mem::take(&mut self.runnable);
+            for token in run {
+                self.process_buffered(token);
+            }
+            if self.runnable.is_empty()
+                && lock(&self.shared.pending_wakes).is_empty()
+            {
+                return;
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let interest = EPOLLIN | EPOLLRDHUP;
+                    if self.epoll.add(stream.as_raw_fd(), interest, token).is_err() {
+                        continue;
+                    }
+                    self.shared.registrations.add(1);
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            buf: Vec::new(),
+                            wbuf: Vec::new(),
+                            wpos: 0,
+                            state: ConnState::Idle,
+                            interest,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, bits: u32) {
+        if bits & (EPOLLERR | EPOLLHUP) != 0 {
+            return self.close_conn(token);
+        }
+        let Some(c) = self.conns.get(&token) else { return };
+        if !c.wbuf.is_empty() {
+            // mid-flush: only writability (or peer death) matters
+            if bits & EPOLLOUT != 0 {
+                self.flush_conn(token);
+            } else if bits & EPOLLRDHUP != 0 {
+                self.close_conn(token);
+            }
+            return;
+        }
+        match c.state {
+            // parked frames hold only EPOLLRDHUP interest: any event
+            // here is the peer dying, which must unpark-and-discard
+            ConnState::Parked | ConnState::AwaitCommit => self.close_conn(token),
+            ConnState::Idle => {
+                if bits & (EPOLLIN | EPOLLRDHUP) != 0 {
+                    self.read_drain(token);
+                }
+            }
+        }
+    }
+
+    /// Pull everything the socket has (level-triggered — draining now
+    /// saves redundant wakeups), then process complete frames.
+    fn read_drain(&mut self, token: u64) {
+        loop {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            match c.stream.read(&mut self.scratch) {
+                Ok(0) => return self.close_conn(token),
+                Ok(n) => c.buf.extend_from_slice(&self.scratch[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return self.close_conn(token),
+            }
+        }
+        self.process_buffered(token);
+    }
+
+    /// Execute buffered frames one at a time, stopping when the
+    /// connection parks, starts flushing, closes, or runs out of
+    /// complete frames — the reactor's version of "one frame in
+    /// flight per connection".
+    fn process_buffered(&mut self, token: u64) {
+        loop {
+            enum Parse {
+                Stop,
+                TooLarge,
+                Frame(Vec<u8>),
+            }
+            let parsed = {
+                let Some(c) = self.conns.get_mut(&token) else { return };
+                if !matches!(c.state, ConnState::Idle) || !c.wbuf.is_empty() {
+                    return;
+                }
+                if c.buf.len() < 4 {
+                    Parse::Stop
+                } else {
+                    let len = u32::from_le_bytes(c.buf[..4].try_into().unwrap())
+                        as usize;
+                    if len > MAX_FRAME_BYTES {
+                        Parse::TooLarge
+                    } else if c.buf.len() < 4 + len {
+                        Parse::Stop
+                    } else {
+                        let body = c.buf[4..4 + len].to_vec();
+                        c.buf.drain(..4 + len);
+                        Parse::Frame(body)
+                    }
+                }
+            };
+            match parsed {
+                Parse::Stop => return,
+                Parse::TooLarge => return self.close_conn(token),
+                Parse::Frame(body) => self.handle_frame(token, &body),
+            }
+        }
+    }
+
+    /// Decode and begin one frame — mirrors `tcp_store::handle`: one
+    /// frames tick, one trace event, one replication snapshot.
+    fn handle_frame(&mut self, token: u64, body: &[u8]) {
+        self.shared.frames.inc();
+        let Ok((req, ctx)) = Request::decode_traced(body) else {
+            return self.close_conn(token);
+        };
+        if let Some(ctx) = ctx {
+            trace::event_in(ctx, req.op_name(), "store", String::new());
+        }
+        let repl = lock(&self.shared.repl).clone();
+        self.begin(token, repl, req);
+    }
+
+    /// Top-level dispatch — the reactor's `handle_inner` head: role
+    /// check, then the arms that answer immediately (replication
+    /// protocol, cached dedup replays); everything else becomes a
+    /// `Pending` frame run through `run_ops`.
+    fn begin(&mut self, token: u64, repl: Option<Arc<Replicator>>, req: Request) {
+        let sh = self.shared.clone();
+        if sh.role.load(Ordering::SeqCst) == ROLE_REPLICA && !replica_serves(&req) {
+            sh.requests.inc();
+            return self.complete(token, repl, Response::NotPrimary, 0);
+        }
+        let (wrapper, ops) = match req {
+            Request::Replicate { start_index, ops } => {
+                sh.requests.inc();
+                let resp = handle_replicate(&sh, &self.stop, start_index, ops);
+                return self.complete(token, repl, resp, 0);
+            }
+            Request::ReplStatus => {
+                sh.requests.inc();
+                return self.complete(token, repl, repl_status_response(&sh), 0);
+            }
+            Request::Promote { peers } => {
+                sh.requests.inc();
+                let addrs: Vec<SocketAddr> =
+                    peers.iter().filter_map(|p| p.parse().ok()).collect();
+                promote_shared(&sh, &addrs);
+                return self.complete(token, repl, Response::Ok, 0);
+            }
+            Request::Dedup { id, op } => {
+                if let Some(cached) = lock(&sh.dedup).get(id) {
+                    // replayed id: cached answer, no requests tick —
+                    // identical to `handle_dedup`'s replay path
+                    let resp =
+                        Response::decode(&cached).unwrap_or(Response::NotFound);
+                    return self.complete(token, repl, resp, 0);
+                }
+                match *op {
+                    Request::Batch(items) => {
+                        (Wrapper::DedupBatch { id }, VecDeque::from(items))
+                    }
+                    single => {
+                        (Wrapper::DedupSingle { id }, VecDeque::from(vec![single]))
+                    }
+                }
+            }
+            Request::Batch(items) => (Wrapper::Batch, VecDeque::from(items)),
+            single => (Wrapper::Single, VecDeque::from(vec![single])),
+        };
+        let cap = ops.len();
+        self.run_ops(Pending {
+            conn: token,
+            wrapper,
+            rest: ops,
+            out: Vec::with_capacity(cap),
+            entries: Vec::new(),
+            highest: 0,
+            repl,
+            released: false,
+            wait_key: String::new(),
+            wait_epoch: 0,
+        });
+    }
+
+    /// Execute the frame's remaining ops until it parks, fences, is
+    /// shutdown-released, or completes — the loop `handle_inner` runs
+    /// on a thread's stack, resumable at any op boundary.
+    fn run_ops(&mut self, mut p: Pending) {
+        let sh = self.shared.clone();
+        while let Some(op) = p.rest.pop_front() {
+            // per-item role re-check for plain batches only — mirrors
+            // handle_inner's recursion (dedup bodies apply directly)
+            if matches!(p.wrapper, Wrapper::Batch)
+                && sh.role.load(Ordering::SeqCst) == ROLE_REPLICA
+                && !replica_serves(&op)
+            {
+                sh.requests.inc();
+                p.out.push(Response::NotPrimary);
+                continue;
+            }
+            sh.requests.inc();
+            if op.is_blocking() {
+                let (key, epoch) = blocking_target(&op);
+                let polled = {
+                    let g = lock(sh.stripe_for(&key));
+                    wait_poll(&sh, &self.stop, &g, &key, epoch)
+                };
+                match polled {
+                    Some(resp) => {
+                        // resolved without parking: no wakeups tick,
+                        // same as a thread that never waited
+                        if self.push_result(&mut p, true, resp) {
+                            break;
+                        }
+                    }
+                    None => return self.park(p, key, epoch),
+                }
+            } else {
+                let resp = self.exec_nonblocking(&mut p, op);
+                if self.push_result(&mut p, false, resp) {
+                    break;
+                }
+            }
+        }
+        self.finish(p);
+    }
+
+    /// Execute one non-blocking op under the frame's wrapper. Dedup
+    /// bodies apply directly and accumulate loggable entries for one
+    /// atomic append at finish (same log layout as `handle_dedup`);
+    /// plain ops take the same dispatch arms as `handle_inner`.
+    fn exec_nonblocking(&mut self, p: &mut Pending, op: Request) -> Response {
+        let sh = self.shared.clone();
+        match p.wrapper {
+            Wrapper::DedupSingle { .. } | Wrapper::DedupBatch { .. } => {
+                let resp = apply_op(&sh, &self.stop, op.clone());
+                if loggable(&op, &resp) {
+                    p.entries.push(op);
+                }
+                resp
+            }
+            Wrapper::Single | Wrapper::Batch => match op {
+                Request::ReplStatus => repl_status_response(&sh),
+                Request::Promote { peers } => {
+                    let addrs: Vec<SocketAddr> =
+                        peers.iter().filter_map(|s| s.parse().ok()).collect();
+                    promote_shared(&sh, &addrs);
+                    Response::Ok
+                }
+                Request::Replicate { start_index, ops } => {
+                    handle_replicate(&sh, &self.stop, start_index, ops)
+                }
+                op if op.is_mutating() => apply_mutating(
+                    &sh,
+                    &self.stop,
+                    p.repl.as_deref(),
+                    &mut p.highest,
+                    op,
+                ),
+                op => apply_op(&sh, &self.stop, op),
+            },
+        }
+    }
+
+    /// Record one op's response; returns true when the frame must stop
+    /// early (fence, or a blocking op released by shutdown).
+    fn push_result(&mut self, p: &mut Pending, blocking: bool, resp: Response) -> bool {
+        let fenced = matches!(resp, Response::EpochFenced { .. });
+        let released = blocking
+            && resp == Response::NotFound
+            && self.stop.load(Ordering::Relaxed);
+        p.out.push(resp);
+        if released {
+            p.released = true;
+            return true;
+        }
+        fenced
+    }
+
+    /// Suspend the frame: its id joins the key's slot (beside any
+    /// parked threads), interest narrows to peer-death, and the state
+    /// machine waits for a `WakeEvent` to resume it.
+    fn park(&mut self, mut p: Pending, key: String, epoch: u64) {
+        let token = p.conn;
+        {
+            let mut g = lock(self.shared.stripe_for(&key));
+            g.parked.entry(key.clone()).or_default().entries.push(token);
+        }
+        self.shared.parked.add(1);
+        p.wait_key = key;
+        p.wait_epoch = epoch;
+        if let Some(c) = self.conns.get_mut(&token) {
+            c.state = ConnState::Parked;
+        }
+        self.set_interest(token, EPOLLRDHUP);
+        self.pending.insert(token, p);
+    }
+
+    /// Resume a parked frame off the wakeup queue: re-poll under the
+    /// stripe lock (the value may have been consumed or the wake may
+    /// be spurious — same re-check a notified thread performs) and
+    /// either re-park or continue the frame.
+    fn resume(&mut self, token: u64) {
+        let Some(mut p) = self.pending.remove(&token) else { return };
+        self.shared.parked.sub(1);
+        let polled = {
+            let g = lock(self.shared.stripe_for(&p.wait_key));
+            wait_poll(&self.shared, &self.stop, &g, &p.wait_key, p.wait_epoch)
+        };
+        match polled {
+            None => {
+                // spurious wake: back onto the slot
+                {
+                    let mut g = lock(self.shared.stripe_for(&p.wait_key));
+                    g.parked
+                        .entry(p.wait_key.clone())
+                        .or_default()
+                        .entries
+                        .push(token);
+                }
+                self.shared.parked.add(1);
+                self.pending.insert(token, p);
+            }
+            Some(resp) => {
+                // parked-then-published: the deterministic wakeup
+                if matches!(resp, Response::Value(_)) {
+                    self.shared.wakeups.inc();
+                }
+                if self.push_result(&mut p, true, resp) {
+                    self.finish(p);
+                } else {
+                    self.run_ops(p);
+                }
+            }
+        }
+    }
+
+    /// Fold the collected responses per the wrapper and (for fresh
+    /// dedup ids that weren't shutdown-released) cache + log the
+    /// response with its ops in one atomic append — byte-identical to
+    /// `handle_dedup`'s layout.
+    fn finish(&mut self, mut p: Pending) {
+        let resp = match p.wrapper {
+            Wrapper::Single => p.out.pop().unwrap_or(Response::NotFound),
+            Wrapper::Batch => Response::Multi(std::mem::take(&mut p.out)),
+            Wrapper::DedupSingle { id } => {
+                let resp = p.out.pop().unwrap_or(Response::NotFound);
+                if p.released {
+                    resp // uncached: the client replays fresh
+                } else {
+                    self.seal_dedup(&mut p, id, &resp);
+                    resp
+                }
+            }
+            Wrapper::DedupBatch { id } => {
+                let resp = Response::Multi(std::mem::take(&mut p.out));
+                if p.released {
+                    resp // executed prefix dies with this primary
+                } else {
+                    self.seal_dedup(&mut p, id, &resp);
+                    resp
+                }
+            }
+        };
+        self.complete(p.conn, p.repl.clone(), resp, p.highest);
+    }
+
+    /// Install the dedup cache entry and ship `[ops.., DedupDone]` as
+    /// one contiguous log append.
+    fn seal_dedup(&mut self, p: &mut Pending, id: u64, resp: &Response) {
+        let body = encode_resp_body(resp);
+        lock(&self.shared.dedup).insert(id, body.clone());
+        p.entries.push(Request::DedupDone { id, resp: body });
+        if let Some(r) = &p.repl {
+            if let Some(idx) = r.append(std::mem::take(&mut p.entries)) {
+                bump_applied(&self.shared, &mut p.highest, idx);
+            }
+        }
+    }
+
+    /// Ship the response — or, when the frame logged replicated ops
+    /// not yet committed, park it as a commit wait (the reactor's
+    /// `wait_committed`: released by watermark advance, degradation,
+    /// shutdown, or the 10s deadline).
+    fn complete(
+        &mut self,
+        token: u64,
+        repl: Option<Arc<Replicator>>,
+        resp: Response,
+        highest: u64,
+    ) {
+        if let Some(c) = self.conns.get_mut(&token) {
+            c.state = ConnState::Idle;
+        } else {
+            return;
+        }
+        if highest > 0 && !self.stop.load(Ordering::Relaxed) {
+            if let Some(r) = repl {
+                if r.watermark() < highest && !r.is_degraded() {
+                    r.set_commit_waker(self.wake_hook.clone());
+                    if let Some(c) = self.conns.get_mut(&token) {
+                        c.state = ConnState::AwaitCommit;
+                    }
+                    self.set_interest(token, EPOLLRDHUP);
+                    self.commit_waits.push(CommitWait {
+                        conn: token,
+                        repl: r,
+                        index: highest,
+                        deadline: Instant::now() + COMMIT_DEADLINE,
+                        resp,
+                    });
+                    return;
+                }
+            }
+        }
+        self.send(token, resp);
+    }
+
+    fn release_due_commits(&mut self) {
+        if self.commit_waits.is_empty() {
+            return;
+        }
+        let stop = self.stop.load(Ordering::Relaxed);
+        let now = Instant::now();
+        let mut ready = Vec::new();
+        let mut i = 0;
+        while i < self.commit_waits.len() {
+            let w = &self.commit_waits[i];
+            if stop
+                || now >= w.deadline
+                || w.repl.is_degraded()
+                || w.repl.watermark() >= w.index
+            {
+                ready.push(self.commit_waits.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for w in ready {
+            if let Some(c) = self.conns.get_mut(&w.conn) {
+                c.state = ConnState::Idle;
+            }
+            self.send(w.conn, w.resp);
+        }
+    }
+
+    /// Drain entries parked on one key's slot (a `Set` published it).
+    fn wake_key(&mut self, key: &str) {
+        let ids = {
+            let mut g = lock(self.shared.stripe_for(key));
+            match g.parked.get_mut(key) {
+                Some(slot) => {
+                    let ids = std::mem::take(&mut slot.entries);
+                    if slot.waiters == 0 {
+                        g.parked.remove(key);
+                    }
+                    ids
+                }
+                None => return,
+            }
+        };
+        for token in ids {
+            self.resume(token);
+        }
+    }
+
+    /// Drain every parked entry (epoch advance / shutdown broadcast).
+    fn wake_all_entries(&mut self) {
+        let sh = self.shared.clone();
+        let mut ids = Vec::new();
+        for stripe in &sh.stripes {
+            let mut g = lock(stripe);
+            for slot in g.parked.values_mut() {
+                ids.append(&mut slot.entries);
+            }
+            g.parked.retain(|_, s| s.waiters > 0 || !s.entries.is_empty());
+        }
+        for token in ids {
+            self.resume(token);
+        }
+    }
+
+    /// Encode the response into the connection's write buffer and
+    /// start flushing.
+    fn send(&mut self, token: u64, resp: Response) {
+        let Some(c) = self.conns.get_mut(&token) else { return };
+        resp.encode_into(&mut c.wbuf);
+        c.wpos = 0;
+        self.flush_conn(token);
+    }
+
+    /// Push buffered response bytes until done or the socket backs up
+    /// (then wait for EPOLLOUT — slow readers park the *connection*,
+    /// never a thread).
+    fn flush_conn(&mut self, token: u64) {
+        loop {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if c.wpos >= c.wbuf.len() {
+                c.wbuf.clear();
+                c.wpos = 0;
+                self.set_interest(token, EPOLLIN | EPOLLRDHUP);
+                // pipelined frames may already be buffered
+                self.runnable.push(token);
+                return;
+            }
+            match c.stream.write(&c.wbuf[c.wpos..]) {
+                Ok(0) => return self.close_conn(token),
+                Ok(n) => c.wpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return self.set_interest(token, EPOLLOUT | EPOLLRDHUP);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return self.close_conn(token),
+            }
+        }
+    }
+
+    fn set_interest(&mut self, token: u64, events: u32) {
+        if let Some(c) = self.conns.get_mut(&token) {
+            if c.interest != events {
+                c.interest = events;
+                let _ = self.epoll.modify(c.stream.as_raw_fd(), events, token);
+            }
+        }
+    }
+
+    /// Tear a connection down: deregister, and if a frame was parked
+    /// on it, unhook the entry from its slot and drop the frame — the
+    /// no-leak path the churn test exercises.
+    fn close_conn(&mut self, token: u64) {
+        let Some(c) = self.conns.remove(&token) else { return };
+        let _ = self.epoll.delete(c.stream.as_raw_fd());
+        self.shared.registrations.sub(1);
+        match c.state {
+            ConnState::Idle => {}
+            ConnState::Parked => {
+                if let Some(p) = self.pending.remove(&token) {
+                    self.shared.parked.sub(1);
+                    let mut g = lock(self.shared.stripe_for(&p.wait_key));
+                    if let Some(slot) = g.parked.get_mut(&p.wait_key) {
+                        slot.entries.retain(|t| *t != token);
+                        if slot.waiters == 0 && slot.entries.is_empty() {
+                            g.parked.remove(&p.wait_key);
+                        }
+                    }
+                }
+            }
+            ConnState::AwaitCommit => {
+                self.commit_waits.retain(|w| w.conn != token);
+            }
+        }
+    }
+
+    /// Stop-flag observed: release every parked frame with the same
+    /// fence→value→stop resolution a dying threaded server applies,
+    /// flush commit waits, then deliver outstanding bytes best-effort
+    /// (blocking with a short timeout) so clients *receive* their
+    /// shutdown release — the failover trigger `StoreSession` acts on.
+    fn shutdown_drain(&mut self) {
+        let parked: Vec<u64> = self.pending.keys().copied().collect();
+        for token in parked {
+            self.resume(token); // stop ⇒ wait_poll always resolves
+        }
+        self.release_due_commits(); // stop ⇒ releases everything
+        for c in self.conns.values_mut() {
+            if c.wpos < c.wbuf.len() {
+                c.stream.set_nonblocking(false).ok();
+                c.stream
+                    .set_write_timeout(Some(Duration::from_millis(500)))
+                    .ok();
+                let _ = c.stream.write_all(&c.wbuf[c.wpos..]);
+            }
+        }
+    }
+}
+
+/// The key a blocking op parks on and the epoch it is fenced at.
+fn blocking_target(op: &Request) -> (String, u64) {
+    match op {
+        Request::Wait { key } => (key.clone(), u64::MAX),
+        Request::WaitEpoch { key, epoch } => (key.clone(), *epoch),
+        Request::ClaimRestore { epoch, tag } => (restore_key(*epoch, *tag), *epoch),
+        _ => unreachable!("not a blocking op"),
+    }
+}

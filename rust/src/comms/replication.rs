@@ -127,6 +127,12 @@ pub struct Replicator {
     commit_cv: Condvar,
     stop: AtomicBool,
     shipper: Mutex<Option<JoinHandle<()>>>,
+    /// Event-loop hook: the store reactor parks commit waits as
+    /// entries instead of blocking in [`Self::wait_committed`], so the
+    /// shipper pings this callback (an eventfd write) whenever the
+    /// watermark moves or the plane degrades. `None` under the
+    /// threaded core — the condvar alone covers blocked threads.
+    commit_waker: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
 }
 
 impl Replicator {
@@ -155,6 +161,7 @@ impl Replicator {
             commit_cv: Condvar::new(),
             stop: AtomicBool::new(false),
             shipper: Mutex::new(None),
+            commit_waker: Mutex::new(None),
         });
         let r2 = repl.clone();
         let h = std::thread::spawn(move || shipper_loop(&r2, conns));
@@ -224,11 +231,38 @@ impl Replicator {
         lock(&self.commit).live_replicas
     }
 
+    /// Highest log index known committed on a quorum — the reactor's
+    /// nonblocking commit-wait check ([`Self::wait_committed`] is the
+    /// blocking form the threaded core uses).
+    pub(crate) fn watermark(&self) -> u64 {
+        lock(&self.commit).watermark
+    }
+
+    /// Degraded (no live replicas): pending commit waits release
+    /// immediately.
+    pub(crate) fn is_degraded(&self) -> bool {
+        lock(&self.commit).degraded
+    }
+
+    /// Install the event-loop wake hook the shipper pings on every
+    /// watermark advance / degradation (see `commit_waker`).
+    pub(crate) fn set_commit_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        *lock(&self.commit_waker) = Some(waker);
+    }
+
+    fn ping_commit_waker(&self) {
+        let waker = lock(&self.commit_waker).clone();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+
     /// Stop the shipper (after it drains any queued entries) and join.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
         self.ship_cv.notify_all();
         self.commit_cv.notify_all();
+        self.ping_commit_waker();
         if let Some(h) = lock(&self.shipper).take() {
             let _ = h.join();
         }
@@ -292,12 +326,14 @@ fn shipper_loop(r: &Replicator, mut conns: Vec<TcpStoreClient>) {
         }
         drop(cs);
         r.commit_cv.notify_all();
+        r.ping_commit_waker();
     }
     // release every committer on the way out
     let mut cs = lock(&r.commit);
     cs.degraded = true;
     drop(cs);
     r.commit_cv.notify_all();
+    r.ping_commit_waker();
 }
 
 // ---------------------------------------------------------------------------

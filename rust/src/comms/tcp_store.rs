@@ -10,11 +10,19 @@
 //! every blocked rank (epoch advances and shutdown are the only
 //! broadcasts). Values are stored as [`Bytes`] (`Arc<[u8]>`) — a
 //! `Get`/`Wait` response is a refcount bump, never a deep copy — and
-//! each connection reuses one read and one write buffer. Connections
-//! are served by a worker pool that reuses threads across connection
-//! churn and grows only to the concurrency high-water mark, replacing
-//! the old thread-per-connection loop whose `JoinHandle` list grew
-//! without bound.
+//! each connection reuses one read and one write buffer.
+//!
+//! Serving core (DESIGN.md §14): on Linux the default
+//! [`StoreCore::Reactor`] serves *every* connection from one
+//! readiness-driven event loop (`comms/reactor`, epoll vendored in
+//! `util/epoll`) — nonblocking sockets, per-connection read/write
+//! state machines, and blocked waiters parked as *entries* on the
+//! same per-key slots, so 65k clients cost one thread instead of 65k.
+//! [`StoreCore::Threads`] keeps the PR 5 token-accounted worker pool
+//! (one thread per concurrently *active* connection) as the portable
+//! fallback and the bench comparison baseline. Both cores share the
+//! wire loop's semantics bit-for-bit: same opcodes, same `Batch`
+//! stop rules, same replication log shipping, same trace trailers.
 //!
 //! [`establish`] measures store-establishment for `n` clients with a
 //! configurable parallelism degree: `p = 1` is the serialized baseline
@@ -47,7 +55,7 @@ const STRIPES: usize = 16;
 /// client, never cascade panics into every later request (the map is
 /// plain data — there is no invariant a partial update could tear
 /// that the wire protocol does not already tolerate).
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(super) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
@@ -62,26 +70,31 @@ pub struct BeatRecord {
     pub at: Instant,
 }
 
-/// Waiters parked on one key: they all wait on this slot's condvar
-/// (with the owning stripe's mutex), so a `Set` of the key notifies
-/// exactly them.
-struct WaitSlot {
-    cv: Arc<Condvar>,
-    waiters: usize,
+/// Waiters parked on one key. The threaded core parks *threads*: they
+/// wait on this slot's condvar (with the owning stripe's mutex), so a
+/// `Set` of the key notifies exactly them. The reactor core parks
+/// *entries*: `entries` holds the ids of suspended frame state
+/// machines, and a `Set` enqueues exactly those ids onto the wakeup
+/// queue the event loop drains. A slot lives while either population
+/// is non-empty.
+pub(super) struct WaitSlot {
+    pub(super) cv: Arc<Condvar>,
+    pub(super) waiters: usize,
+    pub(super) entries: Vec<u64>,
 }
 
 impl WaitSlot {
     fn new() -> Self {
-        WaitSlot { cv: Arc::new(Condvar::new()), waiters: 0 }
+        WaitSlot { cv: Arc::new(Condvar::new()), waiters: 0, entries: Vec::new() }
     }
 }
 
 /// One lock stripe's worth of store state.
 #[derive(Default)]
-struct Stripe {
-    map: HashMap<String, Bytes>,
-    counters: HashMap<String, i64>,
-    parked: HashMap<String, WaitSlot>,
+pub(super) struct Stripe {
+    pub(super) map: HashMap<String, Bytes>,
+    pub(super) counters: HashMap<String, i64>,
+    pub(super) parked: HashMap<String, WaitSlot>,
 }
 
 impl Default for WaitSlot {
@@ -90,8 +103,18 @@ impl Default for WaitSlot {
     }
 }
 
-struct Shared {
-    stripes: Vec<Mutex<Stripe>>,
+/// A publish event the reactor core must fan out to parked entries.
+/// Pushed by `set_value` (exactly the touched key) and `wake_all`
+/// (epoch advance / shutdown broadcast), drained by the event loop.
+/// The threaded core never enqueues (no parked entries exist there),
+/// so the queue is free when unused.
+pub(super) enum WakeEvent {
+    Key(String),
+    All,
+}
+
+pub(super) struct Shared {
+    pub(super) stripes: Vec<Mutex<Stripe>>,
     /// rank % STRIPES -> (rank -> latest heartbeat; highest
     /// incarnation wins).
     beats: Vec<Mutex<HashMap<u64, BeatRecord>>>,
@@ -106,21 +129,41 @@ struct Shared {
     /// are released with `EpochFenced` when this advances. Protocol
     /// state, not a metric (fence checks need SeqCst ordering) — the
     /// snapshot mirrors it as a gauge.
-    epoch: AtomicU64,
+    pub(super) epoch: AtomicU64,
     /// Logical requests served (each batched sub-op counts as one) —
     /// lets tests assert that rebuild traffic is independent of
     /// cluster size even when ops are pipelined.
-    requests: Counter,
+    pub(super) requests: Counter,
     /// Wire frames read (a `Batch` of k ops is one frame) — the
     /// round-trip count the pipelined client amortises.
-    frames: Counter,
+    pub(super) frames: Counter,
     /// Parked waiters *released by a publish* (the waiter parked at
     /// least once, then found its key's value). Deliberately not a
     /// raw condvar-notify count — notifies race timeout boundaries
     /// and spurious wakeups, so only the deterministic observable is
     /// counted: per-key parking makes this exactly the matching
     /// waiters per publish, never the whole herd.
-    wakeups: Counter,
+    pub(super) wakeups: Counter,
+    /// Waiters currently parked — threads (threaded core) plus
+    /// suspended entries (reactor core). Maintained incrementally
+    /// (inc on park, dec on wake/fence/abort) so a `Stats` poll
+    /// mid-episode is O(1) instead of a walk over every stripe's
+    /// parked map.
+    pub(super) parked: Gauge,
+    /// Open connections registered with the serving core — reactor
+    /// registrations, or queued/served sockets under the pool. The
+    /// churn leak test asserts this returns to baseline.
+    pub(super) registrations: Gauge,
+    /// Peak store-serving threads (1 for the reactor; 1 + the worker
+    /// high-water mark for the pool) — the "65k clients ≤ cores +
+    /// constant threads" gate reads this off a `Stats` snapshot.
+    pub(super) core_threads: Gauge,
+    /// Publish events awaiting reactor fan-out (see [`WakeEvent`]).
+    pub(super) pending_wakes: Mutex<Vec<WakeEvent>>,
+    /// Reactor wake hook (an eventfd write): lets `wake_all` callers
+    /// on foreign threads (server `Drop`) rouse the event loop out of
+    /// `epoll_wait`. `None` under the threaded core.
+    pub(super) reactor_waker: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
     /// Pool workers currently alive, and total ever spawned.
     live_workers: Gauge,
     /// Readiness tokens: each pool worker announces one token per
@@ -137,18 +180,18 @@ struct Shared {
     /// server serves everything) or [`ROLE_REPLICA`] (mutations are
     /// refused with `NotPrimary`; only `Replicate` frames from the
     /// primary mutate state). Flipped by `Promote` / `set_replica`.
-    role: AtomicU8,
+    pub(super) role: AtomicU8,
     /// Highest replication log index applied on this node. On the
     /// primary it advances as ops are logged; on a replica, as
     /// `Replicate` frames apply. Discovery compares it (after the
     /// epoch) to elect the most advanced replica.
-    applied: AtomicU64,
+    pub(super) applied: AtomicU64,
     /// Exactly-once cache for `Dedup`-wrapped ops, replicated via
     /// `DedupDone` log entries so replays are refused across failover.
-    dedup: Mutex<DedupMap>,
+    pub(super) dedup: Mutex<DedupMap>,
     /// The primary's log shipper (None = un-replicated: the entire
     /// replication path is skipped, zero added overhead).
-    repl: Mutex<Option<Arc<Replicator>>>,
+    pub(super) repl: Mutex<Option<Arc<Replicator>>>,
 }
 
 impl Shared {
@@ -158,6 +201,9 @@ impl Shared {
         let requests = metrics.counter("store.requests");
         let frames = metrics.counter("store.frames");
         let wakeups = metrics.counter("store.wakeups");
+        let parked = metrics.gauge("store.parked_waiters");
+        let registrations = metrics.gauge("store.registrations");
+        let core_threads = metrics.gauge("store.core_threads");
         let live_workers = metrics.gauge("store.live_workers");
         let workers_spawned = metrics.counter("store.workers_spawned");
         Shared {
@@ -169,6 +215,11 @@ impl Shared {
             requests,
             frames,
             wakeups,
+            parked,
+            registrations,
+            core_threads,
+            pending_wakes: Mutex::new(Vec::new()),
+            reactor_waker: Mutex::new(None),
             live_workers,
             free_workers: AtomicUsize::new(0),
             workers_spawned,
@@ -179,26 +230,22 @@ impl Shared {
         }
     }
 
-    /// Registry snapshot plus the derived levels (key/counter/parked
+    /// Registry snapshot plus the derived levels (key/counter
     /// populations, epoch) refreshed at capture time — the `Stats`
-    /// wire op's payload.
-    fn metrics_snapshot(&self) -> Snapshot {
+    /// wire op's payload. `store.parked_waiters` is *not* recomputed
+    /// here: it is maintained incrementally at park/wake time, so a
+    /// `Stats` poll never walks the stripes' parked maps.
+    pub(super) fn metrics_snapshot(&self) -> Snapshot {
         let keys: usize = self.stripes.iter().map(|s| lock(s).map.len()).sum();
         let counters: usize =
             self.stripes.iter().map(|s| lock(s).counters.len()).sum();
-        let parked: usize = self
-            .stripes
-            .iter()
-            .map(|s| lock(s).parked.values().map(|w| w.waiters).sum::<usize>())
-            .sum();
         self.metrics.gauge("store.keys").set(keys as i64);
         self.metrics.gauge("store.counters").set(counters as i64);
-        self.metrics.gauge("store.parked_waiters").set(parked as i64);
         self.metrics.gauge("store.epoch").set(self.epoch.load(Ordering::SeqCst) as i64);
         self.metrics.snapshot()
     }
 
-    fn stripe_for(&self, key: &str) -> &Mutex<Stripe> {
+    pub(super) fn stripe_for(&self, key: &str) -> &Mutex<Stripe> {
         let h = crate::util::fnv1a(key.as_bytes()) as usize;
         &self.stripes[h % STRIPES]
     }
@@ -208,28 +255,72 @@ impl Shared {
     }
 
     /// Insert `key = value` and wake exactly that key's parked
-    /// waiters (the per-key parking protocol's publish half).
-    fn set_value(&self, key: String, value: Bytes) {
+    /// waiters (the per-key parking protocol's publish half): notify
+    /// the slot's condvar for parked threads, and enqueue a key wake
+    /// event for parked reactor entries (only when any exist — the
+    /// threaded core never pays the queue push).
+    pub(super) fn set_value(&self, key: String, value: Bytes) {
         let mut g = lock(self.stripe_for(&key));
-        let cv = g.parked.get(&key).map(|s| s.cv.clone());
+        let (cv, has_entries) = match g.parked.get(&key) {
+            Some(s) => (Some(s.cv.clone()), !s.entries.is_empty()),
+            None => (None, false),
+        };
+        let wake_key = has_entries.then(|| key.clone());
         g.map.insert(key, value);
         drop(g);
         if let Some(cv) = cv {
             cv.notify_all();
         }
+        if let Some(k) = wake_key {
+            lock(&self.pending_wakes).push(WakeEvent::Key(k));
+        }
     }
 
     /// Broadcast to every parked waiter — only for the rare global
-    /// transitions (epoch advance, shutdown), never per `Set`.
-    fn wake_all(&self) {
+    /// transitions (epoch advance, shutdown), never per `Set`. Also
+    /// rouses the reactor (if one is serving) so it observes the stop
+    /// flag / new epoch and fans the broadcast out to parked entries.
+    pub(super) fn wake_all(&self) {
+        let mut any_entries = false;
         for stripe in &self.stripes {
             let g = lock(stripe);
+            any_entries |= g.parked.values().any(|s| !s.entries.is_empty());
             let cvs: Vec<Arc<Condvar>> =
                 g.parked.values().map(|s| s.cv.clone()).collect();
             drop(g);
             for cv in cvs {
                 cv.notify_all();
             }
+        }
+        if any_entries {
+            lock(&self.pending_wakes).push(WakeEvent::All);
+        }
+        let waker = lock(&self.reactor_waker).clone();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+}
+
+/// Which serving core a [`TcpStoreServer`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreCore {
+    /// One readiness-driven event loop serves every connection
+    /// (DESIGN.md §14). Linux only — requesting it elsewhere falls
+    /// back to [`StoreCore::Threads`].
+    Reactor,
+    /// The PR 5 token-accounted worker pool: one OS thread per
+    /// concurrently active (or parked) connection.
+    Threads,
+}
+
+impl StoreCore {
+    /// The platform default: the reactor wherever epoll exists.
+    pub fn default_core() -> StoreCore {
+        if cfg!(target_os = "linux") {
+            StoreCore::Reactor
+        } else {
+            StoreCore::Threads
         }
     }
 }
@@ -239,7 +330,8 @@ pub struct TcpStoreServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    core: StoreCore,
+    serve_thread: Option<JoinHandle<()>>,
 }
 
 impl TcpStoreServer {
@@ -251,94 +343,42 @@ impl TcpStoreServer {
     /// Bind on a specific local address (e.g. a test racing a client
     /// that retries a known endpoint before the store is up).
     pub fn start_on(bind: SocketAddr) -> Result<Self> {
+        Self::start_with(bind, StoreCore::default_core())
+    }
+
+    /// Bind and serve with an explicit core — the bench harness runs
+    /// both cores side by side, and the pool's thread-accounting test
+    /// pins [`StoreCore::Threads`].
+    pub fn start_with(bind: SocketAddr, core: StoreCore) -> Result<Self> {
         let listener = TcpListener::bind(bind).context("bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared::new());
         let stop = Arc::new(AtomicBool::new(false));
-
-        let accept_shared = shared.clone();
-        let accept_stop = stop.clone();
-        let accept_thread = std::thread::spawn(move || {
-            // Worker pool: accepted connections flow through a shared
-            // queue; a worker serves one connection at a time and then
-            // returns to the queue. A new worker is spawned only when
-            // no idle worker exists, so the pool (and its JoinHandle
-            // list) is bounded by the concurrency high-water mark —
-            // connection *churn* reuses threads instead of leaking one
-            // handle per connection.
-            let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
-            let conn_rx = Arc::new(Mutex::new(conn_rx));
-            let mut workers: Vec<JoinHandle<()>> = Vec::new();
-            while !accept_stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        // Consume one readiness token; if none is
-                        // available every live worker is (or may soon
-                        // be) busy — possibly parked in a fenced wait
-                        // — so this connection gets its own worker.
-                        let has_free = accept_shared
-                            .free_workers
-                            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
-                                v.checked_sub(1)
-                            })
-                            .is_ok();
-                        if !has_free {
-                            let sh = accept_shared.clone();
-                            let st = accept_stop.clone();
-                            let rx = conn_rx.clone();
-                            sh.live_workers.add(1);
-                            sh.workers_spawned.inc();
-                            workers.push(std::thread::spawn(move || {
-                                pool_worker(rx, sh, st)
-                            }));
-                        }
-                        let _ = conn_tx.send(stream);
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_micros(200));
-                    }
-                    Err(_) => break,
-                }
+        let core = if cfg!(target_os = "linux") { core } else { StoreCore::Threads };
+        let serve_thread = match core {
+            StoreCore::Reactor => spawn_reactor(listener, shared.clone(), stop.clone()),
+            StoreCore::Threads => {
+                spawn_thread_core(listener, shared.clone(), stop.clone())
             }
-            // Closing the queue releases idle workers; parked waiters
-            // are released by the server's Drop broadcast.
-            drop(conn_tx);
-            for w in workers {
-                let _ = w.join();
-            }
-        });
-
-        Ok(TcpStoreServer { addr, shared, stop, accept_thread: Some(accept_thread) })
+        };
+        Ok(TcpStoreServer { addr, shared, stop, core, serve_thread: Some(serve_thread) })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
-    /// Number of Hello handshakes seen (establishment bookkeeping).
-    #[deprecated(note = "use metrics_snapshot().counter(\"store.hellos\")")]
-    pub fn hello_count(&self) -> u64 {
-        self.shared.hellos.get()
+    /// The serving core this instance actually runs (a `Reactor`
+    /// request degrades to `Threads` off-Linux).
+    pub fn core(&self) -> StoreCore {
+        self.core
     }
 
     /// Snapshot of the server's metrics registry — the same payload
     /// the `Stats` wire op serves to remote clients.
     pub fn metrics_snapshot(&self) -> Snapshot {
         self.shared.metrics_snapshot()
-    }
-
-    /// Number of keys currently stored (all stripes).
-    #[deprecated(note = "use metrics_snapshot().gauge(\"store.keys\")")]
-    pub fn key_count(&self) -> usize {
-        self.shared.stripes.iter().map(|s| lock(s).map.len()).sum()
-    }
-
-    /// Number of live barrier/arrive counters (pruned with the map's
-    /// per-epoch keys on epoch advance).
-    #[deprecated(note = "use metrics_snapshot().gauge(\"store.counters\")")]
-    pub fn counter_count(&self) -> usize {
-        self.shared.stripes.iter().map(|s| lock(s).counters.len()).sum()
     }
 
     /// Snapshot of every rank's latest heartbeat record — what the
@@ -363,53 +403,6 @@ impl TcpStoreServer {
     /// Current rendezvous epoch (advanced by `AdvanceEpoch`).
     pub fn epoch(&self) -> u64 {
         self.shared.epoch.load(Ordering::SeqCst)
-    }
-
-    /// Logical requests served since start (batched sub-ops count
-    /// individually).
-    #[deprecated(note = "use metrics_snapshot().counter(\"store.requests\")")]
-    pub fn request_count(&self) -> u64 {
-        self.shared.requests.get()
-    }
-
-    /// Wire frames read since start (one per round-trip; a `Batch` of
-    /// k ops is one frame).
-    #[deprecated(note = "use metrics_snapshot().counter(\"store.frames\")")]
-    pub fn frame_count(&self) -> u64 {
-        self.shared.frames.get()
-    }
-
-    /// Parked waiters released by a publish so far (timeout polls and
-    /// fence/shutdown releases excluded). With per-key parking, one
-    /// `Set` contributes exactly its key's parked-waiter count — the
-    /// thundering-herd regression metric.
-    #[deprecated(note = "use metrics_snapshot().counter(\"store.wakeups\")")]
-    pub fn wake_count(&self) -> u64 {
-        self.shared.wakeups.get()
-    }
-
-    /// Waiters currently parked on per-key slots (all stripes).
-    #[deprecated(note = "use metrics_snapshot().gauge(\"store.parked_waiters\")")]
-    pub fn parked_waiters(&self) -> usize {
-        self.shared
-            .stripes
-            .iter()
-            .map(|s| lock(s).parked.values().map(|w| w.waiters).sum::<usize>())
-            .sum()
-    }
-
-    /// Pool workers currently alive (== the connection-concurrency
-    /// high-water mark, not the historical connection count).
-    #[deprecated(note = "use metrics_snapshot().gauge(\"store.live_workers\")")]
-    pub fn live_workers(&self) -> usize {
-        self.shared.live_workers.get().max(0) as usize
-    }
-
-    /// Pool workers ever spawned — stays near the peak concurrency
-    /// under connection churn (thread reuse).
-    #[deprecated(note = "use metrics_snapshot().counter(\"store.workers_spawned\")")]
-    pub fn workers_spawned(&self) -> u64 {
-        self.shared.workers_spawned.get()
     }
 
     /// Demote this server to a log-shipping replica: it refuses
@@ -450,13 +443,107 @@ impl Drop for TcpStoreServer {
             r.shutdown();
         }
         self.stop.store(true, Ordering::Relaxed);
-        // Wake every parked waiter so their pool workers can observe
-        // stop; idle workers exit when the accept thread closes the
-        // connection queue.
+        // Wake every parked waiter so their pool workers (or the
+        // reactor, via its eventfd hook) can observe stop; idle pool
+        // workers exit when the accept thread closes the connection
+        // queue.
         self.shared.wake_all();
-        if let Some(h) = self.accept_thread.take() {
+        if let Some(h) = self.serve_thread.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Spawn the event-loop core (Linux): one thread owns the listener,
+/// every connection, and every parked frame.
+#[cfg(target_os = "linux")]
+fn spawn_reactor(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || super::reactor::run(listener, shared, stop))
+}
+
+/// Off-Linux the `Reactor` variant is unreachable (`start_with`
+/// coerces to `Threads`); this stub keeps the call site monomorphic.
+#[cfg(not(target_os = "linux"))]
+fn spawn_reactor(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    spawn_thread_core(listener, shared, stop)
+}
+
+/// Spawn the threaded core's accept loop. Worker pool: accepted
+/// connections flow through a shared queue; a worker serves one
+/// connection at a time and then returns to the queue. A new worker
+/// is spawned only when no idle worker exists, so the pool (and its
+/// `JoinHandle` list) is bounded by the concurrency high-water mark —
+/// connection *churn* reuses threads instead of leaking one handle
+/// per connection.
+fn spawn_thread_core(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || run_thread_core(listener, shared, stop))
+}
+
+/// The threaded core's accept loop body (also the reactor's fallback
+/// if epoll/eventfd setup fails — it already owns the serve thread).
+pub(super) fn run_thread_core(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+) {
+    shared.core_threads.set(1); // the accept thread itself
+    let (conn_tx, conn_rx) = std::sync::mpsc::channel::<TcpStream>();
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Consume one readiness token; if none is
+                // available every live worker is (or may soon
+                // be) busy — possibly parked in a fenced wait
+                // — so this connection gets its own worker.
+                let has_free = shared
+                    .free_workers
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                        v.checked_sub(1)
+                    })
+                    .is_ok();
+                if !has_free {
+                    let sh = shared.clone();
+                    let st = stop.clone();
+                    let rx = conn_rx.clone();
+                    sh.live_workers.add(1);
+                    sh.workers_spawned.inc();
+                    // peak serving threads = accept + live pool
+                    // (this thread is the gauge's only writer)
+                    let live = 1 + sh.live_workers.get();
+                    if live > sh.core_threads.get() {
+                        sh.core_threads.set(live);
+                    }
+                    workers.push(std::thread::spawn(move || {
+                        pool_worker(rx, sh, st)
+                    }));
+                }
+                let _ = conn_tx.send(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(_) => break,
+        }
+    }
+    // Closing the queue releases idle workers; parked waiters
+    // are released by the server's Drop broadcast.
+    drop(conn_tx);
+    for w in workers {
+        let _ = w.join();
     }
 }
 
@@ -491,7 +578,9 @@ fn pool_worker(
                 Err(_) => break, // queue closed: shutdown
             }
         };
+        shared.registrations.add(1);
         let _ = serve_connection(conn, &shared, &stop);
+        shared.registrations.sub(1);
     }
     shared.live_workers.sub(1);
 }
@@ -611,7 +700,7 @@ fn handle(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
 /// Ops a replica serves directly: reads, discovery, and the
 /// replication protocol itself. Everything else answers `NotPrimary`
 /// so the client's session fails over.
-fn replica_serves(req: &Request) -> bool {
+pub(super) fn replica_serves(req: &Request) -> bool {
     matches!(
         req,
         Request::Hello { .. }
@@ -693,7 +782,7 @@ fn handle_inner(
 /// lock that applied it (apply order == log order, even across racing
 /// connections). Conditional mutations (`AbortEpoch`,
 /// `AdvertiseRestore`) are logged only when they actually mutated.
-fn apply_mutating(
+pub(super) fn apply_mutating(
     shared: &Shared,
     stop: &AtomicBool,
     repl: Option<&Replicator>,
@@ -722,7 +811,7 @@ fn apply_mutating(
 /// Should this executed op enter the replication log? Unconditional
 /// mutations always do; conditional ones only when their response
 /// shows they fired.
-fn loggable(req: &Request, resp: &Response) -> bool {
+pub(super) fn loggable(req: &Request, resp: &Response) -> bool {
     match req {
         Request::Set { .. }
         | Request::Add { .. }
@@ -736,14 +825,14 @@ fn loggable(req: &Request, resp: &Response) -> bool {
     }
 }
 
-fn bump_applied(shared: &Shared, highest: &mut u64, idx: u64) {
+pub(super) fn bump_applied(shared: &Shared, highest: &mut u64, idx: u64) {
     shared.applied.fetch_max(idx, Ordering::SeqCst);
     *highest = (*highest).max(idx);
 }
 
 /// A `Response` body (no length prefix) — what the dedup cache stores
 /// and `DedupDone` entries ship.
-fn encode_resp_body(resp: &Response) -> Vec<u8> {
+pub(super) fn encode_resp_body(resp: &Response) -> Vec<u8> {
     let mut buf = Vec::new();
     resp.encode_into(&mut buf);
     buf.split_off(4)
@@ -857,7 +946,7 @@ fn handle_dedup(
 /// beyond `applied + 1` (a gap — this replica missed a frame) is
 /// refused with a short ack, which the primary treats as replica
 /// loss; already-applied prefixes (a re-ship) are skipped idempotently.
-fn handle_replicate(
+pub(super) fn handle_replicate(
     shared: &Shared,
     stop: &AtomicBool,
     start_index: u64,
@@ -883,7 +972,7 @@ fn handle_replicate(
 /// `ReplStatus` payload: `role u8 | applied u64-le | epoch u64-le`.
 /// The epoch leads the election key — a replica behind on epoch can
 /// never be promoted over one that has seen the newer epoch.
-fn repl_status_response(shared: &Shared) -> Response {
+pub(super) fn repl_status_response(shared: &Shared) -> Response {
     let mut v = Vec::with_capacity(17);
     v.push(shared.role.load(Ordering::SeqCst));
     v.extend_from_slice(&shared.applied.load(Ordering::SeqCst).to_le_bytes());
@@ -894,7 +983,7 @@ fn repl_status_response(shared: &Shared) -> Response {
 /// Flip to primary and (once) start the log shipper toward `peers`.
 /// Idempotent under racing `Promote`s: the first wins, later ones
 /// keep the running replicator.
-fn promote_shared(shared: &Shared, peers: &[SocketAddr]) {
+pub(super) fn promote_shared(shared: &Shared, peers: &[SocketAddr]) {
     shared.role.store(ROLE_PRIMARY, Ordering::SeqCst);
     let mut g = lock(&shared.repl);
     if g.is_none() && !peers.is_empty() {
@@ -906,7 +995,7 @@ fn promote_shared(shared: &Shared, peers: &[SocketAddr]) {
 /// Execute one non-container op against local state — the shared
 /// apply path for client-issued ops on the primary and `Replicate`d
 /// entries on replicas. Never logs; callers decide that.
-fn apply_op(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
+pub(super) fn apply_op(shared: &Shared, stop: &AtomicBool, req: Request) -> Response {
     match req {
         // containers and replication-protocol ops never reach the
         // apply path (dispatched in handle_inner; rejected at decode
@@ -1058,53 +1147,81 @@ fn prune_stale_epochs(shared: &Shared, current: u64) {
 }
 
 /// Store key under which a restore source's endpoint is advertised.
-fn restore_key(epoch: u64, tag: u64) -> String {
+pub(super) fn restore_key(epoch: u64, tag: u64) -> String {
     format!("restore/{epoch}/{tag:016x}")
 }
 
+/// One pass of the fenced-wait state machine, caller holding the
+/// key's stripe: fence check, then value check, then stop check —
+/// `None` means "would park". The exact decision order both cores
+/// share, so a blocking op resolves identically whether the waiter is
+/// a parked thread re-checking after a notify or a parked reactor
+/// entry resumed off the wakeup queue.
+pub(super) fn wait_poll(
+    shared: &Shared,
+    stop: &AtomicBool,
+    stripe: &Stripe,
+    key: &str,
+    epoch: u64,
+) -> Option<Response> {
+    let current = shared.epoch.load(Ordering::SeqCst);
+    if current > epoch {
+        return Some(Response::EpochFenced { current });
+    }
+    if let Some(v) = stripe.map.get(key) {
+        return Some(Response::Value(v.clone()));
+    }
+    if stop.load(Ordering::Relaxed) {
+        return Some(Response::NotFound);
+    }
+    None
+}
+
 /// Block until `key` is published or the rendezvous epoch passes
-/// `epoch` — the shared body of `Wait`, `WaitEpoch` and
-/// `ClaimRestore`. The waiter parks on the key's own slot: only a
-/// `Set` of this key (or an epoch/shutdown broadcast) notifies it. A
-/// waiter that parked and is then released by its key's publish is
-/// counted in `wakeups` — the deterministic per-key-parking metric
-/// (raw notify counts would race timeout boundaries and spurious
-/// wakeups).
+/// `epoch` — the threaded core's body of `Wait`, `WaitEpoch` and
+/// `ClaimRestore` (the reactor suspends the frame instead of the
+/// thread; see `comms/reactor`). The waiter parks on the key's own
+/// slot: only a `Set` of this key (or an epoch/shutdown broadcast)
+/// notifies it. A waiter that parked and is then released by its
+/// key's publish is counted in `wakeups` — the deterministic
+/// per-key-parking metric (raw notify counts would race timeout
+/// boundaries and spurious wakeups). The `parked` gauge is kept
+/// incrementally: +1 on first park, -1 on return.
 fn fenced_wait(shared: &Shared, stop: &AtomicBool, key: &str, epoch: u64) -> Response {
     let stripe = shared.stripe_for(key);
     let mut g = lock(stripe);
     let mut parked = false;
-    loop {
-        let current = shared.epoch.load(Ordering::SeqCst);
-        if current > epoch {
-            return Response::EpochFenced { current };
-        }
-        if let Some(v) = g.map.get(key) {
-            if parked {
+    let resp = loop {
+        if let Some(resp) = wait_poll(shared, stop, &g, key, epoch) {
+            if parked && matches!(resp, Response::Value(_)) {
                 shared.wakeups.inc();
             }
-            return Response::Value(v.clone());
-        }
-        if stop.load(Ordering::Relaxed) {
-            return Response::NotFound;
+            break resp;
         }
         let cv = {
             let slot = g.parked.entry(key.to_string()).or_default();
             slot.waiters += 1;
             slot.cv.clone()
         };
-        parked = true;
+        if !parked {
+            shared.parked.add(1);
+            parked = true;
+        }
         let (guard, _timeout) = cv
             .wait_timeout(g, Duration::from_millis(100))
             .unwrap_or_else(PoisonError::into_inner);
         g = guard;
         if let Some(slot) = g.parked.get_mut(key) {
             slot.waiters -= 1;
-            if slot.waiters == 0 {
+            if slot.waiters == 0 && slot.entries.is_empty() {
                 g.parked.remove(key);
             }
         }
+    };
+    if parked {
+        shared.parked.sub(1);
     }
+    resp
 }
 
 /// Outcome of an epoch-fenced wait: the published value, or notice
@@ -1651,8 +1768,13 @@ mod tests {
         // thread per connection and pushed every JoinHandle into a Vec
         // joined only at shutdown — a long churn of short-lived
         // connections grew both without bound. The pool hands finished
-        // workers the next connection instead.
-        let server = TcpStoreServer::start().unwrap();
+        // workers the next connection instead. Pinned to the threaded
+        // core: the worker gauges it asserts only exist there.
+        let server = TcpStoreServer::start_with(
+            "127.0.0.1:0".parse().unwrap(),
+            StoreCore::Threads,
+        )
+        .unwrap();
         for i in 0..50 {
             {
                 let mut c = TcpStoreClient::connect(server.addr()).unwrap();
@@ -1931,5 +2053,75 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         drop(server);
         waiter.join().unwrap();
+    }
+
+    /// Open fds for this process (one dirent per fd; the readdir's own
+    /// fd inflates every sample equally, so deltas are exact).
+    #[cfg(target_os = "linux")]
+    fn open_fd_count() -> usize {
+        std::fs::read_dir("/proc/self/fd").map(|d| d.count()).unwrap_or(0)
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn reactor_connection_churn_leaks_no_fds_or_registrations() {
+        use std::io::Write as _;
+        let server = TcpStoreServer::start().unwrap();
+        assert_eq!(server.core(), StoreCore::Reactor);
+        let addr = server.addr();
+        // settle the steady-state fd population (listener, epoll fd,
+        // wake eventfd) before taking the baseline
+        {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.set("seed", b"v").unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics_snapshot().gauge("store.registrations") != 0 {
+            assert!(Instant::now() < deadline, "seed conn never deregistered");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let fd_baseline = open_fd_count();
+        // 1k connect → park (Wait on a never-published key) →
+        // disconnect cycles: every parked frame must be torn down
+        // with its socket — entry out of the slot, registration and
+        // parked gauges decremented, fd closed. A third of the cycles
+        // give the reactor time to actually park; the rest race the
+        // disconnect against frame processing.
+        let frame = Request::Wait { key: "never".into() }.encode();
+        for i in 0..1000 {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(&frame).unwrap();
+            if i % 3 == 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        // Everything must return to baseline. The fd slack absorbs
+        // concurrent tests in this process opening sockets of their
+        // own — an O(cycles) leak still blows past it by 10x.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let snap = server.metrics_snapshot();
+            if snap.gauge("store.registrations") == 0
+                && snap.gauge("store.parked_waiters") == 0
+                && open_fd_count() <= fd_baseline + 64
+            {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "churn leaked state: registrations={} parked={} fds={} (baseline {})",
+                snap.gauge("store.registrations"),
+                snap.gauge("store.parked_waiters"),
+                open_fd_count(),
+                fd_baseline
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Slot hygiene: the churned key's slot must be gone too — a
+        // late publish wakes nobody, so the deterministic wakeup
+        // counter stays untouched.
+        let mut c = TcpStoreClient::connect(addr).unwrap();
+        c.set("never", b"late").unwrap();
+        assert_eq!(server.metrics_snapshot().counter("store.wakeups"), 0);
     }
 }

@@ -466,7 +466,7 @@ impl Default for HeartbeatMonitor {
 }
 
 // ------------------------------------------------------------------
-// Detection-latency sweep (the `detect-bench` CLI / bench target)
+// Detection-latency sweep (the `bench detect` CLI / bench target)
 // ------------------------------------------------------------------
 
 /// Configuration for the detection-latency scale sweep.

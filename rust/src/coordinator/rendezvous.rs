@@ -701,7 +701,7 @@ pub fn rebuild_episode(
 // ---------------------------------------------------------------- sweep
 
 /// Scale-sweep configuration for the `group_rebuild` bench and the
-/// `flashrecovery rebuild-bench` CLI.
+/// `flashrecovery bench rebuild` CLI.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
     /// Simulated cluster sizes (ranktable/group math at full scale).

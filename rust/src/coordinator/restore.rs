@@ -375,7 +375,7 @@ pub fn synthetic_snapshot(step: u64, elems: usize) -> Snapshot {
 // ---------------------------------------------------------------- sweep
 
 /// Configuration for the `state_restore` bench and the
-/// `flashrecovery restore-bench` CLI.
+/// `flashrecovery bench restore` CLI.
 #[derive(Debug, Clone)]
 pub struct RestoreSweepConfig {
     /// Model sizes as f32 elements per rank snapshot.

@@ -13,9 +13,6 @@
 //!                  emits a BENCH_*.json report, optionally perf-gated
 //!                  against a committed baseline via
 //!                  `--baseline <path> [--gate [RATIO]] [--json <out>]`
-//!                  (the legacy `rebuild-bench` / `restore-bench` /
-//!                  `detect-bench` / `store-bench` spellings remain as
-//!                  deprecated aliases with identical flags)
 //!   trace          run a live chaos scenario with the flight recorder
 //!                  on and write a Perfetto-viewable Chrome trace
 //!                  (plus an optional JSONL journal); --check
@@ -54,10 +51,6 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => simulate(&args),
         Some("scenario") => scenario(&args),
         Some("bench") => bench(&args),
-        Some("rebuild-bench") => deprecated_bench("rebuild-bench", "rebuild", &args),
-        Some("restore-bench") => deprecated_bench("restore-bench", "restore", &args),
-        Some("detect-bench") => deprecated_bench("detect-bench", "detect", &args),
-        Some("store-bench") => deprecated_bench("store-bench", "store", &args),
         Some("trace") => trace_cmd(&args),
         Some("info") => info(&args),
         Some(other) => {
@@ -79,16 +72,6 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         .get(1)
         .map(String::as_str)
         .ok_or_else(|| anyhow::anyhow!("bench needs a suite: rebuild|restore|detect|store"))?;
-    run_bench_suite(suite, args)
-}
-
-/// The legacy per-suite subcommands, kept so committed CI workflows
-/// and scripts keep working; they forward to the unified runner with
-/// identical flags.
-fn deprecated_bench(old: &str, suite: &str, args: &Args) -> anyhow::Result<()> {
-    eprintln!(
-        "[{old}] deprecated spelling — use `flashrecovery bench {suite}` (same flags)"
-    );
     run_bench_suite(suite, args)
 }
 
@@ -124,10 +107,9 @@ fn usage() {
          \u{20}         detect:  [--scales 64,256,1024,4096] [--samples N]\n\
          \u{20}                  [--live-agents N] [--interval-ms N]\n\
          \u{20}                  [--lease-misses N] [--node-agent]\n\
-         \u{20}         store:   [--clients 64,1024,4096,8192] [--connections N]\n\
-         \u{20}                  [--repeats N] [--rounds N] [--replicas N] [--assert]\n\
-         \u{20}         (legacy aliases: rebuild-bench restore-bench\n\
-         \u{20}          detect-bench store-bench, same flags + --out)\n\
+         \u{20}         store:   [--clients 64,1024,4096,8192,65536]\n\
+         \u{20}                  [--connections N] [--repeats N] [--rounds N]\n\
+         \u{20}                  [--replicas N] [--assert]\n\
          trace:    <name|file.json> [--devices N] [--out trace.json]\n\
          \u{20}         [--journal FILE] [--check]\n\
          info:     --size tiny|small|base"
@@ -467,10 +449,12 @@ fn detect_bench(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `bench store` — the store data-plane throughput sweep (DESIGN.md
-/// §11): mixed-opcode workload, batched vs serial client modes plus a
-/// quorum-replicated column (DESIGN.md §13), with an optional perf
-/// gate against a committed baseline JSON (CI's bench-gate job fails
-/// the build on batched per-op p50 regressions > --gate).
+/// §14): mixed-opcode workload on the event-loop reactor core vs the
+/// worker pool, batched vs serial client modes plus a
+/// quorum-replicated column (DESIGN.md §13) and peak-serving-thread /
+/// RSS columns, with an optional perf gate against a committed
+/// baseline JSON (CI's bench-gate job fails the build on batched
+/// per-op p50 regressions > --gate).
 fn store_bench(args: &Args) -> anyhow::Result<()> {
     use flashrecovery::comms::store_bench::{check_report, store_sweep, StoreSweepConfig};
 
@@ -490,9 +474,11 @@ fn store_bench(args: &Args) -> anyhow::Result<()> {
     println!("[bench store] wrote {}", flags.out);
     if args.bool_or("assert", false) {
         // the acceptance properties (batched >= 2x serial at 4096
-        // clients, flat per-op p50, replicated acks within 1.5x of
-        // the un-replicated batched path) — what bench-gate enforces
-        // on top of the baseline ratio
+        // clients, per-op p50 at the top scale <= 1.5x the 4096
+        // anchor, reactor peak serving threads <= 8 with bounded RSS,
+        // replicated acks within 1.5x of the un-replicated batched
+        // path) — what bench-gate enforces on top of the baseline
+        // ratio
         check_report(&cfg, &report)?;
         println!("[bench store] acceptance assertions PASS");
     }

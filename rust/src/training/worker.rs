@@ -307,13 +307,35 @@ pub fn spawn_node_heartbeat(
                 return; // no plane: the board-scan fallback covers us
             };
             let mut done = vec![false; members.len()];
+            // Beats whose flush failed mid-failover (the session's
+            // whole-set discovery came up empty for one interval) —
+            // carried into the next tick's batch instead of dropped,
+            // so a beat interval that fires while the plane is
+            // electing still refreshes every lease on the survivor.
+            // Only consecutive failures abandon the agent: teardown
+            // stays bounded, but one bad interval is not a death.
+            let mut carry: Vec<crate::comms::wire::Request> = Vec::new();
+            let mut flush_failures = 0u32;
+            const MAX_FLUSH_FAILURES: u32 = 10;
             loop {
-                let mut beats = Vec::with_capacity(members.len());
+                let mut beats = std::mem::take(&mut carry);
                 for (i, m) in members.iter().enumerate() {
                     if done[i] {
                         continue;
                     }
                     let tag = m.board.step_tag.load(Ordering::SeqCst);
+                    let rank = m.rank as u64;
+                    // A fresh beat supersedes this rank's carried one
+                    // (newest step tag / device code wins); carried
+                    // dying gasps survive — a done rank emits nothing
+                    // fresh, so its gasp stays until it flushes.
+                    beats.retain(|b| {
+                        !matches!(
+                            b,
+                            crate::comms::wire::Request::Heartbeat { rank: r, .. }
+                                if *r == rank
+                        )
+                    });
                     if !m.board.alive.load(Ordering::SeqCst) {
                         // Dying gasp: load the code *after* observing
                         // death (failure paths store `device_error`
@@ -322,7 +344,7 @@ pub fn spawn_node_heartbeat(
                         let code = m.board.device_error.load(Ordering::SeqCst);
                         if code >= 0 {
                             beats.push(crate::comms::wire::Request::Heartbeat {
-                                rank: m.rank as u64,
+                                rank,
                                 incarnation: m.incarnation,
                                 step_tag: tag,
                                 device_code: code,
@@ -333,16 +355,24 @@ pub fn spawn_node_heartbeat(
                     }
                     let code = m.board.device_error.load(Ordering::SeqCst);
                     beats.push(crate::comms::wire::Request::Heartbeat {
-                        rank: m.rank as u64,
+                        rank,
                         incarnation: m.incarnation,
                         step_tag: tag,
                         device_code: code,
                     });
                 }
-                if !beats.is_empty() && client.batch(beats).is_err() {
-                    return; // store gone (controller teardown)
+                if !beats.is_empty() {
+                    if client.batch(beats.clone()).is_err() {
+                        flush_failures += 1;
+                        if flush_failures >= MAX_FLUSH_FAILURES {
+                            return; // store gone (controller teardown)
+                        }
+                        carry = beats;
+                    } else {
+                        flush_failures = 0;
+                    }
                 }
-                if done.iter().all(|d| *d) {
+                if done.iter().all(|d| *d) && carry.is_empty() {
                     return; // every member dead and flushed
                 }
                 std::thread::sleep(cfg.interval);
@@ -871,6 +901,66 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         peer.alive.store(false, Ordering::SeqCst);
+        agent.join().unwrap();
+    }
+
+    #[test]
+    fn node_agent_survives_primary_failover_between_beats() {
+        // Regression: a beat interval that fires mid-failover used to
+        // kill the agent on the first failed flush — every lease on
+        // the node then expired even though a replica was standing by.
+        // The failed tick must coalesce into the next interval's batch
+        // and keep beating on the promoted survivor.
+        let mut set = crate::comms::ReplicaSet::start(1).unwrap();
+        let members: Vec<NodeRank> = (0..2)
+            .map(|rank| {
+                let board = MonitorBoard::new();
+                board.step_tag.store(1, Ordering::SeqCst);
+                NodeRank { rank, incarnation: 1, board }
+            })
+            .collect();
+        let boards: Vec<Arc<MonitorBoard>> =
+            members.iter().map(|m| m.board.clone()).collect();
+        let agent = spawn_node_heartbeat(
+            members,
+            NodeAgentCfg {
+                store: set.endpoints(),
+                interval: Duration::from_millis(10),
+            },
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while set.primary_server().unwrap().beats().len() < 2 {
+            assert!(Instant::now() < deadline, "agent never leased in");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Kill the primary between two beats: the next flush fails
+        // against the dead endpoint while the session re-discovers.
+        set.kill_primary();
+        for b in boards.iter() {
+            b.step_tag.store(2, Ordering::SeqCst);
+        }
+        // Both ranks' post-kill beats must land on the promoted
+        // replica — the tick was carried, not dropped, so the lease
+        // keeps refreshing across the failover window.
+        let survivor = &set.replica_servers()[0];
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let beats = survivor.beats();
+            let fresh = (0..2u64).all(|r| {
+                beats.iter().any(|b| b.rank == r && b.step_tag == 2)
+            });
+            if fresh {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "beats never resumed on the promoted replica: {beats:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for b in boards.iter() {
+            b.alive.store(false, Ordering::SeqCst);
+        }
         agent.join().unwrap();
     }
 }

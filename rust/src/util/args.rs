@@ -6,10 +6,10 @@
 
 use std::collections::BTreeMap;
 
-/// Shared flags of every `flashrecovery bench <suite>` invocation
-/// (and its deprecated per-suite aliases): where to write the JSON
-/// report (`--json`, with `--out` kept as an alias), the optional
-/// committed baseline to gate against, and the gate ratio. `--gate`
+/// Shared flags of every `flashrecovery bench <suite>` invocation:
+/// where to write the JSON report (`--json`, with `--out` kept as an
+/// alias), the optional committed baseline to gate against, and the
+/// gate ratio. `--gate`
 /// works both bare (defaults to 1.5x) and valued (`--gate 1.3`);
 /// gating only runs when `--baseline` is present.
 #[derive(Debug, Clone)]
@@ -187,16 +187,16 @@ mod tests {
     }
 
     #[test]
-    fn bench_flags_deprecated_form() {
-        // the legacy per-suite surface bench-gate.yml still uses:
-        // --out output, valued --gate
-        let a = args("store-bench --out s.json --baseline b.json --gate 1.3");
+    fn bench_flags_out_alias_and_valued_gate() {
+        // --out is an accepted alias for --json (bench-gate.yml uses
+        // it), and --gate takes an explicit ratio
+        let a = args("bench store --out s.json --baseline b.json --gate 1.3");
         let f = a.bench_flags("default.json");
         assert_eq!(f.out, "s.json");
         assert_eq!(f.baseline.as_deref(), Some("b.json"));
         assert!((f.gate - 1.3).abs() < 1e-12);
         // no baseline, no output flag -> suite default, no gating
-        let f = args("store-bench").bench_flags("default.json");
+        let f = args("bench store").bench_flags("default.json");
         assert_eq!(f.out, "default.json");
         assert!(f.baseline.is_none());
     }

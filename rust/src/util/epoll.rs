@@ -1,0 +1,251 @@
+//! Minimal epoll + eventfd binding — vendored under the offline
+//! constraint (like `util/rng`): no `libc`, `mio` or `tokio`, just
+//! direct `extern "C"` declarations against the system libc that
+//! `std` already links. Only what the store reactor needs is bound:
+//! level-triggered readiness registration, a bounded wait, and an
+//! eventfd the reactor can be woken through from other threads
+//! (publish wakeups, replication commit advance, shutdown).
+//!
+//! Linux-only by construction (`util/mod.rs` gates the module); on
+//! other platforms the store falls back to the threaded core.
+
+use std::io;
+use std::os::raw::{c_int, c_uint, c_void};
+use std::os::unix::io::RawFd;
+
+/// Readable readiness (incoming bytes or a pending accept).
+pub const EPOLLIN: u32 = 0x001;
+/// Writable readiness (socket send buffer has room again).
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition — always reported, never needs registering.
+pub const EPOLLERR: u32 = 0x008;
+/// Peer hung up — always reported, never needs registering.
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half; must be registered explicitly so a
+/// parked connection (no `EPOLLIN` interest) still reports its death.
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+/// `struct epoll_event` — packed on x86-64 (the kernel ABI quirk every
+/// binding reproduces), naturally aligned elsewhere.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy, Default)]
+pub struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+impl EpollEvent {
+    /// Readiness bits reported by the kernel (copied by value — the
+    /// struct may be packed, so fields are never referenced in place).
+    pub fn events(&self) -> u32 {
+        self.events
+    }
+
+    /// The `u64` token registered with the fd.
+    pub fn token(&self) -> u64 {
+        self.data
+    }
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+}
+
+/// An epoll instance. Dropping it closes the epoll fd (registered fds
+/// are owned elsewhere and deregister on their own close).
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+        if unsafe { epoll_ctl(self.fd, op, fd, arg) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` level-triggered with interest `events`, reported
+    /// under `token`.
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change an existing registration's interest set.
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Remove a registration (idempotent at the caller's discretion —
+    /// closing the fd also removes it, so errors are often ignorable).
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait up to `timeout_ms` for readiness; fills `events` and
+    /// returns how many entries are valid. `EINTR` retries internally.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+/// A nonblocking eventfd: the reactor registers it for `EPOLLIN` and
+/// any thread can `wake()` the event loop out of `epoll_wait`.
+pub struct WakeFd {
+    fd: RawFd,
+}
+
+impl WakeFd {
+    pub fn new() -> io::Result<WakeFd> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(WakeFd { fd })
+    }
+
+    pub fn raw_fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Make the fd readable (coalesces: n wakes before a drain still
+    /// cost one readiness event).
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        // EAGAIN (counter saturated) is fine — the fd is still readable
+        let _ = unsafe { write(self.fd, (&one as *const u64).cast::<c_void>(), 8) };
+    }
+
+    /// Consume pending wakes so level-triggered polling quiesces.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        let _ = unsafe { read(self.fd, (&mut buf as *mut u64).cast::<c_void>(), 8) };
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn wakefd_rouses_epoll_wait() {
+        let ep = Epoll::new().unwrap();
+        let wake = WakeFd::new().unwrap();
+        ep.add(wake.raw_fd(), EPOLLIN, 7).unwrap();
+        let mut evs = [EpollEvent::default(); 4];
+        // nothing pending: times out empty
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+        wake.wake();
+        wake.wake(); // coalesces
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 7);
+        assert!(evs[0].events() & EPOLLIN != 0);
+        wake.drain();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_changes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(listener.as_raw_fd(), EPOLLIN, 1).unwrap();
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut evs = [EpollEvent::default(); 4];
+        let n = ep.wait(&mut evs, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 1);
+
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        ep.add(server_side.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 2).unwrap();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0, "no bytes yet");
+
+        client.write_all(b"x").unwrap();
+        let n = ep.wait(&mut evs, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 2);
+        assert!(evs[0].events() & EPOLLIN != 0);
+
+        // writable interest reports immediately on an idle socket
+        ep.modify(server_side.as_raw_fd(), EPOLLOUT, 2).unwrap();
+        let n = ep.wait(&mut evs, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert!(evs[0].events() & EPOLLOUT != 0);
+
+        // peer close reports RDHUP/HUP even with read interest dropped
+        ep.modify(server_side.as_raw_fd(), EPOLLRDHUP, 2).unwrap();
+        drop(client);
+        let n = ep.wait(&mut evs, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert!(evs[0].events() & (EPOLLRDHUP | EPOLLHUP) != 0);
+
+        ep.delete(server_side.as_raw_fd()).unwrap();
+    }
+}

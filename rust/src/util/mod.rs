@@ -3,6 +3,8 @@
 //! that are unavailable in the offline build environment.
 
 pub mod args;
+#[cfg(target_os = "linux")]
+pub mod epoll;
 pub mod hash;
 pub mod json;
 pub mod prop;
