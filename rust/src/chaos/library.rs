@@ -1,6 +1,6 @@
 //! Built-in chaos scenario library.
 //!
-//! Eleven parameterized campaigns, from the paper's single-failure
+//! Fourteen parameterized campaigns, from the paper's single-failure
 //! baseline to compound patterns production fleets actually see
 //! (ByteDance's robust-training report, Unicron): concurrent faults,
 //! rolling cascades, flapping hosts, failures striking mid-recovery,
@@ -8,7 +8,10 @@
 //! mid-*restore* (state streams aborted and replanned), silent
 //! hangs (alive worker, frozen step tag), and coordination-plane
 //! failover — the store primary dying mid-rendezvous and the
-//! controller dying mid-restore (DESIGN.md §13). Each spec carries
+//! controller dying mid-restore (DESIGN.md §13) — and impaired-plane
+//! campaigns where the same faults land over degraded links: detection
+//! under 30% loss, restore across a WAN, rendezvous across a partition
+//! heal (DESIGN.md §15). Each spec carries
 //! assertions calibrated to the paper-fit latency model — recovery-time
 //! bounds are intentionally scale-independent (the paper's headline
 //! claim), so the same spec passes from 64 to 18k devices.
@@ -16,12 +19,15 @@
 //! `benches/chaos_campaigns.rs` sweeps the library across scales;
 //! `scenario run --spec <name>` runs one by name.
 
-use super::spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, ScenarioSpec};
+use super::spec::{
+    Assertions, ClusterShape, FaultFamily, FaultSpec, NetemSpec, NodeLink, ScenarioSpec,
+};
 use crate::cluster::failure::FailureKind;
+use crate::comms::netem::{LinkPolicy, Partition};
 use crate::config::RecoveryMode;
 
 /// Names of all built-in scenarios, in presentation order.
-pub const NAMES: [&str; 11] = [
+pub const NAMES: [&str; 14] = [
     "single_fault",
     "double_fault",
     "rolling_cascade",
@@ -33,6 +39,9 @@ pub const NAMES: [&str; 11] = [
     "silent_hang",
     "store_crash_mid_rendezvous",
     "controller_crash_mid_restore",
+    "detection_under_loss",
+    "restore_over_wan",
+    "partition_heal_rendezvous",
 ];
 
 fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
@@ -45,6 +54,7 @@ fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
         faults: Vec::new(),
         assertions: Assertions::default(),
         live: Default::default(),
+        netem: None,
     }
 }
 
@@ -374,6 +384,113 @@ pub fn controller_crash_mid_restore(devices: usize) -> ScenarioSpec {
     s
 }
 
+/// Failure detection over a badly lossy plane: every heartbeat and
+/// store op crosses a link dropping 30% of its MTU chunks. On the
+/// simulator path this behaves like `single_fault`; the live hints
+/// drive `chaos::live::drive_netem_detection`, where the lease monitor
+/// must still catch the crash — with deadlines widened by the §15
+/// `Timeouts` scaling rather than hand-tuned — and never falsely evict
+/// a survivor whose beats are merely delayed by retransmission.
+pub fn detection_under_loss(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "detection_under_loss",
+        "Rank crash detected through a 30%-loss plane; retransmit-delayed beats never falsely evict survivors",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    s.faults.push(FaultSpec { at_s: 120.0, ..Default::default() });
+    s.faults[0].rank = Some(1);
+    s.faults[0].at_step = Some(4);
+    s.live.dp = 4;
+    s.netem = Some(NetemSpec {
+        default: Some(LinkPolicy::lossy(0.30)),
+        links: Vec::new(),
+        heal_after_s: None,
+    });
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(300.0),
+        max_total_downtime_s: Some(350.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// Shard restore over a cross-region WAN: the replacement pulls its
+/// state across a 50 ms-RTT link with jitter and light loss. On the
+/// simulator path this behaves like `single_fault`; the live hints
+/// drive `chaos::live::drive_netem_restore`, where the state stream's
+/// io-stall watchdog (scaled from `Timeouts`) must ride out the
+/// latency and the fetch must land bit-exact.
+pub fn restore_over_wan(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "restore_over_wan",
+        "Replacement restores its shard over a 50ms-RTT jittery WAN link, bit-exact, within widened deadlines",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    s.faults.push(FaultSpec { at_s: 120.0, ..Default::default() });
+    s.faults[0].rank = Some(1);
+    s.faults[0].at_step = Some(4);
+    s.live.dp = 2;
+    s.netem = Some(NetemSpec {
+        // 25ms each way = 50ms RTT, ±5ms jitter, 0.5% loss.
+        default: Some(LinkPolicy::wan(25.0, 5.0, 0.005)),
+        links: Vec::new(),
+        heal_after_s: None,
+    });
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(350.0),
+        max_total_downtime_s: Some(400.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// Rendezvous across a partition heal: one survivor's link to the
+/// store is fully severed when the episode starts and only heals
+/// mid-rendezvous; the healed link stays slow. On the simulator path
+/// this behaves like `single_fault`; the live hints drive
+/// `chaos::live::drive_netem_partition_heal`, where the supervised
+/// barrier (widened via `Timeouts::scaled_for_rtt`) must hold open
+/// long enough for the healed rank's jittered reconnect to land — one
+/// release, no abort.
+pub fn partition_heal_rendezvous(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "partition_heal_rendezvous",
+        "Severed rank heals mid-rendezvous onto a slow link; widened barrier releases once, no false abort",
+        devices,
+    );
+    s.cluster.spare_nodes = 1;
+    s.faults.push(FaultSpec { at_s: 120.0, ..Default::default() });
+    s.faults[0].rank = Some(1);
+    s.faults[0].at_step = Some(4);
+    s.live.dp = 4;
+    s.netem = Some(NetemSpec {
+        default: Some(LinkPolicy::delay(5.0)),
+        links: vec![NodeLink {
+            rank: Some(2),
+            policy: LinkPolicy {
+                delay_ms: 10.0,
+                partition: Partition::Both,
+                ..Default::default()
+            },
+        }],
+        heal_after_s: Some(0.4),
+    });
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(350.0),
+        max_total_downtime_s: Some(400.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
 /// All built-in scenarios at the given device count.
 pub fn all(devices: usize) -> Vec<ScenarioSpec> {
     NAMES
@@ -396,6 +513,9 @@ pub fn by_name(name: &str, devices: usize) -> Option<ScenarioSpec> {
         "silent_hang" => silent_hang(devices),
         "store_crash_mid_rendezvous" => store_crash_mid_rendezvous(devices),
         "controller_crash_mid_restore" => controller_crash_mid_restore(devices),
+        "detection_under_loss" => detection_under_loss(devices),
+        "restore_over_wan" => restore_over_wan(devices),
+        "partition_heal_rendezvous" => partition_heal_rendezvous(devices),
         _ => return None,
     })
 }

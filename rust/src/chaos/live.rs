@@ -13,15 +13,26 @@
 //! Requires compiled artifacts and a real `xla` backend; with the
 //! vendored stub `run_live` fails fast and `scenario run` reports the
 //! live plane as unavailable (DESIGN.md §7).
+//!
+//! Specs carrying a `netem:` section additionally run through the
+//! impaired drivers (`drive_netem_*`): the identical wire protocols
+//! over links injecting delay, jitter, loss, and partitions via the
+//! §15 link layer, with every deadline scaled through one
+//! [`Timeouts`](crate::config::Timeouts) config instead of hand-tuned
+//! loopback constants.
 
 use super::engine::AssertionOutcome;
-use super::spec::{FaultFamily, ScenarioSpec};
+use super::spec::{FaultFamily, NetemSpec, ScenarioSpec};
 use crate::checkpoint::Snapshot;
 use crate::cluster::failure::{FailureCategory, FailureKind};
+use crate::comms::link::Dialer;
+use crate::comms::netem::{LinkPolicy, NetemDialer, NetemMap, Partition, MAX_CHARGE};
 use crate::comms::replication::{ReplicaSet, StoreSession};
-use crate::comms::state_stream::{EpochFence, RestoreError, StreamConfig};
+use crate::comms::state_stream::{
+    fetch_from_addr_via, serve_listener, EpochFence, Expect, RestoreError, StreamConfig,
+};
 use crate::comms::tcp_store::TcpStoreServer;
-use crate::config::ParallelismConfig;
+use crate::config::{ParallelismConfig, ShardId, Timeouts};
 use crate::coordinator::detection::{Detection, LeaseConfig, LeaseMonitor};
 use crate::coordinator::rendezvous::{rebuild_episode, EpisodeConfig, RebuildOutcome};
 use crate::coordinator::restore::{
@@ -1004,6 +1015,498 @@ pub fn drive_controller_crash_mid_restore(
     Ok(outcomes)
 }
 
+// ------------------------------------------------------------------
+// Impaired plane: the same campaigns over degraded links (§15)
+// ------------------------------------------------------------------
+
+fn netem_section(spec: &ScenarioSpec) -> Result<&NetemSpec> {
+    spec.netem.as_ref().ok_or_else(|| {
+        anyhow!(
+            "scenario {:?} has no netem section — run it with the unimpaired \
+             live drivers",
+            spec.name
+        )
+    })
+}
+
+/// Policy of one rank's link: the per-rank override when present, else
+/// the spec default, else a perfect link.
+fn rank_policy(n: &NetemSpec, rank: usize) -> LinkPolicy {
+    n.links
+        .iter()
+        .find(|l| l.rank == Some(rank))
+        .map(|l| l.policy)
+        .or(n.default)
+        .unwrap_or_default()
+}
+
+/// Worst round-trip budget over every link the spec impairs — what the
+/// §15 [`Timeouts`] scaling is fed.
+fn worst_rtt(n: &NetemSpec) -> Duration {
+    let budget = |p: &LinkPolicy| {
+        p.rtt() + Duration::from_secs_f64(2.0 * p.jitter_ms / 1000.0)
+    };
+    let mut worst = n.default.as_ref().map(&budget).unwrap_or(Duration::ZERO);
+    for l in &n.links {
+        worst = worst.max(budget(&l.policy));
+    }
+    worst
+}
+
+/// The spec-default impairment map (per-rank overrides excluded) —
+/// what shared-plane traffic (store clients, heartbeats) dials through.
+fn shared_map(n: &NetemSpec) -> Arc<NetemMap> {
+    let map = NetemMap::new(n.default.unwrap_or_default());
+    for l in &n.links {
+        if l.rank.is_none() {
+            map.set_default(l.policy);
+        }
+    }
+    map
+}
+
+/// One impaired-detection episode: a crash caught through a degraded
+/// heartbeat plane.
+#[derive(Debug, Clone)]
+pub struct NetemDetectionOutcome {
+    /// Failure step the episode recovered (spec `at_step`).
+    pub step: u64,
+    /// Rendezvous epoch the chained rebuild converged in.
+    pub epoch: u64,
+    pub detections: Vec<Detection>,
+    /// Max measured last-good-heartbeat -> detection latency (s).
+    pub detection_s: f64,
+    pub rebuild_s: f64,
+    /// Survivors the monitor ever flagged — must stay empty: a beat
+    /// delayed by retransmission is not a dead rank.
+    pub false_evictions: Vec<usize>,
+    /// Lease budget the driver scaled to for the impaired plane (s).
+    pub lease_budget_s: f64,
+}
+
+/// Drive the spec's crashes through live wire detection over an
+/// *impaired* heartbeat plane (DESIGN.md §15): every beat and store op
+/// crosses a link shaped by the spec's `netem:` section. The lease
+/// budget is scaled from the shaper's deterministic worst-case arrival
+/// lag — one request plus one response charge, each capped at
+/// [`MAX_CHARGE`] — so survivors whose beats are delayed by loss
+/// retransmission can *never* falsely expire, while dead ranks still
+/// expire and chain into an epoch-fenced rebuild on the same degraded
+/// store, its barrier widened via [`Timeouts::scaled_for_rtt`].
+pub fn drive_netem_detection(spec: &ScenarioSpec) -> Result<Vec<NetemDetectionOutcome>> {
+    let n = netem_section(spec)?;
+    let timeline = live_detection_timeline(spec)?;
+    let dp = spec.live.dp.max(2);
+    let par = ParallelismConfig::dp(dp);
+    let server = TcpStoreServer::start()?;
+    let map = shared_map(n);
+    let dialer: Arc<dyn Dialer> = Arc::new(NetemDialer::over(
+        Arc::new(crate::comms::DirectDialer),
+        map.clone(),
+    ));
+    let eps = server.endpoints().with_dialer(dialer);
+
+    // §15 deadline scaling: the lease budget must exceed the worst
+    // arrival lag an impaired-but-alive emitter can accrue (egress +
+    // ingress charge, each capped at MAX_CHARGE, plus one interval).
+    let interval = Duration::from_millis(25).max(worst_rtt(n));
+    let lag_bound = interval + 2 * MAX_CHARGE;
+    let lease_misses =
+        (lag_bound.as_secs_f64() / interval.as_secs_f64()).ceil() as u32 + 2;
+    let lease_budget = interval * lease_misses;
+    let timeouts = Timeouts::default().scaled_for_rtt(lag_bound);
+    let mut mon = LeaseMonitor::new(LeaseConfig {
+        interval,
+        lease_misses,
+        stall_after: lease_budget * 4,
+        stall_margin: 2,
+    });
+
+    let mut table = Ranktable::new(
+        (0..dp)
+            .map(|rank| RankEntry {
+                rank,
+                node: rank,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 29000 + rank),
+            })
+            .collect(),
+    );
+    let mut boards: BTreeMap<usize, Arc<MonitorBoard>> = BTreeMap::new();
+    let mut incarnations: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut emitters: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut next_inc = 0u64;
+    let mut members: Vec<NodeRank> = Vec::with_capacity(dp);
+    for rank in 0..dp {
+        next_inc += 1;
+        let b = MonitorBoard::new();
+        mon.admit(rank, next_inc, Instant::now());
+        members.push(NodeRank { rank, incarnation: next_inc, board: b.clone() });
+        boards.insert(rank, b);
+        incarnations.insert(rank, next_inc);
+    }
+    emitters.push(spawn_node_heartbeat(
+        members,
+        NodeAgentCfg { store: eps.clone(), interval },
+    ));
+
+    let mut epoch = 0u64;
+    let mut sim_step = 0u64;
+    let mut false_evictions: Vec<usize> = Vec::new();
+    let mut outcomes = Vec::with_capacity(timeline.len());
+    for (step, victims) in timeline {
+        sim_step = sim_step.max(step);
+        for b in boards.values() {
+            b.step_tag.store(sim_step as i64, Ordering::SeqCst);
+        }
+        let now = Instant::now();
+        for rank in 0..dp {
+            mon.admit(rank, incarnations[&rank], now);
+        }
+
+        let t0 = Instant::now();
+        for &(rank, kind, mode) in &victims {
+            if mode == LiveFailureMode::Hang {
+                bail!(
+                    "netem detection drives crash faults only — straggler hangs \
+                     belong to drive_live_detection"
+                );
+            }
+            let b = &boards[&rank];
+            if kind.category() == FailureCategory::Hardware {
+                b.device_error.store(kind_code(kind), Ordering::SeqCst);
+            }
+            b.alive.store(false, Ordering::SeqCst);
+        }
+
+        let expected: BTreeSet<usize> = victims.iter().map(|&(r, _, _)| r).collect();
+        let mut detections: Vec<Detection> = Vec::new();
+        let deadline = t0 + Duration::from_secs(30).max(lease_budget * 4);
+        while detections.len() < expected.len() {
+            if Instant::now() > deadline {
+                bail!("impaired detection timed out at step {step}");
+            }
+            std::thread::sleep(interval);
+            sim_step += 1;
+            for (r, b) in &boards {
+                if !expected.contains(r) {
+                    b.step_tag.store(sim_step as i64, Ordering::SeqCst);
+                }
+            }
+            for beat in server.beats() {
+                mon.observe_beat(&beat);
+            }
+            for d in mon.scan(Instant::now()) {
+                if expected.contains(&d.rank) {
+                    if !detections.iter().any(|e| e.rank == d.rank) {
+                        detections.push(d);
+                    }
+                } else if !false_evictions.contains(&d.rank) {
+                    false_evictions.push(d.rank);
+                }
+            }
+        }
+        let detection_s =
+            detections.iter().filter_map(|d| d.latency_s).fold(0.0, f64::max);
+
+        // ... chained into the rendezvous rebuild over the same
+        // degraded store, its supervised barrier widened for the link.
+        let failed: Vec<usize> = expected.iter().copied().collect();
+        let replacements: Vec<RankEntry> = failed
+            .iter()
+            .map(|&r| RankEntry {
+                rank: r,
+                node: dp + (epoch as usize + 1) * dp + r,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
+            })
+            .collect();
+        let t_rebuild = Instant::now();
+        let out = rebuild_episode(
+            &eps,
+            &table,
+            &par,
+            &failed,
+            &replacements,
+            epoch,
+            &EpisodeConfig::from_timeouts(&timeouts, dp),
+        )?;
+        let rebuild_s = t_rebuild.elapsed().as_secs_f64();
+        epoch = out.epoch;
+        table = out.table.clone();
+
+        let reg = global();
+        reg.observe("netem.detection_s", detection_s);
+        reg.observe("netem.rebuild_s", rebuild_s);
+
+        // respawn the victims under fresh incarnations, still impaired
+        for &rank in &failed {
+            next_inc += 1;
+            let b = MonitorBoard::new();
+            b.step_tag.store(sim_step as i64, Ordering::SeqCst);
+            mon.admit(rank, next_inc, Instant::now());
+            emitters.push(spawn_heartbeat(
+                rank,
+                b.clone(),
+                HeartbeatCfg { store: eps.clone(), interval, incarnation: next_inc },
+            ));
+            boards.insert(rank, b);
+            incarnations.insert(rank, next_inc);
+        }
+
+        outcomes.push(NetemDetectionOutcome {
+            step,
+            epoch,
+            detections,
+            detection_s,
+            rebuild_s,
+            false_evictions: false_evictions.clone(),
+            lease_budget_s: lease_budget.as_secs_f64(),
+        });
+    }
+
+    for b in boards.values() {
+        b.alive.store(false, Ordering::SeqCst);
+    }
+    drop(server);
+    for e in emitters {
+        let _ = e.join();
+    }
+    Ok(outcomes)
+}
+
+/// Outcome of a shard restore driven across an impaired (WAN-profile)
+/// link, with the wire latencies the §6 calibration consumes.
+#[derive(Debug, Clone)]
+pub struct NetemRestoreOutcome {
+    /// Round-trip the spec's worst link imposes (s).
+    pub rtt_s: f64,
+    /// Measured mean store-op round-trip over the impaired link (s) —
+    /// the wire replacement for the §6 `tcp_store_per_link_s` constant.
+    pub store_op_s: f64,
+    pub rebuild_s: f64,
+    /// Wall of the impaired shard fetch, dial included (s).
+    pub fetch_wall_s: f64,
+    pub bytes: u64,
+    /// The restored snapshot matched the source bit for bit.
+    pub bit_exact: bool,
+    pub epoch: u64,
+}
+
+/// Drive the spec's first failure as a real recovery whose every wire
+/// crossing pays the spec's `netem:` impairment (DESIGN.md §15): store
+/// ops and the rendezvous rebuild run over the degraded link, then the
+/// replacement pulls its shard through [`fetch_from_addr_via`] on the
+/// same impaired dialer — io-stall and accept deadlines widened via
+/// [`StreamConfig::from_timeouts`] — and must land bit-exact. The
+/// measured store-op and fetch walls are the §6 calibration inputs.
+pub fn drive_netem_restore(spec: &ScenarioSpec) -> Result<NetemRestoreOutcome> {
+    let n = netem_section(spec)?;
+    let plans = live_failure_plans(spec)?;
+    let (step, mut failed) = rebuild_timeline(&plans)
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("scenario {:?} schedules no failures", spec.name))?;
+    failed.sort_unstable();
+    let dp = spec.live.dp.max(2);
+    let par = ParallelismConfig::dp(dp);
+    let server = TcpStoreServer::start()?;
+    let map = shared_map(n);
+    let dialer: Arc<dyn Dialer> = Arc::new(NetemDialer::over(
+        Arc::new(crate::comms::DirectDialer),
+        map.clone(),
+    ));
+    let eps = server.endpoints().with_dialer(dialer.clone());
+    let rtt = worst_rtt(n);
+    let timeouts = Timeouts::default().scaled_for_rtt(rtt);
+
+    // Measured wire latency per store op over the degraded link.
+    const PROBE_OPS: u32 = 8;
+    let mut probe = StoreSession::connect(eps.clone())?;
+    let t_probe = Instant::now();
+    for i in 0..PROBE_OPS {
+        probe.set(&format!("netem/probe/{i}"), b"x")?;
+    }
+    let store_op_s = t_probe.elapsed().as_secs_f64() / f64::from(PROBE_OPS);
+    drop(probe);
+
+    let table = Ranktable::new(
+        (0..dp)
+            .map(|rank| RankEntry {
+                rank,
+                node: rank,
+                device: 0,
+                addr: format!("127.0.0.1:{}", 29000 + rank),
+            })
+            .collect(),
+    );
+    let replacements: Vec<RankEntry> = failed
+        .iter()
+        .map(|&r| RankEntry {
+            rank: r,
+            node: dp + r,
+            device: 0,
+            addr: format!("127.0.0.1:{}", 31000 + step as usize + r),
+        })
+        .collect();
+    let t_rebuild = Instant::now();
+    let out = rebuild_episode(
+        &eps,
+        &table,
+        &par,
+        &failed,
+        &replacements,
+        0,
+        &EpisodeConfig::from_timeouts(&timeouts, dp),
+    )?;
+    let rebuild_s = t_rebuild.elapsed().as_secs_f64();
+    let epoch = out.epoch;
+
+    // The replacement's shard fetch crosses the same impaired link:
+    // a local source serves, the fetch dials through the netem map.
+    let snap = synthetic_snapshot(step, CHAOS_STATE_ELEMS);
+    let reference = snap.content_hash();
+    let shard = ShardId { pp: 0, tp: 0, zero: 0 };
+    let fence = EpochFence::new(epoch);
+    let cfg = StreamConfig::from_timeouts(&timeouts);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .context("binding netem restore source")?;
+    let src_addr = listener.local_addr()?;
+    let serve_fence = fence.clone();
+    let source = std::thread::spawn(move || {
+        serve_listener(&listener, &snap, shard, epoch, 1, &serve_fence, &cfg)
+    });
+    let expect = Expect { epoch, shard, step: Some(step) };
+    let t_fetch = Instant::now();
+    let (got, stats) = fetch_from_addr_via(&*dialer, src_addr, &expect, &fence, &cfg)
+        .map_err(|e| anyhow!("impaired fetch: {e}"))?;
+    let fetch_wall_s = t_fetch.elapsed().as_secs_f64();
+    source
+        .join()
+        .map_err(|_| anyhow!("netem restore source panicked"))?
+        .map_err(|e| anyhow!("impaired serve: {e}"))?;
+
+    let reg = global();
+    reg.observe("netem.store_op_s", store_op_s);
+    reg.observe("netem.fetch_wall_s", fetch_wall_s);
+    Ok(NetemRestoreOutcome {
+        rtt_s: rtt.as_secs_f64(),
+        store_op_s,
+        rebuild_s,
+        fetch_wall_s,
+        bytes: stats.bytes,
+        bit_exact: got.content_hash() == reference,
+        epoch,
+    })
+}
+
+/// Outcome of a rendezvous barrier crossed by a partition heal.
+#[derive(Debug, Clone)]
+pub struct NetemPartitionOutcome {
+    /// Ranks whose links were severed until the heal.
+    pub healed_ranks: Vec<usize>,
+    /// Partition start -> every rank arrived at the barrier (s).
+    pub join_wall_s: f64,
+    /// Seconds after start at which partitions lifted.
+    pub heal_after_s: f64,
+    /// Rank -> release payload; every rank must wake exactly once.
+    pub wakes: Vec<(usize, Vec<u8>)>,
+}
+
+/// Drive a live rendezvous barrier across a partition heal (DESIGN.md
+/// §15): every rank dials the store through its *own* link policy, the
+/// severed ranks' connects fail until the heal thread lifts partitions
+/// mid-rendezvous, and their jittered reconnects must still land the
+/// arrive + parked-wait protocol inside the [`Timeouts`]-scaled join
+/// deadline — one release, every rank wakes exactly once, no abort.
+pub fn drive_netem_partition_heal(spec: &ScenarioSpec) -> Result<NetemPartitionOutcome> {
+    let n = netem_section(spec)?;
+    let dp = spec.live.dp.max(2);
+    let server = TcpStoreServer::start()?;
+    let base_eps = server.endpoints();
+    let heal_after = Duration::from_secs_f64(n.heal_after_s.unwrap_or(0.0).max(0.0));
+
+    // Per-rank planes: each rank's link carries its own policy.
+    let mut maps: Vec<Arc<NetemMap>> = Vec::with_capacity(dp);
+    let mut healed_ranks = Vec::new();
+    for rank in 0..dp {
+        let p = rank_policy(n, rank);
+        if p.partition != Partition::None {
+            healed_ranks.push(rank);
+        }
+        maps.push(NetemMap::new(p));
+    }
+    if healed_ranks.is_empty() {
+        bail!("scenario {:?} severs no link — nothing to heal", spec.name);
+    }
+    let timeouts = Timeouts::default().scaled_for_rtt(worst_rtt(n));
+
+    let t0 = Instant::now();
+    let heal_maps = maps.clone();
+    let healer = std::thread::spawn(move || {
+        std::thread::sleep(heal_after);
+        for m in &heal_maps {
+            m.heal_partitions();
+        }
+    });
+
+    // dp participants race the barrier; the severed ones ride the heal.
+    let mut joins = Vec::with_capacity(dp);
+    for (rank, map) in maps.iter().enumerate() {
+        let eps = base_eps
+            .clone()
+            .with_dialer(Arc::new(NetemDialer::over(
+                Arc::new(crate::comms::DirectDialer),
+                map.clone(),
+            )));
+        joins.push(std::thread::spawn(move || -> Result<(usize, Vec<u8>)> {
+            let mut s = StoreSession::connect(eps)?;
+            s.set(&format!("netem/arrive/{rank}"), b"here")?;
+            let v = s.wait("netem/release")?;
+            Ok((rank, v.to_vec()))
+        }));
+    }
+
+    // The coordinator supervises the barrier on an unimpaired link and
+    // releases once — inside the scaled join deadline or not at all.
+    let mut coord = StoreSession::connect(base_eps)?;
+    let deadline = t0 + timeouts.join_deadline;
+    let mut arrived: BTreeSet<usize> = BTreeSet::new();
+    while arrived.len() < dp {
+        if Instant::now() > deadline {
+            bail!(
+                "impaired rendezvous missed the scaled join deadline: {} of \
+                 {dp} ranks arrived",
+                arrived.len()
+            );
+        }
+        for rank in 0..dp {
+            if !arrived.contains(&rank)
+                && coord.get(&format!("netem/arrive/{rank}"))?.is_some()
+            {
+                arrived.insert(rank);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let join_wall_s = t0.elapsed().as_secs_f64();
+    coord.set("netem/release", b"go")?;
+
+    let mut wakes = Vec::with_capacity(dp);
+    for j in joins {
+        wakes.push(j.join().map_err(|_| anyhow!("netem participant panicked"))??);
+    }
+    wakes.sort_by_key(|&(r, _)| r);
+    healer.join().map_err(|_| anyhow!("netem healer panicked"))?;
+    global().observe("netem.join_wall_s", join_wall_s);
+    Ok(NetemPartitionOutcome {
+        healed_ranks,
+        join_wall_s,
+        heal_after_s: heal_after.as_secs_f64(),
+        wakes,
+    })
+}
+
 /// Run the spec's live plan end to end. Fails fast when the live
 /// training plane (real xla + artifacts) is unavailable.
 pub fn run_live(spec: &ScenarioSpec, seed: u64) -> Result<LiveOutcome> {
@@ -1243,6 +1746,76 @@ mod tests {
                 assert!(ep.groups_rebuilt + ep.groups_rekeyed > 0, "{name}");
             }
         }
+    }
+
+    #[test]
+    fn netem_detection_under_loss_never_falsely_evicts() {
+        // The §15 headline: a crash is still caught through a plane
+        // dropping 30% of its chunks, while survivors whose beats are
+        // delayed by retransmission are never falsely expired — the
+        // lease budget scales from the shaper's deterministic worst
+        // charge instead of loopback constants.
+        let spec = library::by_name("detection_under_loss", 256).unwrap();
+        let episodes = drive_netem_detection(&spec).unwrap();
+        assert_eq!(episodes.len(), 1);
+        let ep = &episodes[0];
+        assert_eq!(ep.detections.len(), 1);
+        assert_eq!(ep.detections[0].rank, 1);
+        assert_eq!(ep.detections[0].path, DetectionPath::LeaseExpiry);
+        assert!(ep.false_evictions.is_empty(), "{:?}", ep.false_evictions);
+        assert!(ep.detection_s > 0.0 && ep.detection_s < 30.0);
+        assert!(ep.lease_budget_s > 4.0, "budget must cover 2x MAX_CHARGE");
+        assert_eq!(ep.epoch, 1, "rebuild must converge on the lossy store");
+        assert!(ep.rebuild_s > 0.0);
+    }
+
+    #[test]
+    fn netem_restore_over_wan_is_bit_exact_and_pays_the_wire() {
+        // Rebuild + shard fetch over a 50ms-RTT jittery WAN link: the
+        // transfer must land bit-exact and the measured walls must
+        // actually reflect the wire (they are the §6 calibration
+        // inputs), with every deadline widened via Timeouts.
+        let spec = library::by_name("restore_over_wan", 256).unwrap();
+        let out = drive_netem_restore(&spec).unwrap();
+        assert!(out.bit_exact, "WAN fetch must stay bit-exact");
+        assert!(out.bytes > 0);
+        assert_eq!(out.epoch, 1);
+        assert!(out.rtt_s > 0.04, "spec link must impose a real RTT");
+        // the dial alone pays one full RTT (50ms) deterministically
+        assert!(out.fetch_wall_s >= 0.04, "measured {}", out.fetch_wall_s);
+        // each store op crosses the link twice (request + response)
+        assert!(out.store_op_s >= 0.02, "measured {}", out.store_op_s);
+        assert!(out.rebuild_s > 0.0);
+    }
+
+    #[test]
+    fn netem_partition_heal_rendezvous_releases_once() {
+        // One rank's link is severed when the barrier opens and heals
+        // mid-rendezvous onto a slow link: its jittered reconnect must
+        // land inside the scaled join deadline, and the single release
+        // wakes every rank exactly once.
+        let spec = library::by_name("partition_heal_rendezvous", 256).unwrap();
+        let out = drive_netem_partition_heal(&spec).unwrap();
+        assert_eq!(out.healed_ranks, vec![2]);
+        assert_eq!(out.wakes.len(), 4);
+        for (rank, payload) in &out.wakes {
+            assert_eq!(payload.as_slice(), b"go", "rank {rank}");
+        }
+        // the severed rank cannot arrive before the heal fires
+        assert!(
+            out.join_wall_s >= out.heal_after_s * 0.95,
+            "join {} vs heal {}",
+            out.join_wall_s,
+            out.heal_after_s
+        );
+    }
+
+    #[test]
+    fn netem_drivers_demand_a_netem_section() {
+        let spec = library::by_name("single_fault", 256).unwrap();
+        assert!(drive_netem_detection(&spec).is_err());
+        assert!(drive_netem_restore(&spec).is_err());
+        assert!(drive_netem_partition_heal(&spec).is_err());
     }
 
     #[test]

@@ -14,12 +14,15 @@
 //!   `(spec, seed)` pairs produce byte-identical journals;
 //! * [`engine`] — the campaign interpreter over the calibrated cluster
 //!   simulator (shared protocol math with `cluster::scenario`);
-//! * [`library`] — eleven built-in scenarios from the paper baseline
+//! * [`library`] — fourteen built-in scenarios from the paper baseline
 //!   to compound production patterns, including coordination-plane
-//!   failover (store primary / controller crashes mid-recovery);
+//!   failover (store primary / controller crashes mid-recovery) and
+//!   impaired-plane campaigns (detection under loss, restore over a
+//!   WAN link, rendezvous across a partition heal);
 //! * [`live`] — the same specs driven against the real in-process
 //!   training plane (controller + worker threads) via scripted
-//!   failure plans.
+//!   failure plans; specs with a `netem:` section run over degraded
+//!   links through the §15 link layer (`drive_netem_*`).
 //!
 //! CLI: `flashrecovery scenario run --spec <name|file> --seed N`;
 //! sweep: `cargo bench --bench chaos_campaigns`; tour:
@@ -37,9 +40,14 @@ pub use engine::{
 pub use journal::Journal;
 pub use live::{
     controller_config, drive_controller_crash_mid_restore, drive_group_rebuilds,
-    drive_live_detection, drive_restores, drive_restores_under_churn,
+    drive_live_detection, drive_netem_detection, drive_netem_partition_heal,
+    drive_netem_restore, drive_restores, drive_restores_under_churn,
     drive_store_crash_mid_rendezvous, evaluate_live, live_failure_plans, run_live,
     ControllerFailoverOutcome, LiveDetectionOutcome, LiveOutcome, LiveRestoreOutcome,
+    NetemDetectionOutcome, NetemPartitionOutcome, NetemRestoreOutcome,
     StoreFailoverOutcome,
 };
-pub use spec::{Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, ScenarioSpec};
+pub use spec::{
+    Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, NetemSpec, NodeLink,
+    ScenarioSpec,
+};

@@ -12,6 +12,7 @@
 //! a worked example.
 
 use crate::cluster::failure::FailureKind;
+use crate::comms::netem::{LinkPolicy, Partition};
 use crate::config::RecoveryMode;
 use crate::util::Json;
 use anyhow::{bail, Context, Result};
@@ -189,6 +190,85 @@ impl Default for Assertions {
     }
 }
 
+/// One per-rank link override in a [`NetemSpec`].
+#[derive(Debug, Clone)]
+pub struct NodeLink {
+    /// Live DP rank whose link is impaired; `None` impairs the link
+    /// every rank shares (the coordination-plane default path).
+    pub rank: Option<usize>,
+    pub policy: LinkPolicy,
+}
+
+/// Declarative network impairment for a campaign's live plane
+/// (DESIGN.md §15): a default policy applied to every link, per-rank
+/// overrides, and an optional heal time after which partitions lift.
+/// The impaired drivers in `chaos::live` compile this into a
+/// [`NetemMap`](crate::comms::NetemMap) fronting the real sockets.
+#[derive(Debug, Clone, Default)]
+pub struct NetemSpec {
+    pub default: Option<LinkPolicy>,
+    pub links: Vec<NodeLink>,
+    /// Wall-clock seconds after campaign start at which every
+    /// partition in the map heals (delay/loss/rate stay in force).
+    pub heal_after_s: Option<f64>,
+}
+
+impl NetemSpec {
+    pub fn validate(&self) -> Result<()> {
+        if let Some(p) = &self.default {
+            p.validate().map_err(|e| anyhow::anyhow!("netem default: {e}"))?;
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            l.policy
+                .validate()
+                .map_err(|e| anyhow::anyhow!("netem link {i}: {e}"))?;
+        }
+        if let Some(h) = self.heal_after_s {
+            if h < 0.0 || !h.is_finite() {
+                bail!("netem heal_after_s {h} must be finite and >= 0");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn policy_to_json(p: &LinkPolicy) -> Json {
+    let mut o = Json::object();
+    if p.delay_ms != 0.0 {
+        o.set("delay_ms", p.delay_ms);
+    }
+    if p.jitter_ms != 0.0 {
+        o.set("jitter_ms", p.jitter_ms);
+    }
+    if p.loss != 0.0 {
+        o.set("loss", p.loss);
+    }
+    if let Some(r) = p.rate_kbps {
+        o.set("rate_kbps", r);
+    }
+    if p.partition != Partition::None {
+        o.set("partition", p.partition.name());
+    }
+    o
+}
+
+fn policy_from_json(v: &Json) -> Result<LinkPolicy> {
+    let partition = match v.get("partition").as_str() {
+        None => Partition::None,
+        Some(s) => Partition::parse(s)
+            .with_context(|| format!("unknown netem partition {s:?}"))?,
+    };
+    let p = LinkPolicy {
+        delay_ms: v.get("delay_ms").as_f64().unwrap_or(0.0),
+        jitter_ms: v.get("jitter_ms").as_f64().unwrap_or(0.0),
+        loss: v.get("loss").as_f64().unwrap_or(0.0),
+        rate_kbps: v.get("rate_kbps").as_f64(),
+        partition,
+    };
+    p.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(p)
+}
+
 /// Live-path (in-process controller) run shape.
 #[derive(Debug, Clone)]
 pub struct LiveShape {
@@ -215,6 +295,11 @@ pub struct ScenarioSpec {
     pub faults: Vec<FaultSpec>,
     pub assertions: Assertions,
     pub live: LiveShape,
+    /// Network impairment applied to the live plane for the campaign;
+    /// `None` (the default) leaves every link perfect — and leaves the
+    /// rendered JSON (and thus the spec hash) of pre-§15 specs
+    /// untouched.
+    pub netem: Option<NetemSpec>,
 }
 
 impl Default for ScenarioSpec {
@@ -228,6 +313,7 @@ impl Default for ScenarioSpec {
             faults: Vec::new(),
             assertions: Assertions::default(),
             live: LiveShape::default(),
+            netem: None,
         }
     }
 }
@@ -265,6 +351,9 @@ impl ScenarioSpec {
                 }
                 _ => {}
             }
+        }
+        if let Some(n) = &self.netem {
+            n.validate()?;
         }
         Ok(())
     }
@@ -378,6 +467,31 @@ impl ScenarioSpec {
             .set("faults", Json::Array(faults))
             .set("assertions", aj)
             .set("live", lv);
+        // Emitted only when present: pre-§15 specs keep their hash.
+        if let Some(n) = &self.netem {
+            let mut nj = Json::object();
+            if let Some(p) = &n.default {
+                nj.set("default", policy_to_json(p));
+            }
+            if !n.links.is_empty() {
+                let links: Vec<Json> = n
+                    .links
+                    .iter()
+                    .map(|l| {
+                        let mut o = policy_to_json(&l.policy);
+                        if let Some(r) = l.rank {
+                            o.set("rank", r);
+                        }
+                        o
+                    })
+                    .collect();
+                nj.set("links", Json::Array(links));
+            }
+            if let Some(h) = n.heal_after_s {
+                nj.set("heal_after_s", h);
+            }
+            o.set("netem", nj);
+        }
         o
     }
 
@@ -490,6 +604,32 @@ impl ScenarioSpec {
             min_stragglers_evicted: aj.get("min_stragglers_evicted").as_usize(),
         };
 
+        let nj = v.get("netem");
+        let netem = if nj.is_null() {
+            None
+        } else {
+            let default = if nj.get("default").is_null() {
+                None
+            } else {
+                Some(policy_from_json(nj.get("default")).context("netem default")?)
+            };
+            let mut links = Vec::new();
+            if let Some(items) = nj.get("links").as_array() {
+                for (i, lj) in items.iter().enumerate() {
+                    links.push(NodeLink {
+                        rank: lj.get("rank").as_usize(),
+                        policy: policy_from_json(lj)
+                            .with_context(|| format!("netem link {i}"))?,
+                    });
+                }
+            }
+            Some(NetemSpec {
+                default,
+                links,
+                heal_after_s: nj.get("heal_after_s").as_f64(),
+            })
+        };
+
         let lv = v.get("live");
         let dl = LiveShape::default();
         let spec = ScenarioSpec {
@@ -508,6 +648,7 @@ impl ScenarioSpec {
                 dp: lv.get("dp").as_usize().unwrap_or(dl.dp),
                 steps: lv.get("steps").as_i64().unwrap_or(dl.steps as i64) as u64,
             },
+            netem,
         };
         spec.validate()?;
         Ok(spec)
@@ -568,6 +709,51 @@ mod tests {
         let back = ScenarioSpec::load(&path).unwrap();
         assert_eq!(back.hash(), spec.hash());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn netem_section_roundtrips_and_leaves_plain_specs_untouched() {
+        // Pre-§15 specs must render (and hash) exactly as before.
+        let plain = library::by_name("single_fault", 256).unwrap();
+        assert!(plain.netem.is_none());
+        assert!(!plain.to_json().render().contains("netem"));
+
+        let spec = library::by_name("partition_heal_rendezvous", 256).unwrap();
+        let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.hash(), spec.hash());
+        let n = back.netem.expect("netem section survives the roundtrip");
+        assert_eq!(n.default.unwrap().delay_ms, 5.0);
+        assert_eq!(n.links.len(), 1);
+        assert_eq!(n.links[0].rank, Some(2));
+        assert_eq!(n.links[0].policy.partition, Partition::Both);
+        assert_eq!(n.heal_after_s, Some(0.4));
+
+        let lossy = library::by_name("detection_under_loss", 256).unwrap();
+        let back = ScenarioSpec::from_json(&lossy.to_json()).unwrap();
+        assert_eq!(back.netem.unwrap().default.unwrap().loss, 0.30);
+    }
+
+    #[test]
+    fn netem_rejects_nonsense() {
+        let mut s = ScenarioSpec::default();
+        s.netem = Some(NetemSpec {
+            default: Some(LinkPolicy::lossy(1.5)),
+            links: Vec::new(),
+            heal_after_s: None,
+        });
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioSpec::default();
+        s.netem = Some(NetemSpec {
+            default: None,
+            links: Vec::new(),
+            heal_after_s: Some(-1.0),
+        });
+        assert!(s.validate().is_err());
+
+        let v = Json::parse(r#"{"netem":{"default":{"partition":"sideways"}}}"#)
+            .unwrap();
+        assert!(ScenarioSpec::from_json(&v).is_err());
     }
 
     #[test]

@@ -93,7 +93,40 @@ impl Default for LatencyModel {
     }
 }
 
+/// Wire numbers measured on the *live* plane by the impaired chaos
+/// drivers (`chaos::live::drive_netem_*`, DESIGN.md §15) — the §6
+/// re-calibration inputs that replace the paper-fit constants with
+/// values this machine's sockets actually produced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireMeasurements {
+    /// Mean store-op round-trip over the measured link (s) — replaces
+    /// `tcp_store_per_link_s`.
+    pub tcp_store_per_link_s: f64,
+    /// Measured last-good-heartbeat -> detection latency (s) —
+    /// re-centers `detect_notice_min_s/max_s` around the wire number.
+    pub detect_notice_s: f64,
+}
+
 impl LatencyModel {
+    /// A model whose TCP-store and detection-notice constants are
+    /// replaced by live wire measurements. The defaults stay the
+    /// paper-fit values (pinned by tests); this is the §6 refresh
+    /// path: `flashrecovery netem <scenario> --calibrate` measures,
+    /// then simulator campaigns run on the refreshed model.
+    pub fn with_wire(m: WireMeasurements) -> Self {
+        let mut model = LatencyModel::default();
+        if m.tcp_store_per_link_s > 0.0 && m.tcp_store_per_link_s.is_finite() {
+            model.tcp_store_per_link_s = m.tcp_store_per_link_s;
+        }
+        if m.detect_notice_s > 0.0 && m.detect_notice_s.is_finite() {
+            // keep the band shape (min..max spread) centered on the
+            // measured notice latency
+            model.detect_notice_min_s = m.detect_notice_s * 0.5;
+            model.detect_notice_max_s = m.detect_notice_s * 1.5;
+        }
+        model
+    }
+
     pub fn container_start(&self, rng: &mut Rng) -> f64 {
         rng.normal_clamped(
             self.container_start_mean_s,
@@ -190,6 +223,27 @@ mod tests {
         assert!((t2 - l.tcp_store_setup_s) / (t1 - l.tcp_store_setup_s) > 1.9);
         // ~18s at 1000 devices
         assert!(t1 > 10.0 && t1 < 30.0);
+    }
+
+    #[test]
+    fn wire_measurements_override_only_the_measured_constants() {
+        let d = LatencyModel::default();
+        let m = LatencyModel::with_wire(WireMeasurements {
+            tcp_store_per_link_s: 0.052,
+            detect_notice_s: 4.2,
+        });
+        assert_eq!(m.tcp_store_per_link_s, 0.052);
+        assert!(m.detect_notice_min_s < 4.2 && m.detect_notice_max_s > 4.2);
+        // untouched constants keep the paper fit
+        assert_eq!(m.container_start_mean_s, d.container_start_mean_s);
+        assert_eq!(m.ranktable_linear_s_per_dev, d.ranktable_linear_s_per_dev);
+        // garbage measurements fall back to the defaults
+        let g = LatencyModel::with_wire(WireMeasurements {
+            tcp_store_per_link_s: -1.0,
+            detect_notice_s: f64::NAN,
+        });
+        assert_eq!(g.tcp_store_per_link_s, d.tcp_store_per_link_s);
+        assert_eq!(g.detect_notice_max_s, d.detect_notice_max_s);
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod scenario;
 pub mod simtime;
 
 pub use failure::{FailureCategory, FailureEvent, FailureInjector, FailureKind};
-pub use latency::{LatencyModel, StepTimeModel};
+pub use latency::{LatencyModel, StepTimeModel, WireMeasurements};
 pub use node::{NodeState, SimCluster, SimNode};
 pub use scenario::{
     flash_restart_cost, sample_detection_s, simulate_flash, simulate_flash_with,

@@ -1,0 +1,166 @@
+//! Pluggable link layer: every live-plane socket is created through a
+//! [`Dialer`] and driven through the [`Link`] trait, so the same wire
+//! protocols run unchanged over a perfect loopback (`DirectDialer`) or
+//! an impaired path (`comms::netem`) injecting delay, jitter, loss,
+//! bandwidth caps, and asymmetric partitions (DESIGN.md §15).
+//!
+//! The abstraction is deliberately thin — `Read + Write` plus the three
+//! socket knobs the live plane actually uses (read deadline, Nagle,
+//! peer identity) — so wire format and op accounting stay bit-identical
+//! through any `Link` implementation: an impaired link may *delay* or
+//! *drop* traffic, never reorder bytes within a direction or alter
+//! frame contents.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+/// One established bidirectional byte stream of the live plane.
+///
+/// Implementations must preserve byte order per direction and deliver
+/// writes atomically enough for the framed protocols: `comms::wire`
+/// always hands a whole pre-encoded frame to a single `write` call, so
+/// a link that drops or delays *whole writes* (netem partitions) can
+/// never tear a frame.
+pub trait Link: Read + Write + Send {
+    /// Bound how long a blocking read may stall (None = forever).
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()>;
+    /// Disable (true) or re-enable Nagle batching on the underlying
+    /// transport, where one exists.
+    fn set_nodelay(&self, on: bool) -> io::Result<()>;
+    /// Remote address of the link, for accounting and diagnostics.
+    fn peer_addr(&self) -> io::Result<SocketAddr>;
+}
+
+impl Link for TcpStream {
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_read_timeout(self, d)
+    }
+
+    fn set_nodelay(&self, on: bool) -> io::Result<()> {
+        TcpStream::set_nodelay(self, on)
+    }
+
+    fn peer_addr(&self) -> io::Result<SocketAddr> {
+        TcpStream::peer_addr(self)
+    }
+}
+
+/// Creates [`Link`]s: the single seam through which every live-plane
+/// client socket is opened — store clients, heartbeat emitters, state
+/// streams, replication probes, endpoint discovery.
+pub trait Dialer: Send + Sync {
+    fn dial(&self, addr: SocketAddr, timeout: Duration) -> io::Result<Box<dyn Link>>;
+
+    /// Short label for diagnostics ("direct", "netem", ...).
+    fn name(&self) -> &'static str {
+        "dialer"
+    }
+}
+
+/// The plain TCP dialer: `connect_timeout` + `TCP_NODELAY`, exactly
+/// the socket the live plane always opened before the link layer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DirectDialer;
+
+impl Dialer for DirectDialer {
+    fn dial(&self, addr: SocketAddr, timeout: Duration) -> io::Result<Box<dyn Link>> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true).ok();
+        Ok(Box::new(stream))
+    }
+
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+}
+
+fn default_slot() -> &'static RwLock<Arc<dyn Dialer>> {
+    static SLOT: OnceLock<RwLock<Arc<dyn Dialer>>> = OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(Arc::new(DirectDialer)))
+}
+
+/// The process-wide default dialer. Paths with no explicit dialer in
+/// hand (bare `TcpStoreClient::connect`, the replication shipper) dial
+/// through this; campaigns that impair a whole process install a netem
+/// dialer here. Parallel-running tests must *not* mutate it — they
+/// pass explicit dialers (or front a `NetemProxy`) instead.
+pub fn default_dialer() -> Arc<dyn Dialer> {
+    default_slot().read().unwrap().clone()
+}
+
+/// Replace the process-wide default dialer (returns the previous one).
+pub fn install_default_dialer(d: Arc<dyn Dialer>) -> Arc<dyn Dialer> {
+    std::mem::replace(&mut *default_slot().write().unwrap(), d)
+}
+
+/// Restore the plain TCP default.
+pub fn reset_default_dialer() {
+    install_default_dialer(Arc::new(DirectDialer));
+}
+
+/// Bounded reconnect jitter: uniform in [0.5·base, 1.5·base), keyed by
+/// `(salt, attempt)` so each client draws a deterministic but distinct
+/// delay. After a partition heals or a primary dies, the fleet's
+/// reconnect attempts spread across a full base interval instead of
+/// stampeding the promoted store in lockstep (DESIGN.md §15).
+pub fn jittered(base: Duration, salt: u64, attempt: u32) -> Duration {
+    let seed = salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (attempt as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    let mut rng = crate::util::Rng::new(seed);
+    base.mul_f64(rng.range_f64(0.5, 1.5))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+
+    #[test]
+    fn direct_dialer_is_a_transparent_tcp_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 5];
+            s.read_exact(&mut buf).unwrap();
+            s.write_all(&buf).unwrap();
+        });
+        let mut link = DirectDialer.dial(addr, Duration::from_secs(5)).unwrap();
+        assert_eq!(link.peer_addr().unwrap(), addr);
+        link.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        link.write_all(b"hello").unwrap();
+        let mut back = [0u8; 5];
+        link.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"hello");
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn default_dialer_roundtrip_install_reset() {
+        // Only sanity-check the accessor contract — parallel tests
+        // must not observe a mutated global, so install/reset happen
+        // back to back with the same value.
+        let prev = default_dialer();
+        let again = install_default_dialer(prev.clone());
+        assert_eq!(again.name(), prev.name());
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_spread() {
+        let base = Duration::from_millis(100);
+        let mut seen = std::collections::BTreeSet::new();
+        for salt in 0..32u64 {
+            let d = jittered(base, salt, 1);
+            assert!(d >= Duration::from_millis(50), "{d:?} below bound");
+            assert!(d < Duration::from_millis(150), "{d:?} above bound");
+            seen.insert(d.as_micros());
+        }
+        assert!(seen.len() >= 16, "jitter must spread, got {} values", seen.len());
+        // deterministic per (salt, attempt)
+        assert_eq!(jittered(base, 7, 3), jittered(base, 7, 3));
+        assert_ne!(jittered(base, 7, 3), jittered(base, 7, 4));
+    }
+}

@@ -8,6 +8,8 @@
 
 pub mod collective;
 pub mod group;
+pub mod link;
+pub mod netem;
 #[cfg(target_os = "linux")]
 mod reactor;
 pub mod replication;
@@ -18,13 +20,19 @@ pub mod wire;
 
 pub use collective::{Collective, CollectiveError};
 pub use group::{CommGroup, GroupId, GroupKind, GroupSet, RekeyStats};
+pub use link::{default_dialer, jittered, Dialer, DirectDialer, Link};
+pub use netem::{
+    ImpairedLink, LinkPolicy, NetemDialer, NetemMap, NetemProxy, Partition,
+};
 pub use replication::{
     repl_status, ReplStatusInfo, ReplicaSet, Replicator, StoreEndpoints,
     StoreRole, StoreSession,
 };
 pub use state_stream::{
-    fetch_snapshot, serve_snapshot, transfer_tag, EpochFence, Expect, RestoreError,
-    RestoreResult, StreamConfig,
+    fetch_from_addr, fetch_from_addr_via, fetch_snapshot, serve_snapshot, transfer_tag,
+    EpochFence, Expect, RestoreError, RestoreResult, StreamConfig,
 };
-pub use tcp_store::{establish, FencedWait, StoreCore, TcpStoreClient, TcpStoreServer};
+pub use tcp_store::{
+    establish, establish_via, FencedWait, StoreCore, TcpStoreClient, TcpStoreServer,
+};
 pub use wire::{Bytes, Request, Response};

@@ -22,6 +22,7 @@
 //!   the controller's rebuild plane, the chaos drivers, and the
 //!   replicated-mode bench column all build on.
 
+use super::link::{default_dialer, jittered, Dialer};
 use super::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
 use super::wire::{Bytes, Request, Response};
 use crate::telemetry::{trace::TraceCtx, Snapshot};
@@ -344,23 +345,62 @@ fn shipper_loop(r: &Replicator, mut conns: Vec<TcpStoreClient>) {
 /// bare `SocketAddr` that used to be threaded through `establish`,
 /// the heartbeat emitters, rendezvous, restore discovery, and the
 /// controller: every consumer now owns the full set and can fail
-/// over.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// over. The set also carries the [`Dialer`] its links are opened
+/// through, so handing impaired endpoints to a session, an emitter,
+/// or discovery puts *every* connection they open behind the same
+/// degraded path (DESIGN.md §15).
+#[derive(Clone)]
 pub struct StoreEndpoints {
     addrs: Vec<SocketAddr>,
+    dialer: Arc<dyn Dialer>,
 }
+
+impl std::fmt::Debug for StoreEndpoints {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StoreEndpoints")
+            .field("addrs", &self.addrs)
+            .field("dialer", &self.dialer.name())
+            .finish()
+    }
+}
+
+// Identity is the address set: the dialer shapes *how* links reach
+// those addresses, not *which* plane they name.
+impl PartialEq for StoreEndpoints {
+    fn eq(&self, other: &Self) -> bool {
+        self.addrs == other.addrs
+    }
+}
+
+impl Eq for StoreEndpoints {}
 
 impl StoreEndpoints {
     /// Single-node plane (the backward-compatible common case).
     pub fn one(addr: SocketAddr) -> Self {
-        StoreEndpoints { addrs: vec![addr] }
+        StoreEndpoints { addrs: vec![addr], dialer: default_dialer() }
     }
 
     /// Multi-node plane. The first address is the primary hint;
     /// discovery still probes every endpoint.
     pub fn new(addrs: Vec<SocketAddr>) -> Self {
         assert!(!addrs.is_empty(), "endpoint set must not be empty");
-        StoreEndpoints { addrs }
+        StoreEndpoints { addrs, dialer: default_dialer() }
+    }
+
+    /// Route every link opened through this endpoint set via an
+    /// explicit dialer (e.g. a `comms::netem::NetemDialer`).
+    pub fn with_dialer(mut self, dialer: Arc<dyn Dialer>) -> Self {
+        self.dialer = dialer;
+        self
+    }
+
+    pub fn dialer(&self) -> Arc<dyn Dialer> {
+        self.dialer.clone()
+    }
+
+    /// Open a store client to `addr` through this set's dialer.
+    pub fn dial(&self, addr: SocketAddr, timeout: Duration) -> Result<TcpStoreClient> {
+        TcpStoreClient::connect_via(&*self.dialer, addr, timeout)
     }
 
     pub fn addrs(&self) -> &[SocketAddr] {
@@ -459,9 +499,14 @@ impl StoreSession {
         })
     }
 
-    /// Connect with an explicit discovery deadline.
+    /// Connect with an explicit discovery deadline. Retry delays are
+    /// jittered per session, so many clients re-joining a plane at
+    /// once (e.g. after a partition heals) spread their discovery
+    /// probes instead of stampeding the promoted primary.
     pub fn connect_within(endpoints: StoreEndpoints, patience: Duration) -> Result<Self> {
         let deadline = Instant::now() + patience;
+        let salt = SESSION_NONCE.fetch_add(1, Ordering::Relaxed);
+        let mut attempt = 0u32;
         loop {
             match Self::try_connect(&endpoints) {
                 Ok(s) => return Ok(s),
@@ -469,7 +514,12 @@ impl StoreSession {
                     if Instant::now() >= deadline {
                         return Err(e);
                     }
-                    std::thread::sleep(Duration::from_millis(25));
+                    attempt += 1;
+                    std::thread::sleep(jittered(
+                        Duration::from_millis(25),
+                        salt,
+                        attempt,
+                    ));
                 }
             }
         }
@@ -506,8 +556,13 @@ impl StoreSession {
     }
 
     /// Tear down the current connection and rediscover the primary.
+    /// The retry delay is jittered by the session's dedup base (one
+    /// stable salt per session), so a fleet of sessions orphaned by
+    /// the same primary crash fans its reconnects out over the base
+    /// interval instead of synchronizing on the promoted node.
     fn fail_over(&mut self) -> Result<()> {
         let deadline = Instant::now() + FAILOVER_PATIENCE;
+        let mut attempt = 0u32;
         loop {
             match discover(&self.endpoints) {
                 Ok((primary, mut client)) => {
@@ -520,7 +575,12 @@ impl StoreSession {
                     if Instant::now() >= deadline {
                         return Err(e);
                     }
-                    std::thread::sleep(Duration::from_millis(50));
+                    attempt += 1;
+                    std::thread::sleep(jittered(
+                        Duration::from_millis(50),
+                        self.dedup_base,
+                        attempt,
+                    ));
                 }
             }
         }
@@ -776,7 +836,7 @@ impl StoreSession {
 fn discover(eps: &StoreEndpoints) -> Result<(SocketAddr, TcpStoreClient)> {
     let mut best: Option<(u64, u64, usize)> = None;
     for (i, &addr) in eps.addrs().iter().enumerate() {
-        let Ok(mut c) = TcpStoreClient::connect_with_timeout(addr, PROBE_CONNECT) else {
+        let Ok(mut c) = eps.dial(addr, PROBE_CONNECT) else {
             continue;
         };
         let Ok(st) = repl_status(&mut c) else { continue };
@@ -795,7 +855,7 @@ fn discover(eps: &StoreEndpoints) -> Result<(SocketAddr, TcpStoreClient)> {
         bail!("no reachable store endpoint in {:?}", eps.addrs());
     };
     let addr = eps.addrs()[i];
-    let mut c = TcpStoreClient::connect_with_timeout(addr, PROBE_CONNECT)?;
+    let mut c = eps.dial(addr, PROBE_CONNECT)?;
     let peers: Vec<String> = eps
         .addrs()
         .iter()

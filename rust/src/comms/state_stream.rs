@@ -157,6 +157,10 @@ pub struct StreamConfig {
     /// How long a source waits for a receiver to connect before the
     /// transfer is declared dead (bounded, never a hang).
     pub accept_deadline: Duration,
+    /// IO inactivity bound on this transfer's sockets — flows from
+    /// [`Timeouts::io_stall`](crate::config::Timeouts) so an impaired
+    /// link widens it instead of spuriously tripping the watchdog.
+    pub io_stall: Duration,
     /// Serve a listener's receivers one after another instead of
     /// concurrently — models a source whose single uplink serializes
     /// the legs (the pre-refactor broadcast baseline; used by the
@@ -174,8 +178,24 @@ impl Default for StreamConfig {
             chunk_bytes: DEFAULT_CHUNK_BYTES,
             throttle: None,
             accept_deadline: Duration::from_secs(60),
+            io_stall: IO_STALL_TIMEOUT,
             serial_serve: false,
             trace: None,
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Derive the transfer deadlines from one [`Timeouts`] config —
+    /// the §15 seam that lets campaigns scale every state-stream
+    /// watchdog for a slow link in one place.
+    ///
+    /// [`Timeouts`]: crate::config::Timeouts
+    pub fn from_timeouts(t: &crate::config::Timeouts) -> Self {
+        StreamConfig {
+            accept_deadline: t.accept_deadline,
+            io_stall: t.io_stall,
+            ..Default::default()
         }
     }
 }
@@ -551,7 +571,7 @@ pub fn serve_listener(
                 stream
                     .set_nonblocking(false)
                     .map_err(|e| RestoreError::Fatal(e.into()))?;
-                stream.set_write_timeout(Some(IO_STALL_TIMEOUT)).ok();
+                stream.set_write_timeout(Some(cfg.io_stall)).ok();
                 stream.set_nodelay(true).ok();
                 streams.push(stream);
             }
@@ -630,11 +650,31 @@ pub fn fetch_from_addr(
     expect: &Expect,
     fence: &EpochFence,
 ) -> RestoreResult<(Snapshot, FetchStats)> {
-    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))
+    fetch_from_addr_via(
+        &*crate::comms::link::default_dialer(),
+        addr,
+        expect,
+        fence,
+        &StreamConfig::default(),
+    )
+}
+
+/// [`fetch_from_addr`] through an explicit dialer with explicit
+/// deadlines — the entry impaired restore campaigns use to pull a
+/// shard across a degraded link (DESIGN.md §15).
+pub fn fetch_from_addr_via(
+    dialer: &dyn crate::comms::link::Dialer,
+    addr: SocketAddr,
+    expect: &Expect,
+    fence: &EpochFence,
+    cfg: &StreamConfig,
+) -> RestoreResult<(Snapshot, FetchStats)> {
+    let mut link = dialer
+        .dial(addr, Duration::from_secs(10))
         .map_err(|e| RestoreError::Fatal(e.into()))?;
-    stream.set_read_timeout(Some(IO_STALL_TIMEOUT)).ok();
-    stream.set_nodelay(true).ok();
-    fetch_snapshot(&mut stream, expect, fence)
+    link.set_read_timeout(Some(cfg.io_stall)).ok();
+    link.set_nodelay(true).ok();
+    fetch_snapshot(&mut link, expect, fence)
 }
 
 #[cfg(test)]

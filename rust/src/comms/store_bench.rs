@@ -14,11 +14,15 @@
 //!   as the in-tree baseline the speedup criterion compares against;
 //! * **replicated** — the batched cell re-run against a
 //!   quorum-replicated plane (primary + `replicas` log-shipping
-//!   followers, DESIGN.md §13).
+//!   followers, DESIGN.md §13);
+//! * **netem** — the batched cell re-run through an in-process netem
+//!   proxy adding a mild symmetric delay (DESIGN.md §15): the
+//!   degraded-link column, isolating what the wire costs the plane.
 //!
-//! Serial and replicated cells are capped at 8,192 simulated clients
-//! (their columns report 0 above that, and the report notes the cap):
-//! one-RTT-per-op at 65k clients measures the harness, not the store.
+//! Serial, replicated, and netem cells are capped at 8,192 simulated
+//! clients (their columns report 0 above that, and the report notes
+//! the cap): one-RTT-per-op at 65k clients measures the harness, not
+//! the store.
 //!
 //! Scale model (same as the rendezvous and detection sweeps): the
 //! simulated-client count drives keys, counters, heartbeat ranks, and
@@ -29,6 +33,7 @@
 //! high-water mark off the server's own metrics — 1 for the reactor)
 //! and `rss mb` (VmRSS after the gated cell, Linux; 0 elsewhere).
 
+use super::netem::{LinkPolicy, NetemProxy};
 use super::replication::ReplicaSet;
 use super::tcp_store::{StoreCore, TcpStoreClient, TcpStoreServer};
 use super::wire::{Request, Response};
@@ -53,6 +58,13 @@ const MIX_OPS: usize = 6;
 /// dominate the sweep's wall clock while measuring nothing new about
 /// the store — the serial baseline's verdict is settled by 8k.
 const SERIAL_SCALE_CAP: usize = 8192;
+
+/// Per-direction delay (ms) of the degraded-link column's in-process
+/// `NetemProxy` (DESIGN.md §15): a mild metro link — enough to
+/// separate the column from loopback noise without dominating the
+/// sweep's wall clock. Every batched frame pays at least one
+/// `2 × NETEM_DELAY_MS` round trip through the proxy.
+const NETEM_DELAY_MS: f64 = 2.0;
 
 /// Configuration for the store throughput sweep.
 #[derive(Debug, Clone)]
@@ -208,6 +220,18 @@ fn run_replicated_cell(
     run_cell_on(set.addr(), cfg, clients, true, None)
 }
 
+/// Run one batched cell with every connection routed through an
+/// in-process [`NetemProxy`] imposing `NETEM_DELAY_MS` per direction:
+/// the §15 degraded-link column. Same store, same workload — the
+/// column isolates what the wire costs the batched data plane.
+fn run_netem_cell(cfg: &StoreSweepConfig, clients: usize) -> Result<(Histogram, f64)> {
+    let server = TcpStoreServer::start_with("127.0.0.1:0".parse()?, StoreCore::Reactor)?;
+    let mut proxy = NetemProxy::start(server.addr(), LinkPolicy::delay(NETEM_DELAY_MS))?;
+    let out = run_cell_on(proxy.addr(), cfg, clients, true, None);
+    proxy.shutdown();
+    out
+}
+
 /// The driver loop of one (scale, mode) cell against an already
 /// running store at `addr`.
 fn run_cell_on(
@@ -281,6 +305,7 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
             "repl p50",
             "peak threads",
             "rss mb",
+            "netem p50",
         ],
     );
     for &n in &cfg.clients {
@@ -291,16 +316,23 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
             run_cell(cfg, n, true, StoreCore::Reactor, None)?;
         let rss = rss_mb();
         let (threads_h, _, _) = run_cell(cfg, n, true, StoreCore::Threads, None)?;
-        let (serial_p50, serial_ops, repl_p50, speedup) = if n <= SERIAL_SCALE_CAP
-        {
+        let (serial_p50, serial_ops, repl_p50, speedup, netem_p50) =
+            if n <= SERIAL_SCALE_CAP {
             let (serial_h, serial_ops, _) =
                 run_cell(cfg, n, false, StoreCore::Reactor, None)?;
             let (repl_h, _) = run_replicated_cell(cfg, n)?;
+            let (netem_h, _) = run_netem_cell(cfg, n)?;
             let speedup =
                 if serial_ops > 0.0 { batched_ops / serial_ops } else { 0.0 };
-            (serial_h.p50() * 1e6, serial_ops, repl_h.p50() * 1e6, speedup)
+            (
+                serial_h.p50() * 1e6,
+                serial_ops,
+                repl_h.p50() * 1e6,
+                speedup,
+                netem_h.p50() * 1e6,
+            )
         } else {
-            (0.0, 0.0, 0.0, 0.0)
+            (0.0, 0.0, 0.0, 0.0, 0.0)
         };
         report.row(
             format!("n={n}"),
@@ -315,6 +347,7 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
                 repl_p50,
                 peak,
                 rss,
+                netem_p50,
             ],
         );
     }
@@ -328,10 +361,17 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
         cfg.rounds, cfg.repeats, cfg.connections, BATCH_OPS, cfg.replicas
     ));
     report.note(format!(
-        "serial and replicated cells are capped at {SERIAL_SCALE_CAP} \
+        "serial, replicated, and netem cells are capped at {SERIAL_SCALE_CAP} \
          simulated clients (0 above): one RTT per op at 65k measures the \
          harness, not the store — their columns are baselines, not gates, \
          beyond that scale"
+    ));
+    report.note(format!(
+        "netem p50 re-runs the batched reactor cell through an in-process \
+         netem proxy adding {NETEM_DELAY_MS}ms per direction (DESIGN.md §15): \
+         the degraded-link column — every frame pays at least one \
+         {:.0}ms round trip through the proxy",
+        2.0 * NETEM_DELAY_MS
     ));
     report.note(
         "gates: per-op p50 at the largest scale <= 1.5x the 4096-client p50 \
@@ -356,7 +396,11 @@ pub fn store_sweep(cfg: &StoreSweepConfig) -> Result<BenchReport> {
 ///   measured scale;
 /// * the reactor's peak serving threads stay ≤ 8 at every scale
 ///   (Linux; elsewhere the reactor request degrades to the pool);
-/// * RSS at the largest scale ≤ 2x the 4096-client row's + 256MB.
+/// * RSS at the largest scale ≤ 2x the 4096-client row's + 256MB;
+/// * the §15 degraded-link cell actually pays the proxy's wire (per-op
+///   p50 ≥ 90% of one proxy RTT amortised over a full frame) and stays
+///   within a bounded envelope of the un-impaired cell — the wire, not
+///   queueing collapse, must be the difference.
 ///
 /// All latency bounds carry a 5us noise floor for loaded runners.
 pub fn check_report(cfg: &StoreSweepConfig, report: &BenchReport) -> Result<()> {
@@ -422,6 +466,27 @@ pub fn check_report(cfg: &StoreSweepConfig, report: &BenchReport) -> Result<()> 
                  n={n}"
             );
         }
+        // §15 degraded-link gate: one proxy RTT amortised over a full
+        // frame is the deterministic per-op floor (frames never carry
+        // more than BATCH_OPS ops, and each one sleeps through the
+        // proxy both ways); the ceiling leaves room for frames split
+        // into several charged bursts but catches queueing collapse.
+        let netem = r[10];
+        if netem > 0.0 {
+            let rtt_us = 2.0 * NETEM_DELAY_MS * 1e3;
+            let floor = rtt_us / BATCH_OPS as f64;
+            ensure!(
+                netem >= 0.9 * floor,
+                "netem cell at n={n} did not pay the wire: {netem:.2}us/op \
+                 vs a {floor:.2}us/op proxy-RTT floor"
+            );
+            ensure!(
+                netem <= 1.5 * plain + 100.0 * floor + 5.0,
+                "netem cell at n={n} looks like queueing collapse, not a \
+                 slow wire: {netem:.2}us/op vs {:.2}us allowed",
+                1.5 * plain + 100.0 * floor + 5.0
+            );
+        }
     }
     // §14 memory gate: bounded RSS at the top scale (Linux-measured;
     // rows report 0 where /proc is unavailable)
@@ -484,6 +549,12 @@ mod tests {
         assert_eq!(row[6], 4.0);
         assert!(row[7] > 0.0, "replicated p50 must be measured: {row:?}");
         assert!(row[8] >= 1.0, "peak serving threads must be sampled: {row:?}");
+        // 24 ops per frame in this config, and every frame sleeps
+        // through the netem proxy both ways: >= 4ms/24 ≈ 166us/op
+        assert!(
+            row[10] > 100.0,
+            "netem p50 must pay the proxy's wire: {row:?}"
+        );
         #[cfg(target_os = "linux")]
         {
             assert!(

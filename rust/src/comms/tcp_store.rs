@@ -1233,9 +1233,12 @@ pub enum FencedWait {
     Superseded { current: u64 },
 }
 
-/// Client connection to the store.
+/// Client connection to the store. The transport is a pluggable
+/// [`Link`](super::link::Link) — plain TCP through the default dialer,
+/// or an impaired path when dialed via `comms::netem` — and the wire
+/// protocol is byte-identical either way.
 pub struct TcpStoreClient {
-    stream: TcpStream,
+    link: Box<dyn super::link::Link>,
     ops: u64,
     /// Trace context stamped onto every outgoing frame (16 trailing
     /// bytes, DESIGN.md §12); `None` sends classic untraced frames.
@@ -1249,18 +1252,28 @@ impl TcpStoreClient {
 
     /// Connect with an explicit connect timeout — discovery probes
     /// use a short one so a dead endpoint costs milliseconds, not the
-    /// 10s client default.
+    /// 10s client default. Dials through the process-default dialer.
     pub fn connect_with_timeout(addr: SocketAddr, timeout: Duration) -> Result<Self> {
-        let stream = TcpStream::connect_timeout(&addr, timeout)?;
-        stream.set_nodelay(true).ok();
-        Ok(TcpStoreClient { stream, ops: 0, trace_ctx: None })
+        Self::connect_via(&*super::link::default_dialer(), addr, timeout)
     }
 
-    /// Set (or clear) the stream's read timeout — the session layer
+    /// Connect through an explicit [`Dialer`](super::link::Dialer) —
+    /// the seam impaired campaigns use to put this client behind a
+    /// degraded link without touching any protocol code.
+    pub fn connect_via(
+        dialer: &dyn super::link::Dialer,
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let link = dialer.dial(addr, timeout)?;
+        Ok(TcpStoreClient { link, ops: 0, trace_ctx: None })
+    }
+
+    /// Set (or clear) the link's read timeout — the session layer
     /// widens it around blocking waits and bounds it on replication
     /// log connections.
     pub(crate) fn set_read_window(&mut self, d: Option<Duration>) -> Result<()> {
-        self.stream.set_read_timeout(d)?;
+        self.link.set_read_timeout(d)?;
         Ok(())
     }
 
@@ -1283,8 +1296,8 @@ impl TcpStoreClient {
 
     fn call(&mut self, req: Request) -> Result<Response> {
         self.ops += 1;
-        write_frame(&mut self.stream, &req.encode_traced(self.trace_ctx))?;
-        let body = read_frame(&mut self.stream)?;
+        write_frame(&mut self.link, &req.encode_traced(self.trace_ctx))?;
+        let body = read_frame(&mut self.link)?;
         Response::decode(&body)
     }
 
@@ -1307,13 +1320,13 @@ impl TcpStoreClient {
         let blocking = reqs.iter().any(Request::is_blocking);
         if blocking {
             // waits can exceed the default read path; use a long timeout
-            self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+            self.link.set_read_timeout(Some(Duration::from_secs(300)))?;
         }
         write_frame(
-            &mut self.stream,
+            &mut self.link,
             &Request::Batch(reqs).encode_traced(self.trace_ctx),
         )?;
-        let body = read_frame(&mut self.stream)?;
+        let body = read_frame(&mut self.link)?;
         match Response::decode(&body)? {
             Response::Multi(rs) => {
                 if rs.len() > n {
@@ -1352,7 +1365,7 @@ impl TcpStoreClient {
     /// Block until `key` is published.
     pub fn wait(&mut self, key: &str) -> Result<Bytes> {
         // waits can exceed the default read path; use a long timeout
-        self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        self.link.set_read_timeout(Some(Duration::from_secs(300)))?;
         match self.call(Request::Wait { key: key.into() })? {
             Response::Value(v) => Ok(v),
             other => bail!("unexpected response {other:?}"),
@@ -1364,7 +1377,7 @@ impl TcpStoreClient {
     /// [`Self::wait`], a stale waiter is *released* with
     /// [`FencedWait::Superseded`] rather than left hanging.
     pub fn wait_epoch(&mut self, key: &str, epoch: u64) -> Result<FencedWait> {
-        self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        self.link.set_read_timeout(Some(Duration::from_secs(300)))?;
         match self.call(Request::WaitEpoch { key: key.into(), epoch })? {
             Response::Value(v) => Ok(FencedWait::Value(v)),
             Response::EpochFenced { current } => {
@@ -1406,7 +1419,7 @@ impl TcpStoreClient {
     /// advertisement lands or the epoch supersedes the claim (then
     /// released retryably, never left hanging).
     pub fn claim_restore(&mut self, epoch: u64, tag: u64) -> Result<FencedWait> {
-        self.stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        self.link.set_read_timeout(Some(Duration::from_secs(300)))?;
         match self.call(Request::ClaimRestore { epoch, tag })? {
             Response::Value(v) => Ok(FencedWait::Value(v)),
             Response::EpochFenced { current } => {
@@ -1500,15 +1513,32 @@ pub fn establish(
     n: usize,
     p: usize,
 ) -> Result<(Duration, Vec<TcpStoreClient>)> {
+    establish_via(super::link::default_dialer(), addr, n, p)
+}
+
+/// [`establish`] through an explicit dialer: the §6 calibration
+/// refresh measures the *real* per-link establishment cost over an
+/// impaired path with this entry (DESIGN.md §15).
+pub fn establish_via(
+    dialer: std::sync::Arc<dyn super::link::Dialer>,
+    addr: SocketAddr,
+    n: usize,
+    p: usize,
+) -> Result<(Duration, Vec<TcpStoreClient>)> {
     let p = p.clamp(1, n.max(1));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for worker in 0..p {
         let count = n / p + usize::from(worker < n % p);
+        let dialer = dialer.clone();
         handles.push(std::thread::spawn(move || -> Result<Vec<TcpStoreClient>> {
             let mut out = Vec::with_capacity(count);
             for i in 0..count {
-                let mut c = TcpStoreClient::connect(addr)?;
+                let mut c = TcpStoreClient::connect_via(
+                    &*dialer,
+                    addr,
+                    Duration::from_secs(10),
+                )?;
                 c.hello((worker * 1_000_000 + i) as u64)?;
                 out.push(c);
             }
@@ -2123,5 +2153,74 @@ mod tests {
         let mut c = TcpStoreClient::connect(addr).unwrap();
         c.set("never", b"late").unwrap();
         assert_eq!(server.metrics_snapshot().counter("store.wakeups"), 0);
+    }
+
+    /// §15 backpressure: a peer that stops draining its socket
+    /// mid-`Batch` response (the in-process stand-in for a
+    /// bandwidth-capped link) must park its *connection* on EPOLLOUT —
+    /// never the event loop — so every other client keeps full-speed
+    /// service; and once the slow peer finally drains, both its
+    /// pipelined Multi responses must arrive intact and in order.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn slow_reader_mid_batch_stalls_nobody_and_keeps_frames_intact() {
+        use std::io::Write as _;
+        let server = TcpStoreServer::start().unwrap();
+        assert_eq!(server.core(), StoreCore::Reactor);
+        let addr = server.addr();
+        // 128 Gets of a 64KiB value: an ~8MB Multi response, far past
+        // any kernel socket-buffer pair — the reactor WILL hit
+        // WouldBlock mid-flush and must wait for writability
+        let big = vec![0xABu8; 64 * 1024];
+        {
+            let mut c = TcpStoreClient::connect(addr).unwrap();
+            c.set("big", &big).unwrap();
+        }
+        let gets: Vec<Request> =
+            (0..128).map(|_| Request::Get { key: "big".into() }).collect();
+        let frame = Request::Batch(gets).encode();
+        let mut slow = TcpStream::connect(addr).unwrap();
+        slow.write_all(&frame).unwrap();
+        // pipeline a second Batch behind the first before reading a
+        // byte: it must sit buffered, un-corrupted, behind the parked
+        // flush ("one frame in flight per connection")
+        slow.write_all(&frame).unwrap();
+        // let the reactor fill the socket pair and park the flush
+        std::thread::sleep(Duration::from_millis(100));
+        // trickle a few bytes like a rate-capped link would, forcing
+        // at least one extra EPOLLOUT park/resume cycle mid-frame
+        let mut sip = [0u8; 4096];
+        slow.read_exact(&mut sip).unwrap();
+        // a concurrent client must make progress at loopback speed
+        // while the slow connection sits mid-flush
+        let t0 = Instant::now();
+        let mut fast = TcpStoreClient::connect(addr).unwrap();
+        for i in 0..200 {
+            let key = format!("fast/{i}");
+            fast.set(&key, b"v").unwrap();
+            assert_eq!(fast.get(&key).unwrap().as_deref(), Some(&b"v"[..]));
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "fast client stalled behind a slow reader: {:?}",
+            t0.elapsed()
+        );
+        // now drain: both Multi responses arrive whole, in order,
+        // every value bit-exact — no frame-state corruption. The
+        // first frame's length prefix and leading bytes were already
+        // sipped; chain them back ahead of the live socket.
+        let mut joined = std::io::Read::chain(&sip[..], &mut slow);
+        for _ in 0..2 {
+            let body = read_frame(&mut joined).unwrap();
+            match Response::decode(&body).unwrap() {
+                Response::Multi(rs) => {
+                    assert_eq!(rs.len(), 128);
+                    for r in rs {
+                        assert_eq!(r, Response::Value(Bytes::from(&big[..])));
+                    }
+                }
+                other => panic!("expected Multi, got {other:?}"),
+            }
+        }
     }
 }

@@ -7,8 +7,10 @@
 //! binaries and benches can snapshot the exact configuration they ran.
 
 pub mod parallelism;
+pub mod timeouts;
 
 pub use parallelism::{DeviceCoord, ParallelismConfig, ShardId, ZeroMode};
+pub use timeouts::Timeouts;
 
 use crate::util::Json;
 use anyhow::{bail, Context, Result};

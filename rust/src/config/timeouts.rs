@@ -1,0 +1,117 @@
+//! One source of truth for the live plane's IO deadlines.
+//!
+//! Before the link layer (DESIGN.md §15) every protocol hard-coded
+//! deadlines tuned for a perfect loopback — the rendezvous join
+//! window, the state-stream IO-stall bound, heartbeat periods, probe
+//! budgets. Over an impaired link (50 ms cross-region RTT, loss,
+//! partitions) those constants either spuriously trip watchdogs or
+//! mask real failures. [`Timeouts`] gathers them in one struct that
+//! campaigns derive per-link with [`Timeouts::scaled_for_rtt`], and
+//! the protocol configs (`EpisodeConfig`, `StreamConfig`, session
+//! wait windows) are built *from* it instead of from literals.
+
+use std::time::Duration;
+
+/// The live plane's deadline set. Defaults reproduce the historical
+/// loopback-tuned constants exactly, so a default-constructed config
+/// behaves bit-for-bit like the pre-refactor plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Timeouts {
+    /// Rendezvous: how long an episode waits for every participant to
+    /// join before declaring the rebuild failed.
+    pub join_deadline: Duration,
+    /// State streams: IO inactivity bound on data-plane sockets — a
+    /// frozen peer surfaces as a bounded failure within this window.
+    pub io_stall: Duration,
+    /// State streams: how long a source waits for its receivers to
+    /// connect.
+    pub accept_deadline: Duration,
+    /// Worker heartbeat emission period.
+    pub heartbeat_interval: Duration,
+    /// Connect budget for endpoint discovery / replication probes.
+    pub probe_connect: Duration,
+    /// Read window for blocking fenced waits (`Wait`, `ClaimRestore`).
+    pub wait_window: Duration,
+    /// Plain store-client connect budget.
+    pub connect: Duration,
+}
+
+impl Default for Timeouts {
+    fn default() -> Self {
+        Timeouts {
+            join_deadline: Duration::from_secs(120),
+            io_stall: Duration::from_secs(60),
+            accept_deadline: Duration::from_secs(60),
+            heartbeat_interval: Duration::from_millis(500),
+            probe_connect: Duration::from_millis(250),
+            wait_window: Duration::from_secs(300),
+            connect: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Timeouts {
+    /// Widen every deadline for a link with the given round-trip time,
+    /// so a slow-but-healthy path never spuriously trips a watchdog.
+    /// Each deadline absorbs the worst-case number of round trips its
+    /// protocol phase performs; the heartbeat period additionally
+    /// never drops below one RTT (a beat must be able to land before
+    /// the next is due).
+    pub fn scaled_for_rtt(self, rtt: Duration) -> Timeouts {
+        Timeouts {
+            // a join is a handshake plus fenced waits: many ranks'
+            // worth of round trips in the worst case
+            join_deadline: self.join_deadline + rtt * 64,
+            io_stall: self.io_stall + rtt * 16,
+            accept_deadline: self.accept_deadline + rtt * 16,
+            heartbeat_interval: self.heartbeat_interval.max(rtt),
+            // a probe is SYN + hello: a couple of round trips
+            probe_connect: self.probe_connect + rtt * 4,
+            wait_window: self.wait_window + rtt * 16,
+            connect: self.connect + rtt * 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_historical_loopback_constants() {
+        let t = Timeouts::default();
+        assert_eq!(t.join_deadline, Duration::from_secs(120));
+        assert_eq!(t.io_stall, Duration::from_secs(60));
+        assert_eq!(t.accept_deadline, Duration::from_secs(60));
+        assert_eq!(t.probe_connect, Duration::from_millis(250));
+        assert_eq!(t.wait_window, Duration::from_secs(300));
+        assert_eq!(t.connect, Duration::from_secs(10));
+    }
+
+    #[test]
+    fn rtt_scaling_widens_every_deadline_monotonically() {
+        let base = Timeouts::default();
+        let wan = base.scaled_for_rtt(Duration::from_millis(100));
+        assert!(wan.join_deadline > base.join_deadline);
+        assert!(wan.io_stall > base.io_stall);
+        assert!(wan.accept_deadline > base.accept_deadline);
+        assert!(wan.probe_connect > base.probe_connect);
+        assert!(wan.wait_window > base.wait_window);
+        assert!(wan.connect > base.connect);
+        // a wider link than that widens further
+        let worse = base.scaled_for_rtt(Duration::from_millis(500));
+        assert!(worse.join_deadline > wan.join_deadline);
+    }
+
+    #[test]
+    fn heartbeat_interval_never_undershoots_the_link() {
+        let tight = Timeouts {
+            heartbeat_interval: Duration::from_millis(15),
+            ..Default::default()
+        };
+        let wan = tight.scaled_for_rtt(Duration::from_millis(100));
+        assert_eq!(wan.heartbeat_interval, Duration::from_millis(100));
+        let lan = tight.scaled_for_rtt(Duration::from_millis(1));
+        assert_eq!(lan.heartbeat_interval, Duration::from_millis(15));
+    }
+}

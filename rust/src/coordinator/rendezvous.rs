@@ -486,6 +486,20 @@ impl Default for EpisodeConfig {
     }
 }
 
+impl EpisodeConfig {
+    /// Derive the episode deadlines from one [`Timeouts`] config — the
+    /// §15 seam impaired campaigns use so a slow or healing link widens
+    /// the supervised barrier instead of tripping a false abort.
+    ///
+    /// [`Timeouts`]: crate::config::Timeouts
+    pub fn from_timeouts(t: &crate::config::Timeouts, live_survivors: usize) -> Self {
+        EpisodeConfig {
+            live_survivors,
+            join_deadline: t.join_deadline,
+        }
+    }
+}
+
 /// Outcome of one full rebuild episode.
 #[derive(Debug, Clone)]
 pub struct RebuildOutcome {

@@ -17,6 +17,11 @@
 //!                  on and write a Perfetto-viewable Chrome trace
 //!                  (plus an optional JSONL journal); --check
 //!                  self-validates the trace against the episode
+//!   netem          run an impaired-plane chaos scenario (a spec with a
+//!                  `netem:` section) over real degraded sockets
+//!                  (DESIGN.md §15); --check asserts the outcome,
+//!                  --calibrate prints the §6 latency model refreshed
+//!                  from the measured wire numbers
 //!   info           print artifact/manifest information
 //!
 //! Examples:
@@ -33,6 +38,8 @@
 //!   flashrecovery bench rebuild --json BENCH_group_rebuild.json \
 //!       --baseline ci/BENCH_group_rebuild.baseline.json --gate
 //!   flashrecovery trace silent_hang --out trace.json --check
+//!   flashrecovery netem detection_under_loss --check
+//!   flashrecovery netem all --check --calibrate
 //!   flashrecovery info --size small
 
 use flashrecovery::cluster::failure::FailureKind;
@@ -52,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         Some("scenario") => scenario(&args),
         Some("bench") => bench(&args),
         Some("trace") => trace_cmd(&args),
+        Some("netem") => netem(&args),
         Some("info") => info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -89,7 +97,7 @@ fn usage() {
     println!(
         "flashrecovery — fast and low-cost failure recovery for LLM training\n\
          \n\
-         USAGE: flashrecovery <train|simulate|scenario|bench|trace|info> [--flags]\n\
+         USAGE: flashrecovery <train|simulate|scenario|bench|trace|netem|info> [--flags]\n\
          \n\
          train:    --size tiny|small|base  --dp N  --steps N  --seed N\n\
          \u{20}         --mode flash|vanilla  --ckpt-interval N  --timeout-s S\n\
@@ -112,6 +120,8 @@ fn usage() {
          \u{20}                  [--replicas N] [--assert]\n\
          trace:    <name|file.json> [--devices N] [--out trace.json]\n\
          \u{20}         [--journal FILE] [--check]\n\
+         netem:    <name|file.json|all> [--devices N] [--check]\n\
+         \u{20}         [--calibrate] [--driver detection|restore|heal]\n\
          info:     --size tiny|small|base"
     );
 }
@@ -586,6 +596,158 @@ fn check_episode_trace(out: &flashrecovery::chaos::LiveDetectionOutcome) -> anyh
                 out.step
             );
         }
+    }
+    Ok(())
+}
+
+/// `netem <scenario|all>` — run impaired-plane chaos scenarios
+/// (DESIGN.md §15): specs with a `netem:` section driven over real
+/// degraded sockets. `--check` fails the process on any outcome
+/// violation (CI's impaired smoke step runs exactly this);
+/// `--calibrate` re-derives the §6 simulator latency model from the
+/// measured wire numbers and prints both (the measured constants
+/// replace `tcp_store_per_link_s` and re-center the detection notice
+/// band via `LatencyModel::with_wire`).
+fn netem(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::chaos::{self, library};
+    use flashrecovery::cluster::{LatencyModel, WireMeasurements};
+
+    let devices = args.usize_or("devices", 256);
+    let sel = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("netem needs a scenario: <name|file.json|all>"))?;
+    let check = args.bool_or("check", false);
+
+    let names: Vec<&str> = if sel == "all" {
+        vec!["detection_under_loss", "restore_over_wan", "partition_heal_rendezvous"]
+    } else {
+        vec![sel.as_str()]
+    };
+
+    // Wire numbers this run measures; NaN = not measured, so
+    // `with_wire` keeps the corresponding default.
+    let mut wire = WireMeasurements {
+        tcp_store_per_link_s: f64::NAN,
+        detect_notice_s: f64::NAN,
+    };
+    for name in names {
+        let spec = match library::by_name(name, devices) {
+            Some(s) => s,
+            None => chaos::ScenarioSpec::load(name)?,
+        };
+        run_netem_scenario(&spec, args, check, &mut wire)?;
+    }
+
+    if args.bool_or("calibrate", false) {
+        let default = LatencyModel::default();
+        let model = LatencyModel::with_wire(wire);
+        println!("[netem:calibrate] §6 latency model from measured wire numbers:");
+        println!(
+            "  tcp_store_per_link_s {:.6}s (simulator default {:.6}s)",
+            model.tcp_store_per_link_s, default.tcp_store_per_link_s
+        );
+        println!(
+            "  detect_notice {:.3}..{:.3}s (simulator default {:.3}..{:.3}s)",
+            model.detect_notice_min_s,
+            model.detect_notice_max_s,
+            default.detect_notice_min_s,
+            default.detect_notice_max_s
+        );
+    }
+    Ok(())
+}
+
+/// Run one impaired scenario with the driver its shape (or `--driver`)
+/// selects, printing the outcome and folding measured wire numbers
+/// into `wire`. With `check`, exits non-zero on outcome violations.
+fn run_netem_scenario(
+    spec: &flashrecovery::chaos::ScenarioSpec,
+    args: &Args,
+    check: bool,
+    wire: &mut flashrecovery::cluster::WireMeasurements,
+) -> anyhow::Result<()> {
+    use flashrecovery::chaos;
+
+    let driver = match args.get("driver") {
+        Some(d) => d.to_string(),
+        None => match spec.name.as_str() {
+            "detection_under_loss" => "detection".into(),
+            "restore_over_wan" => "restore".into(),
+            "partition_heal_rendezvous" => "heal".into(),
+            _ => anyhow::bail!(
+                "no default driver for scenario {:?}: pass --driver \
+                 detection|restore|heal",
+                spec.name
+            ),
+        },
+    };
+    match driver.as_str() {
+        "detection" => {
+            let episodes = chaos::drive_netem_detection(spec)?;
+            for out in &episodes {
+                println!(
+                    "[netem:{}] step {}: detect {:.3}s over the impaired \
+                     plane (lease budget {:.3}s), rebuild {:.3}s -> epoch {}, \
+                     {} detection(s), {} false eviction(s)",
+                    spec.name, out.step, out.detection_s, out.lease_budget_s,
+                    out.rebuild_s, out.epoch, out.detections.len(),
+                    out.false_evictions.len()
+                );
+            }
+            let last = episodes
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("no impaired episode ran"))?;
+            wire.detect_notice_s = last.detection_s;
+            if check {
+                anyhow::ensure!(
+                    last.false_evictions.is_empty(),
+                    "impaired beats evicted live ranks {:?}",
+                    last.false_evictions
+                );
+                for out in &episodes {
+                    anyhow::ensure!(
+                        !out.detections.is_empty(),
+                        "victim never detected at step {}",
+                        out.step
+                    );
+                }
+            }
+        }
+        "restore" => {
+            let out = chaos::drive_netem_restore(spec)?;
+            println!(
+                "[netem:{}] store op {:.4}s over a {:.3}s-RTT link, rebuild \
+                 {:.3}s -> epoch {}, fetched {} bytes in {:.3}s, bit_exact={}",
+                spec.name, out.store_op_s, out.rtt_s, out.rebuild_s, out.epoch,
+                out.bytes, out.fetch_wall_s, out.bit_exact
+            );
+            wire.tcp_store_per_link_s = out.store_op_s;
+            if check {
+                anyhow::ensure!(out.bit_exact, "restored snapshot diverged");
+                anyhow::ensure!(out.bytes > 0, "nothing was streamed");
+            }
+        }
+        "heal" => {
+            let out = chaos::drive_netem_partition_heal(spec)?;
+            println!(
+                "[netem:{}] ranks {:?} partitioned for {:.2}s; all {} rank(s) \
+                 joined {:.3}s after the partition began",
+                spec.name, out.healed_ranks, out.heal_after_s,
+                out.wakes.len(), out.join_wall_s
+            );
+            if check {
+                anyhow::ensure!(!out.wakes.is_empty(), "no rank woke from the barrier");
+                anyhow::ensure!(
+                    out.join_wall_s >= out.heal_after_s * 0.95,
+                    "ranks joined before the partition healed"
+                );
+            }
+        }
+        other => anyhow::bail!("unknown netem driver {other:?} (detection|restore|heal)"),
+    }
+    if check {
+        println!("[netem:{}] check PASS", spec.name);
     }
     Ok(())
 }

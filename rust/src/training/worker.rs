@@ -192,6 +192,16 @@ fn connect_with_backoff(
     abandoned: impl Fn() -> bool,
 ) -> Option<StoreSession> {
     let mut delay = interval.max(Duration::from_millis(5));
+    // Jitter each sleep so a fleet of workers racing a recovering
+    // store spreads its reconnects instead of stampeding in lockstep
+    // (DESIGN.md §15); salted per-endpoint-set so the spread is
+    // deterministic per process yet distinct across peers.
+    let salt = store
+        .addrs()
+        .first()
+        .map(|a| u64::from(a.port()))
+        .unwrap_or(0)
+        ^ (std::process::id() as u64) << 16;
     for attempt in 0..12 {
         match StoreSession::try_connect(store) {
             Ok(s) => return Some(s),
@@ -199,7 +209,7 @@ fn connect_with_backoff(
                 if abandoned() || attempt == 11 {
                     return None;
                 }
-                std::thread::sleep(delay);
+                std::thread::sleep(crate::comms::jittered(delay, salt, attempt));
                 delay = (delay * 2).min(Duration::from_secs(1));
             }
         }
