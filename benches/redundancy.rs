@@ -1,0 +1,34 @@
+//! Redundancy-tier sweep: erasure-stripe shipping and whole-group
+//! reconstruction at several model sizes (DESIGN.md §16).
+//!
+//! Steady-state columns bound what the tier costs per training step —
+//! a worst-case dirty ship and the delta fast path where unchanged
+//! stripes degrade to 38-byte hash refreshes. Recovery columns compare
+//! what it buys: stripe reconstruction (the only path that survives a
+//! whole replica group dying) against a replica-sourced stream and the
+//! file-checkpoint fallback.
+//!
+//! Emits `BENCH_redundancy.json` (via `BenchReport::write_json`), the
+//! artifact CI's bench gate compares against the committed baseline in
+//! `ci/BENCH_redundancy.baseline.json`.
+//!
+//!     cargo bench --bench redundancy
+
+use flashrecovery::redundancy::bench::{
+    check_report, redundancy_sweep, RedundancySweepConfig,
+};
+
+fn main() {
+    let cfg = RedundancySweepConfig::default();
+    let report = redundancy_sweep(&cfg).expect("redundancy sweep");
+    report.print();
+    report
+        .write_json("BENCH_redundancy.json")
+        .expect("write BENCH_redundancy.json");
+    println!("wrote BENCH_redundancy.json");
+
+    // ---- asserted properties: the delta fast path undercuts a full ----
+    // ---- ship, and reconstruction stays in streaming territory     ----
+    check_report(&cfg, &report).expect("redundancy acceptance assertions");
+    println!("redundancy acceptance assertions PASS");
+}

@@ -1,17 +1,20 @@
 //! Built-in chaos scenario library.
 //!
-//! Fourteen parameterized campaigns, from the paper's single-failure
+//! Fifteen parameterized campaigns, from the paper's single-failure
 //! baseline to compound patterns production fleets actually see
 //! (ByteDance's robust-training report, Unicron): concurrent faults,
 //! rolling cascades, flapping hosts, failures striking mid-recovery,
 //! spare-pool exhaustion, straggler degradation, failures landing
 //! mid-*restore* (state streams aborted and replanned), silent
-//! hangs (alive worker, frozen step tag), and coordination-plane
+//! hangs (alive worker, frozen step tag), coordination-plane
 //! failover — the store primary dying mid-rendezvous and the
-//! controller dying mid-restore (DESIGN.md §13) — and impaired-plane
+//! controller dying mid-restore (DESIGN.md §13) — impaired-plane
 //! campaigns where the same faults land over degraded links: detection
 //! under 30% loss, restore across a WAN, rendezvous across a partition
-//! heal (DESIGN.md §15). Each spec carries
+//! heal (DESIGN.md §15) — and the redundancy-tier worst case: an
+//! entire ZeRO replica group wiped out mid-step, the shard rebuilt
+//! bit-exact from erasure stripes with zero checkpoint reads
+//! (DESIGN.md §16). Each spec carries
 //! assertions calibrated to the paper-fit latency model — recovery-time
 //! bounds are intentionally scale-independent (the paper's headline
 //! claim), so the same spec passes from 64 to 18k devices.
@@ -27,7 +30,7 @@ use crate::comms::netem::{LinkPolicy, Partition};
 use crate::config::RecoveryMode;
 
 /// Names of all built-in scenarios, in presentation order.
-pub const NAMES: [&str; 14] = [
+pub const NAMES: [&str; 15] = [
     "single_fault",
     "double_fault",
     "rolling_cascade",
@@ -42,6 +45,7 @@ pub const NAMES: [&str; 14] = [
     "detection_under_loss",
     "restore_over_wan",
     "partition_heal_rendezvous",
+    "replica_group_wipeout",
 ];
 
 fn base(name: &str, description: &str, devices: usize) -> ScenarioSpec {
@@ -473,6 +477,7 @@ pub fn partition_heal_rendezvous(devices: usize) -> ScenarioSpec {
         default: Some(LinkPolicy::delay(5.0)),
         links: vec![NodeLink {
             rank: Some(2),
+            src: None,
             policy: LinkPolicy {
                 delay_ms: 10.0,
                 partition: Partition::Both,
@@ -486,6 +491,41 @@ pub fn partition_heal_rendezvous(devices: usize) -> ScenarioSpec {
         max_total_downtime_s: Some(400.0),
         max_lost_steps: Some(0),
         min_recoveries: Some(1),
+        ..Default::default()
+    };
+    s
+}
+
+/// The redundancy tier's worst case: *both* holders of one ZeRO shard
+/// (dp=4, zero=2: ranks 1 and 3) die in the same step, so no live
+/// replica can source the restore. On the simulator path this behaves
+/// like `double_fault`; the live hints drive
+/// `chaos::live::drive_replica_group_wipeout`, where the restore
+/// planner must report the shard unsourced, the stripe directory must
+/// cover it (any k of k+m erasure stripes shipped during idle step
+/// time), and the reconstruction must land bit-exact with **zero**
+/// checkpoint file reads (DESIGN.md §16).
+pub fn replica_group_wipeout(devices: usize) -> ScenarioSpec {
+    let mut s = base(
+        "replica_group_wipeout",
+        "Entire ZeRO replica group killed mid-step; shard rebuilt bit-exact from erasure stripes, zero checkpoint reads",
+        devices,
+    );
+    s.cluster.spare_nodes = 2;
+    let mut f1 = FaultSpec { at_s: 140.0, ..Default::default() };
+    f1.rank = Some(1);
+    f1.at_step = Some(6);
+    let mut f2 = FaultSpec { at_s: 140.0, ..Default::default() };
+    f2.rank = Some(3);
+    f2.at_step = Some(6);
+    s.faults = vec![f1, f2];
+    s.live.dp = 4;
+    s.assertions = Assertions {
+        max_single_recovery_s: Some(350.0),
+        max_total_downtime_s: Some(400.0),
+        max_lost_steps: Some(0),
+        min_recoveries: Some(1),
+        min_merged_recoveries: Some(1),
         ..Default::default()
     };
     s
@@ -516,6 +556,7 @@ pub fn by_name(name: &str, devices: usize) -> Option<ScenarioSpec> {
         "detection_under_loss" => detection_under_loss(devices),
         "restore_over_wan" => restore_over_wan(devices),
         "partition_heal_rendezvous" => partition_heal_rendezvous(devices),
+        "replica_group_wipeout" => replica_group_wipeout(devices),
         _ => return None,
     })
 }

@@ -42,13 +42,17 @@ use crate::coordinator::{
     encode_leases, ControllerConfig, EpisodeCheckpoint, EpisodePhase, RankEntry,
     Ranktable, RunReport, StandbyController, K_EPISODE, K_LEASES,
 };
+use crate::redundancy::{
+    cover_plan, reconstruct_shard, stripe_holders, RedundancyConfig, StripeDepot,
+    StripeShipper, WarmSpare,
+};
 use crate::telemetry::{global, trace};
 use crate::training::worker::{
     kind_code, spawn_heartbeat, spawn_node_heartbeat, FailurePlan, HeartbeatCfg,
     MonitorBoard, NodeAgentCfg, NodeRank, Phase,
 };
 use crate::training::TrainingEngine;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -1507,6 +1511,190 @@ pub fn drive_netem_partition_heal(spec: &ScenarioSpec) -> Result<NetemPartitionO
     })
 }
 
+/// Outcome of the replica-group-wipeout drill (DESIGN.md §16): every
+/// rank holding one ZeRO shard dies mid-step and the shard comes back
+/// bit-exact from the erasure-stripe directory with zero checkpoint
+/// reads — once over the network from surviving depots, and once more
+/// from a warm spare's prefetched local cache.
+#[derive(Debug, Clone)]
+pub struct WipeoutOutcome {
+    /// Recovery epoch the rebuild converged in.
+    pub epoch: u64,
+    /// Failure step the shard was rebuilt at.
+    pub step: u64,
+    /// The wiped-out shard.
+    pub shard: ShardId,
+    /// Ranks killed — the shard's entire replica group.
+    pub victims: Vec<usize>,
+    /// Stripes pushed in full across the pre-failure shipping passes.
+    pub stripes_shipped: usize,
+    /// Stripes version-bumped by hash refresh instead of resent — the
+    /// idle-step delta path.
+    pub stripes_refreshed: usize,
+    /// True iff the final plan sourced every shard without checkpoints.
+    pub checkpoint_free: bool,
+    /// `ckpt.file_reads` delta observed across the rebuild. Zero on a
+    /// `scenario` run; under `cargo test` concurrent tests can leak
+    /// reads into the shared counter, so assertions use
+    /// `checkpoint_free` instead.
+    pub ckpt_reads: u64,
+    /// Content hash of the network-reconstructed shard.
+    pub rebuilt_hash: u64,
+    /// Content hash of the warm spare's local-cache rebuild.
+    pub warm_spare_hash: u64,
+    pub wall_s: f64,
+}
+
+/// Drive the spec's scripted failures as a whole-replica-group wipeout
+/// against the live redundancy tier (DESIGN.md §16). The shard's ranks
+/// stream erasure stripes to peer depots during healthy steps (full
+/// pushes, then hash refreshes for unchanged stripes), a warm spare
+/// prefetches the hottest set, and then the *entire* group dies at
+/// once — the exact case replica-to-replica restore cannot source.
+/// Recovery must fall through `plan_shard_restore` to the stripe
+/// directory and rebuild the shard bit-exact with zero checkpoint
+/// reads.
+pub fn drive_replica_group_wipeout(spec: &ScenarioSpec) -> Result<WipeoutOutcome> {
+    let t0 = Instant::now();
+    let plans = live_failure_plans(spec)?;
+    let timeline: Vec<(u64, Vec<usize>)> =
+        rebuild_timeline(&plans).into_iter().collect();
+    ensure!(
+        timeline.len() == 1,
+        "replica-group wipeout wants one simultaneous failure step, spec has {}",
+        timeline.len()
+    );
+    let (step, mut victims) = timeline[0].clone();
+    victims.sort_unstable();
+
+    // Two-way sharded DP fleet: ranks {0,2} hold shard zero=0, ranks
+    // {1,3} hold zero=1. The spec's victims must be exactly one
+    // shard's replica group, else this drill proves nothing.
+    let dp = spec.live.dp.max(2);
+    let par = ParallelismConfig::dp(dp).with_zero(2);
+    ensure!(
+        par.replication_factor() >= 2,
+        "wipeout drill needs dp >= 4 so the dead shard had live replicas \
+         (spec live.dp = {dp})"
+    );
+    let shard = par.shard_id(victims[0]);
+    let group: Vec<usize> = (0..par.world_size())
+        .filter(|&r| par.shard_id(r) == shard)
+        .collect();
+    ensure!(
+        group == victims,
+        "victims {victims:?} are not a whole replica group (shard {shard:?} \
+         lives on {group:?})"
+    );
+
+    let server = TcpStoreServer::start()?;
+    let eps = server.endpoints();
+    let mut session = StoreSession::try_connect(&eps)?;
+
+    // Stripe depots on ranks outside the shard group plus warm spares,
+    // placed deterministically and advertised through the store.
+    let ship_epoch = 1u64;
+    let fence = EpochFence::new(ship_epoch);
+    let rcfg = RedundancyConfig::default();
+    let total = rcfg.total();
+    let holder_ids =
+        stripe_holders(&par, shard, spec.cluster.spare_nodes.max(1), total)?;
+    let mut depots = Vec::with_capacity(total);
+    let mut holders = Vec::with_capacity(total);
+    for &h in &holder_ids {
+        let depot = StripeDepot::start(fence.clone(), rcfg.chunk_bytes)?;
+        depot.advertise(&mut session, h)?;
+        holders.push((h, depot.addr()));
+        depots.push(depot);
+    }
+
+    // Healthy steady state: the doomed group ships stripes in idle
+    // step time. An idle re-ship of unchanged state degrades to pure
+    // hash refreshes; the failure step's state is a fresh full push.
+    let mut shipper =
+        StripeShipper::new(&eps, rcfg, shard, holders, fence.clone())?;
+    let mut stripes_shipped = 0usize;
+    let mut stripes_refreshed = 0usize;
+    let warm = synthetic_snapshot(step.saturating_sub(1), CHAOS_STATE_ELEMS);
+    for snap in [&warm, &warm, &synthetic_snapshot(step, CHAOS_STATE_ELEMS)] {
+        let stats = shipper
+            .ship(snap, ship_epoch)
+            .map_err(|e| anyhow!("pre-failure ship at step {}: {e}", snap.step))?;
+        stripes_shipped += stats.shipped;
+        stripes_refreshed += stats.skipped;
+    }
+
+    // A warm spare prefetches the hottest stripes while all is well.
+    let mut spare = WarmSpare::new();
+    let mut spare_session = StoreSession::try_connect(&eps)?;
+    let prefetched =
+        spare.prefetch(&mut spare_session, ship_epoch, shard, total, &fence)?;
+    ensure!(
+        prefetched == total,
+        "warm spare cached {prefetched} of {total} stripes"
+    );
+
+    // The whole replica group dies at once; detection bumps the epoch.
+    let recovery_epoch = session.advance_epoch(ship_epoch + 1)?;
+    fence.advance(recovery_epoch);
+    let reads0 = global().counter("ckpt.file_reads").get();
+
+    // Replica planning finds no live source for the wiped shard ...
+    let survivor_steps: Vec<(usize, u64)> = (0..dp)
+        .filter(|r| !victims.contains(r))
+        .map(|r| (r, step))
+        .collect();
+    let mut plan = plan_shard_restore(&par, &survivor_steps, &victims);
+    ensure!(
+        !plan.checkpoint_free(),
+        "replica planner unexpectedly sourced the wiped shard {shard:?}"
+    );
+    // ... and falls through to the stripe directory.
+    cover_plan(&mut session, ship_epoch, total, &mut plan)?;
+    ensure!(
+        plan.checkpoint_free(),
+        "stripe directory could not cover shard {shard:?}"
+    );
+
+    let expect = synthetic_snapshot(step, CHAOS_STATE_ELEMS).content_hash();
+    let rc = plan
+        .reconstructions
+        .first()
+        .ok_or_else(|| anyhow!("cover_plan left no reconstruction schedule"))?;
+    let rebuilt =
+        reconstruct_shard(&mut session, ship_epoch, rc, recovery_epoch, &fence)
+            .map_err(|e| anyhow!("stripe rebuild of shard {shard:?}: {e}"))?;
+    ensure!(rebuilt.step == step);
+    let rebuilt_hash = rebuilt.content_hash();
+    ensure!(
+        rebuilt_hash == expect,
+        "rebuilt shard {shard:?} diverges from the dead group's state"
+    );
+
+    // Warm-spare replacement join: the same bits from local cache
+    // alone, even with every depot gone.
+    depots.clear();
+    let local = spare.recover_local(shard, step)?;
+    let warm_spare_hash = local.content_hash();
+    ensure!(warm_spare_hash == expect, "warm spare's local rebuild diverges");
+
+    let ckpt_reads =
+        global().counter("ckpt.file_reads").get().saturating_sub(reads0);
+    Ok(WipeoutOutcome {
+        epoch: recovery_epoch,
+        step,
+        shard,
+        victims,
+        stripes_shipped,
+        stripes_refreshed,
+        checkpoint_free: plan.checkpoint_free(),
+        ckpt_reads,
+        rebuilt_hash,
+        warm_spare_hash,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
 /// Run the spec's live plan end to end. Fails fast when the live
 /// training plane (real xla + artifacts) is unavailable.
 pub fn run_live(spec: &ScenarioSpec, seed: u64) -> Result<LiveOutcome> {
@@ -1834,5 +2022,42 @@ mod tests {
         assert_eq!(ep.restored, vec![1]);
         assert!(ep.bit_exact, "restore must stay bit-exact across failover");
         assert!(ep.bytes_moved > 0);
+    }
+
+    #[test]
+    fn replica_group_wipeout_rebuilds_bit_exact_without_checkpoints() {
+        // Both ranks holding shard zero=1 die at step 6. The replica
+        // planner has no live source; the stripe directory covers the
+        // shard and the rebuild matches the dead group's bits — no
+        // checkpoint in the loop.
+        let spec = library::by_name("replica_group_wipeout", 256).unwrap();
+        let out = drive_replica_group_wipeout(&spec).unwrap();
+        assert_eq!(out.step, 6);
+        assert_eq!(out.epoch, 2);
+        assert_eq!(out.victims, vec![1, 3]);
+        assert_eq!(out.shard, ShardId { pp: 0, tp: 0, zero: 1 });
+        assert!(out.checkpoint_free, "plan must be sourced without checkpoints");
+        assert_eq!(
+            out.rebuilt_hash, out.warm_spare_hash,
+            "network rebuild and warm-spare local rebuild must agree"
+        );
+        // three passes over a 2+1 code: full push, pure refresh of the
+        // unchanged step, full push of the failure step
+        assert_eq!(out.stripes_shipped, 6);
+        assert_eq!(out.stripes_refreshed, 3);
+        assert!(out.wall_s > 0.0);
+    }
+
+    #[test]
+    fn wipeout_driver_rejects_a_partial_group() {
+        // double_fault kills ranks 1 and 2 — rank 3 still holds rank
+        // 1's shard, so the wipeout drill must refuse to run
+        // dishonestly and leave that case to the replica restore path.
+        let spec = library::by_name("double_fault", 256).unwrap();
+        let err = drive_replica_group_wipeout(&spec).unwrap_err();
+        assert!(
+            format!("{err}").contains("not a whole replica group"),
+            "unexpected error: {err}"
+        );
     }
 }

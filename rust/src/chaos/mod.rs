@@ -14,7 +14,7 @@
 //!   `(spec, seed)` pairs produce byte-identical journals;
 //! * [`engine`] — the campaign interpreter over the calibrated cluster
 //!   simulator (shared protocol math with `cluster::scenario`);
-//! * [`library`] — fourteen built-in scenarios from the paper baseline
+//! * [`library`] — fifteen built-in scenarios from the paper baseline
 //!   to compound production patterns, including coordination-plane
 //!   failover (store primary / controller crashes mid-recovery) and
 //!   impaired-plane campaigns (detection under loss, restore over a
@@ -41,11 +41,11 @@ pub use journal::Journal;
 pub use live::{
     controller_config, drive_controller_crash_mid_restore, drive_group_rebuilds,
     drive_live_detection, drive_netem_detection, drive_netem_partition_heal,
-    drive_netem_restore, drive_restores, drive_restores_under_churn,
-    drive_store_crash_mid_rendezvous, evaluate_live, live_failure_plans, run_live,
-    ControllerFailoverOutcome, LiveDetectionOutcome, LiveOutcome, LiveRestoreOutcome,
-    NetemDetectionOutcome, NetemPartitionOutcome, NetemRestoreOutcome,
-    StoreFailoverOutcome,
+    drive_netem_restore, drive_replica_group_wipeout, drive_restores,
+    drive_restores_under_churn, drive_store_crash_mid_rendezvous, evaluate_live,
+    live_failure_plans, run_live, ControllerFailoverOutcome, LiveDetectionOutcome,
+    LiveOutcome, LiveRestoreOutcome, NetemDetectionOutcome, NetemPartitionOutcome,
+    NetemRestoreOutcome, StoreFailoverOutcome, WipeoutOutcome,
 };
 pub use spec::{
     Assertions, ClusterShape, FaultFamily, FaultSpec, LiveShape, NetemSpec, NodeLink,

@@ -196,6 +196,10 @@ pub struct NodeLink {
     /// Live DP rank whose link is impaired; `None` impairs the link
     /// every rank shares (the coordination-plane default path).
     pub rank: Option<usize>,
+    /// Traffic-class label for a per-pair rule (e.g. `"repl"` shapes
+    /// only the replication shipper's follower links); `None` shapes
+    /// every dialer to the destination.
+    pub src: Option<String>,
     pub policy: LinkPolicy,
 }
 
@@ -482,6 +486,11 @@ impl ScenarioSpec {
                         if let Some(r) = l.rank {
                             o.set("rank", r);
                         }
+                        // Emitted only when present: pre-§16 specs
+                        // keep their hash.
+                        if let Some(s) = &l.src {
+                            o.set("src", s.as_str());
+                        }
                         o
                     })
                     .collect();
@@ -618,6 +627,7 @@ impl ScenarioSpec {
                 for (i, lj) in items.iter().enumerate() {
                     links.push(NodeLink {
                         rank: lj.get("rank").as_usize(),
+                        src: lj.get("src").as_str().map(String::from),
                         policy: policy_from_json(lj)
                             .with_context(|| format!("netem link {i}"))?,
                     });

@@ -1,0 +1,439 @@
+//! Pure-Rust erasure codec for the in-memory redundancy tier
+//! (DESIGN.md §16): a shard's canonical snapshot encoding is split
+//! into `k` equal data stripes plus `m` parity stripes such that *any*
+//! `k` of the `k+m` stripes reconstruct the original bytes exactly.
+//!
+//! The code is a systematic Reed-Solomon-lite over GF(256)
+//! (polynomial 0x11d, the AES/QR field):
+//!
+//! * `m == 1` uses the plain XOR parity row (all-ones coefficients) —
+//!   the RAID-5 fast path, still MDS for a single erasure;
+//! * `m >= 2` uses a Cauchy parity matrix `C[j][i] = 1/(x_j ^ y_i)`
+//!   with `y_i = i` (data rows) and `x_j = k + j` (parity rows). Every
+//!   square submatrix of a Cauchy matrix is nonsingular, so any `k`
+//!   surviving rows of the generator `[I; C]` are invertible —
+//!   the "any k of k+m" guarantee reconstruction relies on.
+//!
+//! Decoding inverts the k×k survivor matrix with Gauss-Jordan over
+//! GF(256). Everything is table-driven byte arithmetic — zero external
+//! crates, no unsafe.
+
+use anyhow::{bail, ensure, Result};
+use std::sync::OnceLock;
+
+/// Field polynomial for GF(2^8): x^8 + x^4 + x^3 + x^2 + 1.
+const GF_POLY: u16 = 0x11d;
+
+/// log/exp tables for GF(256); exp is doubled so `exp[log a + log b]`
+/// never needs a modulo.
+struct Tables {
+    log: [u8; 256],
+    exp: [u8; 512],
+}
+
+fn tables() -> &'static Tables {
+    static T: OnceLock<Tables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut log = [0u8; 256];
+        let mut exp = [0u8; 512];
+        let mut x: u16 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u8;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= GF_POLY;
+            }
+        }
+        for i in 255..512 {
+            exp[i] = exp[i - 255];
+        }
+        Tables { log, exp }
+    })
+}
+
+/// GF(256) multiply.
+#[inline]
+fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// GF(256) multiplicative inverse (`a != 0`).
+#[inline]
+fn gf_inv(a: u8) -> u8 {
+    debug_assert_ne!(a, 0, "gf_inv(0)");
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+/// `dst[i] ^= c * src[i]` — the hot loop of both encode and decode.
+fn gf_mul_acc(dst: &mut [u8], src: &[u8], c: u8) {
+    match c {
+        0 => {}
+        1 => {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d ^= s;
+            }
+        }
+        _ => {
+            let t = tables();
+            let lc = t.log[c as usize] as usize;
+            for (d, s) in dst.iter_mut().zip(src) {
+                if *s != 0 {
+                    *d ^= t.exp[lc + t.log[*s as usize] as usize];
+                }
+            }
+        }
+    }
+}
+
+/// Stripe-count shape of the code: `k` data stripes, `m` parity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ErasureConfig {
+    pub k: usize,
+    pub m: usize,
+}
+
+impl Default for ErasureConfig {
+    /// 2+1: tolerate any single stripe-holder loss at 50% overhead —
+    /// the smallest shape that exercises real parity.
+    fn default() -> Self {
+        ErasureConfig { k: 2, m: 1 }
+    }
+}
+
+impl ErasureConfig {
+    pub fn new(k: usize, m: usize) -> Result<Self> {
+        let cfg = ErasureConfig { k, m };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.k >= 1, "erasure k must be >= 1 (got {})", self.k);
+        ensure!(self.m >= 1, "erasure m must be >= 1 (got {})", self.m);
+        // Cauchy evaluation points y_i = i (i < k) and x_j = k + j must
+        // all be distinct field elements.
+        ensure!(
+            self.k + self.m <= 255,
+            "erasure k+m must fit GF(256) ({}+{} > 255)",
+            self.k,
+            self.m
+        );
+        Ok(())
+    }
+
+    /// Total stripes produced per shard.
+    pub fn total(&self) -> usize {
+        self.k + self.m
+    }
+
+    /// Stripe length for a payload of `data_len` bytes (zero-padded to
+    /// a k-multiple).
+    pub fn stripe_len(&self, data_len: usize) -> usize {
+        data_len.div_ceil(self.k)
+    }
+
+    /// Parity coefficient for parity row `j`, data column `i`.
+    fn coeff(&self, j: usize, i: usize) -> u8 {
+        if self.m == 1 {
+            1 // XOR fast path: RAID-5 parity row
+        } else {
+            gf_inv(((self.k + j) ^ i) as u8)
+        }
+    }
+}
+
+/// Encode `data` into `k + m` stripes (k data, then m parity), each
+/// `stripe_len(data.len())` bytes; the last data stripe is zero-padded.
+pub fn encode_stripes(data: &[u8], cfg: &ErasureConfig) -> Result<Vec<Vec<u8>>> {
+    cfg.validate()?;
+    let sl = cfg.stripe_len(data.len());
+    let mut stripes = Vec::with_capacity(cfg.total());
+    for i in 0..cfg.k {
+        let start = (i * sl).min(data.len());
+        let end = ((i + 1) * sl).min(data.len());
+        let mut s = data[start..end].to_vec();
+        s.resize(sl, 0);
+        stripes.push(s);
+    }
+    for j in 0..cfg.m {
+        let mut p = vec![0u8; sl];
+        for i in 0..cfg.k {
+            gf_mul_acc(&mut p, &stripes[i], cfg.coeff(j, i));
+        }
+        stripes.push(p);
+    }
+    Ok(stripes)
+}
+
+/// Reconstruct the original `data_len` bytes from any `k` surviving
+/// stripes. `stripes[i]` is `Some` when stripe `i` (data for `i < k`,
+/// parity otherwise) survived; all present stripes must share one
+/// length consistent with `data_len`.
+pub fn reconstruct(
+    stripes: &[Option<Vec<u8>>],
+    cfg: &ErasureConfig,
+    data_len: usize,
+) -> Result<Vec<u8>> {
+    cfg.validate()?;
+    ensure!(
+        stripes.len() == cfg.total(),
+        "expected {} stripe slots, got {}",
+        cfg.total(),
+        stripes.len()
+    );
+    let sl = cfg.stripe_len(data_len);
+    let present: Vec<usize> = (0..stripes.len()).filter(|&i| stripes[i].is_some()).collect();
+    ensure!(
+        present.len() >= cfg.k,
+        "need {} stripes to reconstruct, only {} survive",
+        cfg.k,
+        present.len()
+    );
+    for &i in &present {
+        let got = stripes[i].as_ref().unwrap().len();
+        ensure!(
+            got == sl,
+            "stripe {i} length {got} != expected {sl} for data_len {data_len}"
+        );
+    }
+    if data_len == 0 {
+        return Ok(Vec::new());
+    }
+
+    // Fast path: every data stripe survived — concatenate.
+    if (0..cfg.k).all(|i| stripes[i].is_some()) {
+        return Ok(concat_data(stripes, cfg, data_len, sl));
+    }
+
+    // Take the first k surviving rows of the generator [I; C] and
+    // invert that k×k system over GF(256).
+    let rows = &present[..cfg.k];
+    let k = cfg.k;
+    // a = survivor rows; inv starts as identity and receives a^-1.
+    let mut a = vec![vec![0u8; k]; k];
+    let mut inv = vec![vec![0u8; k]; k];
+    for (r, &idx) in rows.iter().enumerate() {
+        if idx < k {
+            a[r][idx] = 1;
+        } else {
+            for i in 0..k {
+                a[r][i] = cfg.coeff(idx - k, i);
+            }
+        }
+        inv[r][r] = 1;
+    }
+    // Gauss-Jordan with partial pivoting (any nonzero pivot works in a
+    // field; Cauchy structure guarantees one exists).
+    for col in 0..k {
+        let Some(pivot) = (col..k).find(|&r| a[r][col] != 0) else {
+            bail!("singular survivor matrix (rows {rows:?})");
+        };
+        a.swap(col, pivot);
+        inv.swap(col, pivot);
+        let pinv = gf_inv(a[col][col]);
+        for i in 0..k {
+            a[col][i] = gf_mul(a[col][i], pinv);
+            inv[col][i] = gf_mul(inv[col][i], pinv);
+        }
+        for r in 0..k {
+            if r != col && a[r][col] != 0 {
+                let f = a[r][col];
+                for i in 0..k {
+                    a[r][i] ^= gf_mul(f, a[col][i]);
+                    inv[r][i] ^= gf_mul(f, inv[col][i]);
+                }
+            }
+        }
+    }
+
+    // data_i = Σ_r inv[i][r] * survivor_r  (byte-wise).
+    let mut data = vec![0u8; k * sl];
+    for i in 0..k {
+        let dst = &mut data[i * sl..(i + 1) * sl];
+        for (r, &idx) in rows.iter().enumerate() {
+            gf_mul_acc(dst, stripes[idx].as_ref().unwrap(), inv[i][r]);
+        }
+    }
+    data.truncate(data_len);
+    Ok(data)
+}
+
+fn concat_data(
+    stripes: &[Option<Vec<u8>>],
+    cfg: &ErasureConfig,
+    data_len: usize,
+    sl: usize,
+) -> Vec<u8> {
+    let mut data = Vec::with_capacity(cfg.k * sl);
+    for s in stripes.iter().take(cfg.k) {
+        data.extend_from_slice(s.as_ref().unwrap());
+    }
+    data.truncate(data_len);
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift bytes — tests stay reproducible.
+    fn bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut x = seed | 1;
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x >> 24) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn field_algebra_holds() {
+        // every nonzero element has an inverse and mul round-trips it
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, gf_inv(a)), 1, "a={a}");
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(a, 0), 0);
+        }
+        // distributivity spot-check over the generator walk
+        for a in [3u8, 29, 127, 200] {
+            for b in [5u8, 77, 255] {
+                for c in [9u8, 64] {
+                    assert_eq!(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xor_fast_path_is_plain_parity() {
+        let cfg = ErasureConfig::new(3, 1).unwrap();
+        let data = bytes(301, 7);
+        let stripes = encode_stripes(&data, &cfg).unwrap();
+        assert_eq!(stripes.len(), 4);
+        let sl = cfg.stripe_len(data.len());
+        for b in 0..sl {
+            assert_eq!(
+                stripes[3][b],
+                stripes[0][b] ^ stripes[1][b] ^ stripes[2][b]
+            );
+        }
+    }
+
+    #[test]
+    fn every_erasure_pattern_reconstructs_bit_exact() {
+        // k=3, m=2: all C(5,>=3) survivor subsets must round-trip.
+        let cfg = ErasureConfig::new(3, 2).unwrap();
+        let data = bytes(1000, 42); // not a k-multiple: exercises padding
+        let stripes = encode_stripes(&data, &cfg).unwrap();
+        for mask in 0u32..32 {
+            if mask.count_ones() < 3 {
+                continue;
+            }
+            let subset: Vec<Option<Vec<u8>>> = (0..5)
+                .map(|i| {
+                    if mask & (1 << i) != 0 {
+                        Some(stripes[i].clone())
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let back = reconstruct(&subset, &cfg, data.len()).unwrap();
+            assert_eq!(back, data, "mask {mask:05b}");
+        }
+    }
+
+    #[test]
+    fn single_parity_covers_any_single_loss() {
+        let cfg = ErasureConfig::default(); // 2+1
+        let data = bytes(513, 9);
+        let stripes = encode_stripes(&data, &cfg).unwrap();
+        for lost in 0..3 {
+            let subset: Vec<Option<Vec<u8>>> = (0..3)
+                .map(|i| if i == lost { None } else { Some(stripes[i].clone()) })
+                .collect();
+            assert_eq!(reconstruct(&subset, &cfg, data.len()).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn wide_shapes_round_trip() {
+        // a wider Cauchy shape, losing exactly m stripes
+        let cfg = ErasureConfig::new(5, 3).unwrap();
+        let data = bytes(4096, 1234);
+        let mut stripes: Vec<Option<Vec<u8>>> =
+            encode_stripes(&data, &cfg).unwrap().into_iter().map(Some).collect();
+        stripes[0] = None; // a data stripe
+        stripes[4] = None; // another data stripe
+        stripes[6] = None; // a parity stripe
+        assert_eq!(reconstruct(&stripes, &cfg, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn insufficient_survivors_is_an_error() {
+        let cfg = ErasureConfig::new(2, 1).unwrap();
+        let data = bytes(100, 3);
+        let stripes = encode_stripes(&data, &cfg).unwrap();
+        let subset = vec![Some(stripes[0].clone()), None, None];
+        let err = reconstruct(&subset, &cfg, data.len()).unwrap_err();
+        assert!(err.to_string().contains("only 1 survive"), "{err}");
+    }
+
+    #[test]
+    fn length_and_shape_mismatches_are_errors() {
+        let cfg = ErasureConfig::new(2, 1).unwrap();
+        let data = bytes(64, 5);
+        let stripes = encode_stripes(&data, &cfg).unwrap();
+        // wrong slot count
+        let short = vec![Some(stripes[0].clone()), Some(stripes[1].clone())];
+        assert!(reconstruct(&short, &cfg, data.len()).is_err());
+        // torn stripe (wrong length) must be rejected, not decoded
+        let mut torn = stripes.clone();
+        torn[1].truncate(10);
+        let slots: Vec<Option<Vec<u8>>> = torn.into_iter().map(Some).collect();
+        assert!(reconstruct(&slots, &cfg, data.len()).is_err());
+        // invalid shapes
+        assert!(ErasureConfig::new(0, 1).is_err());
+        assert!(ErasureConfig::new(1, 0).is_err());
+        assert!(ErasureConfig::new(200, 80).is_err());
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let cfg = ErasureConfig::new(2, 1).unwrap();
+        let stripes = encode_stripes(&[], &cfg).unwrap();
+        assert!(stripes.iter().all(|s| s.is_empty()));
+        let slots: Vec<Option<Vec<u8>>> = stripes.into_iter().map(Some).collect();
+        assert_eq!(reconstruct(&slots, &cfg, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn snapshot_encoding_survives_stripe_loss_bit_exact() {
+        // end-to-end with the canonical snapshot codec: the property
+        // the redundancy tier stakes recovery on
+        use crate::checkpoint::{codec, Snapshot};
+        let snap = Snapshot {
+            step: 17,
+            tensors: vec![bytes(400, 11).iter().map(|&b| b as f32 * 0.5).collect()],
+        };
+        let encoded = codec::encode_snapshot(&snap);
+        let cfg = ErasureConfig::new(3, 2).unwrap();
+        let mut stripes: Vec<Option<Vec<u8>>> =
+            encode_stripes(&encoded, &cfg).unwrap().into_iter().map(Some).collect();
+        stripes[1] = None;
+        stripes[2] = None;
+        let back = reconstruct(&stripes, &cfg, encoded.len()).unwrap();
+        let decoded = codec::decode_snapshot(&back).unwrap();
+        assert_eq!(decoded, snap);
+        assert_eq!(decoded.content_hash(), snap.content_hash());
+    }
+}

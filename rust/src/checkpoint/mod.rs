@@ -13,11 +13,13 @@
 //! encoding.
 
 pub mod codec;
+pub mod erasure;
 
 pub use codec::{
     decode_snapshot, encode_snapshot, read_snapshot_from, write_snapshot_to,
     SnapshotStream,
 };
+pub use erasure::{encode_stripes, reconstruct, ErasureConfig};
 
 use crate::util::hash::{fnv1a, fnv1a_f32, FNV_OFFSET};
 use anyhow::{Context, Result};
@@ -67,8 +69,11 @@ pub fn write_snapshot(path: &Path, snap: &Snapshot) -> Result<()> {
     Ok(())
 }
 
-/// Load + verify a snapshot file.
+/// Load + verify a snapshot file. Counts `ckpt.file_reads` on the
+/// global registry — the §16 wipeout scenario asserts this stays flat
+/// across a redundancy-tier recovery (zero checkpoint reads).
 pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
+    crate::telemetry::global().inc("ckpt.file_reads");
     let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
     read_snapshot_from(BufReader::new(f))
 }

@@ -53,6 +53,22 @@ impl Link for TcpStream {
 pub trait Dialer: Send + Sync {
     fn dial(&self, addr: SocketAddr, timeout: Duration) -> io::Result<Box<dyn Link>>;
 
+    /// [`Dialer::dial`] with a caller-supplied *source label* — the
+    /// (src, dst) pair key netem per-pair policies shape on (e.g. the
+    /// replication shipper dials under `"repl"` so its follower links
+    /// can be impaired independently of client traffic to the same
+    /// address). The plain dialer ignores the label; only labeled
+    /// impairment layers override this.
+    fn dial_from(
+        &self,
+        src: &str,
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> io::Result<Box<dyn Link>> {
+        let _ = src;
+        self.dial(addr, timeout)
+    }
+
     /// Short label for diagnostics ("direct", "netem", ...).
     fn name(&self) -> &'static str {
         "dialer"

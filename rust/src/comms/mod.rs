@@ -26,13 +26,15 @@ pub use netem::{
 };
 pub use replication::{
     repl_status, ReplStatusInfo, ReplicaSet, Replicator, StoreEndpoints,
-    StoreRole, StoreSession,
+    StoreRole, StoreSession, REPL_LINK_SRC,
 };
 pub use state_stream::{
-    fetch_from_addr, fetch_from_addr_via, fetch_snapshot, serve_snapshot, transfer_tag,
-    EpochFence, Expect, RestoreError, RestoreResult, StreamConfig,
+    fetch_blob, fetch_from_addr, fetch_from_addr_via, fetch_snapshot, serve_blob,
+    serve_snapshot, transfer_tag, EpochFence, Expect, RestoreError, RestoreResult,
+    StreamConfig,
 };
 pub use tcp_store::{
-    establish, establish_via, FencedWait, StoreCore, TcpStoreClient, TcpStoreServer,
+    decode_beats, establish, establish_via, BeatRecord, FencedWait, StoreCore,
+    TcpStoreClient, TcpStoreServer,
 };
 pub use wire::{Bytes, Request, Response};

@@ -190,12 +190,22 @@ pub struct NetemMap {
 struct Rules {
     default: LinkPolicy,
     per_addr: HashMap<SocketAddr, LinkPolicy>,
+    /// Most-specific tier: rules keyed by (source label, destination).
+    /// A labeled dial (`Dialer::dial_from`) matches here first, so one
+    /// traffic class — e.g. the replication shipper's `"repl"` links —
+    /// can be shaped independently of everything else hitting the same
+    /// destination address.
+    per_pair: HashMap<(String, SocketAddr), LinkPolicy>,
 }
 
 impl NetemMap {
     pub fn new(default: LinkPolicy) -> Arc<NetemMap> {
         Arc::new(NetemMap {
-            rules: Mutex::new(Rules { default, per_addr: HashMap::new() }),
+            rules: Mutex::new(Rules {
+                default,
+                per_addr: HashMap::new(),
+                per_pair: HashMap::new(),
+            }),
             seed: AtomicU64::new(0x6e65_7465),
         })
     }
@@ -209,8 +219,32 @@ impl NetemMap {
         self.rules.lock().unwrap().per_addr.insert(addr, p);
     }
 
+    /// Install (or replace) the rule for one (source label, dst) pair.
+    /// Pair rules are the most specific tier: a link dialed with that
+    /// label (`Dialer::dial_from`) matches them before any per-address
+    /// or default rule, while unlabeled traffic to the same address is
+    /// untouched.
+    pub fn set_pair(&self, src: &str, addr: SocketAddr, p: LinkPolicy) {
+        self.rules
+            .lock()
+            .unwrap()
+            .per_pair
+            .insert((src.to_string(), addr), p);
+    }
+
     pub fn policy_for(&self, addr: SocketAddr) -> LinkPolicy {
+        self.policy_for_pair(None, addr)
+    }
+
+    /// Three-tier lookup: (src, dst) pair rule, then per-destination
+    /// rule, then the map default.
+    pub fn policy_for_pair(&self, src: Option<&str>, addr: SocketAddr) -> LinkPolicy {
         let rules = self.rules.lock().unwrap();
+        if let Some(s) = src {
+            if let Some(p) = rules.per_pair.get(&(s.to_string(), addr)) {
+                return *p;
+            }
+        }
         rules.per_addr.get(&addr).copied().unwrap_or(rules.default)
     }
 
@@ -220,6 +254,9 @@ impl NetemMap {
         let mut rules = self.rules.lock().unwrap();
         rules.default.partition = Partition::None;
         for p in rules.per_addr.values_mut() {
+            p.partition = Partition::None;
+        }
+        for p in rules.per_pair.values_mut() {
             p.partition = Partition::None;
         }
     }
@@ -289,6 +326,9 @@ pub struct ImpairedLink {
     inner: Box<dyn Link>,
     map: Arc<NetemMap>,
     peer: SocketAddr,
+    /// Source label the link was dialed under (`Dialer::dial_from`),
+    /// consulted first in the policy lookup so per-pair rules apply.
+    src: Option<String>,
     egress: Shaper,
     ingress: Shaper,
     /// Set on every write, cleared by the first read after it: that
@@ -299,11 +339,24 @@ pub struct ImpairedLink {
 
 impl ImpairedLink {
     pub fn new(inner: Box<dyn Link>, map: Arc<NetemMap>, peer: SocketAddr) -> ImpairedLink {
+        Self::labeled(inner, map, peer, None)
+    }
+
+    /// An impaired link carrying a source label: its every policy
+    /// lookup tries the `(src, peer)` pair rule before falling back to
+    /// the per-address and default tiers.
+    pub fn labeled(
+        inner: Box<dyn Link>,
+        map: Arc<NetemMap>,
+        peer: SocketAddr,
+        src: Option<String>,
+    ) -> ImpairedLink {
         let seed = map.next_seed();
         ImpairedLink {
             inner,
             map,
             peer,
+            src,
             egress: Shaper::new(seed),
             ingress: Shaper::new(seed ^ 0x5DEE_CE66),
             // the first read of a dialed link (e.g. a state-stream
@@ -313,6 +366,10 @@ impl ImpairedLink {
         }
     }
 
+    fn policy(&self) -> LinkPolicy {
+        self.map.policy_for_pair(self.src.as_deref(), self.peer)
+    }
+
     /// Stall while the link is severed; `Ok(())` when the partition
     /// heals, a `TimedOut` error when the read deadline (or the
     /// global safety cap) expires first.
@@ -320,7 +377,7 @@ impl ImpairedLink {
         let cap =
             self.read_deadline.lock().unwrap().unwrap_or(PARTITION_CAP);
         let deadline = Instant::now() + cap.min(PARTITION_CAP);
-        while self.map.policy_for(self.peer).partition.severed() {
+        while self.policy().partition.severed() {
             if Instant::now() > deadline {
                 return Err(io::Error::new(
                     io::ErrorKind::TimedOut,
@@ -335,12 +392,12 @@ impl ImpairedLink {
 
 impl Read for ImpairedLink {
     fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
-        if self.map.policy_for(self.peer).partition.severed() {
+        if self.policy().partition.severed() {
             // either direction severed starves an RPC reply
             self.stall_while_severed()?;
         }
         let n = self.inner.read(buf)?;
-        let p = self.map.policy_for(self.peer);
+        let p = self.policy();
         let burst = self.awaiting_reply;
         self.awaiting_reply = false;
         self.ingress.charge(&p, n, burst);
@@ -350,7 +407,7 @@ impl Read for ImpairedLink {
 
 impl Write for ImpairedLink {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
-        let p = self.map.policy_for(self.peer);
+        let p = self.policy();
         if p.partition.blocks_egress() {
             // the frame vanishes on the wire; `comms::wire` always
             // writes whole frames in one call, so nothing tears
@@ -404,11 +461,14 @@ impl NetemDialer {
     pub fn map(&self) -> Arc<NetemMap> {
         self.map.clone()
     }
-}
 
-impl Dialer for NetemDialer {
-    fn dial(&self, addr: SocketAddr, timeout: Duration) -> io::Result<Box<dyn Link>> {
-        let p = self.map.policy_for(addr);
+    fn dial_labeled(
+        &self,
+        src: Option<&str>,
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> io::Result<Box<dyn Link>> {
+        let p = self.map.policy_for_pair(src, addr);
         if p.partition.severed() {
             // SYN or SYN-ACK is lost: burn the caller's patience like
             // a real connect timeout would, bounded for campaigns
@@ -428,7 +488,29 @@ impl Dialer for NetemDialer {
         }
         std::thread::sleep(rtt);
         let inner = self.inner.dial(addr, timeout - rtt)?;
-        Ok(Box::new(ImpairedLink::new(inner, self.map.clone(), addr)))
+        Ok(Box::new(ImpairedLink::labeled(
+            inner,
+            self.map.clone(),
+            addr,
+            src.map(String::from),
+        )))
+    }
+}
+
+impl Dialer for NetemDialer {
+    fn dial(&self, addr: SocketAddr, timeout: Duration) -> io::Result<Box<dyn Link>> {
+        self.dial_labeled(None, addr, timeout)
+    }
+
+    /// Labeled dialing keeps the source tag on the resulting link, so
+    /// per-pair rules installed later (mid-campaign) still catch it.
+    fn dial_from(
+        &self,
+        src: &str,
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> io::Result<Box<dyn Link>> {
+        self.dial_labeled(Some(src), addr, timeout)
     }
 
     fn name(&self) -> &'static str {
@@ -801,6 +883,112 @@ mod tests {
         assert!(rt >= Duration::from_millis(18), "proxied RTT {rt:?} below 2x delay");
         drop(s);
         proxy.shutdown();
+        server.join().unwrap();
+    }
+
+    /// Like [`echo_server`] but serves up to `conns` connections, each
+    /// on its own thread — pair tests drive labeled and unlabeled links
+    /// to the *same* destination concurrently.
+    fn echo_server_multi(conns: usize) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut handles = Vec::new();
+            for _ in 0..conns {
+                let Ok((mut s, _)) = listener.accept() else { break };
+                handles.push(std::thread::spawn(move || {
+                    let mut buf = vec![0u8; 64 * 1024];
+                    loop {
+                        match s.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => {
+                                if s.write_all(&buf[..n]).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().ok();
+            }
+        });
+        (addr, t)
+    }
+
+    #[test]
+    fn pair_rule_shapes_only_the_labeled_traffic_class() {
+        let (addr, server) = echo_server_multi(2);
+        let map = NetemMap::new(LinkPolicy::default());
+        let dialer = NetemDialer::new(map.clone());
+        // sever only the replication pair to this destination
+        map.set_pair("repl", addr, LinkPolicy::partitioned(Partition::Both));
+        let err = dialer
+            .dial_from("repl", addr, Duration::from_secs(1))
+            .unwrap_err();
+        assert_eq!(
+            err.kind(),
+            io::ErrorKind::TimedOut,
+            "labeled dial must hit the pair partition"
+        );
+        // unlabeled client traffic to the same address is untouched
+        let mut client = dialer.dial(addr, Duration::from_secs(5)).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        client.write_all(b"ping").unwrap();
+        let mut back = [0u8; 4];
+        client.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"ping");
+        // heal: the labeled class reconnects and carries frames intact
+        map.heal_partitions();
+        let mut repl =
+            dialer.dial_from("repl", addr, Duration::from_secs(5)).unwrap();
+        repl.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        repl.write_all(b"ship").unwrap();
+        let mut b = [0u8; 4];
+        repl.read_exact(&mut b).unwrap();
+        assert_eq!(&b, b"ship");
+        drop(client);
+        drop(repl);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn pair_rule_is_live_and_most_specific() {
+        let (addr, server) = echo_server_multi(2);
+        let map = NetemMap::new(LinkPolicy::default());
+        let dialer = NetemDialer::new(map.clone());
+        let mut repl =
+            dialer.dial_from("repl", addr, Duration::from_secs(5)).unwrap();
+        let mut client = dialer.dial(addr, Duration::from_secs(5)).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // a pair rule installed *after* establishment catches the
+        // already-dialed labeled link...
+        map.set_pair("repl", addr, LinkPolicy::partitioned(Partition::Both));
+        repl.set_read_timeout(Some(Duration::from_millis(150))).unwrap();
+        repl.write_all(b"lost").unwrap(); // swallowed by the pair cut
+        let mut b = [0u8; 4];
+        assert!(repl.read_exact(&mut b).is_err(), "pair-severed link cannot echo");
+        // ...while the unlabeled link to the same destination flows
+        client.write_all(b"ping").unwrap();
+        client.read_exact(&mut b).unwrap();
+        assert_eq!(&b, b"ping");
+        // per-pair outranks per-addr: a healthy pair rule punches
+        // through an address-wide partition
+        map.set_pair("repl", addr, LinkPolicy::default());
+        map.set(addr, LinkPolicy::partitioned(Partition::Both));
+        repl.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        repl.write_all(b"pong").unwrap();
+        repl.read_exact(&mut b).unwrap();
+        assert_eq!(&b, b"pong", "healthy pair rule must outrank the address cut");
+        client.set_read_timeout(Some(Duration::from_millis(150))).unwrap();
+        client.write_all(b"gone").unwrap(); // swallowed by the address cut
+        assert!(
+            client.read_exact(&mut b).is_err(),
+            "address-wide cut must still sever unlabeled traffic"
+        );
+        drop(repl);
+        drop(client);
         server.join().unwrap();
     }
 

@@ -25,7 +25,8 @@ use std::time::{Duration, Instant};
 use super::replication::{Replicator, ROLE_REPLICA};
 use super::tcp_store::{
     apply_mutating, apply_op, bump_applied, encode_resp_body,
-    handle_replicate, lock, loggable, promote_shared, repl_status_response,
+    handle_install_state, handle_replicate, lock, loggable, promote_shared,
+    repl_status_response,
     replica_serves, restore_key, run_thread_core, wait_poll, Shared,
     WakeEvent,
 };
@@ -364,6 +365,11 @@ impl Reactor {
             Request::ReplStatus => {
                 sh.requests.inc();
                 return self.complete(token, repl, repl_status_response(&sh), 0);
+            }
+            Request::InstallState { high_water, ops } => {
+                sh.requests.inc();
+                let resp = handle_install_state(&sh, &self.stop, high_water, ops);
+                return self.complete(token, repl, resp, 0);
             }
             Request::Promote { peers } => {
                 sh.requests.inc();

@@ -23,7 +23,9 @@
 //!   replicated-mode bench column all build on.
 
 use super::link::{default_dialer, jittered, Dialer};
-use super::tcp_store::{FencedWait, TcpStoreClient, TcpStoreServer};
+use super::tcp_store::{
+    decode_beats, BeatRecord, FencedWait, TcpStoreClient, TcpStoreServer,
+};
 use super::wire::{Bytes, Request, Response};
 use crate::telemetry::{trace::TraceCtx, Snapshot};
 use anyhow::{anyhow, bail, Result};
@@ -54,6 +56,11 @@ const SESSION_RETRIES: usize = 6;
 /// Entries the dedup cache retains (FIFO) — bounds replicated memory
 /// while comfortably covering every in-flight replayable op.
 const DEDUP_CAP: usize = 4096;
+
+/// Source label the replication shipper dials its follower links
+/// under — the key netem per-pair policies use to shape replication
+/// traffic independently of client traffic on the same destination.
+pub const REPL_LINK_SRC: &str = "repl";
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
@@ -94,6 +101,24 @@ impl DedupMap {
     pub(crate) fn len(&self) -> usize {
         self.map.len()
     }
+
+    /// Drop every cached entry — the receiving side of an
+    /// `InstallState` wipe before the snapshot's `DedupDone` entries
+    /// repopulate the cache.
+    pub(crate) fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+
+    /// Every cached `(id, response)` in FIFO order — the snapshot dump
+    /// for a replica re-attach, ordered so the installed cache evicts
+    /// in the same order this one will.
+    pub(crate) fn entries(&self) -> Vec<(u64, Vec<u8>)> {
+        self.order
+            .iter()
+            .filter_map(|id| self.map.get(id).map(|v| (*id, v.clone())))
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -128,6 +153,11 @@ pub struct Replicator {
     commit_cv: Condvar,
     stop: AtomicBool,
     shipper: Mutex<Option<JoinHandle<()>>>,
+    /// Replicas attached after start ([`Self::attach`]): bootstrapped
+    /// connections (with the log index their install covered) parked
+    /// here until the shipper splices them into its live set at the
+    /// top of the next batch.
+    pending: Mutex<Vec<(TcpStoreClient, u64)>>,
     /// Event-loop hook: the store reactor parks commit waits as
     /// entries instead of blocking in [`Self::wait_committed`], so the
     /// shipper pings this callback (an eventfd write) whenever the
@@ -144,7 +174,11 @@ impl Replicator {
     pub fn start(peers: &[SocketAddr], next_index: u64) -> Arc<Replicator> {
         let mut conns = Vec::new();
         for &p in peers {
-            if let Ok(mut c) = TcpStoreClient::connect_with_timeout(p, PROBE_CONNECT) {
+            // Shipper links carry the "repl" source label so netem
+            // campaigns can shape follower links independently of
+            // client traffic (per-pair policies, DESIGN.md §15).
+            if let Ok(mut c) = TcpStoreClient::connect_from(REPL_LINK_SRC, p, PROBE_CONNECT)
+            {
                 // bound a stalled replica read so shutdown can't wedge
                 let _ = c.set_read_window(Some(Duration::from_secs(2)));
                 conns.push(c);
@@ -162,6 +196,7 @@ impl Replicator {
             commit_cv: Condvar::new(),
             stop: AtomicBool::new(false),
             shipper: Mutex::new(None),
+            pending: Mutex::new(Vec::new()),
             commit_waker: Mutex::new(None),
         });
         let r2 = repl.clone();
@@ -258,6 +293,44 @@ impl Replicator {
         }
     }
 
+    /// Bootstrap a (re)started replica at `addr` and splice it into
+    /// the live shipping set (the re-attach half of ROADMAP item 1):
+    /// under the log lock — so no index can be assigned mid-snapshot —
+    /// dump the primary's full state, install it on the replica at the
+    /// current high-water (`InstallState`), then park the connection
+    /// for the shipper's tail replay. Entries already queued at
+    /// indices `<=` the high-water re-ship and are skipped
+    /// idempotently by the replica's applied check. Mutations block
+    /// for the install round-trip; attaches are rare (one per replica
+    /// death), so that pause is the price of a torn-free snapshot.
+    pub(crate) fn attach(
+        &self,
+        addr: SocketAddr,
+        shared: &super::tcp_store::Shared,
+    ) -> Result<()> {
+        let mut c = TcpStoreClient::connect_from(REPL_LINK_SRC, addr, PROBE_CONNECT)?;
+        c.set_read_window(Some(Duration::from_secs(10)))?;
+        let g = lock(&self.inner);
+        let high = g.next_index - 1;
+        let ops = shared.snapshot_ops();
+        match c.roundtrip(Request::InstallState { high_water: high, ops })? {
+            Response::Counter(a) if a as u64 == high => {}
+            other => bail!("unexpected InstallState response {other:?}"),
+        }
+        c.set_read_window(Some(Duration::from_secs(2)))?;
+        // still under the log lock: no batch beyond `high` can ship
+        // before this connection is visible to the shipper
+        lock(&self.pending).push((c, high));
+        drop(g);
+        let mut cs = lock(&self.commit);
+        cs.live_replicas += 1;
+        cs.degraded = false;
+        drop(cs);
+        self.commit_cv.notify_all();
+        self.ping_commit_waker();
+        Ok(())
+    }
+
     /// Stop the shipper (after it drains any queued entries) and join.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
@@ -274,6 +347,15 @@ fn shipper_loop(r: &Replicator, mut conns: Vec<TcpStoreClient>) {
     let mut acked: Vec<u64> = vec![0; conns.len()];
     let mut live: Vec<bool> = vec![true; conns.len()];
     loop {
+        // Splice in replicas attached since the last batch — before
+        // shipping, so the very next frame (and quorum computation)
+        // includes them. Take-and-release: never hold `pending` while
+        // waiting on the log lock (attach pushes under that lock).
+        for (c, ack) in std::mem::take(&mut *lock(&r.pending)) {
+            conns.push(c);
+            acked.push(ack);
+            live.push(true);
+        }
         let batch = {
             let mut g = lock(&r.inner);
             while g.queue.is_empty() && !r.stop.load(Ordering::Relaxed) {
@@ -767,6 +849,17 @@ impl StoreSession {
         }
     }
 
+    /// Fetch the heartbeat beat table (`Beats` wire op),
+    /// failover-transparent. Replicas serve it too — a promoted
+    /// standby rebuilds lease state from these real beats instead of
+    /// only the derived `ctl/leases` keys.
+    pub fn beats(&mut self) -> Result<Vec<BeatRecord>> {
+        match self.call(Request::Beats)? {
+            Response::Value(v) => decode_beats(&v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
     /// Pipelined batch, failover-transparent. A batch containing any
     /// `Add` is wrapped in a `Dedup` envelope whose id is stable
     /// across retries: if the primary dies after executing the batch
@@ -925,6 +1018,35 @@ impl ReplicaSet {
     /// Returns its address, or None if already killed.
     pub fn kill_primary(&mut self) -> Option<SocketAddr> {
         self.primary.take().map(|p| p.addr())
+    }
+
+    /// Crash one replica (drops its server). The dead address stays in
+    /// the endpoint set — sessions skip unreachable endpoints — so the
+    /// plane's identity is unchanged, only its quorum shrinks.
+    pub fn kill_replica(&mut self, i: usize) -> Option<SocketAddr> {
+        if i < self.replicas.len() {
+            Some(self.replicas.remove(i).addr())
+        } else {
+            None
+        }
+    }
+
+    /// Start a fresh replica and re-attach it to the live primary:
+    /// snapshot install at the log high-water, then live tail replay
+    /// (the kill-then-rejoin path of DESIGN.md §13). The rejoined
+    /// node binds a new port, appended to the endpoint set.
+    pub fn rejoin_replica(&mut self) -> Result<SocketAddr> {
+        let primary = self
+            .primary
+            .as_ref()
+            .ok_or_else(|| anyhow!("no live primary to rejoin"))?;
+        let s = TcpStoreServer::start()?;
+        s.set_replica();
+        primary.attach_replica(s.addr())?;
+        let addr = s.addr();
+        self.replicas.push(s);
+        self.addrs.push(addr);
+        Ok(addr)
     }
 
     /// A fresh failover-capable session onto this plane.
@@ -1144,5 +1266,75 @@ mod tests {
         assert_eq!(rs, vec![Response::Ok, Response::Ok]);
         assert_eq!(s.ops_sent(), 2);
         assert_eq!(server.beats().len(), 2);
+    }
+
+    #[test]
+    fn beats_are_readable_over_the_wire_from_replicas() {
+        let set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        s.heartbeat(0, 1, 4, -1).unwrap();
+        s.heartbeat(1, 2, 5, 3).unwrap();
+        // the beat table is log-replicated; read it from the replica
+        let mut rc = TcpStoreClient::connect(set.replica_servers()[0].addr()).unwrap();
+        let mut beats = rc.beats().unwrap();
+        beats.sort_by_key(|b| b.rank);
+        assert_eq!(beats.len(), 2);
+        assert_eq!(beats[0].incarnation, 1);
+        assert_eq!(beats[0].step_tag, 4);
+        assert_eq!(beats[1].device_code, 3);
+        // freshness survives the age_ms round-trip
+        assert!(beats[0].at.elapsed() < Duration::from_secs(5));
+        // and the session API reads the same table with failover
+        assert_eq!(s.beats().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn killed_replica_rejoins_and_catches_up_from_high_water() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        s.set("pre", b"1").unwrap();
+        assert_eq!(s.add("ctr", 2).unwrap(), 2);
+        s.advance_epoch(2).unwrap();
+        s.heartbeat(3, 1, 7, -1).unwrap();
+        // crash the only replica: the plane degrades but keeps serving
+        set.kill_replica(0).unwrap();
+        s.set("while-dead", b"2").unwrap();
+        // rejoin: snapshot install at the high-water + live tail replay
+        let addr = set.rejoin_replica().unwrap();
+        s.set("post", b"3").unwrap();
+        let mut rc = TcpStoreClient::connect(addr).unwrap();
+        // snapshot state, the write made while dead, and the post-rejoin
+        // tail are all on the rejoined node
+        assert_eq!(rc.get("pre").unwrap().as_deref(), Some(&b"1"[..]));
+        assert_eq!(rc.get("while-dead").unwrap().as_deref(), Some(&b"2"[..]));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if rc.get("post").unwrap().as_deref() == Some(&b"3"[..]) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "tail replay never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let replica = set.replica_servers().last().unwrap();
+        assert_eq!(replica.addr(), addr);
+        assert_eq!(replica.epoch(), 2, "epoch travelled with the snapshot");
+        assert_eq!(rc.beats().unwrap().len(), 1, "beat table travelled too");
+        // the real proof: kill the primary and promote the rejoined
+        // replica — counters, fences, and keys must all be intact
+        set.kill_primary();
+        let mut s2 = set.session().unwrap();
+        assert_eq!(s2.get("pre").unwrap().as_deref(), Some(&b"1"[..]));
+        assert_eq!(s2.add("ctr", 0).unwrap(), 2, "counter survived rejoin + failover");
+        assert_eq!(
+            s2.wait_epoch("absent", 1).unwrap(),
+            FencedWait::Superseded { current: 2 }
+        );
+    }
+
+    #[test]
+    fn rejoin_without_live_primary_is_refused() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        set.kill_primary();
+        assert!(set.rejoin_replica().is_err());
     }
 }

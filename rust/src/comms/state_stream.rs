@@ -677,6 +677,214 @@ pub fn fetch_from_addr_via(
     fetch_snapshot(&mut link, expect, fence)
 }
 
+/// Serve an arbitrary byte payload over the same chunk grammar —
+/// header, per-chunk checksums, chained end hash, fenced abort — with
+/// `step` carrying the payload's version (for redundancy stripes: the
+/// training step the stripe encodes, DESIGN.md §16). The wire is
+/// frame-identical to [`serve_snapshot`]; only the payload bytes
+/// differ, so every transport property (retryable `Superseded`,
+/// corruption detection, stall bounds) carries over to stripe
+/// shipping unchanged.
+pub fn serve_blob<W: Write>(
+    w: &mut W,
+    data: &[u8],
+    step: u64,
+    shard: ShardId,
+    epoch: u64,
+    fence: &EpochFence,
+    cfg: &StreamConfig,
+) -> RestoreResult<ServeStats> {
+    let t0 = Instant::now();
+    let chunk_bytes = cfg.chunk_bytes.clamp(MIN_CHUNK_BYTES, MAX_CHUNK_BYTES) & !7;
+    if data.len() as u64 > MAX_TOTAL_BYTES {
+        return Err(RestoreError::Fatal(anyhow!(
+            "implausible blob size {}",
+            data.len()
+        )));
+    }
+    let header = StreamHeader {
+        step,
+        epoch,
+        shard,
+        total_bytes: data.len() as u64,
+        chunk_bytes: chunk_bytes as u32,
+    };
+    w.write_all(&header.encode())?;
+
+    let mut index: u32 = 0;
+    let mut sent: u64 = 0;
+    let mut chained = FNV_OFFSET;
+    for payload in data.chunks(chunk_bytes) {
+        let current = fence.current();
+        if current > epoch {
+            w.write_all(&[FRAME_ABORT])?;
+            w.write_all(&current.to_le_bytes())?;
+            w.flush()?;
+            return Err(RestoreError::Superseded { current });
+        }
+        let sum = fnv1a(payload, FNV_OFFSET);
+        chained = fnv1a(payload, chained);
+        w.write_all(&[FRAME_CHUNK])?;
+        w.write_all(&index.to_le_bytes())?;
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(payload)?;
+        w.write_all(&sum.to_le_bytes())?;
+        index += 1;
+        sent += payload.len() as u64;
+        if let Some(d) = cfg.throttle {
+            std::thread::sleep(d);
+        }
+    }
+    w.write_all(&[FRAME_END])?;
+    w.write_all(&index.to_le_bytes())?;
+    w.write_all(&chained.to_le_bytes())?;
+    w.flush()?;
+    Ok(ServeStats { bytes: sent, chunks: index, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Receive one [`serve_blob`] payload, verifying the header against
+/// `expect`, every chunk checksum, and the chained end hash. Returns
+/// the header (its `step` is the payload version) alongside the bytes.
+pub fn fetch_blob<R: Read>(
+    r: &mut R,
+    expect: &Expect,
+    fence: &EpochFence,
+) -> RestoreResult<(StreamHeader, Vec<u8>, FetchStats)> {
+    let t0 = Instant::now();
+    let mut hdr_buf = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr_buf)?;
+    let header = StreamHeader::decode(&hdr_buf)?;
+    if header.epoch != expect.epoch {
+        return Err(RestoreError::Fatal(anyhow!(
+            "blob stream epoch {} does not match expected epoch {}",
+            header.epoch,
+            expect.epoch
+        )));
+    }
+    if header.shard != expect.shard {
+        return Err(RestoreError::Fatal(anyhow!(
+            "blob stream carries shard {:?}, expected {:?}",
+            header.shard,
+            expect.shard
+        )));
+    }
+    if let Some(step) = expect.step {
+        if header.step != step {
+            return Err(RestoreError::Fatal(anyhow!(
+                "blob stream carries version {}, expected {step}",
+                header.step
+            )));
+        }
+    }
+    if header.total_bytes > MAX_TOTAL_BYTES {
+        return Err(RestoreError::Fatal(anyhow!(
+            "implausible transfer size {}",
+            header.total_bytes
+        )));
+    }
+    let chunk_cap = header.chunk_bytes as usize;
+    if chunk_cap == 0 || chunk_cap > MAX_CHUNK_BYTES {
+        return Err(RestoreError::Fatal(anyhow!(
+            "implausible chunk size {}",
+            header.chunk_bytes
+        )));
+    }
+
+    let mut data = Vec::with_capacity(header.total_bytes as usize);
+    let mut chained = FNV_OFFSET;
+    let mut next_index: u32 = 0;
+    let mut payload = vec![0u8; chunk_cap];
+    loop {
+        let current = fence.current();
+        if current > expect.epoch {
+            return Err(RestoreError::Superseded { current });
+        }
+        let mut kind = [0u8; 1];
+        r.read_exact(&mut kind)?;
+        match kind[0] {
+            FRAME_CHUNK => {
+                let mut meta = [0u8; 8];
+                r.read_exact(&mut meta)?;
+                let index = u32::from_le_bytes(meta[0..4].try_into().unwrap());
+                let len = u32::from_le_bytes(meta[4..8].try_into().unwrap()) as usize;
+                if index != next_index {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunk {index} out of order (expected {next_index})"
+                    )));
+                }
+                if len == 0 || len > payload.len() {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunk {index} has bad length {len}"
+                    )));
+                }
+                r.read_exact(&mut payload[..len])?;
+                let mut sum = [0u8; 8];
+                r.read_exact(&mut sum)?;
+                if u64::from_le_bytes(sum) != fnv1a(&payload[..len], FNV_OFFSET) {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunk {index} checksum mismatch (corrupt transfer)"
+                    )));
+                }
+                if data.len() as u64 + len as u64 > header.total_bytes {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "chunks exceed the promised {} bytes (corrupt header)",
+                        header.total_bytes
+                    )));
+                }
+                chained = fnv1a(&payload[..len], chained);
+                data.extend_from_slice(&payload[..len]);
+                next_index += 1;
+            }
+            FRAME_ABORT => {
+                let mut cur = [0u8; 8];
+                r.read_exact(&mut cur)?;
+                return Err(RestoreError::Superseded {
+                    current: u64::from_le_bytes(cur),
+                });
+            }
+            FRAME_TRACE => {
+                let mut ctx_buf = [0u8; trace::CTX_WIRE_LEN];
+                r.read_exact(&mut ctx_buf)?;
+            }
+            FRAME_END => {
+                let mut tail = [0u8; 12];
+                r.read_exact(&mut tail)?;
+                let count = u32::from_le_bytes(tail[0..4].try_into().unwrap());
+                let whole = u64::from_le_bytes(tail[4..12].try_into().unwrap());
+                if count != next_index {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "stream ended after {next_index} chunks, header promised {count}"
+                    )));
+                }
+                if whole != chained {
+                    return Err(RestoreError::Fatal(anyhow!(
+                        "end-of-stream hash mismatch (corrupt transfer)"
+                    )));
+                }
+                break;
+            }
+            other => {
+                return Err(RestoreError::Fatal(anyhow!(
+                    "unknown state-stream frame kind {other}"
+                )));
+            }
+        }
+    }
+    if data.len() as u64 != header.total_bytes {
+        return Err(RestoreError::Fatal(anyhow!(
+            "received {} bytes, header promised {}",
+            data.len(),
+            header.total_bytes
+        )));
+    }
+    let stats = FetchStats {
+        bytes: header.total_bytes,
+        chunks: next_index,
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    Ok((header, data, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -717,6 +925,53 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn blob_roundtrip_multi_chunk() {
+        // the stripe-shipping grammar: same frames, raw payload
+        let data: Vec<u8> = (0..40_000u32).map(|i| (i % 251) as u8).collect();
+        let fence = EpochFence::new(2);
+        let cfg = StreamConfig { chunk_bytes: 8 * 1024, ..Default::default() };
+        let mut wire = Vec::new();
+        let stats = serve_blob(&mut wire, &data, 11, shard(), 2, &fence, &cfg).unwrap();
+        assert!(stats.chunks > 1);
+        assert_eq!(stats.bytes, data.len() as u64);
+        assert_eq!(wire[HEADER_LEN], FRAME_CHUNK, "blob wire must share the grammar");
+
+        let expect = Expect { epoch: 2, shard: shard(), step: Some(11) };
+        let (hdr, back, fstats) =
+            fetch_blob(&mut Cursor::new(&wire), &expect, &fence).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(hdr.step, 11);
+        assert_eq!(fstats.chunks, stats.chunks);
+
+        // corruption is caught per chunk
+        let mut bad = wire.clone();
+        bad[HEADER_LEN + 20] ^= 0x10;
+        let err = fetch_blob(&mut Cursor::new(&bad), &expect, &fence).unwrap_err();
+        assert!(!err.retryable());
+    }
+
+    #[test]
+    fn blob_serve_aborts_retryably_on_epoch_bump() {
+        let data = vec![7u8; 64 * 1024];
+        let fence = EpochFence::new(3);
+        let cfg = StreamConfig { chunk_bytes: 4 * 1024, ..Default::default() };
+        // bump the fence before serving: the first fence check trips
+        fence.advance(4);
+        let mut wire = Vec::new();
+        match serve_blob(&mut wire, &data, 1, shard(), 3, &fence, &cfg) {
+            Err(RestoreError::Superseded { current }) => assert_eq!(current, 4),
+            other => panic!("expected Superseded, got {other:?}"),
+        }
+        // the receiver sees the in-band abort frame, also retryably
+        let rx_fence = EpochFence::new(3);
+        let expect = Expect { epoch: 3, shard: shard(), step: None };
+        match fetch_blob(&mut Cursor::new(&wire), &expect, &rx_fence) {
+            Err(RestoreError::Superseded { current }) => assert_eq!(current, 4),
+            other => panic!("expected Superseded, got {other:?}"),
         }
     }
 

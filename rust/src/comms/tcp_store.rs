@@ -254,6 +254,46 @@ impl Shared {
         &self.beats[(rank as usize) % STRIPES]
     }
 
+    /// Flat-mutation dump of the entire store state — the payload of
+    /// an `InstallState` bootstrap when a dead replica re-attaches
+    /// (DESIGN.md §13). Same grammar as replication log entries: keys
+    /// as `Set`, counters as `Add` (from zero), beats as `Heartbeat`
+    /// (freshness restamps at the receiver — a just-installed beat
+    /// reads as fresh, which only delays the first lease expiry by one
+    /// interval), the dedup cache as `DedupDone`, and the epoch as a
+    /// trailing `AdvanceEpoch` so the receiver's prune runs against
+    /// the final epoch, exactly as it did here.
+    pub(super) fn snapshot_ops(&self) -> Vec<Request> {
+        let mut ops = Vec::new();
+        for stripe in &self.stripes {
+            let g = lock(stripe);
+            for (k, v) in &g.map {
+                ops.push(Request::Set { key: k.clone(), value: v.to_vec() });
+            }
+            for (k, v) in &g.counters {
+                ops.push(Request::Add { key: k.clone(), delta: *v });
+            }
+        }
+        for stripe in &self.beats {
+            for rec in lock(stripe).values() {
+                ops.push(Request::Heartbeat {
+                    rank: rec.rank,
+                    incarnation: rec.incarnation,
+                    step_tag: rec.step_tag,
+                    device_code: rec.device_code,
+                });
+            }
+        }
+        for (id, resp) in lock(&self.dedup).entries() {
+            ops.push(Request::DedupDone { id, resp });
+        }
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        if epoch > 0 {
+            ops.push(Request::AdvanceEpoch { to: epoch });
+        }
+        ops
+    }
+
     /// Insert `key = value` and wake exactly that key's parked
     /// waiters (the per-key parking protocol's publish half): notify
     /// the slot's condvar for parked threads, and enqueue a key wake
@@ -431,6 +471,24 @@ impl TcpStoreServer {
     /// logged yet).
     pub fn applied_index(&self) -> u64 {
         self.shared.applied.load(Ordering::SeqCst)
+    }
+
+    /// Re-attach a (re)started replica at `addr` to this primary's
+    /// log: bootstrap it with a full state snapshot (`InstallState` at
+    /// the current log high-water) and then ship the live tail to it
+    /// like any founding member (DESIGN.md §13). An un-replicated
+    /// primary grows a shipper on first attach, so a store born alone
+    /// can still adopt followers later.
+    pub fn attach_replica(&self, addr: SocketAddr) -> Result<()> {
+        let repl = {
+            let mut g = lock(&self.shared.repl);
+            if g.is_none() {
+                let next = self.shared.applied.load(Ordering::SeqCst) + 1;
+                *g = Some(Replicator::start(&[], next));
+            }
+            g.clone().expect("replicator just ensured")
+        };
+        repl.attach(addr, &self.shared)
     }
 }
 
@@ -710,6 +768,8 @@ pub(super) fn replica_serves(req: &Request) -> bool {
             | Request::Replicate { .. }
             | Request::ReplStatus
             | Request::Promote { .. }
+            | Request::Beats
+            | Request::InstallState { .. }
     )
 }
 
@@ -755,6 +815,10 @@ fn handle_inner(
         Request::Replicate { start_index, ops } => {
             shared.requests.inc();
             handle_replicate(shared, stop, start_index, ops)
+        }
+        Request::InstallState { high_water, ops } => {
+            shared.requests.inc();
+            handle_install_state(shared, stop, high_water, ops)
         }
         Request::ReplStatus => {
             shared.requests.inc();
@@ -969,6 +1033,40 @@ pub(super) fn handle_replicate(
     Response::Counter(shared.applied.load(Ordering::SeqCst) as i64)
 }
 
+/// Replica side of the re-attach bootstrap: replace the whole local
+/// state with the primary's snapshot and fast-forward the applied
+/// index to the snapshot's high-water. A primary refuses the install
+/// (`NotFound`) — only a demoted/fresh replica may be overwritten.
+/// Log shipments at indices `<= high_water` arriving after (or racing)
+/// the install are skipped by `handle_replicate`'s idempotency check,
+/// so an in-flight pre-snapshot batch can never regress the state.
+pub(super) fn handle_install_state(
+    shared: &Shared,
+    stop: &AtomicBool,
+    high_water: u64,
+    ops: Vec<Request>,
+) -> Response {
+    if shared.role.load(Ordering::SeqCst) != ROLE_REPLICA {
+        return Response::NotFound;
+    }
+    for stripe in &shared.stripes {
+        let mut g = lock(stripe);
+        g.map.clear();
+        g.counters.clear();
+    }
+    for stripe in &shared.beats {
+        lock(stripe).clear();
+    }
+    lock(&shared.dedup).clear();
+    for op in ops {
+        if op.is_mutating() {
+            let _ = apply_op(shared, stop, op);
+        }
+    }
+    shared.applied.store(high_water, Ordering::SeqCst);
+    Response::Counter(high_water as i64)
+}
+
 /// `ReplStatus` payload: `role u8 | applied u64-le | epoch u64-le`.
 /// The epoch leads the election key — a replica behind on epoch can
 /// never be promoted over one that has seen the newer epoch.
@@ -1005,7 +1103,16 @@ pub(super) fn apply_op(shared: &Shared, stop: &AtomicBool, req: Request) -> Resp
         | Request::Dedup { .. }
         | Request::Replicate { .. }
         | Request::ReplStatus
-        | Request::Promote { .. } => Response::NotFound,
+        | Request::Promote { .. }
+        | Request::InstallState { .. } => Response::NotFound,
+        Request::Beats => {
+            let now = Instant::now();
+            let mut recs = Vec::new();
+            for stripe in &shared.beats {
+                recs.extend(lock(stripe).values().copied());
+            }
+            Response::Value(encode_beats(&recs, now).into())
+        }
         Request::DedupDone { id, resp } => {
             lock(&shared.dedup).insert(id, resp);
             Response::Ok
@@ -1128,7 +1235,10 @@ pub(super) fn apply_op(shared: &Shared, stop: &AtomicBool, req: Request) -> Resp
 fn prune_stale_epochs(shared: &Shared, current: u64) {
     let keep_from = current.saturating_sub(1);
     let stale = |key: &str| -> bool {
-        for prefix in ["rdzv/", "restore/"] {
+        // `redund/` stripe advertisements are fenced and pruned like
+        // restore sources; `redund/depot/<rank>` endpoints survive
+        // because "depot" never parses as an epoch number.
+        for prefix in ["rdzv/", "restore/", "redund/"] {
             if let Some(rest) = key.strip_prefix(prefix) {
                 if let Some((e, _)) = rest.split_once('/') {
                     if let Ok(e) = e.parse::<u64>() {
@@ -1149,6 +1259,58 @@ fn prune_stale_epochs(shared: &Shared, current: u64) {
 /// Store key under which a restore source's endpoint is advertised.
 pub(super) fn restore_key(epoch: u64, tag: u64) -> String {
     format!("restore/{epoch}/{tag:016x}")
+}
+
+/// `Beats` response payload: `count u32-le | {rank u64 | incarnation
+/// u64 | step_tag i64 | device_code i64 | age_ms u64}*`. Freshness
+/// crosses the wire as an age relative to `now` (the serving node's
+/// clock) — an `Instant` can't — and [`decode_beats`] reconstructs a
+/// local receive time from it.
+fn encode_beats(recs: &[BeatRecord], now: Instant) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + recs.len() * 40);
+    out.extend_from_slice(&(recs.len() as u32).to_le_bytes());
+    for r in recs {
+        out.extend_from_slice(&r.rank.to_le_bytes());
+        out.extend_from_slice(&r.incarnation.to_le_bytes());
+        out.extend_from_slice(&r.step_tag.to_le_bytes());
+        out.extend_from_slice(&r.device_code.to_le_bytes());
+        let age = now.saturating_duration_since(r.at).as_millis().min(u64::MAX as u128);
+        out.extend_from_slice(&(age as u64).to_le_bytes());
+    }
+    out
+}
+
+/// Parse a `Beats` payload back into [`BeatRecord`]s, restamping each
+/// beat's receive time as `now - age_ms` on the local clock (clamped
+/// to the epoch of this process's `Instant` domain). Network latency
+/// between the store and this reader only makes beats look *older*,
+/// never fresher — the safe direction for lease math.
+pub fn decode_beats(bytes: &[u8]) -> Result<Vec<BeatRecord>> {
+    if bytes.len() < 4 {
+        bail!("beats payload underrun");
+    }
+    let count = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    if bytes.len() < 4 + count * 40 {
+        bail!("beats payload truncated: {count} records, {} bytes", bytes.len());
+    }
+    let now = Instant::now();
+    let mut out = Vec::with_capacity(count);
+    let mut pos = 4;
+    let mut u = |p: &mut usize| -> u64 {
+        let v = u64::from_le_bytes(bytes[*p..*p + 8].try_into().unwrap());
+        *p += 8;
+        v
+    };
+    for _ in 0..count {
+        let rank = u(&mut pos);
+        let incarnation = u(&mut pos);
+        let step_tag = u(&mut pos) as i64;
+        let device_code = u(&mut pos) as i64;
+        let age = Duration::from_millis(u(&mut pos));
+        let at = now.checked_sub(age).unwrap_or(now);
+        out.push(BeatRecord { rank, incarnation, step_tag, device_code, at });
+    }
+    Ok(out)
 }
 
 /// One pass of the fenced-wait state machine, caller holding the
@@ -1266,6 +1428,15 @@ impl TcpStoreClient {
         timeout: Duration,
     ) -> Result<Self> {
         let link = dialer.dial(addr, timeout)?;
+        Ok(TcpStoreClient { link, ops: 0, trace_ctx: None })
+    }
+
+    /// Connect under a *source label* through the process-default
+    /// dialer — the per-pair netem seam: a labeled link can be shaped
+    /// by (src, dst) pair policies independently of unlabeled client
+    /// traffic to the same address. Plain TCP ignores the label.
+    pub fn connect_from(src: &str, addr: SocketAddr, timeout: Duration) -> Result<Self> {
+        let link = super::link::default_dialer().dial_from(src, addr, timeout)?;
         Ok(TcpStoreClient { link, ops: 0, trace_ctx: None })
     }
 
@@ -1500,6 +1671,16 @@ impl TcpStoreClient {
     pub fn stats(&mut self) -> Result<Snapshot> {
         match self.call(Request::Stats)? {
             Response::Value(v) => Snapshot::parse(&v),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the store's heartbeat beat table over the wire (`Beats`
+    /// op) — served by replicas too, so a promoted standby can rebuild
+    /// lease state from real beats after the primary died.
+    pub fn beats(&mut self) -> Result<Vec<BeatRecord>> {
+        match self.call(Request::Beats)? {
+            Response::Value(v) => decode_beats(&v),
             other => bail!("unexpected response {other:?}"),
         }
     }

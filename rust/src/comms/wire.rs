@@ -139,6 +139,23 @@ pub enum Request {
     /// clients; a replica installs the cache entry instead of
     /// re-executing anything -> Ok.
     DedupDone { id: u64, resp: Vec<u8> },
+    /// read the store's heartbeat beat table -> Value(encoded records:
+    /// `count u32 | {rank u64 | incarnation u64 | step_tag i64 |
+    /// device_code i64 | age_ms u64}*`). Beat freshness crosses the
+    /// wire as an age relative to the serving node's clock (an
+    /// `Instant` can't), so a promoted standby can rebuild lease state
+    /// from real beats instead of derived `ctl/leases` keys. Served by
+    /// replicas too — the whole point is reading it after the primary
+    /// died.
+    Beats,
+    /// replica (re)attach bootstrap, primary -> rejoining replica
+    /// (DESIGN.md §13): replace the replica's entire state with the
+    /// snapshot `ops` (flat mutations, same grammar as `Replicate`
+    /// entries) and set its applied index to `high_water` ->
+    /// Counter(applied). Log shipments at indices <= `high_water`
+    /// arriving afterwards are skipped idempotently; the tail replays
+    /// normally.
+    InstallState { high_water: u64, ops: Vec<Request> },
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -222,6 +239,8 @@ impl Request {
             Request::Promote { .. } => "Promote",
             Request::Dedup { .. } => "Dedup",
             Request::DedupDone { .. } => "DedupDone",
+            Request::Beats => "Beats",
+            Request::InstallState { .. } => "InstallState",
         }
     }
 
@@ -365,6 +384,19 @@ impl Request {
                 body.extend_from_slice(&id.to_le_bytes());
                 put_bytes(body, resp);
             }
+            Request::Beats => body.push(20),
+            Request::InstallState { high_water, ops } => {
+                body.push(21);
+                body.extend_from_slice(&high_water.to_le_bytes());
+                body.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+                for item in ops {
+                    let at = body.len();
+                    body.extend_from_slice(&[0u8; 4]);
+                    item.encode_body_into(body);
+                    let len = (body.len() - at - 4) as u32;
+                    body[at..at + 4].copy_from_slice(&len.to_le_bytes());
+                }
+            }
         }
     }
 
@@ -469,7 +501,7 @@ impl Request {
                 let mut items = Vec::with_capacity(count.min(1024));
                 for _ in 0..count {
                     let sub = get_bytes(body, &mut pos)?;
-                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18) | Some(&19)) {
+                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18) | Some(&19) | Some(&21)) {
                         bail!("nested batch/replication op rejected");
                     }
                     items.push(Request::decode(&sub)?);
@@ -489,7 +521,7 @@ impl Request {
                     // the log carries flat committed mutations (plus
                     // DedupDone cache installs) — containers and Dedup
                     // wrappers never appear as entries
-                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18)) {
+                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18) | Some(&21)) {
                         bail!("nested container rejected in replicate");
                     }
                     ops.push(Request::decode(&sub)?);
@@ -511,7 +543,7 @@ impl Request {
             Some(18) => {
                 let id = get_u64(body, &mut pos)?;
                 let sub = get_bytes(body, &mut pos)?;
-                if matches!(sub.first(), Some(&15) | Some(&18) | Some(&19)) {
+                if matches!(sub.first(), Some(&15) | Some(&18) | Some(&19) | Some(&21)) {
                     bail!("dedup may not wrap replication ops");
                 }
                 Request::Dedup { id, op: Box::new(Request::decode(&sub)?) }
@@ -519,6 +551,25 @@ impl Request {
             Some(19) => {
                 let id = get_u64(body, &mut pos)?;
                 Request::DedupDone { id, resp: get_bytes(body, &mut pos)? }
+            }
+            Some(20) => Request::Beats,
+            Some(21) => {
+                let high_water = get_u64(body, &mut pos)?;
+                let count = get_u32(body, &mut pos)? as usize;
+                if count > MAX_BATCH_OPS {
+                    bail!("install too large: {count} ops");
+                }
+                let mut ops = Vec::with_capacity(count.min(1024));
+                for _ in 0..count {
+                    let sub = get_bytes(body, &mut pos)?;
+                    // the snapshot carries the same flat-mutation
+                    // grammar as the log — no containers, no wrappers
+                    if matches!(sub.first(), Some(&13) | Some(&15) | Some(&18) | Some(&21)) {
+                        bail!("nested container rejected in install");
+                    }
+                    ops.push(Request::decode(&sub)?);
+                }
+                Request::InstallState { high_water, ops }
             }
             other => bail!("bad request opcode {other:?}"),
         };
@@ -753,6 +804,17 @@ mod tests {
             ])),
         });
         roundtrip_req(Request::DedupDone { id: 3, resp: vec![3, 1, 0, 0, 0, 0, 0, 0, 0] });
+        roundtrip_req(Request::Beats);
+        roundtrip_req(Request::InstallState { high_water: 0, ops: vec![] });
+        roundtrip_req(Request::InstallState {
+            high_water: 41,
+            ops: vec![
+                Request::Set { key: "ctl/leases".into(), value: vec![1, 2, 3] },
+                Request::Heartbeat { rank: 2, incarnation: 1, step_tag: 7, device_code: -1 },
+                Request::DedupDone { id: 4, resp: vec![0] },
+                Request::AdvanceEpoch { to: 6 },
+            ],
+        });
     }
 
     #[test]
@@ -800,6 +862,11 @@ mod tests {
             op: Box::new(Request::Add { key: "ctr".into(), delta: 2 }),
         });
         roundtrip_traced(Request::DedupDone { id: 11, resp: vec![0] });
+        roundtrip_traced(Request::Beats);
+        roundtrip_traced(Request::InstallState {
+            high_water: 9,
+            ops: vec![Request::Set { key: "k".into(), value: vec![5] }],
+        });
     }
 
     #[test]
@@ -886,10 +953,35 @@ mod tests {
             Request::Replicate { start_index: 1, ops: vec![] },
             Request::Dedup { id: 1, op: Box::new(Request::Count) },
             Request::DedupDone { id: 1, resp: vec![0] },
+            Request::InstallState { high_water: 1, ops: vec![] },
         ] {
             let enc = Request::Batch(vec![Request::Count, bad]).encode();
             assert!(Request::decode(&enc[4..]).is_err());
         }
+        // InstallState carries the same flat grammar as the log: no
+        // containers, no wrappers, no nested installs — and it never
+        // rides inside Replicate or Dedup itself
+        for bad in [
+            Request::Batch(vec![Request::Count]),
+            Request::Replicate { start_index: 1, ops: vec![] },
+            Request::Dedup { id: 1, op: Box::new(Request::Count) },
+            Request::InstallState { high_water: 1, ops: vec![] },
+        ] {
+            let enc = Request::InstallState { high_water: 1, ops: vec![bad] }.encode();
+            assert!(Request::decode(&enc[4..]).is_err());
+        }
+        let enc = Request::Replicate {
+            start_index: 1,
+            ops: vec![Request::InstallState { high_water: 1, ops: vec![] }],
+        }
+        .encode();
+        assert!(Request::decode(&enc[4..]).is_err());
+        let enc = Request::Dedup {
+            id: 1,
+            op: Box::new(Request::InstallState { high_water: 1, ops: vec![] }),
+        }
+        .encode();
+        assert!(Request::decode(&enc[4..]).is_err());
     }
 
     #[test]

@@ -268,10 +268,15 @@ pub fn parse_leases(bytes: &[u8]) -> Result<Vec<(usize, u64)>> {
 pub struct AdoptedState {
     pub leases: Vec<(usize, u64)>,
     pub episode: Option<EpisodeCheckpoint>,
+    /// The beat table as the surviving store saw it: the promoted
+    /// standby resumes stall detection from the workers' last reported
+    /// step tags and device codes instead of a blank slate.
+    pub beats: Vec<crate::comms::tcp_store::BeatRecord>,
 }
 
-/// Read the lease table and in-flight episode checkpoint back out of
-/// the (possibly failed-over) coordination plane.
+/// Read the lease table, in-flight episode checkpoint, and replicated
+/// beat table back out of the (possibly failed-over) coordination
+/// plane.
 pub fn adopt_coordination_state(session: &mut StoreSession) -> Result<AdoptedState> {
     let leases = match session.get(K_LEASES)? {
         Some(b) => parse_leases(&b)?,
@@ -281,7 +286,8 @@ pub fn adopt_coordination_state(session: &mut StoreSession) -> Result<AdoptedSta
         Some(b) => Some(EpisodeCheckpoint::parse(&b)?),
         None => None,
     };
-    Ok(AdoptedState { leases, episode })
+    let beats = session.beats()?;
+    Ok(AdoptedState { leases, episode, beats })
 }
 
 /// A standby controller: connects to the surviving coordination plane
@@ -304,12 +310,19 @@ impl StandbyController {
     /// Re-open every adopted lease in a fresh monitor with a full
     /// grace window: adopted workers are presumed alive until they
     /// miss beats against the *new* controller's clock, so adoption
-    /// itself can never false-positive a detection.
+    /// itself can never false-positive a detection. Adopted beats are
+    /// replayed restamped to admission time — step tags, progress
+    /// marks, and device codes carry across the failover (a silently
+    /// stalled worker is caught after one stall window instead of
+    /// never) without backdating anyone's grace.
     pub fn resume_lease_monitor(&self, cfg: LeaseConfig) -> LeaseMonitor {
         let mut m = LeaseMonitor::new(cfg);
         let now = Instant::now();
         for &(rank, inc) in &self.adopted.leases {
             m.admit(rank, inc, now);
+        }
+        for b in &self.adopted.beats {
+            m.observe(b.rank as usize, b.incarnation, b.step_tag, b.device_code, now);
         }
         m
     }
@@ -545,6 +558,7 @@ impl Controller {
             state,
             max_steps: self.cfg.steps,
             start_parked,
+            redundancy: None,
         };
         let thread = std::thread::Builder::new()
             .name(format!("worker-{rank}"))
@@ -1363,6 +1377,45 @@ mod tests {
             stall_margin: 2,
         });
         assert!(monitor.scan(Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn promoted_standby_sees_recent_beats_not_just_leases() {
+        let mut set = ReplicaSet::start(1).unwrap();
+        let mut s = set.session().unwrap();
+        s.set(K_LEASES, &encode_leases(&[(0, 1), (2, 1), (5, 4)])).unwrap();
+        // two healthy beats, plus one carrying a device-plugin report
+        // the about-to-die controller never got to act on
+        s.heartbeat(0, 1, 7, -1).unwrap();
+        s.heartbeat(2, 1, 7, -1).unwrap();
+        s.heartbeat(5, 4, 6, 2).unwrap();
+        let eps = set.endpoints();
+        set.kill_primary();
+
+        let standby = StandbyController::adopt(&eps).unwrap();
+        let mut beats = standby.adopted.beats.clone();
+        beats.sort_by_key(|b| b.rank);
+        assert_eq!(beats.len(), 3, "the replicated beat table survives failover");
+        assert_eq!(
+            (beats[0].rank, beats[0].incarnation, beats[0].step_tag),
+            (0, 1, 7)
+        );
+        assert_eq!(beats[2].device_code, 2);
+        assert!(
+            beats[0].at.elapsed() < Duration::from_secs(30),
+            "adopted beats must carry recent timestamps"
+        );
+
+        // the resumed monitor acts on the adopted beats: the sticky
+        // device report fires immediately, the healthy ranks do not
+        let mut monitor = standby.resume_lease_monitor(LeaseConfig::default());
+        let found = monitor.scan(Instant::now());
+        assert_eq!(found.len(), 1, "only the device report fires: {found:?}");
+        assert_eq!(found[0].rank, 5);
+        assert_eq!(
+            found[0].path,
+            crate::coordinator::DetectionPath::DevicePlugin
+        );
     }
 
     #[test]

@@ -44,6 +44,6 @@ pub use rendezvous::{
 };
 pub use restore::{
     plan_shard_restore, restore_episode, restore_sweep, RestoreOutcome, RestorePlan,
-    RestoreSweepConfig, ShardTransfer, TransferStat,
+    RestoreSweepConfig, ShardReconstruction, ShardTransfer, TransferStat,
 };
 pub use step_tag::{decide, plan_restore, TagDecision};

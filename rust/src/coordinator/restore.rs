@@ -40,6 +40,24 @@ pub struct ShardTransfer {
     pub targets: Vec<usize>,
 }
 
+/// One shard scheduled to be rebuilt from erasure-coded stripes rather
+/// than copied from a live replica — the redundancy tier's fallback
+/// when an entire ZeRO replica group died (DESIGN.md §16). Any `k` of
+/// the listed `k + m` stripe sources suffice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardReconstruction {
+    pub shard: ShardId,
+    /// Step the stripes encode — always the plan's resume step.
+    pub step: u64,
+    /// Data/parity split the stripes were cut with.
+    pub k: usize,
+    pub m: usize,
+    /// Surviving stripe sources: (stripe index, depot address).
+    pub stripes: Vec<(usize, SocketAddr)>,
+    /// Ranks that must come to hold the rebuilt shard.
+    pub targets: Vec<usize>,
+}
+
 /// The full restore schedule for one recovery episode.
 #[derive(Debug, Clone)]
 pub struct RestorePlan {
@@ -50,13 +68,30 @@ pub struct RestorePlan {
     pub transfers: Vec<ShardTransfer>,
     /// Shards with restore targets but no surviving replica at the
     /// resume step — replica restore is impossible for them
-    /// (`can_recover` false): checkpoint fallback.
+    /// (`can_recover` false). [`RestorePlan::cover_unsourced`] moves
+    /// shards the redundancy tier can rebuild into `reconstructions`;
+    /// whatever stays here needs the checkpoint fallback.
     pub unsourced: Vec<ShardId>,
+    /// Restore targets (dead + lagging members) of each unsourced
+    /// shard, kept so redundancy coverage knows who must receive the
+    /// rebuilt state.
+    pub unsourced_targets: BTreeMap<ShardId, Vec<usize>>,
+    /// Stripe reconstructions scheduled for shards with no live
+    /// replica. Empty straight out of the planner; filled by
+    /// [`RestorePlan::cover_unsourced`].
+    pub reconstructions: Vec<ShardReconstruction>,
 }
 
 impl RestorePlan {
     /// True iff every lost or lagging shard has a live replica source.
     pub fn replica_feasible(&self) -> bool {
+        self.unsourced.is_empty() && self.reconstructions.is_empty()
+    }
+
+    /// True iff every lost shard is recoverable without touching a
+    /// checkpoint file — from a live replica or by stripe
+    /// reconstruction.
+    pub fn checkpoint_free(&self) -> bool {
         self.unsourced.is_empty()
     }
 
@@ -66,9 +101,39 @@ impl RestorePlan {
             .transfers
             .iter()
             .flat_map(|t| t.targets.iter().copied())
+            .chain(
+                self.reconstructions
+                    .iter()
+                    .flat_map(|r| r.targets.iter().copied()),
+            )
             .collect();
         out.sort_unstable();
         out
+    }
+
+    /// Redundancy-tier fallback: offer every unsourced shard to
+    /// `cover`, which returns a stripe reconstruction when at least
+    /// `k` of its `k + m` stripes survive at the resume step (and
+    /// `None` when the shard is truly lost). Covered shards move from
+    /// `unsourced` into `reconstructions`; whatever remains in
+    /// `unsourced` afterwards genuinely requires the checkpoint path.
+    pub fn cover_unsourced<F>(&mut self, mut cover: F)
+    where
+        F: FnMut(ShardId, u64, &[usize]) -> Option<ShardReconstruction>,
+    {
+        let mut still = Vec::new();
+        for shard in std::mem::take(&mut self.unsourced) {
+            let targets =
+                self.unsourced_targets.get(&shard).cloned().unwrap_or_default();
+            match cover(shard, self.resume_step, &targets) {
+                Some(rc) => {
+                    self.unsourced_targets.remove(&shard);
+                    self.reconstructions.push(rc);
+                }
+                None => still.push(shard),
+            }
+        }
+        self.unsourced = still;
     }
 }
 
@@ -107,6 +172,7 @@ pub fn plan_shard_restore(
 
     let mut transfers = Vec::new();
     let mut unsourced = Vec::new();
+    let mut unsourced_targets = BTreeMap::new();
     for (shard, members) in by_shard {
         let mut sources = Vec::new();
         let mut targets = Vec::new();
@@ -126,6 +192,7 @@ pub fn plan_shard_restore(
         }
         if sources.is_empty() {
             unsourced.push(shard);
+            unsourced_targets.insert(shard, targets);
             continue;
         }
         let mut per_source: Vec<Vec<usize>> = vec![Vec::new(); sources.len()];
@@ -138,7 +205,13 @@ pub fn plan_shard_restore(
             }
         }
     }
-    RestorePlan { resume_step, transfers, unsourced }
+    RestorePlan {
+        resume_step,
+        transfers,
+        unsourced,
+        unsourced_targets,
+        reconstructions: Vec::new(),
+    }
 }
 
 /// One completed transfer's accounting.
@@ -204,7 +277,7 @@ pub fn restore_episode(
     fence: &EpochFence,
     cfg: &StreamConfig,
 ) -> Result<RestoreOutcome, RestoreError> {
-    if !plan.replica_feasible() {
+    if !plan.checkpoint_free() {
         return Err(fatal(anyhow!(
             "plan has unsourced shards {:?} — checkpoint fallback required",
             plan.unsourced
@@ -669,6 +742,47 @@ mod tests {
         .unwrap_err();
         assert!(!err.retryable());
         assert!(err.to_string().contains("checkpoint fallback"), "{err}");
+    }
+
+    #[test]
+    fn cover_unsourced_moves_shards_into_reconstructions() {
+        let par = dp(4).with_zero(2);
+        // whole replica group {1, 3} dead: shard zero=1 is unsourced
+        let mut plan = plan_shard_restore(&par, &[(0, 9), (2, 9)], &[1, 3]);
+        assert_eq!(plan.unsourced, vec![par.shard_id(1)]);
+        assert_eq!(plan.unsourced_targets[&par.shard_id(1)], vec![1, 3]);
+        let depot: SocketAddr = "127.0.0.1:9000".parse().unwrap();
+        plan.cover_unsourced(|shard, step, targets| {
+            assert_eq!(step, 9);
+            Some(ShardReconstruction {
+                shard,
+                step,
+                k: 2,
+                m: 1,
+                stripes: vec![(0, depot), (2, depot)],
+                targets: targets.to_vec(),
+            })
+        });
+        assert!(plan.checkpoint_free());
+        assert!(
+            !plan.replica_feasible(),
+            "stripe rebuild is not a replica restore"
+        );
+        assert_eq!(plan.reconstructions.len(), 1);
+        assert_eq!(plan.reconstructions[0].targets, vec![1, 3]);
+        assert_eq!(plan.targets(), vec![1, 3]);
+        assert!(plan.unsourced.is_empty());
+        assert!(plan.unsourced_targets.is_empty());
+    }
+
+    #[test]
+    fn cover_that_declines_leaves_shards_unsourced() {
+        let par = dp(2).with_zero(2);
+        let mut plan = plan_shard_restore(&par, &[(1, 3)], &[0]);
+        plan.cover_unsourced(|_, _, _| None);
+        assert!(!plan.checkpoint_free());
+        assert_eq!(plan.unsourced, vec![par.shard_id(0)]);
+        assert_eq!(plan.unsourced_targets[&par.shard_id(0)], vec![0]);
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod metrics;
 pub mod recovery_model;
+pub mod redundancy;
 pub mod runtime;
 pub mod telemetry;
 pub mod training;

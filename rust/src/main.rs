@@ -79,7 +79,9 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         .positional
         .get(1)
         .map(String::as_str)
-        .ok_or_else(|| anyhow::anyhow!("bench needs a suite: rebuild|restore|detect|store"))?;
+        .ok_or_else(|| {
+            anyhow::anyhow!("bench needs a suite: rebuild|restore|detect|store|redundancy")
+        })?;
     run_bench_suite(suite, args)
 }
 
@@ -89,7 +91,10 @@ fn run_bench_suite(suite: &str, args: &Args) -> anyhow::Result<()> {
         "restore" => restore_bench(args),
         "detect" => detect_bench(args),
         "store" => store_bench(args),
-        other => anyhow::bail!("unknown bench suite {other:?} (rebuild|restore|detect|store)"),
+        "redundancy" => redundancy_bench(args),
+        other => anyhow::bail!(
+            "unknown bench suite {other:?} (rebuild|restore|detect|store|redundancy)"
+        ),
     }
 }
 
@@ -106,7 +111,7 @@ fn usage() {
          scenario: list | run --spec <name|file.json> [--seed N]\n\
          \u{20}         [--devices N] [--journal out.jsonl] [--live]\n\
          \u{20}         | export --spec <name> [--devices N]\n\
-         bench:    <rebuild|restore|detect|store>\n\
+         bench:    <rebuild|restore|detect|store|redundancy>\n\
          \u{20}         [--baseline FILE] [--gate [RATIO]] [--json FILE]\n\
          \u{20}         rebuild: [--scales 256,1024,4096,8192] [--samples N]\n\
          \u{20}                  [--failures N] [--live-survivors N]\n\
@@ -118,6 +123,8 @@ fn usage() {
          \u{20}         store:   [--clients 64,1024,4096,8192,65536]\n\
          \u{20}                  [--connections N] [--repeats N] [--rounds N]\n\
          \u{20}                  [--replicas N] [--assert]\n\
+         \u{20}         redundancy: [--sizes 262144,1048576] [--samples N]\n\
+         \u{20}                  [--k N] [--m N] [--chunk-kib N] [--assert]\n\
          trace:    <name|file.json> [--devices N] [--out trace.json]\n\
          \u{20}         [--journal FILE] [--check]\n\
          netem:    <name|file.json|all> [--devices N] [--check]\n\
@@ -493,6 +500,43 @@ fn store_bench(args: &Args) -> anyhow::Result<()> {
         println!("[bench store] acceptance assertions PASS");
     }
     gate_against_baseline("bench store", &report, &flags)
+}
+
+/// `bench redundancy` — the redundancy tier's cost/benefit sweep
+/// (DESIGN.md §16): steady-state stripe shipping (worst-case dirty and
+/// delta fast path) against stripe reconstruction, a replica-sourced
+/// stream, and the file-checkpoint fallback, with an optional perf
+/// gate against a committed baseline JSON (CI's bench-gate job fails
+/// the build on ship-p50 regressions > --gate).
+fn redundancy_bench(args: &Args) -> anyhow::Result<()> {
+    use flashrecovery::redundancy::bench::{
+        check_report, redundancy_sweep, RedundancySweepConfig,
+    };
+
+    let mut cfg = RedundancySweepConfig::default();
+    if let Some(sizes) = args.usize_list("sizes")? {
+        cfg.sizes = sizes;
+    }
+    cfg.samples = args.u64_or("samples", u64::from(cfg.samples)) as u32;
+    cfg.k = args.usize_or("k", cfg.k).max(1);
+    cfg.m = args.usize_or("m", cfg.m).max(1);
+    cfg.chunk_bytes =
+        args.usize_or("chunk-kib", cfg.chunk_bytes / 1024).max(4) * 1024;
+
+    let flags = args.bench_flags("BENCH_redundancy.json");
+    let report = redundancy_sweep(&cfg)?;
+    report.print();
+    report.write_json(&flags.out)?;
+    println!("[bench redundancy] wrote {}", flags.out);
+    if args.bool_or("assert", false) {
+        // the acceptance properties (delta reship undercuts a full
+        // ship; stripe rebuild stays within 20x of a replica-sourced
+        // stream) — what bench-gate enforces on top of the baseline
+        // ratio
+        check_report(&cfg, &report)?;
+        println!("[bench redundancy] acceptance assertions PASS");
+    }
+    gate_against_baseline("bench redundancy", &report, &flags)
 }
 
 /// `trace <scenario>` — run a live chaos scenario with the flight

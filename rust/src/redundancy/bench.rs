@@ -1,0 +1,295 @@
+//! `bench redundancy` — the redundancy tier's cost/benefit table.
+//!
+//! Steady-state columns bound what the tier costs per training step
+//! (`ship p50 ms` with every stripe dirty — the worst case — and
+//! `reship p50 ms` when nothing changed — the delta fast path), and
+//! the recovery columns compare what it buys: stripe reconstruction
+//! (`rebuild ms`, the whole-replica-group-death path) against a
+//! replica-sourced stream (`replica ms`, the path that needs a live
+//! replica) and the file-checkpoint fallback (`ckpt ms`, the path
+//! FlashRecovery exists to avoid). CI gates column 0 against
+//! `ci/BENCH_redundancy.baseline.json`.
+
+use super::*;
+use crate::comms::state_stream::{fetch_snapshot, serve_snapshot};
+use crate::comms::tcp_store::TcpStoreServer;
+use crate::coordinator::restore::synthetic_snapshot;
+use crate::metrics::bench::BenchReport;
+use crate::metrics::Histogram;
+use std::net::TcpListener;
+
+/// Sweep dimensions for `bench redundancy`.
+#[derive(Debug, Clone)]
+pub struct RedundancySweepConfig {
+    /// Model sizes as f32 elements per shard snapshot.
+    pub sizes: Vec<usize>,
+    /// Measured rounds per cell (one extra warmup is discarded).
+    pub samples: u32,
+    pub k: usize,
+    pub m: usize,
+    pub chunk_bytes: usize,
+}
+
+impl Default for RedundancySweepConfig {
+    fn default() -> Self {
+        RedundancySweepConfig {
+            sizes: vec![262_144, 1_048_576],
+            samples: 5,
+            k: 2,
+            m: 1,
+            chunk_bytes: crate::comms::state_stream::DEFAULT_CHUNK_BYTES,
+        }
+    }
+}
+
+/// Run the sweep. Column 0 (`ship p50 ms`) is what CI's bench gate
+/// compares against the committed baseline.
+pub fn redundancy_sweep(cfg: &RedundancySweepConfig) -> Result<BenchReport> {
+    let erasure = ErasureConfig::new(cfg.k, cfg.m)?;
+    let mut report = BenchReport::new(
+        "redundancy",
+        &[
+            "ship p50 ms",
+            "reship p50 ms",
+            "rebuild ms",
+            "replica ms",
+            "ckpt ms",
+            "MB shipped",
+        ],
+    );
+    report.note(format!(
+        "k={} m={} chunk={} KiB; ship = every stripe dirty, reship = delta \
+         fast path; rebuild = whole-replica-group death",
+        cfg.k,
+        cfg.m,
+        cfg.chunk_bytes / 1024
+    ));
+    let shard = ShardId { pp: 0, tp: 0, zero: 0 };
+    let tmp = std::env::temp_dir().join(format!(
+        "flashrecovery-bench-redund-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&tmp)?;
+    for &elems in &cfg.sizes {
+        let server = TcpStoreServer::start()?;
+        let fence = EpochFence::new(1);
+        let mut session = StoreSession::try_connect(&server.endpoints())?;
+        let rcfg = RedundancyConfig {
+            erasure,
+            chunk_bytes: cfg.chunk_bytes,
+            throttle: None,
+        };
+        let mut depots = Vec::new();
+        let mut holders = Vec::new();
+        for i in 0..rcfg.total() {
+            let d = StripeDepot::start(fence.clone(), cfg.chunk_bytes)?;
+            d.advertise(&mut session, 100 + i)?;
+            holders.push((100 + i, d.addr()));
+            depots.push(d);
+        }
+        let mut shipper = StripeShipper::new(
+            &server.endpoints(),
+            rcfg,
+            shard,
+            holders,
+            fence.clone(),
+        )?;
+
+        // steady state, every stripe dirty: each step perturbs the
+        // whole snapshot, the worst case for the tier
+        let mut ship_h = Histogram::new();
+        let mut shipped_mb = 0.0;
+        let mut last_step = 0;
+        for s in 0..=u64::from(cfg.samples) {
+            let snap = synthetic_snapshot(s, elems);
+            let stats = shipper
+                .ship(&snap, 1)
+                .map_err(|e| anyhow!("bench ship: {e}"))?;
+            if s > 0 {
+                ship_h.record(stats.wall_s);
+                shipped_mb += stats.bytes as f64 / 1e6;
+            }
+            last_step = s;
+        }
+
+        // delta fast path: nothing changed, every stripe refreshes
+        let mut reship_h = Histogram::new();
+        let snap = synthetic_snapshot(last_step, elems);
+        for s in 0..=cfg.samples {
+            let stats = shipper
+                .ship(&snap, 1)
+                .map_err(|e| anyhow!("bench reship: {e}"))?;
+            if s > 0 {
+                reship_h.record(stats.wall_s);
+            }
+        }
+
+        // recovery: the whole replica group is gone, rebuild from
+        // stripes advertised one epoch back
+        session.advance_epoch(2)?;
+        fence.advance(2);
+        let mut rebuild_h = Histogram::new();
+        for s in 0..=cfg.samples {
+            let t0 = Instant::now();
+            let rc = plan_reconstruction(
+                &mut session,
+                1,
+                shard,
+                last_step,
+                erasure.total(),
+                &[],
+            )?
+            .ok_or_else(|| anyhow!("stripes must cover the shard"))?;
+            let rebuilt = reconstruct_shard(&mut session, 1, &rc, 2, &fence)
+                .map_err(|e| anyhow!("bench rebuild: {e}"))?;
+            ensure!(
+                rebuilt.content_hash() == snap.content_hash(),
+                "bench rebuild must be bit-exact"
+            );
+            if s > 0 {
+                rebuild_h.record(t0.elapsed().as_secs_f64());
+            }
+        }
+
+        // baseline 1: replica-sourced stream of the same snapshot
+        let mut replica_h = Histogram::new();
+        for s in 0..=cfg.samples {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?;
+            let serve_snap = snap.clone();
+            let serve_fence = fence.clone();
+            let stream_cfg = StreamConfig {
+                chunk_bytes: cfg.chunk_bytes,
+                ..Default::default()
+            };
+            let server_t = std::thread::spawn(move || {
+                let (mut conn, _) = listener.accept()?;
+                serve_snapshot(&mut conn, &serve_snap, shard, 2, &serve_fence, &stream_cfg)
+                    .map_err(|e| anyhow!("bench serve: {e}"))?;
+                Ok::<_, anyhow::Error>(())
+            });
+            let t0 = Instant::now();
+            let mut conn = TcpStream::connect(addr)?;
+            let expect = Expect { epoch: 2, shard, step: Some(last_step) };
+            let (got, _) = fetch_snapshot(&mut conn, &expect, &fence)
+                .map_err(|e| anyhow!("bench fetch: {e}"))?;
+            ensure!(got.content_hash() == snap.content_hash());
+            if s > 0 {
+                replica_h.record(t0.elapsed().as_secs_f64());
+            }
+            server_t.join().unwrap()?;
+        }
+
+        // baseline 2: the file-checkpoint fallback the tier avoids
+        let path = tmp.join(format!("shard-{elems}.ckpt"));
+        crate::checkpoint::write_snapshot(&path, &snap)?;
+        let mut ckpt_h = Histogram::new();
+        for s in 0..=cfg.samples {
+            let t0 = Instant::now();
+            let got = crate::checkpoint::read_snapshot(&path)?;
+            ensure!(got.content_hash() == snap.content_hash());
+            if s > 0 {
+                ckpt_h.record(t0.elapsed().as_secs_f64());
+            }
+        }
+
+        report.row(
+            format!("{:.1}M elems", elems as f64 / 1e6),
+            vec![
+                ship_h.p50() * 1e3,
+                reship_h.p50() * 1e3,
+                rebuild_h.p50() * 1e3,
+                replica_h.p50() * 1e3,
+                ckpt_h.p50() * 1e3,
+                shipped_mb / f64::from(cfg.samples),
+            ],
+        );
+        drop(depots);
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+    Ok(report)
+}
+
+/// The acceptance properties `bench redundancy --assert` enforces on
+/// top of the baseline ratio: steady-state overhead is bounded (the
+/// delta fast path — 38-byte refreshes — must not cost more than a
+/// worst-case full ship) and reconstruction stays in streaming-restore
+/// territory rather than checkpoint-stall territory (the fallback it
+/// beats also forfeits every step since the last checkpoint, which the
+/// `replica_group_wipeout` scenario pins at zero for the stripe path).
+pub fn check_report(cfg: &RedundancySweepConfig, report: &BenchReport) -> Result<()> {
+    for &elems in &cfg.sizes {
+        let label = format!("{:.1}M elems", elems as f64 / 1e6);
+        let v = report
+            .row_values(&label)
+            .ok_or_else(|| anyhow!("bench report is missing row {label:?}"))?;
+        ensure!(v.len() == 6, "row {label:?} has {} of 6 columns", v.len());
+        let (ship, reship, rebuild, replica) = (v[0], v[1], v[2], v[3]);
+        ensure!(
+            ship > 0.0 && v[5] > 0.0,
+            "row {label:?}: a dirty ship must take time and move bytes"
+        );
+        ensure!(
+            reship <= ship,
+            "row {label:?}: delta reship ({reship:.3} ms) must undercut a \
+             full ship ({ship:.3} ms)"
+        );
+        ensure!(
+            rebuild <= replica.max(0.1) * 20.0,
+            "row {label:?}: stripe rebuild ({rebuild:.3} ms) must stay within \
+             20x of a replica-sourced stream ({replica:.3} ms)"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_a_row_per_size_with_sane_values() {
+        let cfg = RedundancySweepConfig {
+            sizes: vec![12_000],
+            samples: 2,
+            chunk_bytes: 16 * 1024,
+            ..Default::default()
+        };
+        let report = redundancy_sweep(&cfg).unwrap();
+        let values = report.row_values("0.0M elems").expect("row must exist");
+        assert_eq!(values.len(), 6);
+        // ship moved bytes; reship (all refreshes) must not be slower
+        // than a full ship by orders of magnitude
+        assert!(values[0] > 0.0);
+        assert!(values[5] > 0.0, "ship must move bytes");
+    }
+
+    #[test]
+    fn check_report_flags_a_slow_delta_path() {
+        let cols = [
+            "ship p50 ms",
+            "reship p50 ms",
+            "rebuild ms",
+            "replica ms",
+            "ckpt ms",
+            "MB shipped",
+        ];
+        let cfg = RedundancySweepConfig {
+            sizes: vec![1_048_576],
+            ..Default::default()
+        };
+        let mut good = BenchReport::new("redundancy", &cols);
+        good.row("1.0M elems".to_string(), vec![10.0, 1.0, 8.0, 5.0, 6.0, 12.0]);
+        check_report(&cfg, &good).unwrap();
+
+        // a delta path slower than a full ship is a regression
+        let mut bad = BenchReport::new("redundancy", &cols);
+        bad.row("1.0M elems".to_string(), vec![10.0, 30.0, 8.0, 5.0, 6.0, 12.0]);
+        assert!(check_report(&cfg, &bad).is_err());
+
+        // a rebuild in checkpoint-stall territory is a regression
+        let mut slow = BenchReport::new("redundancy", &cols);
+        slow.row("1.0M elems".to_string(), vec![10.0, 1.0, 500.0, 5.0, 6.0, 12.0]);
+        assert!(check_report(&cfg, &slow).is_err());
+    }
+}

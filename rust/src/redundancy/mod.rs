@@ -1,0 +1,1219 @@
+//! The redundancy tier (DESIGN.md §16): every ZeRO shard stays
+//! restorable even when its *entire* replica group dies.
+//!
+//! Each shard owner erasure-codes its canonical snapshot encoding into
+//! `k + m` stripes ([`checkpoint::erasure`]) and streams them to `k+m`
+//! peer [`StripeDepot`]s — nodes that do **not** hold the shard, plus
+//! warm spares — during idle step time, over the state-stream chunk
+//! grammar ([`serve_blob`]/[`fetch_blob`]: per-chunk checksums, chained
+//! end hash, epoch-fenced abort). Re-shipping an unchanged stripe
+//! degrades to a 38-byte hash refresh, so steady-state overhead tracks
+//! the *dirty* fraction of the shard, not its size.
+//!
+//! Placement is advertised through the replicated store under
+//! `redund/<epoch>/<tag>/<idx>` keys — epoch-fenced and pruned exactly
+//! like `restore/` sources, with the crucial property that epoch `e-1`
+//! survives an advance to `e`: stripes shipped during training epoch
+//! `e` are still advertised while recovery runs at `e+1`. Depot
+//! endpoints live under `redund/depot/<holder>`, which never parses as
+//! an epoch and therefore survives pruning.
+//!
+//! **Advertise-after-complete**: a stripe's store advertisement is
+//! written only after its depot acks a fully validated install, so an
+//! in-flight transfer superseded by recovery aborts retryably
+//! ([`RestoreError::Superseded`]) and can never leave a torn stripe
+//! advertised.
+//!
+//! Recovery: when [`plan_shard_restore`] reports a shard *unsourced*
+//! (its whole replica group died), [`plan_reconstruction`] checks the
+//! stripe directory — any `k` of `k+m` surviving stripes at the resume
+//! step make the shard recoverable — and [`reconstruct_shard`] pulls
+//! them, inverts the code, and verifies the rebuilt snapshot against
+//! the advertised content hash: bit-exact, zero checkpoint reads.
+//! A [`WarmSpare`] pre-fetches the hottest stripes ahead of time so a
+//! replacement's join skips the network restore entirely.
+//!
+//! [`checkpoint::erasure`]: crate::checkpoint::erasure
+//! [`plan_shard_restore`]: crate::coordinator::restore::plan_shard_restore
+
+use crate::checkpoint::erasure::{encode_stripes, reconstruct, ErasureConfig};
+use crate::checkpoint::{codec, Snapshot};
+use crate::comms::replication::{StoreEndpoints, StoreSession};
+use crate::comms::state_stream::{
+    fetch_blob, serve_blob, transfer_tag, EpochFence, Expect, RestoreError,
+    RestoreResult, StreamConfig, DEFAULT_CHUNK_BYTES,
+};
+use crate::config::{ParallelismConfig, ShardId};
+use crate::coordinator::restore::ShardReconstruction;
+use crate::util::hash::{fnv1a, FNV_OFFSET};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Pseudo source rank naming a shard's stripe set in the transfer-tag
+/// space: the max 20-bit value, which no real rank can occupy, so
+/// stripe tags never collide with replica-restore tags for the same
+/// shard.
+pub const STRIPE_SOURCE: usize = (1 << 20) - 1;
+
+/// Depot wire preamble: `op u8 | tag u64 | stripe u32 | epoch u64 |
+/// step u64` (little-endian), optionally followed by op-specific
+/// fields, then the blob grammar.
+const PREAMBLE_LEN: usize = 1 + 8 + 4 + 8 + 8;
+const OP_PUSH: u8 = 1;
+const OP_PULL: u8 = 2;
+/// Delta fast path: bump a stored stripe's (step, epoch) without
+/// resending bytes, validated by the stripe hash.
+const OP_REFRESH: u8 = 3;
+/// Depot ack: `status u8 | current_epoch u64`.
+const ACK_LEN: usize = 1 + 8;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+const DEPOT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Tag under which a shard's stripes are advertised.
+pub fn stripe_tag(shard: ShardId) -> u64 {
+    transfer_tag(shard, STRIPE_SOURCE)
+}
+
+/// Invert [`transfer_tag`]'s shard part — depots recover the shard a
+/// pushed stripe belongs to from its tag alone.
+pub fn shard_of_tag(tag: u64) -> ShardId {
+    ShardId {
+        pp: ((tag >> 52) & 0xFFF) as usize,
+        tp: ((tag >> 40) & 0xFFF) as usize,
+        zero: ((tag >> 20) & 0xF_FFFF) as usize,
+    }
+}
+
+/// Store key advertising stripe `idx` of `shard` at `epoch`.
+pub fn stripe_meta_key(epoch: u64, shard: ShardId, idx: usize) -> String {
+    format!("redund/{epoch}/{:016x}/{idx}", stripe_tag(shard))
+}
+
+/// Store key advertising a holder's depot endpoint. "depot" never
+/// parses as an epoch number, so these survive epoch pruning.
+pub fn depot_key(holder: usize) -> String {
+    format!("redund/depot/{holder}")
+}
+
+/// Redundancy-tier parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RedundancyConfig {
+    pub erasure: ErasureConfig,
+    pub chunk_bytes: usize,
+    /// Deterministic per-chunk delay for tests that must land an epoch
+    /// bump mid-stripe-transfer.
+    pub throttle: Option<Duration>,
+}
+
+impl Default for RedundancyConfig {
+    fn default() -> Self {
+        RedundancyConfig {
+            erasure: ErasureConfig::default(),
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            throttle: None,
+        }
+    }
+}
+
+impl RedundancyConfig {
+    pub fn total(&self) -> usize {
+        self.erasure.total()
+    }
+
+    fn stream_cfg(&self) -> StreamConfig {
+        StreamConfig {
+            chunk_bytes: self.chunk_bytes,
+            throttle: self.throttle,
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-stripe advertisement: everything a reconstructing (or
+/// prefetching) node needs to validate what it pulls. Fixed 56-byte
+/// little-endian layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripeMeta {
+    /// Training step the stripe set encodes.
+    pub step: u64,
+    pub k: u32,
+    pub m: u32,
+    /// Length of the encoded snapshot the stripes reconstruct.
+    pub orig_len: u64,
+    pub stripe_len: u64,
+    /// fnv1a of this stripe's bytes — pulled stripes are verified
+    /// against it before entering the decode matrix.
+    pub stripe_hash: u64,
+    /// Content hash of the snapshot the stripes encode — the bit-exact
+    /// acceptance check after reconstruction.
+    pub snap_hash: u64,
+    /// Holder id whose depot stores the stripe.
+    pub holder: u64,
+}
+
+pub const STRIPE_META_LEN: usize = 56;
+
+impl StripeMeta {
+    pub fn encode(&self) -> [u8; STRIPE_META_LEN] {
+        let mut out = [0u8; STRIPE_META_LEN];
+        let mut pos = 0;
+        let mut put = |b: &[u8]| {
+            out[pos..pos + b.len()].copy_from_slice(b);
+            pos += b.len();
+        };
+        put(&self.step.to_le_bytes());
+        put(&self.k.to_le_bytes());
+        put(&self.m.to_le_bytes());
+        put(&self.orig_len.to_le_bytes());
+        put(&self.stripe_len.to_le_bytes());
+        put(&self.stripe_hash.to_le_bytes());
+        put(&self.snap_hash.to_le_bytes());
+        put(&self.holder.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<StripeMeta> {
+        ensure!(
+            buf.len() == STRIPE_META_LEN,
+            "stripe meta must be {STRIPE_META_LEN} bytes, got {}",
+            buf.len()
+        );
+        let u32_at = |at: usize| u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+        let u64_at = |at: usize| u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+        Ok(StripeMeta {
+            step: u64_at(0),
+            k: u32_at(8),
+            m: u32_at(12),
+            orig_len: u64_at(16),
+            stripe_len: u64_at(24),
+            stripe_hash: u64_at(32),
+            snap_hash: u64_at(40),
+            holder: u64_at(48),
+        })
+    }
+}
+
+/// Deterministic stripe placement: the `total` holders for a shard's
+/// stripes, drawn from ranks that do NOT hold the shard (a holder
+/// dying with the replica group would defeat the tier) plus warm
+/// spares (ids `world_size..world_size + spares`). The start offset
+/// rotates with the shard coordinates so depots share load across
+/// shards. Stripe `i` lives on `holders[i]`.
+pub fn stripe_holders(
+    par: &ParallelismConfig,
+    shard: ShardId,
+    spares: usize,
+    total: usize,
+) -> Result<Vec<usize>> {
+    let mut candidates: Vec<usize> = (0..par.world_size())
+        .filter(|&r| par.shard_id(r) != shard)
+        .collect();
+    candidates.extend(par.world_size()..par.world_size() + spares);
+    ensure!(
+        candidates.len() >= total,
+        "need {total} stripe holders for shard {shard:?}, only {} candidates \
+         (world {} + {spares} spares)",
+        candidates.len(),
+        par.world_size()
+    );
+    let start = (shard.pp + shard.tp * 3 + shard.zero * 7) % candidates.len();
+    Ok((0..total).map(|i| candidates[(start + i) % candidates.len()]).collect())
+}
+
+#[derive(Debug, Clone)]
+struct StoredStripe {
+    epoch: u64,
+    step: u64,
+    data: Vec<u8>,
+}
+
+/// An in-memory stripe store serving the depot wire protocol on an
+/// ephemeral listener: PUSH installs a fully validated stripe (blob
+/// grammar, fenced), REFRESH bumps a stored stripe's version when the
+/// sender proves (by hash) the bytes are unchanged, PULL streams a
+/// stored stripe back at the requester's epoch. Partial transfers are
+/// discarded, never installed.
+pub struct StripeDepot {
+    addr: SocketAddr,
+    stripes: Arc<Mutex<HashMap<(u64, u32), StoredStripe>>>,
+    fence: EpochFence,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StripeDepot {
+    pub fn start(fence: EpochFence, chunk_bytes: usize) -> Result<StripeDepot> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stripes: Arc<Mutex<HashMap<(u64, u32), StoredStripe>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let t = {
+            let (stripes, fence, stop) = (stripes.clone(), fence.clone(), stop.clone());
+            std::thread::Builder::new()
+                .name("stripe-depot".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((conn, _)) => {
+                                let (stripes, fence) = (stripes.clone(), fence.clone());
+                                std::thread::Builder::new()
+                                    .name("stripe-depot-conn".into())
+                                    .spawn(move || {
+                                        if let Err(e) = Self::handle(
+                                            conn,
+                                            &stripes,
+                                            &fence,
+                                            chunk_bytes,
+                                        ) {
+                                            crate::telemetry::log::debug("redund", || {
+                                                format!("depot conn ended: {e}")
+                                            });
+                                        }
+                                    })
+                                    .ok();
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawn depot accept thread: {e}"))?
+        };
+        Ok(StripeDepot {
+            addr,
+            stripes,
+            fence,
+            stop,
+            accept_thread: Some(t),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of fully installed stripes.
+    pub fn stripe_count(&self) -> usize {
+        lock(&self.stripes).len()
+    }
+
+    /// True iff the depot holds a complete stripe matching `hash` —
+    /// the no-torn-stripe invariant tests assert through this.
+    pub fn holds(&self, tag: u64, idx: u32, hash: u64) -> bool {
+        lock(&self.stripes)
+            .get(&(tag, idx))
+            .map(|s| fnv1a(&s.data, FNV_OFFSET) == hash)
+            .unwrap_or(false)
+    }
+
+    /// Advertise this depot's endpoint in the store under `holder`'s
+    /// depot key.
+    pub fn advertise(&self, session: &mut StoreSession, holder: usize) -> Result<()> {
+        session.set(&depot_key(holder), self.addr.to_string().as_bytes())
+    }
+
+    fn handle(
+        mut conn: TcpStream,
+        stripes: &Mutex<HashMap<(u64, u32), StoredStripe>>,
+        fence: &EpochFence,
+        chunk_bytes: usize,
+    ) -> Result<()> {
+        conn.set_read_timeout(Some(DEPOT_IO_TIMEOUT)).ok();
+        conn.set_write_timeout(Some(DEPOT_IO_TIMEOUT)).ok();
+        conn.set_nodelay(true).ok();
+        let mut pre = [0u8; PREAMBLE_LEN];
+        conn.read_exact(&mut pre)?;
+        let op = pre[0];
+        let tag = u64::from_le_bytes(pre[1..9].try_into().unwrap());
+        let idx = u32::from_le_bytes(pre[9..13].try_into().unwrap());
+        let epoch = u64::from_le_bytes(pre[13..21].try_into().unwrap());
+        let step = u64::from_le_bytes(pre[21..29].try_into().unwrap());
+        match op {
+            OP_PUSH => {
+                let expect = Expect {
+                    epoch,
+                    shard: shard_of_tag(tag),
+                    step: Some(step),
+                };
+                match fetch_blob(&mut conn, &expect, fence) {
+                    Ok((_, data, _)) => {
+                        // install only while the pushing epoch is still
+                        // current: a bump that landed after the last
+                        // chunk must not resurrect a pre-failure stripe
+                        if fence.current() == epoch {
+                            lock(stripes)
+                                .insert((tag, idx), StoredStripe { epoch, step, data });
+                            Self::ack(&mut conn, 1, fence.current());
+                        } else {
+                            Self::ack(&mut conn, 0, fence.current());
+                        }
+                    }
+                    Err(RestoreError::Superseded { current }) => {
+                        Self::ack(&mut conn, 0, current);
+                    }
+                    Err(RestoreError::Fatal(e)) => return Err(e),
+                }
+            }
+            OP_REFRESH => {
+                let mut h = [0u8; 8];
+                conn.read_exact(&mut h)?;
+                let hash = u64::from_le_bytes(h);
+                let mut g = lock(stripes);
+                let ok = match g.get_mut(&(tag, idx)) {
+                    Some(s)
+                        if fnv1a(&s.data, FNV_OFFSET) == hash
+                            && fence.current() == epoch =>
+                    {
+                        s.step = step;
+                        s.epoch = epoch;
+                        true
+                    }
+                    _ => false,
+                };
+                drop(g);
+                Self::ack(&mut conn, u8::from(ok), fence.current());
+            }
+            OP_PULL => {
+                let stored = lock(stripes).get(&(tag, idx)).cloned();
+                match stored {
+                    None => Self::ack(&mut conn, 0, fence.current()),
+                    Some(s) => {
+                        Self::ack(&mut conn, 1, fence.current());
+                        // serve at the *requester's* epoch: recovery
+                        // runs one epoch past the shipping epoch, and
+                        // a further bump still aborts retryably
+                        let cfg = StreamConfig {
+                            chunk_bytes,
+                            ..Default::default()
+                        };
+                        serve_blob(
+                            &mut conn,
+                            &s.data,
+                            s.step,
+                            shard_of_tag(tag),
+                            epoch,
+                            fence,
+                            &cfg,
+                        )
+                        .map_err(|e| anyhow!("depot pull serve: {e}"))?;
+                    }
+                }
+            }
+            other => return Err(anyhow!("unknown depot op {other}")),
+        }
+        Ok(())
+    }
+
+    fn ack(conn: &mut TcpStream, status: u8, current: u64) {
+        let mut buf = [0u8; ACK_LEN];
+        buf[0] = status;
+        buf[1..9].copy_from_slice(&current.to_le_bytes());
+        // the peer may already be gone (it aborted the transfer); a
+        // failed ack write is its problem, not the depot's
+        conn.write_all(&buf).ok();
+        conn.flush().ok();
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for StripeDepot {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn preamble(op: u8, tag: u64, idx: u32, epoch: u64, step: u64) -> [u8; PREAMBLE_LEN] {
+    let mut pre = [0u8; PREAMBLE_LEN];
+    pre[0] = op;
+    pre[1..9].copy_from_slice(&tag.to_le_bytes());
+    pre[9..13].copy_from_slice(&idx.to_le_bytes());
+    pre[13..21].copy_from_slice(&epoch.to_le_bytes());
+    pre[21..29].copy_from_slice(&step.to_le_bytes());
+    pre
+}
+
+fn dial_depot(addr: SocketAddr) -> RestoreResult<Box<dyn crate::comms::link::Link>> {
+    let link = crate::comms::link::default_dialer()
+        .dial(addr, CONNECT_TIMEOUT)
+        .map_err(|e| RestoreError::Fatal(anyhow!("dial depot {addr}: {e}")))?;
+    link.set_read_timeout(Some(DEPOT_IO_TIMEOUT)).ok();
+    link.set_nodelay(true).ok();
+    Ok(link)
+}
+
+fn read_ack<R: Read>(r: &mut R) -> RestoreResult<(u8, u64)> {
+    let mut buf = [0u8; ACK_LEN];
+    r.read_exact(&mut buf)
+        .map_err(|e| RestoreError::Fatal(anyhow!("depot ack: {e}")))?;
+    Ok((buf[0], u64::from_le_bytes(buf[1..9].try_into().unwrap())))
+}
+
+/// Push one stripe to a depot under the fence. Retryably superseded if
+/// the epoch moves mid-transfer or the depot declines the install.
+fn push_stripe(
+    addr: SocketAddr,
+    tag: u64,
+    idx: u32,
+    stripe: &[u8],
+    step: u64,
+    epoch: u64,
+    fence: &EpochFence,
+    cfg: &StreamConfig,
+) -> RestoreResult<()> {
+    let mut link = dial_depot(addr)?;
+    link.write_all(&preamble(OP_PUSH, tag, idx, epoch, step))
+        .map_err(|e| RestoreError::Fatal(e.into()))?;
+    serve_blob(&mut link, stripe, step, shard_of_tag(tag), epoch, fence, cfg)?;
+    match read_ack(&mut link)? {
+        (1, _) => Ok(()),
+        (_, current) => Err(RestoreError::Superseded { current }),
+    }
+}
+
+/// Try the hash-refresh fast path; `Ok(true)` means the depot accepted
+/// the version bump and no bytes need to move.
+fn refresh_stripe(
+    addr: SocketAddr,
+    tag: u64,
+    idx: u32,
+    hash: u64,
+    step: u64,
+    epoch: u64,
+) -> RestoreResult<bool> {
+    let mut link = dial_depot(addr)?;
+    let mut msg = Vec::with_capacity(PREAMBLE_LEN + 8);
+    msg.extend_from_slice(&preamble(OP_REFRESH, tag, idx, epoch, step));
+    msg.extend_from_slice(&hash.to_le_bytes());
+    link.write_all(&msg).map_err(|e| RestoreError::Fatal(e.into()))?;
+    Ok(read_ack(&mut link)?.0 == 1)
+}
+
+/// Pull one stripe from a depot at the requester's `epoch`, verifying
+/// the blob grammar end to end.
+pub fn pull_stripe(
+    addr: SocketAddr,
+    tag: u64,
+    idx: u32,
+    step: u64,
+    epoch: u64,
+    fence: &EpochFence,
+) -> RestoreResult<Vec<u8>> {
+    let mut link = dial_depot(addr)?;
+    link.write_all(&preamble(OP_PULL, tag, idx, epoch, step))
+        .map_err(|e| RestoreError::Fatal(e.into()))?;
+    match read_ack(&mut link)? {
+        (1, _) => {}
+        (_, _) => {
+            return Err(RestoreError::Fatal(anyhow!(
+                "depot {addr} does not hold stripe {idx} of tag {tag:016x}"
+            )))
+        }
+    }
+    let expect = Expect { epoch, shard: shard_of_tag(tag), step: Some(step) };
+    let (_, data, _) = fetch_blob(&mut link, &expect, fence)?;
+    Ok(data)
+}
+
+/// Accounting for one [`StripeShipper::ship`] round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShipStats {
+    /// Stripes whose bytes crossed the wire.
+    pub shipped: usize,
+    /// Stripes that degraded to the hash-refresh fast path.
+    pub skipped: usize,
+    pub bytes: u64,
+    pub wall_s: f64,
+}
+
+/// The owner-side shipper: erasure-codes a shard snapshot, pushes
+/// dirty stripes to their holders' depots (unchanged stripes refresh
+/// by hash), and advertises each stripe in the store only after its
+/// depot acked the install.
+pub struct StripeShipper {
+    cfg: RedundancyConfig,
+    shard: ShardId,
+    /// `(holder id, depot addr)` per stripe index.
+    holders: Vec<(usize, SocketAddr)>,
+    fence: EpochFence,
+    session: StoreSession,
+    /// fnv1a of the last successfully placed version of each stripe.
+    last_hashes: Vec<Option<u64>>,
+    last_step: Option<u64>,
+}
+
+impl StripeShipper {
+    pub fn new(
+        store: &StoreEndpoints,
+        cfg: RedundancyConfig,
+        shard: ShardId,
+        holders: Vec<(usize, SocketAddr)>,
+        fence: EpochFence,
+    ) -> Result<StripeShipper> {
+        cfg.erasure.validate()?;
+        ensure!(
+            holders.len() == cfg.total(),
+            "shard {shard:?} needs {} stripe holders, got {}",
+            cfg.total(),
+            holders.len()
+        );
+        let session = StoreSession::try_connect(store)?;
+        let last_hashes = vec![None; holders.len()];
+        Ok(StripeShipper {
+            cfg,
+            shard,
+            holders,
+            fence,
+            session,
+            last_hashes,
+            last_step: None,
+        })
+    }
+
+    /// Last step whose stripes are fully placed and advertised — the
+    /// worker derives the `redund.stripe_lag` gauge from this.
+    pub fn last_shipped_step(&self) -> Option<u64> {
+        self.last_step
+    }
+
+    /// Encode `snap` and place its stripes at `epoch`. Sequential per
+    /// stripe: push (or refresh) to the holder's depot, then advertise
+    /// the stripe meta — so an abort anywhere leaves only complete,
+    /// advertised stripes behind. Retryably superseded on any epoch
+    /// bump; the caller replans at the new epoch.
+    pub fn ship(&mut self, snap: &Snapshot, epoch: u64) -> RestoreResult<ShipStats> {
+        let t0 = Instant::now();
+        let tele = crate::telemetry::global();
+        let encoded = codec::encode_snapshot(snap);
+        let snap_hash = snap.content_hash();
+        let stripes = encode_stripes(&encoded, &self.cfg.erasure)
+            .map_err(RestoreError::Fatal)?;
+        let stream_cfg = self.cfg.stream_cfg();
+        let tag = stripe_tag(self.shard);
+        let mut stats = ShipStats::default();
+        for (idx, stripe) in stripes.iter().enumerate() {
+            let current = self.fence.current();
+            if current > epoch {
+                return Err(RestoreError::Superseded { current });
+            }
+            let (holder, addr) = self.holders[idx];
+            let hash = fnv1a(stripe, FNV_OFFSET);
+            let refreshed = self.last_hashes[idx] == Some(hash)
+                && refresh_stripe(addr, tag, idx as u32, hash, snap.step, epoch)?;
+            if refreshed {
+                stats.skipped += 1;
+                tele.inc("redund.stripes_skipped");
+            } else {
+                push_stripe(
+                    addr,
+                    tag,
+                    idx as u32,
+                    stripe,
+                    snap.step,
+                    epoch,
+                    &self.fence,
+                    &stream_cfg,
+                )?;
+                stats.shipped += 1;
+                stats.bytes += stripe.len() as u64;
+                tele.inc("redund.stripes_shipped");
+                tele.add("redund.bytes_shipped", stripe.len() as u64);
+            }
+            self.last_hashes[idx] = Some(hash);
+            // advertise-after-complete: the meta key appears only once
+            // the depot holds the full validated stripe
+            let meta = StripeMeta {
+                step: snap.step,
+                k: self.cfg.erasure.k as u32,
+                m: self.cfg.erasure.m as u32,
+                orig_len: encoded.len() as u64,
+                stripe_len: stripe.len() as u64,
+                stripe_hash: hash,
+                snap_hash,
+                holder: holder as u64,
+            };
+            self.session
+                .set(&stripe_meta_key(epoch, self.shard, idx), &meta.encode())
+                .map_err(RestoreError::Fatal)?;
+        }
+        self.last_step = Some(snap.step);
+        tele.gauge("redund.stripe_lag").set(0);
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+}
+
+/// Check the stripe directory for a shard the replica planner reported
+/// unsourced: returns a reconstruction schedule when at least `k`
+/// stripes advertised at `ad_epoch` carry the resume `step` and have a
+/// known depot endpoint. `total` bounds the stripe indices probed
+/// (the configured `k + m`).
+pub fn plan_reconstruction(
+    session: &mut StoreSession,
+    ad_epoch: u64,
+    shard: ShardId,
+    step: u64,
+    total: usize,
+    targets: &[usize],
+) -> Result<Option<ShardReconstruction>> {
+    let mut k = 0u32;
+    let mut m = 0u32;
+    let mut stripes = Vec::new();
+    for idx in 0..total {
+        let Some(raw) = session.get(&stripe_meta_key(ad_epoch, shard, idx))? else {
+            continue;
+        };
+        let meta = StripeMeta::decode(&raw)?;
+        if meta.step != step {
+            continue; // stale stripe from an earlier ship
+        }
+        if k == 0 {
+            k = meta.k;
+            m = meta.m;
+        } else if meta.k != k || meta.m != m {
+            continue; // shape mismatch: stripe from a different config
+        }
+        let Some(addr_raw) = session.get(&depot_key(meta.holder as usize))? else {
+            continue; // holder never advertised a depot
+        };
+        let addr: SocketAddr = std::str::from_utf8(&addr_raw)?.parse()?;
+        stripes.push((idx, addr));
+    }
+    if k == 0 || stripes.len() < k as usize {
+        return Ok(None);
+    }
+    Ok(Some(ShardReconstruction {
+        shard,
+        step,
+        k: k as usize,
+        m: m as usize,
+        stripes,
+        targets: targets.to_vec(),
+    }))
+}
+
+/// Offer every unsourced shard of `plan` to the stripe directory —
+/// the coordinator's one-call bridge from replica planning to the
+/// redundancy fallback.
+pub fn cover_plan(
+    session: &mut StoreSession,
+    ad_epoch: u64,
+    total: usize,
+    plan: &mut crate::coordinator::restore::RestorePlan,
+) -> Result<()> {
+    let mut err = None;
+    plan.cover_unsourced(|shard, step, targets| {
+        match plan_reconstruction(session, ad_epoch, shard, step, total, targets) {
+            Ok(rc) => rc,
+            Err(e) => {
+                err.get_or_insert(e);
+                None
+            }
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Execute one [`ShardReconstruction`]: pull any `k` of its advertised
+/// stripes (each verified against its advertised hash), invert the
+/// erasure code, decode the snapshot, and verify it bit-exact against
+/// the advertised content hash. `recovery_epoch` fences the pulls;
+/// dead depots are skipped as long as `k` survive.
+pub fn reconstruct_shard(
+    session: &mut StoreSession,
+    ad_epoch: u64,
+    rc: &ShardReconstruction,
+    recovery_epoch: u64,
+    fence: &EpochFence,
+) -> RestoreResult<Snapshot> {
+    let tag = stripe_tag(rc.shard);
+    let total = rc.k + rc.m;
+    let mut slots: Vec<Option<Vec<u8>>> = vec![None; total];
+    let mut have = 0usize;
+    let mut orig_len = None;
+    let mut snap_hash = None;
+    for &(idx, addr) in &rc.stripes {
+        if have >= rc.k {
+            break;
+        }
+        if idx >= total {
+            continue;
+        }
+        let Some(raw) = session
+            .get(&stripe_meta_key(ad_epoch, rc.shard, idx))
+            .map_err(RestoreError::Fatal)?
+        else {
+            continue;
+        };
+        let meta = StripeMeta::decode(&raw).map_err(RestoreError::Fatal)?;
+        if meta.step != rc.step {
+            continue;
+        }
+        match pull_stripe(addr, tag, idx as u32, rc.step, recovery_epoch, fence) {
+            Ok(data) => {
+                if fnv1a(&data, FNV_OFFSET) != meta.stripe_hash {
+                    continue; // corrupt or stale depot copy: try others
+                }
+                orig_len = Some(meta.orig_len as usize);
+                snap_hash = Some(meta.snap_hash);
+                slots[idx] = Some(data);
+                have += 1;
+            }
+            Err(e @ RestoreError::Superseded { .. }) => return Err(e),
+            Err(RestoreError::Fatal(_)) => continue, // dead depot: try others
+        }
+    }
+    let (Some(orig_len), Some(snap_hash)) = (orig_len, snap_hash) else {
+        return Err(RestoreError::Fatal(anyhow!(
+            "no usable stripes for shard {:?} at step {}",
+            rc.shard,
+            rc.step
+        )));
+    };
+    if have < rc.k {
+        return Err(RestoreError::Fatal(anyhow!(
+            "only {have} of the required {} stripes for shard {:?} survive",
+            rc.k,
+            rc.shard
+        )));
+    }
+    let cfg = ErasureConfig { k: rc.k, m: rc.m };
+    let encoded = reconstruct(&slots, &cfg, orig_len).map_err(RestoreError::Fatal)?;
+    let snap = codec::decode_snapshot(&encoded).map_err(RestoreError::Fatal)?;
+    if snap.step != rc.step {
+        return Err(RestoreError::Fatal(anyhow!(
+            "reconstructed snapshot is at step {}, expected {}",
+            snap.step,
+            rc.step
+        )));
+    }
+    if snap.content_hash() != snap_hash {
+        return Err(RestoreError::Fatal(anyhow!(
+            "reconstructed shard {:?} fails the content-hash check",
+            rc.shard
+        )));
+    }
+    crate::telemetry::global().inc("redund.reconstructions");
+    Ok(snap)
+}
+
+/// A warm spare's stripe cache: during idle time the spare pre-fetches
+/// the hottest stripes (the latest advertised set per shard), so that
+/// when it replaces a dead node the shard rebuild runs entirely from
+/// local memory — zero restore-time network fetches, zero checkpoint
+/// reads.
+#[derive(Default)]
+pub struct WarmSpare {
+    cache: HashMap<(u64, u32), (StripeMeta, Vec<u8>)>,
+}
+
+impl WarmSpare {
+    pub fn new() -> WarmSpare {
+        WarmSpare::default()
+    }
+
+    pub fn cached_stripes(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Pull every advertised stripe of `shard` at `ad_epoch` into the
+    /// local cache (already-cached identical versions are skipped).
+    /// Returns how many stripes were fetched.
+    pub fn prefetch(
+        &mut self,
+        session: &mut StoreSession,
+        ad_epoch: u64,
+        shard: ShardId,
+        total: usize,
+        fence: &EpochFence,
+    ) -> Result<usize> {
+        let tag = stripe_tag(shard);
+        let mut fetched = 0;
+        for idx in 0..total {
+            let Some(raw) = session.get(&stripe_meta_key(ad_epoch, shard, idx))? else {
+                continue;
+            };
+            let meta = StripeMeta::decode(&raw)?;
+            if let Some((cached, _)) = self.cache.get(&(tag, idx as u32)) {
+                if cached.stripe_hash == meta.stripe_hash && cached.step == meta.step {
+                    continue;
+                }
+            }
+            let Some(addr_raw) = session.get(&depot_key(meta.holder as usize))? else {
+                continue;
+            };
+            let addr: SocketAddr = std::str::from_utf8(&addr_raw)?.parse()?;
+            let data = pull_stripe(
+                addr,
+                tag,
+                idx as u32,
+                meta.step,
+                fence.current(),
+                fence,
+            )
+            .map_err(|e| anyhow!("prefetch stripe {idx}: {e}"))?;
+            ensure!(
+                fnv1a(&data, FNV_OFFSET) == meta.stripe_hash,
+                "prefetched stripe {idx} fails its hash check"
+            );
+            self.cache.insert((tag, idx as u32), (meta, data));
+            fetched += 1;
+        }
+        Ok(fetched)
+    }
+
+    /// Rebuild `shard` at `step` from the local cache alone — the
+    /// replacement-join fast path. Fails (so the caller falls back to
+    /// networked reconstruction) when fewer than `k` cached stripes
+    /// match the step.
+    pub fn recover_local(&self, shard: ShardId, step: u64) -> Result<Snapshot> {
+        let tag = stripe_tag(shard);
+        let mut shape: Option<(usize, usize, usize, u64)> = None;
+        for ((t, _), (meta, _)) in &self.cache {
+            if *t == tag && meta.step == step {
+                shape = Some((
+                    meta.k as usize,
+                    meta.m as usize,
+                    meta.orig_len as usize,
+                    meta.snap_hash,
+                ));
+                break;
+            }
+        }
+        let Some((k, m, orig_len, snap_hash)) = shape else {
+            anyhow::bail!("no cached stripes for shard {shard:?} at step {step}");
+        };
+        let mut slots: Vec<Option<Vec<u8>>> = vec![None; k + m];
+        for idx in 0..k + m {
+            if let Some((meta, data)) = self.cache.get(&(tag, idx as u32)) {
+                if meta.step == step {
+                    slots[idx] = Some(data.clone());
+                }
+            }
+        }
+        let cfg = ErasureConfig { k, m };
+        let encoded = reconstruct(&slots, &cfg, orig_len)?;
+        let snap = codec::decode_snapshot(&encoded)?;
+        ensure!(
+            snap.content_hash() == snap_hash,
+            "locally rebuilt shard {shard:?} fails the content-hash check"
+        );
+        crate::telemetry::global().inc("redund.reconstructions");
+        Ok(snap)
+    }
+}
+
+pub mod bench;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::tcp_store::TcpStoreServer;
+    use crate::coordinator::restore::synthetic_snapshot;
+
+    fn shard() -> ShardId {
+        ShardId { pp: 0, tp: 0, zero: 1 }
+    }
+
+    /// Store + `total` depots + advertised endpoints + a shipper for
+    /// one shard, all under one fence — the tier's test fixture.
+    struct Fixture {
+        server: TcpStoreServer,
+        fence: EpochFence,
+        depots: Vec<StripeDepot>,
+        holders: Vec<(usize, SocketAddr)>,
+        cfg: RedundancyConfig,
+    }
+
+    impl Fixture {
+        fn new(cfg: RedundancyConfig) -> Fixture {
+            let server = TcpStoreServer::start().unwrap();
+            let fence = EpochFence::new(1);
+            let mut session = StoreSession::try_connect(&server.endpoints()).unwrap();
+            let mut depots = Vec::new();
+            let mut holders = Vec::new();
+            for i in 0..cfg.total() {
+                let d = StripeDepot::start(fence.clone(), cfg.chunk_bytes).unwrap();
+                let holder = 100 + i;
+                d.advertise(&mut session, holder).unwrap();
+                holders.push((holder, d.addr()));
+                depots.push(d);
+            }
+            Fixture { server, fence, depots, holders, cfg }
+        }
+
+        fn session(&self) -> StoreSession {
+            StoreSession::try_connect(&self.server.endpoints()).unwrap()
+        }
+
+        fn shipper(&self) -> StripeShipper {
+            StripeShipper::new(
+                &self.server.endpoints(),
+                self.cfg,
+                shard(),
+                self.holders.clone(),
+                self.fence.clone(),
+            )
+            .unwrap()
+        }
+    }
+
+    #[test]
+    fn stripe_tags_invert_and_stay_clear_of_replica_tags() {
+        let s = ShardId { pp: 3, tp: 5, zero: 1000 };
+        assert_eq!(shard_of_tag(stripe_tag(s)), s);
+        for source in 0..64 {
+            assert_ne!(stripe_tag(s), transfer_tag(s, source));
+        }
+    }
+
+    #[test]
+    fn meta_roundtrips_and_rejects_bad_lengths() {
+        let meta = StripeMeta {
+            step: 42,
+            k: 2,
+            m: 1,
+            orig_len: 123_456,
+            stripe_len: 61_728,
+            stripe_hash: 0xDEAD_BEEF,
+            snap_hash: 0xFEED_FACE,
+            holder: 7,
+        };
+        assert_eq!(StripeMeta::decode(&meta.encode()).unwrap(), meta);
+        assert!(StripeMeta::decode(&meta.encode()[..40]).is_err());
+        assert!(StripeMeta::decode(&[0u8; STRIPE_META_LEN + 1]).is_err());
+    }
+
+    #[test]
+    fn placement_avoids_the_shard_group_and_uses_spares() {
+        let par = ParallelismConfig::dp(4).with_zero(2);
+        // shard zero=1 is held by ranks {1, 3}: holders must come from
+        // {0, 2} plus the spares
+        let s = ShardId { pp: 0, tp: 0, zero: 1 };
+        let holders = stripe_holders(&par, s, 1, 3).unwrap();
+        assert_eq!(holders.len(), 3);
+        for h in &holders {
+            assert!(![1usize, 3].contains(h), "holder {h} is in the shard group");
+            assert!(*h < 5, "holder {h} out of range");
+        }
+        let mut uniq = holders.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3, "holders must be distinct: {holders:?}");
+        // deterministic
+        assert_eq!(holders, stripe_holders(&par, s, 1, 3).unwrap());
+        // not enough candidates without spares
+        assert!(stripe_holders(&par, s, 0, 3).is_err());
+    }
+
+    #[test]
+    fn ship_then_reconstruct_after_whole_group_death_is_bit_exact() {
+        let fx = Fixture::new(RedundancyConfig {
+            chunk_bytes: 8 * 1024,
+            ..Default::default()
+        });
+        let snap = synthetic_snapshot(7, 9_000);
+        let mut shipper = fx.shipper();
+        let stats = shipper.ship(&snap, 1).unwrap();
+        assert_eq!(stats.shipped, 3);
+        assert_eq!(stats.skipped, 0);
+        assert!(stats.bytes > 0);
+        assert_eq!(shipper.last_shipped_step(), Some(7));
+
+        // the whole replica group dies; recovery runs at epoch 2 with
+        // the stripes advertised at epoch 1
+        let mut session = fx.session();
+        session.advance_epoch(2).unwrap();
+        fx.fence.advance(2);
+        let rc = plan_reconstruction(&mut session, 1, shard(), 7, 3, &[1, 3])
+            .unwrap()
+            .expect("stripes must cover the dead shard");
+        assert_eq!(rc.k, 2);
+        assert_eq!(rc.stripes.len(), 3);
+        assert_eq!(rc.targets, vec![1, 3]);
+        let rebuilt = reconstruct_shard(&mut session, 1, &rc, 2, &fx.fence).unwrap();
+        assert_eq!(rebuilt.step, 7);
+        assert_eq!(rebuilt.content_hash(), snap.content_hash(), "must be bit-exact");
+    }
+
+    #[test]
+    fn reconstruction_survives_a_dead_depot_but_not_two() {
+        let mut fx = Fixture::new(RedundancyConfig {
+            chunk_bytes: 8 * 1024,
+            ..Default::default()
+        });
+        let snap = synthetic_snapshot(4, 6_000);
+        fx.shipper().ship(&snap, 1).unwrap();
+        let mut session = fx.session();
+        session.advance_epoch(2).unwrap();
+        fx.fence.advance(2);
+        let rc = plan_reconstruction(&mut session, 1, shard(), 4, 3, &[1])
+            .unwrap()
+            .unwrap();
+        // k=2, m=1: losing one depot still reconstructs...
+        fx.depots.remove(0);
+        let rebuilt = reconstruct_shard(&mut session, 1, &rc, 2, &fx.fence).unwrap();
+        assert_eq!(rebuilt.content_hash(), snap.content_hash());
+        // ...losing a second one cannot
+        fx.depots.remove(0);
+        let err = reconstruct_shard(&mut session, 1, &rc, 2, &fx.fence).unwrap_err();
+        assert!(!err.retryable(), "{err}");
+    }
+
+    #[test]
+    fn unchanged_stripes_degrade_to_hash_refreshes() {
+        let fx = Fixture::new(RedundancyConfig {
+            chunk_bytes: 8 * 1024,
+            ..Default::default()
+        });
+        let mut shipper = fx.shipper();
+        let snap = synthetic_snapshot(3, 6_000);
+        let first = shipper.ship(&snap, 1).unwrap();
+        assert_eq!((first.shipped, first.skipped), (3, 0));
+        // identical snapshot: every stripe refreshes, zero bytes move
+        let second = shipper.ship(&snap, 1).unwrap();
+        assert_eq!((second.shipped, second.skipped), (0, 3));
+        assert_eq!(second.bytes, 0);
+        // a genuinely new step dirties at least the header-bearing
+        // data stripe and every parity stripe, but identical tensor
+        // bytes keep some stripe clean
+        let next = Snapshot { step: 4, tensors: snap.tensors.clone() };
+        let third = shipper.ship(&next, 1).unwrap();
+        assert!(third.shipped >= 1, "{third:?}");
+        assert!(third.skipped >= 1, "{third:?}");
+        // the refreshed directory still reconstructs the new step
+        let mut session = fx.session();
+        let rc = plan_reconstruction(&mut session, 1, shard(), 4, 3, &[])
+            .unwrap()
+            .unwrap();
+        let rebuilt = reconstruct_shard(&mut session, 1, &rc, 1, &fx.fence).unwrap();
+        assert_eq!(rebuilt.content_hash(), next.content_hash());
+    }
+
+    #[test]
+    fn mid_transfer_epoch_bump_aborts_retryably_with_no_torn_stripe() {
+        // satellite 4: a redundancy stream superseded by recovery must
+        // abort retryably and never leave a torn stripe advertised
+        let fx = Fixture::new(RedundancyConfig {
+            chunk_bytes: 4 * 1024,
+            throttle: Some(Duration::from_millis(2)),
+            ..Default::default()
+        });
+        let snap = synthetic_snapshot(9, 60_000); // ~240 KB encoded
+        let mut shipper = fx.shipper();
+        let bump_fence = fx.fence.clone();
+        let mut bump_session = fx.session();
+        let bumper = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            bump_session.advance_epoch(2).unwrap();
+            bump_fence.advance(2);
+        });
+        let err = shipper.ship(&snap, 1).unwrap_err();
+        bumper.join().unwrap();
+        assert!(err.retryable(), "mid-transfer bump must be retryable: {err}");
+
+        // invariant: every advertised stripe meta is backed by a
+        // complete, hash-matching stripe in its depot
+        let mut session = fx.session();
+        let tag = stripe_tag(shard());
+        let mut advertised = 0;
+        for idx in 0..3usize {
+            let Some(raw) = session.get(&stripe_meta_key(1, shard(), idx)).unwrap()
+            else {
+                continue;
+            };
+            advertised += 1;
+            let meta = StripeMeta::decode(&raw).unwrap();
+            let held = fx.depots.iter().any(|d| {
+                d.holds(tag, idx as u32, meta.stripe_hash)
+            });
+            assert!(held, "advertised stripe {idx} is torn or missing in depots");
+        }
+        assert!(advertised < 3, "the aborted stripe must not be advertised");
+    }
+
+    #[test]
+    fn warm_spare_recovers_locally_after_every_depot_died() {
+        let mut fx = Fixture::new(RedundancyConfig {
+            chunk_bytes: 8 * 1024,
+            ..Default::default()
+        });
+        let snap = synthetic_snapshot(11, 6_000);
+        fx.shipper().ship(&snap, 1).unwrap();
+        let mut spare = WarmSpare::new();
+        let mut session = fx.session();
+        let fetched = spare
+            .prefetch(&mut session, 1, shard(), 3, &fx.fence)
+            .unwrap();
+        assert_eq!(fetched, 3);
+        // re-prefetching an unchanged set is free
+        assert_eq!(
+            spare.prefetch(&mut session, 1, shard(), 3, &fx.fence).unwrap(),
+            0
+        );
+        // every depot dies; the spare still rebuilds from local cache
+        fx.depots.clear();
+        let rebuilt = spare.recover_local(shard(), 11).unwrap();
+        assert_eq!(rebuilt.content_hash(), snap.content_hash());
+        // a step it never cached is a clean error
+        assert!(spare.recover_local(shard(), 12).is_err());
+    }
+
+    #[test]
+    fn cover_plan_bridges_unsourced_shards_to_the_stripe_directory() {
+        use crate::coordinator::restore::plan_shard_restore;
+        let fx = Fixture::new(RedundancyConfig {
+            chunk_bytes: 8 * 1024,
+            ..Default::default()
+        });
+        let par = ParallelismConfig::dp(4).with_zero(2);
+        let snap = synthetic_snapshot(6, 6_000);
+        fx.shipper().ship(&snap, 1).unwrap();
+        // ranks {1, 3} (the whole zero=1 group) die at step 6
+        let mut plan = plan_shard_restore(&par, &[(0, 6), (2, 6)], &[1, 3]);
+        assert_eq!(plan.unsourced, vec![shard()]);
+        let mut session = fx.session();
+        session.advance_epoch(2).unwrap();
+        fx.fence.advance(2);
+        cover_plan(&mut session, 1, 3, &mut plan).unwrap();
+        assert!(plan.checkpoint_free(), "stripes must cover the wiped group");
+        assert_eq!(plan.reconstructions.len(), 1);
+        assert_eq!(plan.reconstructions[0].targets, vec![1, 3]);
+        let rebuilt =
+            reconstruct_shard(&mut session, 1, &plan.reconstructions[0], 2, &fx.fence)
+                .unwrap();
+        assert_eq!(rebuilt.content_hash(), snap.content_hash());
+    }
+
+    #[test]
+    fn pull_of_a_missing_stripe_is_a_clean_error() {
+        let fence = EpochFence::new(1);
+        let depot = StripeDepot::start(fence.clone(), 8 * 1024).unwrap();
+        let err =
+            pull_stripe(depot.addr(), stripe_tag(shard()), 0, 1, 1, &fence).unwrap_err();
+        assert!(!err.retryable());
+        assert!(err.to_string().contains("does not hold"), "{err}");
+    }
+}

@@ -391,6 +391,17 @@ pub fn spawn_node_heartbeat(
         .expect("spawn node heartbeat agent")
 }
 
+/// Worker-side handle on the redundancy tier (DESIGN.md §16): ships
+/// erasure-coded stripes of the post-step state during idle step time,
+/// so the shard stays restorable even if its whole replica group dies.
+pub struct RedundancyHook {
+    pub shipper: crate::redundancy::StripeShipper,
+    /// Ship every `interval` steps (values <= 1 mean every step).
+    pub interval: u64,
+    /// Coordination epoch the stripes are fenced under.
+    pub epoch: u64,
+}
+
 /// Everything a worker thread needs.
 pub struct WorkerCtx {
     pub rank: usize,
@@ -408,6 +419,8 @@ pub struct WorkerCtx {
     pub max_steps: u64,
     /// Replacement workers start parked, awaiting RestoreState.
     pub start_parked: bool,
+    /// Redundancy tier: stripe shipping after the optimizer step.
+    pub redundancy: Option<RedundancyHook>,
 }
 
 enum Disposition {
@@ -576,6 +589,38 @@ fn run_one_step(ctx: &mut WorkerCtx) -> StepOutcome {
     ctx.board.step_tag.store((step + 1) as i64, Ordering::SeqCst);
 
     let _ = ctx.event_tx.send(WorkerEvent::Loss { rank: ctx.rank, step: step + 1, loss });
+
+    // ---- redundancy tier: stripe shipping in idle step time ------------
+    if let Some(hook) = ctx.redundancy.as_mut() {
+        let lag = match hook.shipper.last_shipped_step() {
+            Some(last) => ctx.state.step.saturating_sub(last),
+            None => ctx.state.step,
+        };
+        crate::telemetry::global().gauge("redund.stripe_lag").set(lag as i64);
+        if hook.interval <= 1 || ctx.state.step % hook.interval == 0 {
+            let snap = match ctx.state.to_snapshot() {
+                Ok(s) => s,
+                Err(e) => return StepOutcome::Fatal(e),
+            };
+            match hook.shipper.ship(&snap, hook.epoch) {
+                Ok(_) => {}
+                Err(e) if e.retryable() => {
+                    // superseded by a recovery epoch: drop this round;
+                    // the controller re-fences the tier once the
+                    // episode completes
+                    log::debug("worker", || {
+                        format!("rank {}: stripe ship superseded: {e}", ctx.rank)
+                    });
+                }
+                Err(e) => {
+                    return StepOutcome::Fatal(anyhow::anyhow!(
+                        "rank {} stripe ship: {e}",
+                        ctx.rank
+                    ))
+                }
+            }
+        }
+    }
 
     // ---- periodic checkpoint (vanilla baseline) ------------------------
     if ctx.ckpt_interval > 0 && ctx.state.step % ctx.ckpt_interval == 0 {
